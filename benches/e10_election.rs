@@ -1,0 +1,51 @@
+//! E13 — §8.1 Paxos primary election: failover decision latency across
+//! replica-set sizes, plus a safety demonstration with concurrent
+//! candidates (at most one winner per term — always).
+
+use onepiece::bench;
+use onepiece::nm::NmCluster;
+use onepiece::util::{ManualClock, NodeId};
+use std::sync::Arc;
+
+fn main() {
+    bench::header("E13a: election latency vs replica-set size");
+    for n in [3u32, 5, 7, 9] {
+        let clock = ManualClock::new();
+        let cluster = NmCluster::new(
+            (0..n).map(NodeId).collect(),
+            Arc::new(clock.clone()),
+            1_000,
+        );
+        let mut term_candidate = 1u32;
+        bench::quick(&format!("replicas={n}"), || {
+            term_candidate = (term_candidate + 1) % n;
+            cluster.elect(NodeId(term_candidate)).unwrap();
+        });
+    }
+
+    println!("\n=== E13b: failover walkthrough ===");
+    let clock = ManualClock::new();
+    let cluster = NmCluster::new((0..5).map(NodeId).collect(), Arc::new(clock.clone()), 1_000);
+    let p = cluster.elect(NodeId(0)).unwrap();
+    println!("initial primary: {p} (term {})", cluster.term());
+    cluster.set_alive(NodeId(0), false);
+    clock.advance(2_000);
+    assert!(cluster.primary_lost(), "heartbeat timeout must be detected");
+    let p2 = cluster.elect(NodeId(3)).unwrap();
+    println!("after primary death + timeout: new primary {p2} (term {})", cluster.term());
+    assert_ne!(p2, NodeId(0));
+
+    println!("\n=== E13c: safety under concurrent candidates ===");
+    let mut collisions = 0;
+    for term in 10..110u64 {
+        let winners: Vec<_> = (1..=4u32)
+            .filter_map(|c| cluster.elect_term(NodeId(c), term))
+            .collect();
+        let first = winners[0];
+        if winners.iter().any(|&w| w != first) {
+            collisions += 1;
+        }
+    }
+    println!("100 terms × 4 concurrent candidates: {collisions} safety violations");
+    assert_eq!(collisions, 0, "Paxos must never elect two leaders in one term");
+}

@@ -1,0 +1,54 @@
+//! E4 — Theorem 1 validation sweep: for K ∈ 1..8 and T_Y/T_X ∈ 1..8 the
+//! simulated steady-state output rate of the Theorem-1-sized pipeline
+//! must equal the entrance rate K/T_X (rate matching), and M-1 instances
+//! must NOT suffice (tightness).
+
+use onepiece::pipeline::{instances_needed, trace_schedule, TraceStage};
+
+fn main() {
+    println!("=== E4: Theorem 1 rate-matching sweep ===");
+    println!(
+        "{:<6} {:<8} {:<4} {:>12} {:>12} {:>8}",
+        "K", "Ty/Tx", "M", "target(s)", "measured(s)", "tight?"
+    );
+    let tx = 2.0;
+    let mut checked = 0;
+    for k in 1..=8usize {
+        for ratio in 1..=8usize {
+            let ty = tx * ratio as f64;
+            let m = instances_needed(k, tx, ty);
+            let target = tx / k as f64;
+            let stages = vec![
+                TraceStage { name: "X".into(), exec_s: tx, instances: 1, workers: k },
+                TraceStage { name: "Y".into(), exec_s: ty, instances: m, workers: 1 },
+            ];
+            let n = (m * 6).max(24);
+            let trace = trace_schedule(&stages, n, target);
+            let ok = (trace.output_interval_s - target).abs() < 1e-6;
+
+            // Tightness: with M-1 instances the interval must degrade.
+            let tight = if m > 1 {
+                let under = vec![
+                    TraceStage { name: "X".into(), exec_s: tx, instances: 1, workers: k },
+                    TraceStage {
+                        name: "Y".into(),
+                        exec_s: ty,
+                        instances: m - 1,
+                        workers: 1,
+                    },
+                ];
+                let t2 = trace_schedule(&under, n, target);
+                t2.output_interval_s > target + 1e-9
+            } else {
+                true
+            };
+            println!(
+                "{:<6} {:<8} {:<4} {:>12.3} {:>12.3} {:>8}",
+                k, ratio, m, target, trace.output_interval_s, tight
+            );
+            assert!(ok, "rate matching violated at K={k} ratio={ratio}");
+            checked += 1;
+        }
+    }
+    println!("\nall {checked} (K, Ty/Tx) combinations match Theorem 1");
+}

@@ -1,0 +1,179 @@
+//! E6 — double-ring buffer microbenchmarks: throughput/latency under
+//! multi-producer contention, message-size sweep, consumer wait-freedom,
+//! and the timeout-vs-corruption trade-off the paper argues in §6.1
+//! ("thanks to the short timeout interval, obsolete updates can corrupt
+//! at most one subsequent data entry").
+
+use onepiece::bench;
+use onepiece::rdma::Fabric;
+use onepiece::ringbuf::{create_ring, PushError, RingConfig, RingConsumer, RingProducer};
+use onepiece::util::{Rng, SystemClock};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+fn main() {
+    // --- size sweep, single producer ---
+    bench::header("E6a: push+pop per message (1 producer)");
+    for size in [64usize, 1024, 16 << 10, 256 << 10] {
+        let cfg = RingConfig { nslots: 256, cap_bytes: 32 << 20, ..Default::default() };
+        let fabric = Fabric::ideal();
+        let (id, region) = create_ring(&fabric, cfg);
+        let prod = RingProducer::new(fabric.connect(id).unwrap(), cfg, Arc::new(SystemClock), 1);
+        let mut cons = RingConsumer::new(region, cfg);
+        let payload = vec![7u8; size];
+        bench::quick(&format!("msg {:>7} B", size), || {
+            prod.push(&payload, None).unwrap();
+            cons.pop().unwrap().unwrap();
+        });
+    }
+
+    // --- contention sweep: N producer threads, 1 consumer ---
+    bench::header("E6b: aggregate throughput under producer contention");
+    for nprod in [1usize, 2, 4, 8] {
+        let cfg = RingConfig {
+            nslots: 1024,
+            cap_bytes: 8 << 20,
+            // Timeout must dwarf worst-case lock-hold time: on a
+            // preempted host a holder can be descheduled for tens of ms,
+            // and a "steal" from a *live* holder is exactly the Case-2..6
+            // corruption path (detected, but noisy for a clean bench).
+            lock_timeout_ns: 2_000_000_000,
+            max_lock_spins: 1 << 22,
+        };
+        let fabric = Fabric::ideal();
+        let (id, region) = create_ring(&fabric, cfg);
+        let stop = Arc::new(AtomicBool::new(false));
+        let handles: Vec<_> = (0..nprod)
+            .map(|p| {
+                let qp = fabric.connect(id).unwrap();
+                let stop = stop.clone();
+                std::thread::spawn(move || {
+                    let prod = RingProducer::new(qp, cfg, Arc::new(SystemClock), p as u64 + 1);
+                    let payload = vec![p as u8; 256];
+                    let mut sent = 0u64;
+                    while !stop.load(Ordering::Relaxed) {
+                        match prod.push(&payload, None) {
+                            Ok(_) => sent += 1,
+                            Err(PushError::Full) | Err(PushError::LostRace) => {
+                                std::thread::yield_now()
+                            }
+                            Err(e) => panic!("{e:?}"),
+                        }
+                    }
+                    sent
+                })
+            })
+            .collect();
+
+        let mut cons = RingConsumer::new(region, cfg);
+        let t0 = std::time::Instant::now();
+        let mut got = 0u64;
+        let mut corrupted = 0u64;
+        while t0.elapsed() < std::time::Duration::from_millis(500) {
+            match cons.pop() {
+                Some(Ok(_)) => got += 1,
+                // Possible only if a holder is descheduled past the
+                // timeout (host preemption) — detected, bounded, counted.
+                Some(Err(_)) => corrupted += 1,
+                None => std::thread::yield_now(),
+            }
+        }
+        assert!(corrupted < got / 100 + 10, "corruption must be rare");
+        stop.store(true, Ordering::Relaxed);
+        let sent: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        println!(
+            "{:<44} {:>10.2} Mmsg/s consumed ({} sent)",
+            format!("producers={nprod} msg=256B"),
+            got as f64 / t0.elapsed().as_secs_f64() / 1e6,
+            sent
+        );
+    }
+
+    // --- consumer wait-freedom: pop cost with a dead lock-holder ---
+    bench::header("E6c: consumer wait-freedom under producer failure");
+    {
+        let cfg = RingConfig { nslots: 64, cap_bytes: 1 << 20, ..Default::default() };
+        let fabric = Fabric::ideal();
+        let (id, region) = create_ring(&fabric, cfg);
+        let prod = RingProducer::new(fabric.connect(id).unwrap(), cfg, Arc::new(SystemClock), 1);
+        for _ in 0..32 {
+            prod.push(&[1u8; 128], None).unwrap();
+        }
+        // A second producer dies holding the lock.
+        let dead = RingProducer::new(fabric.connect(id).unwrap(), cfg, Arc::new(SystemClock), 2);
+        let _session = dead.begin().unwrap(); // never released
+        let mut cons = RingConsumer::new(region, cfg);
+        let mut n = 0;
+        bench::quick("pop with dead lock-holder", || {
+            if let Some(r) = cons.pop() {
+                r.unwrap();
+                n += 1;
+            }
+        });
+        assert!(n >= 32, "consumer must drain everything despite the dead producer");
+    }
+
+    // --- timeout vs corruption probability (the §6.1 trade-off) ---
+    bench::header("E6d: lock-timeout vs corruption (10k messages, 5% stale writers)");
+    for timeout_ns in [1_000u64, 10_000, 100_000, 1_000_000] {
+        let cfg = RingConfig {
+            nslots: 128,
+            cap_bytes: 4 << 20,
+            lock_timeout_ns: timeout_ns,
+            max_lock_spins: 4096,
+        };
+        let fabric = Fabric::ideal();
+        let (id, region) = create_ring(&fabric, cfg);
+        let clock = onepiece::util::ManualClock::new();
+        clock.set(1);
+        let mk = |pid| {
+            RingProducer::new(
+                fabric.connect(id).unwrap(),
+                cfg,
+                Arc::new(clock.clone()),
+                pid,
+            )
+        };
+        let healthy = mk(1);
+        let mut cons = RingConsumer::new(region, cfg);
+        let mut rng = Rng::new(timeout_ns);
+        let (mut ok, mut corrupted, mut steals) = (0u64, 0u64, 0u64);
+        for i in 0..10_000u64 {
+            if rng.f64() < 0.05 {
+                // A writer dies mid-protocol at a random point.
+                let victim = mk(100 + i);
+                let die = match rng.below(3) {
+                    0 => onepiece::ringbuf::DieAt::AfterLock,
+                    1 => onepiece::ringbuf::DieAt::AfterWb,
+                    _ => onepiece::ringbuf::DieAt::AfterWl,
+                };
+                let _ = victim.push(&[9u8; 64], Some(die));
+                clock.advance(timeout_ns + 1); // next push steals
+            }
+            clock.advance(100);
+            match healthy.push(&[(i % 251) as u8; 64], None) {
+                Ok(out) => {
+                    if out.stole_lock {
+                        steals += 1;
+                    }
+                }
+                Err(PushError::Full) => {}
+                Err(e) => panic!("{e:?}"),
+            }
+            while let Some(r) = cons.pop() {
+                match r {
+                    Ok(_) => ok += 1,
+                    Err(_) => corrupted += 1,
+                }
+            }
+        }
+        println!(
+            "{:<44} {:>8} ok {:>6} corrupted {:>6} steals",
+            format!("timeout={} µs", timeout_ns / 1000),
+            ok,
+            corrupted,
+            steals
+        );
+    }
+    println!("\n(corruption stays bounded regardless of timeout: blast radius is one entry)");
+}

@@ -1,0 +1,94 @@
+//! E8 — §5 fast-reject: offered load sweep across the capacity point.
+//! With the Request Monitor on, in-system latency stays flat and goodput
+//! plateaus at capacity; with it off (headroom → ∞), queues grow and p99
+//! explodes. Regenerates the paper's overload-stability argument.
+
+use onepiece::pipeline::{instances_needed, trace_schedule, TraceStage};
+use onepiece::proxy::RequestMonitor;
+use onepiece::sim::ArrivalProcess;
+use onepiece::util::ManualClock;
+use std::sync::Arc;
+
+/// Queueing model of one workflow set entrance: capacity C req/s, each
+/// admitted request takes the Theorem-1 pipeline latency; without
+/// fast-reject the backlog adds waiting time.
+fn run(offered_rps: f64, capacity_rps: f64, fast_reject: bool) -> (f64, f64, f64) {
+    let duration = 300.0;
+    let arrivals = ArrivalProcess::Poisson { rate_rps: offered_rps }.generate(7, duration);
+    let clock = ManualClock::new();
+    clock.set(1);
+    let monitor = RequestMonitor::new(
+        Arc::new(clock.clone()),
+        1_000_000_000,
+        if fast_reject { 1.0 } else { 1e9 },
+    );
+    // Admitted requests flow through a single-stage queue with
+    // `capacity` servers of 1 s each (normalized pipeline).
+    let mut server_free = vec![0.0f64; capacity_rps.ceil() as usize];
+    let service = capacity_rps.ceil() / capacity_rps; // keeps rate = C
+    let mut admitted = 0u64;
+    let mut latencies = Vec::new();
+    for &t in &arrivals {
+        clock.set((t * 1e9) as u64 + 1);
+        if !monitor.admit(capacity_rps) {
+            continue; // fast-rejected: client retries another set
+        }
+        admitted += 1;
+        let (idx, &earliest) = server_free
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        let start = t.max(earliest);
+        let end = start + service;
+        server_free[idx] = end;
+        latencies.push(end - t);
+    }
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let p99 = latencies
+        .get((latencies.len() * 99 / 100).min(latencies.len().saturating_sub(1)))
+        .copied()
+        .unwrap_or(0.0);
+    let goodput = latencies.iter().filter(|&&l| l < 10.0 * service).count() as f64 / duration;
+    (admitted as f64 / duration, goodput, p99)
+}
+
+fn main() {
+    let capacity = 10.0;
+    println!("=== E8: fast-reject under offered-load sweep (capacity {capacity} req/s) ===");
+    println!(
+        "{:<12} {:>14} {:>12} {:>12} | {:>14} {:>12} {:>12}",
+        "offered", "FR admit/s", "goodput", "p99 (s)", "noFR admit/s", "goodput", "p99 (s)"
+    );
+    for mult in [0.5, 0.8, 1.0, 1.2, 2.0, 4.0, 8.0] {
+        let offered = capacity * mult;
+        let (a1, g1, p1) = run(offered, capacity, true);
+        let (a2, g2, p2) = run(offered, capacity, false);
+        println!(
+            "{:<12} {:>14.1} {:>12.1} {:>12.2} | {:>14.1} {:>12.1} {:>12.2}",
+            format!("{mult:.1}x"),
+            a1,
+            g1,
+            p1,
+            a2,
+            g2,
+            p2
+        );
+    }
+    println!(
+        "\nshape: with fast-reject, p99 stays ~flat past capacity and goodput \
+         plateaus; without it, p99 grows with offered load (unbounded queue)"
+    );
+
+    // The Theorem-1 tie-in (§5): K is computed from live instance info.
+    let m = instances_needed(1, 4.0, 12.0);
+    let stages = vec![
+        TraceStage { name: "X".into(), exec_s: 4.0, instances: 1, workers: 1 },
+        TraceStage { name: "Y".into(), exec_s: 12.0, instances: m, workers: 1 },
+    ];
+    let t = trace_schedule(&stages, 8, 4.0);
+    println!(
+        "\nadmission interval from Theorem 1: {:.1} s (K/T_X with K=1, T_X=4 s)",
+        t.output_interval_s
+    );
+}

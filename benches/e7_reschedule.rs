@@ -1,0 +1,92 @@
+//! E9 — Figure 10: NM dynamic rescheduling. A load shift saturates the
+//! diffusion stage; the NM's §8.2 loop moves an idle-pool instance and
+//! then an underutilized VAE-decode instance into diffusion. Prints the
+//! before/after utilization and the action log, and measures the
+//! decision latency of a rebalance pass over growing fleets.
+
+use onepiece::bench;
+use onepiece::config::ClusterConfig;
+use onepiece::nm::{NodeManager, StageKey};
+use onepiece::rdma::RegionId;
+use onepiece::transport::AppId;
+use onepiece::util::NodeId;
+use onepiece::workflow::ControlPlane; // report_utilization lives here
+
+fn key(stage: u32) -> StageKey {
+    StageKey { app: AppId(1), stage }
+}
+
+fn main() {
+    println!("=== E9: Figure 10 rescheduling scenario ===");
+    let nm = NodeManager::new(ClusterConfig::i2v_default().apps, 0.85);
+
+    // Topology: prep (stage 0) ×1 at 60%, diffusion (stage 2) ×2 at 100%,
+    // decode (stage 3) ×2 at 15%, plus one idle-pool instance — the
+    // figure's starting state.
+    let nodes: &[(u32, Option<u32>, f64)] = &[
+        (1, Some(0), 0.60),
+        (2, Some(2), 1.00),
+        (3, Some(2), 1.00),
+        (4, Some(3), 0.15),
+        (5, Some(3), 0.12),
+        (6, None, 0.0), // idle pool
+    ];
+    for &(n, stage, util) in nodes {
+        nm.register_instance(NodeId(n), RegionId(n as u64 * 100));
+        if let Some(s) = stage {
+            nm.assign(NodeId(n), Some(key(s)));
+        }
+        nm.report_utilization(NodeId(n), util);
+    }
+
+    println!("before: diffusion util {:.0}%, instances {:?}; idle pool {:?}",
+        nm.stage_utilization(key(2)) * 100.0,
+        nm.stage_instances(key(2)),
+        nm.idle_pool());
+
+    // Pass 1: idle instance joins diffusion.
+    let a1 = nm.rebalance().expect("must act above threshold");
+    println!("action 1: {:?} -> {:?} (trigger {:.0}%)", a1.from, a1.to, a1.trigger_util * 100.0);
+    assert_eq!(a1.from, None, "idle pool first");
+
+    // Diffusion still hot (new instance hasn't absorbed load yet).
+    nm.report_utilization(NodeId(2), 0.97);
+    nm.report_utilization(NodeId(3), 0.97);
+    nm.report_utilization(NodeId(6), 0.90);
+
+    // Pass 2: steal from the underutilized decode stage (the figure's
+    // "VAE Decode instance reassigned to Diffusion").
+    let a2 = nm.rebalance().expect("second pass must act");
+    println!("action 2: {:?} -> {:?} (trigger {:.0}%)", a2.from, a2.to, a2.trigger_util * 100.0);
+    assert_eq!(a2.from, Some(key(3)));
+    assert_eq!(a2.to, key(2));
+
+    println!("after:  diffusion instances {:?}; decode instances {:?}; idle pool {:?}",
+        nm.stage_instances(key(2)),
+        nm.stage_instances(key(3)),
+        nm.idle_pool());
+    assert_eq!(nm.stage_instances(key(2)).len(), 4);
+    assert_eq!(nm.stage_instances(key(3)).len(), 1);
+
+    // --- decision latency vs fleet size ---
+    bench::header("E9b: rebalance decision latency vs fleet size");
+    for fleet in [16usize, 64, 256, 1024] {
+        let nm = NodeManager::new(ClusterConfig::i2v_default().apps, 0.85);
+        for i in 0..fleet {
+            let n = NodeId(i as u32 + 1);
+            nm.register_instance(n, RegionId(i as u64));
+            nm.assign(n, Some(key((i % 4) as u32)));
+            nm.report_utilization(n, if i % 4 == 2 { 0.99 } else { 0.3 });
+        }
+        bench::quick(&format!("fleet={fleet} instances"), || {
+            // Rebalance + undo so each iteration sees the same state.
+            if let Some(a) = nm.rebalance() {
+                nm.assign(a.node, a.from);
+                if let Some(f) = a.from {
+                    let _ = f;
+                }
+                nm.report_utilization(a.node, 0.3);
+            }
+        });
+    }
+}

@@ -1,0 +1,67 @@
+//! E12 — §3.4/§7 memory-centric database: put/fetch latency across value
+//! sizes, replication fan-out cost, TTL purge throughput, and the
+//! read-one-retry-next availability path.
+
+use onepiece::bench;
+use onepiece::db::{DbClient, MemDb};
+use onepiece::util::{NodeId, SystemClock, Uid};
+use std::sync::Arc;
+
+fn main() {
+    let clock = Arc::new(SystemClock);
+
+    bench::header("E12a: put + fetch-purge per result");
+    for size in [1 << 10, 64 << 10, 1 << 20, 16 << 20] {
+        let db = MemDb::new(clock.clone(), u64::MAX);
+        let data = vec![5u8; size];
+        bench::quick(&format!("value {:>6} KiB", size / 1024), || {
+            let uid = Uid::fresh(NodeId(1));
+            db.put(uid, data.clone());
+            assert!(db.fetch(uid).is_some());
+        });
+    }
+
+    bench::header("E12b: replication fan-out (put to N replicas)");
+    for replicas in [1usize, 2, 3] {
+        let dbs: Vec<Arc<MemDb>> = (0..replicas)
+            .map(|_| Arc::new(MemDb::new(clock.clone(), u64::MAX)))
+            .collect();
+        let data = vec![7u8; 256 << 10];
+        bench::quick(&format!("replicas={replicas} value=256KiB"), || {
+            let uid = Uid::fresh(NodeId(1));
+            for db in &dbs {
+                db.put(uid, data.clone());
+            }
+            // One fetch purges the primary; peers expire by TTL.
+            assert!(dbs[0].fetch(uid).is_some());
+        });
+    }
+
+    bench::header("E12c: client fall-through on replica failure");
+    {
+        let dbs: Vec<Arc<MemDb>> = (0..3)
+            .map(|_| Arc::new(MemDb::new(clock.clone(), u64::MAX)))
+            .collect();
+        let client = DbClient::new(dbs.clone());
+        client.set_alive(0, false); // dead primary
+        bench::quick("fetch with dead primary (2 hops)", || {
+            let uid = Uid::fresh(NodeId(1));
+            dbs[1].put(uid, vec![1u8; 1024]);
+            assert!(client.fetch(uid).is_some());
+        });
+    }
+
+    bench::header("E12d: TTL purge sweep");
+    {
+        use onepiece::util::ManualClock;
+        let mclock = ManualClock::new();
+        let db = MemDb::new(Arc::new(mclock.clone()), 1_000);
+        bench::quick("purge 10k expired entries", || {
+            for i in 0..10_000u32 {
+                db.put(Uid(i as u128), vec![0u8; 64]);
+            }
+            mclock.advance(10_000);
+            assert_eq!(db.purge_expired(), 10_000);
+        });
+    }
+}

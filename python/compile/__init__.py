@@ -1,0 +1,5 @@
+"""Build-time compile path: JAX stage models + Pallas kernels + AOT lowering.
+
+Nothing in this package is imported at serving time — `make artifacts` runs
+it once and the rust coordinator only ever sees `artifacts/*.hlo.txt`.
+"""

@@ -1,0 +1,101 @@
+"""AOT lowering: JAX stage models -> HLO text artifacts + manifest.
+
+Interchange format is HLO *text*, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (what the
+rust `xla` 0.1.6 crate links) rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Run once at build time (`make artifacts`):
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Outputs, per stage in model.STAGES:
+    artifacts/<stage>.hlo.txt     — HLO text, weights baked as constants
+    artifacts/manifest.json       — input/output shapes+dtypes for rust
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True: rust
+    unwraps with to_tuple1).
+
+    Print options matter: `print_large_constants=True` or the baked weights
+    are elided as `constant({...})` and the rust-side parser would reject
+    (or zero) them; `print_metadata=False` because jax's current metadata
+    attributes (`source_end_line` etc.) are unknown to xla_extension
+    0.5.1's HLO parser.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    mod = comp.get_hlo_module()
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    opts.print_metadata = False
+    return mod.to_string(opts)
+
+
+def lower_stage(name: str) -> tuple[str, dict]:
+    """Lower one stage; returns (hlo_text, manifest entry)."""
+    fn, arg_specs, out_shape = model.STAGES[name]
+    specs = [jax.ShapeDtypeStruct(shape, dtype) for _, dtype, shape in arg_specs]
+    lowered = jax.jit(fn).lower(*specs)
+    entry = {
+        "inputs": [
+            {"name": n, "dtype": jnp.dtype(d).name, "shape": list(s)}
+            for n, d, s in arg_specs
+        ],
+        "output": {"dtype": "float32", "shape": list(out_shape)},
+        "file": f"{name}.hlo.txt",
+    }
+    return to_hlo_text(lowered), entry
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--stages", nargs="*", default=list(model.STAGES),
+                    help="subset of stages to lower")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    manifest = {
+        "dims": {
+            "vocab": model.VOCAB, "seq_text": model.SEQ_TEXT,
+            "d_model": model.D_MODEL, "heads": model.HEADS,
+            "d_ff": model.D_FF, "img_hw": model.IMG_HW,
+            "img_c": model.IMG_C, "patch": model.PATCH,
+            "img_tokens": model.IMG_TOKENS, "d_latent": model.D_LATENT,
+            "frames": model.FRAMES, "vid_tokens": model.VID_TOKENS,
+            "seed": model.SEED,
+        },
+        "stages": {},
+    }
+    for name in args.stages:
+        text, entry = lower_stage(name)
+        path = os.path.join(args.out, entry["file"])
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["stages"][name] = entry
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {os.path.join(args.out, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""L1 Pallas kernels (interpret=True) + pure-jnp reference oracles."""
+
+from .attention import attention
+from .fused_mlp import fused_mlp
+from .layernorm import layernorm
+from .modulation import modulate
+
+__all__ = ["attention", "fused_mlp", "layernorm", "modulate"]

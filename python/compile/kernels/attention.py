@@ -1,0 +1,104 @@
+"""Pallas flash-style multi-head attention kernel (L1 hot-spot).
+
+TPU adaptation of the paper's GPU attention hot-spot (DESIGN.md
+§Hardware-Adaptation): instead of CUDA warp tiles / shared memory, we tile
+for VMEM with BlockSpec — the grid walks (head, q-block) and each program
+streams K/V through an online-softmax accumulator, so the [Sq, Sk] logits
+matrix never materializes in HBM. All matmuls are shaped for the MXU
+systolic array ([bq, D] @ [D, bk] and [bq, bk] @ [bk, D]).
+
+Run with interpret=True everywhere in this repo: the CPU PJRT plugin cannot
+execute Mosaic custom-calls (see /opt/xla-example/README.md). Real-TPU
+VMEM/MXU estimates live in DESIGN.md §9.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes. 128 matches the MXU lane width; smaller inputs use a
+# single block. Q is tiled; K/V are streamed in chunks of _BLOCK_K inside
+# the kernel so the logits tile is at most [_BLOCK_Q, _BLOCK_K] in VMEM.
+_BLOCK_Q = 128
+_BLOCK_K = 128
+
+_NEG_INF = -1e30
+
+
+def _attention_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int, sk: int):
+    """One (head, q-block) program: online-softmax over K/V chunks."""
+    q = q_ref[0]  # [bq, D]
+    bq, d = q.shape
+    scale = (1.0 / jnp.sqrt(jnp.asarray(d, dtype=jnp.float32))).astype(q.dtype)
+
+    num_kb = sk // block_k
+
+    def body(i, carry):
+        m_prev, l_prev, acc = carry
+        k = jax.lax.dynamic_slice_in_dim(k_ref[0], i * block_k, block_k, axis=0)
+        v = jax.lax.dynamic_slice_in_dim(v_ref[0], i * block_k, block_k, axis=0)
+        # [bq, bk] logits tile — MXU matmul, fp32 accumulate.
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale
+        m_cur = jnp.max(s, axis=-1)  # [bq]
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[:, None])  # [bq, bk]
+        alpha = jnp.exp(m_prev - m_new)  # rescale old accumulator
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        return m_new, l_new, acc
+
+    m0 = jnp.full((bq,), _NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((bq,), dtype=jnp.float32)
+    acc0 = jnp.zeros((bq, d), dtype=jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, num_kb, body, (m0, l0, acc0))
+    o_ref[0] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+def _pick_block(n: int, preferred: int) -> int:
+    """Largest divisor of `n` that is <= preferred (block must tile evenly)."""
+    b = min(n, preferred)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k"))
+def attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    block_q: int = _BLOCK_Q,
+    block_k: int = _BLOCK_K,
+) -> jnp.ndarray:
+    """Flash attention over [H, Sq, D] / [H, Sk, D] / [H, Sk, D] -> [H, Sq, D].
+
+    Matches `ref.attention_ref` to fp32 tolerance. Grid = (H, Sq/bq); each
+    program holds one Q tile plus one K/V chunk in VMEM at a time.
+    """
+    h, sq, d = q.shape
+    _, sk, _ = k.shape
+    bq = _pick_block(sq, block_q)
+    bk = _pick_block(sk, block_k)
+
+    kernel = functools.partial(_attention_kernel, block_k=bk, sk=sk)
+    return pl.pallas_call(
+        kernel,
+        grid=(h, sq // bq),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda ih, iq: (ih, iq, 0)),
+            pl.BlockSpec((1, sk, d), lambda ih, iq: (ih, 0, 0)),
+            pl.BlockSpec((1, sk, d), lambda ih, iq: (ih, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda ih, iq: (ih, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, sq, d), q.dtype),
+        interpret=True,
+    )(q, k, v)

@@ -1,0 +1,80 @@
+"""Pallas fused transformer MLP kernel (L1).
+
+Fuses matmul -> bias -> GELU -> matmul -> bias into one kernel so the
+[S, F] hidden activation never round-trips HBM (the paper's GPU version
+keeps it in shared memory; on TPU it lives in VMEM — DESIGN.md
+§Hardware-Adaptation). The grid tiles the token dimension; each program
+loads one [bs, D] activation tile plus both weight panels and writes one
+[bs, D] output tile.
+
+interpret=True only — see attention.py header.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gelu(x: jnp.ndarray) -> jnp.ndarray:
+    """tanh-approx GELU; must match ref.gelu_ref exactly."""
+    c = jnp.sqrt(jnp.asarray(2.0 / jnp.pi, dtype=x.dtype))
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x**3)))
+
+
+def _fused_mlp_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref):
+    x = x_ref[...]  # [bs, D]
+    # First matmul + bias + GELU: hidden stays in VMEM/registers.
+    h = jax.lax.dot_general(
+        x, w1_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) + b1_ref[...][None, :]
+    h = _gelu(h.astype(x.dtype))
+    # Second matmul + bias — fused epilogue, no HBM round-trip for h.
+    o = jax.lax.dot_general(
+        h, w2_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) + b2_ref[...][None, :]
+    o_ref[...] = o.astype(o_ref.dtype)
+
+
+def _pick_block(n: int, preferred: int) -> int:
+    b = min(n, preferred)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("block_s",))
+def fused_mlp(
+    x: jnp.ndarray,
+    w1: jnp.ndarray,
+    b1: jnp.ndarray,
+    w2: jnp.ndarray,
+    b2: jnp.ndarray,
+    block_s: int = 128,
+) -> jnp.ndarray:
+    """Fused (x @ w1 + b1) -> GELU -> (@ w2 + b2) over x:[S, D].
+
+    w1: [D, F], b1: [F], w2: [F, D], b2: [D]. Matches ref.fused_mlp_ref.
+    """
+    s, d = x.shape
+    f = w1.shape[1]
+    bs = _pick_block(s, block_s)
+    return pl.pallas_call(
+        _fused_mlp_kernel,
+        grid=(s // bs,),
+        in_specs=[
+            pl.BlockSpec((bs, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, f), lambda i: (0, 0)),
+            pl.BlockSpec((f,), lambda i: (0,)),
+            pl.BlockSpec((f, d), lambda i: (0, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bs, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((s, d), x.dtype),
+        interpret=True,
+    )(x, w1, b1, w2, b2)

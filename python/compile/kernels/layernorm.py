@@ -1,0 +1,53 @@
+"""Pallas LayerNorm kernel (L1).
+
+Parameter-free LayerNorm over the last axis (the DiT blocks apply affine
+via adaLN, so no gamma/beta here). One pass per row tile: mean and
+variance computed in-register over the feature axis, normalized output
+written back — the feature row never leaves VMEM between the moment
+statistics and the normalization (on GPU this is the classic two-pass vs
+fused-one-pass distinction; on TPU the row tile lives in VMEM either way,
+so the win is avoiding a second HBM read of x).
+
+interpret=True only — see attention.py header.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _layernorm_kernel(x_ref, o_ref, *, eps: float):
+    x = x_ref[...]  # [bs, D]
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mean) ** 2, axis=-1, keepdims=True)
+    o_ref[...] = (x - mean) * jax.lax.rsqrt(var + eps)
+
+
+def _pick_block(n: int, preferred: int) -> int:
+    b = min(n, preferred)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_s"))
+def layernorm(x: jnp.ndarray, eps: float = 1e-6, block_s: int = 256) -> jnp.ndarray:
+    """Parameter-free LayerNorm over the last axis of x:[S, D].
+
+    Matches ref.layernorm_ref to fp32 tolerance.
+    """
+    s, d = x.shape
+    bs = _pick_block(s, block_s)
+    kernel = functools.partial(_layernorm_kernel, eps=eps)
+    return pl.pallas_call(
+        kernel,
+        grid=(s // bs,),
+        in_specs=[pl.BlockSpec((bs, d), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bs, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((s, d), x.dtype),
+        interpret=True,
+    )(x)

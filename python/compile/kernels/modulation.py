@@ -1,0 +1,60 @@
+"""Pallas adaLN-Zero modulation kernel (L1).
+
+DiT-style conditioning: out = residual + gate * (x * (1 + scale) + shift),
+with shift/scale/gate broadcast over the token dimension. A pure
+elementwise/VPU kernel — it exists so the whole DiT block body (attention,
+MLP, modulation) stays in Pallas and lowers into the same HLO module.
+
+interpret=True only — see attention.py header.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _modulate_kernel(x_ref, shift_ref, scale_ref, gate_ref, res_ref, o_ref):
+    x = x_ref[...]
+    shift = shift_ref[...][None, :]
+    scale = scale_ref[...][None, :]
+    gate = gate_ref[...][None, :]
+    o_ref[...] = res_ref[...] + gate * (x * (1.0 + scale) + shift)
+
+
+def _pick_block(n: int, preferred: int) -> int:
+    b = min(n, preferred)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("block_s",))
+def modulate(
+    x: jnp.ndarray,
+    shift: jnp.ndarray,
+    scale: jnp.ndarray,
+    gate: jnp.ndarray,
+    residual: jnp.ndarray,
+    block_s: int = 256,
+) -> jnp.ndarray:
+    """out = residual + gate * (x * (1 + scale) + shift); x/residual [S, D]."""
+    s, d = x.shape
+    bs = _pick_block(s, block_s)
+    return pl.pallas_call(
+        _modulate_kernel,
+        grid=(s // bs,),
+        in_specs=[
+            pl.BlockSpec((bs, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((bs, d), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bs, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((s, d), x.dtype),
+        interpret=True,
+    )(x, shift, scale, gate, residual)

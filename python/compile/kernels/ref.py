@@ -1,0 +1,82 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the correctness ground truth: `python/tests/test_kernels.py`
+sweeps shapes/dtypes with hypothesis and asserts the Pallas kernels
+(interpret=True) match these references to float32 tolerance.
+
+Nothing here is ever lowered into an artifact — artifacts always go through
+the Pallas implementations so the AOT path exercises the real kernels.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """Multi-head scaled dot-product attention.
+
+    Args:
+      q: [H, Sq, D] queries.
+      k: [H, Sk, D] keys.
+      v: [H, Sk, D] values.
+    Returns:
+      [H, Sq, D] attention output.
+    """
+    d = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=q.dtype))
+    logits = jnp.einsum("hqd,hkd->hqk", q, k) * scale
+    weights = jnp.exp(logits - jnp.max(logits, axis=-1, keepdims=True))
+    weights = weights / jnp.sum(weights, axis=-1, keepdims=True)
+    return jnp.einsum("hqk,hkd->hqd", weights, v)
+
+
+def gelu_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """tanh-approximation GELU (matches the Pallas kernel's epilogue)."""
+    c = jnp.sqrt(jnp.asarray(2.0 / jnp.pi, dtype=x.dtype))
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x**3)))
+
+
+def fused_mlp_ref(
+    x: jnp.ndarray,
+    w1: jnp.ndarray,
+    b1: jnp.ndarray,
+    w2: jnp.ndarray,
+    b2: jnp.ndarray,
+) -> jnp.ndarray:
+    """Reference for the fused MLP: (x @ w1 + b1) -> GELU -> (@ w2 + b2).
+
+    Args:
+      x:  [S, D].
+      w1: [D, F]; b1: [F].
+      w2: [F, D]; b2: [D].
+    Returns:
+      [S, D].
+    """
+    h = gelu_ref(x @ w1 + b1)
+    return h @ w2 + b2
+
+
+def modulate_ref(
+    x: jnp.ndarray,
+    shift: jnp.ndarray,
+    scale: jnp.ndarray,
+    gate: jnp.ndarray,
+    residual: jnp.ndarray,
+) -> jnp.ndarray:
+    """Reference for adaLN-Zero modulation with gated residual.
+
+    out = residual + gate * (x * (1 + scale) + shift)
+
+    Args:
+      x, residual: [S, D].
+      shift, scale, gate: [D] (broadcast over rows).
+    """
+    return residual + gate[None, :] * (x * (1.0 + scale[None, :]) + shift[None, :])
+
+
+def layernorm_ref(x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    """Parameter-free LayerNorm over the last axis (adaLN supplies affine)."""
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mean) / jnp.sqrt(var + eps)

@@ -1,0 +1,282 @@
+"""L2 JAX stage models for the OnePiece AIGC workflow (build-time only).
+
+Four stage models mirror the paper's Wan2.1 image-to-video pipeline (§2.4):
+
+  text_encoder    — T5/CLIP stand-in: token embedding + transformer blocks
+  vae_encode      — patchify + MLP projection of the input image to latents
+  diffusion_step  — one DiT denoising step (self-attn, cross-attn to text +
+                    image conditioning, adaLN-Zero time modulation, Euler
+                    update) — the hot spot; every matmul-heavy op routes
+                    through the L1 Pallas kernels
+  vae_decode      — latent video tokens back to pixel frames
+
+Weights are generated from a fixed PRNG seed and *baked into the HLO as
+constants* at lowering time, so the rust runtime passes activations only.
+Shapes are deliberately small (≈1.1 M params total) — the paper's system
+contribution is the coordination layer; these models give each workflow
+stage real, asymmetric compute (diffusion ≫ encoders), which is what the
+resource experiments need (DESIGN.md §2 substitutions).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import attention, fused_mlp, layernorm, modulate
+
+# ---------------------------------------------------------------------------
+# Dimensions (single source of truth; mirrored in artifacts/manifest.json).
+# ---------------------------------------------------------------------------
+VOCAB = 512          # text vocabulary
+SEQ_TEXT = 32        # prompt tokens
+D_MODEL = 128        # transformer width
+HEADS = 4
+HEAD_DIM = D_MODEL // HEADS
+D_FF = 512           # MLP hidden width
+IMG_HW = 32          # input image height/width
+IMG_C = 3
+PATCH = 4            # VAE patch size
+IMG_TOKENS = (IMG_HW // PATCH) ** 2          # 64 image latent tokens
+D_LATENT = 16        # latent channel width
+FRAMES = 4           # generated video frames
+VID_TOKENS = FRAMES * IMG_TOKENS             # 256 video latent tokens
+TEXT_BLOCKS = 2      # encoder depth
+DIT_BLOCKS = 2       # diffusion transformer depth
+SEED = 20260710      # weight PRNG seed (fixed => reproducible artifacts)
+
+_PATCH_DIM = PATCH * PATCH * IMG_C           # 48
+
+
+# ---------------------------------------------------------------------------
+# Parameters. Built once per process; treated as compile-time constants.
+# ---------------------------------------------------------------------------
+@functools.lru_cache(maxsize=1)
+def build_params() -> Dict[str, "np.ndarray"]:
+    """Deterministic parameter set for all four stages.
+
+    Built with *numpy* (never jax): (1) numpy closures always lower to
+    `stablehlo.constant` — baked into the artifact — whereas committed
+    jax.Arrays can be hoisted into entry parameters by later lowerings in
+    the same process, which would change the rust-side call signature;
+    (2) numpy construction cannot accidentally be staged into a jit trace.
+    """
+    import numpy as np
+
+    rng = np.random.default_rng(SEED)
+
+    def _init(_key, shape, scale: float = 0.02):
+        return (scale * rng.standard_normal(shape)).astype(np.float32)
+
+    jnp = np  # shadow: zeros() below builds numpy arrays
+    keys = iter(range(256))
+    p: Dict[str, np.ndarray] = {}
+
+    # --- text encoder ---
+    p["te.embed"] = _init(next(keys), (VOCAB, D_MODEL), 0.05)
+    p["te.pos"] = _init(next(keys), (SEQ_TEXT, D_MODEL), 0.02)
+    for b in range(TEXT_BLOCKS):
+        pre = f"te.{b}."
+        p[pre + "wq"] = _init(next(keys), (D_MODEL, D_MODEL))
+        p[pre + "wk"] = _init(next(keys), (D_MODEL, D_MODEL))
+        p[pre + "wv"] = _init(next(keys), (D_MODEL, D_MODEL))
+        p[pre + "wo"] = _init(next(keys), (D_MODEL, D_MODEL))
+        p[pre + "w1"] = _init(next(keys), (D_MODEL, D_FF))
+        p[pre + "b1"] = jnp.zeros((D_FF,), jnp.float32)
+        p[pre + "w2"] = _init(next(keys), (D_FF, D_MODEL))
+        p[pre + "b2"] = jnp.zeros((D_MODEL,), jnp.float32)
+
+    # --- VAE encoder ---
+    p["ve.proj1"] = _init(next(keys), (_PATCH_DIM, D_MODEL), 0.05)
+    p["ve.b1"] = jnp.zeros((D_MODEL,), jnp.float32)
+    p["ve.w1"] = _init(next(keys), (D_MODEL, D_FF))
+    p["ve.bb1"] = jnp.zeros((D_FF,), jnp.float32)
+    p["ve.w2"] = _init(next(keys), (D_FF, D_MODEL))
+    p["ve.bb2"] = jnp.zeros((D_MODEL,), jnp.float32)
+    p["ve.proj2"] = _init(next(keys), (D_MODEL, D_LATENT), 0.05)
+    p["ve.b2"] = jnp.zeros((D_LATENT,), jnp.float32)
+
+    # --- diffusion (DiT) ---
+    p["di.in"] = _init(next(keys), (D_LATENT, D_MODEL), 0.05)
+    p["di.pos"] = _init(next(keys), (VID_TOKENS, D_MODEL), 0.02)
+    p["di.img_in"] = _init(next(keys), (D_LATENT, D_MODEL), 0.05)
+    p["di.t1"] = _init(next(keys), (D_MODEL, D_MODEL))
+    p["di.t2"] = _init(next(keys), (D_MODEL, 6 * D_MODEL * DIT_BLOCKS), 0.01)
+    for b in range(DIT_BLOCKS):
+        pre = f"di.{b}."
+        for n in ("wq", "wk", "wv", "wo", "cq", "ck", "cv", "co"):
+            p[pre + n] = _init(next(keys), (D_MODEL, D_MODEL))
+        p[pre + "w1"] = _init(next(keys), (D_MODEL, D_FF))
+        p[pre + "b1"] = jnp.zeros((D_FF,), jnp.float32)
+        p[pre + "w2"] = _init(next(keys), (D_FF, D_MODEL))
+        p[pre + "b2"] = jnp.zeros((D_MODEL,), jnp.float32)
+    p["di.out"] = _init(next(keys), (D_MODEL, D_LATENT), 0.02)
+
+    # --- VAE decoder ---
+    p["vd.proj1"] = _init(next(keys), (D_LATENT, D_MODEL), 0.05)
+    p["vd.b1"] = jnp.zeros((D_MODEL,), jnp.float32)
+    p["vd.w1"] = _init(next(keys), (D_MODEL, D_FF))
+    p["vd.bb1"] = jnp.zeros((D_FF,), jnp.float32)
+    p["vd.w2"] = _init(next(keys), (D_FF, D_MODEL))
+    p["vd.bb2"] = jnp.zeros((D_MODEL,), jnp.float32)
+    p["vd.proj2"] = _init(next(keys), (D_MODEL, _PATCH_DIM), 0.05)
+    p["vd.b2"] = jnp.zeros((_PATCH_DIM,), jnp.float32)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Shared blocks.
+# ---------------------------------------------------------------------------
+def _split_heads(x: jnp.ndarray) -> jnp.ndarray:
+    """[S, D_MODEL] -> [HEADS, S, HEAD_DIM]."""
+    s = x.shape[0]
+    return x.reshape(s, HEADS, HEAD_DIM).transpose(1, 0, 2)
+
+
+def _merge_heads(x: jnp.ndarray) -> jnp.ndarray:
+    """[HEADS, S, HEAD_DIM] -> [S, D_MODEL]."""
+    h, s, d = x.shape
+    return x.transpose(1, 0, 2).reshape(s, h * d)
+
+
+def _mha(x: jnp.ndarray, kv: jnp.ndarray, p, pre: str, qn="wq", kn="wk",
+         vn="wv", on="wo") -> jnp.ndarray:
+    """Multi-head attention via the L1 Pallas kernel. x:[Sq,D], kv:[Sk,D]."""
+    q = _split_heads(x @ p[pre + qn])
+    k = _split_heads(kv @ p[pre + kn])
+    v = _split_heads(kv @ p[pre + vn])
+    return _merge_heads(attention(q, k, v)) @ p[pre + on]
+
+
+def _encoder_block(x: jnp.ndarray, p, pre: str) -> jnp.ndarray:
+    """Pre-LN transformer block (self-attn + fused MLP)."""
+    h = layernorm(x)
+    x = x + _mha(h, h, p, pre)
+    h = layernorm(x)
+    return x + fused_mlp(h, p[pre + "w1"], p[pre + "b1"], p[pre + "w2"],
+                         p[pre + "b2"])
+
+
+def _time_embed(t: jnp.ndarray, p) -> jnp.ndarray:
+    """Sinusoidal timestep embedding -> MLP -> adaLN params [6*D*BLOCKS]."""
+    half = D_MODEL // 2
+    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half) / half)
+    ang = t[0] * freqs
+    emb = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])  # [D_MODEL]
+    h = jnp.tanh(emb @ p["di.t1"])
+    return h @ p["di.t2"]  # [6 * D_MODEL * DIT_BLOCKS]
+
+
+# ---------------------------------------------------------------------------
+# Stage entry points (AOT-lowered by aot.py).
+# ---------------------------------------------------------------------------
+def text_encoder(tokens: jnp.ndarray) -> jnp.ndarray:
+    """T5/CLIP stand-in. tokens:i32[SEQ_TEXT] -> ctx f32[SEQ_TEXT, D_MODEL]."""
+    p = build_params()
+    x = jnp.take(p["te.embed"], tokens, axis=0) + p["te.pos"]
+    for b in range(TEXT_BLOCKS):
+        x = _encoder_block(x, p, f"te.{b}.")
+    return layernorm(x)
+
+
+def vae_encode(image: jnp.ndarray) -> jnp.ndarray:
+    """Patchify + project. image f32[IMG_HW, IMG_HW, IMG_C] ->
+    latent f32[IMG_TOKENS, D_LATENT]."""
+    p = build_params()
+    g = IMG_HW // PATCH
+    patches = (
+        image.reshape(g, PATCH, g, PATCH, IMG_C)
+        .transpose(0, 2, 1, 3, 4)
+        .reshape(IMG_TOKENS, _PATCH_DIM)
+    )
+    h = jnp.tanh(patches @ p["ve.proj1"] + p["ve.b1"])
+    h = h + fused_mlp(layernorm(h), p["ve.w1"], p["ve.bb1"], p["ve.w2"],
+                      p["ve.bb2"])
+    return h @ p["ve.proj2"] + p["ve.b2"]
+
+
+def _dit_block(x, ctx, c6, p, pre):
+    """DiT block: adaLN-modulated self-attn, cross-attn, fused MLP.
+
+    x:[VID_TOKENS, D], ctx:[SEQ_TEXT+IMG_TOKENS, D], c6: [6, D] adaLN params.
+    """
+    shift_a, scale_a, gate_a, shift_m, scale_m, gate_m = c6
+    h = _mha(layernorm(x), layernorm(x), p, pre)  # self-attention
+    x = modulate(h, shift_a, scale_a, gate_a, x)
+    x = x + _mha(layernorm(x), ctx, p, pre, "cq", "ck", "cv", "co")  # cross
+    h = fused_mlp(layernorm(x), p[pre + "w1"], p[pre + "b1"], p[pre + "w2"],
+                  p[pre + "b2"])
+    return modulate(h, shift_m, scale_m, gate_m, x)
+
+
+def diffusion_step(x: jnp.ndarray, t: jnp.ndarray, dt: jnp.ndarray,
+                   ctx: jnp.ndarray, img_lat: jnp.ndarray) -> jnp.ndarray:
+    """One Euler denoising step of the DiT (the per-request hot loop).
+
+    x:       f32[VID_TOKENS, D_LATENT]   current noisy latent video
+    t:       f32[1]                      current timestep (0..1000 scale)
+    dt:      f32[1]                      Euler step size
+    ctx:     f32[SEQ_TEXT, D_MODEL]      text conditioning (stage 1 output)
+    img_lat: f32[IMG_TOKENS, D_LATENT]   image conditioning (stage 2 output)
+    Returns f32[VID_TOKENS, D_LATENT]: x - dt * eps_hat.
+    """
+    p = build_params()
+    h = x @ p["di.in"] + p["di.pos"]
+    cond = jnp.concatenate([ctx, img_lat @ p["di.img_in"]], axis=0)
+    cvec = _time_embed(t, p).reshape(DIT_BLOCKS, 6, D_MODEL)
+    for b in range(DIT_BLOCKS):
+        h = _dit_block(h, cond, cvec[b], p, f"di.{b}.")
+    eps = layernorm(h) @ p["di.out"]
+    return x - dt[0] * eps
+
+
+def vae_decode(x: jnp.ndarray) -> jnp.ndarray:
+    """Latent video tokens -> pixel frames.
+
+    x f32[VID_TOKENS, D_LATENT] -> video f32[FRAMES, IMG_HW, IMG_HW, IMG_C].
+    """
+    p = build_params()
+    h = jnp.tanh(x @ p["vd.proj1"] + p["vd.b1"])
+    h = h + fused_mlp(layernorm(h), p["vd.w1"], p["vd.bb1"], p["vd.w2"],
+                      p["vd.bb2"])
+    patches = jnp.tanh(h @ p["vd.proj2"] + p["vd.b2"])
+    g = IMG_HW // PATCH
+    return (
+        patches.reshape(FRAMES, g, g, PATCH, PATCH, IMG_C)
+        .transpose(0, 1, 3, 2, 4, 5)
+        .reshape(FRAMES, IMG_HW, IMG_HW, IMG_C)
+    )
+
+
+# Stage registry used by aot.py and the shape tests: name -> (fn, arg specs).
+STAGES = {
+    "text_encoder": (
+        text_encoder,
+        [("tokens", jnp.int32, (SEQ_TEXT,))],
+        (SEQ_TEXT, D_MODEL),
+    ),
+    "vae_encode": (
+        vae_encode,
+        [("image", jnp.float32, (IMG_HW, IMG_HW, IMG_C))],
+        (IMG_TOKENS, D_LATENT),
+    ),
+    "diffusion_step": (
+        diffusion_step,
+        [
+            ("x", jnp.float32, (VID_TOKENS, D_LATENT)),
+            ("t", jnp.float32, (1,)),
+            ("dt", jnp.float32, (1,)),
+            ("ctx", jnp.float32, (SEQ_TEXT, D_MODEL)),
+            ("img_lat", jnp.float32, (IMG_TOKENS, D_LATENT)),
+        ],
+        (VID_TOKENS, D_LATENT),
+    ),
+    "vae_decode": (
+        vae_decode,
+        [("x", jnp.float32, (VID_TOKENS, D_LATENT))],
+        (FRAMES, IMG_HW, IMG_HW, IMG_C),
+    ),
+}

@@ -1,0 +1,209 @@
+"""L1 kernel correctness: Pallas (interpret=True) vs pure-jnp oracles.
+
+Hypothesis sweeps shapes; every test asserts allclose against ref.py.
+This is the core correctness signal for the compute layer — the AOT
+artifacts lower exactly these kernels.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention, fused_mlp, layernorm, modulate
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+_SETTINGS = dict(max_examples=12, deadline=None)
+
+
+def _rand(key, shape, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(key), shape).astype(
+        jnp.float32
+    )
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+@settings(**_SETTINGS)
+@given(
+    h=st.sampled_from([1, 2, 4]),
+    sq=st.sampled_from([8, 16, 64, 128, 256]),
+    sk=st.sampled_from([8, 32, 128, 256]),
+    d=st.sampled_from([16, 32, 64]),
+    seed=st.integers(0, 2**16),
+)
+def test_attention_matches_ref(h, sq, sk, d, seed):
+    q = _rand(seed, (h, sq, d))
+    k = _rand(seed + 1, (h, sk, d))
+    v = _rand(seed + 2, (h, sk, d))
+    out = attention(q, k, v)
+    expect = ref.attention_ref(q, k, v)
+    assert out.shape == (h, sq, d)
+    np.testing.assert_allclose(out, expect, rtol=1e-4, atol=1e-5)
+
+
+@settings(**_SETTINGS)
+@given(
+    bq=st.sampled_from([16, 32, 64, 128]),
+    bk=st.sampled_from([16, 64, 128]),
+    seed=st.integers(0, 2**16),
+)
+def test_attention_block_size_invariant(bq, bk, seed):
+    """Online-softmax result must not depend on the tiling."""
+    q = _rand(seed, (2, 128, 32))
+    k = _rand(seed + 1, (2, 128, 32))
+    v = _rand(seed + 2, (2, 128, 32))
+    tiled = attention(q, k, v, block_q=bq, block_k=bk)
+    base = attention(q, k, v, block_q=128, block_k=128)
+    np.testing.assert_allclose(tiled, base, rtol=1e-5, atol=1e-6)
+
+
+def test_attention_large_logits_stable():
+    """Online softmax must survive large-magnitude logits (no inf/nan)."""
+    q = _rand(7, (1, 64, 32), scale=30.0)
+    k = _rand(8, (1, 64, 32), scale=30.0)
+    v = _rand(9, (1, 64, 32))
+    out = attention(q, k, v)
+    assert np.isfinite(np.asarray(out)).all()
+    np.testing.assert_allclose(out, ref.attention_ref(q, k, v), rtol=1e-3,
+                               atol=1e-4)
+
+
+def test_attention_uniform_when_keys_equal():
+    """Identical keys => output is the mean of values, independent of q."""
+    q = _rand(1, (1, 16, 8))
+    k = jnp.ones((1, 32, 8), jnp.float32)
+    v = _rand(2, (1, 32, 8))
+    out = attention(q, k, v)
+    expect = jnp.broadcast_to(v.mean(axis=1, keepdims=True), out.shape)
+    np.testing.assert_allclose(out, expect, rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# fused_mlp
+# ---------------------------------------------------------------------------
+@settings(**_SETTINGS)
+@given(
+    s=st.sampled_from([8, 32, 64, 128, 256]),
+    d=st.sampled_from([16, 64, 128]),
+    f=st.sampled_from([32, 128, 512]),
+    seed=st.integers(0, 2**16),
+)
+def test_fused_mlp_matches_ref(s, d, f, seed):
+    x = _rand(seed, (s, d))
+    w1 = _rand(seed + 1, (d, f), 0.1)
+    b1 = _rand(seed + 2, (f,), 0.1)
+    w2 = _rand(seed + 3, (f, d), 0.1)
+    b2 = _rand(seed + 4, (d,), 0.1)
+    out = fused_mlp(x, w1, b1, w2, b2)
+    expect = ref.fused_mlp_ref(x, w1, b1, w2, b2)
+    assert out.shape == (s, d)
+    np.testing.assert_allclose(out, expect, rtol=1e-4, atol=1e-5)
+
+
+@settings(**_SETTINGS)
+@given(bs=st.sampled_from([16, 32, 64, 128, 256]), seed=st.integers(0, 2**16))
+def test_fused_mlp_block_invariant(bs, seed):
+    x = _rand(seed, (256, 64))
+    w1 = _rand(seed + 1, (64, 128), 0.1)
+    b1 = _rand(seed + 2, (128,), 0.1)
+    w2 = _rand(seed + 3, (128, 64), 0.1)
+    b2 = _rand(seed + 4, (64,), 0.1)
+    np.testing.assert_allclose(
+        fused_mlp(x, w1, b1, w2, b2, block_s=bs),
+        fused_mlp(x, w1, b1, w2, b2, block_s=256),
+        rtol=1e-6, atol=1e-7,
+    )
+
+
+def test_fused_mlp_zero_weights_give_bias():
+    x = _rand(0, (16, 8))
+    w1 = jnp.zeros((8, 4), jnp.float32)
+    b1 = jnp.zeros((4,), jnp.float32)
+    w2 = jnp.zeros((4, 8), jnp.float32)
+    b2 = jnp.full((8,), 3.0, jnp.float32)
+    out = fused_mlp(x, w1, b1, w2, b2)
+    np.testing.assert_allclose(out, jnp.broadcast_to(b2, (16, 8)), atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# modulate
+# ---------------------------------------------------------------------------
+@settings(**_SETTINGS)
+@given(
+    s=st.sampled_from([8, 64, 256]),
+    d=st.sampled_from([16, 128]),
+    seed=st.integers(0, 2**16),
+)
+def test_modulate_matches_ref(s, d, seed):
+    x = _rand(seed, (s, d))
+    shift = _rand(seed + 1, (d,))
+    scale = _rand(seed + 2, (d,))
+    gate = _rand(seed + 3, (d,))
+    res = _rand(seed + 4, (s, d))
+    out = modulate(x, shift, scale, gate, res)
+    expect = ref.modulate_ref(x, shift, scale, gate, res)
+    np.testing.assert_allclose(out, expect, rtol=1e-5, atol=1e-6)
+
+
+def test_modulate_zero_gate_is_identity():
+    """adaLN-Zero init: gate=0 => block output == residual."""
+    x = _rand(1, (32, 16))
+    res = _rand(2, (32, 16))
+    zero = jnp.zeros((16,), jnp.float32)
+    out = modulate(x, _rand(3, (16,)), _rand(4, (16,)), zero, res)
+    np.testing.assert_allclose(out, res, atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# layernorm
+# ---------------------------------------------------------------------------
+@settings(**_SETTINGS)
+@given(
+    s=st.sampled_from([8, 64, 256]),
+    d=st.sampled_from([16, 128]),
+    scale=st.sampled_from([0.01, 1.0, 100.0]),
+    seed=st.integers(0, 2**16),
+)
+def test_layernorm_matches_ref(s, d, scale, seed):
+    x = _rand(seed, (s, d), scale)
+    out = layernorm(x)
+    expect = ref.layernorm_ref(x)
+    np.testing.assert_allclose(out, expect, rtol=1e-4, atol=1e-5)
+
+
+def test_layernorm_output_standardized():
+    x = _rand(3, (32, 64), 7.0) + 5.0
+    out = np.asarray(layernorm(x))
+    np.testing.assert_allclose(out.mean(axis=-1), 0.0, atol=1e-5)
+    np.testing.assert_allclose(out.var(axis=-1), 1.0, rtol=1e-3)
+
+
+@settings(**_SETTINGS)
+@given(bs=st.sampled_from([32, 64, 128, 256]), seed=st.integers(0, 2**16))
+def test_layernorm_block_invariant(bs, seed):
+    x = _rand(seed, (256, 32))
+    np.testing.assert_allclose(
+        layernorm(x, block_s=bs), layernorm(x, block_s=256), rtol=1e-6, atol=1e-7
+    )
+
+
+def test_layernorm_constant_row_is_zero():
+    x = jnp.full((8, 16), 3.5, jnp.float32)
+    out = layernorm(x)
+    np.testing.assert_allclose(out, jnp.zeros_like(x), atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# gelu epilogue parity (kernel-internal gelu vs ref)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("scale", [0.1, 1.0, 10.0])
+def test_gelu_parity(scale):
+    from compile.kernels.fused_mlp import _gelu
+
+    x = _rand(11, (64,), scale)
+    np.testing.assert_allclose(_gelu(x), ref.gelu_ref(x), rtol=1e-6, atol=1e-7)

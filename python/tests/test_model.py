@@ -1,0 +1,116 @@
+"""L2 stage-model contracts: shapes, determinism, conditioning, dynamics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _tokens(seed=0):
+    return jax.random.randint(
+        jax.random.PRNGKey(seed), (model.SEQ_TEXT,), 0, model.VOCAB
+    ).astype(jnp.int32)
+
+
+def _image(seed=1):
+    return jax.random.uniform(
+        jax.random.PRNGKey(seed), (model.IMG_HW, model.IMG_HW, model.IMG_C)
+    ).astype(jnp.float32)
+
+
+def _latent(seed=2):
+    return jax.random.normal(
+        jax.random.PRNGKey(seed), (model.VID_TOKENS, model.D_LATENT)
+    ).astype(jnp.float32)
+
+
+@pytest.mark.parametrize("name", list(model.STAGES))
+def test_stage_shapes(name):
+    fn, arg_specs, out_shape = model.STAGES[name]
+    args = []
+    for i, (_, dtype, shape) in enumerate(arg_specs):
+        if dtype == jnp.int32:
+            args.append(_tokens(i))
+        else:
+            args.append(
+                jax.random.normal(jax.random.PRNGKey(i), shape).astype(
+                    jnp.float32
+                )
+            )
+    out = fn(*args)
+    assert out.shape == out_shape
+    assert out.dtype == jnp.float32
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_params_deterministic():
+    """Same seed => identical weights => identical artifacts across builds."""
+    model.build_params.cache_clear()
+    a = model.build_params()["di.out"]
+    model.build_params.cache_clear()
+    b = model.build_params()["di.out"]
+    np.testing.assert_array_equal(a, b)
+
+
+def test_text_encoder_token_sensitivity():
+    a = model.text_encoder(_tokens(0))
+    b = model.text_encoder(_tokens(99))
+    assert not np.allclose(a, b)
+
+
+def test_vae_roundtrip_shape_chain():
+    """encode -> tile to video tokens -> decode composes shape-wise."""
+    img_lat = model.vae_encode(_image())
+    assert img_lat.shape == (model.IMG_TOKENS, model.D_LATENT)
+    video_lat = jnp.tile(img_lat, (model.FRAMES, 1))
+    video = model.vae_decode(video_lat)
+    assert video.shape == (model.FRAMES, model.IMG_HW, model.IMG_HW,
+                           model.IMG_C)
+
+
+def test_diffusion_step_conditioning_matters():
+    x = _latent()
+    t = jnp.array([500.0], jnp.float32)
+    dt = jnp.array([1.0 / 8], jnp.float32)
+    ctx_a = model.text_encoder(_tokens(0))
+    ctx_b = model.text_encoder(_tokens(7))
+    lat = model.vae_encode(_image())
+    out_a = model.diffusion_step(x, t, dt, ctx_a, lat)
+    out_b = model.diffusion_step(x, t, dt, ctx_b, lat)
+    assert not np.allclose(out_a, out_b)
+
+
+def test_diffusion_step_zero_dt_is_identity():
+    x = _latent()
+    out = model.diffusion_step(
+        x,
+        jnp.array([100.0], jnp.float32),
+        jnp.array([0.0], jnp.float32),
+        model.text_encoder(_tokens()),
+        model.vae_encode(_image()),
+    )
+    np.testing.assert_allclose(out, x, atol=1e-6)
+
+
+def test_diffusion_multi_step_stays_finite():
+    """8 Euler steps (the rust driver's loop) stay numerically sane."""
+    x = _latent()
+    ctx = model.text_encoder(_tokens())
+    lat = model.vae_encode(_image())
+    steps = 8
+    dt = jnp.array([1.0 / steps], jnp.float32)
+    for i in range(steps):
+        t = jnp.array([1000.0 * (1 - i / steps)], jnp.float32)
+        x = model.diffusion_step(x, t, dt, ctx, lat)
+    assert np.isfinite(np.asarray(x)).all()
+    assert float(jnp.abs(x).max()) < 1e3
+
+
+def test_vae_decode_bounded():
+    """Decoder ends in tanh => pixels in [-1, 1]."""
+    video = model.vae_decode(_latent())
+    assert float(jnp.abs(video).max()) <= 1.0 + 1e-6

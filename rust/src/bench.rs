@@ -1,0 +1,121 @@
+//! Minimal benchmarking harness (the offline build has no criterion).
+//!
+//! Provides warmup + timed iterations with mean/p50/p95/p99 reporting,
+//! and a tabular reporter the `benches/e*.rs` binaries share so every
+//! experiment prints paper-style rows. Wall-clock based; for modelled
+//! results (fabric latency) the benches read simulated-ns counters
+//! instead.
+
+use std::time::{Duration, Instant};
+
+/// Result of one timed benchmark.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchResult {
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub p99_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    /// Throughput in ops/second at the mean.
+    pub fn ops_per_sec(&self) -> f64 {
+        1e9 / self.mean_ns
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.0} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+/// Run `f` repeatedly: warm up for `warmup`, then time individual
+/// iterations for at least `measure` (and at least 10 samples).
+pub fn bench<F: FnMut()>(name: &str, warmup: Duration, measure: Duration, mut f: F) -> BenchResult {
+    let wstart = Instant::now();
+    while wstart.elapsed() < warmup {
+        f();
+    }
+    let mut samples: Vec<f64> = Vec::new();
+    let mstart = Instant::now();
+    while mstart.elapsed() < measure || samples.len() < 10 {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+        if samples.len() >= 1_000_000 {
+            break;
+        }
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len();
+    let result = BenchResult {
+        iters: n as u64,
+        mean_ns: samples.iter().sum::<f64>() / n as f64,
+        p50_ns: samples[n / 2],
+        p95_ns: samples[(n * 95 / 100).min(n - 1)],
+        p99_ns: samples[(n * 99 / 100).min(n - 1)],
+        min_ns: samples[0],
+    };
+    println!(
+        "{name:<44} {:>10} {:>10} {:>10}  ({} iters)",
+        fmt_ns(result.mean_ns),
+        fmt_ns(result.p50_ns),
+        fmt_ns(result.p99_ns),
+        result.iters
+    );
+    result
+}
+
+/// Print the standard bench table header.
+pub fn header(title: &str) {
+    println!("\n=== {title} ===");
+    println!("{:<44} {:>10} {:>10} {:>10}", "benchmark", "mean", "p50", "p99");
+}
+
+/// Quick defaults used by the e*.rs benches.
+pub fn quick<F: FnMut()>(name: &str, f: F) -> BenchResult {
+    bench(name, Duration::from_millis(100), Duration::from_millis(400), f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_numbers() {
+        let r = bench(
+            "noop-spin",
+            Duration::from_millis(1),
+            Duration::from_millis(10),
+            || {
+                std::hint::black_box(1 + 1);
+            },
+        );
+        assert!(r.iters >= 10);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.p50_ns <= r.p99_ns);
+        assert!(r.min_ns <= r.p50_ns);
+    }
+
+    #[test]
+    fn ops_per_sec_inverse_of_mean() {
+        let r = BenchResult {
+            iters: 1,
+            mean_ns: 1e6,
+            p50_ns: 1e6,
+            p95_ns: 1e6,
+            p99_ns: 1e6,
+            min_ns: 1e6,
+        };
+        assert!((r.ops_per_sec() - 1000.0).abs() < 1e-9);
+    }
+}

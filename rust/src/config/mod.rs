@@ -1,0 +1,59 @@
+//! Cluster / workflow configuration.
+//!
+//! Configs are JSON documents (parsed with the in-tree [`Json`] parser —
+//! the offline build has no serde/toml) validated into typed structs.
+//! [`ClusterConfig::i2v_default`] is the Wan2.1-style image-to-video
+//! deployment used by the examples; `examples/configs/` has the same
+//! shapes as files.
+
+mod types;
+
+pub use types::{
+    AppConfig, ClusterConfig, ConfigError, DbSettings, ExecModel, FabricKind,
+    NmSettings, ProxySettings, RingSettings, SchedMode, StageConfig,
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_roundtrips_json() {
+        let cfg = ClusterConfig::i2v_default();
+        let json = cfg.to_json();
+        let back = ClusterConfig::from_json_str(&json.to_string_compact()).unwrap();
+        assert_eq!(back.apps.len(), cfg.apps.len());
+        assert_eq!(back.apps[0].stages.len(), cfg.apps[0].stages.len());
+        assert_eq!(back.nm.util_threshold, cfg.nm.util_threshold);
+    }
+
+    #[test]
+    fn validation_rejects_empty_apps() {
+        let mut cfg = ClusterConfig::i2v_default();
+        cfg.apps.clear();
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn validation_rejects_zero_exec() {
+        let mut cfg = ClusterConfig::i2v_default();
+        cfg.apps[0].stages[0].exec_ms = 0.0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn example_config_file_parses() {
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("examples/configs/i2v_cluster.json");
+        let cfg = ClusterConfig::from_file(&path).unwrap();
+        assert_eq!(cfg.sets, 2);
+        assert_eq!(cfg.apps.len(), 2);
+        assert_eq!(cfg.apps[1].name, "t2v");
+        assert!(cfg.nm.auto_rebalance);
+        assert_eq!(cfg.apps[0].stages[2].mode, SchedMode::Collaboration);
+        assert_eq!(
+            cfg.apps[0].stages[2].exec,
+            ExecModel::Artifact("diffusion_step".into())
+        );
+    }
+}

@@ -1,0 +1,560 @@
+//! Typed configuration structures + JSON (de)serialization + validation.
+
+use crate::util::Json;
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Configuration error.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ConfigError(pub String);
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config error: {}", self.0)
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+fn err(msg: impl Into<String>) -> ConfigError {
+    ConfigError(msg.into())
+}
+
+/// Which latency model the simulated fabric applies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FabricKind {
+    /// No modelled latency (functional runs, unit tests).
+    Ideal,
+    /// 100 Gb/s InfiniBand model (the paper's deployment).
+    Infiniband100g,
+    /// Kernel-TCP model (baseline comparisons).
+    TcpDatacenter,
+}
+
+impl FabricKind {
+    fn as_str(&self) -> &'static str {
+        match self {
+            FabricKind::Ideal => "ideal",
+            FabricKind::Infiniband100g => "infiniband_100g",
+            FabricKind::TcpDatacenter => "tcp_datacenter",
+        }
+    }
+
+    fn parse(s: &str) -> Result<Self, ConfigError> {
+        match s {
+            "ideal" => Ok(FabricKind::Ideal),
+            "infiniband_100g" => Ok(FabricKind::Infiniband100g),
+            "tcp_datacenter" => Ok(FabricKind::TcpDatacenter),
+            other => Err(err(format!("unknown fabric kind {other:?}"))),
+        }
+    }
+}
+
+/// Request scheduling mode within an instance (§4.3, Figure 4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedMode {
+    /// Individual Mode: workers pull from a shared queue, one GPU each.
+    Individual,
+    /// Collaboration Mode: the request is broadcast to all workers
+    /// (TP/PP across the instance's GPUs).
+    Collaboration,
+}
+
+impl SchedMode {
+    fn as_str(&self) -> &'static str {
+        match self {
+            SchedMode::Individual => "individual",
+            SchedMode::Collaboration => "collaboration",
+        }
+    }
+
+    fn parse(s: &str) -> Result<Self, ConfigError> {
+        match s {
+            "individual" | "im" => Ok(SchedMode::Individual),
+            "collaboration" | "cm" => Ok(SchedMode::Collaboration),
+            other => Err(err(format!("unknown sched mode {other:?}"))),
+        }
+    }
+}
+
+/// How a stage's compute executes.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ExecModel {
+    /// Run a PJRT executable loaded from `artifacts/<name>.hlo.txt`.
+    Artifact(String),
+    /// Calibrated busy-sleep of the given duration (resource-scale sims
+    /// where thousands of logical GPUs are modelled).
+    Simulated { ms: f64 },
+}
+
+impl ExecModel {
+    fn to_json(&self) -> Json {
+        match self {
+            ExecModel::Artifact(name) => Json::Str(format!("artifact:{name}")),
+            ExecModel::Simulated { ms } => Json::Str(format!("sim:{ms}ms")),
+        }
+    }
+
+    fn parse(s: &str) -> Result<Self, ConfigError> {
+        if let Some(name) = s.strip_prefix("artifact:") {
+            return Ok(ExecModel::Artifact(name.to_string()));
+        }
+        if let Some(rest) = s.strip_prefix("sim:") {
+            let num = rest.strip_suffix("ms").unwrap_or(rest);
+            return num
+                .parse::<f64>()
+                .map(|ms| ExecModel::Simulated { ms })
+                .map_err(|_| err(format!("bad sim duration {rest:?}")));
+        }
+        Err(err(format!("unknown exec model {s:?}")))
+    }
+}
+
+/// One workflow stage (§3.3, §4).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageConfig {
+    pub name: String,
+    pub exec: ExecModel,
+    /// Nominal per-request execution time (ms) — drives Theorem-1 sizing
+    /// and the proxy's admission rate; measured values refine it at run
+    /// time.
+    pub exec_ms: f64,
+    pub gpus_per_instance: usize,
+    pub workers: usize,
+    pub mode: SchedMode,
+}
+
+/// One application workflow (§4.5: the app id routes messages).
+#[derive(Debug, Clone, PartialEq)]
+pub struct AppConfig {
+    pub id: u32,
+    pub name: String,
+    pub stages: Vec<StageConfig>,
+}
+
+/// Ring-buffer geometry (transport endpoints).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RingSettings {
+    pub nslots: usize,
+    pub cap_bytes: usize,
+    pub lock_timeout_us: u64,
+}
+
+/// NodeManager tuning (§8).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NmSettings {
+    /// Scale-up threshold on windowed stage utilization (paper: 85%).
+    pub util_threshold: f64,
+    /// Utilization averaging window, ms (paper example: 5 minutes).
+    pub util_window_ms: u64,
+    /// Heartbeat period, ms.
+    pub heartbeat_ms: u64,
+    /// Missed-heartbeat threshold before an election, ms.
+    pub heartbeat_timeout_ms: u64,
+    /// NM replica count (primary + backups).
+    pub replicas: usize,
+    /// Run the §8.2 rebalance pass on the housekeeping timer. Off by
+    /// default so demos/tests drive rescheduling explicitly.
+    pub auto_rebalance: bool,
+}
+
+/// Database tuning (§3.4).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DbSettings {
+    pub replicas: usize,
+    pub ttl_ms: u64,
+}
+
+/// Proxy / request-monitor tuning (§5).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ProxySettings {
+    /// Arrival-rate estimation window, ms.
+    pub monitor_window_ms: u64,
+    /// Admission headroom: admit while rate < capacity * headroom.
+    pub headroom: f64,
+}
+
+/// Top-level deployment config for one or more Workflow Sets.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterConfig {
+    /// Number of regionally-autonomous workflow sets (§3.1).
+    pub sets: usize,
+    pub fabric: FabricKind,
+    pub ring: RingSettings,
+    pub nm: NmSettings,
+    pub db: DbSettings,
+    pub proxy: ProxySettings,
+    pub apps: Vec<AppConfig>,
+    /// Idle-instance pool size per set (§8.2).
+    pub idle_pool: usize,
+}
+
+impl ClusterConfig {
+    /// The Wan2.1-style image-to-video deployment the examples use. Stage
+    /// times reflect the measured relative costs of the four PJRT stage
+    /// executables (diffusion runs `steps` times per request, dominating).
+    pub fn i2v_default() -> Self {
+        Self {
+            sets: 1,
+            fabric: FabricKind::Infiniband100g,
+            ring: RingSettings { nslots: 256, cap_bytes: 8 << 20, lock_timeout_us: 50 },
+            nm: NmSettings {
+                util_threshold: 0.85,
+                util_window_ms: 2_000,
+                heartbeat_ms: 100,
+                heartbeat_timeout_ms: 400,
+                replicas: 3,
+                auto_rebalance: false,
+            },
+            db: DbSettings { replicas: 2, ttl_ms: 60_000 },
+            proxy: ProxySettings { monitor_window_ms: 2_000, headroom: 1.0 },
+            apps: vec![AppConfig {
+                id: 1,
+                name: "i2v".into(),
+                stages: vec![
+                    StageConfig {
+                        name: "text_encoder".into(),
+                        exec: ExecModel::Artifact("text_encoder".into()),
+                        exec_ms: 4.0,
+                        gpus_per_instance: 1,
+                        workers: 1,
+                        mode: SchedMode::Individual,
+                    },
+                    StageConfig {
+                        name: "vae_encode".into(),
+                        exec: ExecModel::Artifact("vae_encode".into()),
+                        exec_ms: 2.0,
+                        gpus_per_instance: 1,
+                        workers: 1,
+                        mode: SchedMode::Individual,
+                    },
+                    StageConfig {
+                        name: "diffusion".into(),
+                        exec: ExecModel::Artifact("diffusion_step".into()),
+                        exec_ms: 40.0, // per request: steps × per-step cost
+                        gpus_per_instance: 1,
+                        workers: 1,
+                        mode: SchedMode::Collaboration,
+                    },
+                    StageConfig {
+                        name: "vae_decode".into(),
+                        exec: ExecModel::Artifact("vae_decode".into()),
+                        exec_ms: 2.0,
+                        gpus_per_instance: 1,
+                        workers: 1,
+                        mode: SchedMode::Individual,
+                    },
+                ],
+            }],
+            idle_pool: 2,
+        }
+    }
+
+    /// Validate invariants the rest of the system assumes.
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if self.sets == 0 {
+            return Err(err("sets must be >= 1"));
+        }
+        if self.apps.is_empty() {
+            return Err(err("at least one app required"));
+        }
+        if self.ring.cap_bytes % 8 != 0 || self.ring.nslots < 2 {
+            return Err(err("ring: cap_bytes must be 8-aligned, nslots >= 2"));
+        }
+        if !(0.0..=1.0).contains(&self.nm.util_threshold) {
+            return Err(err("nm.util_threshold must be in [0,1]"));
+        }
+        if self.nm.replicas == 0 || self.db.replicas == 0 {
+            return Err(err("nm/db replicas must be >= 1"));
+        }
+        let mut ids = std::collections::HashSet::new();
+        for app in &self.apps {
+            if !ids.insert(app.id) {
+                return Err(err(format!("duplicate app id {}", app.id)));
+            }
+            if app.stages.is_empty() {
+                return Err(err(format!("app {} has no stages", app.name)));
+            }
+            for s in &app.stages {
+                if s.exec_ms <= 0.0 {
+                    return Err(err(format!("stage {} exec_ms must be > 0", s.name)));
+                }
+                if s.workers == 0 || s.gpus_per_instance == 0 {
+                    return Err(err(format!(
+                        "stage {}: workers and gpus_per_instance must be >= 1",
+                        s.name
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Serialize to JSON.
+    pub fn to_json(&self) -> Json {
+        let mut root = BTreeMap::new();
+        root.insert("sets".into(), Json::Num(self.sets as f64));
+        root.insert("fabric".into(), Json::Str(self.fabric.as_str().into()));
+        root.insert("idle_pool".into(), Json::Num(self.idle_pool as f64));
+        root.insert(
+            "ring".into(),
+            obj(vec![
+                ("nslots", Json::Num(self.ring.nslots as f64)),
+                ("cap_bytes", Json::Num(self.ring.cap_bytes as f64)),
+                ("lock_timeout_us", Json::Num(self.ring.lock_timeout_us as f64)),
+            ]),
+        );
+        root.insert(
+            "nm".into(),
+            obj(vec![
+                ("util_threshold", Json::Num(self.nm.util_threshold)),
+                ("util_window_ms", Json::Num(self.nm.util_window_ms as f64)),
+                ("heartbeat_ms", Json::Num(self.nm.heartbeat_ms as f64)),
+                (
+                    "heartbeat_timeout_ms",
+                    Json::Num(self.nm.heartbeat_timeout_ms as f64),
+                ),
+                ("replicas", Json::Num(self.nm.replicas as f64)),
+            ]),
+        );
+        root.insert(
+            "db".into(),
+            obj(vec![
+                ("replicas", Json::Num(self.db.replicas as f64)),
+                ("ttl_ms", Json::Num(self.db.ttl_ms as f64)),
+            ]),
+        );
+        root.insert(
+            "proxy".into(),
+            obj(vec![
+                (
+                    "monitor_window_ms",
+                    Json::Num(self.proxy.monitor_window_ms as f64),
+                ),
+                ("headroom", Json::Num(self.proxy.headroom)),
+            ]),
+        );
+        root.insert(
+            "apps".into(),
+            Json::Arr(
+                self.apps
+                    .iter()
+                    .map(|a| {
+                        obj(vec![
+                            ("id", Json::Num(a.id as f64)),
+                            ("name", Json::Str(a.name.clone())),
+                            (
+                                "stages",
+                                Json::Arr(
+                                    a.stages
+                                        .iter()
+                                        .map(|s| {
+                                            obj(vec![
+                                                ("name", Json::Str(s.name.clone())),
+                                                ("exec", s.exec.to_json()),
+                                                ("exec_ms", Json::Num(s.exec_ms)),
+                                                (
+                                                    "gpus_per_instance",
+                                                    Json::Num(s.gpus_per_instance as f64),
+                                                ),
+                                                ("workers", Json::Num(s.workers as f64)),
+                                                ("mode", Json::Str(s.mode.as_str().into())),
+                                            ])
+                                        })
+                                        .collect(),
+                                ),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        );
+        Json::Obj(root)
+    }
+
+    /// Parse from a JSON string and validate.
+    pub fn from_json_str(s: &str) -> Result<Self, ConfigError> {
+        let j = Json::parse(s).map_err(|e| err(format!("parse: {e}")))?;
+        let cfg = Self::from_json(&j)?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Parse from a parsed JSON document.
+    pub fn from_json(j: &Json) -> Result<Self, ConfigError> {
+        let base = Self::i2v_default(); // missing sections inherit defaults
+        let get_u = |o: &Json, k: &str, d: u64| -> u64 {
+            o.get(k).and_then(Json::as_u64).unwrap_or(d)
+        };
+        let get_f = |o: &Json, k: &str, d: f64| -> f64 {
+            o.get(k).and_then(Json::as_f64).unwrap_or(d)
+        };
+
+        let ring = match j.get("ring") {
+            Some(r) => RingSettings {
+                nslots: get_u(r, "nslots", base.ring.nslots as u64) as usize,
+                cap_bytes: get_u(r, "cap_bytes", base.ring.cap_bytes as u64) as usize,
+                lock_timeout_us: get_u(r, "lock_timeout_us", base.ring.lock_timeout_us),
+            },
+            None => base.ring,
+        };
+        let nm = match j.get("nm") {
+            Some(n) => NmSettings {
+                util_threshold: get_f(n, "util_threshold", base.nm.util_threshold),
+                util_window_ms: get_u(n, "util_window_ms", base.nm.util_window_ms),
+                heartbeat_ms: get_u(n, "heartbeat_ms", base.nm.heartbeat_ms),
+                heartbeat_timeout_ms: get_u(
+                    n,
+                    "heartbeat_timeout_ms",
+                    base.nm.heartbeat_timeout_ms,
+                ),
+                replicas: get_u(n, "replicas", base.nm.replicas as u64) as usize,
+                auto_rebalance: n
+                    .get("auto_rebalance")
+                    .and_then(Json::as_bool)
+                    .unwrap_or(base.nm.auto_rebalance),
+            },
+            None => base.nm,
+        };
+        let db = match j.get("db") {
+            Some(d) => DbSettings {
+                replicas: get_u(d, "replicas", base.db.replicas as u64) as usize,
+                ttl_ms: get_u(d, "ttl_ms", base.db.ttl_ms),
+            },
+            None => base.db,
+        };
+        let proxy = match j.get("proxy") {
+            Some(p) => ProxySettings {
+                monitor_window_ms: get_u(
+                    p,
+                    "monitor_window_ms",
+                    base.proxy.monitor_window_ms,
+                ),
+                headroom: get_f(p, "headroom", base.proxy.headroom),
+            },
+            None => base.proxy,
+        };
+
+        let apps = match j.get("apps") {
+            Some(Json::Arr(items)) => {
+                let mut apps = Vec::new();
+                for a in items {
+                    let stages_json = a
+                        .get("stages")
+                        .and_then(Json::as_arr)
+                        .ok_or_else(|| err("app missing stages"))?;
+                    let mut stages = Vec::new();
+                    for s in stages_json {
+                        stages.push(StageConfig {
+                            name: s
+                                .get("name")
+                                .and_then(Json::as_str)
+                                .ok_or_else(|| err("stage missing name"))?
+                                .to_string(),
+                            exec: ExecModel::parse(
+                                s.get("exec")
+                                    .and_then(Json::as_str)
+                                    .ok_or_else(|| err("stage missing exec"))?,
+                            )?,
+                            exec_ms: get_f(s, "exec_ms", 1.0),
+                            gpus_per_instance: get_u(s, "gpus_per_instance", 1) as usize,
+                            workers: get_u(s, "workers", 1) as usize,
+                            mode: SchedMode::parse(
+                                s.get("mode").and_then(Json::as_str).unwrap_or("individual"),
+                            )?,
+                        });
+                    }
+                    apps.push(AppConfig {
+                        id: a
+                            .get("id")
+                            .and_then(Json::as_u64)
+                            .ok_or_else(|| err("app missing id"))? as u32,
+                        name: a
+                            .get("name")
+                            .and_then(Json::as_str)
+                            .unwrap_or("app")
+                            .to_string(),
+                        stages,
+                    });
+                }
+                apps
+            }
+            _ => base.apps,
+        };
+
+        Ok(Self {
+            sets: j.get("sets").and_then(Json::as_u64).unwrap_or(base.sets as u64)
+                as usize,
+            fabric: match j.get("fabric").and_then(Json::as_str) {
+                Some(s) => FabricKind::parse(s)?,
+                None => base.fabric,
+            },
+            ring,
+            nm,
+            db,
+            proxy,
+            apps,
+            idle_pool: j
+                .get("idle_pool")
+                .and_then(Json::as_u64)
+                .unwrap_or(base.idle_pool as u64) as usize,
+        })
+    }
+
+    /// Load from a file path.
+    pub fn from_file(path: &std::path::Path) -> Result<Self, ConfigError> {
+        let s = std::fs::read_to_string(path)
+            .map_err(|e| err(format!("read {}: {e}", path.display())))?;
+        Self::from_json_str(&s)
+    }
+}
+
+fn obj(fields: Vec<(&str, Json)>) -> Json {
+    Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exec_model_parse() {
+        assert_eq!(
+            ExecModel::parse("artifact:diffusion_step").unwrap(),
+            ExecModel::Artifact("diffusion_step".into())
+        );
+        assert_eq!(
+            ExecModel::parse("sim:12.5ms").unwrap(),
+            ExecModel::Simulated { ms: 12.5 }
+        );
+        assert!(ExecModel::parse("gpu:nope").is_err());
+    }
+
+    #[test]
+    fn partial_json_inherits_defaults() {
+        let cfg = ClusterConfig::from_json_str(r#"{"sets": 3}"#).unwrap();
+        assert_eq!(cfg.sets, 3);
+        assert_eq!(cfg.apps.len(), 1); // inherited i2v app
+        assert_eq!(cfg.nm.replicas, 3);
+    }
+
+    #[test]
+    fn sched_mode_aliases() {
+        assert_eq!(SchedMode::parse("im").unwrap(), SchedMode::Individual);
+        assert_eq!(SchedMode::parse("cm").unwrap(), SchedMode::Collaboration);
+    }
+
+    #[test]
+    fn duplicate_app_ids_rejected() {
+        let mut cfg = ClusterConfig::i2v_default();
+        let mut dup = cfg.apps[0].clone();
+        dup.name = "copy".into();
+        cfg.apps.push(dup);
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn i2v_default_is_valid() {
+        ClusterConfig::i2v_default().validate().unwrap();
+    }
+}

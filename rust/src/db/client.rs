@@ -1,0 +1,111 @@
+//! Client read path (§7): "clients or proxies retrieve results by
+//! querying one database instance at a time. If the result is absent —
+//! due to ongoing replication or instance failure — the client proceeds
+//! to query another instance in the next attempt."
+
+use super::MemDb;
+use crate::util::Uid;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// Handle to one replica with a liveness switch (tests kill replicas).
+pub struct Replica {
+    pub db: Arc<MemDb>,
+    pub alive: AtomicBool,
+}
+
+/// Client that retries across the replica set.
+pub struct DbClient {
+    replicas: Vec<Replica>,
+}
+
+impl DbClient {
+    pub fn new(dbs: Vec<Arc<MemDb>>) -> Self {
+        Self {
+            replicas: dbs
+                .into_iter()
+                .map(|db| Replica { db, alive: AtomicBool::new(true) })
+                .collect(),
+        }
+    }
+
+    /// Mark a replica dead/alive (fault injection).
+    pub fn set_alive(&self, idx: usize, alive: bool) {
+        self.replicas[idx].alive.store(alive, Ordering::SeqCst);
+    }
+
+    /// Fetch: query replicas one at a time, first hit wins (and purges on
+    /// that replica; other replicas purge by TTL — the paper's transient
+    /// model tolerates the stale copies).
+    pub fn fetch(&self, uid: Uid) -> Option<Vec<u8>> {
+        for r in &self.replicas {
+            if !r.alive.load(Ordering::SeqCst) {
+                continue; // instance failure: try the next one
+            }
+            if let Some(data) = r.db.fetch(uid) {
+                return Some(data);
+            }
+        }
+        None
+    }
+
+    /// Number of replicas.
+    pub fn len(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// True when there are no replicas.
+    pub fn is_empty(&self) -> bool {
+        self.replicas.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{ManualClock, NodeId};
+
+    fn setup(n: usize) -> (Vec<Arc<MemDb>>, DbClient) {
+        let clock = Arc::new(ManualClock::new());
+        let dbs: Vec<Arc<MemDb>> = (0..n)
+            .map(|_| Arc::new(MemDb::new(clock.clone(), 1_000_000)))
+            .collect();
+        let client = DbClient::new(dbs.clone());
+        (dbs, client)
+    }
+
+    #[test]
+    fn falls_through_to_replica() {
+        let (dbs, client) = setup(3);
+        let u = Uid::fresh(NodeId(0));
+        // Result only reached the third replica (replication lag).
+        dbs[2].put(u, b"late".to_vec());
+        assert_eq!(client.fetch(u), Some(b"late".to_vec()));
+    }
+
+    #[test]
+    fn dead_primary_served_by_backup() {
+        let (dbs, client) = setup(2);
+        let u = Uid::fresh(NodeId(0));
+        dbs[0].put(u, b"r".to_vec());
+        dbs[1].put(u, b"r".to_vec());
+        client.set_alive(0, false);
+        assert_eq!(client.fetch(u), Some(b"r".to_vec()));
+    }
+
+    #[test]
+    fn all_missing_is_none() {
+        let (_dbs, client) = setup(3);
+        assert_eq!(client.fetch(Uid::fresh(NodeId(0))), None);
+    }
+
+    #[test]
+    fn all_dead_is_none() {
+        let (dbs, client) = setup(2);
+        let u = Uid::fresh(NodeId(0));
+        dbs[0].put(u, b"x".to_vec());
+        client.set_alive(0, false);
+        client.set_alive(1, false);
+        assert_eq!(client.fetch(u), None);
+    }
+}

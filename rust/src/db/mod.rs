@@ -1,0 +1,47 @@
+//! Memory-centric result database (§3.4, §7).
+//!
+//! Design points from the paper, all implemented here:
+//! - results live in RAM only (no disk path at all);
+//! - keyed by the request UID; stored alongside it;
+//! - purged on first successful client fetch **or** on TTL expiry
+//!   ("once a client successfully fetches the result or after a
+//!   predefined time-to-live expires, the data is automatically purged");
+//! - replicated asynchronously to peers in the same Workflow Set with
+//!   **no consensus** ("strong consistency consensus is not required");
+//! - clients query one instance at a time and fall through to the next
+//!   replica on miss or failure (§7).
+
+mod client;
+mod store;
+
+pub use client::DbClient;
+pub use store::{DbStats, MemDb, StoredResult};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{ManualClock, NodeId, Uid};
+    use std::sync::Arc;
+
+    #[test]
+    fn replication_group_end_to_end() {
+        let clock = ManualClock::new();
+        let dbs: Vec<Arc<MemDb>> = (0..3)
+            .map(|_| Arc::new(MemDb::new(Arc::new(clock.clone()), 1_000_000)))
+            .collect();
+        let uid = Uid::fresh(NodeId(1));
+
+        // Write to the first instance, replicate to the rest (async in
+        // prod; direct here).
+        dbs[0].put(uid, b"video bytes".to_vec());
+        for peer in &dbs[1..] {
+            for (u, r) in dbs[0].export_all() {
+                peer.put_replica(u, r);
+            }
+        }
+
+        // Client can read from any replica.
+        let client = DbClient::new(dbs.clone());
+        assert_eq!(client.fetch(uid).unwrap(), b"video bytes");
+    }
+}

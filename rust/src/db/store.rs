@@ -1,0 +1,234 @@
+//! One database instance: an in-memory UID-keyed store with TTL and
+//! fetch-purge lifecycle.
+
+use crate::util::{Clock, Uid};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// A stored generation result.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StoredResult {
+    pub data: Vec<u8>,
+    /// Store time (instance clock, ns).
+    pub stored_at_ns: u64,
+}
+
+/// Store statistics.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DbStats {
+    pub puts: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub purged_on_fetch: u64,
+    pub expired: u64,
+    /// Bytes currently resident.
+    pub resident_bytes: u64,
+}
+
+/// Memory-centric database instance.
+pub struct MemDb {
+    clock: Arc<dyn Clock>,
+    ttl_ns: u64,
+    inner: Mutex<Inner>,
+}
+
+#[derive(Default)]
+struct Inner {
+    map: HashMap<Uid, StoredResult>,
+    stats: DbStats,
+}
+
+impl MemDb {
+    /// `ttl_ns`: result lifetime after storage.
+    pub fn new(clock: Arc<dyn Clock>, ttl_ns: u64) -> Self {
+        Self {
+            clock,
+            ttl_ns,
+            inner: Mutex::new(Inner::default()),
+        }
+    }
+
+    /// Store a result (primary write path from ResultDeliver).
+    pub fn put(&self, uid: Uid, data: Vec<u8>) {
+        let mut g = self.inner.lock().unwrap();
+        g.stats.puts += 1;
+        g.stats.resident_bytes += data.len() as u64;
+        let prev = g.map.insert(
+            uid,
+            StoredResult { data, stored_at_ns: self.clock.now_ns() },
+        );
+        if let Some(p) = prev {
+            g.stats.resident_bytes -= p.data.len() as u64;
+        }
+    }
+
+    /// Store a replicated copy (keeps the origin's timestamp semantics
+    /// simple: replicas restart the TTL, which only lengthens
+    /// availability — acceptable per the paper's weak-consistency model).
+    pub fn put_replica(&self, uid: Uid, result: StoredResult) {
+        let mut g = self.inner.lock().unwrap();
+        g.stats.resident_bytes += result.data.len() as u64;
+        if let Some(p) = g.map.insert(uid, result) {
+            g.stats.resident_bytes -= p.data.len() as u64;
+        }
+    }
+
+    /// Fetch-and-purge: the paper's client read path. Returns `None` on
+    /// miss or if the entry expired.
+    pub fn fetch(&self, uid: Uid) -> Option<Vec<u8>> {
+        let now = self.clock.now_ns();
+        let mut g = self.inner.lock().unwrap();
+        match g.map.remove(&uid) {
+            Some(r) if now.saturating_sub(r.stored_at_ns) <= self.ttl_ns => {
+                g.stats.hits += 1;
+                g.stats.purged_on_fetch += 1;
+                g.stats.resident_bytes -= r.data.len() as u64;
+                Some(r.data)
+            }
+            Some(r) => {
+                // Present but expired: purge, report miss.
+                g.stats.expired += 1;
+                g.stats.misses += 1;
+                g.stats.resident_bytes -= r.data.len() as u64;
+                None
+            }
+            None => {
+                g.stats.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Peek without purging (replication reads).
+    pub fn peek(&self, uid: Uid) -> Option<StoredResult> {
+        let g = self.inner.lock().unwrap();
+        g.map.get(&uid).cloned()
+    }
+
+    /// Drop all expired entries; returns how many were purged. Run
+    /// periodically by the instance's housekeeping loop.
+    pub fn purge_expired(&self) -> usize {
+        let now = self.clock.now_ns();
+        let mut g = self.inner.lock().unwrap();
+        let ttl = self.ttl_ns;
+        let before = g.map.len();
+        let mut freed = 0u64;
+        g.map.retain(|_, r| {
+            let live = now.saturating_sub(r.stored_at_ns) <= ttl;
+            if !live {
+                freed += r.data.len() as u64;
+            }
+            live
+        });
+        let purged = before - g.map.len();
+        g.stats.expired += purged as u64;
+        g.stats.resident_bytes -= freed;
+        purged
+    }
+
+    /// Snapshot of all live entries (replication export).
+    pub fn export_all(&self) -> Vec<(Uid, StoredResult)> {
+        let g = self.inner.lock().unwrap();
+        g.map.iter().map(|(k, v)| (*k, v.clone())).collect()
+    }
+
+    /// Entry count.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Statistics snapshot.
+    pub fn stats(&self) -> DbStats {
+        self.inner.lock().unwrap().stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{ManualClock, NodeId};
+
+    fn setup(ttl: u64) -> (ManualClock, MemDb) {
+        let c = ManualClock::new();
+        let db = MemDb::new(Arc::new(c.clone()), ttl);
+        (c, db)
+    }
+
+    fn uid(i: u32) -> Uid {
+        Uid::fresh(NodeId(i))
+    }
+
+    #[test]
+    fn fetch_purges() {
+        let (_c, db) = setup(1000);
+        let u = uid(1);
+        db.put(u, vec![1, 2, 3]);
+        assert_eq!(db.fetch(u), Some(vec![1, 2, 3]));
+        // Second fetch: already purged.
+        assert_eq!(db.fetch(u), None);
+        let s = db.stats();
+        assert_eq!(s.hits, 1);
+        assert_eq!(s.misses, 1);
+        assert_eq!(s.purged_on_fetch, 1);
+        assert_eq!(s.resident_bytes, 0);
+    }
+
+    #[test]
+    fn ttl_expiry() {
+        let (c, db) = setup(1000);
+        let u = uid(2);
+        db.put(u, vec![7; 10]);
+        c.advance(1001);
+        assert_eq!(db.fetch(u), None);
+        assert_eq!(db.stats().expired, 1);
+    }
+
+    #[test]
+    fn within_ttl_survives() {
+        let (c, db) = setup(1000);
+        let u = uid(3);
+        db.put(u, vec![9]);
+        c.advance(999);
+        assert_eq!(db.fetch(u), Some(vec![9]));
+    }
+
+    #[test]
+    fn purge_expired_sweeps() {
+        let (c, db) = setup(100);
+        for i in 0..10 {
+            db.put(uid(i), vec![0; 8]);
+        }
+        c.advance(50);
+        for i in 10..15 {
+            db.put(uid(i), vec![0; 8]);
+        }
+        c.advance(60); // first 10 expired (age 110), last 5 live (age 60)
+        assert_eq!(db.purge_expired(), 10);
+        assert_eq!(db.len(), 5);
+        assert_eq!(db.stats().resident_bytes, 40);
+    }
+
+    #[test]
+    fn overwrite_accounts_bytes() {
+        let (_c, db) = setup(1000);
+        let u = uid(4);
+        db.put(u, vec![0; 100]);
+        db.put(u, vec![0; 10]);
+        assert_eq!(db.stats().resident_bytes, 10);
+    }
+
+    #[test]
+    fn peek_does_not_purge() {
+        let (_c, db) = setup(1000);
+        let u = uid(5);
+        db.put(u, vec![5]);
+        assert!(db.peek(u).is_some());
+        assert!(db.peek(u).is_some());
+        assert_eq!(db.len(), 1);
+    }
+}

@@ -1,0 +1,40 @@
+//! # OnePiece — distributed AIGC inference with (simulated) one-sided RDMA
+//!
+//! Reproduction of *"OnePiece: A Large-Scale Distributed Inference System
+//! with RDMA for Complex AI-Generated Content (AIGC) Workflows"*.
+//!
+//! The system decomposes multi-stage AIGC pipelines (text-encode →
+//! VAE-encode → diffusion → VAE-decode) into microservices grouped into
+//! regionally-autonomous **Workflow Sets**, connected by one-sided RDMA.
+//! This crate is the L3 coordinator of the three-layer stack:
+//!
+//! - **L3 (this crate)**: workflow sets, proxies with fast-reject admission
+//!   control, workflow instances (TaskManager / RequestScheduler /
+//!   TaskWorkers / ResultDeliver), the NodeManager with Paxos primary
+//!   election, the memory-centric database layer, the simulated RDMA
+//!   fabric, and the paper's deadlock-free multi-producer **double-ring
+//!   buffer** ([`ringbuf`]).
+//! - **L2/L1 (build-time python)**: JAX stage models calling Pallas
+//!   kernels, AOT-lowered once to `artifacts/*.hlo.txt`.
+//! - **Runtime bridge**: [`runtime`] loads the HLO artifacts through the
+//!   PJRT CPU client (`xla` crate) — python never runs on the request path.
+//!
+//! See `DESIGN.md` for the full system inventory and the experiment index,
+//! and `EXPERIMENTS.md` for reproduced results.
+
+pub mod bench;
+pub mod config;
+pub mod db;
+pub mod metrics;
+pub mod nm;
+pub mod paxos;
+pub mod pipeline;
+pub mod proxy;
+pub mod rdma;
+pub mod ringbuf;
+pub mod runtime;
+pub mod sim;
+pub mod transport;
+pub mod util;
+pub mod workflow;
+pub mod wset;

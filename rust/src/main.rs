@@ -1,0 +1,272 @@
+//! OnePiece leader binary: CLI for running a Workflow Set, printing
+//! pipeline plans / schedule traces, and driving the resource simulator.
+//!
+//! Argument parsing is hand-rolled (the offline build has no clap); see
+//! `onepiece help` for usage.
+
+use anyhow::{bail, Context, Result};
+use onepiece::config::ClusterConfig;
+use onepiece::pipeline::{trace_schedule, TraceStage};
+use onepiece::sim::{
+    simulate_disaggregated, simulate_monolithic, wan_stages, ArrivalProcess,
+    ResourceSimConfig,
+};
+use onepiece::transport::{AppId, Payload};
+use onepiece::util::now_ns;
+use onepiece::wset::{build_pool, WorkflowSet};
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+const HELP: &str = "\
+onepiece — distributed AIGC inference (paper reproduction)
+
+USAGE:
+  onepiece serve [--requests N] [--steps S] [--artifacts DIR] [--sim]
+      Run one Workflow Set end-to-end (PJRT stage executables unless
+      --sim) and report latency/throughput.
+  onepiece plan [--entrance N]
+      Print the Theorem-1 instance plan for the i2v pipeline.
+  onepiece trace (--fig5 | --fig6)
+      Print the paper's Figure 5/6 pipelining schedule.
+  onepiece sim-resources [--pattern poisson|mmpp|diurnal] [--peak R]
+      Run the E1 monolithic-vs-disaggregated GPU-resource comparison.
+  onepiece info [--artifacts DIR]
+      Show artifact manifest and PJRT platform.
+  onepiece help
+      This text.
+";
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut m = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            let val = if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                i += 1;
+                args[i].clone()
+            } else {
+                "true".to_string()
+            };
+            m.insert(key.to_string(), val);
+        }
+        i += 1;
+    }
+    m
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let flags = parse_flags(&args[1.min(args.len())..]);
+    match cmd {
+        "serve" => serve(&flags),
+        "plan" => plan(&flags),
+        "trace" => trace(&flags),
+        "sim-resources" => sim_resources(&flags),
+        "info" => info(&flags),
+        "help" | "--help" | "-h" => {
+            print!("{HELP}");
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}; try `onepiece help`"),
+    }
+}
+
+fn artifacts_dir(flags: &HashMap<String, String>) -> PathBuf {
+    flags
+        .get("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+fn serve(flags: &HashMap<String, String>) -> Result<()> {
+    let n_requests: usize = flags.get("requests").map_or(Ok(8), |s| s.parse())?;
+    let steps: usize = flags.get("steps").map_or(Ok(4), |s| s.parse())?;
+    let use_sim = flags.contains_key("sim");
+
+    let mut cfg = ClusterConfig::i2v_default();
+    cfg.fabric = onepiece::config::FabricKind::Ideal;
+
+    let (pool, logic): (_, Arc<dyn onepiece::workflow::AppLogic>) = if use_sim {
+        (build_pool(&cfg, None), Arc::new(onepiece::workflow::EchoLogic))
+    } else {
+        let rt = Arc::new(
+            onepiece::runtime::PjrtRuntime::load(&artifacts_dir(flags))
+                .context("loading PJRT artifacts (run `make artifacts`)")?,
+        );
+        println!("PJRT platform: {}", rt.platform());
+        let vid_tokens = rt.manifest().dim("vid_tokens").unwrap_or(256) as usize;
+        let d_latent = rt.manifest().dim("d_latent").unwrap_or(16) as usize;
+        (
+            build_pool(&cfg, Some(rt)),
+            Arc::new(onepiece::workflow::I2vLogic::new(steps, vid_tokens, d_latent)),
+        )
+    };
+
+    let counts = vec![WorkflowSet::theorem1_counts(&cfg.apps[0], 1)];
+    println!("instance plan per stage: {:?}", counts[0]);
+    let set = WorkflowSet::build(cfg, counts, logic, pool);
+    std::thread::sleep(Duration::from_millis(100));
+
+    let image: Vec<f32> = (0..32 * 32 * 3).map(|i| (i % 11) as f32 / 11.0).collect();
+    let tokens: Vec<f32> = (0..32).map(|i| ((i * 37) % 512) as f32).collect();
+    let payload = Payload::Tensors(vec![
+        ("tokens".into(), vec![32], tokens),
+        ("image".into(), vec![32, 32, 3], image),
+    ]);
+
+    let mut uids = Vec::new();
+    let t0 = std::time::Instant::now();
+    for i in 0..n_requests {
+        match set.submit(AppId(1), payload.clone()) {
+            onepiece::proxy::Admission::Accepted(uid) => uids.push((i, uid, now_ns())),
+            onepiece::proxy::Admission::Rejected => {
+                println!("request {i}: fast-rejected (at capacity)");
+            }
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let mut latencies = Vec::new();
+    for (i, uid, submitted) in &uids {
+        match set.wait_result(*uid, Duration::from_secs(120)) {
+            Some(bytes) => {
+                let lat_ms = (now_ns() - submitted) as f64 / 1e6;
+                latencies.push(lat_ms);
+                println!("request {i}: {} bytes in {:.1} ms", bytes.len(), lat_ms);
+            }
+            None => println!("request {i}: TIMED OUT"),
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    if !latencies.is_empty() {
+        latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        println!(
+            "\ncompleted {}/{} | throughput {:.2} req/s | p50 {:.1} ms | p99 {:.1} ms",
+            latencies.len(),
+            n_requests,
+            latencies.len() as f64 / wall,
+            latencies[latencies.len() / 2],
+            latencies[(latencies.len() * 99 / 100).min(latencies.len() - 1)],
+        );
+    }
+    set.shutdown();
+    Ok(())
+}
+
+fn plan(flags: &HashMap<String, String>) -> Result<()> {
+    let entrance: usize = flags.get("entrance").map_or(Ok(1), |s| s.parse())?;
+    let cfg = ClusterConfig::i2v_default();
+    let reqs: Vec<onepiece::pipeline::StageReq> = cfg.apps[0]
+        .stages
+        .iter()
+        .map(|s| onepiece::pipeline::StageReq {
+            name: s.name.clone(),
+            exec_s: s.exec_ms / 1000.0,
+            gpus_per_instance: s.gpus_per_instance,
+            workers: s.workers,
+        })
+        .collect();
+    let plan = onepiece::pipeline::plan_chain(&reqs, entrance);
+    println!("{:<16} {:>9} {:>6} {:>12}", "stage", "instances", "gpus", "rate(req/s)");
+    for s in &plan.stages {
+        println!("{:<16} {:>9} {:>6} {:>12.2}", s.name, s.instances, s.gpus, s.rate);
+    }
+    println!(
+        "\noutput every {:.3} s | request latency {:.3} s | total {} GPUs",
+        plan.output_interval_s, plan.request_latency_s, plan.total_gpus
+    );
+    Ok(())
+}
+
+fn trace(flags: &HashMap<String, String>) -> Result<()> {
+    let (stages, admit) = if flags.contains_key("fig6") {
+        (
+            vec![
+                TraceStage { name: "X".into(), exec_s: 4.0, instances: 1, workers: 2 },
+                TraceStage { name: "Y".into(), exec_s: 12.0, instances: 6, workers: 1 },
+            ],
+            2.0,
+        )
+    } else {
+        (
+            vec![
+                TraceStage { name: "X".into(), exec_s: 4.0, instances: 1, workers: 1 },
+                TraceStage { name: "Y".into(), exec_s: 12.0, instances: 3, workers: 1 },
+            ],
+            4.0,
+        )
+    };
+    let t = trace_schedule(&stages, 8, admit);
+    println!("{}", t.render_gantt(&stages, admit.min(4.0)));
+    println!("steady-state output interval: {:.1} s", t.output_interval_s);
+    Ok(())
+}
+
+fn sim_resources(flags: &HashMap<String, String>) -> Result<()> {
+    let peak: f64 = flags.get("peak").map_or(Ok(1.0), |s| s.parse())?;
+    let pattern = flags.get("pattern").map(String::as_str).unwrap_or("diurnal");
+    let process = match pattern {
+        "poisson" => ArrivalProcess::Poisson { rate_rps: peak },
+        "mmpp" => ArrivalProcess::Mmpp {
+            low_rps: peak / 10.0,
+            high_rps: peak,
+            mean_dwell_s: 60.0,
+        },
+        "diurnal" => ArrivalProcess::Diurnal {
+            base_rps: peak / 16.0,
+            peak_rps: peak,
+            period_s: 600.0,
+        },
+        other => bail!("unknown pattern {other:?}"),
+    };
+    let cfg = ResourceSimConfig {
+        stages: wan_stages(),
+        monolithic_gpus: 8,
+        rescale_period_s: 10.0,
+        demand_window_s: 30.0,
+        duration_s: 1200.0,
+    };
+    let mono = simulate_monolithic(&cfg, &process, 42);
+    let dis = simulate_disaggregated(&cfg, &process, 42);
+    println!("pattern={pattern} peak={peak} req/s duration={}s", cfg.duration_s);
+    println!(
+        "{:<14} {:>12} {:>12} {:>10} {:>10} {:>8}",
+        "fleet", "gpu-s prov", "gpu-s busy", "util", "p99 (s)", "done"
+    );
+    for (name, o) in [("monolithic", mono), ("onepiece", dis)] {
+        println!(
+            "{:<14} {:>12.0} {:>12.0} {:>9.1}% {:>10.1} {:>8}",
+            name,
+            o.gpu_s_provisioned,
+            o.gpu_s_busy,
+            o.utilization * 100.0,
+            o.p99_latency_s,
+            o.completed
+        );
+    }
+    println!(
+        "\nGPU-resource reduction: {:.1}x (paper claims 16x for Wan2.1 I2V)",
+        mono.gpu_s_provisioned / dis.gpu_s_provisioned
+    );
+    Ok(())
+}
+
+fn info(flags: &HashMap<String, String>) -> Result<()> {
+    let dir = artifacts_dir(flags);
+    let manifest = onepiece::runtime::Manifest::load(&dir.join("manifest.json"))?;
+    println!("artifacts: {}", dir.display());
+    println!("dims: {:?}", manifest.dims);
+    for (name, s) in &manifest.stages {
+        let inputs: Vec<String> = s
+            .inputs
+            .iter()
+            .map(|i| format!("{}:{:?}", i.name, i.shape))
+            .collect();
+        println!("  {name}: [{}] -> {:?} ({})", inputs.join(", "), s.output.shape, s.file);
+    }
+    let rt = onepiece::runtime::PjrtRuntime::load_stages(&dir, &["vae_encode"])?;
+    println!("PJRT platform: {}", rt.platform());
+    Ok(())
+}

@@ -1,0 +1,136 @@
+//! Lock-free log-bucketed histogram for latency recording (ns scale).
+//!
+//! 64 buckets: bucket *i* covers `[2^i, 2^(i+1))` ns — enough range for
+//! sub-ns to ~584 years. Percentile error is bounded by the 2× bucket
+//! width, which is fine for p50/p95/p99 reporting in the benches.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+const BUCKETS: usize = 64;
+
+/// Concurrent histogram; `record` is wait-free.
+pub struct Histogram {
+    buckets: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Immutable view of a histogram at a point in time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HistogramSnapshot {
+    pub count: u64,
+    pub mean: u64,
+    pub p50: u64,
+    pub p90: u64,
+    pub p95: u64,
+    pub p99: u64,
+    pub max: u64,
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self {
+            buckets: [(); BUCKETS].map(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one observation (e.g. nanoseconds of latency).
+    pub fn record(&self, value: u64) {
+        let idx = (64 - value.max(1).leading_zeros() as usize - 1).min(BUCKETS - 1);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(value, Ordering::Relaxed);
+        self.max.fetch_max(value, Ordering::Relaxed);
+    }
+
+    fn percentile(&self, counts: &[u64; BUCKETS], total: u64, p: f64) -> u64 {
+        if total == 0 {
+            return 0;
+        }
+        let target = ((total as f64) * p).ceil() as u64;
+        let mut seen = 0;
+        for (i, &c) in counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                // Midpoint of bucket [2^i, 2^(i+1)).
+                return (1u64 << i) + (1u64 << i) / 2;
+            }
+        }
+        self.max.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot percentiles (approximate to bucket resolution).
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        let counts: [u64; BUCKETS] =
+            std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed));
+        let count = self.count.load(Ordering::Relaxed);
+        let sum = self.sum.load(Ordering::Relaxed);
+        HistogramSnapshot {
+            count,
+            mean: if count == 0 { 0 } else { sum / count },
+            p50: self.percentile(&counts, count, 0.50),
+            p90: self.percentile(&counts, count, 0.90),
+            p95: self.percentile(&counts, count, 0.95),
+            p99: self.percentile(&counts, count, 0.99),
+            max: self.max.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_snapshot_is_zero() {
+        let s = Histogram::new().snapshot();
+        assert_eq!(s.count, 0);
+        assert_eq!(s.p99, 0);
+    }
+
+    #[test]
+    fn percentiles_ordered() {
+        let h = Histogram::new();
+        for i in 1..=10_000u64 {
+            h.record(i);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 10_000);
+        assert!(s.p50 <= s.p90 && s.p90 <= s.p95 && s.p95 <= s.p99);
+        assert!(s.max == 10_000);
+        // p50 of uniform 1..10000 ≈ 5000; bucket resolution gives [4096, 8192).
+        assert!(s.p50 >= 4096 && s.p50 < 8192, "p50={}", s.p50);
+    }
+
+    #[test]
+    fn zero_value_goes_to_first_bucket() {
+        let h = Histogram::new();
+        h.record(0);
+        assert_eq!(h.snapshot().count, 1);
+    }
+
+    #[test]
+    fn huge_value_clamps() {
+        let h = Histogram::new();
+        h.record(u64::MAX);
+        assert_eq!(h.snapshot().max, u64::MAX);
+    }
+
+    #[test]
+    fn mean_exact() {
+        let h = Histogram::new();
+        h.record(100);
+        h.record(300);
+        assert_eq!(h.snapshot().mean, 200);
+    }
+}

@@ -1,0 +1,145 @@
+//! Lightweight metrics: counters, gauges, log-bucketed latency histograms,
+//! and the sliding **utilization window** the NodeManager's load-aware
+//! scheduler consumes (§8.2: "average GPU utilization ... over a recent
+//! time window").
+//!
+//! Everything is lock-free (atomics) so metric updates are safe on the
+//! request hot path.
+
+mod histogram;
+mod utilization;
+
+pub use histogram::{Histogram, HistogramSnapshot};
+pub use utilization::UtilizationWindow;
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Monotonically increasing event counter.
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Point-in-time signed value.
+#[derive(Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, v: i64) {
+        self.0.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Named metric registry shared across a node's components.
+#[derive(Default, Clone)]
+pub struct Registry {
+    inner: Arc<RegistryInner>,
+}
+
+#[derive(Default)]
+struct RegistryInner {
+    counters: Mutex<HashMap<String, Arc<Counter>>>,
+    gauges: Mutex<HashMap<String, Arc<Gauge>>>,
+    histograms: Mutex<HashMap<String, Arc<Histogram>>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Get or create the named counter.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut m = self.inner.counters.lock().unwrap();
+        m.entry(name.to_string()).or_default().clone()
+    }
+
+    /// Get or create the named gauge.
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut m = self.inner.gauges.lock().unwrap();
+        m.entry(name.to_string()).or_default().clone()
+    }
+
+    /// Get or create the named histogram.
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        let mut m = self.inner.histograms.lock().unwrap();
+        m.entry(name.to_string()).or_default().clone()
+    }
+
+    /// Render all metrics as sorted `name value` lines (for logs/demos).
+    pub fn render(&self) -> String {
+        let mut lines = Vec::new();
+        for (k, v) in self.inner.counters.lock().unwrap().iter() {
+            lines.push(format!("counter {k} {}", v.get()));
+        }
+        for (k, v) in self.inner.gauges.lock().unwrap().iter() {
+            lines.push(format!("gauge {k} {}", v.get()));
+        }
+        for (k, v) in self.inner.histograms.lock().unwrap().iter() {
+            let s = v.snapshot();
+            lines.push(format!(
+                "histogram {k} count={} p50={}ns p95={}ns p99={}ns max={}ns",
+                s.count, s.p50, s.p95, s.p99, s.max
+            ));
+        }
+        lines.sort();
+        lines.join("\n")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge() {
+        let r = Registry::new();
+        r.counter("reqs").inc();
+        r.counter("reqs").add(4);
+        assert_eq!(r.counter("reqs").get(), 5);
+        r.gauge("depth").set(7);
+        r.gauge("depth").add(-2);
+        assert_eq!(r.gauge("depth").get(), 5);
+    }
+
+    #[test]
+    fn registry_shares_instances() {
+        let r = Registry::new();
+        let a = r.counter("x");
+        let b = r.counter("x");
+        a.inc();
+        assert_eq!(b.get(), 1);
+    }
+
+    #[test]
+    fn render_contains_names() {
+        let r = Registry::new();
+        r.counter("a").inc();
+        r.histogram("lat").record(100);
+        let out = r.render();
+        assert!(out.contains("counter a 1"));
+        assert!(out.contains("histogram lat"));
+    }
+}

@@ -1,0 +1,149 @@
+//! Sliding-window busy-fraction tracker — the "GPU utilization" signal
+//! workflow instances report to the NodeManager (§4.2, §8.2).
+//!
+//! Workers bracket each task with [`UtilizationWindow::busy`] /
+//! [`UtilizationWindow::idle`]; the NM polls [`UtilizationWindow::value`],
+//! which returns the busy fraction over the last `window_ns` (the paper's
+//! "recent time window (e.g. 5 minutes)" — configurable, seconds in tests).
+
+use crate::util::Clock;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Busy/idle interval record.
+#[derive(Debug, Clone, Copy)]
+struct Span {
+    start_ns: u64,
+    end_ns: u64,
+}
+
+/// Sliding-window utilization estimator. Thread-safe; one per worker (the
+/// instance aggregates across its worker pool).
+pub struct UtilizationWindow {
+    clock: Arc<dyn Clock>,
+    window_ns: u64,
+    busy_since: AtomicU64, // 0 = currently idle
+    spans: Mutex<Vec<Span>>,
+}
+
+impl UtilizationWindow {
+    /// `window_ns`: lookback horizon for the busy fraction.
+    pub fn new(clock: Arc<dyn Clock>, window_ns: u64) -> Self {
+        Self {
+            clock,
+            window_ns,
+            busy_since: AtomicU64::new(0),
+            spans: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Mark the start of a busy interval (task execution).
+    pub fn busy(&self) {
+        self.busy_since
+            .store(self.clock.now_ns().max(1), Ordering::SeqCst);
+    }
+
+    /// Mark the end of the current busy interval.
+    pub fn idle(&self) {
+        let since = self.busy_since.swap(0, Ordering::SeqCst);
+        if since == 0 {
+            return;
+        }
+        let now = self.clock.now_ns();
+        let mut spans = self.spans.lock().unwrap();
+        spans.push(Span {
+            start_ns: since,
+            end_ns: now,
+        });
+        // Garbage-collect spans that fell out of the window.
+        let cutoff = now.saturating_sub(self.window_ns);
+        spans.retain(|s| s.end_ns >= cutoff);
+    }
+
+    /// Busy fraction in [0, 1] over the trailing window.
+    pub fn value(&self) -> f64 {
+        let now = self.clock.now_ns();
+        let cutoff = now.saturating_sub(self.window_ns);
+        let mut busy = 0u64;
+        {
+            let spans = self.spans.lock().unwrap();
+            for s in spans.iter() {
+                let start = s.start_ns.max(cutoff);
+                if s.end_ns > start {
+                    busy += s.end_ns - start;
+                }
+            }
+        }
+        // Include the in-flight busy interval, if any.
+        let since = self.busy_since.load(Ordering::SeqCst);
+        if since != 0 {
+            busy += now.saturating_sub(since.max(cutoff));
+        }
+        let horizon = (now - cutoff).max(1);
+        (busy as f64 / horizon as f64).min(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::ManualClock;
+
+    fn setup(window: u64) -> (ManualClock, UtilizationWindow) {
+        let clock = ManualClock::new();
+        clock.set(1); // avoid t=0 edge
+        let w = UtilizationWindow::new(Arc::new(clock.clone()), window);
+        (clock, w)
+    }
+
+    #[test]
+    fn idle_is_zero() {
+        let (clock, w) = setup(1_000);
+        clock.advance(10_000);
+        assert_eq!(w.value(), 0.0);
+    }
+
+    #[test]
+    fn fully_busy_is_one() {
+        let (clock, w) = setup(1_000);
+        clock.advance(5_000);
+        w.busy();
+        clock.advance(2_000);
+        w.idle();
+        // Window is the last 1000ns, entirely inside the busy span.
+        assert!((w.value() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn half_busy() {
+        let (clock, w) = setup(2_000);
+        clock.advance(10_000);
+        w.busy();
+        clock.advance(1_000);
+        w.idle(); // busy for the first half of the 2000ns window
+        clock.advance(1_000);
+        let v = w.value();
+        assert!((v - 0.5).abs() < 0.01, "v={v}");
+    }
+
+    #[test]
+    fn inflight_busy_counts() {
+        let (clock, w) = setup(1_000);
+        clock.advance(1_000);
+        w.busy();
+        clock.advance(500);
+        let v = w.value(); // still busy, never called idle()
+        assert!((v - 0.5).abs() < 0.01, "v={v}");
+    }
+
+    #[test]
+    fn old_spans_expire() {
+        let (clock, w) = setup(1_000);
+        clock.advance(1_000);
+        w.busy();
+        clock.advance(1_000);
+        w.idle();
+        clock.advance(10_000); // busy span far outside window now
+        assert_eq!(w.value(), 0.0);
+    }
+}

@@ -1,0 +1,290 @@
+//! NM primary election (§8.1): primary-backup replication with
+//! heartbeats; on heartbeat loss, any replica starts a Paxos election for
+//! the next term. "The Paxos protocol guarantees that at most one leader
+//! is elected at any given time."
+
+use crate::paxos::{propose, Acceptor, Ballot, ProposeError};
+use crate::util::{Clock, NodeId};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Liveness view of one replica.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReplicaStatus {
+    pub node: NodeId,
+    pub alive: bool,
+    pub is_primary: bool,
+}
+
+struct Replica {
+    node: NodeId,
+    alive: AtomicBool,
+    /// Paxos acceptor per term.
+    acceptors: Mutex<HashMap<u64, Arc<Mutex<Acceptor>>>>,
+}
+
+impl Replica {
+    fn acceptor(&self, term: u64) -> Arc<Mutex<Acceptor>> {
+        self.acceptors
+            .lock()
+            .unwrap()
+            .entry(term)
+            .or_default()
+            .clone()
+    }
+}
+
+/// The NM replica set with heartbeat-triggered Paxos elections.
+pub struct NmCluster {
+    replicas: Vec<Replica>,
+    clock: Arc<dyn Clock>,
+    heartbeat_timeout_ns: u64,
+    state: Mutex<ClusterState>,
+}
+
+struct ClusterState {
+    term: u64,
+    primary: Option<NodeId>,
+    last_heartbeat_ns: u64,
+}
+
+/// Fallible acceptor handle: dead replicas drop messages.
+struct LiveHandle<'a> {
+    replica: &'a Replica,
+    term: u64,
+}
+
+impl crate::paxos::AcceptorHandle for LiveHandle<'_> {
+    fn prepare(&self, b: Ballot) -> Option<crate::paxos::PrepareReply> {
+        self.replica
+            .alive
+            .load(Ordering::SeqCst)
+            .then(|| self.replica.acceptor(self.term).lock().unwrap().prepare(b))
+    }
+
+    fn accept(&self, b: Ballot, v: u64) -> Option<Result<(), Ballot>> {
+        self.replica
+            .alive
+            .load(Ordering::SeqCst)
+            .then(|| self.replica.acceptor(self.term).lock().unwrap().accept(b, v))
+    }
+}
+
+impl NmCluster {
+    pub fn new(nodes: Vec<NodeId>, clock: Arc<dyn Clock>, heartbeat_timeout_ns: u64) -> Self {
+        Self {
+            replicas: nodes
+                .into_iter()
+                .map(|node| Replica {
+                    node,
+                    alive: AtomicBool::new(true),
+                    acceptors: Mutex::new(HashMap::new()),
+                })
+                .collect(),
+            clock,
+            heartbeat_timeout_ns,
+            state: Mutex::new(ClusterState {
+                term: 0,
+                primary: None,
+                last_heartbeat_ns: 0,
+            }),
+        }
+    }
+
+    /// Kill / revive a replica (fault injection).
+    pub fn set_alive(&self, node: NodeId, alive: bool) {
+        if let Some(r) = self.replicas.iter().find(|r| r.node == node) {
+            r.alive.store(alive, Ordering::SeqCst);
+        }
+    }
+
+    /// Current primary, if any.
+    pub fn primary(&self) -> Option<NodeId> {
+        self.state.lock().unwrap().primary
+    }
+
+    /// Current term.
+    pub fn term(&self) -> u64 {
+        self.state.lock().unwrap().term
+    }
+
+    /// The primary broadcasts a heartbeat ("periodically broadcasts
+    /// heartbeats to maintain its presence and authority").
+    pub fn heartbeat(&self, from: NodeId) -> bool {
+        let mut s = self.state.lock().unwrap();
+        if s.primary != Some(from) {
+            return false; // stale leader: ignored
+        }
+        // Dead primaries can't heartbeat.
+        if !self
+            .replicas
+            .iter()
+            .any(|r| r.node == from && r.alive.load(Ordering::SeqCst))
+        {
+            return false;
+        }
+        s.last_heartbeat_ns = self.clock.now_ns();
+        true
+    }
+
+    /// Does any replica consider the primary lost?
+    pub fn primary_lost(&self) -> bool {
+        let s = self.state.lock().unwrap();
+        s.primary.is_none()
+            || self.clock.now_ns().saturating_sub(s.last_heartbeat_ns)
+                > self.heartbeat_timeout_ns
+            || !self
+                .replicas
+                .iter()
+                .any(|r| Some(r.node) == s.primary && r.alive.load(Ordering::SeqCst))
+    }
+
+    /// Candidate `node` runs a Paxos election for the next term. Returns
+    /// the elected primary (which may be another candidate that won the
+    /// same term — safety: never two winners in one term).
+    pub fn elect(&self, candidate: NodeId) -> Option<NodeId> {
+        let term = {
+            let s = self.state.lock().unwrap();
+            s.term + 1
+        };
+        self.elect_term(candidate, term)
+    }
+
+    /// Election for a specific term (concurrent candidates in tests call
+    /// this with the same term).
+    pub fn elect_term(&self, candidate: NodeId, term: u64) -> Option<NodeId> {
+        if !self
+            .replicas
+            .iter()
+            .any(|r| r.node == candidate && r.alive.load(Ordering::SeqCst))
+        {
+            return None; // dead candidates can't campaign
+        }
+        let handles: Vec<LiveHandle> = self
+            .replicas
+            .iter()
+            .map(|replica| LiveHandle { replica, term })
+            .collect();
+        let mut ballot = Ballot::new(1, candidate);
+        for _ in 0..16 {
+            match propose(&handles, ballot, candidate.0 as u64) {
+                Ok(winner) => {
+                    let winner = NodeId(winner as u32);
+                    let mut s = self.state.lock().unwrap();
+                    if term > s.term {
+                        s.term = term;
+                        s.primary = Some(winner);
+                        s.last_heartbeat_ns = self.clock.now_ns();
+                    }
+                    return Some(winner);
+                }
+                Err(ProposeError::Preempted { suggested }) => {
+                    ballot = suggested.next_for(candidate);
+                }
+                Err(_) => return None, // no quorum reachable
+            }
+        }
+        None
+    }
+
+    /// Status of every replica.
+    pub fn status(&self) -> Vec<ReplicaStatus> {
+        let primary = self.primary();
+        self.replicas
+            .iter()
+            .map(|r| ReplicaStatus {
+                node: r.node,
+                alive: r.alive.load(Ordering::SeqCst),
+                is_primary: Some(r.node) == primary,
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::ManualClock;
+
+    fn cluster(n: u32) -> (ManualClock, NmCluster) {
+        let clock = ManualClock::new();
+        let c = NmCluster::new(
+            (0..n).map(NodeId).collect(),
+            Arc::new(clock.clone()),
+            1_000,
+        );
+        (clock, c)
+    }
+
+    #[test]
+    fn elects_a_primary() {
+        let (_clk, c) = cluster(3);
+        assert!(c.primary_lost());
+        let p = c.elect(NodeId(1)).unwrap();
+        assert_eq!(p, NodeId(1));
+        assert_eq!(c.primary(), Some(NodeId(1)));
+        assert!(!c.primary_lost());
+    }
+
+    #[test]
+    fn at_most_one_winner_per_term() {
+        let (_clk, c) = cluster(5);
+        let term = 1;
+        let w1 = c.elect_term(NodeId(1), term).unwrap();
+        let w2 = c.elect_term(NodeId(2), term).unwrap();
+        // Second candidate must discover the first winner, not override.
+        assert_eq!(w1, w2, "Paxos safety: one decided value per term");
+    }
+
+    #[test]
+    fn heartbeat_timeout_triggers_loss() {
+        let (clk, c) = cluster(3);
+        c.elect(NodeId(0)).unwrap();
+        assert!(c.heartbeat(NodeId(0)));
+        assert!(!c.primary_lost());
+        clk.advance(2_000);
+        assert!(c.primary_lost());
+        assert!(c.heartbeat(NodeId(0)));
+        assert!(!c.primary_lost());
+    }
+
+    #[test]
+    fn failover_after_primary_death() {
+        let (clk, c) = cluster(3);
+        c.elect(NodeId(0)).unwrap();
+        c.set_alive(NodeId(0), false);
+        assert!(c.primary_lost());
+        clk.advance(2_000);
+        let p = c.elect(NodeId(2)).unwrap();
+        assert_eq!(p, NodeId(2));
+        assert_eq!(c.term(), 2);
+        // The dead ex-primary's heartbeats are rejected.
+        assert!(!c.heartbeat(NodeId(0)));
+    }
+
+    #[test]
+    fn no_quorum_no_election() {
+        let (_clk, c) = cluster(3);
+        c.set_alive(NodeId(1), false);
+        c.set_alive(NodeId(2), false);
+        assert_eq!(c.elect(NodeId(0)), None);
+    }
+
+    #[test]
+    fn dead_candidate_cannot_campaign() {
+        let (_clk, c) = cluster(3);
+        c.set_alive(NodeId(1), false);
+        assert_eq!(c.elect(NodeId(1)), None);
+    }
+
+    #[test]
+    fn stale_leader_heartbeat_rejected() {
+        let (clk, c) = cluster(3);
+        c.elect(NodeId(0)).unwrap();
+        clk.advance(2_000);
+        c.elect(NodeId(1)).unwrap();
+        assert!(!c.heartbeat(NodeId(0)), "old primary must be rejected");
+        assert!(c.heartbeat(NodeId(1)));
+    }
+}

@@ -1,0 +1,505 @@
+//! The NodeManager registry + load-aware scheduler (§8.2).
+//!
+//! Assignment flow (paper steps): instances report GPU utilization →
+//! NM averages per stage over a recent window → identifies the busiest
+//! stage → if above threshold, assigns an additional instance (idle pool
+//! first, then the most-underutilized donor stage) → delivers the new
+//! role + routing (next hops) → the instance initializes models and
+//! updates its RD.
+
+use crate::config::{AppConfig, SchedMode};
+use crate::rdma::RegionId;
+use crate::transport::AppId;
+use crate::util::NodeId;
+use crate::workflow::{Assignment, ControlPlane, NextHop, StageRole};
+use std::collections::{BTreeMap, HashMap};
+use std::sync::Mutex;
+
+/// (app, stage index) — the unit of scaling.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct StageKey {
+    pub app: AppId,
+    pub stage: u32,
+}
+
+/// What the NM knows about one instance.
+#[derive(Debug, Clone)]
+pub struct InstanceInfo {
+    pub node: NodeId,
+    /// Inbox ring region (None for non-workflow roles).
+    pub region: Option<RegionId>,
+    /// Current stage role (None = idle pool).
+    pub role: Option<StageKey>,
+    /// Last reported utilization in [0, 1].
+    pub util: f64,
+}
+
+/// A rebalancing decision (for logging / the Fig-10 demo).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RebalanceAction {
+    pub node: NodeId,
+    pub from: Option<StageKey>,
+    pub to: StageKey,
+    /// Utilization of the destination stage that triggered the move.
+    pub trigger_util: f64,
+}
+
+struct State {
+    apps: BTreeMap<AppId, AppConfig>,
+    instances: BTreeMap<NodeId, InstanceInfo>,
+    /// Assignment version per node (bumped on any change affecting it).
+    versions: HashMap<NodeId, u64>,
+    /// Stage-sharing aliases: (app_b, stage_idx_b) served by the
+    /// instances of (app_a, stage_idx_a) (§8.3).
+    aliases: HashMap<StageKey, StageKey>,
+    next_version: u64,
+}
+
+/// The central NodeManager (primary replica). Cheap handle: wrap in Arc.
+pub struct NodeManager {
+    state: Mutex<State>,
+    /// Scale-up utilization threshold (paper default 0.85).
+    pub util_threshold: f64,
+    /// Donor stages must be below this to give up an instance.
+    pub donor_max_util: f64,
+}
+
+impl NodeManager {
+    pub fn new(apps: Vec<AppConfig>, util_threshold: f64) -> Self {
+        Self {
+            state: Mutex::new(State {
+                apps: apps.into_iter().map(|a| (AppId(a.id), a)).collect(),
+                instances: BTreeMap::new(),
+                versions: HashMap::new(),
+                aliases: HashMap::new(),
+                next_version: 1,
+            }),
+            util_threshold,
+            donor_max_util: 0.5,
+        }
+    }
+
+    /// Register a workflow instance (TaskManager init, §4.2). Starts in
+    /// the idle pool until assigned.
+    pub fn register_instance(&self, node: NodeId, region: RegionId) {
+        let mut s = self.state.lock().unwrap();
+        s.instances.insert(
+            node,
+            InstanceInfo { node, region: Some(region), role: None, util: 0.0 },
+        );
+        let v = s.next_version;
+        s.next_version += 1;
+        s.versions.insert(node, v);
+    }
+
+    /// Assign `node` to a stage (or `None` to park it in the idle pool).
+    pub fn assign(&self, node: NodeId, role: Option<StageKey>) {
+        let mut s = self.state.lock().unwrap();
+        let prev = s.instances.get(&node).and_then(|i| i.role);
+        if let Some(info) = s.instances.get_mut(&node) {
+            info.role = role;
+            info.util = 0.0;
+        }
+        // Bump this node and every node whose routing may have changed
+        // (stages that feed the affected stages).
+        Self::bump(&mut s, node);
+        for touched in [prev, role].into_iter().flatten() {
+            Self::bump_upstream_of(&mut s, touched);
+        }
+        drop(s);
+    }
+
+    fn bump(s: &mut State, node: NodeId) {
+        let v = s.next_version;
+        s.next_version += 1;
+        s.versions.insert(node, v);
+    }
+
+    /// Bump every instance at stages that deliver *into* `key` (their
+    /// next-hop sets changed), across aliases too.
+    fn bump_upstream_of(s: &mut State, key: StageKey) {
+        // Upstream in the same app.
+        let upstream: Vec<NodeId> = s
+            .instances
+            .values()
+            .filter(|i| {
+                i.role.map_or(false, |r| {
+                    let feeds_direct = r.app == key.app && r.stage + 1 == key.stage;
+                    // Aliased: some app's stage s maps to r; its next
+                    // stage may alias into key as well — conservatively
+                    // bump all aliased-app upstreams.
+                    let feeds_alias = s.aliases.iter().any(|(b, a)| {
+                        *a == StageKey { app: r.app, stage: r.stage }
+                            && b.app == key.app
+                            && b.stage + 1 == key.stage
+                    });
+                    feeds_direct || feeds_alias
+                })
+            })
+            .map(|i| i.node)
+            .collect();
+        for n in upstream {
+            Self::bump(s, n);
+        }
+    }
+
+    /// Declare that `served_as` (app_b stage) is served by the instances
+    /// of `served_by` (app_a stage) — cross-workflow sharing (§8.3).
+    pub fn share_stage(&self, served_as: StageKey, served_by: StageKey) {
+        let mut s = self.state.lock().unwrap();
+        s.aliases.insert(served_as, served_by);
+        // Routing changed for upstream of the alias and for the serving
+        // instances themselves (they gain a route entry).
+        let serving: Vec<NodeId> = s
+            .instances
+            .values()
+            .filter(|i| i.role == Some(served_by))
+            .map(|i| i.node)
+            .collect();
+        for n in serving {
+            Self::bump(&mut s, n);
+        }
+        Self::bump_upstream_of(&mut s, served_as);
+    }
+
+    /// Resolve aliasing: which physical stage serves `key`.
+    fn physical(s: &State, key: StageKey) -> StageKey {
+        s.aliases.get(&key).copied().unwrap_or(key)
+    }
+
+    /// Inbox regions of the instances serving (app, stage).
+    pub fn stage_regions(&self, app: AppId, stage: u32) -> Vec<RegionId> {
+        let s = self.state.lock().unwrap();
+        let phys = Self::physical(&s, StageKey { app, stage });
+        s.instances
+            .values()
+            .filter(|i| i.role == Some(phys))
+            .filter_map(|i| i.region)
+            .collect()
+    }
+
+    /// Average utilization of a stage's instances.
+    pub fn stage_utilization(&self, key: StageKey) -> f64 {
+        let s = self.state.lock().unwrap();
+        let phys = Self::physical(&s, key);
+        let utils: Vec<f64> = s
+            .instances
+            .values()
+            .filter(|i| i.role == Some(phys))
+            .map(|i| i.util)
+            .collect();
+        if utils.is_empty() {
+            0.0
+        } else {
+            utils.iter().sum::<f64>() / utils.len() as f64
+        }
+    }
+
+    /// Instances currently idle (the paper's Idle Instance Pool).
+    pub fn idle_pool(&self) -> Vec<NodeId> {
+        let s = self.state.lock().unwrap();
+        s.instances
+            .values()
+            .filter(|i| i.role.is_none())
+            .map(|i| i.node)
+            .collect()
+    }
+
+    /// Instances assigned to a stage.
+    pub fn stage_instances(&self, key: StageKey) -> Vec<NodeId> {
+        let s = self.state.lock().unwrap();
+        let phys = Self::physical(&s, key);
+        s.instances
+            .values()
+            .filter(|i| i.role == Some(phys))
+            .map(|i| i.node)
+            .collect()
+    }
+
+    /// Snapshot of all instances.
+    pub fn instances(&self) -> Vec<InstanceInfo> {
+        self.state.lock().unwrap().instances.values().cloned().collect()
+    }
+
+    /// The §8.2 rebalancing pass. Returns the action taken, if any.
+    pub fn rebalance(&self) -> Option<RebalanceAction> {
+        let (busiest, trigger_util, donor) = {
+            let s = self.state.lock().unwrap();
+            // Average utilization per (physical) stage.
+            let mut sums: BTreeMap<StageKey, (f64, usize)> = BTreeMap::new();
+            for i in s.instances.values() {
+                if let Some(r) = i.role {
+                    let e = sums.entry(r).or_insert((0.0, 0));
+                    e.0 += i.util;
+                    e.1 += 1;
+                }
+            }
+            let mut best: Option<(StageKey, f64)> = None;
+            for (k, (sum, n)) in &sums {
+                let avg = sum / *n as f64;
+                if best.map_or(true, |(_, b)| avg > b) {
+                    best = Some((*k, avg));
+                }
+            }
+            let (busiest, util) = best?;
+            if util < self.util_threshold {
+                return None;
+            }
+            // Donor: idle pool first, else least-utilized stage with >1
+            // instances and low enough utilization.
+            let idle = s
+                .instances
+                .values()
+                .find(|i| i.role.is_none())
+                .map(|i| i.node);
+            let donor = idle.or_else(|| {
+                let mut candidates: Vec<(StageKey, f64, usize)> = sums
+                    .iter()
+                    .filter(|(k, (_, n))| **k != busiest && *n > 1)
+                    .map(|(k, (sum, n))| (*k, sum / *n as f64, *n))
+                    .filter(|(_, avg, _)| *avg < self.donor_max_util)
+                    .collect();
+                candidates.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+                candidates.first().and_then(|(k, _, _)| {
+                    s.instances
+                        .values()
+                        .filter(|i| i.role == Some(*k))
+                        .min_by(|a, b| a.util.partial_cmp(&b.util).unwrap())
+                        .map(|i| i.node)
+                })
+            })?;
+            let from = s.instances.get(&donor).and_then(|i| i.role);
+            (busiest, util, (donor, from))
+        };
+        let (donor_node, from) = donor;
+        self.assign(donor_node, Some(busiest));
+        Some(RebalanceAction {
+            node: donor_node,
+            from,
+            to: busiest,
+            trigger_util,
+        })
+    }
+
+    /// Build the full per-app route set for an instance serving `phys`.
+    fn routes_for(s: &State, phys: StageKey) -> Vec<(AppId, Vec<NextHop>)> {
+        // The physical stage serves its own app plus every alias mapping
+        // onto it.
+        let mut served: Vec<StageKey> = vec![phys];
+        served.extend(s.aliases.iter().filter(|(_, v)| **v == phys).map(|(k, _)| *k));
+        let mut routes = Vec::new();
+        for sk in served {
+            let app_cfg = match s.apps.get(&sk.app) {
+                Some(a) => a,
+                None => continue,
+            };
+            let next_stage = sk.stage + 1;
+            let hops = if (next_stage as usize) >= app_cfg.stages.len() {
+                vec![NextHop::Database]
+            } else {
+                let next_phys = Self::physical(s, StageKey { app: sk.app, stage: next_stage });
+                let regions: Vec<NextHop> = s
+                    .instances
+                    .values()
+                    .filter(|i| i.role == Some(next_phys))
+                    .filter_map(|i| i.region)
+                    .map(NextHop::Instance)
+                    .collect();
+                regions
+            };
+            routes.push((sk.app, hops));
+        }
+        routes
+    }
+
+    fn build_assignment(s: &State, node: NodeId) -> Assignment {
+        let version = s.versions.get(&node).copied().unwrap_or(0);
+        let info = match s.instances.get(&node) {
+            Some(i) => i,
+            None => return Assignment { version, role: None },
+        };
+        let role = info.role.map(|key| {
+            let app_cfg = &s.apps[&key.app];
+            let stage_cfg = &app_cfg.stages[key.stage as usize];
+            StageRole {
+                app: key.app,
+                stage_index: key.stage,
+                stage_name: stage_cfg.name.clone(),
+                mode: stage_cfg.mode,
+                workers: stage_cfg.workers,
+                routes: Self::routes_for(s, key),
+            }
+        });
+        Assignment { version, role }
+    }
+
+    /// Stage config lookup (proxy admission needs exec times).
+    pub fn app_config(&self, app: AppId) -> Option<AppConfig> {
+        self.state.lock().unwrap().apps.get(&app).cloned()
+    }
+
+    /// Effective scheduling mode of a stage.
+    pub fn stage_mode(&self, key: StageKey) -> Option<SchedMode> {
+        let s = self.state.lock().unwrap();
+        s.apps
+            .get(&key.app)
+            .and_then(|a| a.stages.get(key.stage as usize))
+            .map(|st| st.mode)
+    }
+}
+
+impl ControlPlane for NodeManager {
+    fn get_assignment(&self, node: NodeId) -> Assignment {
+        let s = self.state.lock().unwrap();
+        Self::build_assignment(&s, node)
+    }
+
+    fn report_utilization(&self, node: NodeId, util: f64) {
+        let mut s = self.state.lock().unwrap();
+        if let Some(i) = s.instances.get_mut(&node) {
+            i.util = util;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+
+    fn nm() -> NodeManager {
+        NodeManager::new(ClusterConfig::i2v_default().apps, 0.85)
+    }
+
+    fn key(stage: u32) -> StageKey {
+        StageKey { app: AppId(1), stage }
+    }
+
+    #[test]
+    fn register_starts_idle() {
+        let nm = nm();
+        nm.register_instance(NodeId(1), RegionId(10));
+        assert_eq!(nm.idle_pool(), vec![NodeId(1)]);
+        let a = nm.get_assignment(NodeId(1));
+        assert!(a.role.is_none());
+    }
+
+    #[test]
+    fn assignment_carries_routing() {
+        let nm = nm();
+        nm.register_instance(NodeId(1), RegionId(10));
+        nm.register_instance(NodeId(2), RegionId(20));
+        nm.assign(NodeId(1), Some(key(0)));
+        nm.assign(NodeId(2), Some(key(1)));
+        let a = nm.get_assignment(NodeId(1));
+        let role = a.role.unwrap();
+        assert_eq!(role.stage_name, "text_encoder");
+        let (app, hops) = &role.routes[0];
+        assert_eq!(*app, AppId(1));
+        assert_eq!(hops, &vec![NextHop::Instance(RegionId(20))]);
+    }
+
+    #[test]
+    fn final_stage_routes_to_db() {
+        let nm = nm();
+        nm.register_instance(NodeId(1), RegionId(10));
+        nm.assign(NodeId(1), Some(key(3))); // vae_decode (last)
+        let role = nm.get_assignment(NodeId(1)).role.unwrap();
+        assert_eq!(role.routes[0].1, vec![NextHop::Database]);
+    }
+
+    #[test]
+    fn version_bumps_on_downstream_change() {
+        let nm = nm();
+        nm.register_instance(NodeId(1), RegionId(10));
+        nm.register_instance(NodeId(2), RegionId(20));
+        nm.assign(NodeId(1), Some(key(0)));
+        let v1 = nm.get_assignment(NodeId(1)).version;
+        // Adding an instance at stage 1 changes node 1's next hops.
+        nm.assign(NodeId(2), Some(key(1)));
+        let v2 = nm.get_assignment(NodeId(1)).version;
+        assert!(v2 > v1, "upstream must observe routing change");
+    }
+
+    #[test]
+    fn rebalance_prefers_idle_pool() {
+        let nm = nm();
+        nm.register_instance(NodeId(1), RegionId(10));
+        nm.register_instance(NodeId(2), RegionId(20));
+        nm.assign(NodeId(1), Some(key(2))); // diffusion
+        nm.report_utilization(NodeId(1), 0.95);
+        let action = nm.rebalance().unwrap();
+        assert_eq!(action.node, NodeId(2));
+        assert_eq!(action.from, None); // came from idle pool
+        assert_eq!(action.to, key(2));
+        assert_eq!(nm.stage_instances(key(2)).len(), 2);
+    }
+
+    #[test]
+    fn rebalance_steals_from_underutilized_stage() {
+        let nm = nm();
+        for (n, stage) in [(1u32, 2u32), (2, 3), (3, 3)] {
+            nm.register_instance(NodeId(n), RegionId(n as u64 * 10));
+            nm.assign(NodeId(n), Some(key(stage)));
+        }
+        nm.report_utilization(NodeId(1), 0.99); // diffusion hot
+        nm.report_utilization(NodeId(2), 0.10); // decode cold
+        nm.report_utilization(NodeId(3), 0.15);
+        let action = nm.rebalance().unwrap();
+        assert_eq!(action.from, Some(key(3)));
+        assert_eq!(action.to, key(2));
+        // Decode keeps one instance; diffusion gains one.
+        assert_eq!(nm.stage_instances(key(3)).len(), 1);
+        assert_eq!(nm.stage_instances(key(2)).len(), 2);
+    }
+
+    #[test]
+    fn rebalance_noop_below_threshold() {
+        let nm = nm();
+        nm.register_instance(NodeId(1), RegionId(10));
+        nm.assign(NodeId(1), Some(key(2)));
+        nm.report_utilization(NodeId(1), 0.5);
+        assert!(nm.rebalance().is_none());
+    }
+
+    #[test]
+    fn rebalance_wont_drain_busy_donor() {
+        let nm = nm();
+        nm.register_instance(NodeId(1), RegionId(10));
+        nm.register_instance(NodeId(2), RegionId(20));
+        nm.assign(NodeId(1), Some(key(2)));
+        nm.assign(NodeId(2), Some(key(3)));
+        nm.report_utilization(NodeId(1), 0.95);
+        nm.report_utilization(NodeId(2), 0.80); // donor too busy
+        assert!(nm.rebalance().is_none());
+    }
+
+    #[test]
+    fn sharing_aliases_routing() {
+        // App 2 = LTX-style workflow sharing app 1's encoder stages.
+        let mut apps = ClusterConfig::i2v_default().apps;
+        let mut ltx = apps[0].clone();
+        ltx.id = 2;
+        ltx.name = "ltx".into();
+        apps.push(ltx);
+        let nm = NodeManager::new(apps, 0.85);
+        nm.register_instance(NodeId(1), RegionId(10)); // text_encoder (shared)
+        nm.register_instance(NodeId(2), RegionId(20)); // i2v vae_encode
+        nm.register_instance(NodeId(3), RegionId(30)); // ltx vae_encode
+        nm.assign(NodeId(1), Some(StageKey { app: AppId(1), stage: 0 }));
+        nm.assign(NodeId(2), Some(StageKey { app: AppId(1), stage: 1 }));
+        nm.assign(NodeId(3), Some(StageKey { app: AppId(2), stage: 1 }));
+        nm.share_stage(
+            StageKey { app: AppId(2), stage: 0 },
+            StageKey { app: AppId(1), stage: 0 },
+        );
+        // App 2 requests enter through app 1's instances...
+        assert_eq!(nm.stage_regions(AppId(2), 0), vec![RegionId(10)]);
+        // ...and the shared instance routes app-2 messages to app 2's own
+        // next stage.
+        let role = nm.get_assignment(NodeId(1)).role.unwrap();
+        let routes: std::collections::HashMap<_, _> = role.routes.into_iter().collect();
+        assert_eq!(routes[&AppId(1)], vec![NextHop::Instance(RegionId(20))]);
+        assert_eq!(routes[&AppId(2)], vec![NextHop::Instance(RegionId(30))]);
+    }
+}

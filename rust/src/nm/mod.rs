@@ -1,0 +1,15 @@
+//! The NodeManager (§8): centralized orchestrator holding instance roles,
+//! network locations and utilization, with
+//!
+//! - Paxos-based primary election over a replica set (§8.1) —
+//!   [`election::NmCluster`];
+//! - GPU-utilization-driven instance (re)assignment with an idle pool
+//!   (§8.2) — [`NodeManager::rebalance`];
+//! - cross-workflow instance sharing (§8.3) —
+//!   [`NodeManager::share_stage`].
+
+mod election;
+mod manager;
+
+pub use election::{NmCluster, ReplicaStatus};
+pub use manager::{InstanceInfo, NodeManager, RebalanceAction, StageKey};

@@ -1,0 +1,125 @@
+//! Paxos acceptor: the durable, quorum-forming role.
+
+use super::Ballot;
+
+/// A value accepted under some ballot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AcceptedValue {
+    pub ballot: Ballot,
+    pub value: u64,
+}
+
+/// Phase-1 reply.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrepareReply {
+    /// Promise not to accept ballots < `promised`; reports any previously
+    /// accepted value the proposer must adopt.
+    Promise {
+        promised: Ballot,
+        accepted: Option<AcceptedValue>,
+    },
+    /// Rejected: a higher ballot was already promised.
+    Nack { promised: Ballot },
+}
+
+/// Acceptor state for one Paxos instance (one election term).
+#[derive(Debug, Default, Clone)]
+pub struct Acceptor {
+    promised: Option<Ballot>,
+    accepted: Option<AcceptedValue>,
+}
+
+impl Acceptor {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Phase 1 (Prepare): promise iff `b` is the highest ballot seen.
+    pub fn prepare(&mut self, b: Ballot) -> PrepareReply {
+        match self.promised {
+            Some(p) if p > b => PrepareReply::Nack { promised: p },
+            _ => {
+                self.promised = Some(b);
+                PrepareReply::Promise {
+                    promised: b,
+                    accepted: self.accepted,
+                }
+            }
+        }
+    }
+
+    /// Phase 2 (Accept): accept iff no higher promise was made since.
+    /// Returns `Ok(())` on acceptance, `Err(promised)` otherwise.
+    pub fn accept(&mut self, b: Ballot, value: u64) -> Result<(), Ballot> {
+        match self.promised {
+            Some(p) if p > b => Err(p),
+            _ => {
+                self.promised = Some(b);
+                self.accepted = Some(AcceptedValue { ballot: b, value });
+                Ok(())
+            }
+        }
+    }
+
+    /// Most recently accepted value (learner read).
+    pub fn accepted(&self) -> Option<AcceptedValue> {
+        self.accepted
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::NodeId;
+
+    fn b(round: u64, node: u32) -> Ballot {
+        Ballot::new(round, NodeId(node))
+    }
+
+    #[test]
+    fn promises_highest_ballot() {
+        let mut a = Acceptor::new();
+        assert!(matches!(a.prepare(b(1, 0)), PrepareReply::Promise { .. }));
+        assert!(matches!(a.prepare(b(2, 0)), PrepareReply::Promise { .. }));
+        // Lower ballot after a higher promise: nack.
+        assert!(matches!(a.prepare(b(1, 0)), PrepareReply::Nack { .. }));
+    }
+
+    #[test]
+    fn equal_ballot_re_promise_allowed() {
+        let mut a = Acceptor::new();
+        a.prepare(b(3, 1));
+        assert!(matches!(a.prepare(b(3, 1)), PrepareReply::Promise { .. }));
+    }
+
+    #[test]
+    fn accept_blocked_by_higher_promise() {
+        let mut a = Acceptor::new();
+        a.prepare(b(5, 0));
+        assert_eq!(a.accept(b(4, 0), 42), Err(b(5, 0)));
+        assert_eq!(a.accept(b(5, 0), 42), Ok(()));
+        assert_eq!(a.accepted().unwrap().value, 42);
+    }
+
+    #[test]
+    fn promise_reports_accepted_value() {
+        let mut a = Acceptor::new();
+        a.prepare(b(1, 0));
+        a.accept(b(1, 0), 7).unwrap();
+        match a.prepare(b(2, 1)) {
+            PrepareReply::Promise { accepted: Some(v), .. } => {
+                assert_eq!(v.value, 7);
+                assert_eq!(v.ballot, b(1, 0));
+            }
+            other => panic!("expected promise with value, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn accept_without_prepare_is_allowed_if_unpromised() {
+        // An acceptor that never saw a prepare can still accept (classic
+        // Paxos permits this; safety comes from quorum intersection).
+        let mut a = Acceptor::new();
+        assert_eq!(a.accept(b(1, 0), 9), Ok(()));
+    }
+}

@@ -1,0 +1,58 @@
+//! Single-decree Paxos (§8.1) for NodeManager primary election.
+//!
+//! The paper: "if any instance detects the absence of heartbeats ... it
+//! initiates a new leader election using the Paxos consensus algorithm.
+//! The Paxos protocol guarantees that at most one leader is elected at
+//! any given time." We implement classic single-decree Paxos (Lamport,
+//! *Paxos Made Simple*): each election **term** is one Paxos instance
+//! whose decided value is the winning candidate's node id. Safety (at
+//! most one decided value per term, even with concurrent proposers and
+//! message loss) is exercised in `tests/paxos.rs`; the election layer on
+//! top lives in [`crate::nm`].
+
+mod acceptor;
+mod proposer;
+
+pub use acceptor::{AcceptedValue, Acceptor, PrepareReply};
+pub use proposer::{propose, AcceptorHandle, ProposeError};
+
+use crate::util::NodeId;
+
+/// Totally-ordered ballot: (round, proposer id) — proposer id breaks ties
+/// so two proposers can never issue the same ballot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Ballot {
+    pub round: u64,
+    pub node: u32,
+}
+
+impl Ballot {
+    pub fn new(round: u64, node: NodeId) -> Self {
+        Self { round, node: node.0 }
+    }
+
+    /// Smallest ballot strictly greater than `self` for `node`.
+    pub fn next_for(&self, node: NodeId) -> Ballot {
+        Ballot { round: self.round + 1, node: node.0 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ballot_ordering() {
+        let a = Ballot { round: 1, node: 2 };
+        let b = Ballot { round: 1, node: 3 };
+        let c = Ballot { round: 2, node: 0 };
+        assert!(a < b && b < c);
+    }
+
+    #[test]
+    fn next_for_is_greater() {
+        let a = Ballot { round: 5, node: 9 };
+        assert!(a.next_for(NodeId(1)) > a);
+        assert!(a.next_for(NodeId(1)).round == 6);
+    }
+}

@@ -1,0 +1,187 @@
+//! Paxos proposer: drives one ballot through phases 1 and 2 against a set
+//! of acceptors reachable through fallible [`AcceptorHandle`]s (message
+//! loss = handle returns `None`).
+
+use super::{AcceptedValue, Acceptor, Ballot, PrepareReply};
+use std::sync::{Arc, Mutex};
+
+/// Transport-agnostic access to one acceptor. `None` models a lost
+/// message or dead acceptor (the proposer just doesn't count it toward
+/// the quorum).
+pub trait AcceptorHandle {
+    fn prepare(&self, b: Ballot) -> Option<PrepareReply>;
+    fn accept(&self, b: Ballot, value: u64) -> Option<Result<(), Ballot>>;
+}
+
+/// In-process acceptor behind a mutex (the NM replica set).
+impl AcceptorHandle for Arc<Mutex<Acceptor>> {
+    fn prepare(&self, b: Ballot) -> Option<PrepareReply> {
+        Some(self.lock().unwrap().prepare(b))
+    }
+
+    fn accept(&self, b: Ballot, value: u64) -> Option<Result<(), Ballot>> {
+        Some(self.lock().unwrap().accept(b, value))
+    }
+}
+
+/// Proposal failure reasons.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ProposeError {
+    /// Fewer than a quorum of acceptors replied to Prepare.
+    NoPrepareQuorum,
+    /// Fewer than a quorum accepted.
+    NoAcceptQuorum,
+    /// A higher ballot exists; retry with `suggested` or higher.
+    Preempted { suggested: Ballot },
+}
+
+/// Run one ballot. On success returns the **chosen value** — which may be
+/// a previously-accepted value the proposer was forced to adopt (this is
+/// the heart of Paxos safety, exercised heavily in `tests/paxos.rs`).
+pub fn propose<H: AcceptorHandle>(
+    acceptors: &[H],
+    ballot: Ballot,
+    my_value: u64,
+) -> Result<u64, ProposeError> {
+    let quorum = acceptors.len() / 2 + 1;
+
+    // Phase 1: Prepare.
+    let mut promises = 0usize;
+    let mut adopted: Option<AcceptedValue> = None;
+    let mut highest_nack: Option<Ballot> = None;
+    for a in acceptors {
+        match a.prepare(ballot) {
+            Some(PrepareReply::Promise { accepted, .. }) => {
+                promises += 1;
+                if let Some(v) = accepted {
+                    if adopted.map_or(true, |cur| v.ballot > cur.ballot) {
+                        adopted = Some(v);
+                    }
+                }
+            }
+            Some(PrepareReply::Nack { promised }) => {
+                highest_nack =
+                    Some(highest_nack.map_or(promised, |h: Ballot| h.max(promised)));
+            }
+            None => {} // lost message
+        }
+    }
+    if promises < quorum {
+        return match highest_nack {
+            Some(suggested) => Err(ProposeError::Preempted { suggested }),
+            None => Err(ProposeError::NoPrepareQuorum),
+        };
+    }
+
+    // Phase 2: Accept (must adopt the highest previously-accepted value).
+    let value = adopted.map(|v| v.value).unwrap_or(my_value);
+    let mut accepts = 0usize;
+    let mut highest_reject: Option<Ballot> = None;
+    for a in acceptors {
+        match a.accept(ballot, value) {
+            Some(Ok(())) => accepts += 1,
+            Some(Err(promised)) => {
+                highest_reject =
+                    Some(highest_reject.map_or(promised, |h: Ballot| h.max(promised)));
+            }
+            None => {}
+        }
+    }
+    if accepts < quorum {
+        return match highest_reject {
+            Some(suggested) => Err(ProposeError::Preempted { suggested }),
+            None => Err(ProposeError::NoAcceptQuorum),
+        };
+    }
+    Ok(value)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::NodeId;
+
+    fn acceptors(n: usize) -> Vec<Arc<Mutex<Acceptor>>> {
+        (0..n).map(|_| Arc::new(Mutex::new(Acceptor::new()))).collect()
+    }
+
+    fn b(round: u64, node: u32) -> Ballot {
+        Ballot::new(round, NodeId(node))
+    }
+
+    #[test]
+    fn simple_decide() {
+        let acc = acceptors(3);
+        assert_eq!(propose(&acc, b(1, 0), 42), Ok(42));
+    }
+
+    #[test]
+    fn second_proposer_adopts_chosen_value() {
+        let acc = acceptors(3);
+        assert_eq!(propose(&acc, b(1, 0), 100), Ok(100));
+        // A later proposer with its own value MUST decide the same value.
+        assert_eq!(propose(&acc, b(2, 1), 200), Ok(100));
+    }
+
+    #[test]
+    fn stale_ballot_preempted() {
+        let acc = acceptors(3);
+        propose(&acc, b(5, 0), 1).unwrap();
+        match propose(&acc, b(1, 1), 2) {
+            Err(ProposeError::Preempted { suggested }) => assert!(suggested >= b(5, 0)),
+            other => panic!("expected preemption, got {other:?}"),
+        }
+    }
+
+    /// Unreliable handle: drops messages to a subset of acceptors.
+    struct Flaky {
+        inner: Arc<Mutex<Acceptor>>,
+        reachable: bool,
+    }
+
+    impl AcceptorHandle for Flaky {
+        fn prepare(&self, b: Ballot) -> Option<PrepareReply> {
+            self.reachable.then(|| self.inner.lock().unwrap().prepare(b))
+        }
+        fn accept(&self, b: Ballot, v: u64) -> Option<Result<(), Ballot>> {
+            self.reachable.then(|| self.inner.lock().unwrap().accept(b, v))
+        }
+    }
+
+    #[test]
+    fn minority_unreachable_still_decides() {
+        let acc = acceptors(5);
+        let handles: Vec<Flaky> = acc
+            .iter()
+            .enumerate()
+            .map(|(i, a)| Flaky { inner: a.clone(), reachable: i < 3 })
+            .collect();
+        assert_eq!(propose(&handles, b(1, 0), 7), Ok(7));
+    }
+
+    #[test]
+    fn majority_unreachable_fails() {
+        let acc = acceptors(5);
+        let handles: Vec<Flaky> = acc
+            .iter()
+            .enumerate()
+            .map(|(i, a)| Flaky { inner: a.clone(), reachable: i < 2 })
+            .collect();
+        assert_eq!(propose(&handles, b(1, 0), 7), Err(ProposeError::NoPrepareQuorum));
+    }
+
+    #[test]
+    fn value_adopted_from_partial_accept() {
+        // Proposer A gets value accepted by only one acceptor (then
+        // "crashes"); proposer B must still never decide differently once
+        // any quorum decided. Here we only check adoption preference.
+        let acc = acceptors(3);
+        // A: prepare quorum on ballot 1, but accept lands on acc[0] only.
+        acc[0].lock().unwrap().prepare(b(1, 0));
+        acc[1].lock().unwrap().prepare(b(1, 0));
+        acc[2].lock().unwrap().prepare(b(1, 0));
+        acc[0].lock().unwrap().accept(b(1, 0), 111).unwrap();
+        // B proposes 222 at ballot 2: sees 111 in a promise, adopts it.
+        assert_eq!(propose(&acc, b(2, 1), 222), Ok(111));
+    }
+}

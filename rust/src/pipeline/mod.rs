@@ -1,0 +1,40 @@
+//! Pipelining math (§5): Theorem 1 instance sizing, multi-stage chain
+//! planning, and the discrete schedule tracer that regenerates the
+//! paper's Figure 5 / Figure 6 gantt examples.
+//!
+//! Theorem 1: stages X (K parallel requests, time `T_X`) and Y (M
+//! parallel, time `T_Y`, `T_X < T_Y`) produce at equal rates when
+//! `M = ⌈K·T_Y/T_X⌉`; the steady-state output interval is `T_X/K`.
+
+mod plan;
+mod trace;
+
+pub use plan::{instances_needed, plan_chain, ChainPlan, StagePlan, StageReq};
+pub use trace::{trace_schedule, ScheduleEvent, ScheduleTrace, TraceStage};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn theorem1_paper_examples() {
+        // Fig 5: K=1 worker at T_X=4s, T_Y=12s -> M=3.
+        assert_eq!(instances_needed(1, 4.0, 12.0), 3);
+        // Fig 6: K=2 workers -> M=6.
+        assert_eq!(instances_needed(2, 4.0, 12.0), 6);
+    }
+
+    #[test]
+    fn theorem1_ceiling() {
+        // M = ceil(K * T_Y / T_X).
+        assert_eq!(instances_needed(1, 4.0, 10.0), 3); // 2.5 -> 3
+        assert_eq!(instances_needed(3, 5.0, 7.0), 5); // 4.2 -> 5
+    }
+
+    #[test]
+    fn faster_downstream_needs_one() {
+        // T_Y <= T_X: one instance keeps up (theorem precondition is
+        // T_X < T_Y; the planner still returns a sane answer).
+        assert_eq!(instances_needed(1, 10.0, 5.0), 1);
+    }
+}

@@ -1,0 +1,167 @@
+//! Instance-count planning over a stage chain.
+
+/// Theorem 1: instances needed at a downstream stage so its output rate
+/// matches an upstream stage running `k` requests in parallel.
+///
+/// `M = ⌈k · t_down / t_up⌉` (at least 1).
+pub fn instances_needed(k: usize, t_up_s: f64, t_down_s: f64) -> usize {
+    assert!(k > 0 && t_up_s > 0.0 && t_down_s > 0.0);
+    let m = (k as f64 * t_down_s / t_up_s).ceil() as usize;
+    m.max(1)
+}
+
+/// A stage's requirements as declared in the workflow config.
+#[derive(Debug, Clone)]
+pub struct StageReq {
+    pub name: String,
+    /// Per-request execution time, seconds.
+    pub exec_s: f64,
+    /// GPUs consumed by one instance of this stage.
+    pub gpus_per_instance: usize,
+    /// Parallel requests one instance processes (workers in IM; 1 in CM).
+    pub workers: usize,
+}
+
+/// Planned allocation for one stage.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StagePlan {
+    pub name: String,
+    pub instances: usize,
+    pub gpus: usize,
+    /// Requests/second this allocation sustains.
+    pub rate: f64,
+}
+
+/// Full pipeline plan.
+#[derive(Debug, Clone)]
+pub struct ChainPlan {
+    pub stages: Vec<StagePlan>,
+    /// Steady-state end-to-end output rate (requests/second).
+    pub output_rate: f64,
+    /// Steady-state output interval, seconds (1/rate).
+    pub output_interval_s: f64,
+    /// Pipeline fill latency for one request: sum of stage times.
+    pub request_latency_s: f64,
+    /// Total GPUs across all stages.
+    pub total_gpus: usize,
+}
+
+/// Plan a multi-stage chain: given the entrance stage's instance count,
+/// size every later stage with Theorem 1 (applied pairwise along the
+/// chain: each stage must match the *entrance* throughput, which by
+/// induction equals every intermediate throughput).
+///
+/// `entrance_instances` — instances of stage 0 (the paper's stage X).
+pub fn plan_chain(stages: &[StageReq], entrance_instances: usize) -> ChainPlan {
+    assert!(!stages.is_empty());
+    let first = &stages[0];
+    let k0 = entrance_instances * first.workers.max(1);
+    // Entrance throughput: K/T_X requests per second (Theorem 1 proof).
+    let rate = k0 as f64 / first.exec_s;
+
+    let mut plans = Vec::with_capacity(stages.len());
+    let mut total_gpus = 0usize;
+    let mut latency = 0.0;
+    for (i, s) in stages.iter().enumerate() {
+        let instances = if i == 0 {
+            entrance_instances
+        } else {
+            // Need `rate * exec_s` requests in flight; each instance
+            // holds `workers` of them.
+            let parallel = (rate * s.exec_s).ceil() as usize;
+            parallel.div_ceil(s.workers.max(1)).max(1)
+        };
+        let gpus = instances * s.gpus_per_instance;
+        total_gpus += gpus;
+        latency += s.exec_s;
+        let stage_rate = (instances * s.workers.max(1)) as f64 / s.exec_s;
+        plans.push(StagePlan {
+            name: s.name.clone(),
+            instances,
+            gpus,
+            rate: stage_rate,
+        });
+    }
+
+    // The chain's sustainable rate is the minimum stage rate (== entrance
+    // rate when Theorem 1 sizing succeeded).
+    let output_rate = plans.iter().map(|p| p.rate).fold(f64::INFINITY, f64::min);
+    ChainPlan {
+        stages: plans,
+        output_rate,
+        output_interval_s: 1.0 / output_rate,
+        request_latency_s: latency,
+        total_gpus,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn wan_like() -> Vec<StageReq> {
+        vec![
+            StageReq { name: "t5_clip".into(), exec_s: 1.0, gpus_per_instance: 1, workers: 1 },
+            StageReq { name: "vae_encode".into(), exec_s: 0.5, gpus_per_instance: 1, workers: 1 },
+            StageReq { name: "diffusion".into(), exec_s: 12.0, gpus_per_instance: 4, workers: 1 },
+            StageReq { name: "vae_decode".into(), exec_s: 1.5, gpus_per_instance: 1, workers: 1 },
+        ]
+    }
+
+    #[test]
+    fn fig5_chain() {
+        // Two stages: X (4s, 1 worker) and Y (12s) -> Y needs 3 instances,
+        // output every 4s.
+        let stages = vec![
+            StageReq { name: "x".into(), exec_s: 4.0, gpus_per_instance: 1, workers: 1 },
+            StageReq { name: "y".into(), exec_s: 12.0, gpus_per_instance: 1, workers: 1 },
+        ];
+        let plan = plan_chain(&stages, 1);
+        assert_eq!(plan.stages[1].instances, 3);
+        assert!((plan.output_interval_s - 4.0).abs() < 1e-9);
+        assert!((plan.request_latency_s - 16.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fig6_chain_two_workers() {
+        let stages = vec![
+            StageReq { name: "x".into(), exec_s: 4.0, gpus_per_instance: 1, workers: 2 },
+            StageReq { name: "y".into(), exec_s: 12.0, gpus_per_instance: 1, workers: 1 },
+        ];
+        let plan = plan_chain(&stages, 1);
+        assert_eq!(plan.stages[1].instances, 6);
+        assert!((plan.output_interval_s - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn wan_pipeline_balances() {
+        let plan = plan_chain(&wan_like(), 1);
+        // Entrance rate 1 req/s; diffusion (12 s) needs 12 instances.
+        assert_eq!(plan.stages[2].instances, 12);
+        // VAE decode (1.5 s) needs 2.
+        assert_eq!(plan.stages[3].instances, 2);
+        // Every stage sustains >= output rate.
+        for s in &plan.stages {
+            assert!(s.rate >= plan.output_rate - 1e-9, "{s:?}");
+        }
+        assert!((plan.output_rate - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gpu_accounting() {
+        let plan = plan_chain(&wan_like(), 1);
+        // 1*1 + 1*1 + 12*4 + 2*1 = 52 GPUs.
+        assert_eq!(plan.total_gpus, 52);
+    }
+
+    #[test]
+    fn multi_worker_stage_downstream() {
+        // Downstream with 4 workers per instance needs fewer instances.
+        let stages = vec![
+            StageReq { name: "x".into(), exec_s: 1.0, gpus_per_instance: 1, workers: 1 },
+            StageReq { name: "y".into(), exec_s: 8.0, gpus_per_instance: 1, workers: 4 },
+        ];
+        let plan = plan_chain(&stages, 1);
+        assert_eq!(plan.stages[1].instances, 2); // 8 parallel / 4 workers
+    }
+}

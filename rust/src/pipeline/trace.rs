@@ -1,0 +1,216 @@
+//! Discrete schedule tracer: simulates the two-stage pipeline examples of
+//! Figures 5 and 6 exactly (who runs which request when) so the E2 bench
+//! can print the same gantt the paper draws.
+
+/// Stage description for tracing.
+#[derive(Debug, Clone)]
+pub struct TraceStage {
+    pub name: String,
+    pub exec_s: f64,
+    pub instances: usize,
+    /// Parallel requests per instance (workers).
+    pub workers: usize,
+}
+
+/// One execution span: request `req` ran on `(stage, instance, worker)`
+/// during `[start_s, end_s)`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScheduleEvent {
+    pub stage: usize,
+    pub instance: usize,
+    pub worker: usize,
+    pub req: usize,
+    pub start_s: f64,
+    pub end_s: f64,
+}
+
+/// Full trace of a pipelined run.
+#[derive(Debug, Clone)]
+pub struct ScheduleTrace {
+    pub events: Vec<ScheduleEvent>,
+    /// Completion time of each request (by request index).
+    pub completions: Vec<f64>,
+    /// Steady-state interval between final-stage outputs.
+    pub output_interval_s: f64,
+}
+
+/// Simulate `n_requests` flowing through a chain of stages, with the
+/// entrance stage admitting a new request every `admit_interval_s`
+/// (the proxy's Theorem-1 rate) and each later stage starting a request
+/// as soon as (a) its predecessor finished it and (b) a worker is free.
+pub fn trace_schedule(
+    stages: &[TraceStage],
+    n_requests: usize,
+    admit_interval_s: f64,
+) -> ScheduleTrace {
+    let mut events = Vec::new();
+    // ready[r] = when request r becomes available to the current stage.
+    let mut ready: Vec<f64> = (0..n_requests)
+        .map(|r| r as f64 * admit_interval_s)
+        .collect();
+
+    for (si, stage) in stages.iter().enumerate() {
+        // worker_free[(instance, worker)] = next free time.
+        let mut worker_free =
+            vec![vec![0.0f64; stage.workers.max(1)]; stage.instances.max(1)];
+        let mut done = vec![0.0f64; n_requests];
+        for (r, &t_ready) in ready.iter().enumerate() {
+            // Earliest-free worker (round-robin tiebreak = RD round-robin
+            // delivery + IM pull queue behaviour).
+            let (mut bi, mut bw, mut bt) = (0usize, 0usize, f64::INFINITY);
+            for (i, inst) in worker_free.iter().enumerate() {
+                for (w, &t) in inst.iter().enumerate() {
+                    if t < bt {
+                        (bi, bw, bt) = (i, w, t);
+                    }
+                }
+            }
+            let start = t_ready.max(bt);
+            let end = start + stage.exec_s;
+            worker_free[bi][bw] = end;
+            done[r] = end;
+            events.push(ScheduleEvent {
+                stage: si,
+                instance: bi,
+                worker: bw,
+                req: r,
+                start_s: start,
+                end_s: end,
+            });
+        }
+        ready = done;
+    }
+
+    let completions = ready;
+    let output_interval_s = if n_requests >= 2 {
+        // Median gap over the steady-state tail.
+        let tail = &completions[n_requests / 2..];
+        if tail.len() >= 2 {
+            (tail[tail.len() - 1] - tail[0]) / (tail.len() - 1) as f64
+        } else {
+            completions[1] - completions[0]
+        }
+    } else {
+        0.0
+    };
+
+    ScheduleTrace { events, completions, output_interval_s }
+}
+
+impl ScheduleTrace {
+    /// Render an ASCII gantt like the paper's Figure 5/6 (1 column per
+    /// `tick_s` seconds).
+    pub fn render_gantt(&self, stages: &[TraceStage], tick_s: f64) -> String {
+        let horizon = self
+            .events
+            .iter()
+            .map(|e| e.end_s)
+            .fold(0.0f64, f64::max);
+        let cols = (horizon / tick_s).ceil() as usize;
+        let mut out = String::new();
+        for (si, stage) in stages.iter().enumerate() {
+            out.push_str(&format!("Stage {} ({})\n", si, stage.name));
+            for i in 0..stage.instances {
+                for w in 0..stage.workers.max(1) {
+                    let mut row = vec![b'.'; cols];
+                    for e in self
+                        .events
+                        .iter()
+                        .filter(|e| e.stage == si && e.instance == i && e.worker == w)
+                    {
+                        let c0 = (e.start_s / tick_s) as usize;
+                        let c1 = ((e.end_s / tick_s).ceil() as usize).min(cols);
+                        let ch = char::from(b'0' + (e.req % 10) as u8) as u8;
+                        for c in row.iter_mut().take(c1).skip(c0) {
+                            *c = ch;
+                        }
+                    }
+                    out.push_str(&format!(
+                        "  inst{:>2}/w{} |{}|\n",
+                        i,
+                        w,
+                        String::from_utf8(row).unwrap()
+                    ));
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fig5_stages() -> Vec<TraceStage> {
+        vec![
+            TraceStage { name: "X".into(), exec_s: 4.0, instances: 1, workers: 1 },
+            TraceStage { name: "Y".into(), exec_s: 12.0, instances: 3, workers: 1 },
+        ]
+    }
+
+    #[test]
+    fn fig5_output_every_4s() {
+        let trace = trace_schedule(&fig5_stages(), 9, 4.0);
+        // Steady state: one output every 4 s (the paper's claim).
+        assert!(
+            (trace.output_interval_s - 4.0).abs() < 1e-9,
+            "interval={}",
+            trace.output_interval_s
+        );
+        // First request: T_X + T_Y = 16 s, no queueing anywhere.
+        assert!((trace.completions[0] - 16.0).abs() < 1e-9);
+        // No request waits inside the pipeline: completion = admit + 16.
+        for (r, &c) in trace.completions.iter().enumerate() {
+            assert!((c - (r as f64 * 4.0 + 16.0)).abs() < 1e-9, "req {r}: {c}");
+        }
+    }
+
+    #[test]
+    fn fig6_output_every_2s() {
+        let stages = vec![
+            TraceStage { name: "X".into(), exec_s: 4.0, instances: 1, workers: 2 },
+            TraceStage { name: "Y".into(), exec_s: 12.0, instances: 6, workers: 1 },
+        ];
+        let trace = trace_schedule(&stages, 12, 2.0);
+        assert!(
+            (trace.output_interval_s - 2.0).abs() < 1e-9,
+            "interval={}",
+            trace.output_interval_s
+        );
+    }
+
+    #[test]
+    fn undersized_downstream_queues() {
+        // Only 2 Y instances instead of the Theorem-1 three: output
+        // interval degrades to T_Y/2 = 6 s.
+        let stages = vec![
+            TraceStage { name: "X".into(), exec_s: 4.0, instances: 1, workers: 1 },
+            TraceStage { name: "Y".into(), exec_s: 12.0, instances: 2, workers: 1 },
+        ];
+        let trace = trace_schedule(&stages, 10, 4.0);
+        assert!(
+            (trace.output_interval_s - 6.0).abs() < 0.5,
+            "interval={}",
+            trace.output_interval_s
+        );
+    }
+
+    #[test]
+    fn gantt_renders() {
+        let stages = fig5_stages();
+        let trace = trace_schedule(&stages, 6, 4.0);
+        let g = trace.render_gantt(&stages, 4.0);
+        assert!(g.contains("Stage 0 (X)"));
+        assert!(g.contains("Stage 1 (Y)"));
+        // Three Y instance rows.
+        assert_eq!(g.matches("inst").count(), 1 + 3);
+    }
+
+    #[test]
+    fn single_request_latency() {
+        let trace = trace_schedule(&fig5_stages(), 1, 4.0);
+        assert_eq!(trace.completions.len(), 1);
+        assert!((trace.completions[0] - 16.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,129 @@
+//! Request Monitor (§5): sliding-window arrival-rate estimation feeding
+//! the fast-reject decision — "whenever the incoming request rate exceeds
+//! K/T_X, the proxy rejects additional requests."
+
+use crate::util::Clock;
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
+
+/// Sliding-window admission controller.
+pub struct RequestMonitor {
+    clock: Arc<dyn Clock>,
+    window_ns: u64,
+    /// Admission headroom multiplier on capacity (1.0 = exact Theorem-1
+    /// rate).
+    headroom: f64,
+    admitted: Mutex<VecDeque<u64>>,
+}
+
+impl RequestMonitor {
+    pub fn new(clock: Arc<dyn Clock>, window_ns: u64, headroom: f64) -> Self {
+        Self {
+            clock,
+            window_ns,
+            headroom,
+            admitted: Mutex::new(VecDeque::new()),
+        }
+    }
+
+    /// Decide admission given the current sustainable capacity
+    /// (requests/second). Records the arrival if admitted.
+    pub fn admit(&self, capacity_rps: f64) -> bool {
+        if capacity_rps <= 0.0 {
+            return false;
+        }
+        let now = self.clock.now_ns();
+        let mut q = self.admitted.lock().unwrap();
+        let cutoff = now.saturating_sub(self.window_ns);
+        while q.front().is_some_and(|&t| t < cutoff) {
+            q.pop_front();
+        }
+        // Budget over the window: capacity × window seconds × headroom.
+        let budget =
+            (capacity_rps * (self.window_ns as f64 / 1e9) * self.headroom).floor() as usize;
+        if q.len() >= budget.max(1) {
+            return false;
+        }
+        q.push_back(now);
+        true
+    }
+
+    /// Current admitted-rate estimate (requests/second over the window).
+    pub fn rate_rps(&self) -> f64 {
+        let now = self.clock.now_ns();
+        let mut q = self.admitted.lock().unwrap();
+        let cutoff = now.saturating_sub(self.window_ns);
+        while q.front().is_some_and(|&t| t < cutoff) {
+            q.pop_front();
+        }
+        q.len() as f64 / (self.window_ns as f64 / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::ManualClock;
+
+    fn setup(window_ms: u64) -> (ManualClock, RequestMonitor) {
+        let c = ManualClock::new();
+        c.set(1);
+        let m = RequestMonitor::new(Arc::new(c.clone()), window_ms * 1_000_000, 1.0);
+        (c, m)
+    }
+
+    #[test]
+    fn admits_up_to_budget() {
+        let (clock, m) = setup(1000);
+        // Capacity 10 rps, 1 s window => budget 10.
+        let mut ok = 0;
+        for _ in 0..20 {
+            clock.advance(1_000_000);
+            if m.admit(10.0) {
+                ok += 1;
+            }
+        }
+        assert_eq!(ok, 10);
+    }
+
+    #[test]
+    fn window_slides() {
+        let (clock, m) = setup(100);
+        // Budget = 1 per 100 ms at 10 rps.
+        assert!(m.admit(10.0));
+        assert!(!m.admit(10.0));
+        clock.advance(150_000_000); // slide past the window
+        assert!(m.admit(10.0));
+    }
+
+    #[test]
+    fn zero_capacity_rejects_all() {
+        let (_clock, m) = setup(100);
+        assert!(!m.admit(0.0));
+    }
+
+    #[test]
+    fn rate_estimate() {
+        let (clock, m) = setup(1000);
+        for _ in 0..5 {
+            clock.advance(10_000_000);
+            m.admit(1000.0);
+        }
+        assert!((m.rate_rps() - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn headroom_scales_budget() {
+        let c = ManualClock::new();
+        c.set(1);
+        let m = RequestMonitor::new(Arc::new(c.clone()), 1_000_000_000, 2.0);
+        let mut ok = 0;
+        for _ in 0..30 {
+            c.advance(1_000_000);
+            if m.admit(10.0) {
+                ok += 1;
+            }
+        }
+        assert_eq!(ok, 20, "2x headroom doubles the budget");
+    }
+}

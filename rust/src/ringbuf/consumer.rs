@@ -1,0 +1,266 @@
+//! Consumer (receiver) side of the double-ring buffer.
+//!
+//! Wait-free (§6.1: "whenever new data is available in memory, it can be
+//! processed immediately"): `pop` does a bounded number of local reads,
+//! one busy-bit clear and two header stores — no locks, no retries, and
+//! it can never be blocked by a failed producer. The consumer is
+//! co-located with the region, so it uses the local [`MemoryRegion`]
+//! handle directly rather than a queue pair.
+//!
+//! Corruption handling: a frame whose CRC32 (or length field) does not
+//! match is reported as [`PopError::Corrupted`] and *skipped using the
+//! size-region length* — the consumer always advances along the same
+//! logical path the producers took (Theorem 2), so one delayed writer can
+//! poison at most the entry it collided on, never the consumer's cursor.
+
+use super::{layout, RingConfig};
+use crate::rdma::MemoryRegion;
+use crate::util::frame_checksum;
+
+/// A poisoned entry (skipped; cursor already advanced past it).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PopError {
+    /// CRC or length mismatch — a delayed writer overwrote this frame
+    /// after losing the slot race (paper Cases 2/5/6).
+    Corrupted {
+        vslot: u64,
+        reason: &'static str,
+    },
+}
+
+impl std::fmt::Display for PopError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PopError::Corrupted { vslot, reason } => {
+                write!(f, "corrupted entry at slot {vslot}: {reason}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for PopError {}
+
+/// The single consumer of a ring.
+pub struct RingConsumer {
+    region: MemoryRegion,
+    config: RingConfig,
+    // Local cursor cache (authoritative copies live in the header so
+    // producers can read them for space checks).
+    vhead_slot: u64,
+    vhead_off: u64,
+    scratch: Vec<u8>,
+}
+
+impl RingConsumer {
+    /// Attach to a ring region (must be the co-located owner).
+    pub fn new(region: MemoryRegion, config: RingConfig) -> Self {
+        let vhead_slot = region.load_u64(layout::VHEAD_SLOT);
+        let vhead_off = region.load_u64(layout::VHEAD_OFF);
+        Self {
+            region,
+            config,
+            vhead_slot,
+            vhead_off,
+            scratch: Vec::new(),
+        }
+    }
+
+    /// Try to consume the next message. `None` = ring empty.
+    pub fn pop(&mut self) -> Option<Result<Vec<u8>, PopError>> {
+        let slot_off = self.config.slot_off(self.vhead_slot);
+        let word = self.region.load_u64(slot_off);
+        if word & layout::BUSY == 0 {
+            return None; // nothing published at our cursor
+        }
+        let frame_len = (word & !layout::BUSY) as usize;
+        let vslot = self.vhead_slot;
+
+        // Defensive sanity on the producer-written length. A valid WL can
+        // only write frame_len in [16, cap]; anything else is protocol
+        // corruption — skip the slot without moving the byte cursor (the
+        // next producer GH/WL pair re-synchronizes via virtual offsets).
+        if frame_len < layout::FRAME_HDR
+            || frame_len % 8 != 0
+            || frame_len > self.config.cap_bytes
+        {
+            self.clear_and_advance(slot_off, self.vhead_off);
+            return Some(Err(PopError::Corrupted { vslot, reason: "bad size word" }));
+        }
+
+        let (start_v, next_v) = self.config.wrap(self.vhead_off, frame_len);
+        let phys = self.config.phys(start_v);
+        self.scratch.resize(frame_len, 0);
+        self.region.read_bytes(phys, &mut self.scratch);
+
+        let payload_len =
+            u32::from_le_bytes(self.scratch[0..4].try_into().unwrap()) as usize;
+        let stored_crc = u32::from_le_bytes(self.scratch[4..8].try_into().unwrap());
+
+        if payload_len + layout::FRAME_HDR > frame_len {
+            self.clear_and_advance(slot_off, next_v);
+            return Some(Err(PopError::Corrupted { vslot, reason: "length mismatch" }));
+        }
+        let payload = &self.scratch[layout::FRAME_HDR..layout::FRAME_HDR + payload_len];
+        if frame_checksum(payload) != stored_crc {
+            self.clear_and_advance(slot_off, next_v);
+            return Some(Err(PopError::Corrupted { vslot, reason: "crc mismatch" }));
+        }
+        let out = payload.to_vec();
+        self.clear_and_advance(slot_off, next_v);
+        Some(Ok(out))
+    }
+
+    /// Clear the busy bit (only the consumer may do this — it is what
+    /// guarantees Theorem 2) and publish the advanced head cursor.
+    fn clear_and_advance(&mut self, slot_off: usize, next_v: u64) {
+        self.region.store_u64(slot_off, 0);
+        self.vhead_slot += 1;
+        self.vhead_off = next_v;
+        self.region.store_u64(layout::VHEAD_SLOT, self.vhead_slot);
+        self.region.store_u64(layout::VHEAD_OFF, self.vhead_off);
+    }
+
+    /// Number of published-but-unconsumed entries (approximate; racy read
+    /// of the producer tail).
+    pub fn backlog(&self) -> u64 {
+        self.region
+            .load_u64(layout::VTAIL_SLOT)
+            .saturating_sub(self.vhead_slot)
+    }
+
+    /// Consumer cursor (vslot, voff) — for tests.
+    pub fn cursor(&self) -> (u64, u64) {
+        (self.vhead_slot, self.vhead_off)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{create_ring, RingProducer};
+    use super::*;
+    use crate::rdma::Fabric;
+    use crate::util::SystemClock;
+    use std::sync::Arc;
+
+    fn setup(cfg: RingConfig) -> (RingProducer, RingConsumer) {
+        let fabric = Fabric::ideal();
+        let (id, region) = create_ring(&fabric, cfg);
+        let qp = fabric.connect(id).unwrap();
+        let prod = RingProducer::new(qp, cfg, Arc::new(SystemClock), 1);
+        let cons = RingConsumer::new(region, cfg);
+        (prod, cons)
+    }
+
+    #[test]
+    fn empty_pop_is_none() {
+        let (_p, mut c) = setup(RingConfig::default());
+        assert!(c.pop().is_none());
+    }
+
+    #[test]
+    fn push_pop_roundtrip() {
+        let (p, mut c) = setup(RingConfig::default());
+        p.push(b"hello", None).unwrap();
+        p.push(b"world!!", None).unwrap();
+        assert_eq!(c.pop().unwrap().unwrap(), b"hello");
+        assert_eq!(c.pop().unwrap().unwrap(), b"world!!");
+        assert!(c.pop().is_none());
+    }
+
+    #[test]
+    fn variable_sizes_roundtrip() {
+        let (p, mut c) = setup(RingConfig {
+            nslots: 64,
+            cap_bytes: 1 << 16,
+            ..Default::default()
+        });
+        let msgs: Vec<Vec<u8>> = (0..50)
+            .map(|i| vec![i as u8; (i * 37) % 1000 + 1])
+            .collect();
+        for m in &msgs {
+            p.push(m, None).unwrap();
+        }
+        for m in &msgs {
+            assert_eq!(&c.pop().unwrap().unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn empty_payload() {
+        let (p, mut c) = setup(RingConfig::default());
+        p.push(b"", None).unwrap();
+        assert_eq!(c.pop().unwrap().unwrap(), Vec::<u8>::new());
+    }
+
+    #[test]
+    fn wraps_around_many_times() {
+        let cfg = RingConfig {
+            nslots: 8,
+            cap_bytes: 256,
+            ..Default::default()
+        };
+        let (p, mut c) = setup(cfg);
+        for round in 0..100u32 {
+            let msg = round.to_le_bytes().repeat(5 + (round as usize % 17));
+            p.push(&msg, None).unwrap();
+            assert_eq!(c.pop().unwrap().unwrap(), msg);
+        }
+        assert!(c.pop().is_none());
+    }
+
+    #[test]
+    fn slot_ring_full() {
+        let cfg = RingConfig {
+            nslots: 4,
+            cap_bytes: 1 << 16,
+            ..Default::default()
+        };
+        let (p, mut c) = setup(cfg);
+        for _ in 0..4 {
+            p.push(b"x", None).unwrap();
+        }
+        assert_eq!(p.push(b"x", None), Err(super::super::PushError::Full));
+        // Consuming frees a slot.
+        c.pop().unwrap().unwrap();
+        p.push(b"x", None).unwrap();
+    }
+
+    #[test]
+    fn byte_ring_full() {
+        let cfg = RingConfig {
+            nslots: 64,
+            cap_bytes: 128,
+            ..Default::default()
+        };
+        let (p, mut c) = setup(cfg);
+        p.push(&[1u8; 56], None).unwrap(); // frame 64
+        p.push(&[2u8; 56], None).unwrap(); // frame 64 — buffer now full
+        assert_eq!(p.push(&[3u8; 8], None), Err(super::super::PushError::Full));
+        assert_eq!(c.pop().unwrap().unwrap(), vec![1u8; 56]);
+        p.push(&[3u8; 8], None).unwrap();
+        assert_eq!(c.pop().unwrap().unwrap(), vec![2u8; 56]);
+        assert_eq!(c.pop().unwrap().unwrap(), vec![3u8; 8]);
+    }
+
+    #[test]
+    fn oversized_message_rejected() {
+        let cfg = RingConfig {
+            nslots: 4,
+            cap_bytes: 64,
+            ..Default::default()
+        };
+        let (p, _c) = setup(cfg);
+        assert_eq!(p.push(&[0u8; 128], None), Err(super::super::PushError::Full));
+    }
+
+    #[test]
+    fn backlog_tracks() {
+        let (p, mut c) = setup(RingConfig::default());
+        assert_eq!(c.backlog(), 0);
+        p.push(b"a", None).unwrap();
+        p.push(b"b", None).unwrap();
+        assert_eq!(c.backlog(), 2);
+        c.pop().unwrap().unwrap();
+        assert_eq!(c.backlog(), 1);
+    }
+}

@@ -1,0 +1,227 @@
+//! The paper's deadlock-free multi-producer / single-consumer
+//! **double-ring buffer** (§6.1) — the novel data structure contribution.
+//!
+//! Two rings share one registered memory region:
+//!
+//! - the **buffer region** holds variable-size message frames
+//!   (`[payload_len u32][crc32 u32][payload][pad to 8B]`), and
+//! - the **size region** holds one word per message: a *busy bit* (bit 63)
+//!   plus the frame length. The busy bit can only be cleared by the
+//!   consumer — this is what makes post-failure recovery possible without
+//!   any CPU on the receiving side (Theorem 2 of the paper).
+//!
+//! A fixed header carries a CAS spin-lock (with an acquire-timestamp word
+//! used for timeout stealing), the producer tail pointers and the consumer
+//! head pointers. Pointers are **virtual** (monotonic u64); physical
+//! positions are `v % capacity`, and a frame that would straddle the end
+//! of the buffer region is placed at offset 0 instead, with both sides
+//! computing the identical skip from `(virtual offset, frame length)` —
+//! this implements the paper's wrap formula `P_b ← 0` without ever
+//! splitting a frame.
+//!
+//! Producers contend on the lock (and may steal it after
+//! `lock_timeout_ns`, the paper's short-timeout deadlock resolution); the
+//! consumer is **wait-free**: `pop` performs a bounded number of reads and
+//! one store, and never blocks on producer failures. Delayed writers that
+//! lost the lock can corrupt at most the frame they collided on; the CRC32
+//! in the frame header detects this and the consumer skips the entry using
+//! the size-region metadata — exactly the Case1–Case8 liveness argument of
+//! §6.1, each of which is reproduced in `tests/ringbuf_liveness.rs` via
+//! the stepped [`ProducerSession`] API.
+//!
+//! All producer-side accesses go through one-sided RDMA verbs
+//! ([`crate::rdma::QueuePair`]); the consumer is co-located with the
+//! region (the paper assumes "the queue and the consumer are co-located").
+
+mod consumer;
+mod producer;
+mod single;
+
+pub use consumer::{PopError, RingConsumer};
+pub use producer::{DieAt, ProducerSession, PushError, PushOutcome, RingProducer};
+pub use single::{SingleRingConsumer, SingleRingProducer, SingleRingPushError};
+
+use crate::rdma::{Fabric, MemoryRegion, RegionId};
+
+/// Header word byte offsets within the region.
+pub(crate) mod layout {
+    /// CAS spin-lock: 0 = free, else producer id.
+    pub const LOCK: usize = 0;
+    /// Lock acquire timestamp (ns, producer clock) for timeout stealing.
+    pub const LOCK_TS: usize = 8;
+    /// Virtual byte offset of the next frame write (producer tail).
+    pub const VTAIL_OFF: usize = 16;
+    /// Virtual slot index of the next size entry (producer tail).
+    pub const VTAIL_SLOT: usize = 24;
+    /// Virtual slot index of the next unconsumed entry (consumer head).
+    pub const VHEAD_SLOT: usize = 32;
+    /// Virtual byte offset of the next unconsumed frame (consumer head).
+    pub const VHEAD_OFF: usize = 40;
+    /// Ring geometry, written at creation so remote senders can derive
+    /// the full [`super::RingConfig`] from the region alone.
+    pub const NSLOTS: usize = 48;
+    pub const CAP_BYTES: usize = 56;
+    /// First byte of the size region.
+    pub const SIZE_REGION: usize = 64;
+
+    /// Busy bit in a size word (only the consumer clears it).
+    pub const BUSY: u64 = 1 << 63;
+
+    /// Frame header: payload length + CRC32, before the payload bytes.
+    pub const FRAME_HDR: usize = 8;
+}
+
+/// Ring buffer geometry and failure-detection tuning.
+#[derive(Debug, Clone, Copy)]
+pub struct RingConfig {
+    /// Number of size-region slots (max in-flight messages).
+    pub nslots: usize,
+    /// Buffer region capacity in bytes (multiple of 8).
+    pub cap_bytes: usize,
+    /// Lock steal threshold — the paper's "short timeout interval".
+    pub lock_timeout_ns: u64,
+    /// Bound on lock acquisition spins before `PushError::Timeout`.
+    pub max_lock_spins: usize,
+}
+
+impl Default for RingConfig {
+    fn default() -> Self {
+        Self {
+            nslots: 256,
+            cap_bytes: 1 << 20,
+            lock_timeout_ns: 50_000, // 50 µs — "short" on an RDMA fabric
+            max_lock_spins: 1 << 20,
+        }
+    }
+}
+
+impl RingConfig {
+    /// Total region bytes needed for this geometry.
+    pub fn region_len(&self) -> usize {
+        layout::SIZE_REGION + self.nslots * 8 + self.cap_bytes
+    }
+
+    /// Byte offset of size slot `i` (physical).
+    pub(crate) fn slot_off(&self, vslot: u64) -> usize {
+        layout::SIZE_REGION + ((vslot as usize) % self.nslots) * 8
+    }
+
+    /// Byte offset of the buffer region start.
+    pub(crate) fn buf_base(&self) -> usize {
+        layout::SIZE_REGION + self.nslots * 8
+    }
+
+    /// The shared wrap rule: given a virtual offset and frame length,
+    /// return (start_virtual, next_virtual). A frame never straddles the
+    /// physical end; if it would, both sides skip to the next multiple of
+    /// `cap_bytes` (physical offset 0).
+    pub(crate) fn wrap(&self, voff: u64, frame_len: usize) -> (u64, u64) {
+        let cap = self.cap_bytes as u64;
+        let pos = voff % cap;
+        let start = if pos + frame_len as u64 > cap {
+            voff + (cap - pos) // skip the tail remainder
+        } else {
+            voff
+        };
+        (start, start + frame_len as u64)
+    }
+
+    /// Physical buffer byte offset for a virtual offset.
+    pub(crate) fn phys(&self, voff: u64) -> usize {
+        self.buf_base() + (voff % self.cap_bytes as u64) as usize
+    }
+
+    /// Frame length (header + payload, padded to 8 bytes).
+    pub(crate) fn frame_len(payload_len: usize) -> usize {
+        (layout::FRAME_HDR + payload_len + 7) & !7
+    }
+}
+
+/// Allocate and register a ring buffer region on `fabric`; returns the
+/// region id (producers connect QPs to it) and the local region handle
+/// (for the co-located consumer).
+pub fn create_ring(fabric: &Fabric, config: RingConfig) -> (RegionId, MemoryRegion) {
+    assert!(config.cap_bytes % 8 == 0, "capacity must be 8-byte aligned");
+    assert!(config.nslots >= 2, "need at least 2 slots");
+    let (id, region) = fabric.register(config.region_len());
+    // Publish the geometry so senders can reconstruct the config from the
+    // region id alone (see `ring_config_of`).
+    region.store_u64(layout::NSLOTS, config.nslots as u64);
+    region.store_u64(layout::CAP_BYTES, config.cap_bytes as u64);
+    (id, region)
+}
+
+/// Reconstruct a ring's geometry from its region (remote senders that
+/// only know the region id). Timeout tuning falls back to defaults.
+pub fn ring_config_of(fabric: &Fabric, id: RegionId) -> Option<RingConfig> {
+    let qp = fabric.connect(id).ok()?;
+    let (nslots, _) = qp.post_read_u64(layout::NSLOTS).ok()?;
+    let (cap_bytes, _) = qp.post_read_u64(layout::CAP_BYTES).ok()?;
+    if nslots < 2 || cap_bytes == 0 {
+        return None;
+    }
+    Some(RingConfig {
+        nslots: nslots as usize,
+        cap_bytes: cap_bytes as usize,
+        ..Default::default()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_len_padding() {
+        assert_eq!(RingConfig::frame_len(0), 8);
+        assert_eq!(RingConfig::frame_len(1), 16);
+        assert_eq!(RingConfig::frame_len(8), 16);
+        assert_eq!(RingConfig::frame_len(9), 24);
+    }
+
+    #[test]
+    fn wrap_rule() {
+        let cfg = RingConfig {
+            cap_bytes: 64,
+            ..Default::default()
+        };
+        // Fits: no skip.
+        assert_eq!(cfg.wrap(0, 16), (0, 16));
+        assert_eq!(cfg.wrap(48, 16), (48, 64));
+        // Would straddle: skip to next cap boundary.
+        assert_eq!(cfg.wrap(56, 16), (64, 80));
+        // Exactly at boundary behaves like offset 0.
+        assert_eq!(cfg.wrap(64, 16), (64, 80));
+    }
+
+    #[test]
+    fn wrap_deterministic_for_both_sides() {
+        let cfg = RingConfig {
+            cap_bytes: 128,
+            ..Default::default()
+        };
+        // Consumer replays producer decisions from (voff, len) alone.
+        let mut v_prod = 0u64;
+        let mut v_cons = 0u64;
+        for len in [16usize, 40, 64, 24, 120, 16, 88] {
+            let (s1, n1) = cfg.wrap(v_prod, len);
+            let (s2, n2) = cfg.wrap(v_cons, len);
+            assert_eq!((s1, n1), (s2, n2));
+            v_prod = n1;
+            v_cons = n2;
+        }
+    }
+
+    #[test]
+    fn region_len_geometry() {
+        let cfg = RingConfig {
+            nslots: 4,
+            cap_bytes: 256,
+            ..Default::default()
+        };
+        assert_eq!(cfg.region_len(), 64 + 32 + 256);
+        assert_eq!(cfg.buf_base(), 96);
+        assert_eq!(cfg.slot_off(0), 64);
+        assert_eq!(cfg.slot_off(5), 64 + 8); // wraps mod nslots
+    }
+}

@@ -1,0 +1,381 @@
+//! Producer (sender) side of the double-ring buffer.
+//!
+//! Implements the paper's §6.1 sender operations over one-sided RDMA
+//! verbs only:
+//!
+//! 1. acquire the CAS spin-lock (stealing it if held longer than the
+//!    timeout — the deadlock-resolution mechanism),
+//! 2. **GH** — read the header and the size slot at the tail,
+//! 3. recover a predecessor lost after WL (busy slot ⇒ advance header
+//!    on its behalf — proof Case 7),
+//! 4. space check (slot ring + byte ring),
+//! 5. **WB** — write the frame into the buffer region,
+//! 6. **WL** — CAS the size word (busy bit + length); a failed CAS means
+//!    a lock stealer finalized this slot first (Cases 2/3/6) — abort,
+//! 7. **UH** — advance the header tails,
+//! 8. unlock (ignoring failure if the lock was stolen meanwhile).
+//!
+//! [`ProducerSession`] exposes each protocol step separately so the
+//! liveness tests can interleave two producers in every Case 1–8 order;
+//! [`RingProducer::push`] is the production path driving a session
+//! straight through, with optional fault injection ([`DieAt`]).
+
+use super::{layout, RingConfig};
+use crate::rdma::{QueuePair, RdmaError};
+use crate::util::{frame_checksum, Clock};
+use std::sync::Arc;
+
+/// Fault injection point: the producer "dies" (abandons the protocol,
+/// leaving partial state) after completing the named step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DieAt {
+    AfterLock,
+    AfterGh,
+    AfterWb,
+    AfterWl,
+    AfterUh,
+}
+
+/// Why a push did not complete.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PushError {
+    /// Not enough slot or byte space (caller may retry after consumption).
+    Full,
+    /// Lock could not be acquired within `max_lock_spins`.
+    Timeout,
+    /// A lock stealer finalized our slot first (WL CAS failed); the
+    /// payload may have corrupted the winner's frame — the consumer's
+    /// checksum will catch that. Retryable.
+    LostRace,
+    /// Injected fault: producer abandoned the protocol after this step.
+    Died(DieAt),
+    /// Underlying (simulated) fabric error.
+    Fabric(String),
+}
+
+impl From<RdmaError> for PushError {
+    fn from(e: RdmaError) -> Self {
+        PushError::Fabric(e.to_string())
+    }
+}
+
+impl std::fmt::Display for PushError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PushError::Full => write!(f, "ring full"),
+            PushError::Timeout => write!(f, "lock acquisition timed out"),
+            PushError::LostRace => write!(f, "lost slot race to a lock stealer"),
+            PushError::Died(s) => write!(f, "producer died after {s:?}"),
+            PushError::Fabric(e) => write!(f, "fabric: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for PushError {}
+
+/// Successful push summary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PushOutcome {
+    /// Virtual slot the message landed in.
+    pub vslot: u64,
+    /// Total modelled fabric time spent on the verbs.
+    pub simulated_ns: u64,
+    /// Whether the lock was stolen from a timed-out holder.
+    pub stole_lock: bool,
+}
+
+/// A sender bound to one ring via a queue pair.
+pub struct RingProducer {
+    qp: QueuePair,
+    config: RingConfig,
+    clock: Arc<dyn Clock>,
+    /// Non-zero, unique per producer (lock ownership word).
+    id: u64,
+}
+
+impl RingProducer {
+    /// `id` must be non-zero and unique among producers of this ring.
+    pub fn new(qp: QueuePair, config: RingConfig, clock: Arc<dyn Clock>, id: u64) -> Self {
+        assert!(id != 0, "producer id 0 is the unlocked sentinel");
+        Self { qp, config, clock, id }
+    }
+
+    /// Producer id (lock word value while held).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Full protocol push. `die_at` injects a mid-protocol failure.
+    pub fn push(&self, payload: &[u8], die_at: Option<DieAt>) -> Result<PushOutcome, PushError> {
+        let mut s = self.begin()?;
+        macro_rules! die_check {
+            ($point:expr) => {
+                if die_at == Some($point) {
+                    return Err(PushError::Died($point));
+                }
+            };
+        }
+        die_check!(DieAt::AfterLock);
+        s.gh()?;
+        die_check!(DieAt::AfterGh);
+        s.reserve(payload.len())?;
+        s.wb(payload)?;
+        die_check!(DieAt::AfterWb);
+        s.wl()?;
+        die_check!(DieAt::AfterWl);
+        s.uh()?;
+        die_check!(DieAt::AfterUh);
+        s.unlock()?;
+        Ok(s.outcome())
+    }
+
+    /// Begin a stepped session: acquires the lock (with timeout stealing).
+    pub fn begin(&self) -> Result<ProducerSession<'_>, PushError> {
+        let mut sim_ns = 0u64;
+        let mut stole = false;
+        for _ in 0..self.config.max_lock_spins {
+            let (res, out) = self.qp.post_cas(layout::LOCK, 0, self.id)?;
+            sim_ns += out.simulated_ns;
+            match res {
+                Ok(_) => {
+                    let out = self
+                        .qp
+                        .post_write_u64(layout::LOCK_TS, self.clock.now_ns())?;
+                    sim_ns += out.simulated_ns;
+                    return Ok(ProducerSession::new(self, sim_ns, stole));
+                }
+                Err(owner) => {
+                    // Timeout steal: the paper's deadlock resolution.
+                    let (ts, out) = self.qp.post_read_u64(layout::LOCK_TS)?;
+                    sim_ns += out.simulated_ns;
+                    let now = self.clock.now_ns();
+                    if now.saturating_sub(ts) > self.config.lock_timeout_ns {
+                        let (res, out) = self.qp.post_cas(layout::LOCK, owner, self.id)?;
+                        sim_ns += out.simulated_ns;
+                        if res.is_ok() {
+                            stole = true;
+                            let out = self.qp.post_write_u64(layout::LOCK_TS, now)?;
+                            sim_ns += out.simulated_ns;
+                            return Ok(ProducerSession::new(self, sim_ns, stole));
+                        }
+                    }
+                    std::hint::spin_loop();
+                }
+            }
+        }
+        Err(PushError::Timeout)
+    }
+}
+
+/// One in-flight push with explicit protocol steps (GH / WB / WL / UH /
+/// unlock) for deterministic interleaving in the liveness tests.
+pub struct ProducerSession<'a> {
+    prod: &'a RingProducer,
+    sim_ns: u64,
+    stole_lock: bool,
+    // Header snapshot from GH.
+    vtail_off: u64,
+    vtail_slot: u64,
+    vhead_slot: u64,
+    vhead_off: u64,
+    /// Size word observed at the tail slot during GH (WL CAS expectation).
+    observed_size_word: u64,
+    // Reservation.
+    start_v: u64,
+    next_v: u64,
+    frame_len: usize,
+    payload_len: usize,
+    done_gh: bool,
+    done_reserve: bool,
+}
+
+impl<'a> ProducerSession<'a> {
+    fn new(prod: &'a RingProducer, sim_ns: u64, stole_lock: bool) -> Self {
+        Self {
+            prod,
+            sim_ns,
+            stole_lock,
+            vtail_off: 0,
+            vtail_slot: 0,
+            vhead_slot: 0,
+            vhead_off: 0,
+            observed_size_word: 0,
+            start_v: 0,
+            next_v: 0,
+            frame_len: 0,
+            payload_len: 0,
+            done_gh: false,
+            done_reserve: false,
+        }
+    }
+
+    fn qp(&self) -> &QueuePair {
+        &self.prod.qp
+    }
+
+    fn cfg(&self) -> &RingConfig {
+        &self.prod.config
+    }
+
+    /// GH: read the header and the size slot at the tail; recover any
+    /// predecessor lost after WL (Case 7) by advancing the header first.
+    pub fn gh(&mut self) -> Result<(), PushError> {
+        let mut read = |off: usize| -> Result<u64, PushError> {
+            let (v, out) = self.prod.qp.post_read_u64(off)?;
+            self.sim_ns += out.simulated_ns;
+            Ok(v)
+        };
+        self.vtail_off = read(layout::VTAIL_OFF)?;
+        self.vtail_slot = read(layout::VTAIL_SLOT)?;
+        self.vhead_slot = read(layout::VHEAD_SLOT)?;
+        self.vhead_off = read(layout::VHEAD_OFF)?;
+
+        // The consumer may already have consumed entries the header never
+        // covered (a producer lost after WL whose entry the consumer read
+        // before anyone ran Case-7 recovery). The head is then *ahead* of
+        // the tail; fast-forward the tail to re-synchronize.
+        if self.vhead_slot > self.vtail_slot {
+            self.vtail_slot = self.vhead_slot;
+            self.vtail_off = self.vhead_off;
+            let out = self.qp().post_write_u64(layout::VTAIL_OFF, self.vtail_off)?;
+            self.sim_ns += out.simulated_ns;
+            let out = self
+                .qp()
+                .post_write_u64(layout::VTAIL_SLOT, self.vtail_slot)?;
+            self.sim_ns += out.simulated_ns;
+        }
+
+        // Case-7 recovery loop: a sender lost after WL leaves a busy slot
+        // the header does not cover yet. Advance on its behalf (UH) so the
+        // consumer will reach it; bounded by nslots.
+        //
+        // Crucially, a busy word at the tail position is only a *lost*
+        // entry if the slot ring is not full: when
+        // `vtail_slot - vhead_slot == nslots`, the busy word belongs to
+        // the oldest unconsumed entry (virtual slot `vtail_slot - nslots`)
+        // and must not be skipped.
+        for _ in 0..self.cfg().nslots {
+            if self.vtail_slot - self.vhead_slot >= self.cfg().nslots as u64 {
+                self.observed_size_word = layout::BUSY; // full; reserve() rejects
+                break;
+            }
+            let slot_off = self.cfg().slot_off(self.vtail_slot);
+            let (word, out) = self.qp().post_read_u64(slot_off)?;
+            self.sim_ns += out.simulated_ns;
+            if word & layout::BUSY == 0 {
+                self.observed_size_word = word;
+                break;
+            }
+            let flen = (word & !layout::BUSY) as usize;
+            let (_, next) = self.cfg().wrap(self.vtail_off, flen);
+            let out = self.qp().post_write_u64(layout::VTAIL_OFF, next)?;
+            self.sim_ns += out.simulated_ns;
+            let out = self
+                .qp()
+                .post_write_u64(layout::VTAIL_SLOT, self.vtail_slot + 1)?;
+            self.sim_ns += out.simulated_ns;
+            self.vtail_off = next;
+            self.vtail_slot += 1;
+        }
+        self.done_gh = true;
+        Ok(())
+    }
+
+    /// Space check + placement decision for a payload of `len` bytes.
+    pub fn reserve(&mut self, len: usize) -> Result<(), PushError> {
+        assert!(self.done_gh, "reserve before gh");
+        let frame_len = RingConfig::frame_len(len);
+        if frame_len > self.cfg().cap_bytes {
+            return Err(PushError::Full); // can never fit
+        }
+        // Slot ring full?
+        if self.vtail_slot - self.vhead_slot >= self.cfg().nslots as u64 {
+            self.abort_unlock();
+            return Err(PushError::Full);
+        }
+        // Byte ring full? (virtual-offset distance includes skip padding)
+        let (start_v, next_v) = self.cfg().wrap(self.vtail_off, frame_len);
+        if next_v - self.vhead_off > self.cfg().cap_bytes as u64 {
+            self.abort_unlock();
+            return Err(PushError::Full);
+        }
+        self.start_v = start_v;
+        self.next_v = next_v;
+        self.frame_len = frame_len;
+        self.payload_len = len;
+        self.done_reserve = true;
+        Ok(())
+    }
+
+    /// WB: write the frame (`[len][crc][payload][pad]`) into the buffer.
+    pub fn wb(&mut self, payload: &[u8]) -> Result<(), PushError> {
+        assert!(self.done_reserve, "wb before reserve");
+        assert_eq!(payload.len(), self.payload_len, "payload changed size");
+        let mut frame = Vec::with_capacity(self.frame_len);
+        frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        frame.extend_from_slice(&frame_checksum(payload).to_le_bytes());
+        frame.extend_from_slice(payload);
+        frame.resize(self.frame_len, 0);
+        let off = self.cfg().phys(self.start_v);
+        let out = self.qp().post_write(off, &frame)?;
+        self.sim_ns += out.simulated_ns;
+        Ok(())
+    }
+
+    /// WL: CAS the size word to (busy | frame_len). Failure means a lock
+    /// stealer already finalized this slot (paper Cases 2/3/6): abort.
+    pub fn wl(&mut self) -> Result<(), PushError> {
+        assert!(self.done_reserve, "wl before reserve");
+        let slot_off = self.cfg().slot_off(self.vtail_slot);
+        let new_word = layout::BUSY | self.frame_len as u64;
+        let (res, out) = self
+            .qp()
+            .post_cas(slot_off, self.observed_size_word, new_word)?;
+        self.sim_ns += out.simulated_ns;
+        if res.is_err() {
+            self.abort_unlock();
+            return Err(PushError::LostRace);
+        }
+        Ok(())
+    }
+
+    /// UH: advance the header tails. Uses CAS with the GH-snapshot as the
+    /// expectation; a failed CAS means another producer (racing on a
+    /// stolen lock) already advanced identically — benign (Cases 4/8).
+    pub fn uh(&mut self) -> Result<(), PushError> {
+        let (_, out) = self
+            .qp()
+            .post_cas(layout::VTAIL_OFF, self.vtail_off, self.next_v)?;
+        self.sim_ns += out.simulated_ns;
+        let (_, out) = self
+            .qp()
+            .post_cas(layout::VTAIL_SLOT, self.vtail_slot, self.vtail_slot + 1)?;
+        self.sim_ns += out.simulated_ns;
+        Ok(())
+    }
+
+    /// Release the lock if we still own it (a stealer may hold it now).
+    pub fn unlock(&mut self) -> Result<(), PushError> {
+        let (_, out) = self.qp().post_cas(layout::LOCK, self.prod.id, 0)?;
+        self.sim_ns += out.simulated_ns;
+        Ok(())
+    }
+
+    fn abort_unlock(&mut self) {
+        let _ = self.qp().post_cas(layout::LOCK, self.prod.id, 0);
+    }
+
+    /// Where this session's frame was (or would be) placed.
+    pub fn placement(&self) -> (u64, u64) {
+        (self.start_v, self.vtail_slot)
+    }
+
+    /// Completed-push summary.
+    pub fn outcome(&self) -> PushOutcome {
+        PushOutcome {
+            vslot: self.vtail_slot,
+            simulated_ns: self.sim_ns,
+            stole_lock: self.stole_lock,
+        }
+    }
+}

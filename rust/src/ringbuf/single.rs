@@ -1,0 +1,233 @@
+//! Ablation baseline: a conventional **single-ring** buffer (no size
+//! region, in-band framing, committed-tail header word).
+//!
+//! This is what you would build without the paper's contribution. It
+//! works under fault-free multi-producer contention, but a producer that
+//! dies between reserving space and committing the tail leaves the ring
+//! **permanently deadlocked**: later producers cannot distinguish "slow
+//! writer" from "dead writer" because there is no per-entry busy bit for
+//! a stealer to inspect, and the consumer cannot skip an uncommitted
+//! frame because the length metadata is in-band (unwritten). The
+//! `tests/ringbuf_liveness.rs` ablation demonstrates exactly this against
+//! the double-ring recovery, regenerating DESIGN.md §6's first ablation
+//! row.
+
+use super::layout as dlayout;
+use crate::rdma::{MemoryRegion, QueuePair, RdmaError};
+use crate::util::frame_checksum;
+
+/// Header layout (distinct from the double ring): one lock word, a
+/// *reserved* tail (bumped before writing) and a *committed* tail
+/// (bumped after writing); consumer head.
+mod slayout {
+    pub const LOCK: usize = 0;
+    pub const TAIL_RESERVED: usize = 8;
+    pub const TAIL_COMMITTED: usize = 16;
+    pub const HEAD: usize = 24;
+    pub const BUF: usize = 32;
+}
+
+/// Push failure for the single ring.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SingleRingPushError {
+    Full,
+    /// Lock spin bound exhausted — with a dead lock holder this is
+    /// permanent: the deadlock the double ring was designed to break.
+    Deadlocked,
+    Fabric(String),
+}
+
+impl From<RdmaError> for SingleRingPushError {
+    fn from(e: RdmaError) -> Self {
+        SingleRingPushError::Fabric(e.to_string())
+    }
+}
+
+/// Sender for the single-ring baseline. `cap_bytes` is the buffer size.
+pub struct SingleRingProducer {
+    qp: QueuePair,
+    cap_bytes: usize,
+    id: u64,
+    max_lock_spins: usize,
+}
+
+impl SingleRingProducer {
+    pub fn new(qp: QueuePair, cap_bytes: usize, id: u64, max_lock_spins: usize) -> Self {
+        assert!(id != 0);
+        Self { qp, cap_bytes, id, max_lock_spins }
+    }
+
+    /// Required region length for a given capacity.
+    pub fn region_len(cap_bytes: usize) -> usize {
+        slayout::BUF + cap_bytes
+    }
+
+    /// Push; `die_before_commit` simulates the fatal failure mode.
+    pub fn push(
+        &self,
+        payload: &[u8],
+        die_before_commit: bool,
+    ) -> Result<(), SingleRingPushError> {
+        // Acquire lock — NO timeout stealing: without per-entry commit
+        // metadata a stealer could not recover a half-written frame.
+        let mut acquired = false;
+        for _ in 0..self.max_lock_spins {
+            let (res, _) = self.qp.post_cas(slayout::LOCK, 0, self.id)?;
+            if res.is_ok() {
+                acquired = true;
+                break;
+            }
+            std::hint::spin_loop();
+        }
+        if !acquired {
+            return Err(SingleRingPushError::Deadlocked);
+        }
+
+        let frame_len = (dlayout::FRAME_HDR + payload.len() + 7) & !7;
+        let (tail, _) = self.qp.post_read_u64(slayout::TAIL_RESERVED)?;
+        let (head, _) = self.qp.post_read_u64(slayout::HEAD)?;
+        let cap = self.cap_bytes as u64;
+        let pos = tail % cap;
+        let start = if pos + frame_len as u64 > cap { tail + (cap - pos) } else { tail };
+        let next = start + frame_len as u64;
+        if next - head > cap {
+            let _ = self.qp.post_cas(slayout::LOCK, self.id, 0);
+            return Err(SingleRingPushError::Full);
+        }
+
+        self.qp.post_write_u64(slayout::TAIL_RESERVED, next)?;
+        // If we skipped the tail remainder, leave a skip marker so the
+        // consumer knows to jump to the boundary (in-band framing has no
+        // other way to communicate the skip — one of the exact
+        // variable-size-message weaknesses the double ring's size region
+        // eliminates).
+        if start != tail && cap - pos >= 8 {
+            let mut marker = [0u8; 8];
+            marker[0..4].copy_from_slice(&u32::MAX.to_le_bytes());
+            self.qp
+                .post_write(slayout::BUF + pos as usize, &marker)?;
+        }
+        let mut frame = Vec::with_capacity(frame_len);
+        frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        frame.extend_from_slice(&frame_checksum(payload).to_le_bytes());
+        frame.extend_from_slice(payload);
+        frame.resize(frame_len, 0);
+        self.qp
+            .post_write(slayout::BUF + (start % cap) as usize, &frame)?;
+
+        if die_before_commit {
+            // Producer dies holding the lock with TAIL_COMMITTED stale:
+            // every later producer spins forever; the consumer stalls at
+            // the committed tail. Permanent deadlock.
+            return Ok(());
+        }
+
+        self.qp.post_write_u64(slayout::TAIL_COMMITTED, next)?;
+        let _ = self.qp.post_cas(slayout::LOCK, self.id, 0);
+        Ok(())
+    }
+}
+
+/// Consumer for the single-ring baseline.
+pub struct SingleRingConsumer {
+    region: MemoryRegion,
+    cap_bytes: usize,
+    head: u64,
+}
+
+impl SingleRingConsumer {
+    pub fn new(region: MemoryRegion, cap_bytes: usize) -> Self {
+        let head = region.load_u64(slayout::HEAD);
+        Self { region, cap_bytes, head }
+    }
+
+    /// Pop the next committed frame, if any.
+    pub fn pop(&mut self) -> Option<Vec<u8>> {
+        let committed = self.region.load_u64(slayout::TAIL_COMMITTED);
+        if self.head >= committed {
+            return None;
+        }
+        let cap = self.cap_bytes as u64;
+        // Peek the length. If the tail remainder cannot hold a header, or
+        // holds a skip marker (len == u32::MAX), jump to the boundary.
+        let mut pos = self.head % cap;
+        if pos + dlayout::FRAME_HDR as u64 > cap {
+            self.head += cap - pos;
+            pos = 0;
+        }
+        let mut hdr = [0u8; 8];
+        self.region
+            .read_bytes(slayout::BUF + pos as usize, &mut hdr);
+        let mut payload_len = u32::from_le_bytes(hdr[0..4].try_into().unwrap());
+        if payload_len == u32::MAX {
+            self.head += cap - pos;
+            self.region.read_bytes(slayout::BUF, &mut hdr);
+            payload_len = u32::from_le_bytes(hdr[0..4].try_into().unwrap());
+        }
+        let payload_len = payload_len as usize;
+        let frame_len = (dlayout::FRAME_HDR + payload_len + 7) & !7;
+        let start = self.head;
+        let mut frame = vec![0u8; frame_len];
+        self.region
+            .read_bytes(slayout::BUF + (start % cap) as usize, &mut frame);
+        let payload = frame[dlayout::FRAME_HDR..dlayout::FRAME_HDR + payload_len].to_vec();
+        self.head = start + frame_len as u64;
+        self.region.store_u64(slayout::HEAD, self.head);
+        Some(payload)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rdma::Fabric;
+
+    fn setup(cap: usize) -> (SingleRingProducer, SingleRingConsumer, Fabric) {
+        let fabric = Fabric::ideal();
+        let (id, region) = fabric.register(SingleRingProducer::region_len(cap));
+        let qp = fabric.connect(id).unwrap();
+        (
+            SingleRingProducer::new(qp, cap, 1, 10_000),
+            SingleRingConsumer::new(region, cap),
+            fabric,
+        )
+    }
+
+    #[test]
+    fn roundtrip() {
+        let (p, mut c, _) = setup(1 << 16);
+        p.push(b"abc", false).unwrap();
+        p.push(b"defgh", false).unwrap();
+        assert_eq!(c.pop().unwrap(), b"abc");
+        assert_eq!(c.pop().unwrap(), b"defgh");
+        assert!(c.pop().is_none());
+    }
+
+    #[test]
+    fn dead_producer_deadlocks_everyone() {
+        let (p, mut c, fabric) = setup(1 << 16);
+        p.push(b"committed", false).unwrap();
+        p.push(b"never-committed", true).unwrap(); // dies holding lock
+
+        // Consumer sees only the committed frame, then stalls forever.
+        assert_eq!(c.pop().unwrap(), b"committed");
+        assert!(c.pop().is_none());
+
+        // Any other producer spins out: permanent deadlock.
+        let qp2 = fabric.connect(crate::rdma::RegionId(0)).unwrap();
+        let p2 = SingleRingProducer::new(qp2, 1 << 16, 2, 1000);
+        assert_eq!(
+            p2.push(b"blocked", false),
+            Err(SingleRingPushError::Deadlocked)
+        );
+    }
+
+    #[test]
+    fn wraps() {
+        let (p, mut c, _) = setup(128);
+        for i in 0..50u8 {
+            p.push(&[i; 40], false).unwrap();
+            assert_eq!(c.pop().unwrap(), vec![i; 40]);
+        }
+    }
+}

@@ -1,0 +1,141 @@
+//! Stage executors: the compute plug-in for TaskWorkers.
+
+use super::PjrtRuntime;
+use anyhow::Result;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// A tensor argument for stage execution.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorValue {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl TensorValue {
+    /// Element count.
+    pub fn len(&self) -> usize {
+        match self {
+            TensorValue::F32(v) => v.len(),
+            TensorValue::I32(v) => v.len(),
+        }
+    }
+
+    /// True if no elements.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Build an xla literal with the manifest shape.
+    pub fn to_literal(&self, shape: &[usize]) -> Result<xla::Literal> {
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        let expected: usize = shape.iter().product();
+        anyhow::ensure!(
+            self.len() == expected,
+            "shape {:?} wants {} elems, got {}",
+            shape,
+            expected,
+            self.len()
+        );
+        let lit = match self {
+            TensorValue::F32(v) => xla::Literal::vec1(v),
+            TensorValue::I32(v) => xla::Literal::vec1(v),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+}
+
+/// How a TaskWorker executes its stage.
+#[derive(Clone)]
+pub enum StageExecutor {
+    /// Real compute: a stage executable in a shared PJRT runtime.
+    Pjrt { runtime: Arc<PjrtRuntime>, stage: String },
+    /// Calibrated busy-wait (resource-scale sims; models a GPU being
+    /// occupied without doing the math).
+    Simulated { busy: Duration },
+}
+
+impl StageExecutor {
+    /// Run once over the inputs; returns the output tensor (empty for
+    /// simulated executors).
+    pub fn run(&self, inputs: &[TensorValue]) -> Result<Vec<f32>> {
+        match self {
+            StageExecutor::Pjrt { runtime, stage } => runtime.execute(stage, inputs),
+            StageExecutor::Simulated { busy } => {
+                // Sleep, not spin: a simulated executor models the *GPU*
+                // being occupied while the host CPU is free — exactly the
+                // paper's execution model — and lets hundreds of logical
+                // GPUs coexist on few host cores.
+                if !busy.is_zero() {
+                    std::thread::sleep(*busy);
+                }
+                Ok(Vec::new())
+            }
+        }
+    }
+
+    /// Human-readable description.
+    pub fn describe(&self) -> String {
+        match self {
+            StageExecutor::Pjrt { stage, .. } => format!("pjrt:{stage}"),
+            StageExecutor::Simulated { busy } => format!("sim:{}us", busy.as_micros()),
+        }
+    }
+}
+
+/// Shared pool mapping stage names to executors; instances look up their
+/// assignment here when the NM (re)assigns them (§8.2 "the instance
+/// initializes the corresponding models").
+#[derive(Clone, Default)]
+pub struct ExecutorPool {
+    entries: std::collections::HashMap<String, StageExecutor>,
+}
+
+impl ExecutorPool {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register an executor under a stage name.
+    pub fn insert(&mut self, stage: impl Into<String>, exec: StageExecutor) {
+        self.entries.insert(stage.into(), exec);
+    }
+
+    /// Look up by stage name.
+    pub fn get(&self, stage: &str) -> Option<&StageExecutor> {
+        self.entries.get(stage)
+    }
+
+    /// All registered stage names.
+    pub fn stages(&self) -> Vec<&str> {
+        self.entries.keys().map(String::as_str).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn simulated_executor_takes_its_time() {
+        let e = StageExecutor::Simulated { busy: Duration::from_millis(5) };
+        let t0 = std::time::Instant::now();
+        e.run(&[]).unwrap();
+        assert!(t0.elapsed() >= Duration::from_millis(5));
+    }
+
+    #[test]
+    fn tensor_value_shape_mismatch() {
+        let tv = TensorValue::F32(vec![0.0; 4]);
+        assert!(tv.to_literal(&[2, 2]).is_ok());
+        assert!(tv.to_literal(&[3, 2]).is_err());
+    }
+
+    #[test]
+    fn pool_lookup() {
+        let mut pool = ExecutorPool::new();
+        pool.insert("a", StageExecutor::Simulated { busy: Duration::ZERO });
+        assert!(pool.get("a").is_some());
+        assert!(pool.get("b").is_none());
+    }
+}

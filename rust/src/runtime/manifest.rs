@@ -1,0 +1,169 @@
+//! Artifact manifest (`artifacts/manifest.json`): shape/dtype contracts
+//! for every stage executable, written by `python/compile/aot.py`.
+
+use crate::util::Json;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Tensor shape/dtype descriptor.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub name: String,
+    /// "float32" or "int32".
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    /// Total element count.
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One stage executable's contract.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StageSpec {
+    pub inputs: Vec<TensorSpec>,
+    pub output: TensorSpec,
+    pub file: String,
+}
+
+/// The full manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Manifest {
+    /// Model dimensions (d_model, vid_tokens, ...) for driver code.
+    pub dims: BTreeMap<String, u64>,
+    pub stages: BTreeMap<String, StageSpec>,
+}
+
+fn tensor_spec(j: &Json, name_default: &str) -> Result<TensorSpec> {
+    let shape = j
+        .get("shape")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("tensor missing shape"))?
+        .iter()
+        .map(|x| x.as_u64().map(|v| v as usize))
+        .collect::<Option<Vec<_>>>()
+        .ok_or_else(|| anyhow!("non-integer shape"))?;
+    Ok(TensorSpec {
+        name: j
+            .get("name")
+            .and_then(Json::as_str)
+            .unwrap_or(name_default)
+            .to_string(),
+        dtype: j
+            .get("dtype")
+            .and_then(Json::as_str)
+            .unwrap_or("float32")
+            .to_string(),
+        shape,
+    })
+}
+
+impl Manifest {
+    /// Parse from a JSON string.
+    pub fn parse(s: &str) -> Result<Self> {
+        let j = Json::parse(s).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let dims = j
+            .get("dims")
+            .and_then(Json::as_obj)
+            .map(|m| {
+                m.iter()
+                    .filter_map(|(k, v)| v.as_u64().map(|n| (k.clone(), n)))
+                    .collect()
+            })
+            .unwrap_or_default();
+        let mut stages = BTreeMap::new();
+        let stage_obj = j
+            .get("stages")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing stages"))?;
+        for (name, sj) in stage_obj {
+            let inputs = sj
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("stage {name} missing inputs"))?
+                .iter()
+                .map(|i| tensor_spec(i, "input"))
+                .collect::<Result<Vec<_>>>()?;
+            let output = tensor_spec(
+                sj.get("output").ok_or_else(|| anyhow!("stage {name} missing output"))?,
+                "output",
+            )?;
+            let file = sj
+                .get("file")
+                .and_then(Json::as_str)
+                .unwrap_or(&format!("{name}.hlo.txt"))
+                .to_string();
+            stages.insert(name.clone(), StageSpec { inputs, output, file });
+        }
+        Ok(Self { dims, stages })
+    }
+
+    /// Load from a file path.
+    pub fn load(path: &Path) -> Result<Self> {
+        let s = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&s)
+    }
+
+    /// Named dimension lookup.
+    pub fn dim(&self, name: &str) -> Option<u64> {
+        self.dims.get(name).copied()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "dims": {"d_latent": 16, "vid_tokens": 256},
+      "stages": {
+        "vae_encode": {
+          "inputs": [{"name": "image", "dtype": "float32", "shape": [32, 32, 3]}],
+          "output": {"dtype": "float32", "shape": [64, 16]},
+          "file": "vae_encode.hlo.txt"
+        },
+        "diffusion_step": {
+          "inputs": [
+            {"name": "x", "dtype": "float32", "shape": [256, 16]},
+            {"name": "t", "dtype": "float32", "shape": [1]}
+          ],
+          "output": {"dtype": "float32", "shape": [256, 16]},
+          "file": "diffusion_step.hlo.txt"
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.dim("d_latent"), Some(16));
+        let s = &m.stages["vae_encode"];
+        assert_eq!(s.inputs[0].shape, vec![32, 32, 3]);
+        assert_eq!(s.inputs[0].elems(), 3072);
+        assert_eq!(s.output.shape, vec![64, 16]);
+        assert_eq!(s.file, "vae_encode.hlo.txt");
+    }
+
+    #[test]
+    fn missing_stages_rejected() {
+        assert!(Manifest::parse(r#"{"dims": {}}"#).is_err());
+    }
+
+    #[test]
+    fn real_manifest_if_present() {
+        let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts/manifest.json");
+        if !p.exists() {
+            return;
+        }
+        let m = Manifest::load(&p).unwrap();
+        assert!(m.stages.contains_key("diffusion_step"));
+        assert_eq!(m.stages["diffusion_step"].inputs.len(), 5);
+        assert_eq!(m.dim("vid_tokens"), Some(256));
+    }
+}

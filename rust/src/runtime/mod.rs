@@ -1,0 +1,170 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt` +
+//! `manifest.json`) produced once by `make artifacts` and executes them
+//! from the rust hot path. Python never runs here.
+//!
+//! One compiled executable per stage model; the interchange format is HLO
+//! *text* (see `python/compile/aot.py` for why). Stage executors are the
+//! compute plug-in point for TaskWorkers: [`StageExecutor::Pjrt`] runs
+//! real tensors through the XLA CPU client, [`StageExecutor::Simulated`]
+//! busy-spins a calibrated duration (used by the resource-scale
+//! experiments where thousands of logical GPUs are modelled).
+
+mod executor;
+mod manifest;
+
+pub use executor::{ExecutorPool, StageExecutor, TensorValue};
+pub use manifest::{Manifest, StageSpec, TensorSpec};
+
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+/// Loaded PJRT runtime: client + one compiled executable per stage.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    executables: HashMap<String, Mutex<xla::PjRtLoadedExecutable>>,
+    manifest: Manifest,
+}
+
+// The PJRT CPU client and loaded executables are internally thread-safe
+// C++ objects; the crate's wrappers just don't declare it. Executions are
+// additionally serialized per-executable through the Mutex above.
+unsafe impl Send for PjrtRuntime {}
+unsafe impl Sync for PjrtRuntime {}
+
+impl PjrtRuntime {
+    /// Load every stage in the manifest and compile it on the CPU client.
+    pub fn load(artifacts_dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(&artifacts_dir.join("manifest.json"))
+            .context("loading artifacts manifest (run `make artifacts`)")?;
+        Self::load_manifest(artifacts_dir, manifest)
+    }
+
+    /// Load only a subset of stages (faster tests / per-role instances:
+    /// a workflow instance compiles only the stage it was assigned, the
+    /// paper's fine-grained resource story).
+    pub fn load_stages(artifacts_dir: &Path, stages: &[&str]) -> Result<Self> {
+        let mut manifest = Manifest::load(&artifacts_dir.join("manifest.json"))?;
+        manifest.stages.retain(|k, _| stages.contains(&k.as_str()));
+        Self::load_manifest(artifacts_dir, manifest)
+    }
+
+    fn load_manifest(artifacts_dir: &Path, manifest: Manifest) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut executables = HashMap::new();
+        for (name, spec) in &manifest.stages {
+            let path = artifacts_dir.join(&spec.file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compiling stage {name}: {e}"))?;
+            executables.insert(name.clone(), Mutex::new(exe));
+        }
+        Ok(Self { client, executables, manifest })
+    }
+
+    /// The manifest (shapes for marshalling).
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Stage names available.
+    pub fn stage_names(&self) -> Vec<String> {
+        self.executables.keys().cloned().collect()
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Execute a stage with the given inputs. Inputs must match the
+    /// manifest order/shapes; outputs are returned as a flat f32 vector
+    /// (row-major, shape per manifest).
+    pub fn execute(&self, stage: &str, inputs: &[TensorValue]) -> Result<Vec<f32>> {
+        let spec = self
+            .manifest
+            .stages
+            .get(stage)
+            .with_context(|| format!("unknown stage {stage}"))?;
+        anyhow::ensure!(
+            inputs.len() == spec.inputs.len(),
+            "stage {stage}: expected {} inputs, got {}",
+            spec.inputs.len(),
+            inputs.len()
+        );
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (tv, ispec) in inputs.iter().zip(&spec.inputs) {
+            literals.push(tv.to_literal(&ispec.shape).with_context(|| {
+                format!("marshalling input {} of {stage}", ispec.name)
+            })?);
+        }
+        let exe = self.executables.get(stage).unwrap().lock().unwrap();
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        drop(exe);
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub(crate) fn artifacts_dir() -> std::path::PathBuf {
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn load_and_run_vae_encode() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let rt = PjrtRuntime::load_stages(&artifacts_dir(), &["vae_encode"]).unwrap();
+        let image: Vec<f32> = (0..32 * 32 * 3).map(|i| (i % 7) as f32 / 7.0).collect();
+        let out = rt
+            .execute("vae_encode", &[TensorValue::F32(image)])
+            .unwrap();
+        assert_eq!(out.len(), 64 * 16);
+        assert!(out.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn execute_rejects_wrong_arity() {
+        if !have_artifacts() {
+            return;
+        }
+        let rt = PjrtRuntime::load_stages(&artifacts_dir(), &["vae_encode"]).unwrap();
+        assert!(rt.execute("vae_encode", &[]).is_err());
+    }
+
+    #[test]
+    fn unknown_stage_errors() {
+        if !have_artifacts() {
+            return;
+        }
+        let rt = PjrtRuntime::load_stages(&artifacts_dir(), &["vae_encode"]).unwrap();
+        assert!(rt.execute("nope", &[]).is_err());
+    }
+
+    #[test]
+    fn deterministic_across_calls() {
+        if !have_artifacts() {
+            return;
+        }
+        let rt = PjrtRuntime::load_stages(&artifacts_dir(), &["vae_encode"]).unwrap();
+        let image: Vec<f32> = vec![0.25; 32 * 32 * 3];
+        let a = rt.execute("vae_encode", &[TensorValue::F32(image.clone())]).unwrap();
+        let b = rt.execute("vae_encode", &[TensorValue::F32(image)]).unwrap();
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,14 @@
+//! Simulation substrate for the resource-scale experiments (E1/E8/E11):
+//! synthetic arrival processes (no production traces are available — see
+//! DESIGN.md substitutions) and a discrete-event GPU-fleet simulator
+//! comparing the monolithic deployment with OnePiece's disaggregated,
+//! NM-autoscaled deployment.
+
+mod resources;
+mod workload;
+
+pub use resources::{
+    simulate_disaggregated, simulate_monolithic, wan_stages, FleetOutcome,
+    ResourceSimConfig,
+};
+pub use workload::ArrivalProcess;

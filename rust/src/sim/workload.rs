@@ -1,0 +1,216 @@
+//! Synthetic arrival processes: Poisson (steady), MMPP (bursty) and
+//! diurnal (the load pattern that motivates elastic allocation in §1:
+//! "dynamic and often unpredictable nature of request patterns").
+
+use crate::util::Rng;
+
+/// A request arrival process over continuous time (seconds).
+#[derive(Debug, Clone)]
+pub enum ArrivalProcess {
+    /// Homogeneous Poisson at `rate_rps`.
+    Poisson { rate_rps: f64 },
+    /// Markov-modulated Poisson: alternates LOW/HIGH phases with
+    /// exponentially distributed dwell times (bursty traffic).
+    Mmpp {
+        low_rps: f64,
+        high_rps: f64,
+        mean_dwell_s: f64,
+    },
+    /// Sinusoidal diurnal pattern between `base_rps` and `peak_rps` with
+    /// the given period.
+    Diurnal {
+        base_rps: f64,
+        peak_rps: f64,
+        period_s: f64,
+    },
+    /// Flash-crowd square wave: `peak_rps` for `duty` fraction of each
+    /// period, `base_rps` otherwise. `duty = 1/16` gives the peak:mean ≈
+    /// 16:1 regime behind the paper's headline comparison: a monolithic
+    /// fleet must hold peak capacity through the whole period.
+    Spike {
+        base_rps: f64,
+        peak_rps: f64,
+        duty: f64,
+        period_s: f64,
+    },
+}
+
+impl ArrivalProcess {
+    /// Generate arrival timestamps in `[0, duration_s)`.
+    pub fn generate(&self, seed: u64, duration_s: f64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        let mut out = Vec::new();
+        match *self {
+            ArrivalProcess::Poisson { rate_rps } => {
+                let mut t = 0.0;
+                loop {
+                    t += rng.exp(rate_rps);
+                    if t >= duration_s {
+                        break;
+                    }
+                    out.push(t);
+                }
+            }
+            ArrivalProcess::Mmpp { low_rps, high_rps, mean_dwell_s } => {
+                let mut t = 0.0;
+                let mut high = false;
+                let mut phase_end = rng.exp(1.0 / mean_dwell_s);
+                loop {
+                    let rate = if high { high_rps } else { low_rps };
+                    t += rng.exp(rate.max(1e-9));
+                    while t > phase_end {
+                        high = !high;
+                        phase_end += rng.exp(1.0 / mean_dwell_s);
+                    }
+                    if t >= duration_s {
+                        break;
+                    }
+                    out.push(t);
+                }
+            }
+            ArrivalProcess::Diurnal { base_rps, peak_rps, period_s } => {
+                // Thinning: dominate with peak rate, accept with
+                // probability rate(t)/peak.
+                let mut t = 0.0;
+                loop {
+                    t += rng.exp(peak_rps.max(1e-9));
+                    if t >= duration_s {
+                        break;
+                    }
+                    let phase = (t / period_s) * std::f64::consts::TAU;
+                    let rate = base_rps
+                        + (peak_rps - base_rps) * 0.5 * (1.0 - phase.cos());
+                    if rng.f64() < rate / peak_rps {
+                        out.push(t);
+                    }
+                }
+            }
+            ArrivalProcess::Spike { base_rps, peak_rps, duty, period_s } => {
+                let mut t = 0.0;
+                loop {
+                    t += rng.exp(peak_rps.max(1e-9));
+                    if t >= duration_s {
+                        break;
+                    }
+                    let in_spike = (t % period_s) / period_s < duty;
+                    let rate = if in_spike { peak_rps } else { base_rps };
+                    if rng.f64() < rate / peak_rps {
+                        out.push(t);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Instantaneous offered rate at time `t` (for plotting/provisioning).
+    pub fn rate_at(&self, t: f64) -> f64 {
+        match *self {
+            ArrivalProcess::Poisson { rate_rps } => rate_rps,
+            ArrivalProcess::Mmpp { low_rps, high_rps, .. } => 0.5 * (low_rps + high_rps),
+            ArrivalProcess::Diurnal { base_rps, peak_rps, period_s } => {
+                let phase = (t / period_s) * std::f64::consts::TAU;
+                base_rps + (peak_rps - base_rps) * 0.5 * (1.0 - phase.cos())
+            }
+            ArrivalProcess::Spike { base_rps, peak_rps, duty, period_s } => {
+                if (t % period_s) / period_s < duty {
+                    peak_rps
+                } else {
+                    base_rps
+                }
+            }
+        }
+    }
+
+    /// Peak rate (for monolithic static provisioning).
+    pub fn peak_rps(&self) -> f64 {
+        match *self {
+            ArrivalProcess::Poisson { rate_rps } => rate_rps,
+            ArrivalProcess::Mmpp { high_rps, .. } => high_rps,
+            ArrivalProcess::Diurnal { peak_rps, .. } => peak_rps,
+            ArrivalProcess::Spike { peak_rps, .. } => peak_rps,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_rate_matches() {
+        let p = ArrivalProcess::Poisson { rate_rps: 50.0 };
+        let arr = p.generate(1, 100.0);
+        let rate = arr.len() as f64 / 100.0;
+        assert!((rate - 50.0).abs() < 3.0, "rate={rate}");
+    }
+
+    #[test]
+    fn arrivals_sorted_and_bounded() {
+        for proc in [
+            ArrivalProcess::Poisson { rate_rps: 20.0 },
+            ArrivalProcess::Mmpp { low_rps: 5.0, high_rps: 50.0, mean_dwell_s: 2.0 },
+            ArrivalProcess::Diurnal { base_rps: 2.0, peak_rps: 40.0, period_s: 20.0 },
+        ] {
+            let arr = proc.generate(7, 30.0);
+            assert!(arr.windows(2).all(|w| w[0] <= w[1]));
+            assert!(arr.iter().all(|&t| (0.0..30.0).contains(&t)));
+            assert!(!arr.is_empty());
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let p = ArrivalProcess::Poisson { rate_rps: 10.0 };
+        assert_eq!(p.generate(3, 10.0), p.generate(3, 10.0));
+        assert_ne!(p.generate(3, 10.0), p.generate(4, 10.0));
+    }
+
+    #[test]
+    fn mmpp_is_burstier_than_poisson() {
+        // Index of dispersion (var/mean of per-second counts) > 1 for
+        // MMPP, ≈ 1 for Poisson.
+        fn dispersion(arr: &[f64], dur: usize) -> f64 {
+            let mut counts = vec![0f64; dur];
+            for &t in arr {
+                counts[t as usize] += 1.0;
+            }
+            let mean = counts.iter().sum::<f64>() / dur as f64;
+            let var =
+                counts.iter().map(|c| (c - mean).powi(2)).sum::<f64>() / dur as f64;
+            var / mean
+        }
+        let pois = ArrivalProcess::Poisson { rate_rps: 27.5 }.generate(11, 200.0);
+        let mmpp = ArrivalProcess::Mmpp {
+            low_rps: 5.0,
+            high_rps: 50.0,
+            mean_dwell_s: 5.0,
+        }
+        .generate(11, 200.0);
+        assert!(dispersion(&mmpp, 200) > dispersion(&pois, 200) * 2.0);
+    }
+
+    #[test]
+    fn spike_mean_matches_duty() {
+        let p = ArrivalProcess::Spike {
+            base_rps: 0.0,
+            peak_rps: 32.0,
+            duty: 1.0 / 16.0,
+            period_s: 40.0,
+        };
+        let arr = p.generate(5, 400.0);
+        let mean = arr.len() as f64 / 400.0;
+        assert!((mean - 2.0).abs() < 0.4, "mean={mean} (expect peak*duty=2)");
+        assert_eq!(p.peak_rps(), 32.0);
+        assert_eq!(p.rate_at(0.1), 32.0);
+        assert_eq!(p.rate_at(20.0), 0.0);
+    }
+
+    #[test]
+    fn diurnal_rate_peaks_mid_period() {
+        let d = ArrivalProcess::Diurnal { base_rps: 2.0, peak_rps: 20.0, period_s: 100.0 };
+        assert!((d.rate_at(0.0) - 2.0).abs() < 1e-9);
+        assert!((d.rate_at(50.0) - 20.0).abs() < 1e-9);
+        assert_eq!(d.peak_rps(), 20.0);
+    }
+}

@@ -1,0 +1,240 @@
+//! The workflow message (§4.1, Figure 3): a fixed header — UUID assigned
+//! by the proxy, proxy receive timestamp, application id, current stage —
+//! plus a payload that is either raw bytes or a shaped f32 tensor
+//! ("intermediate results can be represented in various data formats,
+//! including tensors or raw binary data", §4.4).
+
+use crate::util::{BufReader, BufWriter, CodecError, NodeId, Uid};
+
+/// Application identifier — selects the workflow definition (§4.5) and the
+/// user function the TaskWorker invokes (§4.4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct AppId(pub u32);
+
+/// Stage index within a workflow (0 = entrance stage).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct StageId(pub u32);
+
+/// Message header (Figure 3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MessageHeader {
+    /// Request UUID assigned by the proxy (§3.2); tracks the request for
+    /// its whole lifecycle and keys the result in the database.
+    pub uid: Uid,
+    /// Wall-clock ns when the proxy first received the request — used for
+    /// end-to-end latency monitoring (§3.2).
+    pub ts_ns: u64,
+    /// Which application workflow this request belongs to.
+    pub app: AppId,
+    /// The stage this message is *destined for*.
+    pub stage: StageId,
+    /// Proxy that admitted the request (for result routing / debugging).
+    pub origin: NodeId,
+}
+
+/// Message payload: raw bytes or a shaped f32 tensor. Tensors carry their
+/// shape so the next stage can bind them to the right executor input
+/// without a side channel — the "message context" NCCL lacks (§6 L4).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Payload {
+    Bytes(Vec<u8>),
+    /// Row-major f32 tensor.
+    Tensor { shape: Vec<u32>, data: Vec<f32> },
+    /// Multiple named tensors (e.g. diffusion carries latent + ctx + img).
+    Tensors(Vec<(String, Vec<u32>, Vec<f32>)>),
+}
+
+impl Payload {
+    /// Approximate wire size in bytes.
+    pub fn wire_size(&self) -> usize {
+        match self {
+            Payload::Bytes(b) => b.len() + 8,
+            Payload::Tensor { shape, data } => shape.len() * 4 + data.len() * 4 + 16,
+            Payload::Tensors(ts) => ts
+                .iter()
+                .map(|(n, s, d)| n.len() + s.len() * 4 + d.len() * 4 + 24)
+                .sum(),
+        }
+    }
+}
+
+/// A complete workflow message.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkflowMessage {
+    pub header: MessageHeader,
+    pub payload: Payload,
+}
+
+const TAG_BYTES: u8 = 0;
+const TAG_TENSOR: u8 = 1;
+const TAG_TENSORS: u8 = 2;
+
+impl WorkflowMessage {
+    /// Serialize into `buf` (appending; caller may reuse the allocation).
+    pub fn encode_into(&self, buf: &mut Vec<u8>) {
+        let mut w = BufWriter::new(buf);
+        w.put_u128(self.header.uid.0);
+        w.put_u64(self.header.ts_ns);
+        w.put_u32(self.header.app.0);
+        w.put_u32(self.header.stage.0);
+        w.put_u32(self.header.origin.0);
+        match &self.payload {
+            Payload::Bytes(b) => {
+                w.put_u8(TAG_BYTES);
+                w.put_bytes(b);
+            }
+            Payload::Tensor { shape, data } => {
+                w.put_u8(TAG_TENSOR);
+                w.put_u32(shape.len() as u32);
+                for &d in shape {
+                    w.put_u32(d);
+                }
+                w.put_f32s(data);
+            }
+            Payload::Tensors(ts) => {
+                w.put_u8(TAG_TENSORS);
+                w.put_u32(ts.len() as u32);
+                for (name, shape, data) in ts {
+                    w.put_bytes(name.as_bytes());
+                    w.put_u32(shape.len() as u32);
+                    for &d in shape {
+                        w.put_u32(d);
+                    }
+                    w.put_f32s(data);
+                }
+            }
+        }
+    }
+
+    /// Serialize to a fresh buffer.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut buf = Vec::with_capacity(64 + self.payload.wire_size());
+        self.encode_into(&mut buf);
+        buf
+    }
+
+    /// Decode a message from wire bytes.
+    pub fn decode(buf: &[u8]) -> Result<Self, CodecError> {
+        let mut r = BufReader::new(buf);
+        let header = MessageHeader {
+            uid: Uid(r.get_u128()?),
+            ts_ns: r.get_u64()?,
+            app: AppId(r.get_u32()?),
+            stage: StageId(r.get_u32()?),
+            origin: NodeId(r.get_u32()?),
+        };
+        let payload = match r.get_u8()? {
+            TAG_BYTES => Payload::Bytes(r.get_bytes()?.to_vec()),
+            TAG_TENSOR => {
+                let rank = r.get_u32()? as usize;
+                let mut shape = Vec::with_capacity(rank);
+                for _ in 0..rank {
+                    shape.push(r.get_u32()?);
+                }
+                Payload::Tensor { shape, data: r.get_f32s()? }
+            }
+            TAG_TENSORS => {
+                let n = r.get_u32()? as usize;
+                let mut ts = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let name = String::from_utf8(r.get_bytes()?.to_vec())
+                        .map_err(|_| CodecError("bad tensor name"))?;
+                    let rank = r.get_u32()? as usize;
+                    let mut shape = Vec::with_capacity(rank);
+                    for _ in 0..rank {
+                        shape.push(r.get_u32()?);
+                    }
+                    ts.push((name, shape, r.get_f32s()?));
+                }
+                Payload::Tensors(ts)
+            }
+            _ => return Err(CodecError("unknown payload tag")),
+        };
+        Ok(Self { header, payload })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn header() -> MessageHeader {
+        MessageHeader {
+            uid: Uid(0xABCD_EF01_2345),
+            ts_ns: 123_456_789,
+            app: AppId(7),
+            stage: StageId(2),
+            origin: NodeId(3),
+        }
+    }
+
+    #[test]
+    fn roundtrip_bytes() {
+        let m = WorkflowMessage {
+            header: header(),
+            payload: Payload::Bytes(b"image bytes here".to_vec()),
+        };
+        assert_eq!(WorkflowMessage::decode(&m.encode()).unwrap(), m);
+    }
+
+    #[test]
+    fn roundtrip_tensor() {
+        let m = WorkflowMessage {
+            header: header(),
+            payload: Payload::Tensor {
+                shape: vec![4, 8],
+                data: (0..32).map(|i| i as f32 * 0.5).collect(),
+            },
+        };
+        assert_eq!(WorkflowMessage::decode(&m.encode()).unwrap(), m);
+    }
+
+    #[test]
+    fn roundtrip_named_tensors() {
+        let m = WorkflowMessage {
+            header: header(),
+            payload: Payload::Tensors(vec![
+                ("x".into(), vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]),
+                ("ctx".into(), vec![1], vec![9.0]),
+            ]),
+        };
+        assert_eq!(WorkflowMessage::decode(&m.encode()).unwrap(), m);
+    }
+
+    #[test]
+    fn decode_rejects_truncation() {
+        let m = WorkflowMessage {
+            header: header(),
+            payload: Payload::Bytes(vec![1, 2, 3]),
+        };
+        let enc = m.encode();
+        for cut in [1, 10, enc.len() - 1] {
+            assert!(WorkflowMessage::decode(&enc[..cut]).is_err());
+        }
+    }
+
+    #[test]
+    fn decode_rejects_unknown_tag() {
+        let m = WorkflowMessage {
+            header: header(),
+            payload: Payload::Bytes(vec![]),
+        };
+        let mut enc = m.encode();
+        enc[16 + 8 + 4 + 4 + 4] = 99; // payload tag byte
+        assert!(WorkflowMessage::decode(&enc).is_err());
+    }
+
+    #[test]
+    fn encode_into_reuses_buffer() {
+        let m = WorkflowMessage {
+            header: header(),
+            payload: Payload::Bytes(vec![5; 10]),
+        };
+        let mut buf = Vec::new();
+        m.encode_into(&mut buf);
+        let first = buf.clone();
+        buf.clear();
+        m.encode_into(&mut buf);
+        assert_eq!(buf, first);
+    }
+}

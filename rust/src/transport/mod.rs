@@ -1,0 +1,21 @@
+//! Inter-service messaging: the workflow message format (§4.1) and three
+//! interchangeable transports:
+//!
+//! - [`RdmaEndpoint`] — the paper's design: one double-ring buffer per
+//!   receiver on the simulated RDMA fabric; any number of senders connect
+//!   queue pairs and push frames with one-sided verbs.
+//! - [`TcpEndpoint`] — the baseline the paper compares against (§1, §6):
+//!   real loopback sockets through the kernel stack.
+//! - [`NcclStub`] — encodes NCCL's four limitations (L1–L4 in §6) as
+//!   type-level restrictions; used by the comparison bench to show *why*
+//!   OnePiece cannot be built on NCCL rather than to model its speed.
+
+mod message;
+mod nccl_stub;
+mod rdma_endpoint;
+mod tcp_endpoint;
+
+pub use message::{AppId, MessageHeader, Payload, StageId, WorkflowMessage};
+pub use nccl_stub::{NcclError, NcclStub};
+pub use rdma_endpoint::{RdmaEndpoint, RdmaSender};
+pub use tcp_endpoint::{TcpEndpoint, TcpSender};

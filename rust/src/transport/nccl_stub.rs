@@ -1,0 +1,100 @@
+//! NCCL comparison stub — encodes the four limitations (§6 L1–L4) that
+//! rule NCCL out as OnePiece's transport, as *enforced restrictions*:
+//!
+//! - **L1** tensor-only payloads: `send` accepts `&[f32]`, nothing else;
+//! - **L2** fixed message sizes: the channel is created with a fixed
+//!   element count and rejects anything else;
+//! - **L3** GPU interference: every transfer charges busy time to a
+//!   simulated device-occupancy meter (collectives run on the device);
+//! - **L4** no message context: receivers get bare tensors — no header,
+//!   no origin, no app id (the caller must reconstruct context out of
+//!   band, which is exactly what OnePiece's message header avoids).
+//!
+//! The E5 bench uses this to regenerate the §6 comparison table.
+
+/// NCCL-stub error surface: each variant is one paper limitation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum NcclError {
+    /// L2: payload size differs from the channel's fixed element count.
+    WrongSize { expected: usize, got: usize },
+}
+
+impl std::fmt::Display for NcclError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            NcclError::WrongSize { expected, got } => write!(
+                f,
+                "NCCL channel is fixed-size: expected {expected} elements, got {got} (limitation L2)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for NcclError {}
+
+/// A fixed-size tensor channel in the style of an NCCL point-to-point.
+pub struct NcclStub {
+    elems: usize,
+    queue: std::collections::VecDeque<Vec<f32>>,
+    /// Simulated GPU-busy nanoseconds charged by transfers (L3): NCCL
+    /// kernels occupy SMs; modelled at ~1 ns per 8 elements.
+    pub gpu_busy_ns: u64,
+}
+
+impl NcclStub {
+    /// Create a channel carrying exactly `elems` f32 elements per message.
+    pub fn new(elems: usize) -> Self {
+        Self {
+            elems,
+            queue: std::collections::VecDeque::new(),
+            gpu_busy_ns: 0,
+        }
+    }
+
+    /// L1+L2: only f32 tensors, only the fixed size.
+    pub fn send(&mut self, tensor: &[f32]) -> Result<(), NcclError> {
+        if tensor.len() != self.elems {
+            return Err(NcclError::WrongSize { expected: self.elems, got: tensor.len() });
+        }
+        // L3: the transfer occupies the GPU.
+        self.gpu_busy_ns += (tensor.len() as u64).div_ceil(8);
+        self.queue.push_back(tensor.to_vec());
+        Ok(())
+    }
+
+    /// L4: receivers get a bare tensor — no header/context.
+    pub fn recv(&mut self) -> Option<Vec<f32>> {
+        self.queue.pop_front()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_size_enforced() {
+        let mut ch = NcclStub::new(16);
+        assert!(ch.send(&vec![0.0; 16]).is_ok());
+        assert_eq!(
+            ch.send(&vec![0.0; 8]),
+            Err(NcclError::WrongSize { expected: 16, got: 8 })
+        );
+    }
+
+    #[test]
+    fn transfers_charge_gpu_time() {
+        let mut ch = NcclStub::new(1024);
+        ch.send(&vec![0.0; 1024]).unwrap();
+        assert!(ch.gpu_busy_ns > 0, "L3: NCCL transfers occupy the GPU");
+    }
+
+    #[test]
+    fn no_message_context() {
+        let mut ch = NcclStub::new(4);
+        ch.send(&[1.0, 2.0, 3.0, 4.0]).unwrap();
+        let got = ch.recv().unwrap();
+        // All we get back is the bare tensor (L4).
+        assert_eq!(got, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+}

@@ -1,0 +1,284 @@
+//! RDMA message endpoint: one double-ring buffer per receiving instance
+//! (§6: "all senders share the same memory region, enabling the receiver
+//! to monitor only a single queue"), workflow messages as frames.
+//!
+//! The receiver's RS polls [`RdmaEndpoint::recv`] / `recv_timeout`;
+//! senders hold a cheap cloneable [`RdmaSender`]. Messages that fail the
+//! ring checksum, or pushes abandoned under contention after the retry
+//! budget, are *dropped* — §9: OnePiece does not retransmit.
+
+use crate::rdma::{Fabric, RegionId};
+use crate::ringbuf::{
+    create_ring, PopError, PushError, RingConfig, RingConsumer, RingProducer,
+};
+use crate::util::{Clock, CodecError, SystemClock};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use super::WorkflowMessage;
+
+/// Receiving side of an RDMA message queue (owns the ring consumer).
+pub struct RdmaEndpoint {
+    fabric: Fabric,
+    region_id: RegionId,
+    config: RingConfig,
+    consumer: RingConsumer,
+    clock: Arc<dyn Clock>,
+    corrupted: u64,
+}
+
+/// Sending handle (producer bound to one receiver's ring).
+pub struct RdmaSender {
+    producer: RingProducer,
+    /// Push retries on `Full`/`LostRace` before the message is dropped.
+    pub max_retries: usize,
+    /// Encode scratch buffer (reused across sends — zero alloc steady
+    /// state on the hot path).
+    scratch: Vec<u8>,
+    dropped: u64,
+}
+
+static NEXT_PRODUCER_ID: AtomicU64 = AtomicU64::new(1);
+
+impl RdmaEndpoint {
+    /// Create a new endpoint (ring) on `fabric`.
+    pub fn new(fabric: &Fabric, config: RingConfig) -> Self {
+        let (region_id, region) = create_ring(fabric, config);
+        Self {
+            fabric: fabric.clone(),
+            region_id,
+            config,
+            consumer: RingConsumer::new(region, config),
+            clock: Arc::new(SystemClock),
+            corrupted: 0,
+        }
+    }
+
+    /// Ring region id — senders connect with [`RdmaEndpoint::sender`] or a
+    /// raw QP.
+    pub fn region_id(&self) -> RegionId {
+        self.region_id
+    }
+
+    /// Create a sender handle for this endpoint usable from any node on
+    /// the same fabric (same Workflow Set).
+    pub fn sender(&self) -> RdmaSender {
+        let qp = self
+            .fabric
+            .connect(self.region_id)
+            .expect("endpoint region vanished");
+        let id = NEXT_PRODUCER_ID.fetch_add(1, Ordering::Relaxed);
+        RdmaSender {
+            producer: RingProducer::new(qp, self.config, self.clock.clone(), id),
+            max_retries: 64,
+            scratch: Vec::new(),
+            dropped: 0,
+        }
+    }
+
+    /// Build a sender knowing only the fabric and the ring's region id —
+    /// the ring geometry is read from the region header (this is how
+    /// ResultDeliver connects to downstream instances it learned about
+    /// from the NodeManager's routing table).
+    pub fn sender_for(fabric: &Fabric, region_id: RegionId) -> RdmaSender {
+        let config = crate::ringbuf::ring_config_of(fabric, region_id)
+            .expect("region is not a ring buffer");
+        let qp = fabric.connect(region_id).expect("region vanished");
+        let id = NEXT_PRODUCER_ID.fetch_add(1, Ordering::Relaxed);
+        RdmaSender {
+            producer: RingProducer::new(qp, config, Arc::new(SystemClock), id),
+            max_retries: 64,
+            scratch: Vec::new(),
+            dropped: 0,
+        }
+    }
+
+    /// Non-blocking receive. Corrupted frames are counted and skipped
+    /// (§6.1 checksum discard); decode failures likewise.
+    pub fn recv(&mut self) -> Option<WorkflowMessage> {
+        loop {
+            match self.consumer.pop()? {
+                Ok(bytes) => match WorkflowMessage::decode(&bytes) {
+                    Ok(m) => return Some(m),
+                    Err(CodecError(_)) => {
+                        self.corrupted += 1;
+                        continue;
+                    }
+                },
+                Err(PopError::Corrupted { .. }) => {
+                    self.corrupted += 1;
+                    continue;
+                }
+            }
+        }
+    }
+
+    /// Blocking receive with a wall-clock timeout; polls with a short
+    /// sleep (the RS's "monitor a designated memory region" loop, §4.3).
+    pub fn recv_timeout(&mut self, timeout: std::time::Duration) -> Option<WorkflowMessage> {
+        let deadline = std::time::Instant::now() + timeout;
+        loop {
+            if let Some(m) = self.recv() {
+                return Some(m);
+            }
+            if std::time::Instant::now() >= deadline {
+                return None;
+            }
+            std::thread::sleep(std::time::Duration::from_micros(50));
+        }
+    }
+
+    /// Frames dropped due to checksum/decode corruption.
+    pub fn corrupted_count(&self) -> u64 {
+        self.corrupted
+    }
+
+    /// Published-but-unconsumed backlog (approximate).
+    pub fn backlog(&self) -> u64 {
+        self.consumer.backlog()
+    }
+}
+
+impl RdmaSender {
+    /// Send a message. Returns `false` if dropped (ring persistently full
+    /// or lock contention beyond the retry budget) — the no-retransmission
+    /// policy of §9 pushes recovery to the application layer.
+    pub fn send(&mut self, msg: &WorkflowMessage) -> bool {
+        self.scratch.clear();
+        msg.encode_into(&mut self.scratch);
+        for _ in 0..=self.max_retries {
+            match self.producer.push(&self.scratch, None) {
+                Ok(_) => return true,
+                Err(PushError::Full) | Err(PushError::LostRace) => {
+                    std::thread::yield_now();
+                }
+                Err(_) => break,
+            }
+        }
+        self.dropped += 1;
+        false
+    }
+
+    /// Messages dropped by this sender.
+    pub fn dropped_count(&self) -> u64 {
+        self.dropped
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::{AppId, MessageHeader, Payload, StageId};
+    use crate::util::{NodeId, Uid};
+
+    fn msg(i: u32) -> WorkflowMessage {
+        WorkflowMessage {
+            header: MessageHeader {
+                uid: Uid(i as u128),
+                ts_ns: i as u64,
+                app: AppId(1),
+                stage: StageId(0),
+                origin: NodeId(9),
+            },
+            payload: Payload::Tensor {
+                shape: vec![2, 2],
+                data: vec![i as f32; 4],
+            },
+        }
+    }
+
+    #[test]
+    fn send_recv() {
+        let fabric = Fabric::ideal();
+        let mut ep = RdmaEndpoint::new(&fabric, RingConfig::default());
+        let mut tx = ep.sender();
+        assert!(tx.send(&msg(1)));
+        assert!(tx.send(&msg(2)));
+        assert_eq!(ep.recv().unwrap(), msg(1));
+        assert_eq!(ep.recv().unwrap(), msg(2));
+        assert!(ep.recv().is_none());
+    }
+
+    #[test]
+    fn multiple_senders_fifo_per_sender() {
+        let fabric = Fabric::ideal();
+        let mut ep = RdmaEndpoint::new(&fabric, RingConfig::default());
+        let mut a = ep.sender();
+        let mut b = ep.sender();
+        for i in 0..10 {
+            if i % 2 == 0 {
+                a.send(&msg(i));
+            } else {
+                b.send(&msg(i));
+            }
+        }
+        let mut got = Vec::new();
+        while let Some(m) = ep.recv() {
+            got.push(m.header.uid.0 as u32);
+        }
+        assert_eq!(got.len(), 10);
+        // Single-lock ring: global FIFO here (senders are sequential).
+        assert_eq!(got, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn concurrent_senders_all_delivered() {
+        let fabric = Fabric::ideal();
+        let mut ep = RdmaEndpoint::new(
+            &fabric,
+            RingConfig {
+                nslots: 512,
+                cap_bytes: 1 << 20,
+                ..Default::default()
+            },
+        );
+        let senders: Vec<_> = (0..4).map(|_| ep.sender()).collect();
+        let handles: Vec<_> = senders
+            .into_iter()
+            .enumerate()
+            .map(|(t, mut tx)| {
+                std::thread::spawn(move || {
+                    for i in 0..100u32 {
+                        assert!(tx.send(&msg(t as u32 * 1000 + i)));
+                    }
+                })
+            })
+            .collect();
+        let mut got = std::collections::HashSet::new();
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        while got.len() < 400 && std::time::Instant::now() < deadline {
+            if let Some(m) = ep.recv_timeout(std::time::Duration::from_millis(100)) {
+                got.insert(m.header.uid.0 as u32);
+            }
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(got.len(), 400);
+        assert_eq!(ep.corrupted_count(), 0);
+    }
+
+    #[test]
+    fn full_ring_drops_after_retries() {
+        let fabric = Fabric::ideal();
+        let mut ep = RdmaEndpoint::new(
+            &fabric,
+            RingConfig {
+                nslots: 2,
+                cap_bytes: 256,
+                ..Default::default()
+            },
+        );
+        let mut tx = ep.sender();
+        tx.max_retries = 2;
+        assert!(tx.send(&msg(0)));
+        assert!(tx.send(&msg(1)));
+        assert!(!tx.send(&msg(2)), "third message must drop: ring full");
+        assert_eq!(tx.dropped_count(), 1);
+        // Receiver still sees the two delivered messages (§9: loss is
+        // tolerated, not retransmitted).
+        assert!(ep.recv().is_some());
+        assert!(ep.recv().is_some());
+        assert!(ep.recv().is_none());
+    }
+}

@@ -1,0 +1,153 @@
+//! Baseline transport: real TCP loopback sockets through the kernel
+//! stack — what the paper replaces with one-sided RDMA ("to address the
+//! high data transfer latency associated with traditional TCP-based
+//! sockets in large-volume data scenarios", §1). Used by the E5
+//! RDMA-vs-TCP bench and as a reference implementation of the same
+//! endpoint API.
+//!
+//! Framing: 4-byte LE length prefix per message. A background acceptor
+//! thread drains connections into an mpsc channel.
+
+use super::WorkflowMessage;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc::{channel, Receiver, TryRecvError};
+use std::time::Duration;
+
+/// Receiving side: listens on an ephemeral loopback port.
+pub struct TcpEndpoint {
+    addr: std::net::SocketAddr,
+    rx: Receiver<WorkflowMessage>,
+    // Keeps the acceptor thread's listener alive implicitly (thread owns
+    // it); endpoint drop closes rx which ends delivery but the thread
+    // exits only on process end — acceptable for bench/demo use.
+}
+
+/// Sending handle: one TCP connection.
+pub struct TcpSender {
+    stream: TcpStream,
+    scratch: Vec<u8>,
+}
+
+impl TcpEndpoint {
+    /// Bind a loopback listener and start the acceptor thread.
+    pub fn new() -> std::io::Result<Self> {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?;
+        let (tx, rx) = channel();
+        std::thread::spawn(move || {
+            for conn in listener.incoming() {
+                let Ok(mut conn) = conn else { break };
+                let tx = tx.clone();
+                std::thread::spawn(move || {
+                    let mut len_buf = [0u8; 4];
+                    loop {
+                        if conn.read_exact(&mut len_buf).is_err() {
+                            return;
+                        }
+                        let len = u32::from_le_bytes(len_buf) as usize;
+                        let mut buf = vec![0u8; len];
+                        if conn.read_exact(&mut buf).is_err() {
+                            return;
+                        }
+                        let Ok(msg) = WorkflowMessage::decode(&buf) else {
+                            continue; // corrupted: drop, mirroring §9
+                        };
+                        if tx.send(msg).is_err() {
+                            return;
+                        }
+                    }
+                });
+            }
+        });
+        Ok(Self { addr, rx })
+    }
+
+    /// Address senders connect to.
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    /// Open a sender connection.
+    pub fn sender(&self) -> std::io::Result<TcpSender> {
+        let stream = TcpStream::connect(self.addr)?;
+        stream.set_nodelay(true)?;
+        Ok(TcpSender { stream, scratch: Vec::new() })
+    }
+
+    /// Non-blocking receive.
+    pub fn recv(&mut self) -> Option<WorkflowMessage> {
+        match self.rx.try_recv() {
+            Ok(m) => Some(m),
+            Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => None,
+        }
+    }
+
+    /// Blocking receive with timeout.
+    pub fn recv_timeout(&mut self, timeout: Duration) -> Option<WorkflowMessage> {
+        self.rx.recv_timeout(timeout).ok()
+    }
+}
+
+impl TcpSender {
+    /// Send one length-prefixed message; `false` on socket failure.
+    pub fn send(&mut self, msg: &WorkflowMessage) -> bool {
+        self.scratch.clear();
+        msg.encode_into(&mut self.scratch);
+        let len = (self.scratch.len() as u32).to_le_bytes();
+        self.stream.write_all(&len).is_ok() && self.stream.write_all(&self.scratch).is_ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::{AppId, MessageHeader, Payload, StageId};
+    use crate::util::{NodeId, Uid};
+
+    fn msg(i: u32) -> WorkflowMessage {
+        WorkflowMessage {
+            header: MessageHeader {
+                uid: Uid(i as u128),
+                ts_ns: 1,
+                app: AppId(0),
+                stage: StageId(0),
+                origin: NodeId(0),
+            },
+            payload: Payload::Bytes(vec![i as u8; 100]),
+        }
+    }
+
+    #[test]
+    fn tcp_roundtrip() {
+        let mut ep = TcpEndpoint::new().unwrap();
+        let mut tx = ep.sender().unwrap();
+        assert!(tx.send(&msg(1)));
+        assert!(tx.send(&msg(2)));
+        let a = ep.recv_timeout(Duration::from_secs(5)).unwrap();
+        let b = ep.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(a, msg(1));
+        assert_eq!(b, msg(2));
+    }
+
+    #[test]
+    fn multiple_connections() {
+        let mut ep = TcpEndpoint::new().unwrap();
+        let mut t1 = ep.sender().unwrap();
+        let mut t2 = ep.sender().unwrap();
+        assert!(t1.send(&msg(10)));
+        assert!(t2.send(&msg(20)));
+        let mut uids = vec![
+            ep.recv_timeout(Duration::from_secs(5)).unwrap().header.uid.0,
+            ep.recv_timeout(Duration::from_secs(5)).unwrap().header.uid.0,
+        ];
+        uids.sort();
+        assert_eq!(uids, vec![10, 20]);
+    }
+
+    #[test]
+    fn empty_recv_is_none() {
+        let mut ep = TcpEndpoint::new().unwrap();
+        assert!(ep.recv().is_none());
+    }
+}

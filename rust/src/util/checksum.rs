@@ -1,0 +1,152 @@
+//! CRC32 (IEEE 802.3 polynomial, reflected) — used by the ring buffer to
+//! detect the "delayed sender overwrote a live entry" corruption described
+//! in §6.1 of the paper.
+//!
+//! Implementation: **slicing-by-8** — eight 256-entry tables built in a
+//! `const fn`, processing 8 input bytes per step. ~8× the throughput of
+//! the classic bytewise loop, which dominated the ring-buffer hot path
+//! before this change (EXPERIMENTS.md §Perf: 47.7 µs → ~6 µs per 16 KiB
+//! frame on the test host). No external dependency.
+
+const fn build_tables() -> [[u32; 256]; 8] {
+    let mut t = [[0u32; 256]; 8];
+    // Table 0: classic bit-by-bit.
+    let mut i = 0;
+    while i < 256 {
+        let mut crc = i as u32;
+        let mut bit = 0;
+        while bit < 8 {
+            crc = if crc & 1 != 0 { (crc >> 1) ^ 0xEDB8_8320 } else { crc >> 1 };
+            bit += 1;
+        }
+        t[0][i] = crc;
+        i += 1;
+    }
+    // Tables 1..8: t[k][i] = one more byte of zeros folded in.
+    let mut k = 1;
+    while k < 8 {
+        let mut i = 0;
+        while i < 256 {
+            t[k][i] = (t[k - 1][i] >> 8) ^ t[0][(t[k - 1][i] & 0xFF) as usize];
+            i += 1;
+        }
+        k += 1;
+    }
+    t
+}
+
+static TABLES: [[u32; 256]; 8] = build_tables();
+
+/// CRC32 of `data` (IEEE, init all-ones, final xor all-ones).
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut crc = 0xFFFF_FFFFu32;
+    let mut chunks = data.chunks_exact(8);
+    for c in chunks.by_ref() {
+        let lo = u32::from_le_bytes(c[0..4].try_into().unwrap()) ^ crc;
+        let hi = u32::from_le_bytes(c[4..8].try_into().unwrap());
+        crc = TABLES[7][(lo & 0xFF) as usize]
+            ^ TABLES[6][((lo >> 8) & 0xFF) as usize]
+            ^ TABLES[5][((lo >> 16) & 0xFF) as usize]
+            ^ TABLES[4][((lo >> 24) & 0xFF) as usize]
+            ^ TABLES[3][(hi & 0xFF) as usize]
+            ^ TABLES[2][((hi >> 8) & 0xFF) as usize]
+            ^ TABLES[1][((hi >> 16) & 0xFF) as usize]
+            ^ TABLES[0][((hi >> 24) & 0xFF) as usize];
+    }
+    for &b in chunks.remainder() {
+        crc = (crc >> 8) ^ TABLES[0][((crc ^ b as u32) & 0xFF) as usize];
+    }
+    !crc
+}
+
+/// Protocol frame checksum: hardware CRC32C (SSE4.2, ~20 GB/s) when
+/// available, else the software IEEE CRC32. The ring-buffer protocol only
+/// needs *self-consistency within a process*, so the polynomial choice is
+/// free — feature detection is stable for the process lifetime.
+pub fn frame_checksum(data: &[u8]) -> u32 {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("sse4.2") {
+            // SAFETY: guarded by the feature check above.
+            return unsafe { crc32c_hw(data) };
+        }
+    }
+    crc32(data)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "sse4.2")]
+unsafe fn crc32c_hw(data: &[u8]) -> u32 {
+    use std::arch::x86_64::{_mm_crc32_u64, _mm_crc32_u8};
+    let mut crc = 0xFFFF_FFFFu64;
+    let mut chunks = data.chunks_exact(8);
+    for c in chunks.by_ref() {
+        crc = _mm_crc32_u64(crc, u64::from_le_bytes(c.try_into().unwrap()));
+    }
+    let mut crc = crc as u32;
+    for &b in chunks.remainder() {
+        crc = _mm_crc32_u8(crc, b);
+    }
+    !crc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Reference bytewise implementation for differential testing.
+    fn crc32_bytewise(data: &[u8]) -> u32 {
+        let mut crc = 0xFFFF_FFFFu32;
+        for &b in data {
+            crc = (crc >> 8) ^ TABLES[0][((crc ^ b as u32) & 0xFF) as usize];
+        }
+        !crc
+    }
+
+    #[test]
+    fn known_vectors() {
+        // Standard test vector for CRC-32/IEEE.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"a"), 0xE8B7_BE43);
+    }
+
+    #[test]
+    fn matches_bytewise_all_lengths() {
+        // Differential test across alignment/length boundaries.
+        let data: Vec<u8> = (0..1024u32).map(|i| (i.wrapping_mul(31) % 251) as u8).collect();
+        for len in 0..128 {
+            assert_eq!(crc32(&data[..len]), crc32_bytewise(&data[..len]), "len={len}");
+        }
+        assert_eq!(crc32(&data), crc32_bytewise(&data));
+    }
+
+    #[test]
+    fn sensitive_to_single_bit() {
+        let a = crc32(b"hello world");
+        let b = crc32(b"hello worle");
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn long_input() {
+        let data: Vec<u8> = (0..65536u32).map(|i| (i % 251) as u8).collect();
+        let c1 = crc32(&data);
+        let mut flipped = data.clone();
+        flipped[40000] ^= 0x80;
+        assert_ne!(c1, crc32(&flipped));
+    }
+
+    #[test]
+    fn frame_checksum_detects_corruption() {
+        let data: Vec<u8> = (0..4096u32).map(|i| (i % 256) as u8).collect();
+        let c1 = frame_checksum(&data);
+        assert_eq!(c1, frame_checksum(&data), "deterministic");
+        let mut flipped = data.clone();
+        flipped[1000] ^= 1;
+        assert_ne!(c1, frame_checksum(&flipped));
+        // Empty and odd lengths work.
+        assert_eq!(frame_checksum(b""), frame_checksum(b""));
+        assert_ne!(frame_checksum(b"abc"), frame_checksum(b"abd"));
+    }
+}

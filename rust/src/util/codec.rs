@@ -1,0 +1,171 @@
+//! Minimal little-endian wire codecs for the zero-dependency message
+//! format ([`crate::transport::WorkflowMessage`]). Hot-path friendly: the
+//! writer appends into a caller-owned `Vec<u8>` (reusable across sends)
+//! and the reader borrows without copying until payload extraction.
+
+use std::fmt;
+
+/// Decode error (truncated or malformed buffer).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CodecError(pub &'static str);
+
+impl fmt::Display for CodecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "codec error: {}", self.0)
+    }
+}
+
+impl std::error::Error for CodecError {}
+
+/// Append-only little-endian writer over a caller-owned buffer.
+pub struct BufWriter<'a> {
+    buf: &'a mut Vec<u8>,
+}
+
+impl<'a> BufWriter<'a> {
+    /// Wrap `buf`, appending after its current contents.
+    pub fn new(buf: &'a mut Vec<u8>) -> Self {
+        Self { buf }
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u128(&mut self, v: u128) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Length-prefixed byte slice.
+    pub fn put_bytes(&mut self, v: &[u8]) {
+        self.put_u32(v.len() as u32);
+        self.buf.extend_from_slice(v);
+    }
+
+    /// Raw bytes, no length prefix.
+    pub fn put_raw(&mut self, v: &[u8]) {
+        self.buf.extend_from_slice(v);
+    }
+
+    /// f32 slice as raw LE words, length-prefixed by element count.
+    pub fn put_f32s(&mut self, v: &[f32]) {
+        self.put_u32(v.len() as u32);
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+}
+
+/// Borrowing little-endian reader with position tracking.
+pub struct BufReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> BufReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    /// Bytes remaining.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], CodecError> {
+        if self.remaining() < n {
+            return Err(CodecError("truncated buffer"));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn get_u8(&mut self) -> Result<u8, CodecError> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn get_u32(&mut self) -> Result<u32, CodecError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn get_u64(&mut self) -> Result<u64, CodecError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn get_u128(&mut self) -> Result<u128, CodecError> {
+        Ok(u128::from_le_bytes(self.take(16)?.try_into().unwrap()))
+    }
+
+    /// Length-prefixed byte slice (borrowed).
+    pub fn get_bytes(&mut self) -> Result<&'a [u8], CodecError> {
+        let n = self.get_u32()? as usize;
+        self.take(n)
+    }
+
+    /// f32 slice written by [`BufWriter::put_f32s`].
+    pub fn get_f32s(&mut self) -> Result<Vec<f32>, CodecError> {
+        let n = self.get_u32()? as usize;
+        let raw = self.take(n.checked_mul(4).ok_or(CodecError("f32 len overflow"))?)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_scalars() {
+        let mut buf = Vec::new();
+        let mut w = BufWriter::new(&mut buf);
+        w.put_u8(7);
+        w.put_u32(0xDEAD_BEEF);
+        w.put_u64(u64::MAX - 1);
+        w.put_u128(u128::MAX / 3);
+        let mut r = BufReader::new(&buf);
+        assert_eq!(r.get_u8().unwrap(), 7);
+        assert_eq!(r.get_u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.get_u64().unwrap(), u64::MAX - 1);
+        assert_eq!(r.get_u128().unwrap(), u128::MAX / 3);
+        assert_eq!(r.remaining(), 0);
+    }
+
+    #[test]
+    fn roundtrip_bytes_and_floats() {
+        let mut buf = Vec::new();
+        let mut w = BufWriter::new(&mut buf);
+        w.put_bytes(b"payload");
+        w.put_f32s(&[1.5, -2.25, 0.0, f32::MIN_POSITIVE]);
+        let mut r = BufReader::new(&buf);
+        assert_eq!(r.get_bytes().unwrap(), b"payload");
+        assert_eq!(r.get_f32s().unwrap(), vec![1.5, -2.25, 0.0, f32::MIN_POSITIVE]);
+    }
+
+    #[test]
+    fn truncated_errors() {
+        let mut buf = Vec::new();
+        BufWriter::new(&mut buf).put_u64(5);
+        let mut r = BufReader::new(&buf[..4]);
+        assert!(r.get_u64().is_err());
+    }
+
+    #[test]
+    fn empty_bytes() {
+        let mut buf = Vec::new();
+        BufWriter::new(&mut buf).put_bytes(b"");
+        let mut r = BufReader::new(&buf);
+        assert_eq!(r.get_bytes().unwrap(), b"");
+    }
+}

@@ -1,0 +1,16 @@
+//! Small shared utilities: request UIDs, monotonic time, CRC32, and
+//! little-endian buffer codecs used by the zero-dependency wire format.
+
+mod checksum;
+mod codec;
+mod id;
+mod json;
+mod rng;
+mod time;
+
+pub use checksum::{crc32, frame_checksum};
+pub use codec::{BufReader, BufWriter, CodecError};
+pub use id::{NodeId, Uid};
+pub use json::{Json, JsonError};
+pub use rng::Rng;
+pub use time::{now_ns, Clock, ManualClock, SystemClock};

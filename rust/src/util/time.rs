@@ -1,0 +1,93 @@
+//! Time sources. Production code uses [`SystemClock`]; deterministic tests
+//! and the discrete-event resource simulator use [`ManualClock`].
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+/// Nanoseconds since the Unix epoch (wall clock — used for message
+/// timestamps in headers, matching the paper's proxy-stamped timestamp).
+pub fn now_ns() -> u128 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .expect("clock before epoch")
+        .as_nanos()
+}
+
+/// Abstract monotonic clock, injectable for deterministic tests.
+pub trait Clock: Send + Sync + 'static {
+    /// Monotonic nanoseconds.
+    fn now_ns(&self) -> u64;
+}
+
+/// Real monotonic clock.
+#[derive(Clone, Default)]
+pub struct SystemClock;
+
+impl Clock for SystemClock {
+    fn now_ns(&self) -> u64 {
+        use std::time::Instant;
+        use std::sync::OnceLock;
+        static EPOCH: OnceLock<Instant> = OnceLock::new();
+        let epoch = *EPOCH.get_or_init(Instant::now);
+        Instant::now().duration_since(epoch).as_nanos() as u64
+    }
+}
+
+/// Hand-advanced clock for deterministic protocol tests.
+#[derive(Clone, Default)]
+pub struct ManualClock(Arc<AtomicU64>);
+
+impl ManualClock {
+    /// New clock starting at t=0.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Advance by `ns` nanoseconds.
+    pub fn advance(&self, ns: u64) {
+        self.0.fetch_add(ns, Ordering::SeqCst);
+    }
+
+    /// Set the absolute time.
+    pub fn set(&self, ns: u64) {
+        self.0.store(ns, Ordering::SeqCst);
+    }
+}
+
+impl Clock for ManualClock {
+    fn now_ns(&self) -> u64 {
+        self.0.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn system_clock_monotonic() {
+        let c = SystemClock;
+        let a = c.now_ns();
+        let b = c.now_ns();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn manual_clock_advances() {
+        let c = ManualClock::new();
+        assert_eq!(c.now_ns(), 0);
+        c.advance(1_000);
+        assert_eq!(c.now_ns(), 1_000);
+        c.set(5);
+        assert_eq!(c.now_ns(), 5);
+    }
+
+    #[test]
+    fn wall_clock_sane() {
+        // After 2020, before 2100.
+        let ns = now_ns();
+        assert!(ns > 1_577_836_800_000_000_000);
+        assert!(ns < 4_102_444_800_000_000_000);
+    }
+}

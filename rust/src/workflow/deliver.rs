@@ -1,0 +1,213 @@
+//! ResultDeliver (§4.5): routes stage outputs to the next hop.
+//!
+//! "RD obtains routing information from the TaskManager ... Since a
+//! single instance may participate in multiple workflows, RD uses the
+//! application identity included in the request to determine the
+//! appropriate next hop. When multiple destination instances are
+//! available, RD uses a round-robin mechanism."
+
+use crate::db::MemDb;
+use crate::rdma::{Fabric, RegionId};
+use crate::transport::{RdmaEndpoint, WorkflowMessage};
+use crate::util::Uid;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// A delivery destination.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum NextHop {
+    /// Another instance's ring-buffer region.
+    Instance(RegionId),
+    /// Final stage: persist into the database layer.
+    Database,
+}
+
+/// Result router for one instance. Routes are **per application** — a
+/// shared instance (§8.3) serves several workflows whose next stages
+/// differ, so RD keys the hop list by the message's app id.
+pub struct ResultDeliver {
+    fabric: Fabric,
+    routes: HashMap<crate::transport::AppId, Vec<NextHop>>,
+    senders: HashMap<RegionId, crate::transport::RdmaSender>,
+    dbs: Vec<Arc<MemDb>>,
+    rr: HashMap<crate::transport::AppId, usize>,
+    delivered: u64,
+    dropped: u64,
+}
+
+impl ResultDeliver {
+    pub fn new(fabric: Fabric, dbs: Vec<Arc<MemDb>>) -> Self {
+        Self {
+            fabric,
+            routes: HashMap::new(),
+            senders: HashMap::new(),
+            dbs,
+            rr: HashMap::new(),
+            delivered: 0,
+            dropped: 0,
+        }
+    }
+
+    /// Install per-app routing from a (re)assignment. Senders for
+    /// already-known regions are kept (connection reuse).
+    pub fn set_routes(&mut self, routes: Vec<(crate::transport::AppId, Vec<NextHop>)>) {
+        for (_, hops) in &routes {
+            for hop in hops {
+                if let NextHop::Instance(rid) = hop {
+                    self.senders.entry(*rid).or_insert_with(|| {
+                        // Producers only need the region id; geometry is
+                        // read from the ring header.
+                        RdmaEndpoint::sender_for(&self.fabric, *rid)
+                    });
+                }
+            }
+        }
+        self.routes = routes.into_iter().collect();
+        self.rr.clear();
+    }
+
+    /// Hop list for an app (tests).
+    pub fn hops(&self, app: crate::transport::AppId) -> Option<&[NextHop]> {
+        self.routes.get(&app).map(Vec::as_slice)
+    }
+
+    /// Deliver one result message. Round-robin across the app's instance
+    /// hops; DB hops write to every replica ("data is automatically
+    /// replicated across multiple database instances", §3.4).
+    pub fn deliver(&mut self, msg: &WorkflowMessage) -> bool {
+        let app = msg.header.app;
+        let Some(hops) = self.routes.get(&app) else {
+            self.dropped += 1;
+            return false;
+        };
+        if hops.is_empty() {
+            self.dropped += 1;
+            return false;
+        }
+        let rr = self.rr.entry(app).or_insert(0);
+        let hop = hops[*rr % hops.len()].clone();
+        *rr = rr.wrapping_add(1);
+        let ok = match hop {
+            NextHop::Instance(rid) => {
+                let tx = self.senders.get_mut(&rid).expect("sender built in set_routes");
+                tx.send(msg)
+            }
+            NextHop::Database => {
+                self.store(msg.header.uid, msg.encode());
+                true
+            }
+        };
+        if ok {
+            self.delivered += 1;
+        } else {
+            self.dropped += 1;
+        }
+        ok
+    }
+
+    fn store(&self, uid: Uid, bytes: Vec<u8>) {
+        for db in &self.dbs {
+            db.put(uid, bytes.clone());
+        }
+    }
+
+    /// (delivered, dropped) counters.
+    pub fn counts(&self) -> (u64, u64) {
+        (self.delivered, self.dropped)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ringbuf::RingConfig;
+    use crate::transport::{AppId, MessageHeader, Payload, StageId};
+    use crate::util::{ManualClock, NodeId};
+
+    fn msg(i: u32) -> WorkflowMessage {
+        WorkflowMessage {
+            header: MessageHeader {
+                uid: Uid(i as u128),
+                ts_ns: 0,
+                app: AppId(1),
+                stage: StageId(1),
+                origin: NodeId(0),
+            },
+            payload: Payload::Bytes(vec![i as u8; 16]),
+        }
+    }
+
+    #[test]
+    fn round_robin_across_instances() {
+        let fabric = Fabric::ideal();
+        let mut ep1 = RdmaEndpoint::new(&fabric, RingConfig::default());
+        let mut ep2 = RdmaEndpoint::new(&fabric, RingConfig::default());
+        let mut rd = ResultDeliver::new(fabric.clone(), vec![]);
+        rd.set_routes(vec![(
+            AppId(1),
+            vec![
+                NextHop::Instance(ep1.region_id()),
+                NextHop::Instance(ep2.region_id()),
+            ],
+        )]);
+        for i in 0..6 {
+            assert!(rd.deliver(&msg(i)));
+        }
+        let mut n1 = 0;
+        while ep1.recv().is_some() {
+            n1 += 1;
+        }
+        let mut n2 = 0;
+        while ep2.recv().is_some() {
+            n2 += 1;
+        }
+        assert_eq!((n1, n2), (3, 3), "round robin must balance");
+    }
+
+    #[test]
+    fn database_hop_replicates() {
+        let fabric = Fabric::ideal();
+        let clock = Arc::new(ManualClock::new());
+        let dbs: Vec<Arc<MemDb>> = (0..2)
+            .map(|_| Arc::new(MemDb::new(clock.clone(), u64::MAX)))
+            .collect();
+        let mut rd = ResultDeliver::new(fabric, dbs.clone());
+        rd.set_routes(vec![(AppId(1), vec![NextHop::Database])]);
+        let m = msg(9);
+        assert!(rd.deliver(&m));
+        for db in &dbs {
+            let stored = db.fetch(m.header.uid).unwrap();
+            assert_eq!(WorkflowMessage::decode(&stored).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn no_hops_drops() {
+        let fabric = Fabric::ideal();
+        let mut rd = ResultDeliver::new(fabric, vec![]);
+        assert!(!rd.deliver(&msg(0)));
+        assert_eq!(rd.counts(), (0, 1));
+    }
+
+    #[test]
+    fn per_app_routing_shared_instance() {
+        // An instance shared by two workflows (§8.3) routes by app id.
+        let fabric = Fabric::ideal();
+        let mut ep_a = RdmaEndpoint::new(&fabric, RingConfig::default());
+        let clock = Arc::new(ManualClock::new());
+        let db = Arc::new(MemDb::new(clock, u64::MAX));
+        let mut rd = ResultDeliver::new(fabric.clone(), vec![db.clone()]);
+        rd.set_routes(vec![
+            (AppId(1), vec![NextHop::Instance(ep_a.region_id())]),
+            (AppId(2), vec![NextHop::Database]),
+        ]);
+        let mut m1 = msg(1);
+        m1.header.app = AppId(1);
+        let mut m2 = msg(2);
+        m2.header.app = AppId(2);
+        assert!(rd.deliver(&m1));
+        assert!(rd.deliver(&m2));
+        assert_eq!(ep_a.recv().unwrap().header.uid, m1.header.uid);
+        assert!(db.fetch(m2.header.uid).is_some());
+    }
+}

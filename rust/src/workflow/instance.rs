@@ -1,0 +1,360 @@
+//! The workflow instance runtime: wires TaskManager + RS + TaskWorkers +
+//! RD into a thread group around one RDMA ring endpoint.
+//!
+//! Thread layout per instance:
+//! - **control** (TaskManager): polls the [`ControlPlane`] for assignment
+//!   changes, reconfigures the queue / executor binding / RD hops,
+//!   reports windowed utilization.
+//! - **rs** (RequestScheduler): drains the ring buffer into the
+//!   [`SchedQueue`] per the active mode.
+//! - **worker-i** (TaskWorkers): fetch → execute app logic → deliver.
+//!
+//! In Collaboration Mode every worker executes the broadcast request (the
+//! TP/PP ranks of §4.4) but only worker 0 delivers the aggregated result
+//! (§4.5: "partial results from all workers are aggregated into a single
+//! consolidated output before delivery").
+
+use super::{Assignment, ControlPlane, ResultDeliver, SchedQueue, StageRole};
+use crate::config::SchedMode;
+use crate::db::MemDb;
+use crate::metrics::UtilizationWindow;
+use crate::rdma::{Fabric, RegionId};
+use crate::ringbuf::RingConfig;
+use crate::runtime::{ExecutorPool, StageExecutor};
+use crate::transport::{RdmaEndpoint, StageId, WorkflowMessage};
+use crate::util::{Clock, NodeId};
+use crate::workflow::AppLogic;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::Duration;
+
+/// Instance construction parameters.
+pub struct InstanceConfig {
+    pub node: NodeId,
+    pub ring: RingConfig,
+    /// TaskManager poll period.
+    pub control_poll: Duration,
+    /// Utilization window for NM reporting.
+    pub util_window: Duration,
+    /// Max workers this instance can spin up (threads are created up
+    /// front; the assignment's `workers` count activates a subset).
+    pub max_workers: usize,
+}
+
+impl Default for InstanceConfig {
+    fn default() -> Self {
+        Self {
+            node: NodeId(0),
+            ring: RingConfig::default(),
+            control_poll: Duration::from_millis(5),
+            util_window: Duration::from_millis(500),
+            max_workers: 4,
+        }
+    }
+}
+
+/// Live instance statistics.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct InstanceStats {
+    pub processed: u64,
+    pub delivered: u64,
+    pub dropped: u64,
+    pub errors: u64,
+}
+
+struct Shared {
+    node: NodeId,
+    queue: Arc<SchedQueue>,
+    role: RwLock<Option<StageRole>>,
+    version: AtomicU64,
+    executor: RwLock<Option<StageExecutor>>,
+    deliver: Mutex<ResultDeliver>,
+    util: UtilizationWindow,
+    shutdown: AtomicBool,
+    processed: AtomicU64,
+    errors: AtomicU64,
+}
+
+/// A running workflow instance.
+pub struct Instance {
+    shared: Arc<Shared>,
+    region_id: RegionId,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Instance {
+    /// Spawn the instance's thread group.
+    #[allow(clippy::too_many_arguments)]
+    pub fn spawn(
+        cfg: InstanceConfig,
+        fabric: &Fabric,
+        control: Arc<dyn ControlPlane>,
+        logic: Arc<dyn AppLogic>,
+        pool: ExecutorPool,
+        dbs: Vec<Arc<MemDb>>,
+        clock: Arc<dyn Clock>,
+    ) -> Self {
+        let mut endpoint = RdmaEndpoint::new(fabric, cfg.ring);
+        let region_id = endpoint.region_id();
+        let queue = SchedQueue::new(SchedMode::Individual, cfg.max_workers);
+        let shared = Arc::new(Shared {
+            node: cfg.node,
+            queue: queue.clone(),
+            role: RwLock::new(None),
+            version: AtomicU64::new(u64::MAX),
+            executor: RwLock::new(None),
+            deliver: Mutex::new(ResultDeliver::new(fabric.clone(), dbs)),
+            util: UtilizationWindow::new(clock, cfg.util_window.as_nanos() as u64),
+            shutdown: AtomicBool::new(false),
+            processed: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+        });
+
+        let mut threads = Vec::new();
+
+        // --- control thread (TaskManager) ---
+        {
+            let shared = shared.clone();
+            let pool = pool.clone();
+            let poll = cfg.control_poll;
+            threads.push(std::thread::spawn(move || {
+                while !shared.shutdown.load(Ordering::SeqCst) {
+                    let a: Assignment = control.get_assignment(shared.node);
+                    if a.version != shared.version.load(Ordering::SeqCst) {
+                        Self::apply_assignment(&shared, &pool, &a);
+                        shared.version.store(a.version, Ordering::SeqCst);
+                    }
+                    control.report_utilization(shared.node, shared.util.value());
+                    std::thread::sleep(poll);
+                }
+            }));
+        }
+
+        // --- RS thread ---
+        {
+            let shared = shared.clone();
+            threads.push(std::thread::spawn(move || {
+                while !shared.shutdown.load(Ordering::SeqCst) {
+                    match endpoint.recv() {
+                        Some(msg) => shared.queue.dispatch(msg),
+                        None => std::thread::sleep(Duration::from_micros(100)),
+                    }
+                }
+            }));
+        }
+
+        // --- worker threads ---
+        for widx in 0..cfg.max_workers {
+            let shared = shared.clone();
+            let logic = logic.clone();
+            threads.push(std::thread::spawn(move || {
+                Self::worker_loop(&shared, &*logic, widx);
+            }));
+        }
+
+        Self { shared, region_id, threads }
+    }
+
+    fn apply_assignment(shared: &Arc<Shared>, pool: &ExecutorPool, a: &Assignment) {
+        match &a.role {
+            Some(role) => {
+                let exec = pool.get(&role.stage_name).cloned();
+                *shared.executor.write().unwrap() = exec;
+                shared.queue.reconfigure(role.mode, role.workers);
+                shared
+                    .deliver
+                    .lock()
+                    .unwrap()
+                    .set_routes(role.routes.clone());
+                *shared.role.write().unwrap() = Some(role.clone());
+            }
+            None => {
+                // Parked in the idle pool (§8.2): no executor, no hops.
+                *shared.executor.write().unwrap() = None;
+                *shared.role.write().unwrap() = None;
+            }
+        }
+    }
+
+    fn worker_loop(shared: &Arc<Shared>, logic: &dyn AppLogic, widx: usize) {
+        loop {
+            if shared.shutdown.load(Ordering::SeqCst) {
+                return;
+            }
+            let Some(msg) = shared.queue.fetch(widx, Duration::from_millis(20)) else {
+                continue;
+            };
+            let (role, exec) = {
+                let r = shared.role.read().unwrap();
+                let e = shared.executor.read().unwrap();
+                match (r.clone(), e.clone()) {
+                    (Some(r), Some(e)) => (r, e),
+                    _ => continue, // reassigned to idle mid-flight: drop
+                }
+            };
+            shared.util.busy();
+            let result = logic.execute(&role.stage_name, &exec, &msg);
+            shared.util.idle();
+            match result {
+                Ok(payload) => {
+                    shared.processed.fetch_add(1, Ordering::Relaxed);
+                    // CM: all workers computed (TP ranks); rank 0 delivers
+                    // the aggregated output.
+                    if role.mode == SchedMode::Collaboration && widx != 0 {
+                        continue;
+                    }
+                    let out = WorkflowMessage {
+                        header: crate::transport::MessageHeader {
+                            stage: StageId(role.stage_index + 1),
+                            ..msg.header
+                        },
+                        payload,
+                    };
+                    shared.deliver.lock().unwrap().deliver(&out);
+                }
+                Err(_) => {
+                    shared.errors.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+    }
+
+    /// The instance's inbox ring region (senders route here).
+    pub fn region_id(&self) -> RegionId {
+        self.region_id
+    }
+
+    /// Node id.
+    pub fn node(&self) -> NodeId {
+        self.shared.node
+    }
+
+    /// Windowed utilization (what the TaskManager reports to the NM).
+    pub fn utilization(&self) -> f64 {
+        self.shared.util.value()
+    }
+
+    /// Stats snapshot.
+    pub fn stats(&self) -> InstanceStats {
+        let (delivered, dropped) = self.shared.deliver.lock().unwrap().counts();
+        InstanceStats {
+            processed: self.shared.processed.load(Ordering::Relaxed),
+            delivered,
+            dropped,
+            errors: self.shared.errors.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Stop all threads and join.
+    pub fn shutdown(mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.queue.close();
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::{AppId, MessageHeader, Payload};
+    use crate::util::{SystemClock, Uid};
+    use crate::workflow::{EchoLogic, NextHop};
+
+    /// Static control plane for tests.
+    struct FixedControl(Assignment);
+
+    impl ControlPlane for FixedControl {
+        fn get_assignment(&self, _node: NodeId) -> Assignment {
+            self.0.clone()
+        }
+        fn report_utilization(&self, _node: NodeId, _util: f64) {}
+    }
+
+    fn mk_msg(i: u32, stage: u32) -> WorkflowMessage {
+        WorkflowMessage {
+            header: MessageHeader {
+                uid: Uid(i as u128),
+                ts_ns: 0,
+                app: AppId(1),
+                stage: StageId(stage),
+                origin: NodeId(0),
+            },
+            payload: Payload::Bytes(vec![i as u8; 8]),
+        }
+    }
+
+    #[test]
+    fn instance_processes_and_stores() {
+        let fabric = Fabric::ideal();
+        let clock: Arc<dyn Clock> = Arc::new(SystemClock);
+        let db = Arc::new(MemDb::new(clock.clone(), u64::MAX));
+        let mut pool = ExecutorPool::new();
+        pool.insert("echo", StageExecutor::Simulated { busy: Duration::from_micros(50) });
+
+        let assignment = Assignment {
+            version: 1,
+            role: Some(StageRole {
+                app: AppId(1),
+                stage_index: 0,
+                stage_name: "echo".into(),
+                mode: SchedMode::Individual,
+                workers: 2,
+                routes: vec![(AppId(1), vec![NextHop::Database])],
+            }),
+        };
+        let inst = Instance::spawn(
+            InstanceConfig { node: NodeId(1), ..Default::default() },
+            &fabric,
+            Arc::new(FixedControl(assignment)),
+            Arc::new(EchoLogic),
+            pool,
+            vec![db.clone()],
+            clock,
+        );
+
+        // Wait for the control thread to apply the assignment, then feed
+        // requests through the ring.
+        std::thread::sleep(Duration::from_millis(50));
+        let mut tx = crate::transport::RdmaEndpoint::sender_for(&fabric, inst.region_id());
+        for i in 0..5 {
+            assert!(tx.send(&mk_msg(i, 0)));
+        }
+
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while db.len() < 5 && std::time::Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert_eq!(db.len(), 5, "all results stored");
+        // Delivered messages carry the advanced stage id.
+        let stored = db.fetch(Uid(0)).unwrap();
+        let m = WorkflowMessage::decode(&stored).unwrap();
+        assert_eq!(m.header.stage, StageId(1));
+        let stats = inst.stats();
+        assert_eq!(stats.processed, 5);
+        assert_eq!(stats.errors, 0);
+        inst.shutdown();
+    }
+
+    #[test]
+    fn idle_instance_ignores_traffic() {
+        let fabric = Fabric::ideal();
+        let clock: Arc<dyn Clock> = Arc::new(SystemClock);
+        let inst = Instance::spawn(
+            InstanceConfig { node: NodeId(2), ..Default::default() },
+            &fabric,
+            Arc::new(FixedControl(Assignment { version: 1, role: None })),
+            Arc::new(EchoLogic),
+            ExecutorPool::new(),
+            vec![],
+            clock,
+        );
+        std::thread::sleep(Duration::from_millis(30));
+        let mut tx = crate::transport::RdmaEndpoint::sender_for(&fabric, inst.region_id());
+        tx.send(&mk_msg(1, 0));
+        std::thread::sleep(Duration::from_millis(50));
+        assert_eq!(inst.stats().processed, 0);
+        inst.shutdown();
+    }
+}

@@ -1,0 +1,211 @@
+//! Application logic (§4.4): "the specific execution behavior is defined
+//! by user-provided code. When a request is received, the TaskWorker
+//! invokes the corresponding user function based on an application
+//! identity attached to the request data."
+//!
+//! [`I2vLogic`] is the Wan2.1-style image-to-video workflow over the four
+//! PJRT stage executables; [`EchoLogic`] is a trivial logic for transport
+//! and scheduling tests.
+
+use crate::runtime::{StageExecutor, TensorValue};
+use crate::transport::{Payload, WorkflowMessage};
+use anyhow::{anyhow, Result};
+
+/// User-provided stage logic, dispatched by stage name.
+pub trait AppLogic: Send + Sync {
+    /// Execute one request at one stage; returns the next payload.
+    fn execute(
+        &self,
+        stage_name: &str,
+        exec: &StageExecutor,
+        msg: &WorkflowMessage,
+    ) -> Result<Payload>;
+}
+
+/// Pass-through logic: runs the executor (for utilization realism) and
+/// forwards the payload unchanged.
+pub struct EchoLogic;
+
+impl AppLogic for EchoLogic {
+    fn execute(
+        &self,
+        _stage_name: &str,
+        exec: &StageExecutor,
+        msg: &WorkflowMessage,
+    ) -> Result<Payload> {
+        exec.run(&[])?;
+        Ok(msg.payload.clone())
+    }
+}
+
+/// The image-to-video workflow (§2.4): text+image in, video out.
+///
+/// Stage payload contract (named tensors):
+/// - entrance input: `tokens` `[SEQ_TEXT]` (f32-encoded ints) and
+///   `image` `[H, W, C]`
+/// - after `text_encoder`: + `ctx` `[SEQ_TEXT, D]`
+/// - after `vae_encode`: + `img_lat` `[IMG_TOKENS, D_LAT]` (image dropped)
+/// - after `diffusion`: `latent` `[VID_TOKENS, D_LAT]` (+ nothing else)
+/// - after `vae_decode`: `video` `[F, H, W, C]`
+pub struct I2vLogic {
+    /// Diffusion Euler steps per request (the per-request hot loop).
+    pub steps: usize,
+    /// Latent geometry (from the artifact manifest).
+    pub vid_tokens: usize,
+    pub d_latent: usize,
+}
+
+impl I2vLogic {
+    pub fn new(steps: usize, vid_tokens: usize, d_latent: usize) -> Self {
+        Self { steps, vid_tokens, d_latent }
+    }
+
+    fn find<'a>(payload: &'a Payload, name: &str) -> Result<(&'a [u32], &'a [f32])> {
+        match payload {
+            Payload::Tensors(ts) => ts
+                .iter()
+                .find(|(n, _, _)| n == name)
+                .map(|(_, s, d)| (s.as_slice(), d.as_slice()))
+                .ok_or_else(|| anyhow!("missing tensor {name}")),
+            _ => Err(anyhow!("expected named-tensor payload")),
+        }
+    }
+
+    /// Deterministic per-request initial noise (seeded by the UID) so
+    /// results are reproducible and workers never need an RNG service.
+    fn initial_noise(&self, uid: u128) -> Vec<f32> {
+        let mut rng = crate::util::Rng::new((uid as u64) ^ ((uid >> 64) as u64));
+        (0..self.vid_tokens * self.d_latent)
+            .map(|_| rng.gaussian() as f32)
+            .collect()
+    }
+}
+
+impl AppLogic for I2vLogic {
+    fn execute(
+        &self,
+        stage_name: &str,
+        exec: &StageExecutor,
+        msg: &WorkflowMessage,
+    ) -> Result<Payload> {
+        // Simulated executors skip tensor plumbing (resource-scale runs).
+        if let StageExecutor::Simulated { .. } = exec {
+            exec.run(&[])?;
+            return Ok(msg.payload.clone());
+        }
+        match stage_name {
+            "text_encoder" => {
+                let (shape, tok_f) = Self::find(&msg.payload, "tokens")?;
+                let (img_shape, img) = Self::find(&msg.payload, "image")?;
+                let tokens: Vec<i32> = tok_f.iter().map(|&x| x as i32).collect();
+                let ctx = exec.run(&[TensorValue::I32(tokens)])?;
+                Ok(Payload::Tensors(vec![
+                    ("ctx".into(), vec![shape[0], ctx.len() as u32 / shape[0]], ctx),
+                    ("image".into(), img_shape.to_vec(), img.to_vec()),
+                ]))
+            }
+            "vae_encode" => {
+                let (_, img) = Self::find(&msg.payload, "image")?;
+                let (ctx_shape, ctx) = Self::find(&msg.payload, "ctx")?;
+                let lat = exec.run(&[TensorValue::F32(img.to_vec())])?;
+                let d = self.d_latent as u32;
+                Ok(Payload::Tensors(vec![
+                    ("ctx".into(), ctx_shape.to_vec(), ctx.to_vec()),
+                    ("img_lat".into(), vec![lat.len() as u32 / d, d], lat),
+                ]))
+            }
+            "diffusion" => {
+                let (_, ctx) = Self::find(&msg.payload, "ctx")?;
+                let (_, img_lat) = Self::find(&msg.payload, "img_lat")?;
+                let mut x = self.initial_noise(msg.header.uid.0);
+                let dt = 1.0 / self.steps as f32;
+                // Euler loop stays in rust: one executable call per step,
+                // matching the paper's per-step streaming through the
+                // diffusion stage.
+                for i in 0..self.steps {
+                    let t = 1000.0 * (1.0 - i as f32 / self.steps as f32);
+                    x = exec.run(&[
+                        TensorValue::F32(x),
+                        TensorValue::F32(vec![t]),
+                        TensorValue::F32(vec![dt]),
+                        TensorValue::F32(ctx.to_vec()),
+                        TensorValue::F32(img_lat.to_vec()),
+                    ])?;
+                }
+                Ok(Payload::Tensors(vec![(
+                    "latent".into(),
+                    vec![self.vid_tokens as u32, self.d_latent as u32],
+                    x,
+                )]))
+            }
+            "vae_decode" => {
+                let (_, latent) = Self::find(&msg.payload, "latent")?;
+                let video = exec.run(&[TensorValue::F32(latent.to_vec())])?;
+                Ok(Payload::Tensors(vec![(
+                    "video".into(),
+                    vec![video.len() as u32],
+                    video,
+                )]))
+            }
+            other => Err(anyhow!("i2v logic has no stage {other}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::{AppId, MessageHeader, StageId};
+    use crate::util::{NodeId, Uid};
+    use std::time::Duration;
+
+    fn msg(payload: Payload) -> WorkflowMessage {
+        WorkflowMessage {
+            header: MessageHeader {
+                uid: Uid(42),
+                ts_ns: 0,
+                app: AppId(1),
+                stage: StageId(0),
+                origin: NodeId(0),
+            },
+            payload,
+        }
+    }
+
+    #[test]
+    fn echo_passes_through() {
+        let logic = EchoLogic;
+        let m = msg(Payload::Bytes(vec![1, 2, 3]));
+        let exec = StageExecutor::Simulated { busy: Duration::ZERO };
+        assert_eq!(logic.execute("any", &exec, &m).unwrap(), m.payload);
+    }
+
+    #[test]
+    fn i2v_noise_is_deterministic_per_uid() {
+        let logic = I2vLogic::new(4, 8, 2);
+        assert_eq!(logic.initial_noise(7), logic.initial_noise(7));
+        assert_ne!(logic.initial_noise(7), logic.initial_noise(8));
+    }
+
+    #[test]
+    fn i2v_missing_tensor_is_error() {
+        let logic = I2vLogic::new(4, 8, 2);
+        let exec = StageExecutor::Simulated { busy: Duration::ZERO };
+        // Simulated executors pass through, so use a Pjrt-shaped check via
+        // the find() contract directly.
+        let m = msg(Payload::Bytes(vec![]));
+        assert!(I2vLogic::find(&m.payload, "tokens").is_err());
+        // Simulated executor still succeeds (pass-through).
+        assert!(logic.execute("text_encoder", &exec, &m).is_ok());
+    }
+
+    #[test]
+    fn i2v_unknown_stage_rejected() {
+        let _logic = I2vLogic::new(1, 1, 1);
+        // Needs a real executor shape to hit the match arm; simulated
+        // short-circuits, so check via a Pjrt variant is impossible here —
+        // instead verify find() of the dispatch path:
+        let m = msg(Payload::Tensors(vec![]));
+        assert!(I2vLogic::find(&m.payload, "nope").is_err());
+    }
+}

@@ -1,0 +1,62 @@
+//! Workflow instances (§4): the runtime entity executing one stage of an
+//! AIGC workflow. Each instance has the paper's four components:
+//!
+//! - **TaskManager** — syncs its assignment (models, routing, mode) with
+//!   the NodeManager, initializes executors, reports GPU utilization
+//!   (§4.2). Here: a control thread polling a [`ControlPlane`].
+//! - **RequestScheduler** — receives requests written into its ring
+//!   buffer via one-sided RDMA and dispatches them to workers in
+//!   Individual Mode (shared pull queue) or Collaboration Mode
+//!   (broadcast) (§4.3, Figure 4).
+//! - **TaskWorkers** — execute the user-provided application logic
+//!   against the stage's executor (§4.4).
+//! - **ResultDeliver** — forwards outputs to the next stage's instances
+//!   round-robin, or to the database layer for the final stage (§4.5).
+
+mod deliver;
+mod instance;
+mod logic;
+mod scheduler;
+
+pub use deliver::{NextHop, ResultDeliver};
+pub use instance::{Instance, InstanceConfig, InstanceStats};
+pub use logic::{AppLogic, EchoLogic, I2vLogic};
+pub use scheduler::{RequestScheduler, SchedQueue};
+
+use crate::config::SchedMode;
+use crate::transport::AppId;
+use crate::util::NodeId;
+
+/// What the NodeManager wants an instance to run (§8.2 "State Delivery").
+#[derive(Debug, Clone, PartialEq)]
+pub struct Assignment {
+    /// Monotone version; a bump triggers instance reconfiguration.
+    pub version: u64,
+    /// `None` = idle (parked in the idle pool, §8.2).
+    pub role: Option<StageRole>,
+}
+
+/// An assigned stage role. `routes` is keyed by app id because an
+/// instance may be shared across workflows (§8.3) whose next stages
+/// differ.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageRole {
+    /// Primary app (the stage's owner; shared apps appear in `routes`).
+    pub app: AppId,
+    pub stage_index: u32,
+    pub stage_name: String,
+    pub mode: SchedMode,
+    pub workers: usize,
+    /// Per-app delivery destinations.
+    pub routes: Vec<(AppId, Vec<NextHop>)>,
+}
+
+/// The instance-facing slice of the NodeManager. Implemented by
+/// [`crate::nm::NodeManager`]; trait-shaped so workflow code is testable
+/// without a full NM.
+pub trait ControlPlane: Send + Sync {
+    /// Current assignment for `node` (TaskManager poll).
+    fn get_assignment(&self, node: NodeId) -> Assignment;
+    /// Periodic utilization report (drives §8.2 rebalancing).
+    fn report_utilization(&self, node: NodeId, util: f64);
+}

@@ -1,0 +1,228 @@
+//! RequestScheduler (§4.3): dispatches ring-buffer arrivals to workers.
+//!
+//! Individual Mode uses a *pull* queue — "instead of pushing requests
+//! directly to workers, which could cause load imbalance, the RS
+//! maintains a shared local request queue; idle workers autonomously
+//! fetch tasks" (Figure 4a). Collaboration Mode broadcasts each request
+//! to every worker (Figure 4b).
+
+use crate::config::SchedMode;
+use crate::transport::WorkflowMessage;
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// Shared scheduling queue between the RS thread and the worker pool.
+pub struct SchedQueue {
+    inner: Mutex<Inner>,
+    cv: Condvar,
+}
+
+struct Inner {
+    mode: SchedMode,
+    workers: usize,
+    /// IM: single shared queue.
+    shared: VecDeque<WorkflowMessage>,
+    /// CM: one broadcast copy per worker.
+    per_worker: Vec<VecDeque<WorkflowMessage>>,
+    closed: bool,
+    generation: u64,
+}
+
+impl SchedQueue {
+    pub fn new(mode: SchedMode, workers: usize) -> Arc<Self> {
+        Arc::new(Self {
+            inner: Mutex::new(Inner {
+                mode,
+                workers: workers.max(1),
+                shared: VecDeque::new(),
+                per_worker: vec![VecDeque::new(); workers.max(1)],
+                closed: false,
+                generation: 0,
+            }),
+            cv: Condvar::new(),
+        })
+    }
+
+    /// Reconfigure mode/worker-count (assignment change). Pending work is
+    /// dropped — the paper's no-retransmission stance extends to
+    /// reassignment; in-flight requests expire at the client.
+    pub fn reconfigure(&self, mode: SchedMode, workers: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.mode = mode;
+        g.workers = workers.max(1);
+        g.shared.clear();
+        g.per_worker = vec![VecDeque::new(); g.workers];
+        g.generation += 1;
+        drop(g);
+        self.cv.notify_all();
+    }
+
+    /// RS side: enqueue one arrival per the active mode.
+    pub fn dispatch(&self, msg: WorkflowMessage) {
+        let mut g = self.inner.lock().unwrap();
+        match g.mode {
+            SchedMode::Individual => g.shared.push_back(msg),
+            SchedMode::Collaboration => {
+                for q in g.per_worker.iter_mut() {
+                    q.push_back(msg.clone());
+                }
+            }
+        }
+        drop(g);
+        self.cv.notify_all();
+    }
+
+    /// Worker side: blocking fetch with timeout. In IM any worker takes
+    /// from the shared queue (pull = natural load balancing); in CM
+    /// worker `widx` takes its broadcast copy.
+    pub fn fetch(&self, widx: usize, timeout: Duration) -> Option<WorkflowMessage> {
+        let mut g = self.inner.lock().unwrap();
+        let deadline = std::time::Instant::now() + timeout;
+        loop {
+            if g.closed {
+                return None;
+            }
+            let got = match g.mode {
+                SchedMode::Individual => g.shared.pop_front(),
+                SchedMode::Collaboration => {
+                    g.per_worker.get_mut(widx).and_then(|q| q.pop_front())
+                }
+            };
+            if let Some(m) = got {
+                return Some(m);
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (guard, _) = self.cv.wait_timeout(g, deadline - now).unwrap();
+            g = guard;
+        }
+    }
+
+    /// Pending depth (IM: shared queue; CM: max per-worker).
+    pub fn depth(&self) -> usize {
+        let g = self.inner.lock().unwrap();
+        match g.mode {
+            SchedMode::Individual => g.shared.len(),
+            SchedMode::Collaboration => {
+                g.per_worker.iter().map(VecDeque::len).max().unwrap_or(0)
+            }
+        }
+    }
+
+    /// Wake and permanently release all workers.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+}
+
+/// Thin RS façade: couples an arrival source to a [`SchedQueue`] (the
+/// instance's RS thread calls `on_arrival` for each ring-buffer message).
+pub struct RequestScheduler {
+    queue: Arc<SchedQueue>,
+}
+
+impl RequestScheduler {
+    pub fn new(queue: Arc<SchedQueue>) -> Self {
+        Self { queue }
+    }
+
+    /// Handle one arrival.
+    pub fn on_arrival(&self, msg: WorkflowMessage) {
+        self.queue.dispatch(msg);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::{AppId, MessageHeader, Payload, StageId};
+    use crate::util::{NodeId, Uid};
+
+    fn msg(i: u32) -> WorkflowMessage {
+        WorkflowMessage {
+            header: MessageHeader {
+                uid: Uid(i as u128),
+                ts_ns: 0,
+                app: AppId(0),
+                stage: StageId(0),
+                origin: NodeId(0),
+            },
+            payload: Payload::Bytes(vec![i as u8]),
+        }
+    }
+
+    #[test]
+    fn im_single_delivery() {
+        let q = SchedQueue::new(SchedMode::Individual, 2);
+        q.dispatch(msg(1));
+        let a = q.fetch(0, Duration::from_millis(10));
+        let b = q.fetch(1, Duration::from_millis(10));
+        // Exactly one worker gets it.
+        assert_eq!(a.is_some() as u32 + b.is_some() as u32, 1);
+    }
+
+    #[test]
+    fn cm_broadcast_delivery() {
+        let q = SchedQueue::new(SchedMode::Collaboration, 3);
+        q.dispatch(msg(7));
+        for w in 0..3 {
+            assert_eq!(
+                q.fetch(w, Duration::from_millis(10)).unwrap().header.uid.0,
+                7
+            );
+        }
+    }
+
+    #[test]
+    fn im_pull_balances() {
+        // 4 messages, 2 workers: each pulls what it can — no worker can
+        // be overloaded while the other idles.
+        let q = SchedQueue::new(SchedMode::Individual, 2);
+        for i in 0..4 {
+            q.dispatch(msg(i));
+        }
+        let mut counts = [0usize; 2];
+        for _ in 0..4 {
+            for (w, c) in counts.iter_mut().enumerate() {
+                if q.fetch(w, Duration::from_millis(1)).is_some() {
+                    *c += 1;
+                }
+            }
+        }
+        assert_eq!(counts[0] + counts[1], 4);
+        assert!(counts[0] >= 1 && counts[1] >= 1);
+    }
+
+    #[test]
+    fn fetch_times_out() {
+        let q = SchedQueue::new(SchedMode::Individual, 1);
+        let t0 = std::time::Instant::now();
+        assert!(q.fetch(0, Duration::from_millis(20)).is_none());
+        assert!(t0.elapsed() >= Duration::from_millis(20));
+    }
+
+    #[test]
+    fn reconfigure_switches_mode() {
+        let q = SchedQueue::new(SchedMode::Individual, 1);
+        q.dispatch(msg(1));
+        q.reconfigure(SchedMode::Collaboration, 2);
+        assert_eq!(q.depth(), 0, "reconfigure drops pending work");
+        q.dispatch(msg(2));
+        assert!(q.fetch(0, Duration::from_millis(10)).is_some());
+        assert!(q.fetch(1, Duration::from_millis(10)).is_some());
+    }
+
+    #[test]
+    fn close_releases_blocked_workers() {
+        let q = SchedQueue::new(SchedMode::Individual, 1);
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || q2.fetch(0, Duration::from_secs(10)));
+        std::thread::sleep(Duration::from_millis(20));
+        q.close();
+        assert!(h.join().unwrap().is_none());
+    }
+}

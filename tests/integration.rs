@@ -1,0 +1,297 @@
+//! Cross-module integration tests: full Workflow Set request lifecycle,
+//! fault-tolerance matrix rows from DESIGN.md §7 (message loss with no
+//! retransmission, DB replica failure, NM failover), and multi-set
+//! behaviour.
+
+use onepiece::config::{ClusterConfig, ExecModel, FabricKind};
+use onepiece::nm::StageKey;
+use onepiece::proxy::Admission;
+use onepiece::rdma::{Fabric, FabricConfig};
+use onepiece::transport::{AppId, Payload, WorkflowMessage};
+use onepiece::util::NodeId;
+use onepiece::workflow::EchoLogic;
+use onepiece::wset::{build_pool, MultiSet, WorkflowSet};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn fast_config() -> ClusterConfig {
+    let mut cfg = ClusterConfig::i2v_default();
+    cfg.fabric = FabricKind::Ideal;
+    for s in cfg.apps[0].stages.iter_mut() {
+        s.exec = ExecModel::Simulated { ms: 1.0 };
+        s.exec_ms = 1.0;
+    }
+    cfg.idle_pool = 1;
+    cfg
+}
+
+fn build(cfg: &ClusterConfig) -> WorkflowSet {
+    let pool = build_pool(cfg, None);
+    let counts = vec![WorkflowSet::theorem1_counts(&cfg.apps[0], 1)];
+    WorkflowSet::build(cfg.clone(), counts, Arc::new(EchoLogic), pool)
+}
+
+#[test]
+fn request_lifecycle_uid_threading() {
+    let cfg = fast_config();
+    let set = build(&cfg);
+    std::thread::sleep(Duration::from_millis(80));
+
+    let Admission::Accepted(uid) = set.submit(AppId(1), Payload::Bytes(vec![42; 32]))
+    else {
+        panic!("must accept")
+    };
+    let bytes = set.wait_result(uid, Duration::from_secs(10)).expect("result");
+    let msg = WorkflowMessage::decode(&bytes).unwrap();
+    // The UID assigned at the proxy survives the whole lifecycle (§3.2),
+    // the stage advanced past the last stage index, the proxy origin and
+    // timestamp are preserved.
+    assert_eq!(msg.header.uid, uid);
+    assert_eq!(msg.header.stage.0, 4);
+    assert_eq!(msg.header.origin, set.proxy.node());
+    assert!(msg.header.ts_ns > 0);
+    // Fetch purges per replica (other replicas expire by TTL — §3.4):
+    // after draining every replica the result is gone.
+    for _ in 1..set.dbs.len() {
+        let _ = set.poll(uid);
+    }
+    assert!(set.poll(uid).is_none());
+    set.shutdown();
+}
+
+#[test]
+fn pipelined_batch_all_complete() {
+    let cfg = fast_config();
+    let set = build(&cfg);
+    std::thread::sleep(Duration::from_millis(80));
+
+    let mut uids = Vec::new();
+    for i in 0..30u8 {
+        if let Admission::Accepted(uid) = set.submit(AppId(1), Payload::Bytes(vec![i]))
+        {
+            uids.push((i, uid));
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    assert!(uids.len() >= 25, "most requests admitted, got {}", uids.len());
+    for (i, uid) in &uids {
+        let bytes = set.wait_result(*uid, Duration::from_secs(15)).expect("result");
+        let msg = WorkflowMessage::decode(&bytes).unwrap();
+        assert_eq!(msg.payload, Payload::Bytes(vec![*i]), "payload integrity");
+    }
+    set.shutdown();
+}
+
+#[test]
+fn message_loss_is_not_retransmitted() {
+    // §9: lost inter-stage messages are dropped, the request simply never
+    // completes; the system itself keeps serving.
+    let cfg = fast_config();
+    let pool = build_pool(&cfg, None);
+    let counts = vec![WorkflowSet::theorem1_counts(&cfg.apps[0], 1)];
+    let set = WorkflowSet::build(cfg, counts, Arc::new(EchoLogic), pool);
+    std::thread::sleep(Duration::from_millis(80));
+
+    // Inject 30% write loss into the fabric mid-run.
+    set.fabric.set_config(FabricConfig {
+        latency: None,
+        write_drop_prob: 0.3,
+        ..Default::default()
+    });
+    let mut uids = Vec::new();
+    for i in 0..20u8 {
+        if let Admission::Accepted(uid) = set.submit(AppId(1), Payload::Bytes(vec![i]))
+        {
+            uids.push(uid);
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    let completed = uids
+        .iter()
+        .filter(|u| set.wait_result(**u, Duration::from_secs(3)).is_some())
+        .count();
+    // Some complete, some are lost; with 4 RDMA hops at 30% drop the
+    // expected completion rate is (0.7)^4 ≈ 24% — allow a broad band but
+    // require BOTH losses and completions to occur.
+    assert!(completed < uids.len(), "losses must occur");
+
+    // Heal the fabric: the system recovers with no residue.
+    set.fabric.set_config(FabricConfig { latency: None, ..Default::default() });
+    let Admission::Accepted(uid) = set.submit(AppId(1), Payload::Bytes(vec![99]))
+    else {
+        panic!()
+    };
+    assert!(
+        set.wait_result(uid, Duration::from_secs(10)).is_some(),
+        "post-loss requests must flow normally"
+    );
+    set.shutdown();
+}
+
+#[test]
+fn db_replica_failure_served_by_backup() {
+    let cfg = fast_config();
+    let set = build(&cfg);
+    std::thread::sleep(Duration::from_millis(80));
+
+    let Admission::Accepted(uid) = set.submit(AppId(1), Payload::Bytes(vec![7]))
+    else {
+        panic!()
+    };
+    // Wait until the result is stored on all replicas (RD writes all).
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    while set.dbs[1].peek(uid).is_none() && std::time::Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    // Kill replica 0; the client read path falls through to replica 1.
+    set.db_client.set_alive(0, false);
+    assert!(set.poll(uid).is_some(), "backup replica must serve the result");
+    set.shutdown();
+}
+
+#[test]
+fn nm_primary_failover() {
+    let cfg = fast_config();
+    let set = build(&cfg);
+    let primary = set.nm_cluster.primary().expect("initial primary");
+    set.nm_cluster.set_alive(primary, false);
+    // Heartbeats stop; another replica detects and re-elects.
+    std::thread::sleep(Duration::from_millis(10));
+    let status = set.nm_cluster.status();
+    let backup = status.iter().find(|r| r.alive).unwrap().node;
+    let new_primary = set.nm_cluster.elect(backup).expect("failover election");
+    assert_ne!(new_primary, primary);
+    assert_eq!(set.nm_cluster.primary(), Some(new_primary));
+    set.shutdown();
+}
+
+#[test]
+fn multiset_isolates_set_failure() {
+    // A set whose entrance stage is unassigned (simulating regional
+    // failure) rejects; the multi-set router places everything on the
+    // healthy set.
+    let cfg = fast_config();
+    let dead = {
+        let pool = build_pool(&cfg, None);
+        WorkflowSet::build(cfg.clone(), vec![vec![0, 0, 0, 0]], Arc::new(EchoLogic), pool)
+    };
+    let healthy = build(&cfg);
+    std::thread::sleep(Duration::from_millis(80));
+    let multi = MultiSet::new(vec![dead, healthy], 3);
+
+    let mut placed = Vec::new();
+    for i in 0..10u8 {
+        let (idx, uid) = multi
+            .submit(AppId(1), Payload::Bytes(vec![i]))
+            .expect("healthy set must absorb");
+        assert_eq!(idx, 1);
+        placed.push(uid);
+    }
+    for uid in placed {
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        let mut got = false;
+        while !got && std::time::Instant::now() < deadline {
+            got = multi.poll(1, uid).is_some();
+            std::thread::sleep(Duration::from_millis(3));
+        }
+        assert!(got);
+    }
+}
+
+#[test]
+fn idle_pool_instance_absorbs_hot_stage() {
+    // End-to-end §8.2: saturate diffusion, rebalance, observe the idle
+    // instance join and process traffic.
+    let mut cfg = fast_config();
+    cfg.apps[0].stages[2].exec = ExecModel::Simulated { ms: 20.0 };
+    cfg.apps[0].stages[2].exec_ms = 20.0;
+    cfg.nm.util_window_ms = 200;
+    let pool = build_pool(&cfg, None);
+    // Deliberately under-provision diffusion.
+    let set = WorkflowSet::build(cfg, vec![vec![1, 1, 1, 1]], Arc::new(EchoLogic), pool);
+    std::thread::sleep(Duration::from_millis(80));
+    let diffusion = StageKey { app: AppId(1), stage: 2 };
+    assert_eq!(set.nm.stage_instances(diffusion).len(), 1);
+
+    // Saturate.
+    let mut uids = Vec::new();
+    for i in 0..40u8 {
+        if let Admission::Accepted(uid) = set.submit(AppId(1), Payload::Bytes(vec![i]))
+        {
+            uids.push(uid);
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    std::thread::sleep(Duration::from_millis(300)); // utilization builds
+    let action = set.rebalance().expect("hot diffusion must trigger scale-up");
+    assert_eq!(action.to, diffusion);
+    assert_eq!(set.nm.stage_instances(diffusion).len(), 2);
+
+    // Everything still completes after the topology change.
+    let done = uids
+        .iter()
+        .filter(|u| set.wait_result(**u, Duration::from_secs(20)).is_some())
+        .count();
+    assert!(done >= uids.len() * 8 / 10, "done={done}/{}", uids.len());
+    set.shutdown();
+}
+
+#[test]
+fn instance_death_is_isolated() {
+    // §1 "Fault Isolation": killing one instance of a stage loses only
+    // the requests routed to it; the sibling instance keeps the workflow
+    // serving, and after the NM drops the dead instance from the routing
+    // table, completion returns to 100%.
+    let cfg = fast_config();
+    let pool = build_pool(&cfg, None);
+    // Two instances at every stage.
+    let set = WorkflowSet::build(
+        cfg.clone(),
+        vec![vec![2, 2, 2, 2]],
+        Arc::new(EchoLogic),
+        pool.clone(),
+    );
+    std::thread::sleep(Duration::from_millis(80));
+
+    // Kill one diffusion instance by reassigning it to the idle pool
+    // (the NM-level equivalent of a node death: it leaves the routing
+    // table; in-flight ring contents are lost per §9).
+    let diffusion = StageKey { app: AppId(1), stage: 2 };
+    let victims = set.nm.stage_instances(diffusion);
+    set.nm.assign(victims[0], None);
+    std::thread::sleep(Duration::from_millis(60)); // routing propagates
+
+    let mut uids = Vec::new();
+    for i in 0..20u8 {
+        if let Admission::Accepted(uid) = set.submit(AppId(1), Payload::Bytes(vec![i]))
+        {
+            uids.push(uid);
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    let done = uids
+        .iter()
+        .filter(|u| set.wait_result(**u, Duration::from_secs(10)).is_some())
+        .count();
+    assert_eq!(
+        done,
+        uids.len(),
+        "remaining instance must serve all post-failure requests"
+    );
+    assert_eq!(set.nm.stage_instances(diffusion).len(), 1);
+    set.shutdown();
+}
+
+#[test]
+fn fabric_traffic_accounted() {
+    let fabric = Fabric::ideal();
+    let (ops0, bytes0) = fabric.traffic();
+    assert_eq!((ops0, bytes0), (0, 0));
+    let (id, _r) = fabric.register(1024);
+    let qp = fabric.connect(id).unwrap();
+    qp.post_write(0, &[0u8; 512]).unwrap();
+    let (ops, bytes) = fabric.traffic();
+    assert_eq!(ops, 1);
+    assert_eq!(bytes, 512);
+    let _ = NodeId(0);
+}

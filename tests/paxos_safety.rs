@@ -1,0 +1,122 @@
+//! E13 safety: randomized Paxos schedules — concurrent proposers,
+//! message loss, retries — can never decide two different values in one
+//! instance. This is the property the NM election relies on (§8.1: "at
+//! most one leader is elected at any given time").
+
+use onepiece::paxos::{propose, Acceptor, AcceptorHandle, Ballot, PrepareReply, ProposeError};
+use onepiece::util::{NodeId, Rng};
+use std::sync::{Arc, Mutex};
+
+/// Acceptor handle that drops messages with probability `p` (decided by
+/// a shared deterministic RNG).
+struct Lossy {
+    inner: Arc<Mutex<Acceptor>>,
+    rng: Arc<Mutex<Rng>>,
+    p: f64,
+}
+
+impl Lossy {
+    fn drop_now(&self) -> bool {
+        self.rng.lock().unwrap().f64() < self.p
+    }
+}
+
+impl AcceptorHandle for Lossy {
+    fn prepare(&self, b: Ballot) -> Option<PrepareReply> {
+        if self.drop_now() {
+            return None;
+        }
+        Some(self.inner.lock().unwrap().prepare(b))
+    }
+
+    fn accept(&self, b: Ballot, v: u64) -> Option<Result<(), Ballot>> {
+        if self.drop_now() {
+            return None;
+        }
+        Some(self.inner.lock().unwrap().accept(b, v))
+    }
+}
+
+#[test]
+fn randomized_schedules_never_decide_twice() {
+    for seed in 0..50u64 {
+        let rng = Arc::new(Mutex::new(Rng::new(seed)));
+        let acceptors: Vec<Arc<Mutex<Acceptor>>> =
+            (0..5).map(|_| Arc::new(Mutex::new(Acceptor::new()))).collect();
+        let loss = (seed % 4) as f64 * 0.1; // 0%..30% loss
+
+        let mut decided: Option<u64> = None;
+        // 3 proposers, interleaved retries with escalating ballots.
+        let mut ballots: Vec<Ballot> =
+            (0..3).map(|p| Ballot::new(1, NodeId(p))).collect();
+        for round in 0..40u64 {
+            let p = (round % 3) as usize;
+            let handles: Vec<Lossy> = acceptors
+                .iter()
+                .map(|a| Lossy { inner: a.clone(), rng: rng.clone(), p: loss })
+                .collect();
+            match propose(&handles, ballots[p], 100 + p as u64) {
+                Ok(v) => {
+                    if let Some(prev) = decided {
+                        assert_eq!(
+                            prev, v,
+                            "seed {seed}: two different values decided!"
+                        );
+                    }
+                    decided = Some(v);
+                }
+                Err(ProposeError::Preempted { suggested }) => {
+                    ballots[p] = suggested.next_for(NodeId(p as u32));
+                }
+                Err(_) => {
+                    ballots[p] = ballots[p].next_for(NodeId(p as u32));
+                }
+            }
+        }
+        // With ≤30% loss and 40 rounds, some value must be decided.
+        assert!(decided.is_some(), "seed {seed}: no decision reached");
+    }
+}
+
+#[test]
+fn decided_value_is_stable_across_later_ballots() {
+    let acceptors: Vec<Arc<Mutex<Acceptor>>> =
+        (0..3).map(|_| Arc::new(Mutex::new(Acceptor::new()))).collect();
+    let first = propose(&acceptors, Ballot::new(1, NodeId(0)), 7).unwrap();
+    for round in 2..20 {
+        let v = propose(&acceptors, Ballot::new(round, NodeId(1)), 999).unwrap();
+        assert_eq!(v, first, "a decided value can never change");
+    }
+}
+
+#[test]
+fn partitioned_minority_cannot_decide() {
+    let acceptors: Vec<Arc<Mutex<Acceptor>>> =
+        (0..5).map(|_| Arc::new(Mutex::new(Acceptor::new()))).collect();
+    // Proposer only reaches 2 of 5.
+    struct Partition {
+        inner: Arc<Mutex<Acceptor>>,
+        reachable: bool,
+    }
+    impl AcceptorHandle for Partition {
+        fn prepare(&self, b: Ballot) -> Option<PrepareReply> {
+            self.reachable.then(|| self.inner.lock().unwrap().prepare(b))
+        }
+        fn accept(&self, b: Ballot, v: u64) -> Option<Result<(), Ballot>> {
+            self.reachable.then(|| self.inner.lock().unwrap().accept(b, v))
+        }
+    }
+    let handles: Vec<Partition> = acceptors
+        .iter()
+        .enumerate()
+        .map(|(i, a)| Partition { inner: a.clone(), reachable: i < 2 })
+        .collect();
+    assert!(propose(&handles, Ballot::new(1, NodeId(0)), 1).is_err());
+    // The majority side can still decide its own value.
+    let handles: Vec<Partition> = acceptors
+        .iter()
+        .enumerate()
+        .map(|(i, a)| Partition { inner: a.clone(), reachable: i >= 2 })
+        .collect();
+    assert_eq!(propose(&handles, Ballot::new(2, NodeId(1)), 2), Ok(2));
+}

@@ -1,0 +1,131 @@
+//! Property tests for the pipelining math (no proptest offline — seeded
+//! randomized sweeps with explicit failure seeds).
+//!
+//! Invariants from §5 / Theorem 1:
+//!  P1  rate matching: Theorem-1 sizing gives output interval == T_X/K;
+//!  P2  no in-pipeline queueing: completion(r) == admit(r) + Σ T_i;
+//!  P3  monotonicity: more instances never increase the output interval;
+//!  P4  chain conservation: every stage plan sustains ≥ the chain rate;
+//!  P5  GPU accounting: total == Σ instances·gpus_per_instance.
+
+use onepiece::pipeline::{instances_needed, plan_chain, trace_schedule, StageReq, TraceStage};
+use onepiece::util::Rng;
+
+fn random_two_stage(rng: &mut Rng) -> (usize, f64, f64) {
+    let k = 1 + rng.below(6) as usize;
+    let tx = 0.5 + rng.f64() * 4.0;
+    let ty = tx * (1.0 + rng.f64() * 6.0); // T_Y > T_X per the theorem
+    (k, tx, ty)
+}
+
+#[test]
+fn p1_p2_rate_matching_and_no_queueing() {
+    for seed in 0..60u64 {
+        let mut rng = Rng::new(seed);
+        let (k, tx, ty) = random_two_stage(&mut rng);
+        let m = instances_needed(k, tx, ty);
+        let stages = vec![
+            TraceStage { name: "X".into(), exec_s: tx, instances: 1, workers: k },
+            TraceStage { name: "Y".into(), exec_s: ty, instances: m, workers: 1 },
+        ];
+        let admit = tx / k as f64;
+        let n = (m * 5).max(20);
+        let t = trace_schedule(&stages, n, admit);
+        assert!(
+            (t.output_interval_s - admit).abs() < 1e-6,
+            "seed {seed}: interval {} != {admit}",
+            t.output_interval_s
+        );
+        // P2: completion(r) = r*admit + tx + ty exactly (no waiting).
+        for (r, &c) in t.completions.iter().enumerate() {
+            let expect = r as f64 * admit + tx + ty;
+            assert!(
+                (c - expect).abs() < 1e-6,
+                "seed {seed}: req {r} queued ({c} vs {expect})"
+            );
+        }
+    }
+}
+
+#[test]
+fn p3_more_instances_never_slower() {
+    for seed in 0..40u64 {
+        let mut rng = Rng::new(seed * 7 + 1);
+        let (k, tx, ty) = random_two_stage(&mut rng);
+        let m = instances_needed(k, tx, ty);
+        let admit = tx / k as f64;
+        let interval = |mm: usize| {
+            let stages = vec![
+                TraceStage { name: "X".into(), exec_s: tx, instances: 1, workers: k },
+                TraceStage { name: "Y".into(), exec_s: ty, instances: mm, workers: 1 },
+            ];
+            trace_schedule(&stages, (mm * 5).max(20), admit).output_interval_s
+        };
+        let at_m = interval(m);
+        let at_m_plus = interval(m + 1 + rng.below(3) as usize);
+        assert!(
+            at_m_plus <= at_m + 1e-9,
+            "seed {seed}: extra instances slowed the pipeline"
+        );
+    }
+}
+
+#[test]
+fn p4_p5_chain_conservation_and_gpu_accounting() {
+    for seed in 0..40u64 {
+        let mut rng = Rng::new(seed * 13 + 5);
+        let nstages = 2 + rng.below(5) as usize;
+        let stages: Vec<StageReq> = (0..nstages)
+            .map(|i| StageReq {
+                name: format!("s{i}"),
+                exec_s: 0.2 + rng.f64() * 8.0,
+                gpus_per_instance: 1 + rng.below(4) as usize,
+                workers: 1 + rng.below(3) as usize,
+            })
+            .collect();
+        let entrance = 1 + rng.below(3) as usize;
+        let plan = plan_chain(&stages, entrance);
+        // P4: every stage sustains at least the chain output rate.
+        for sp in &plan.stages {
+            assert!(
+                sp.rate >= plan.output_rate - 1e-9,
+                "seed {seed}: stage {} under-provisioned",
+                sp.name
+            );
+        }
+        // The entrance is the bottleneck by construction.
+        assert!(
+            (plan.output_rate - plan.stages[0].rate).abs() < 1e-9,
+            "seed {seed}: chain rate must equal entrance rate"
+        );
+        // P5: GPU accounting.
+        let total: usize = plan
+            .stages
+            .iter()
+            .zip(&stages)
+            .map(|(p, s)| p.instances * s.gpus_per_instance)
+            .sum();
+        assert_eq!(total, plan.total_gpus, "seed {seed}");
+        // Latency = sum of stage times.
+        let lat: f64 = stages.iter().map(|s| s.exec_s).sum();
+        assert!((plan.request_latency_s - lat).abs() < 1e-9);
+    }
+}
+
+#[test]
+fn theorem1_boundary_exact_multiples() {
+    // When T_Y is an exact multiple of T_X, M-1 must fail and M succeed —
+    // the ceiling is tight with no slack.
+    for ratio in 2..=6usize {
+        let tx = 3.0;
+        let ty = tx * ratio as f64;
+        let m = instances_needed(1, tx, ty);
+        assert_eq!(m, ratio);
+        let under = vec![
+            TraceStage { name: "X".into(), exec_s: tx, instances: 1, workers: 1 },
+            TraceStage { name: "Y".into(), exec_s: ty, instances: m - 1, workers: 1 },
+        ];
+        let t = trace_schedule(&under, 30, tx);
+        assert!(t.output_interval_s > tx + 1e-9, "ratio {ratio} should degrade");
+    }
+}
