@@ -1,7 +1,8 @@
 //! Cluster / workflow configuration.
 //!
-//! Configs are JSON documents (parsed with the in-tree [`Json`] parser —
-//! the offline build has no serde/toml) validated into typed structs.
+//! Configs are JSON documents (parsed with the in-tree
+//! [`crate::util::Json`] parser — the offline build has no serde/toml)
+//! validated into typed structs.
 //! [`ClusterConfig::i2v_default`] is the Wan2.1-style image-to-video
 //! deployment used by the examples; `examples/configs/` has the same
 //! shapes as files.

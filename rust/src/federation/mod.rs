@@ -1,0 +1,63 @@
+//! Multi-Workflow-Set federation: a global load-aware router over N
+//! regionally-autonomous [`crate::wset::WorkflowSet`]s.
+//!
+//! The paper (§3.1–§3.2) deploys a *fleet* of Workflow Sets and lets
+//! clients retry rejected requests against a different set — admission
+//! pressure is resolved client-side and blindly. This module implements
+//! the server-side alternative that the headline elasticity claims rest
+//! on, combining three mechanisms:
+//!
+//! 1. **Load-aware routing** — every set's proxy exports its fast-reject
+//!    state ([`crate::proxy::AdmissionSnapshot`], §5) and per-stage
+//!    utilization window (§8.2); the [`FederationRouter`] sends each
+//!    incoming request to the least-loaded admitting set.
+//! 2. **Cross-set spill** — when the chosen set still fast-rejects (its
+//!    snapshot was stale, or a burst landed between refreshes), the
+//!    router spills the request to sibling sets in ascending-load order
+//!    and only rejects when *every* set is at capacity. A federation of N
+//!    sets therefore rejects strictly less traffic than any single set at
+//!    the same offered load.
+//! 3. **Elastic donation** — [`FederationRouter::rebalance`] extends the
+//!    NodeManager's §8.2 idle-pool scaling across set boundaries: a cold
+//!    set retires an idle-pool instance
+//!    ([`crate::wset::WorkflowSet::retire_idle_instance`]) and the hot
+//!    set registers fresh capacity in its place
+//!    ([`crate::wset::WorkflowSet::add_idle_instance`]), which its own NM
+//!    then assigns to the busiest stage.
+//!
+//! Spill, reject, and donation counts are published through a
+//! [`crate::metrics::Registry`] so the `onepiece federate` driver and
+//! `benches/e11_federation.rs` can report them per set.
+
+mod router;
+
+pub use router::{
+    DonationAction, FedAdmission, FederationConfig, FederationRouter, SetSnapshot,
+};
+
+use crate::config::ClusterConfig;
+use crate::workflow::AppLogic;
+use crate::wset::WorkflowSet;
+use std::sync::Arc;
+
+/// Build `config.sets` Workflow Sets — each with its **own** executor
+/// pool, fabric, NodeManager, and database layer (the per-set deployment
+/// shape) — behind a [`FederationRouter`].
+pub fn build_federation(
+    config: &ClusterConfig,
+    entrance: usize,
+    logic: Arc<dyn AppLogic>,
+    fed: FederationConfig,
+) -> FederationRouter {
+    let sets: Vec<WorkflowSet> = (0..config.sets.max(1))
+        .map(|_| {
+            let counts: Vec<Vec<usize>> = config
+                .apps
+                .iter()
+                .map(|app| WorkflowSet::theorem1_counts(app, entrance))
+                .collect();
+            WorkflowSet::build_standalone(config.clone(), counts, logic.clone(), None)
+        })
+        .collect();
+    FederationRouter::new(sets, fed)
+}

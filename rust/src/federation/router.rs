@@ -1,0 +1,490 @@
+//! The [`FederationRouter`]: least-loaded-first admission with cross-set
+//! spill and elastic instance donation (see the module docs in
+//! [`crate::federation`]).
+
+use crate::metrics::Registry;
+use crate::proxy::{Admission, AdmissionSnapshot};
+use crate::transport::{AppId, Payload};
+use crate::util::{NodeId, Uid};
+use crate::wset::WorkflowSet;
+use std::collections::HashMap;
+use std::sync::{Mutex, RwLock};
+use std::time::{Duration, Instant};
+
+/// Federation tuning.
+#[derive(Debug, Clone, Copy)]
+pub struct FederationConfig {
+    /// Spill fast-rejected requests to sibling sets before giving up.
+    pub spill: bool,
+    /// Maximum age of the cached per-set load snapshot used for routing.
+    /// Staleness is deliberate: refreshing on every request would turn
+    /// the router into a global synchronization point; the proxy's own
+    /// fast-reject stays authoritative and overflow spills instead.
+    pub snapshot_max_age: Duration,
+    /// A set is donation-eligible as a receiver above this pressure
+    /// (max of admission load and peak stage utilization; paper §8.2
+    /// uses 0.85 for the intra-set analogue).
+    pub hot_pressure: f64,
+    /// A set may donate idle capacity only below this pressure.
+    pub donor_max_pressure: f64,
+}
+
+impl Default for FederationConfig {
+    fn default() -> Self {
+        Self {
+            spill: true,
+            snapshot_max_age: Duration::from_millis(25),
+            hot_pressure: 0.85,
+            donor_max_pressure: 0.5,
+        }
+    }
+}
+
+/// Outcome of a federated submission.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FedAdmission {
+    /// Admitted by `set`; `spilled` is true when that was not the
+    /// router's first choice (the preferred set fast-rejected).
+    Accepted { set: usize, uid: Uid, spilled: bool },
+    /// Every set in the federation is at capacity.
+    Rejected,
+}
+
+/// One cross-set donation (the federation analogue of
+/// [`crate::nm::RebalanceAction`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DonationAction {
+    pub from_set: usize,
+    pub to_set: usize,
+    /// Node retired from the donor's idle pool.
+    pub retired: NodeId,
+    /// Fresh node spawned into the receiver's idle pool.
+    pub spawned: NodeId,
+}
+
+/// Point-in-time view of one member set (reporting / rebalancing input).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SetSnapshot {
+    pub set: usize,
+    pub admission: AdmissionSnapshot,
+    /// Peak per-stage windowed utilization (§8.2 signal).
+    pub max_stage_util: f64,
+    pub idle_instances: usize,
+}
+
+impl SetSnapshot {
+    /// Scale-up pressure: admission load or compute saturation, whichever
+    /// is higher. A set with no entrance capacity exerts no pressure at
+    /// all — it cannot admit requests, so it must never attract donated
+    /// instances, even while a residual backlog keeps its stages busy.
+    pub fn pressure(&self) -> f64 {
+        if self.admission.capacity_rps <= 0.0 {
+            return 0.0;
+        }
+        self.admission.load().max(self.max_stage_util)
+    }
+}
+
+/// Global router over N Workflow Sets.
+pub struct FederationRouter {
+    sets: Vec<RwLock<WorkflowSet>>,
+    cfg: FederationConfig,
+    metrics: Registry,
+    /// Cached per-app load vector + refresh stamp (see
+    /// [`FederationConfig::snapshot_max_age`]).
+    loads: Mutex<HashMap<AppId, (Instant, Vec<f64>)>>,
+    /// Serializes [`FederationRouter::rebalance`] passes: concurrent
+    /// passes could otherwise pick the same donor and over-donate.
+    rebalance_serial: Mutex<()>,
+}
+
+impl FederationRouter {
+    pub fn new(sets: Vec<WorkflowSet>, cfg: FederationConfig) -> Self {
+        Self {
+            sets: sets.into_iter().map(RwLock::new).collect(),
+            cfg,
+            metrics: Registry::new(),
+            loads: Mutex::new(HashMap::new()),
+            rebalance_serial: Mutex::new(()),
+        }
+    }
+
+    /// Number of member sets.
+    pub fn len(&self) -> usize {
+        self.sets.len()
+    }
+
+    /// True when the federation has no member sets.
+    pub fn is_empty(&self) -> bool {
+        self.sets.is_empty()
+    }
+
+    /// The federation metrics registry (spill/reject/donation counters,
+    /// per-set gauges).
+    pub fn metrics(&self) -> &Registry {
+        &self.metrics
+    }
+
+    /// Routing order for a load vector: ascending load, ties broken by
+    /// set index (stable), capacity-less sets (infinite load) last. This
+    /// is also the **spill order**: the first entry is the preferred set,
+    /// the rest are tried in sequence on fast-reject.
+    pub fn route_order(loads: &[f64]) -> Vec<usize> {
+        let mut order: Vec<usize> = (0..loads.len()).collect();
+        order.sort_by(|&a, &b| {
+            loads[a]
+                .partial_cmp(&loads[b])
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        order
+    }
+
+    /// Per-set admission load for `app`, cached up to `snapshot_max_age`.
+    fn loads_for(&self, app: AppId) -> Vec<f64> {
+        let mut cache = self.loads.lock().unwrap();
+        if let Some((at, loads)) = cache.get(&app) {
+            if at.elapsed() <= self.cfg.snapshot_max_age {
+                return loads.clone();
+            }
+        }
+        let loads: Vec<f64> = self
+            .sets
+            .iter()
+            .map(|s| s.read().unwrap().admission_snapshot(app).load())
+            .collect();
+        cache.insert(app, (Instant::now(), loads.clone()));
+        loads
+    }
+
+    /// Submit a request: least-loaded admitting set first, then spill in
+    /// ascending-load order, rejecting only when every set is full.
+    pub fn submit(&self, app: AppId, payload: Payload) -> FedAdmission {
+        self.metrics.counter("fed.submitted").inc();
+        let loads = self.loads_for(app);
+        let order = Self::route_order(&loads);
+        for (attempt, &idx) in order.iter().enumerate() {
+            let admission = {
+                let set = self.sets[idx].read().unwrap();
+                set.submit(app, payload.clone())
+            };
+            if let Admission::Accepted(uid) = admission {
+                let spilled = attempt > 0;
+                self.metrics.counter("fed.accepted").inc();
+                self.metrics.counter(&format!("fed.set{idx}.accepted")).inc();
+                if spilled {
+                    self.metrics.counter("fed.spilled").inc();
+                    self.metrics.counter(&format!("fed.set{idx}.spill_in")).inc();
+                }
+                return FedAdmission::Accepted { set: idx, uid, spilled };
+            }
+            if !self.cfg.spill {
+                break;
+            }
+        }
+        self.metrics.counter("fed.rejected").inc();
+        FedAdmission::Rejected
+    }
+
+    /// Poll the set that accepted a request.
+    pub fn poll(&self, set: usize, uid: Uid) -> Option<Vec<u8>> {
+        self.sets[set].read().unwrap().poll(uid)
+    }
+
+    /// Blocking poll with timeout.
+    pub fn wait_result(&self, set: usize, uid: Uid, timeout: Duration) -> Option<Vec<u8>> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            if let Some(r) = self.poll(set, uid) {
+                return Some(r);
+            }
+            if Instant::now() >= deadline {
+                return None;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+
+    /// Fresh (uncached) snapshots of every member set; also updates the
+    /// per-set load/utilization gauges.
+    pub fn snapshots(&self, app: AppId) -> Vec<SetSnapshot> {
+        let snaps: Vec<SetSnapshot> = self
+            .sets
+            .iter()
+            .enumerate()
+            .map(|(i, lock)| {
+                let set = lock.read().unwrap();
+                SetSnapshot {
+                    set: i,
+                    admission: set.admission_snapshot(app),
+                    max_stage_util: set.max_stage_utilization(app),
+                    idle_instances: set.idle_count(),
+                }
+            })
+            .collect();
+        for s in &snaps {
+            let load = s.admission.load();
+            let permille = if load.is_finite() { (load * 1000.0) as i64 } else { -1 };
+            self.metrics
+                .gauge(&format!("fed.set{}.load_permille", s.set))
+                .set(permille);
+            self.metrics
+                .gauge(&format!("fed.set{}.util_permille", s.set))
+                .set((s.max_stage_util * 1000.0) as i64);
+        }
+        snaps
+    }
+
+    /// One elasticity pass (the federation analogue of the NM's §8.2
+    /// timer). Escalation order mirrors the paper's intra-set policy:
+    /// a hot set (pressure ≥ `hot_pressure`) first absorbs its **own**
+    /// idle pool via its NM; only when that pool is empty does the
+    /// federation move an instance from the idle pool of a sibling below
+    /// `donor_max_pressure`. Returns the donation taken, if any (an
+    /// intra-set assignment returns `None` — nothing crossed a set
+    /// boundary).
+    pub fn rebalance(&self, app: AppId) -> Option<DonationAction> {
+        let _serial = self.rebalance_serial.lock().unwrap();
+        let snaps = self.snapshots(app);
+        let hot_snap = snaps
+            .iter()
+            .filter(|s| s.pressure() >= self.cfg.hot_pressure)
+            .max_by(|a, b| {
+                a.pressure()
+                    .partial_cmp(&b.pressure())
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            })?;
+        let hot = hot_snap.set;
+        // Intra-set first: the hot set's own idle instances are closer
+        // than any donation.
+        if hot_snap.idle_instances > 0
+            && self.sets[hot].read().unwrap().rebalance().is_some()
+        {
+            return None;
+        }
+        let donor = snaps
+            .iter()
+            .filter(|s| {
+                s.set != hot
+                    && s.idle_instances > 0
+                    && s.pressure() <= self.cfg.donor_max_pressure
+            })
+            .min_by(|a, b| {
+                a.pressure()
+                    .partial_cmp(&b.pressure())
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            })?
+            .set;
+        let retired = self.sets[donor].write().unwrap().retire_idle_instance()?;
+        let spawned = self.sets[hot].write().unwrap().add_idle_instance();
+        // Let the receiving set's NM place the new capacity immediately
+        // (its housekeeping timer would otherwise pick it up next sweep).
+        let _ = self.sets[hot].read().unwrap().rebalance();
+        self.metrics.counter("fed.donations").inc();
+        self.metrics.counter(&format!("fed.set{donor}.donated_out")).inc();
+        self.metrics.counter(&format!("fed.set{hot}.donated_in")).inc();
+        Some(DonationAction { from_set: donor, to_set: hot, retired, spawned })
+    }
+
+    /// Run `f` against a member set (read access).
+    pub fn with_set<R>(&self, set: usize, f: impl FnOnce(&WorkflowSet) -> R) -> R {
+        f(&self.sets[set].read().unwrap())
+    }
+
+    /// Shut down every member set.
+    pub fn shutdown(self) {
+        for lock in self.sets {
+            lock.into_inner().unwrap().shutdown();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ClusterConfig, ExecModel, FabricKind};
+    use crate::workflow::EchoLogic;
+    use crate::wset::WorkflowSet;
+    use std::sync::Arc;
+
+    /// A config whose entrance admission budget is exactly 2 requests
+    /// per monitor window (capacity 1/32 rps × 64 s window), with
+    /// instant simulated executors so shutdown never blocks.
+    fn tiny_budget_config() -> ClusterConfig {
+        let mut cfg = ClusterConfig::i2v_default();
+        cfg.fabric = FabricKind::Ideal;
+        for s in cfg.apps[0].stages.iter_mut() {
+            s.exec = ExecModel::Simulated { ms: 0.0 };
+            s.exec_ms = 1.0;
+        }
+        // Entrance: capacity = 1 worker / 32 s; budget = 1/32 × 64 = 2.
+        cfg.apps[0].stages[0].exec_ms = 32_000.0;
+        cfg.proxy.monitor_window_ms = 64_000;
+        cfg.proxy.headroom = 1.0;
+        cfg.idle_pool = 0;
+        cfg
+    }
+
+    fn build_set(cfg: &ClusterConfig, counts: Vec<usize>) -> WorkflowSet {
+        WorkflowSet::build_standalone(
+            cfg.clone(),
+            vec![counts],
+            Arc::new(EchoLogic),
+            None,
+        )
+    }
+
+    /// Frozen-snapshot router: routing loads are computed once, so the
+    /// spill order is deterministic for the whole test.
+    fn frozen(sets: Vec<WorkflowSet>) -> FederationRouter {
+        FederationRouter::new(
+            sets,
+            FederationConfig {
+                snapshot_max_age: Duration::from_secs(3600),
+                ..Default::default()
+            },
+        )
+    }
+
+    #[test]
+    fn route_order_is_ascending_load_with_dead_sets_last() {
+        let loads = [0.5, f64::INFINITY, 0.1, 0.3];
+        assert_eq!(FederationRouter::route_order(&loads), vec![2, 3, 0, 1]);
+        // Ties keep set-index order (stable sort).
+        let tied = [0.2, 0.1, 0.2, 0.1];
+        assert_eq!(FederationRouter::route_order(&tied), vec![1, 3, 0, 2]);
+    }
+
+    #[test]
+    fn spills_before_rejecting_and_rejects_only_when_all_full() {
+        let cfg = tiny_budget_config();
+        let app = AppId(1);
+        let sets = vec![
+            build_set(&cfg, vec![1, 1, 1, 1]),
+            build_set(&cfg, vec![1, 1, 1, 1]),
+        ];
+        let fed = frozen(sets);
+
+        let payload = Payload::Bytes(vec![1]);
+        // Budget 2 per set, frozen order [0, 1]: two land on set 0, the
+        // next two spill to set 1, the fifth is rejected by everyone.
+        let mut results = Vec::new();
+        for _ in 0..5 {
+            results.push(fed.submit(app, payload.clone()));
+        }
+        for (i, expect_set, expect_spill) in
+            [(0usize, 0usize, false), (1, 0, false), (2, 1, true), (3, 1, true)]
+        {
+            match &results[i] {
+                FedAdmission::Accepted { set, spilled, .. } => {
+                    assert_eq!((*set, *spilled), (expect_set, expect_spill), "req {i}");
+                }
+                other => panic!("req {i}: expected acceptance, got {other:?}"),
+            }
+        }
+        assert_eq!(results[4], FedAdmission::Rejected, "all sets full");
+
+        let counters: std::collections::HashMap<String, u64> =
+            fed.metrics().counters_snapshot().into_iter().collect();
+        assert_eq!(counters["fed.accepted"], 4);
+        assert_eq!(counters["fed.spilled"], 2);
+        assert_eq!(counters["fed.rejected"], 1);
+        assert_eq!(counters["fed.set0.accepted"], 2);
+        assert_eq!(counters["fed.set1.accepted"], 2);
+        assert_eq!(counters["fed.set1.spill_in"], 2);
+        fed.shutdown();
+    }
+
+    #[test]
+    fn no_spill_mode_rejects_at_first_full_set() {
+        let cfg = tiny_budget_config();
+        let app = AppId(1);
+        let sets = vec![
+            build_set(&cfg, vec![1, 1, 1, 1]),
+            build_set(&cfg, vec![1, 1, 1, 1]),
+        ];
+        let fed = FederationRouter::new(
+            sets,
+            FederationConfig {
+                spill: false,
+                snapshot_max_age: Duration::from_secs(3600),
+                ..Default::default()
+            },
+        );
+        let payload = Payload::Bytes(vec![2]);
+        let mut accepted = 0;
+        let mut rejected = 0;
+        for _ in 0..4 {
+            match fed.submit(app, payload.clone()) {
+                FedAdmission::Accepted { .. } => accepted += 1,
+                FedAdmission::Rejected => rejected += 1,
+            }
+        }
+        // Frozen order pins everything on set 0 (budget 2); without spill
+        // the sibling's spare capacity is unreachable.
+        assert_eq!((accepted, rejected), (2, 2));
+        fed.shutdown();
+    }
+
+    #[test]
+    fn dead_set_is_routed_around_without_counting_as_spill() {
+        let cfg = tiny_budget_config();
+        let app = AppId(1);
+        // Set 0 has no entrance instances (regional failure): load = ∞.
+        let sets = vec![
+            build_set(&cfg, vec![0, 1, 1, 1]),
+            build_set(&cfg, vec![1, 1, 1, 1]),
+        ];
+        let fed = frozen(sets);
+        match fed.submit(app, Payload::Bytes(vec![3])) {
+            FedAdmission::Accepted { set, spilled, .. } => {
+                assert_eq!(set, 1, "healthy set preferred");
+                assert!(!spilled, "routing around a dead set is not a spill");
+            }
+            other => panic!("expected acceptance, got {other:?}"),
+        }
+        fed.shutdown();
+    }
+
+    #[test]
+    fn donation_moves_idle_capacity_to_hot_set() {
+        let mut cfg = tiny_budget_config();
+        cfg.nm.util_window_ms = 2_000;
+        let app = AppId(1);
+        let mut hot_cfg = cfg.clone();
+        hot_cfg.idle_pool = 0;
+        let mut cold_cfg = cfg.clone();
+        cold_cfg.idle_pool = 2;
+        let sets = vec![
+            build_set(&hot_cfg, vec![1, 1, 1, 1]),
+            build_set(&cold_cfg, vec![1, 1, 1, 1]),
+        ];
+        let fed = frozen(sets);
+        assert_eq!(fed.with_set(1, |s| s.idle_count()), 2);
+
+        // Saturate set 0's diffusion stage. Instances self-report ~0
+        // continuously, so re-assert until a rebalance pass observes the
+        // hot reading (same idiom as the wset housekeeper test).
+        let diffusion = crate::nm::StageKey { app, stage: 2 };
+        let node = fed.with_set(0, |s| s.nm.stage_instances(diffusion)[0]);
+        let deadline = Instant::now() + Duration::from_secs(5);
+        let mut action = None;
+        while action.is_none() && Instant::now() < deadline {
+            fed.with_set(0, |s| {
+                use crate::workflow::ControlPlane;
+                s.nm.report_utilization(node, 0.99);
+            });
+            action = fed.rebalance(app);
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let action = action.expect("hot set must receive a donation");
+        assert_eq!(action.from_set, 1);
+        assert_eq!(action.to_set, 0);
+        assert_eq!(fed.with_set(1, |s| s.idle_count()), 1, "donor shrank");
+        let counters: std::collections::HashMap<String, u64> =
+            fed.metrics().counters_snapshot().into_iter().collect();
+        assert_eq!(counters["fed.donations"], 1);
+        assert_eq!(counters["fed.set1.donated_out"], 1);
+        assert_eq!(counters["fed.set0.donated_in"], 1);
+        fed.shutdown();
+    }
+}

@@ -12,19 +12,24 @@
 //!   control, workflow instances (TaskManager / RequestScheduler /
 //!   TaskWorkers / ResultDeliver), the NodeManager with Paxos primary
 //!   election, the memory-centric database layer, the simulated RDMA
-//!   fabric, and the paper's deadlock-free multi-producer **double-ring
-//!   buffer** ([`ringbuf`]).
+//!   fabric, the paper's deadlock-free multi-producer **double-ring
+//!   buffer** ([`ringbuf`]), and the cross-set [`federation`] layer
+//!   (global load-aware routing, spill, and elastic instance donation
+//!   over N Workflow Sets).
 //! - **L2/L1 (build-time python)**: JAX stage models calling Pallas
 //!   kernels, AOT-lowered once to `artifacts/*.hlo.txt`.
 //! - **Runtime bridge**: [`runtime`] loads the HLO artifacts through the
-//!   PJRT CPU client (`xla` crate) — python never runs on the request path.
+//!   PJRT CPU client (`xla` crate, behind the `pjrt` feature) — python
+//!   never runs on the request path.
 //!
-//! See `DESIGN.md` for the full system inventory and the experiment index,
-//! and `EXPERIMENTS.md` for reproduced results.
+//! See `DESIGN.md` for the full system inventory and the request
+//! lifecycle walkthrough, and `EXPERIMENTS.md` for the experiment index
+//! mapping every bench/example to the paper claim it reproduces.
 
 pub mod bench;
 pub mod config;
 pub mod db;
+pub mod federation;
 pub mod metrics;
 pub mod nm;
 pub mod paxos;

@@ -1,11 +1,13 @@
-//! OnePiece leader binary: CLI for running a Workflow Set, printing
-//! pipeline plans / schedule traces, and driving the resource simulator.
+//! OnePiece leader binary: CLI for running a Workflow Set, federating
+//! several sets behind the global load-aware router, printing pipeline
+//! plans / schedule traces, and driving the resource simulator.
 //!
 //! Argument parsing is hand-rolled (the offline build has no clap); see
 //! `onepiece help` for usage.
 
 use anyhow::{bail, Context, Result};
-use onepiece::config::ClusterConfig;
+use onepiece::config::{ClusterConfig, ExecModel};
+use onepiece::federation::{FedAdmission, FederationConfig, FederationRouter};
 use onepiece::pipeline::{trace_schedule, TraceStage};
 use onepiece::sim::{
     simulate_disaggregated, simulate_monolithic, wan_stages, ArrivalProcess,
@@ -17,7 +19,7 @@ use onepiece::wset::{build_pool, WorkflowSet};
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 const HELP: &str = "\
 onepiece — distributed AIGC inference (paper reproduction)
@@ -26,6 +28,10 @@ USAGE:
   onepiece serve [--requests N] [--steps S] [--artifacts DIR] [--sim]
       Run one Workflow Set end-to-end (PJRT stage executables unless
       --sim) and report latency/throughput.
+  onepiece federate [--sets N] [--rate R] [--duration S] --sim
+      Run N Workflow Sets behind the global load-aware FederationRouter
+      under bursty (MMPP) load; report per-set throughput, spill count,
+      reject rate, and cross-set donations.
   onepiece plan [--entrance N]
       Print the Theorem-1 instance plan for the i2v pipeline.
   onepiece trace (--fig5 | --fig6)
@@ -62,6 +68,7 @@ fn main() -> Result<()> {
     let flags = parse_flags(&args[1.min(args.len())..]);
     match cmd {
         "serve" => serve(&flags),
+        "federate" => federate(&flags),
         "plan" => plan(&flags),
         "trace" => trace(&flags),
         "sim-resources" => sim_resources(&flags),
@@ -152,6 +159,176 @@ fn serve(flags: &HashMap<String, String>) -> Result<()> {
         );
     }
     set.shutdown();
+    Ok(())
+}
+
+/// `onepiece federate`: N Workflow Sets behind the global load-aware
+/// router, driven by a bursty MMPP arrival stream. Set 0 models a
+/// heterogeneous (slower-GPU) region so cross-set donation has somewhere
+/// to act: its diffusion executor runs slower than its siblings', its
+/// utilization climbs, and the router moves idle-pool instances in.
+fn federate(flags: &HashMap<String, String>) -> Result<()> {
+    let n_sets: usize = flags.get("sets").map_or(Ok(3), |s| s.parse())?;
+    let rate: f64 = flags.get("rate").map_or(Ok(100.0), |s| s.parse())?;
+    let duration_s: f64 = flags.get("duration").map_or(Ok(5.0), |s| s.parse())?;
+    if !flags.contains_key("sim") {
+        bail!(
+            "`onepiece federate` requires --sim for now: PJRT-backed federation \
+             needs `make artifacts` plus the `pjrt` feature"
+        );
+    }
+    if n_sets == 0 {
+        bail!("--sets must be >= 1");
+    }
+
+    // Per-set config: entrance admission capped at 25 req/s
+    // (exec_ms = 40 at 1 worker), instant simulated stage compute except
+    // set 0's diffusion, which runs 30x slower than its siblings'.
+    let app = AppId(1);
+    let base = {
+        let mut cfg = ClusterConfig::i2v_default();
+        cfg.sets = n_sets;
+        cfg.fabric = onepiece::config::FabricKind::Ideal;
+        for s in cfg.apps[0].stages.iter_mut() {
+            s.exec = ExecModel::Simulated { ms: 1.0 };
+        }
+        cfg.apps[0].stages[0].exec_ms = 40.0;
+        cfg.idle_pool = 2;
+        cfg
+    };
+    let sets: Vec<WorkflowSet> = (0..n_sets)
+        .map(|i| {
+            let mut cfg = base.clone();
+            let diffusion_ms = if i == 0 { 60.0 } else { 2.0 };
+            cfg.apps[0].stages[2].exec = ExecModel::Simulated { ms: diffusion_ms };
+            let counts = vec![WorkflowSet::theorem1_counts(&cfg.apps[0], 1)];
+            WorkflowSet::build_standalone(
+                cfg,
+                counts,
+                Arc::new(onepiece::workflow::EchoLogic),
+                None,
+            )
+        })
+        .collect();
+    let fed = FederationRouter::new(sets, FederationConfig::default());
+    std::thread::sleep(Duration::from_millis(100)); // assignments settle
+
+    // Bursty offered load: MMPP alternating rate/4 and rate.
+    let arrivals = ArrivalProcess::Mmpp {
+        low_rps: rate / 4.0,
+        high_rps: rate,
+        mean_dwell_s: 1.0,
+    }
+    .generate(42, duration_s);
+    println!(
+        "federation: {n_sets} sets x 25 req/s admission capacity | offered MMPP \
+         {:.0}-{rate:.0} req/s | {} arrivals over {duration_s}s",
+        rate / 4.0,
+        arrivals.len()
+    );
+
+    /// Move completed requests out of `pending`, recording latency at
+    /// the moment the result is first observed (so reported latency is
+    /// submission→completion, not submission→post-hoc drain).
+    fn drain_completed(
+        fed: &FederationRouter,
+        pending: &mut Vec<(usize, onepiece::util::Uid, Instant)>,
+        per_set_done: &mut [usize],
+        latencies_ms: &mut Vec<f64>,
+    ) {
+        pending.retain(|&(set, uid, submitted)| {
+            if fed.poll(set, uid).is_some() {
+                per_set_done[set] += 1;
+                latencies_ms.push(submitted.elapsed().as_secs_f64() * 1e3);
+                false
+            } else {
+                true
+            }
+        });
+    }
+
+    let payload = Payload::Bytes(vec![7u8; 64]);
+    let t0 = Instant::now();
+    let mut pending: Vec<(usize, onepiece::util::Uid, Instant)> = Vec::new();
+    let mut per_set_done = vec![0usize; n_sets];
+    let mut latencies_ms: Vec<f64> = Vec::new();
+    let mut admitted_total = 0usize;
+    let mut next_rebalance = 0.25f64;
+    for &arr in &arrivals {
+        let target = t0 + Duration::from_secs_f64(arr);
+        let now = Instant::now();
+        if target > now {
+            std::thread::sleep(target - now);
+        }
+        // Catch up the timer through idle gaps (sparse arrivals must not
+        // leave the schedule permanently behind).
+        while arr >= next_rebalance {
+            if let Some(d) = fed.rebalance(app) {
+                println!(
+                    "  [t={arr:.2}s] donation: set {} -> set {} ({} retired, {} joined)",
+                    d.from_set, d.to_set, d.retired, d.spawned
+                );
+            }
+            next_rebalance += 0.25;
+        }
+        if let FedAdmission::Accepted { set, uid, .. } = fed.submit(app, payload.clone())
+        {
+            admitted_total += 1;
+            pending.push((set, uid, Instant::now()));
+        }
+        drain_completed(&fed, &mut pending, &mut per_set_done, &mut latencies_ms);
+    }
+
+    // Drain the backlog (set 0's slow diffusion keeps a queue).
+    let drain_deadline = Instant::now() + Duration::from_secs(15);
+    while !pending.is_empty() && Instant::now() < drain_deadline {
+        drain_completed(&fed, &mut pending, &mut per_set_done, &mut latencies_ms);
+        if !pending.is_empty() {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    let counters: HashMap<String, u64> =
+        fed.metrics().counters_snapshot().into_iter().collect();
+    let get = |k: &str| counters.get(k).copied().unwrap_or(0);
+    let snaps = fed.snapshots(app);
+    println!(
+        "\n{:<6} {:>9} {:>10} {:>12} {:>10} {:>10} {:>6}",
+        "set", "accepted", "completed", "thr (req/s)", "spill-in", "util", "idle"
+    );
+    for s in &snaps {
+        let acc = get(&format!("fed.set{}.accepted", s.set));
+        println!(
+            "{:<6} {:>9} {:>10} {:>12.1} {:>10} {:>9.1}% {:>6}",
+            format!("set{}", s.set),
+            acc,
+            per_set_done[s.set],
+            per_set_done[s.set] as f64 / wall,
+            get(&format!("fed.set{}.spill_in", s.set)),
+            s.max_stage_util * 100.0,
+            s.idle_instances,
+        );
+    }
+    let submitted = get("fed.submitted");
+    let rejected = get("fed.rejected");
+    latencies_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    println!(
+        "\ntotals: submitted {submitted} | accepted {} | spilled {} | rejected \
+         {rejected} ({:.1}% reject rate) | donations {}",
+        get("fed.accepted"),
+        get("fed.spilled"),
+        100.0 * rejected as f64 / submitted.max(1) as f64,
+        get("fed.donations"),
+    );
+    println!(
+        "latency: completed {}/{} | p50 {:.1} ms | p99 {:.1} ms | wall {wall:.1}s",
+        latencies_ms.len(),
+        admitted_total,
+        onepiece::sim::percentile(&latencies_ms, 0.5),
+        onepiece::sim::percentile(&latencies_ms, 0.99),
+    );
+    fed.shutdown();
     Ok(())
 }
 

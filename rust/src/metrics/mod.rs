@@ -88,6 +88,21 @@ impl Registry {
         m.entry(name.to_string()).or_default().clone()
     }
 
+    /// Sorted snapshot of every counter (the federation layer's
+    /// spill/reject/donation accounting reads this for its reports).
+    pub fn counters_snapshot(&self) -> Vec<(String, u64)> {
+        let mut out: Vec<(String, u64)> = self
+            .inner
+            .counters
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.get()))
+            .collect();
+        out.sort();
+        out
+    }
+
     /// Render all metrics as sorted `name value` lines (for logs/demos).
     pub fn render(&self) -> String {
         let mut lines = Vec::new();
@@ -131,6 +146,17 @@ mod tests {
         let b = r.counter("x");
         a.inc();
         assert_eq!(b.get(), 1);
+    }
+
+    #[test]
+    fn counters_snapshot_sorted() {
+        let r = Registry::new();
+        r.counter("b").add(2);
+        r.counter("a").inc();
+        assert_eq!(
+            r.counters_snapshot(),
+            vec![("a".to_string(), 1), ("b".to_string(), 2)]
+        );
     }
 
     #[test]

@@ -6,6 +6,13 @@
 //! first, then the most-underutilized donor stage) → delivers the new
 //! role + routing (next hops) → the instance initializes models and
 //! updates its RD.
+//!
+//! For multi-set federation the NM additionally supports **cross-set
+//! elasticity**: [`NodeManager::release_idle`] donates an idle-pool
+//! instance out of this set (its GPUs return to the shared regional
+//! pool) and [`NodeManager::deregister_instance`] removes a node from
+//! the registry entirely; the receiving set registers a fresh instance
+//! and lets its own §8.2 pass absorb it. See [`crate::federation`].
 
 use crate::config::{AppConfig, SchedMode};
 use crate::rdma::RegionId;
@@ -90,6 +97,39 @@ impl NodeManager {
         let v = s.next_version;
         s.next_version += 1;
         s.versions.insert(node, v);
+    }
+
+    /// Remove `node` from the registry entirely (node death, or cross-set
+    /// donation: the instance's GPUs leave this set). Upstream stages get
+    /// their routing versions bumped so they stop delivering to it.
+    /// Returns the removed instance's info, if it was registered.
+    pub fn deregister_instance(&self, node: NodeId) -> Option<InstanceInfo> {
+        let mut s = self.state.lock().unwrap();
+        let info = s.instances.remove(&node)?;
+        s.versions.remove(&node);
+        if let Some(role) = info.role {
+            Self::bump_upstream_of(&mut s, role);
+        }
+        Some(info)
+    }
+
+    /// Donate one idle-pool instance (§8.2 pool, federation donate path):
+    /// deregisters and returns the lowest-numbered idle node, or `None`
+    /// when the pool is empty — a set never donates assigned capacity.
+    /// Find-and-remove happens under one lock acquisition so a concurrent
+    /// rebalance pass cannot assign the node in between (which would
+    /// silently donate serving capacity).
+    pub fn release_idle(&self) -> Option<NodeId> {
+        let mut s = self.state.lock().unwrap();
+        let node = s
+            .instances
+            .values()
+            .find(|i| i.role.is_none())
+            .map(|i| i.node)?;
+        s.instances.remove(&node);
+        s.versions.remove(&node);
+        // An idle node has no role, so no upstream routing to bump.
+        Some(node)
     }
 
     /// Assign `node` to a stage (or `None` to park it in the idle pool).
@@ -472,6 +512,54 @@ mod tests {
         nm.report_utilization(NodeId(1), 0.95);
         nm.report_utilization(NodeId(2), 0.80); // donor too busy
         assert!(nm.rebalance().is_none());
+    }
+
+    #[test]
+    fn release_idle_donates_only_unassigned_capacity() {
+        let nm = nm();
+        nm.register_instance(NodeId(1), RegionId(10));
+        nm.register_instance(NodeId(2), RegionId(20));
+        nm.assign(NodeId(1), Some(key(0)));
+        // Only node 2 is idle; it is donated, then the pool is empty.
+        assert_eq!(nm.release_idle(), Some(NodeId(2)));
+        assert!(nm.idle_pool().is_empty());
+        assert_eq!(nm.release_idle(), None, "assigned capacity is never donated");
+        assert_eq!(nm.stage_instances(key(0)), vec![NodeId(1)]);
+    }
+
+    #[test]
+    fn deregister_removes_routing_and_bumps_upstream() {
+        let nm = nm();
+        nm.register_instance(NodeId(1), RegionId(10));
+        nm.register_instance(NodeId(2), RegionId(20));
+        nm.assign(NodeId(1), Some(key(0)));
+        nm.assign(NodeId(2), Some(key(1)));
+        let v_before = nm.get_assignment(NodeId(1)).version;
+        let gone = nm.deregister_instance(NodeId(2)).unwrap();
+        assert_eq!(gone.role, Some(key(1)));
+        assert!(nm.stage_instances(key(1)).is_empty());
+        // Upstream (stage 0) must observe the routing change…
+        assert!(nm.get_assignment(NodeId(1)).version > v_before);
+        // …and its next-hop list no longer contains the dead region.
+        let role = nm.get_assignment(NodeId(1)).role.unwrap();
+        assert!(role.routes[0].1.is_empty());
+        // Double-deregister is a no-op.
+        assert!(nm.deregister_instance(NodeId(2)).is_none());
+    }
+
+    #[test]
+    fn donate_reclaim_cycle_restores_capacity() {
+        // Federation round-trip: set A donates an idle node, later
+        // reclaims equivalent capacity by registering a fresh instance.
+        let nm = nm();
+        nm.register_instance(NodeId(1), RegionId(10));
+        let donated = nm.release_idle().unwrap();
+        assert_eq!(donated, NodeId(1));
+        nm.register_instance(NodeId(7), RegionId(70));
+        assert_eq!(nm.idle_pool(), vec![NodeId(7)]);
+        // The reclaimed instance is schedulable like any other.
+        nm.assign(NodeId(7), Some(key(2)));
+        assert_eq!(nm.stage_instances(key(2)), vec![NodeId(7)]);
     }
 
     #[test]

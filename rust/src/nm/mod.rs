@@ -2,11 +2,14 @@
 //! network locations and utilization, with
 //!
 //! - Paxos-based primary election over a replica set (§8.1) —
-//!   [`election::NmCluster`];
+//!   [`NmCluster`];
 //! - GPU-utilization-driven instance (re)assignment with an idle pool
 //!   (§8.2) — [`NodeManager::rebalance`];
 //! - cross-workflow instance sharing (§8.3) —
-//!   [`NodeManager::share_stage`].
+//!   [`NodeManager::share_stage`];
+//! - cross-set donate/reclaim for the federation layer —
+//!   [`NodeManager::release_idle`] / [`NodeManager::deregister_instance`]
+//!   (see [`crate::federation`]).
 
 mod election;
 mod manager;

@@ -7,6 +7,12 @@
 //! information (Theorem 1) and **immediately rejects** arrivals beyond
 //! it, keeping in-system latency flat under overload; rejected clients
 //! retry against a different Workflow Set (§3.2).
+//!
+//! In a federated deployment the proxy additionally *exports* its
+//! admission state ([`Proxy::admission_snapshot`]) so the global
+//! [`crate::federation::FederationRouter`] can pick the least-loaded
+//! admitting set up front and spill overload to siblings before any
+//! client-visible rejection happens.
 
 mod monitor;
 
@@ -27,6 +33,35 @@ pub enum Admission {
     Accepted(Uid),
     /// Fast-rejected: the set is at capacity — try another set.
     Rejected,
+}
+
+/// Point-in-time export of one proxy's admission state, consumed by the
+/// cross-set [`crate::federation::FederationRouter`]: the federation
+/// layer routes each request to the set whose proxy reports the most
+/// admission headroom, instead of the paper's client-side random retry.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AdmissionSnapshot {
+    /// Sustainable entrance rate `K/T_X` from live NM instance info (§5).
+    pub capacity_rps: f64,
+    /// Admitted arrival rate over the monitor window.
+    pub arrival_rps: f64,
+    /// Lifetime accepted count.
+    pub accepted: u64,
+    /// Lifetime fast-rejected count.
+    pub rejected: u64,
+}
+
+impl AdmissionSnapshot {
+    /// Normalized admission load: admitted rate over capacity. A set with
+    /// no entrance capacity is infinitely loaded (routes last, §3.2
+    /// fault-isolation boundary).
+    pub fn load(&self) -> f64 {
+        if self.capacity_rps <= 0.0 {
+            f64::INFINITY
+        } else {
+            self.arrival_rps / self.capacity_rps
+        }
+    }
 }
 
 /// A proxy bound to one Workflow Set.
@@ -125,6 +160,16 @@ impl Proxy {
         let idx = entry.1 % entry.0.len();
         entry.1 = entry.1.wrapping_add(1);
         entry.0[idx].send(msg)
+    }
+
+    /// Export the fast-reject state for the federation router.
+    pub fn admission_snapshot(&self, app: AppId) -> AdmissionSnapshot {
+        AdmissionSnapshot {
+            capacity_rps: self.capacity_rps(app),
+            arrival_rps: self.monitor.rate_rps(),
+            accepted: self.accepted.load(std::sync::atomic::Ordering::Relaxed),
+            rejected: self.rejected.load(std::sync::atomic::Ordering::Relaxed),
+        }
     }
 
     /// Poll for a result (client retrieval path; purges on success).
@@ -232,6 +277,31 @@ mod tests {
             1.0,
         );
         assert_eq!(proxy.submit(AppId(1), Payload::Bytes(vec![])), Admission::Rejected);
+    }
+
+    #[test]
+    fn admission_snapshot_tracks_load() {
+        let (clock, _nm, _f, proxy, _ep) = setup();
+        let s0 = proxy.admission_snapshot(AppId(1));
+        assert!((s0.capacity_rps - 250.0).abs() < 1e-9);
+        assert_eq!(s0.load(), 0.0);
+        // Admit a burst; the exported arrival rate and load rise.
+        for _ in 0..50 {
+            clock.advance(1_000_000);
+            let _ = proxy.submit(AppId(1), Payload::Bytes(vec![0]));
+        }
+        let s1 = proxy.admission_snapshot(AppId(1));
+        assert!(s1.arrival_rps > 0.0);
+        assert!(s1.load() > 0.0);
+        assert_eq!(s1.accepted + s1.rejected, 50);
+        // Zero capacity exports an infinite load (routes last).
+        let zero = AdmissionSnapshot {
+            capacity_rps: 0.0,
+            arrival_rps: 0.0,
+            accepted: 0,
+            rejected: 0,
+        };
+        assert_eq!(zero.load(), f64::INFINITY);
     }
 
     #[test]

@@ -27,6 +27,7 @@ impl TensorValue {
     }
 
     /// Build an xla literal with the manifest shape.
+    #[cfg(feature = "pjrt")]
     pub fn to_literal(&self, shape: &[usize]) -> Result<xla::Literal> {
         let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
         let expected: usize = shape.iter().product();
@@ -124,6 +125,7 @@ mod tests {
         assert!(t0.elapsed() >= Duration::from_millis(5));
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn tensor_value_shape_mismatch() {
         let tv = TensorValue::F32(vec![0.0; 4]);

@@ -1,0 +1,377 @@
+//! Discrete-event model of multi-set federation (E11): N Workflow Sets
+//! with window-budget fast-reject admission (§5), client preference skew,
+//! cross-set spill, and optional elastic capacity donation (the
+//! federation analogue of §8.2 idle-pool scaling).
+//!
+//! The model answers the deployment questions the real-stack
+//! `onepiece federate` driver is too slow to sweep: how reject rate,
+//! spill volume, and tail latency move as the routing policy changes from
+//! the paper's client-side random retry (§3.2) to the
+//! [`crate::federation::FederationRouter`]'s load-aware-plus-spill
+//! policy, and as elastic donation is switched on.
+
+use super::{percentile, ArrivalProcess};
+use crate::util::Rng;
+use std::collections::VecDeque;
+
+/// How requests pick a Workflow Set.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FedPolicy {
+    /// §3.2 client-side policy: submit to the (preference-weighted)
+    /// random set, then retry the others in ring order on fast-reject.
+    RandomSpill,
+    /// Federation policy: least-loaded set first, spill in
+    /// ascending-load order.
+    LoadAware,
+}
+
+/// Federation model parameters.
+#[derive(Debug, Clone)]
+pub struct FedSimConfig {
+    /// Number of Workflow Sets.
+    pub sets: usize,
+    /// Per-set sustainable admission rate `K/T_X` (§5).
+    pub capacity_rps: f64,
+    /// End-to-end service time of an admitted request (normalized
+    /// pipeline latency).
+    pub service_s: f64,
+    /// Admission monitor window.
+    pub window_s: f64,
+    pub duration_s: f64,
+    /// Client regional affinity: preference weight of set `i` is
+    /// `1 / (1 + skew·i)`; `0.0` = uniform.
+    pub skew: f64,
+    pub policy: FedPolicy,
+    /// Move capacity between sets on a timer (cross-set donation).
+    pub elastic: bool,
+    pub rebalance_period_s: f64,
+}
+
+impl FedSimConfig {
+    /// A balanced baseline: `sets` sets, uniform preference, load-aware
+    /// routing, no elasticity.
+    pub fn balanced(sets: usize, capacity_rps: f64, duration_s: f64) -> Self {
+        Self {
+            sets,
+            capacity_rps,
+            service_s: 1.0,
+            window_s: 2.0,
+            duration_s,
+            skew: 0.0,
+            policy: FedPolicy::LoadAware,
+            elastic: false,
+            rebalance_period_s: 5.0,
+        }
+    }
+}
+
+/// Aggregate outcome of one federation simulation.
+#[derive(Debug, Clone)]
+pub struct FedSimOutcome {
+    pub offered: usize,
+    pub admitted: usize,
+    pub rejected: usize,
+    /// Admitted by a set other than the router's first choice.
+    pub spilled: usize,
+    /// Cross-set capacity moves (elastic mode).
+    pub donations: usize,
+    /// Requests finishing within the simulated horizon.
+    pub completed: usize,
+    pub p50_latency_s: f64,
+    pub p99_latency_s: f64,
+    pub per_set_admitted: Vec<usize>,
+}
+
+impl FedSimOutcome {
+    /// Fraction of offered requests rejected by every set.
+    pub fn reject_rate(&self) -> f64 {
+        self.rejected as f64 / (self.offered.max(1)) as f64
+    }
+
+    /// Spread of admitted traffic across sets (max − min), a balance
+    /// measure.
+    pub fn admitted_spread(&self) -> usize {
+        let max = self.per_set_admitted.iter().copied().max().unwrap_or(0);
+        let min = self.per_set_admitted.iter().copied().min().unwrap_or(0);
+        max - min
+    }
+}
+
+/// One modelled Workflow Set: window-budget admission + FIFO servers.
+struct SimSet {
+    capacity_rps: f64,
+    /// Per-server next-free times; length tracks donated capacity quanta.
+    servers: Vec<f64>,
+    /// Admission timestamps inside the monitor window.
+    window: VecDeque<f64>,
+    admitted: usize,
+}
+
+impl SimSet {
+    fn new(capacity_rps: f64, service_s: f64) -> Self {
+        let n = (capacity_rps * service_s).ceil().max(1.0) as usize;
+        Self {
+            capacity_rps,
+            servers: vec![0.0; n],
+            window: VecDeque::new(),
+            admitted: 0,
+        }
+    }
+
+    fn evict(&mut self, t: f64, window_s: f64) {
+        while self.window.front().is_some_and(|&x| x < t - window_s) {
+            self.window.pop_front();
+        }
+    }
+
+    /// Normalized admission load (∞ for a set with no capacity).
+    fn load(&mut self, t: f64, window_s: f64) -> f64 {
+        if self.capacity_rps <= 0.0 {
+            return f64::INFINITY;
+        }
+        self.evict(t, window_s);
+        (self.window.len() as f64 / window_s) / self.capacity_rps
+    }
+
+    /// The §5 fast-reject decision.
+    fn try_admit(&mut self, t: f64, window_s: f64) -> bool {
+        if self.capacity_rps <= 0.0 {
+            return false;
+        }
+        self.evict(t, window_s);
+        let budget = ((self.capacity_rps * window_s).floor() as usize).max(1);
+        if self.window.len() >= budget {
+            return false;
+        }
+        self.window.push_back(t);
+        self.admitted += 1;
+        true
+    }
+
+    /// FIFO dispatch onto the earliest-free server; returns completion
+    /// time.
+    fn serve(&mut self, t: f64, service_s: f64) -> f64 {
+        let (idx, earliest) = self
+            .servers
+            .iter()
+            .copied()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap();
+        let end = t.max(earliest) + service_s;
+        self.servers[idx] = end;
+        end
+    }
+}
+
+/// Run the federation model over one arrival trace.
+pub fn simulate_federation(
+    cfg: &FedSimConfig,
+    process: &ArrivalProcess,
+    seed: u64,
+) -> FedSimOutcome {
+    let arrivals = process.generate(seed, cfg.duration_s);
+    let mut rng = Rng::new(seed ^ 0x5EED_F00D);
+    let mut sets: Vec<SimSet> = (0..cfg.sets.max(1))
+        .map(|_| SimSet::new(cfg.capacity_rps, cfg.service_s))
+        .collect();
+    let n = sets.len();
+    let weights: Vec<f64> = (0..n).map(|i| 1.0 / (1.0 + cfg.skew * i as f64)).collect();
+    let wsum: f64 = weights.iter().sum();
+    // One server's worth of admission capacity moves per donation.
+    let quantum_rps = 1.0 / cfg.service_s;
+
+    let mut latencies: Vec<f64> = Vec::new();
+    let mut rejected = 0usize;
+    let mut spilled = 0usize;
+    let mut donations = 0usize;
+    let mut completed = 0usize;
+    let mut next_rebalance = cfg.rebalance_period_s;
+
+    for &t in &arrivals {
+        // --- elastic donation timer ---
+        while cfg.elastic && t >= next_rebalance {
+            let loads: Vec<f64> = sets
+                .iter_mut()
+                .map(|s| s.load(next_rebalance, cfg.window_s))
+                .collect();
+            let hot = (0..n)
+                .filter(|&i| loads[i].is_finite())
+                .max_by(|&a, &b| loads[a].partial_cmp(&loads[b]).unwrap());
+            let cold = (0..n).min_by(|&a, &b| {
+                loads[a]
+                    .partial_cmp(&loads[b])
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            });
+            if let (Some(hot), Some(cold)) = (hot, cold) {
+                if hot != cold
+                    && loads[hot] >= 0.9
+                    && loads[cold] <= 0.5
+                    && sets[cold].servers.len() > 1
+                {
+                    sets[cold].servers.pop();
+                    sets[cold].capacity_rps =
+                        (sets[cold].capacity_rps - quantum_rps).max(0.0);
+                    sets[hot].servers.push(next_rebalance);
+                    sets[hot].capacity_rps += quantum_rps;
+                    donations += 1;
+                }
+            }
+            next_rebalance += cfg.rebalance_period_s;
+        }
+
+        // --- preferred set (client regional affinity) ---
+        let mut pick = rng.f64() * wsum;
+        let mut pref = n - 1;
+        for (i, w) in weights.iter().enumerate() {
+            if pick < *w {
+                pref = i;
+                break;
+            }
+            pick -= w;
+        }
+
+        // --- routing order per policy ---
+        let order: Vec<usize> = match cfg.policy {
+            FedPolicy::RandomSpill => (0..n).map(|k| (pref + k) % n).collect(),
+            FedPolicy::LoadAware => {
+                let loads: Vec<f64> =
+                    sets.iter_mut().map(|s| s.load(t, cfg.window_s)).collect();
+                // Same ordering function the real router uses, so the
+                // model predicts exactly the deployed policy.
+                crate::federation::FederationRouter::route_order(&loads)
+            }
+        };
+
+        // --- admit with spill, reject only when every set is full ---
+        let mut landed = None;
+        for (attempt, &i) in order.iter().enumerate() {
+            if sets[i].try_admit(t, cfg.window_s) {
+                landed = Some((attempt, i));
+                break;
+            }
+        }
+        match landed {
+            Some((attempt, i)) => {
+                if attempt > 0 {
+                    spilled += 1;
+                }
+                let end = sets[i].serve(t, cfg.service_s);
+                latencies.push(end - t);
+                if end <= cfg.duration_s {
+                    completed += 1;
+                }
+            }
+            None => rejected += 1,
+        }
+    }
+
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    FedSimOutcome {
+        offered: arrivals.len(),
+        admitted: latencies.len(),
+        rejected,
+        spilled,
+        donations,
+        completed,
+        p50_latency_s: percentile(&latencies, 0.5),
+        p99_latency_s: percentile(&latencies, 0.99),
+        per_set_admitted: sets.iter().map(|s| s.admitted).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn federation_rejects_less_than_one_set_at_same_offered_load() {
+        // Acceptance shape for E11: identical offered load, 1 set vs 3
+        // federated sets — the federation's reject rate must be lower.
+        let offered = ArrivalProcess::Poisson { rate_rps: 15.0 };
+        let single = simulate_federation(
+            &FedSimConfig::balanced(1, 10.0, 300.0),
+            &offered,
+            11,
+        );
+        let fed = simulate_federation(
+            &FedSimConfig::balanced(3, 10.0, 300.0),
+            &offered,
+            11,
+        );
+        assert!(
+            single.reject_rate() > 0.2,
+            "single set must be overloaded: {}",
+            single.reject_rate()
+        );
+        assert!(
+            fed.reject_rate() < single.reject_rate(),
+            "federation {} vs single {}",
+            fed.reject_rate(),
+            single.reject_rate()
+        );
+        assert_eq!(fed.offered, single.offered, "identical offered load");
+    }
+
+    #[test]
+    fn load_aware_routing_balances_and_spills_less_than_random() {
+        let offered = ArrivalProcess::Poisson { rate_rps: 20.0 };
+        let mut cfg = FedSimConfig::balanced(3, 10.0, 300.0);
+        cfg.skew = 4.0; // clients strongly prefer set 0
+        cfg.policy = FedPolicy::RandomSpill;
+        let random = simulate_federation(&cfg, &offered, 7);
+        cfg.policy = FedPolicy::LoadAware;
+        let load_aware = simulate_federation(&cfg, &offered, 7);
+        assert!(
+            load_aware.spilled < random.spilled,
+            "load-aware {} vs random {}",
+            load_aware.spilled,
+            random.spilled
+        );
+        assert!(
+            load_aware.admitted_spread() < random.admitted_spread(),
+            "load-aware spread {} vs random {}",
+            load_aware.admitted_spread(),
+            random.admitted_spread()
+        );
+        assert!(load_aware.rejected <= random.rejected);
+    }
+
+    #[test]
+    fn elastic_donation_follows_skewed_demand() {
+        let offered = ArrivalProcess::Poisson { rate_rps: 20.0 };
+        let mut cfg = FedSimConfig::balanced(3, 10.0, 300.0);
+        cfg.skew = 4.0;
+        cfg.policy = FedPolicy::RandomSpill; // affinity-pinned clients
+        let frozen = simulate_federation(&cfg, &offered, 13);
+        cfg.elastic = true;
+        let elastic = simulate_federation(&cfg, &offered, 13);
+        assert!(elastic.donations > 0, "capacity must move toward the hot set");
+        assert!(
+            elastic.spilled < frozen.spilled,
+            "donated capacity absorbs the hot set's overflow: {} vs {}",
+            elastic.spilled,
+            frozen.spilled
+        );
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let cfg = FedSimConfig::balanced(3, 5.0, 60.0);
+        let p = ArrivalProcess::Poisson { rate_rps: 8.0 };
+        let a = simulate_federation(&cfg, &p, 3);
+        let b = simulate_federation(&cfg, &p, 3);
+        assert_eq!(a.per_set_admitted, b.per_set_admitted);
+        assert_eq!(a.rejected, b.rejected);
+        assert_eq!(a.spilled, b.spilled);
+    }
+
+    #[test]
+    fn underload_admits_everything_without_spill_pressure() {
+        let cfg = FedSimConfig::balanced(3, 10.0, 120.0);
+        let out = simulate_federation(&cfg, &ArrivalProcess::Poisson { rate_rps: 3.0 }, 5);
+        assert_eq!(out.rejected, 0);
+        assert_eq!(out.admitted, out.offered);
+        assert!(out.p50_latency_s >= cfg.service_s * 0.999);
+    }
+}

@@ -1,14 +1,42 @@
-//! Simulation substrate for the resource-scale experiments (E1/E8/E11):
+//! Simulation substrate for the resource-scale experiments (E1/E11):
 //! synthetic arrival processes (no production traces are available — see
-//! DESIGN.md substitutions) and a discrete-event GPU-fleet simulator
+//! DESIGN.md substitutions), a discrete-event GPU-fleet simulator
 //! comparing the monolithic deployment with OnePiece's disaggregated,
-//! NM-autoscaled deployment.
+//! NM-autoscaled deployment, and a federation model sweeping routing
+//! policies over N Workflow Sets ([`simulate_federation`]).
 
+mod federation;
 mod resources;
 mod workload;
 
+pub use federation::{simulate_federation, FedPolicy, FedSimConfig, FedSimOutcome};
 pub use resources::{
     simulate_disaggregated, simulate_monolithic, wan_stages, FleetOutcome,
     ResourceSimConfig,
 };
 pub use workload::ArrivalProcess;
+
+/// Empirical percentile of an ascending-sorted sample (shared by the
+/// fleet and federation models and the CLI reporters). `p` in [0, 1];
+/// returns 0.0 for an empty sample.
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() as f64 * p).ceil() as usize).clamp(1, sorted.len());
+    sorted[idx - 1]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::percentile;
+
+    #[test]
+    fn percentile_edges() {
+        assert_eq!(percentile(&[], 0.99), 0.0);
+        let v = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&v, 0.5), 2.0);
+        assert_eq!(percentile(&v, 0.99), 4.0);
+        assert_eq!(percentile(&v, 0.0), 1.0);
+    }
+}

@@ -17,7 +17,7 @@
 //!   training) and therefore don't count against inference consumption.
 //!   Resource consumption = assigned GPU-time.
 
-use super::ArrivalProcess;
+use super::{percentile, ArrivalProcess};
 use crate::pipeline::StageReq;
 
 /// Simulation parameters.
@@ -50,14 +50,6 @@ pub struct FleetOutcome {
     pub throughput_rps: f64,
     /// busy / provisioned.
     pub utilization: f64,
-}
-
-fn percentile(sorted: &[f64], p: f64) -> f64 {
-    if sorted.is_empty() {
-        return 0.0;
-    }
-    let idx = ((sorted.len() as f64 * p).ceil() as usize).clamp(1, sorted.len());
-    sorted[idx - 1]
 }
 
 /// Multi-server FIFO queue simulation: `servers` parallel servers, each

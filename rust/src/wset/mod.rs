@@ -8,6 +8,12 @@
 //! sends the client to the next (§3.2 — "clients that receive a rejection
 //! then attempt to submit their request to a different RDMA-enabled
 //! set"), which is also the fault-isolation boundary.
+//!
+//! [`MultiSet`] is the paper's *client-side* policy. The server-side
+//! alternative — a global load-aware router with cross-set spill and
+//! elastic instance donation — lives in [`crate::federation`] and uses
+//! the per-set elasticity hooks here ([`WorkflowSet::add_idle_instance`]
+//! / [`WorkflowSet::retire_idle_instance`]).
 
 use crate::config::{ClusterConfig, ExecModel};
 use crate::db::{DbClient, MemDb};
@@ -34,6 +40,7 @@ pub struct WorkflowSet {
     instances: Vec<Instance>,
     next_node: u32,
     config: ClusterConfig,
+    ring: RingConfig,
     pool: ExecutorPool,
     logic: Arc<dyn AppLogic>,
     housekeeper: Option<std::thread::JoinHandle<()>>,
@@ -110,6 +117,7 @@ impl WorkflowSet {
             instances: Vec::new(),
             next_node: 100,
             config: config.clone(),
+            ring,
             pool: pool.clone(),
             logic: logic.clone(),
             housekeeper: None,
@@ -206,9 +214,75 @@ impl WorkflowSet {
             .collect()
     }
 
+    /// Build a set that constructs its **own** executor pool (one pool
+    /// per set, the federation deployment shape) instead of sharing a
+    /// process-global pool across sets.
+    pub fn build_standalone(
+        config: ClusterConfig,
+        instances_per_stage: Vec<Vec<usize>>,
+        logic: Arc<dyn AppLogic>,
+        runtime: Option<Arc<PjrtRuntime>>,
+    ) -> Self {
+        let pool = build_pool(&config, runtime);
+        Self::build(config, instances_per_stage, logic, pool)
+    }
+
     /// Submit a request through the set's proxy.
     pub fn submit(&self, app: AppId, payload: Payload) -> Admission {
         self.proxy.submit(app, payload)
+    }
+
+    /// The set's cluster configuration.
+    pub fn config(&self) -> &ClusterConfig {
+        &self.config
+    }
+
+    /// Export the proxy's fast-reject state (federation routing input).
+    pub fn admission_snapshot(&self, app: AppId) -> crate::proxy::AdmissionSnapshot {
+        self.proxy.admission_snapshot(app)
+    }
+
+    /// Size of the idle pool right now.
+    pub fn idle_count(&self) -> usize {
+        self.nm.idle_pool().len()
+    }
+
+    /// Per-stage windowed utilization for `app` (NM view, §8.2).
+    pub fn stage_utilizations(&self, app: AppId) -> Vec<f64> {
+        let Some(cfg) = self.nm.app_config(app) else {
+            return Vec::new();
+        };
+        (0..cfg.stages.len() as u32)
+            .map(|stage| self.nm.stage_utilization(StageKey { app, stage }))
+            .collect()
+    }
+
+    /// Highest per-stage utilization for `app` — the set's scale-up
+    /// pressure signal.
+    pub fn max_stage_utilization(&self, app: AppId) -> f64 {
+        self.stage_utilizations(app)
+            .into_iter()
+            .fold(0.0, f64::max)
+    }
+
+    /// Cross-set reclaim: spawn a fresh instance into this set's idle
+    /// pool (capacity arriving from a donor set). The NM's next §8.2
+    /// pass assigns it wherever pressure is highest.
+    pub fn add_idle_instance(&mut self) -> NodeId {
+        self.spawn_instance(self.ring)
+    }
+
+    /// Cross-set donate: retire one idle-pool instance and return its
+    /// node id, or `None` when the pool is empty (assigned capacity is
+    /// never donated). The instance is deregistered from the NM and its
+    /// thread group is shut down.
+    pub fn retire_idle_instance(&mut self) -> Option<NodeId> {
+        let node = self.nm.release_idle()?;
+        if let Some(idx) = self.instances.iter().position(|i| i.node() == node) {
+            let inst = self.instances.swap_remove(idx);
+            inst.shutdown();
+        }
+        Some(node)
     }
 
     /// Poll the DB layer for a result.
