@@ -3,6 +3,7 @@
 //! plateaus at capacity; with it off (headroom → ∞), queues grow and p99
 //! explodes. Regenerates the paper's overload-stability argument.
 
+use onepiece::client::Priority;
 use onepiece::pipeline::{instances_needed, trace_schedule, TraceStage};
 use onepiece::proxy::RequestMonitor;
 use onepiece::sim::ArrivalProcess;
@@ -21,6 +22,7 @@ fn run(offered_rps: f64, capacity_rps: f64, fast_reject: bool) -> (f64, f64, f64
         Arc::new(clock.clone()),
         1_000_000_000,
         if fast_reject { 1.0 } else { 1e9 },
+        0.0, // pure capacity sweep: no interactive reserve
     );
     // Admitted requests flow through a single-stage queue with
     // `capacity` servers of 1 s each (normalized pipeline).
@@ -30,7 +32,7 @@ fn run(offered_rps: f64, capacity_rps: f64, fast_reject: bool) -> (f64, f64, f64
     let mut latencies = Vec::new();
     for &t in &arrivals {
         clock.set((t * 1e9) as u64 + 1);
-        if !monitor.admit(capacity_rps) {
+        if !monitor.admit(capacity_rps, Priority::Standard) {
             continue; // fast-rejected: client retries another set
         }
         admitted += 1;

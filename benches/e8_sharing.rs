@@ -3,6 +3,7 @@
 //! diffusion models). Measures the GPU saving from sharing the common
 //! stages and verifies per-app routing through a live shared pipeline.
 
+use onepiece::client::{Gateway, WaitOutcome};
 use onepiece::config::{ClusterConfig, ExecModel, FabricKind};
 use onepiece::nm::StageKey;
 use onepiece::transport::{AppId, Payload};
@@ -65,18 +66,18 @@ fn main() {
     }
     std::thread::sleep(Duration::from_millis(100));
 
-    let mut uids = Vec::new();
+    let mut handles = Vec::new();
     for i in 0..10u32 {
         let app = AppId(1 + i % 2);
         match set.submit(app, Payload::Bytes(vec![i as u8])) {
-            onepiece::proxy::Admission::Accepted(uid) => uids.push((app, uid)),
-            onepiece::proxy::Admission::Rejected => println!("req {i} rejected"),
+            Ok(handle) => handles.push((app, handle)),
+            Err(e) => println!("req {i} rejected ({e})"),
         }
         std::thread::sleep(Duration::from_millis(5));
     }
     let mut done = [0usize; 2];
-    for (app, uid) in &uids {
-        if set.wait_result(*uid, Duration::from_secs(10)).is_some() {
+    for (app, handle) in &handles {
+        if matches!(handle.wait(Duration::from_secs(10)), WaitOutcome::Done(_)) {
             done[(app.0 - 1) as usize] += 1;
         }
     }

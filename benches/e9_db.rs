@@ -1,4 +1,4 @@
-//! E12 — §3.4/§7 memory-centric database: put/fetch latency across value
+//! E9 — §3.4/§7 memory-centric database: put/fetch latency across value
 //! sizes, replication fan-out cost, TTL purge throughput, and the
 //! read-one-retry-next availability path.
 
@@ -10,7 +10,7 @@ use std::sync::Arc;
 fn main() {
     let clock = Arc::new(SystemClock);
 
-    bench::header("E12a: put + fetch-purge per result");
+    bench::header("E9a: put + fetch-purge per result");
     for size in [1 << 10, 64 << 10, 1 << 20, 16 << 20] {
         let db = MemDb::new(clock.clone(), u64::MAX);
         let data = vec![5u8; size];
@@ -21,7 +21,7 @@ fn main() {
         });
     }
 
-    bench::header("E12b: replication fan-out (put to N replicas)");
+    bench::header("E9b: replication fan-out (put to N replicas)");
     for replicas in [1usize, 2, 3] {
         let dbs: Vec<Arc<MemDb>> = (0..replicas)
             .map(|_| Arc::new(MemDb::new(clock.clone(), u64::MAX)))
@@ -37,7 +37,7 @@ fn main() {
         });
     }
 
-    bench::header("E12c: client fall-through on replica failure");
+    bench::header("E9c: client fall-through on replica failure");
     {
         let dbs: Vec<Arc<MemDb>> = (0..3)
             .map(|_| Arc::new(MemDb::new(clock.clone(), u64::MAX)))
@@ -51,7 +51,7 @@ fn main() {
         });
     }
 
-    bench::header("E12d: TTL purge sweep");
+    bench::header("E9d: TTL purge sweep");
     {
         use onepiece::util::ManualClock;
         let mclock = ManualClock::new();

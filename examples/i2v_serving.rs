@@ -12,8 +12,8 @@
 //!
 //! Run: `make artifacts && cargo run --release --example i2v_serving`
 
+use onepiece::client::{Gateway, WaitOutcome};
 use onepiece::config::ClusterConfig;
-use onepiece::proxy::Admission;
 use onepiece::runtime::PjrtRuntime;
 use onepiece::transport::{AppId, Payload, WorkflowMessage};
 use onepiece::util::now_ns;
@@ -52,7 +52,7 @@ fn main() -> anyhow::Result<()> {
 
     // --- drive real requests: an image + a prompt each ---
     println!("\nserving {n_requests} I2V requests ({steps} diffusion steps each)...");
-    let mut uids = Vec::new();
+    let mut handles = Vec::new();
     let t0 = std::time::Instant::now();
     for i in 0..n_requests {
         let image: Vec<f32> = (0..32 * 32 * 3)
@@ -64,17 +64,17 @@ fn main() -> anyhow::Result<()> {
             ("image".into(), vec![32, 32, 3], image),
         ]);
         match set.submit(AppId(1), payload) {
-            Admission::Accepted(uid) => uids.push((i, uid, now_ns())),
-            Admission::Rejected => println!("  request {i}: fast-rejected"),
+            Ok(handle) => handles.push((i, handle, now_ns())),
+            Err(e) => println!("  request {i}: fast-rejected ({e})"),
         }
         std::thread::sleep(Duration::from_millis(15));
     }
 
     // --- collect results ---
     let mut latencies_ms = Vec::new();
-    for (i, uid, submitted) in &uids {
-        match set.wait_result(*uid, Duration::from_secs(120)) {
-            Some(bytes) => {
+    for (i, handle, submitted) in &handles {
+        match handle.wait(Duration::from_secs(120)) {
+            WaitOutcome::Done(bytes) => {
                 let msg = WorkflowMessage::decode(&bytes).expect("stored result decodes");
                 let Payload::Tensors(ts) = &msg.payload else { panic!("tensor result") };
                 let (name, _shape, video) = &ts[0];
@@ -85,7 +85,7 @@ fn main() -> anyhow::Result<()> {
                 latencies_ms.push(lat);
                 println!("  request {i}: {frames}-frame video, {:.1} ms end-to-end", lat);
             }
-            None => println!("  request {i}: TIMED OUT"),
+            other => println!("  request {i}: {other:?}"),
         }
     }
     let wall_s = t0.elapsed().as_secs_f64();

@@ -4,9 +4,9 @@
 //!
 //! Run: `cargo run --release --example multi_workflow_sharing`
 
+use onepiece::client::{Gateway, WaitOutcome};
 use onepiece::config::{ClusterConfig, ExecModel, FabricKind};
 use onepiece::nm::StageKey;
-use onepiece::proxy::Admission;
 use onepiece::transport::{AppId, Payload};
 use onepiece::workflow::EchoLogic;
 use onepiece::wset::{build_pool, WorkflowSet};
@@ -58,18 +58,17 @@ fn main() {
 
     // Interleave requests from both apps through the same entrance
     // instances.
-    let mut uids = Vec::new();
+    let mut handles = Vec::new();
     for i in 0..16u32 {
         let app = AppId(1 + i % 2);
-        if let Admission::Accepted(uid) = set.submit(app, Payload::Bytes(vec![i as u8; 32]))
-        {
-            uids.push((app, uid));
+        if let Ok(handle) = set.submit(app, Payload::Bytes(vec![i as u8; 32])) {
+            handles.push((app, handle));
         }
         std::thread::sleep(Duration::from_millis(6));
     }
     let mut done = [0u32; 2];
-    for (app, uid) in &uids {
-        if set.wait_result(*uid, Duration::from_secs(15)).is_some() {
+    for (app, handle) in &handles {
+        if matches!(handle.wait(Duration::from_secs(15)), WaitOutcome::Done(_)) {
             done[(app.0 - 1) as usize] += 1;
         }
     }

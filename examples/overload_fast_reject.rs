@@ -1,13 +1,13 @@
 //! Overload demo (§5): drive a Workflow Set far past its Theorem-1
 //! capacity and watch the Request Monitor fast-reject the excess while
 //! in-system latency stays flat. Then the multi-set behaviour (§3.2):
-//! rejected clients retry against a second set and overall goodput
-//! doubles.
+//! rejected clients retry against a second set through the same
+//! `Gateway` API and overall goodput doubles.
 //!
 //! Run: `cargo run --release --example overload_fast_reject`
 
+use onepiece::client::{Gateway, RequestHandle, SubmitError};
 use onepiece::config::{ClusterConfig, ExecModel, FabricKind};
-use onepiece::proxy::Admission;
 use onepiece::transport::{AppId, Payload};
 use onepiece::util::now_ns;
 use onepiece::workflow::EchoLogic;
@@ -47,60 +47,62 @@ fn main() {
     let capacity = set.proxy.capacity_rps(AppId(1));
     println!("entrance capacity: {capacity:.0} req/s (K/T_X)");
 
-    // Offer 3x capacity for 2 seconds, polling results *concurrently*
-    // (clients poll while the system serves — measuring at each
-    // request's own completion time).
+    // Offer 3x capacity for 2 seconds, collecting results *concurrently*
+    // (clients observe completion while the system serves — measuring at
+    // each request's own completion time).
     let offered_interval = Duration::from_secs_f64(1.0 / (capacity * 3.0));
-    let set = Arc::new(set);
-    let (tx, rx) = std::sync::mpsc::channel::<(onepiece::util::Uid, u128)>();
-    let poller = {
-        let set = set.clone();
-        std::thread::spawn(move || {
-            let mut outstanding: Vec<(onepiece::util::Uid, u128)> = Vec::new();
-            let mut lat = Vec::new();
-            let deadline = std::time::Instant::now() + Duration::from_secs(30);
-            loop {
-                while let Ok(x) = rx.try_recv() {
-                    outstanding.push(x);
-                }
-                outstanding.retain(|(uid, submitted)| {
-                    if set.poll(*uid).is_some() {
-                        lat.push((now_ns() - submitted) as f64 / 1e6);
-                        false
-                    } else {
-                        true
-                    }
-                });
-                // Channel closed and everything drained (or timeout).
-                let closed = matches!(
-                    rx.try_recv(),
-                    Err(std::sync::mpsc::TryRecvError::Disconnected)
-                );
-                if (closed && outstanding.is_empty())
-                    || std::time::Instant::now() > deadline
-                {
-                    return lat;
-                }
-                std::thread::sleep(Duration::from_millis(2));
+    let (tx, rx) = std::sync::mpsc::channel::<(RequestHandle, u128)>();
+    let poller = std::thread::spawn(move || {
+        let mut outstanding: Vec<(RequestHandle, u128)> = Vec::new();
+        let mut lat = Vec::new();
+        let deadline = std::time::Instant::now() + Duration::from_secs(30);
+        loop {
+            while let Ok(x) = rx.try_recv() {
+                outstanding.push(x);
             }
-        })
-    };
+            outstanding.retain(|(handle, submitted)| {
+                if handle.try_result().is_some() {
+                    lat.push((now_ns() - submitted) as f64 / 1e6);
+                    false
+                } else {
+                    true
+                }
+            });
+            // Channel closed and everything drained (or timeout).
+            let closed = matches!(
+                rx.try_recv(),
+                Err(std::sync::mpsc::TryRecvError::Disconnected)
+            );
+            if (closed && outstanding.is_empty())
+                || std::time::Instant::now() > deadline
+            {
+                return lat;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    });
 
     let (mut accepted, mut rejected) = (0u32, 0u32);
+    let mut last_hint = Duration::ZERO;
     let t0 = std::time::Instant::now();
     while t0.elapsed() < Duration::from_secs(2) {
         match set.submit(AppId(1), Payload::Bytes(vec![0; 128])) {
-            Admission::Accepted(uid) => {
+            Ok(handle) => {
                 accepted += 1;
-                tx.send((uid, now_ns())).unwrap();
+                tx.send((handle, now_ns())).unwrap();
             }
-            Admission::Rejected => rejected += 1,
+            Err(SubmitError::Overloaded { retry_after }) => {
+                rejected += 1;
+                last_hint = retry_after;
+            }
+            Err(SubmitError::NoCapacity) => rejected += 1,
         }
         std::thread::sleep(offered_interval);
     }
     drop(tx);
     println!(
-        "offered {:.0} req/s for 2s: accepted {accepted} ({:.0}/s), fast-rejected {rejected}",
+        "offered {:.0} req/s for 2s: accepted {accepted} ({:.0}/s), fast-rejected \
+         {rejected} (last retry_after hint: {last_hint:?})",
         capacity * 3.0,
         accepted as f64 / 2.0
     );
@@ -115,9 +117,7 @@ fn main() {
             4 * 5
         );
     }
-    if let Ok(set) = Arc::try_unwrap(set) {
-        set.shutdown();
-    }
+    set.shutdown();
 
     println!("\n=== two sets: rejected clients retry the other set (§3.2) ===");
     let multi = MultiSet::new(vec![build_set(), build_set()], 99);
@@ -127,8 +127,8 @@ fn main() {
     let t0 = std::time::Instant::now();
     while t0.elapsed() < Duration::from_secs(2) {
         match multi.submit(AppId(1), Payload::Bytes(vec![0; 128])) {
-            Some((idx, _uid)) => placed[idx] += 1,
-            None => lost += 1,
+            Ok(handle) => placed[handle.set()] += 1,
+            Err(_) => lost += 1,
         }
         std::thread::sleep(offered_interval);
     }

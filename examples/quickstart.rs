@@ -1,13 +1,14 @@
 //! Quickstart: the smallest complete OnePiece deployment.
 //!
 //! Builds one Workflow Set (simulated executors, no artifacts needed),
-//! submits a handful of requests through the proxy, and polls results
-//! from the database layer — the full §3 request lifecycle in ~60 lines.
+//! submits a handful of requests through the unified `Gateway` API, and
+//! waits on the typed `RequestHandle`s — the full §3 request lifecycle
+//! in ~60 lines.
 //!
 //! Run: `cargo run --release --example quickstart`
 
+use onepiece::client::{Gateway, SubmitOptions, WaitOutcome};
 use onepiece::config::{ClusterConfig, ExecModel, FabricKind};
-use onepiece::proxy::Admission;
 use onepiece::transport::{AppId, Payload};
 use onepiece::workflow::EchoLogic;
 use onepiece::wset::{build_pool, WorkflowSet};
@@ -40,25 +41,31 @@ fn main() {
         set.nm.idle_pool()
     );
 
-    // 4. Submit requests through the proxy (UID assigned per request;
-    //    fast-reject protects the set under overload).
-    let mut uids = Vec::new();
+    // 4. Submit requests through the Gateway (UID assigned per request;
+    //    fast-reject protects the set under overload). Interactive
+    //    requests carry a deadline — the SLO envelope travels with the
+    //    submission.
+    let opts = SubmitOptions::interactive().with_deadline(Duration::from_secs(5));
+    let mut handles = Vec::new();
     for i in 0..5u8 {
-        match set.submit(AppId(1), Payload::Bytes(vec![i; 64])) {
-            Admission::Accepted(uid) => {
-                println!("request {i}: accepted, uid={uid}");
-                uids.push(uid);
+        match set.submit_with(AppId(1), Payload::Bytes(vec![i; 64]), opts) {
+            Ok(handle) => {
+                println!("request {i}: accepted, uid={}", handle.uid());
+                handles.push(handle);
             }
-            Admission::Rejected => println!("request {i}: fast-rejected"),
+            Err(e) => println!("request {i}: fast-rejected ({e})"),
         }
         std::thread::sleep(Duration::from_millis(5));
     }
 
-    // 5. Poll results (stored in the memory-centric DB, purged on fetch).
-    for uid in uids {
-        match set.wait_result(uid, Duration::from_secs(10)) {
-            Some(bytes) => println!("uid={uid}: result {} bytes", bytes.len()),
-            None => println!("uid={uid}: timed out"),
+    // 5. Wait on the handles (blocking on the DB layer's condvar — no
+    //    polling loop; the result is purged on observation).
+    for handle in handles {
+        match handle.wait(Duration::from_secs(10)) {
+            WaitOutcome::Done(bytes) => {
+                println!("uid={}: result {} bytes", handle.uid(), bytes.len())
+            }
+            other => println!("uid={}: {other:?}", handle.uid()),
         }
     }
 

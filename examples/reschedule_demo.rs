@@ -6,9 +6,9 @@
 //!
 //! Run: `cargo run --release --example reschedule_demo`
 
+use onepiece::client::{Gateway, RequestHandle, WaitOutcome};
 use onepiece::config::{ClusterConfig, ExecModel, FabricKind};
 use onepiece::nm::StageKey;
-use onepiece::proxy::Admission;
 use onepiece::transport::{AppId, Payload};
 use onepiece::workflow::EchoLogic;
 use onepiece::wset::{build_pool, WorkflowSet};
@@ -40,24 +40,22 @@ fn main() {
     // Phase 1: saturating load, no rebalancing.
     let submit_burst = |dur: Duration| {
         let t0 = std::time::Instant::now();
-        let mut uids = Vec::new();
+        let mut handles = Vec::new();
         while t0.elapsed() < dur {
-            if let Admission::Accepted(uid) =
-                set.submit(AppId(1), Payload::Bytes(vec![0; 64]))
-            {
-                uids.push(uid);
+            if let Ok(handle) = set.submit(AppId(1), Payload::Bytes(vec![0; 64])) {
+                handles.push(handle);
             }
             std::thread::sleep(Duration::from_millis(8));
         }
-        uids
+        handles
     };
     // Drain and report how long the backlog takes to clear — the
     // observable effect of an under-provisioned stage.
-    let drain = |uids: &[onepiece::util::Uid]| {
+    let drain = |handles: &[RequestHandle]| {
         let t0 = std::time::Instant::now();
         let mut done = 0;
-        for &u in uids {
-            if set.wait_result(u, Duration::from_secs(30)).is_some() {
+        for h in handles {
+            if matches!(h.wait(Duration::from_secs(30)), WaitOutcome::Done(_)) {
                 done += 1;
             }
         }

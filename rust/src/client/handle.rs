@@ -1,0 +1,309 @@
+//! [`RequestHandle`]: the typed client-side view of one admitted request,
+//! plus the pure [`RequestState`] machine it is built on.
+//!
+//! A handle is created by a [`crate::client::Gateway`] on admission and
+//! owns the request's result path: `status()` folds the database layer
+//! (result / tombstone), the [`super::RequestTracker`] (cancellation,
+//! deadline, stage progress), and previous observations into one
+//! [`RequestStatus`]; `wait()` blocks on the database's condvar waiters
+//! instead of busy-polling; `cancel()` flips the control-plane flag the
+//! workflow data plane checks before spending compute.
+
+use super::tracker::{RequestTracker, TrackedState};
+use super::{Priority, RequestStatus, SubmitOptions};
+use crate::db::{DbClient, EntryKind};
+use crate::util::Uid;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Granularity at which a blocked `wait()` re-checks cancellation and
+/// deadline state. Result arrival wakes the waiter immediately through
+/// the DB condvar; this bound only affects how fast a waiter notices a
+/// cancel/deadline that happened while it was blocked.
+const WAIT_SLICE: Duration = Duration::from_millis(25);
+
+/// Pure request-lifecycle state machine. Terminal states are sticky
+/// (first terminal observation wins — e.g. a result arriving after
+/// cancellation does not resurrect the request) and stage progress is
+/// monotone. Extracted from [`RequestHandle`] so the transition rules are
+/// unit-testable without a running cluster.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RequestState(RequestStatus);
+
+impl RequestState {
+    /// A freshly admitted request.
+    pub fn new() -> Self {
+        Self(RequestStatus::Admitted)
+    }
+
+    /// Current status.
+    pub fn current(&self) -> RequestStatus {
+        self.0
+    }
+
+    /// Fold one observation into the state, returning the new status.
+    pub fn observe(&mut self, observed: RequestStatus) -> RequestStatus {
+        self.0 = match (self.0, observed) {
+            (cur, _) if cur.is_terminal() => cur,
+            (RequestStatus::Running { stage: a }, RequestStatus::Running { stage: b }) => {
+                RequestStatus::Running { stage: a.max(b) }
+            }
+            // Once running, a bare Admitted observation (e.g. a tracker
+            // entry whose stage report lagged) cannot rewind the state.
+            (cur @ RequestStatus::Running { .. }, RequestStatus::Admitted) => cur,
+            (_, next) => next,
+        };
+        self.0
+    }
+}
+
+impl Default for RequestState {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Outcome of a blocking [`RequestHandle::wait`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WaitOutcome {
+    /// The result arrived within the wait budget. The bytes are
+    /// delivered exactly once (results can be multi-MB video tensors;
+    /// the handle does not retain a copy): a later `wait()` on the same
+    /// handle still reports `Done`, with empty bytes.
+    Done(Vec<u8>),
+    /// The request's deadline passed (result dropped in-pipeline or
+    /// never produced in time).
+    DeadlineExceeded,
+    /// The request was cancelled.
+    Cancelled,
+    /// The request was rejected (only reachable for handles observed in
+    /// the rejected state; gateways report rejection as a
+    /// [`crate::client::SubmitError`] instead).
+    Rejected,
+    /// The wait budget ran out with the request still in flight (e.g.
+    /// the message was lost per §9 — no retransmission).
+    TimedOut,
+}
+
+struct HandleInner {
+    machine: RequestState,
+    /// Result bytes, parked between the DB fetch (which purges the
+    /// replica) and the single `wait()`/`try_result()` call that moves
+    /// them out to the caller.
+    result: Option<Vec<u8>>,
+}
+
+/// Typed handle to one admitted request.
+pub struct RequestHandle {
+    uid: Uid,
+    set: usize,
+    priority: Priority,
+    tracker: Arc<RequestTracker>,
+    db: Arc<DbClient>,
+    inner: Mutex<HandleInner>,
+}
+
+impl std::fmt::Debug for RequestHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("RequestHandle")
+            .field("uid", &self.uid)
+            .field("set", &self.set)
+            .field("priority", &self.priority)
+            .finish_non_exhaustive()
+    }
+}
+
+impl RequestHandle {
+    /// Build a handle for an admitted request (gateways call this; the
+    /// accepting tier supplies its tracker and DB client).
+    pub fn new(
+        uid: Uid,
+        set: usize,
+        tracker: Arc<RequestTracker>,
+        db: Arc<DbClient>,
+        opts: &SubmitOptions,
+    ) -> Self {
+        Self {
+            uid,
+            set,
+            priority: opts.priority,
+            tracker,
+            db,
+            inner: Mutex::new(HandleInner { machine: RequestState::new(), result: None }),
+        }
+    }
+
+    /// The request UID assigned by the admitting proxy.
+    pub fn uid(&self) -> Uid {
+        self.uid
+    }
+
+    /// Index of the Workflow Set that admitted the request (0 for a
+    /// single-set gateway).
+    pub fn set(&self) -> usize {
+        self.set
+    }
+
+    /// The priority the request was submitted with.
+    pub fn priority(&self) -> Priority {
+        self.priority
+    }
+
+    /// Current typed status. Non-blocking; a `Done` observation moves the
+    /// result bytes from the DB into the handle.
+    pub fn status(&self) -> RequestStatus {
+        let mut g = self.inner.lock().unwrap();
+        self.refresh(&mut g)
+    }
+
+    fn refresh(&self, g: &mut HandleInner) -> RequestStatus {
+        if g.machine.current().is_terminal() {
+            return g.machine.current();
+        }
+        // The DB is authoritative for completion: a stored result or
+        // tombstone ends the lifecycle.
+        if let Some((kind, data)) = self.db.fetch_entry(self.uid) {
+            let observed = match kind {
+                EntryKind::Result => {
+                    g.result = Some(data);
+                    RequestStatus::Done
+                }
+                EntryKind::DeadlineExceeded => RequestStatus::DeadlineExceeded,
+                EntryKind::Cancelled => RequestStatus::Cancelled,
+            };
+            self.tracker.finish(self.uid);
+            return g.machine.observe(observed);
+        }
+        match self.tracker.probe(self.uid) {
+            TrackedState::Cancelled => g.machine.observe(RequestStatus::Cancelled),
+            TrackedState::DeadlineExceeded => {
+                g.machine.observe(RequestStatus::DeadlineExceeded)
+            }
+            TrackedState::InFlight { stage: Some(s) } => {
+                g.machine.observe(RequestStatus::Running { stage: s })
+            }
+            // Not picked up by a worker yet, or the tracker entry aged
+            // out: keep the last known state.
+            TrackedState::InFlight { stage: None } | TrackedState::Unknown => {
+                g.machine.current()
+            }
+        }
+    }
+
+    /// Cancel the request. Returns `true` if the cancellation took effect
+    /// (the request had not already reached a terminal state); in-flight
+    /// stage work is dropped by the workflow data plane at its next
+    /// tracker check.
+    pub fn cancel(&self) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        if self.refresh(&mut g).is_terminal() {
+            return false;
+        }
+        self.tracker.cancel(self.uid);
+        g.machine.observe(RequestStatus::Cancelled);
+        true
+    }
+
+    /// Non-blocking result poll: the bytes, once `Done`. Like
+    /// [`RequestHandle::wait`], the bytes are moved out — the first
+    /// `Done` observation owns them; `status()` stays `Done` after.
+    pub fn try_result(&self) -> Option<Vec<u8>> {
+        let mut g = self.inner.lock().unwrap();
+        match self.refresh(&mut g) {
+            RequestStatus::Done => Some(g.result.take().unwrap_or_default()),
+            _ => None,
+        }
+    }
+
+    /// Block until the request reaches a terminal state or `timeout`
+    /// elapses. Blocks on the database layer's condvar waiters (result
+    /// arrival wakes immediately) rather than busy-polling.
+    pub fn wait(&self, timeout: Duration) -> WaitOutcome {
+        let deadline = Instant::now() + timeout;
+        loop {
+            {
+                let mut g = self.inner.lock().unwrap();
+                match self.refresh(&mut g) {
+                    RequestStatus::Done => {
+                        return WaitOutcome::Done(g.result.take().unwrap_or_default())
+                    }
+                    RequestStatus::DeadlineExceeded => {
+                        return WaitOutcome::DeadlineExceeded
+                    }
+                    RequestStatus::Cancelled => return WaitOutcome::Cancelled,
+                    RequestStatus::Rejected { .. } => return WaitOutcome::Rejected,
+                    RequestStatus::Admitted | RequestStatus::Running { .. } => {}
+                }
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return WaitOutcome::TimedOut;
+            }
+            self.db.wait_signal((deadline - now).min(WAIT_SLICE));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn state_machine_happy_path() {
+        let mut s = RequestState::new();
+        assert_eq!(s.current(), RequestStatus::Admitted);
+        assert_eq!(
+            s.observe(RequestStatus::Running { stage: 0 }),
+            RequestStatus::Running { stage: 0 }
+        );
+        assert_eq!(
+            s.observe(RequestStatus::Running { stage: 2 }),
+            RequestStatus::Running { stage: 2 }
+        );
+        assert_eq!(s.observe(RequestStatus::Done), RequestStatus::Done);
+    }
+
+    #[test]
+    fn stage_progress_is_monotone() {
+        let mut s = RequestState::new();
+        s.observe(RequestStatus::Running { stage: 3 });
+        assert_eq!(
+            s.observe(RequestStatus::Running { stage: 1 }),
+            RequestStatus::Running { stage: 3 }
+        );
+        assert_eq!(
+            s.observe(RequestStatus::Admitted),
+            RequestStatus::Running { stage: 3 },
+            "running never rewinds to admitted"
+        );
+    }
+
+    #[test]
+    fn terminal_states_are_sticky() {
+        for terminal in [
+            RequestStatus::Done,
+            RequestStatus::Cancelled,
+            RequestStatus::DeadlineExceeded,
+            RequestStatus::Rejected { retry_after_hint: Duration::from_millis(5) },
+        ] {
+            let mut s = RequestState::new();
+            assert_eq!(s.observe(terminal), terminal);
+            assert_eq!(s.observe(RequestStatus::Done), terminal);
+            assert_eq!(s.observe(RequestStatus::Running { stage: 9 }), terminal);
+            assert_eq!(s.observe(RequestStatus::Cancelled), terminal);
+        }
+    }
+
+    #[test]
+    fn cancellation_racing_completion_first_observation_wins() {
+        // Cancel observed first: a late Done cannot resurrect it.
+        let mut s = RequestState::new();
+        s.observe(RequestStatus::Running { stage: 2 });
+        assert_eq!(s.observe(RequestStatus::Cancelled), RequestStatus::Cancelled);
+        assert_eq!(s.observe(RequestStatus::Done), RequestStatus::Cancelled);
+        // Done observed first: a late cancel is a no-op.
+        let mut s = RequestState::new();
+        assert_eq!(s.observe(RequestStatus::Done), RequestStatus::Done);
+        assert_eq!(s.observe(RequestStatus::Cancelled), RequestStatus::Done);
+    }
+}

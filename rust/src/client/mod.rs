@@ -1,0 +1,329 @@
+//! The unified client gateway API: one typed submission surface over
+//! every serving tier.
+//!
+//! The paper serves "heavy traffic from millions of users" through
+//! proxies (§3.2), Workflow Sets (§3.1), and — in this reproduction —
+//! a cross-set federation layer. This module makes all of them speak the
+//! same language: a [`Gateway`] accepts `(app, payload, SubmitOptions)`
+//! and returns a [`RequestHandle`], regardless of whether the tier behind
+//! it is one set ([`crate::wset::WorkflowSet`]), the paper's client-side
+//! multi-set retry ([`crate::wset::MultiSet`]), or the server-side
+//! load-aware router ([`crate::federation::FederationRouter`]).
+//!
+//! [`SubmitOptions`] carries the request's SLO class:
+//! - [`Priority`] — `Interactive` traffic gets reserved admission
+//!   headroom at the proxy under overload (§5 extended) and jumps the
+//!   RequestScheduler's pull queue (§4.3);
+//! - a relative deadline — the workflow data plane drops in-flight stage
+//!   work past its deadline and publishes a `DeadlineExceeded` tombstone
+//!   to the database layer instead of a result;
+//! - a [`RetryPolicy`] applied by the gateway on fast-reject.
+//!
+//! The lifecycle state lives in the per-set [`RequestTracker`] (control
+//! plane) and the memory-centric DB (data plane); [`RequestHandle`]
+//! folds both into a typed [`RequestStatus`] with blocking `wait()`
+//! (condvar-based, no busy polling) and `cancel()`.
+
+mod handle;
+mod tracker;
+
+pub use handle::{RequestHandle, RequestState, WaitOutcome};
+pub use tracker::{InFlightVerdict, RequestTracker, TrackedState};
+
+use crate::transport::{AppId, Payload};
+use std::time::Duration;
+
+/// Request priority class (SLO tier).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord, Default)]
+pub enum Priority {
+    /// User-facing latency-sensitive traffic: reserved admission
+    /// headroom, scheduled ahead of other classes.
+    Interactive,
+    /// The default class.
+    #[default]
+    Standard,
+    /// Throughput traffic: first to be shed under overload, scheduled
+    /// last.
+    Batch,
+}
+
+impl Priority {
+    /// All classes, in scheduling order (highest first).
+    pub const ALL: [Priority; 3] = [Priority::Interactive, Priority::Standard, Priority::Batch];
+
+    /// Dense index (0 = Interactive) for per-priority tables.
+    pub fn index(self) -> usize {
+        match self {
+            Priority::Interactive => 0,
+            Priority::Standard => 1,
+            Priority::Batch => 2,
+        }
+    }
+
+    /// Lowercase label for metric names and reports.
+    pub fn label(self) -> &'static str {
+        match self {
+            Priority::Interactive => "interactive",
+            Priority::Standard => "standard",
+            Priority::Batch => "batch",
+        }
+    }
+}
+
+/// Gateway-side retry policy applied on fast-reject.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Total submission attempts (1 = no retry).
+    pub max_attempts: u32,
+    /// Sleep between attempts.
+    pub backoff: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self { max_attempts: 1, backoff: Duration::from_millis(0) }
+    }
+}
+
+impl RetryPolicy {
+    /// Retry `attempts` times total with a fixed backoff.
+    pub fn attempts(max_attempts: u32, backoff: Duration) -> Self {
+        Self { max_attempts: max_attempts.max(1), backoff }
+    }
+}
+
+/// Per-request submission options (the SLO envelope).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct SubmitOptions {
+    pub priority: Priority,
+    /// End-to-end deadline, relative to admission. Past it, in-flight
+    /// stage work is dropped and the terminal status is
+    /// [`RequestStatus::DeadlineExceeded`].
+    pub deadline: Option<Duration>,
+    /// Applied by the gateway when admission fast-rejects.
+    pub retry: RetryPolicy,
+}
+
+impl SubmitOptions {
+    /// Interactive-class options.
+    pub fn interactive() -> Self {
+        Self { priority: Priority::Interactive, ..Default::default() }
+    }
+
+    /// Batch-class options.
+    pub fn batch() -> Self {
+        Self { priority: Priority::Batch, ..Default::default() }
+    }
+
+    /// Set the priority.
+    pub fn with_priority(mut self, priority: Priority) -> Self {
+        self.priority = priority;
+        self
+    }
+
+    /// Set a relative deadline.
+    pub fn with_deadline(mut self, deadline: Duration) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    /// Set the retry policy.
+    pub fn with_retry(mut self, retry: RetryPolicy) -> Self {
+        self.retry = retry;
+        self
+    }
+}
+
+/// Why a submission was not admitted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitError {
+    /// Every tried tier is at capacity; the Request Monitor suggests
+    /// retrying after `retry_after` (when the oldest admission slides out
+    /// of its window).
+    Overloaded { retry_after: Duration },
+    /// No entrance capacity exists at all (no instances assigned — the
+    /// §3.2 fault-isolation "dead set" state).
+    NoCapacity,
+}
+
+impl SubmitError {
+    /// Fold this error's retry hint into a running minimum — gateways
+    /// walking several tiers track the soonest time *any* tier frees a
+    /// slot.
+    pub fn fold_hint(&self, best: Option<Duration>) -> Option<Duration> {
+        match self {
+            SubmitError::Overloaded { retry_after } => {
+                Some(best.map_or(*retry_after, |b| b.min(*retry_after)))
+            }
+            SubmitError::NoCapacity => best,
+        }
+    }
+
+    /// The error summarizing a walk whose smallest hint was `best`
+    /// (`None` = no tier had capacity at all).
+    pub fn from_hint(best: Option<Duration>) -> SubmitError {
+        best.map_or(SubmitError::NoCapacity, |retry_after| SubmitError::Overloaded {
+            retry_after,
+        })
+    }
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Overloaded { retry_after } => {
+                write!(f, "overloaded (retry after {:?})", retry_after)
+            }
+            SubmitError::NoCapacity => write!(f, "no entrance capacity"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// Typed request status exposed by [`RequestHandle::status`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RequestStatus {
+    /// Admitted; not yet picked up by a stage worker.
+    Admitted,
+    /// Executing (or queued) at `stage` — the last stage a worker
+    /// reported for this UID.
+    Running { stage: u32 },
+    /// The result is available (moved into the handle).
+    Done,
+    /// Fast-rejected; retry after the hint.
+    Rejected { retry_after_hint: Duration },
+    /// The deadline passed before completion.
+    DeadlineExceeded,
+    /// Cancelled via [`RequestHandle::cancel`].
+    Cancelled,
+}
+
+impl RequestStatus {
+    /// Terminal states never change again.
+    pub fn is_terminal(self) -> bool {
+        matches!(
+            self,
+            RequestStatus::Done
+                | RequestStatus::Rejected { .. }
+                | RequestStatus::DeadlineExceeded
+                | RequestStatus::Cancelled
+        )
+    }
+}
+
+/// Shared gateway retry scaffold: run one submission `round` up to
+/// `opts.retry.max_attempts` times with backoff between rounds, moving
+/// the payload from attempt to attempt (a rejecting round hands it
+/// back — no clones), and folding the smallest `retry_after` hint into
+/// the final error. All three tiers build their [`Gateway`] impl on
+/// this so retry semantics cannot drift apart.
+pub(crate) fn retry_rounds(
+    opts: &SubmitOptions,
+    mut payload: Payload,
+    mut round: impl FnMut(Payload) -> Result<RequestHandle, (SubmitError, Payload)>,
+) -> Result<RequestHandle, SubmitError> {
+    let attempts = opts.retry.max_attempts.max(1);
+    let mut best: Option<Duration> = None;
+    for attempt in 0..attempts {
+        match round(payload) {
+            Ok(handle) => return Ok(handle),
+            Err((e, p)) => {
+                payload = p;
+                best = e.fold_hint(best);
+            }
+        }
+        if attempt + 1 < attempts && !opts.retry.backoff.is_zero() {
+            std::thread::sleep(opts.retry.backoff);
+        }
+    }
+    Err(SubmitError::from_hint(best))
+}
+
+/// The single public serving API, implemented by every tier
+/// ([`crate::wset::WorkflowSet`], [`crate::wset::MultiSet`],
+/// [`crate::federation::FederationRouter`]).
+///
+/// `payload` is taken **by value**: the accepting tier moves it onto the
+/// wire; tiers that try several sets clone only on fallthrough (the
+/// first — usually accepted — attempt never copies).
+pub trait Gateway {
+    /// Submit with explicit options.
+    fn submit_with(
+        &self,
+        app: AppId,
+        payload: Payload,
+        opts: SubmitOptions,
+    ) -> Result<RequestHandle, SubmitError>;
+
+    /// Submit with default options (Standard priority, no deadline, no
+    /// retry).
+    fn submit(&self, app: AppId, payload: Payload) -> Result<RequestHandle, SubmitError> {
+        self.submit_with(app, payload, SubmitOptions::default())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn priority_indices_are_dense_and_ordered() {
+        for (i, p) in Priority::ALL.iter().enumerate() {
+            assert_eq!(p.index(), i);
+        }
+        assert_eq!(Priority::default(), Priority::Standard);
+        assert_eq!(Priority::Interactive.label(), "interactive");
+    }
+
+    #[test]
+    fn options_builders() {
+        let o = SubmitOptions::interactive()
+            .with_deadline(Duration::from_millis(250))
+            .with_retry(RetryPolicy::attempts(3, Duration::from_millis(2)));
+        assert_eq!(o.priority, Priority::Interactive);
+        assert_eq!(o.deadline, Some(Duration::from_millis(250)));
+        assert_eq!(o.retry.max_attempts, 3);
+        // Zero attempts clamps to one real try.
+        assert_eq!(RetryPolicy::attempts(0, Duration::ZERO).max_attempts, 1);
+    }
+
+    #[test]
+    fn retry_rounds_folds_min_hint_and_moves_payload() {
+        let opts = SubmitOptions::default()
+            .with_retry(RetryPolicy::attempts(3, Duration::ZERO));
+        let hints = [50u64, 20, 80].map(Duration::from_millis);
+        let mut i = 0;
+        let err = retry_rounds(&opts, Payload::Bytes(vec![7]), |p| {
+            assert_eq!(p, Payload::Bytes(vec![7]), "payload handed back intact");
+            let hint = hints[i];
+            i += 1;
+            Err((SubmitError::Overloaded { retry_after: hint }, p))
+        })
+        .unwrap_err();
+        assert_eq!(i, 3, "all attempts used");
+        assert_eq!(
+            err,
+            SubmitError::Overloaded { retry_after: Duration::from_millis(20) },
+            "smallest hint wins"
+        );
+        // Rounds that never saw capacity fold to NoCapacity.
+        let err = retry_rounds(&opts, Payload::Bytes(vec![]), |p| {
+            Err((SubmitError::NoCapacity, p))
+        })
+        .unwrap_err();
+        assert_eq!(err, SubmitError::NoCapacity);
+    }
+
+    #[test]
+    fn terminal_classification() {
+        assert!(!RequestStatus::Admitted.is_terminal());
+        assert!(!RequestStatus::Running { stage: 1 }.is_terminal());
+        assert!(RequestStatus::Done.is_terminal());
+        assert!(RequestStatus::Cancelled.is_terminal());
+        assert!(RequestStatus::DeadlineExceeded.is_terminal());
+        assert!(
+            RequestStatus::Rejected { retry_after_hint: Duration::ZERO }.is_terminal()
+        );
+    }
+}

@@ -1,0 +1,319 @@
+//! The [`RequestTracker`]: the control plane's per-UID request-lifecycle
+//! state (priority, absolute deadline, cancellation flag, current stage).
+//!
+//! The proxy registers every admitted request here; the workflow data
+//! plane (RequestScheduler / TaskWorkers, §4.3–§4.5) consults
+//! [`RequestTracker::verdict`] before spending compute on a message and
+//! drops work whose request was cancelled or whose deadline passed —
+//! publishing a tombstone to the database layer instead of a result —
+//! and [`crate::client::RequestHandle`] reads the same state to report
+//! typed [`crate::client::RequestStatus`] to callers.
+//!
+//! Keeping SLO state in the control plane (rather than widening the §4.1
+//! wire header) means the RDMA hot path carries exactly the paper's
+//! message format while priorities and deadlines still reach every stage
+//! of the pipeline.
+
+use crate::client::Priority;
+use crate::metrics::{Counter, Registry};
+use crate::util::{Clock, Uid};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// What the data plane should do with an in-flight message.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InFlightVerdict {
+    /// Keep processing.
+    Proceed,
+    /// The client cancelled: drop the work.
+    Cancelled,
+    /// The request's deadline passed: drop the work, publish a
+    /// `DeadlineExceeded` tombstone.
+    DeadlineExceeded,
+}
+
+/// Handle-facing probe of a tracked request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TrackedState {
+    /// Never registered, or already finished and removed.
+    Unknown,
+    /// In flight; `stage` is the last stage a worker reported, `None`
+    /// until the entrance stage picks it up.
+    InFlight { stage: Option<u32> },
+    Cancelled,
+    DeadlineExceeded,
+}
+
+struct Entry {
+    priority: Priority,
+    /// Absolute deadline on the tracker's clock, if any.
+    deadline_ns: Option<u64>,
+    cancelled: bool,
+    stage: Option<u32>,
+    registered_ns: u64,
+    /// Guards the `deadline_missed` counter (count each UID once).
+    deadline_counted: bool,
+}
+
+/// Shared per-set request-lifecycle registry.
+pub struct RequestTracker {
+    clock: Arc<dyn Clock>,
+    metrics: Registry,
+    cancelled_ctr: Arc<Counter>,
+    deadline_ctr: Arc<Counter>,
+    inner: Mutex<HashMap<Uid, Entry>>,
+}
+
+impl RequestTracker {
+    pub fn new(clock: Arc<dyn Clock>, metrics: Registry) -> Self {
+        let cancelled_ctr = metrics.counter("requests_cancelled");
+        let deadline_ctr = metrics.counter("deadline_missed");
+        Self {
+            clock,
+            metrics,
+            cancelled_ctr,
+            deadline_ctr,
+            inner: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// The registry the tracker counts `requests_cancelled` /
+    /// `deadline_missed` into (shared with the owning set's proxy).
+    pub fn metrics(&self) -> &Registry {
+        &self.metrics
+    }
+
+    /// Track a freshly admitted request. `deadline` is relative to now.
+    pub fn register(&self, uid: Uid, priority: Priority, deadline: Option<Duration>) {
+        let now = self.clock.now_ns();
+        let entry = Entry {
+            priority,
+            deadline_ns: deadline.map(|d| now.saturating_add(d.as_nanos() as u64)),
+            cancelled: false,
+            stage: None,
+            registered_ns: now,
+            deadline_counted: false,
+        };
+        self.inner.lock().unwrap().insert(uid, entry);
+    }
+
+    /// Scheduling priority of a tracked request (Standard if unknown —
+    /// e.g. the entry aged out of the tracker).
+    pub fn priority_of(&self, uid: Uid) -> Priority {
+        self.inner
+            .lock()
+            .unwrap()
+            .get(&uid)
+            .map(|e| e.priority)
+            .unwrap_or(Priority::Standard)
+    }
+
+    /// A worker reports that `uid` is executing at `stage`.
+    pub fn note_stage(&self, uid: Uid, stage: u32) {
+        if let Some(e) = self.inner.lock().unwrap().get_mut(&uid) {
+            e.stage = Some(e.stage.map_or(stage, |s| s.max(stage)));
+        }
+    }
+
+    /// Mark a request cancelled. Returns `true` when this call newly
+    /// cancelled it (false if it was already cancelled). Unknown UIDs get
+    /// a synthetic cancelled entry so late-arriving messages still drop.
+    pub fn cancel(&self, uid: Uid) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        let newly = match g.get_mut(&uid) {
+            Some(e) => {
+                let newly = !e.cancelled;
+                e.cancelled = true;
+                newly
+            }
+            None => {
+                g.insert(
+                    uid,
+                    Entry {
+                        priority: Priority::Standard,
+                        deadline_ns: None,
+                        cancelled: true,
+                        stage: None,
+                        registered_ns: self.clock.now_ns(),
+                        deadline_counted: false,
+                    },
+                );
+                true
+            }
+        };
+        if newly {
+            self.cancelled_ctr.inc();
+        }
+        newly
+    }
+
+    /// Data-plane check: should work on `uid` continue? Counts the first
+    /// deadline detection into `deadline_missed`.
+    pub fn verdict(&self, uid: Uid) -> InFlightVerdict {
+        let now = self.clock.now_ns();
+        let mut g = self.inner.lock().unwrap();
+        let Some(e) = g.get_mut(&uid) else {
+            return InFlightVerdict::Proceed;
+        };
+        if e.cancelled {
+            return InFlightVerdict::Cancelled;
+        }
+        if e.deadline_ns.is_some_and(|d| now > d) {
+            if !e.deadline_counted {
+                e.deadline_counted = true;
+                self.deadline_ctr.inc();
+            }
+            return InFlightVerdict::DeadlineExceeded;
+        }
+        InFlightVerdict::Proceed
+    }
+
+    /// Handle-facing probe (same deadline accounting as
+    /// [`RequestTracker::verdict`], plus stage progress).
+    pub fn probe(&self, uid: Uid) -> TrackedState {
+        let now = self.clock.now_ns();
+        let mut g = self.inner.lock().unwrap();
+        let Some(e) = g.get_mut(&uid) else {
+            return TrackedState::Unknown;
+        };
+        if e.cancelled {
+            return TrackedState::Cancelled;
+        }
+        if e.deadline_ns.is_some_and(|d| now > d) {
+            if !e.deadline_counted {
+                e.deadline_counted = true;
+                self.deadline_ctr.inc();
+            }
+            return TrackedState::DeadlineExceeded;
+        }
+        TrackedState::InFlight { stage: e.stage }
+    }
+
+    /// Drop a request's entry (terminal state reached: the result/
+    /// tombstone is in the DB, or the handle consumed it).
+    pub fn finish(&self, uid: Uid) {
+        self.inner.lock().unwrap().remove(&uid);
+    }
+
+    /// Tracked request count.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    /// True when no requests are tracked.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop entries older than `max_age_ns` (lost requests — e.g. §9
+    /// message loss — would otherwise leak their entry forever). Run by
+    /// the set's housekeeping timer with the DB TTL. Returns how many
+    /// entries were purged.
+    pub fn purge_older_than(&self, max_age_ns: u64) -> usize {
+        let now = self.clock.now_ns();
+        let mut g = self.inner.lock().unwrap();
+        let before = g.len();
+        g.retain(|_, e| now.saturating_sub(e.registered_ns) <= max_age_ns);
+        before - g.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{ManualClock, NodeId};
+
+    fn setup() -> (ManualClock, RequestTracker) {
+        let c = ManualClock::new();
+        c.set(1);
+        let t = RequestTracker::new(Arc::new(c.clone()), Registry::new());
+        (c, t)
+    }
+
+    fn uid(i: u32) -> Uid {
+        Uid::fresh(NodeId(i))
+    }
+
+    #[test]
+    fn register_and_proceed() {
+        let (_c, t) = setup();
+        let u = uid(1);
+        t.register(u, Priority::Interactive, None);
+        assert_eq!(t.verdict(u), InFlightVerdict::Proceed);
+        assert_eq!(t.priority_of(u), Priority::Interactive);
+        assert_eq!(t.probe(u), TrackedState::InFlight { stage: None });
+        t.note_stage(u, 2);
+        assert_eq!(t.probe(u), TrackedState::InFlight { stage: Some(2) });
+        // Stage progress is monotone (a late entrance report can't rewind).
+        t.note_stage(u, 1);
+        assert_eq!(t.probe(u), TrackedState::InFlight { stage: Some(2) });
+    }
+
+    #[test]
+    fn unknown_uid_proceeds() {
+        let (_c, t) = setup();
+        assert_eq!(t.verdict(uid(9)), InFlightVerdict::Proceed);
+        assert_eq!(t.probe(uid(9)), TrackedState::Unknown);
+        assert_eq!(t.priority_of(uid(9)), Priority::Standard);
+    }
+
+    #[test]
+    fn cancel_marks_and_counts_once() {
+        let (_c, t) = setup();
+        let u = uid(2);
+        t.register(u, Priority::Standard, None);
+        assert!(t.cancel(u));
+        assert!(!t.cancel(u), "second cancel is a no-op");
+        assert_eq!(t.verdict(u), InFlightVerdict::Cancelled);
+        assert_eq!(t.metrics().counter("requests_cancelled").get(), 1);
+    }
+
+    #[test]
+    fn cancel_unknown_uid_drops_late_messages() {
+        let (_c, t) = setup();
+        let u = uid(3);
+        assert!(t.cancel(u));
+        assert_eq!(t.verdict(u), InFlightVerdict::Cancelled);
+    }
+
+    #[test]
+    fn deadline_expires_and_counts_once() {
+        let (c, t) = setup();
+        let u = uid(4);
+        t.register(u, Priority::Batch, Some(Duration::from_millis(10)));
+        assert_eq!(t.verdict(u), InFlightVerdict::Proceed);
+        c.advance(10_000_001);
+        assert_eq!(t.verdict(u), InFlightVerdict::DeadlineExceeded);
+        assert_eq!(t.verdict(u), InFlightVerdict::DeadlineExceeded);
+        assert_eq!(t.probe(u), TrackedState::DeadlineExceeded);
+        assert_eq!(t.metrics().counter("deadline_missed").get(), 1);
+    }
+
+    #[test]
+    fn cancellation_beats_deadline() {
+        let (c, t) = setup();
+        let u = uid(5);
+        t.register(u, Priority::Standard, Some(Duration::from_millis(1)));
+        t.cancel(u);
+        c.advance(10_000_000);
+        assert_eq!(t.verdict(u), InFlightVerdict::Cancelled);
+    }
+
+    #[test]
+    fn finish_removes_and_purge_sweeps() {
+        let (c, t) = setup();
+        let a = uid(6);
+        let b = uid(7);
+        t.register(a, Priority::Standard, None);
+        c.advance(1_000_000);
+        t.register(b, Priority::Standard, None);
+        assert_eq!(t.len(), 2);
+        t.finish(a);
+        assert_eq!(t.len(), 1);
+        c.advance(10_000_000);
+        // b is now ~10 ms old; purge anything older than 5 ms.
+        assert_eq!(t.purge_older_than(5_000_000), 1);
+        assert!(t.is_empty());
+    }
+}

@@ -172,6 +172,14 @@ pub struct ProxySettings {
     pub monitor_window_ms: u64,
     /// Admission headroom: admit while rate < capacity * headroom.
     pub headroom: f64,
+    /// Fraction of the admission budget reserved for Interactive-class
+    /// traffic (see [`crate::client::Priority`]): under overload,
+    /// Standard/Batch submissions are shed first while user-facing
+    /// requests still find headroom. **Opt-in** (default 0.0): with a
+    /// reserve, non-interactive goodput plateaus below the Theorem-1
+    /// rate by design, so deployments without SLO tiers keep the paper's
+    /// plateau-at-capacity behaviour.
+    pub interactive_reserve: f64,
 }
 
 /// Top-level deployment config for one or more Workflow Sets.
@@ -207,7 +215,11 @@ impl ClusterConfig {
                 auto_rebalance: false,
             },
             db: DbSettings { replicas: 2, ttl_ms: 60_000 },
-            proxy: ProxySettings { monitor_window_ms: 2_000, headroom: 1.0 },
+            proxy: ProxySettings {
+                monitor_window_ms: 2_000,
+                headroom: 1.0,
+                interactive_reserve: 0.0,
+            },
             apps: vec![AppConfig {
                 id: 1,
                 name: "i2v".into(),
@@ -266,6 +278,9 @@ impl ClusterConfig {
         }
         if self.nm.replicas == 0 || self.db.replicas == 0 {
             return Err(err("nm/db replicas must be >= 1"));
+        }
+        if !(0.0..=1.0).contains(&self.proxy.interactive_reserve) {
+            return Err(err("proxy.interactive_reserve must be in [0,1]"));
         }
         let mut ids = std::collections::HashSet::new();
         for app in &self.apps {
@@ -332,6 +347,10 @@ impl ClusterConfig {
                     Json::Num(self.proxy.monitor_window_ms as f64),
                 ),
                 ("headroom", Json::Num(self.proxy.headroom)),
+                (
+                    "interactive_reserve",
+                    Json::Num(self.proxy.interactive_reserve),
+                ),
             ]),
         );
         root.insert(
@@ -431,6 +450,11 @@ impl ClusterConfig {
                     base.proxy.monitor_window_ms,
                 ),
                 headroom: get_f(p, "headroom", base.proxy.headroom),
+                interactive_reserve: get_f(
+                    p,
+                    "interactive_reserve",
+                    base.proxy.interactive_reserve,
+                ),
             },
             None => base.proxy,
         };

@@ -3,10 +3,17 @@
 //! due to ongoing replication or instance failure — the client proceeds
 //! to query another instance in the next attempt."
 
-use super::MemDb;
+use super::{EntryKind, MemDb};
 use crate::util::Uid;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Upper bound on one blocking slice of a multi-replica wait: the waiter
+/// blocks on one replica's condvar, so a result that lands only on
+/// *another* replica (replication lag, replica death mid-wait) is still
+/// observed within this bound.
+const WAIT_SLICE: Duration = Duration::from_millis(50);
 
 /// Handle to one replica with a liveness switch (tests kill replicas).
 pub struct Replica {
@@ -34,9 +41,10 @@ impl DbClient {
         self.replicas[idx].alive.store(alive, Ordering::SeqCst);
     }
 
-    /// Fetch: query replicas one at a time, first hit wins (and purges on
-    /// that replica; other replicas purge by TTL — the paper's transient
-    /// model tolerates the stale copies).
+    /// Fetch a result: query replicas one at a time, first hit wins (and
+    /// purges on that replica; other replicas purge by TTL — the paper's
+    /// transient model tolerates the stale copies). Tombstones read as a
+    /// miss; use [`DbClient::fetch_entry`] for the typed lifecycle view.
     pub fn fetch(&self, uid: Uid) -> Option<Vec<u8>> {
         for r in &self.replicas {
             if !r.alive.load(Ordering::SeqCst) {
@@ -47,6 +55,53 @@ impl DbClient {
             }
         }
         None
+    }
+
+    /// Typed fetch: result **or** tombstone, whichever terminal entry a
+    /// replica holds. Same one-at-a-time fall-through as
+    /// [`DbClient::fetch`].
+    pub fn fetch_entry(&self, uid: Uid) -> Option<(EntryKind, Vec<u8>)> {
+        for r in &self.replicas {
+            if !r.alive.load(Ordering::SeqCst) {
+                continue;
+            }
+            if let Some(entry) = r.db.fetch_entry(uid) {
+                return Some(entry);
+            }
+        }
+        None
+    }
+
+    /// Block until any replica signals a store, or `timeout` elapses.
+    /// The blocking primitive behind [`crate::client::RequestHandle::wait`]
+    /// — waiters sleep on a replica condvar instead of busy-polling.
+    pub fn wait_signal(&self, timeout: Duration) {
+        match self
+            .replicas
+            .iter()
+            .find(|r| r.alive.load(Ordering::SeqCst))
+        {
+            Some(r) => r.db.wait_signal(timeout.min(WAIT_SLICE)),
+            // No live replica to block on: bounded sleep, then the caller
+            // re-checks (replicas may come back alive).
+            None => std::thread::sleep(timeout.min(Duration::from_millis(5))),
+        }
+    }
+
+    /// Blocking typed fetch: wait up to `timeout` for a result or
+    /// tombstone to land on any replica.
+    pub fn wait_entry(&self, uid: Uid, timeout: Duration) -> Option<(EntryKind, Vec<u8>)> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            if let Some(entry) = self.fetch_entry(uid) {
+                return Some(entry);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            self.wait_signal(deadline - now);
+        }
     }
 
     /// Number of replicas.
@@ -107,5 +162,45 @@ mod tests {
         client.set_alive(0, false);
         client.set_alive(1, false);
         assert_eq!(client.fetch(u), None);
+    }
+
+    #[test]
+    fn fetch_entry_sees_tombstones() {
+        let (dbs, client) = setup(2);
+        let u = Uid::fresh(NodeId(0));
+        dbs[0].put_tombstone(u, EntryKind::DeadlineExceeded);
+        assert_eq!(client.fetch(u), None, "legacy fetch skips tombstones");
+        assert_eq!(
+            client.fetch_entry(u),
+            Some((EntryKind::DeadlineExceeded, vec![]))
+        );
+    }
+
+    #[test]
+    fn wait_entry_blocks_until_put() {
+        let (dbs, client) = setup(2);
+        let client = Arc::new(client);
+        let u = Uid::fresh(NodeId(0));
+        let waiter = {
+            let client = client.clone();
+            std::thread::spawn(move || client.wait_entry(u, Duration::from_secs(5)))
+        };
+        std::thread::sleep(Duration::from_millis(30));
+        dbs[0].put(u, b"late".to_vec());
+        assert_eq!(
+            waiter.join().unwrap(),
+            Some((EntryKind::Result, b"late".to_vec()))
+        );
+    }
+
+    #[test]
+    fn wait_entry_times_out() {
+        let (_dbs, client) = setup(1);
+        let t0 = Instant::now();
+        assert_eq!(
+            client.wait_entry(Uid::fresh(NodeId(0)), Duration::from_millis(40)),
+            None
+        );
+        assert!(t0.elapsed() >= Duration::from_millis(40));
     }
 }

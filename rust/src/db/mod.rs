@@ -10,12 +10,19 @@
 //!   **no consensus** ("strong consistency consensus is not required");
 //! - clients query one instance at a time and fall through to the next
 //!   replica on miss or failure (§7).
+//!
+//! Extensions for the unified [`crate::client`] gateway API: stores are
+//! signalled through a condvar so result waiters **block** instead of
+//! busy-polling ([`MemDb::wait_signal`], [`DbClient::wait_entry`]), and
+//! the workflow data plane publishes [`EntryKind`] **tombstones**
+//! (deadline exceeded / cancelled) instead of results for dropped
+//! in-flight work.
 
 mod client;
 mod store;
 
 pub use client::DbClient;
-pub use store::{DbStats, MemDb, StoredResult};
+pub use store::{DbStats, EntryKind, MemDb, StoredResult};
 
 #[cfg(test)]
 mod tests {

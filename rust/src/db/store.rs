@@ -1,13 +1,31 @@
 //! One database instance: an in-memory UID-keyed store with TTL and
-//! fetch-purge lifecycle.
+//! fetch-purge lifecycle, condvar waiters (blocking result waits without
+//! busy-polling), and request-lifecycle tombstones.
 
 use crate::util::{Clock, Uid};
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
 
-/// A stored generation result.
+/// What a stored entry represents. Besides real results the workflow
+/// data plane publishes **tombstones**: terminal markers written instead
+/// of a result when in-flight work was dropped (deadline passed,
+/// request cancelled), so every result reader observes the same terminal
+/// state the control plane decided.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EntryKind {
+    /// A real generation result.
+    Result,
+    /// The request's deadline passed before completion.
+    DeadlineExceeded,
+    /// The request was cancelled in flight.
+    Cancelled,
+}
+
+/// A stored generation result (or tombstone).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct StoredResult {
+    pub kind: EntryKind,
     pub data: Vec<u8>,
     /// Store time (instance clock, ns).
     pub stored_at_ns: u64,
@@ -17,6 +35,7 @@ pub struct StoredResult {
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct DbStats {
     pub puts: u64,
+    pub tombstones: u64,
     pub hits: u64,
     pub misses: u64,
     pub purged_on_fetch: u64,
@@ -30,6 +49,9 @@ pub struct MemDb {
     clock: Arc<dyn Clock>,
     ttl_ns: u64,
     inner: Mutex<Inner>,
+    /// Signalled on every store; [`MemDb::wait_signal`] blocks here so
+    /// result waiters sleep instead of polling.
+    signal: Condvar,
 }
 
 #[derive(Default)]
@@ -45,6 +67,7 @@ impl MemDb {
             clock,
             ttl_ns,
             inner: Mutex::new(Inner::default()),
+            signal: Condvar::new(),
         }
     }
 
@@ -55,11 +78,35 @@ impl MemDb {
         g.stats.resident_bytes += data.len() as u64;
         let prev = g.map.insert(
             uid,
-            StoredResult { data, stored_at_ns: self.clock.now_ns() },
+            StoredResult {
+                kind: EntryKind::Result,
+                data,
+                stored_at_ns: self.clock.now_ns(),
+            },
         );
         if let Some(p) = prev {
             g.stats.resident_bytes -= p.data.len() as u64;
         }
+        drop(g);
+        self.signal.notify_all();
+    }
+
+    /// Publish a terminal tombstone (deadline/cancellation) for `uid`
+    /// instead of a result. A tombstone never overwrites a real result
+    /// that already arrived (first terminal write wins).
+    pub fn put_tombstone(&self, uid: Uid, kind: EntryKind) {
+        debug_assert!(kind != EntryKind::Result, "use put() for results");
+        let mut g = self.inner.lock().unwrap();
+        if matches!(g.map.get(&uid), Some(r) if r.kind == EntryKind::Result) {
+            return;
+        }
+        g.stats.tombstones += 1;
+        g.map.insert(
+            uid,
+            StoredResult { kind, data: Vec::new(), stored_at_ns: self.clock.now_ns() },
+        );
+        drop(g);
+        self.signal.notify_all();
     }
 
     /// Store a replicated copy (keeps the origin's timestamp semantics
@@ -71,32 +118,64 @@ impl MemDb {
         if let Some(p) = g.map.insert(uid, result) {
             g.stats.resident_bytes -= p.data.len() as u64;
         }
+        drop(g);
+        self.signal.notify_all();
     }
 
-    /// Fetch-and-purge: the paper's client read path. Returns `None` on
-    /// miss or if the entry expired.
+    /// Fetch-and-purge any entry kind: the typed client read path.
+    /// Returns `None` on miss or if the entry expired.
+    pub fn fetch_entry(&self, uid: Uid) -> Option<(EntryKind, Vec<u8>)> {
+        self.fetch_if(uid, |_| true)
+    }
+
+    /// Fetch-and-purge a **result**: the paper's legacy client read path.
+    /// Tombstones are left in place (they expire by TTL or are consumed
+    /// by [`MemDb::fetch_entry`]) and read as a miss.
     pub fn fetch(&self, uid: Uid) -> Option<Vec<u8>> {
+        self.fetch_if(uid, |k| k == EntryKind::Result).map(|(_, data)| data)
+    }
+
+    fn fetch_if(
+        &self,
+        uid: Uid,
+        want: impl Fn(EntryKind) -> bool,
+    ) -> Option<(EntryKind, Vec<u8>)> {
         let now = self.clock.now_ns();
         let mut g = self.inner.lock().unwrap();
-        match g.map.remove(&uid) {
-            Some(r) if now.saturating_sub(r.stored_at_ns) <= self.ttl_ns => {
-                g.stats.hits += 1;
-                g.stats.purged_on_fetch += 1;
+        // Peek the kind first (EntryKind is Copy) so the map borrow ends
+        // before stats are touched.
+        let kind = g.map.get(&uid).map(|r| r.kind);
+        match kind {
+            Some(k) if want(k) => {
+                let r = g.map.remove(&uid).expect("present: just peeked");
                 g.stats.resident_bytes -= r.data.len() as u64;
-                Some(r.data)
+                if now.saturating_sub(r.stored_at_ns) <= self.ttl_ns {
+                    g.stats.hits += 1;
+                    g.stats.purged_on_fetch += 1;
+                    Some((r.kind, r.data))
+                } else {
+                    // Present but expired: purge, report miss.
+                    g.stats.expired += 1;
+                    g.stats.misses += 1;
+                    None
+                }
             }
-            Some(r) => {
-                // Present but expired: purge, report miss.
-                g.stats.expired += 1;
-                g.stats.misses += 1;
-                g.stats.resident_bytes -= r.data.len() as u64;
-                None
-            }
-            None => {
+            // Present but filtered out (a tombstone under fetch()), or
+            // absent: a miss either way; the entry stays.
+            Some(_) | None => {
                 g.stats.misses += 1;
                 None
             }
         }
+    }
+
+    /// Block until *any* store lands on this instance or `timeout`
+    /// elapses. Callers re-check their UID after waking (puts for other
+    /// UIDs wake waiters too — the common case is the waiter's own
+    /// result, written to every replica by ResultDeliver).
+    pub fn wait_signal(&self, timeout: Duration) {
+        let g = self.inner.lock().unwrap();
+        let _ = self.signal.wait_timeout(g, timeout).unwrap();
     }
 
     /// Peek without purging (replication reads).
@@ -230,5 +309,60 @@ mod tests {
         assert!(db.peek(u).is_some());
         assert!(db.peek(u).is_some());
         assert_eq!(db.len(), 1);
+    }
+
+    #[test]
+    fn tombstone_lifecycle() {
+        let (_c, db) = setup(1000);
+        let u = uid(6);
+        db.put_tombstone(u, EntryKind::DeadlineExceeded);
+        // Legacy fetch treats a tombstone as a miss and leaves it.
+        assert_eq!(db.fetch(u), None);
+        assert_eq!(db.len(), 1);
+        // Typed fetch consumes it.
+        assert_eq!(db.fetch_entry(u), Some((EntryKind::DeadlineExceeded, vec![])));
+        assert_eq!(db.fetch_entry(u), None);
+        assert_eq!(db.stats().tombstones, 1);
+    }
+
+    #[test]
+    fn tombstone_never_overwrites_result() {
+        let (_c, db) = setup(1000);
+        let u = uid(7);
+        db.put(u, vec![1]);
+        db.put_tombstone(u, EntryKind::Cancelled);
+        assert_eq!(db.fetch_entry(u), Some((EntryKind::Result, vec![1])));
+    }
+
+    #[test]
+    fn tombstones_expire_by_ttl() {
+        let (c, db) = setup(100);
+        db.put_tombstone(uid(8), EntryKind::Cancelled);
+        c.advance(101);
+        assert_eq!(db.purge_expired(), 1);
+        assert!(db.is_empty());
+    }
+
+    #[test]
+    fn put_wakes_waiter() {
+        let (_c, db) = setup(u64::MAX);
+        let db = Arc::new(db);
+        let u = uid(9);
+        let waiter = {
+            let db = db.clone();
+            std::thread::spawn(move || {
+                let deadline = std::time::Instant::now() + Duration::from_secs(5);
+                loop {
+                    if let Some(r) = db.fetch(u) {
+                        return r;
+                    }
+                    assert!(std::time::Instant::now() < deadline, "wait must not hang");
+                    db.wait_signal(Duration::from_secs(1));
+                }
+            })
+        };
+        std::thread::sleep(Duration::from_millis(30));
+        db.put(u, vec![42]);
+        assert_eq!(waiter.join().unwrap(), vec![42]);
     }
 }

@@ -25,15 +25,16 @@
 //!    ([`crate::wset::WorkflowSet::add_idle_instance`]), which its own NM
 //!    then assigns to the busiest stage.
 //!
-//! Spill, reject, and donation counts are published through a
-//! [`crate::metrics::Registry`] so the `onepiece federate` driver and
-//! `benches/e11_federation.rs` can report them per set.
+//! The router serves through the unified [`crate::client::Gateway`] API
+//! (typed [`crate::client::RequestHandle`]s with priorities, deadlines,
+//! and cancellation); spill, reject, donation, and per-priority counts
+//! are published through a [`crate::metrics::Registry`] so the
+//! `onepiece federate` driver and `benches/e11_federation.rs` can report
+//! them per set.
 
 mod router;
 
-pub use router::{
-    DonationAction, FedAdmission, FederationConfig, FederationRouter, SetSnapshot,
-};
+pub use router::{DonationAction, FederationConfig, FederationRouter, SetSnapshot};
 
 use crate::config::ClusterConfig;
 use crate::workflow::AppLogic;

@@ -2,10 +2,11 @@
 //! spill and elastic instance donation (see the module docs in
 //! [`crate::federation`]).
 
-use crate::metrics::Registry;
-use crate::proxy::{Admission, AdmissionSnapshot};
+use crate::client::{Gateway, Priority, RequestHandle, SubmitError, SubmitOptions};
+use crate::metrics::{Counter, Registry};
+use crate::proxy::AdmissionSnapshot;
 use crate::transport::{AppId, Payload};
-use crate::util::{NodeId, Uid};
+use crate::util::NodeId;
 use crate::wset::WorkflowSet;
 use std::collections::HashMap;
 use std::sync::{Mutex, RwLock};
@@ -38,16 +39,6 @@ impl Default for FederationConfig {
             donor_max_pressure: 0.5,
         }
     }
-}
-
-/// Outcome of a federated submission.
-#[derive(Debug, Clone, PartialEq, Eq)]
-pub enum FedAdmission {
-    /// Admitted by `set`; `spilled` is true when that was not the
-    /// router's first choice (the preferred set fast-rejected).
-    Accepted { set: usize, uid: Uid, spilled: bool },
-    /// Every set in the federation is at capacity.
-    Rejected,
 }
 
 /// One cross-set donation (the federation analogue of
@@ -85,11 +76,51 @@ impl SetSnapshot {
     }
 }
 
+/// Admission-path counters, resolved once at construction so the hot
+/// path never allocates metric names or takes the registry lock (same
+/// pattern as the proxy's per-priority counter arrays).
+struct AdmissionCounters {
+    submitted: Arc<Counter>,
+    accepted: Arc<Counter>,
+    spilled: Arc<Counter>,
+    submitted_prio: [Arc<Counter>; 3],
+    accepted_prio: [Arc<Counter>; 3],
+    rejected: Arc<Counter>,
+    rejected_prio: [Arc<Counter>; 3],
+    /// Per member set: `fed.set{i}.accepted` / `fed.set{i}.spill_in`.
+    set_accepted: Vec<Arc<Counter>>,
+    set_spill_in: Vec<Arc<Counter>>,
+}
+
+impl AdmissionCounters {
+    fn new(metrics: &Registry, n_sets: usize) -> Self {
+        let prio = |kind: &str| {
+            Priority::ALL.map(|p| metrics.counter(&format!("fed.{kind}.{}", p.label())))
+        };
+        Self {
+            submitted: metrics.counter("fed.submitted"),
+            accepted: metrics.counter("fed.accepted"),
+            spilled: metrics.counter("fed.spilled"),
+            submitted_prio: prio("submitted"),
+            accepted_prio: prio("accepted"),
+            rejected: metrics.counter("fed.rejected"),
+            rejected_prio: prio("rejected"),
+            set_accepted: (0..n_sets)
+                .map(|i| metrics.counter(&format!("fed.set{i}.accepted")))
+                .collect(),
+            set_spill_in: (0..n_sets)
+                .map(|i| metrics.counter(&format!("fed.set{i}.spill_in")))
+                .collect(),
+        }
+    }
+}
+
 /// Global router over N Workflow Sets.
 pub struct FederationRouter {
     sets: Vec<RwLock<WorkflowSet>>,
     cfg: FederationConfig,
     metrics: Registry,
+    counters: AdmissionCounters,
     /// Cached per-app load vector + refresh stamp (see
     /// [`FederationConfig::snapshot_max_age`]).
     loads: Mutex<HashMap<AppId, (Instant, Vec<f64>)>>,
@@ -100,10 +131,13 @@ pub struct FederationRouter {
 
 impl FederationRouter {
     pub fn new(sets: Vec<WorkflowSet>, cfg: FederationConfig) -> Self {
+        let metrics = Registry::new();
+        let counters = AdmissionCounters::new(&metrics, sets.len());
         Self {
             sets: sets.into_iter().map(RwLock::new).collect(),
             cfg,
-            metrics: Registry::new(),
+            metrics,
+            counters,
             loads: Mutex::new(HashMap::new()),
             rebalance_serial: Mutex::new(()),
         }
@@ -120,7 +154,7 @@ impl FederationRouter {
     }
 
     /// The federation metrics registry (spill/reject/donation counters,
-    /// per-set gauges).
+    /// per-set gauges, per-priority accept/reject).
     pub fn metrics(&self) -> &Registry {
         &self.metrics
     }
@@ -154,54 +188,6 @@ impl FederationRouter {
             .collect();
         cache.insert(app, (Instant::now(), loads.clone()));
         loads
-    }
-
-    /// Submit a request: least-loaded admitting set first, then spill in
-    /// ascending-load order, rejecting only when every set is full.
-    pub fn submit(&self, app: AppId, payload: Payload) -> FedAdmission {
-        self.metrics.counter("fed.submitted").inc();
-        let loads = self.loads_for(app);
-        let order = Self::route_order(&loads);
-        for (attempt, &idx) in order.iter().enumerate() {
-            let admission = {
-                let set = self.sets[idx].read().unwrap();
-                set.submit(app, payload.clone())
-            };
-            if let Admission::Accepted(uid) = admission {
-                let spilled = attempt > 0;
-                self.metrics.counter("fed.accepted").inc();
-                self.metrics.counter(&format!("fed.set{idx}.accepted")).inc();
-                if spilled {
-                    self.metrics.counter("fed.spilled").inc();
-                    self.metrics.counter(&format!("fed.set{idx}.spill_in")).inc();
-                }
-                return FedAdmission::Accepted { set: idx, uid, spilled };
-            }
-            if !self.cfg.spill {
-                break;
-            }
-        }
-        self.metrics.counter("fed.rejected").inc();
-        FedAdmission::Rejected
-    }
-
-    /// Poll the set that accepted a request.
-    pub fn poll(&self, set: usize, uid: Uid) -> Option<Vec<u8>> {
-        self.sets[set].read().unwrap().poll(uid)
-    }
-
-    /// Blocking poll with timeout.
-    pub fn wait_result(&self, set: usize, uid: Uid, timeout: Duration) -> Option<Vec<u8>> {
-        let deadline = Instant::now() + timeout;
-        loop {
-            if let Some(r) = self.poll(set, uid) {
-                return Some(r);
-            }
-            if Instant::now() >= deadline {
-                return None;
-            }
-            std::thread::sleep(Duration::from_millis(5));
-        }
     }
 
     /// Fresh (uncached) snapshots of every member set; also updates the
@@ -298,9 +284,61 @@ impl FederationRouter {
     }
 }
 
+impl Gateway for FederationRouter {
+    /// Submit a request: least-loaded admitting set first, then spill in
+    /// ascending-load order, rejecting only when every set is full. The
+    /// payload moves through the spill chain **without cloning** — a
+    /// rejecting proxy hands it back. The options' retry policy re-walks
+    /// the whole spill order with backoff between rounds.
+    fn submit_with(
+        &self,
+        app: AppId,
+        payload: Payload,
+        opts: SubmitOptions,
+    ) -> Result<RequestHandle, SubmitError> {
+        let c = &self.counters;
+        c.submitted.inc();
+        c.submitted_prio[opts.priority.index()].inc();
+        let result = crate::client::retry_rounds(&opts, payload, |mut payload| {
+            let loads = self.loads_for(app);
+            let order = Self::route_order(&loads);
+            let mut best: Option<Duration> = None;
+            for (attempt, &idx) in order.iter().enumerate() {
+                let set = self.sets[idx].read().unwrap();
+                match set.submit_once(app, payload, &opts) {
+                    Ok(uid) => {
+                        c.accepted.inc();
+                        c.accepted_prio[opts.priority.index()].inc();
+                        c.set_accepted[idx].inc();
+                        if attempt > 0 {
+                            c.spilled.inc();
+                            c.set_spill_in[idx].inc();
+                        }
+                        return Ok(set.handle_for(uid, idx, &opts));
+                    }
+                    Err((e, p)) => {
+                        payload = p;
+                        best = e.fold_hint(best);
+                    }
+                }
+                if !self.cfg.spill {
+                    break;
+                }
+            }
+            Err((SubmitError::from_hint(best), payload))
+        });
+        if result.is_err() {
+            c.rejected.inc();
+            c.rejected_prio[opts.priority.index()].inc();
+        }
+        result
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::client::WaitOutcome;
     use crate::config::{ClusterConfig, ExecModel, FabricKind};
     use crate::workflow::EchoLogic;
     use crate::wset::WorkflowSet;
@@ -366,22 +404,25 @@ mod tests {
 
         let payload = Payload::Bytes(vec![1]);
         // Budget 2 per set, frozen order [0, 1]: two land on set 0, the
-        // next two spill to set 1, the fifth is rejected by everyone.
+        // next two spill to set 1, the fifth is rejected by everyone with
+        // a structured retry hint.
         let mut results = Vec::new();
         for _ in 0..5 {
             results.push(fed.submit(app, payload.clone()));
         }
-        for (i, expect_set, expect_spill) in
-            [(0usize, 0usize, false), (1, 0, false), (2, 1, true), (3, 1, true)]
-        {
+        for (i, expect_set) in [(0usize, 0usize), (1, 0), (2, 1), (3, 1)] {
             match &results[i] {
-                FedAdmission::Accepted { set, spilled, .. } => {
-                    assert_eq!((*set, *spilled), (expect_set, expect_spill), "req {i}");
-                }
-                other => panic!("req {i}: expected acceptance, got {other:?}"),
+                Ok(handle) => assert_eq!(handle.set(), expect_set, "req {i}"),
+                Err(e) => panic!("req {i}: expected acceptance, got {e:?}"),
             }
         }
-        assert_eq!(results[4], FedAdmission::Rejected, "all sets full");
+        match &results[4] {
+            Err(SubmitError::Overloaded { retry_after }) => {
+                assert!(*retry_after > Duration::ZERO, "hint must be positive");
+                assert!(*retry_after <= Duration::from_secs(64), "hint bounded by window");
+            }
+            other => panic!("all sets full must report Overloaded, got {other:?}"),
+        }
 
         let counters: std::collections::HashMap<String, u64> =
             fed.metrics().counters_snapshot().into_iter().collect();
@@ -391,6 +432,8 @@ mod tests {
         assert_eq!(counters["fed.set0.accepted"], 2);
         assert_eq!(counters["fed.set1.accepted"], 2);
         assert_eq!(counters["fed.set1.spill_in"], 2);
+        assert_eq!(counters["fed.accepted.standard"], 4);
+        assert_eq!(counters["fed.rejected.standard"], 1);
         fed.shutdown();
     }
 
@@ -415,8 +458,8 @@ mod tests {
         let mut rejected = 0;
         for _ in 0..4 {
             match fed.submit(app, payload.clone()) {
-                FedAdmission::Accepted { .. } => accepted += 1,
-                FedAdmission::Rejected => rejected += 1,
+                Ok(_) => accepted += 1,
+                Err(_) => rejected += 1,
             }
         }
         // Frozen order pins everything on set 0 (budget 2); without spill
@@ -435,13 +478,32 @@ mod tests {
             build_set(&cfg, vec![1, 1, 1, 1]),
         ];
         let fed = frozen(sets);
-        match fed.submit(app, Payload::Bytes(vec![3])) {
-            FedAdmission::Accepted { set, spilled, .. } => {
-                assert_eq!(set, 1, "healthy set preferred");
-                assert!(!spilled, "routing around a dead set is not a spill");
-            }
-            other => panic!("expected acceptance, got {other:?}"),
-        }
+        let handle = fed
+            .submit(app, Payload::Bytes(vec![3]))
+            .expect("healthy set must accept");
+        assert_eq!(handle.set(), 1, "healthy set preferred");
+        let counters: std::collections::HashMap<String, u64> =
+            fed.metrics().counters_snapshot().into_iter().collect();
+        assert_eq!(
+            counters.get("fed.spilled").copied().unwrap_or(0),
+            0,
+            "routing around a dead set is not a spill"
+        );
+        fed.shutdown();
+    }
+
+    #[test]
+    fn end_to_end_result_through_federation_handle() {
+        let cfg = tiny_budget_config();
+        let app = AppId(1);
+        let fed = frozen(vec![build_set(&cfg, vec![1, 1, 1, 1])]);
+        std::thread::sleep(Duration::from_millis(80));
+        let handle = fed.submit(app, Payload::Bytes(vec![9])).expect("admit");
+        let WaitOutcome::Done(bytes) = handle.wait(Duration::from_secs(10)) else {
+            panic!("federated request must complete")
+        };
+        let msg = crate::transport::WorkflowMessage::decode(&bytes).unwrap();
+        assert_eq!(msg.payload, Payload::Bytes(vec![9]));
         fed.shutdown();
     }
 

@@ -13,9 +13,11 @@
 //!   TaskWorkers / ResultDeliver), the NodeManager with Paxos primary
 //!   election, the memory-centric database layer, the simulated RDMA
 //!   fabric, the paper's deadlock-free multi-producer **double-ring
-//!   buffer** ([`ringbuf`]), and the cross-set [`federation`] layer
+//!   buffer** ([`ringbuf`]), the cross-set [`federation`] layer
 //!   (global load-aware routing, spill, and elastic instance donation
-//!   over N Workflow Sets).
+//!   over N Workflow Sets), and the unified [`client`] gateway API
+//!   (typed request handles with priorities, deadlines, and cancellation
+//!   across every tier).
 //! - **L2/L1 (build-time python)**: JAX stage models calling Pallas
 //!   kernels, AOT-lowered once to `artifacts/*.hlo.txt`.
 //! - **Runtime bridge**: [`runtime`] loads the HLO artifacts through the
@@ -27,6 +29,7 @@
 //! mapping every bench/example to the paper claim it reproduces.
 
 pub mod bench;
+pub mod client;
 pub mod config;
 pub mod db;
 pub mod federation;

@@ -6,8 +6,11 @@
 //! `onepiece help` for usage.
 
 use anyhow::{bail, Context, Result};
+use onepiece::client::{
+    Gateway, Priority, RequestHandle, RequestStatus, SubmitOptions, WaitOutcome,
+};
 use onepiece::config::{ClusterConfig, ExecModel};
-use onepiece::federation::{FedAdmission, FederationConfig, FederationRouter};
+use onepiece::federation::{FederationConfig, FederationRouter};
 use onepiece::pipeline::{trace_schedule, TraceStage};
 use onepiece::sim::{
     simulate_disaggregated, simulate_monolithic, wan_stages, ArrivalProcess,
@@ -30,8 +33,10 @@ USAGE:
       --sim) and report latency/throughput.
   onepiece federate [--sets N] [--rate R] [--duration S] --sim
       Run N Workflow Sets behind the global load-aware FederationRouter
-      under bursty (MMPP) load; report per-set throughput, spill count,
-      reject rate, and cross-set donations.
+      under bursty (MMPP) load with an Interactive/Standard/Batch SLO
+      mix; report per-set throughput, spill count, reject rate,
+      cross-set donations, per-priority admission, and
+      cancelled/deadline-missed lifecycle counts.
   onepiece plan [--entrance N]
       Print the Theorem-1 instance plan for the i2v pipeline.
   onepiece trace (--fig5 | --fig6)
@@ -124,26 +129,24 @@ fn serve(flags: &HashMap<String, String>) -> Result<()> {
         ("image".into(), vec![32, 32, 3], image),
     ]);
 
-    let mut uids = Vec::new();
+    let mut handles = Vec::new();
     let t0 = std::time::Instant::now();
     for i in 0..n_requests {
         match set.submit(AppId(1), payload.clone()) {
-            onepiece::proxy::Admission::Accepted(uid) => uids.push((i, uid, now_ns())),
-            onepiece::proxy::Admission::Rejected => {
-                println!("request {i}: fast-rejected (at capacity)");
-            }
+            Ok(handle) => handles.push((i, handle, now_ns())),
+            Err(e) => println!("request {i}: fast-rejected ({e})"),
         }
         std::thread::sleep(Duration::from_millis(10));
     }
     let mut latencies = Vec::new();
-    for (i, uid, submitted) in &uids {
-        match set.wait_result(*uid, Duration::from_secs(120)) {
-            Some(bytes) => {
+    for (i, handle, submitted) in &handles {
+        match handle.wait(Duration::from_secs(120)) {
+            WaitOutcome::Done(bytes) => {
                 let lat_ms = (now_ns() - submitted) as f64 / 1e6;
                 latencies.push(lat_ms);
                 println!("request {i}: {} bytes in {:.1} ms", bytes.len(), lat_ms);
             }
-            None => println!("request {i}: TIMED OUT"),
+            other => println!("request {i}: {other:?}"),
         }
     }
     let wall = t0.elapsed().as_secs_f64();
@@ -193,6 +196,9 @@ fn federate(flags: &HashMap<String, String>) -> Result<()> {
             s.exec = ExecModel::Simulated { ms: 1.0 };
         }
         cfg.apps[0].stages[0].exec_ms = 40.0;
+        // This driver submits an SLO mix, so opt into the Interactive
+        // admission reserve (10% of each set's budget).
+        cfg.proxy.interactive_reserve = 0.1;
         cfg.idle_pool = 2;
         cfg
     };
@@ -227,34 +233,42 @@ fn federate(flags: &HashMap<String, String>) -> Result<()> {
         arrivals.len()
     );
 
-    /// Move completed requests out of `pending`, recording latency at
-    /// the moment the result is first observed (so reported latency is
-    /// submission→completion, not submission→post-hoc drain).
-    fn drain_completed(
-        fed: &FederationRouter,
-        pending: &mut Vec<(usize, onepiece::util::Uid, Instant)>,
+    /// Move finished requests out of `pending`, recording latency at the
+    /// moment the result is first observed (so reported latency is
+    /// submission→completion, not submission→post-hoc drain). Deadline
+    /// misses and cancellations are terminal too — they leave `pending`
+    /// without contributing a latency sample.
+    fn drain_finished(
+        pending: &mut Vec<(RequestHandle, Instant)>,
         per_set_done: &mut [usize],
         latencies_ms: &mut Vec<f64>,
     ) {
-        pending.retain(|&(set, uid, submitted)| {
-            if fed.poll(set, uid).is_some() {
-                per_set_done[set] += 1;
+        pending.retain(|(handle, submitted)| match handle.status() {
+            RequestStatus::Done => {
+                per_set_done[handle.set()] += 1;
                 latencies_ms.push(submitted.elapsed().as_secs_f64() * 1e3);
                 false
-            } else {
-                true
             }
+            s => !s.is_terminal(),
         });
     }
 
+    // SLO mix: one third of the traffic per priority class; Interactive
+    // carries a 2 s end-to-end deadline (missed deadlines surface in the
+    // per-set `deadline_missed` counters below).
+    let slo_mix = [
+        SubmitOptions::interactive().with_deadline(Duration::from_secs(2)),
+        SubmitOptions::default(),
+        SubmitOptions::batch(),
+    ];
     let payload = Payload::Bytes(vec![7u8; 64]);
     let t0 = Instant::now();
-    let mut pending: Vec<(usize, onepiece::util::Uid, Instant)> = Vec::new();
+    let mut pending: Vec<(RequestHandle, Instant)> = Vec::new();
     let mut per_set_done = vec![0usize; n_sets];
     let mut latencies_ms: Vec<f64> = Vec::new();
     let mut admitted_total = 0usize;
     let mut next_rebalance = 0.25f64;
-    for &arr in &arrivals {
+    for (i, &arr) in arrivals.iter().enumerate() {
         let target = t0 + Duration::from_secs_f64(arr);
         let now = Instant::now();
         if target > now {
@@ -271,18 +285,17 @@ fn federate(flags: &HashMap<String, String>) -> Result<()> {
             }
             next_rebalance += 0.25;
         }
-        if let FedAdmission::Accepted { set, uid, .. } = fed.submit(app, payload.clone())
-        {
+        if let Ok(handle) = fed.submit_with(app, payload.clone(), slo_mix[i % 3]) {
             admitted_total += 1;
-            pending.push((set, uid, Instant::now()));
+            pending.push((handle, Instant::now()));
         }
-        drain_completed(&fed, &mut pending, &mut per_set_done, &mut latencies_ms);
+        drain_finished(&mut pending, &mut per_set_done, &mut latencies_ms);
     }
 
     // Drain the backlog (set 0's slow diffusion keeps a queue).
     let drain_deadline = Instant::now() + Duration::from_secs(15);
     while !pending.is_empty() && Instant::now() < drain_deadline {
-        drain_completed(&fed, &mut pending, &mut per_set_done, &mut latencies_ms);
+        drain_finished(&mut pending, &mut per_set_done, &mut latencies_ms);
         if !pending.is_empty() {
             std::thread::sleep(Duration::from_millis(5));
         }
@@ -320,6 +333,31 @@ fn federate(flags: &HashMap<String, String>) -> Result<()> {
         get("fed.spilled"),
         100.0 * rejected as f64 / submitted.max(1) as f64,
         get("fed.donations"),
+    );
+
+    // Result-lifecycle metrics: per-priority admission at the federation
+    // tier, cancellation / deadline-miss counts summed over the member
+    // sets' registries (where the tracker and proxies account them).
+    let mut set_totals: HashMap<String, u64> = HashMap::new();
+    for i in 0..n_sets {
+        for (k, v) in fed.with_set(i, |s| s.metrics().counters_snapshot()) {
+            *set_totals.entry(k).or_insert(0) += v;
+        }
+    }
+    let set_get = |k: &str| set_totals.get(k).copied().unwrap_or(0);
+    println!("\n{:<13} {:>9} {:>9}", "priority", "accepted", "rejected");
+    for p in Priority::ALL {
+        println!(
+            "{:<13} {:>9} {:>9}",
+            p.label(),
+            get(&format!("fed.accepted.{}", p.label())),
+            get(&format!("fed.rejected.{}", p.label())),
+        );
+    }
+    println!(
+        "lifecycle: requests_cancelled {} | deadline_missed {} (Interactive carries a 2 s deadline)",
+        set_get("requests_cancelled"),
+        set_get("deadline_missed"),
     );
     println!(
         "latency: completed {}/{} | p50 {:.1} ms | p99 {:.1} ms | wall {wall:.1}s",

@@ -8,6 +8,15 @@
 //! it, keeping in-system latency flat under overload; rejected clients
 //! retry against a different Workflow Set (§3.2).
 //!
+//! The submission surface is typed for the unified [`crate::client`]
+//! gateway API: [`Proxy::submit_request`] takes
+//! [`crate::client::SubmitOptions`] (priority / deadline), registers the
+//! admitted UID with the set's [`crate::client::RequestTracker`], counts
+//! per-priority accepted/rejected metrics, reserves admission headroom
+//! for Interactive traffic under overload, and returns a structured
+//! [`crate::client::SubmitError::Overloaded`] with a `retry_after` hint
+//! instead of a bare rejection.
+//!
 //! In a federated deployment the proxy additionally *exports* its
 //! admission state ([`Proxy::admission_snapshot`]) so the global
 //! [`crate::federation::FederationRouter`] can pick the least-loaded
@@ -18,22 +27,16 @@ mod monitor;
 
 pub use monitor::RequestMonitor;
 
+use crate::client::{Priority, RequestTracker, SubmitError, SubmitOptions};
+use crate::config::ProxySettings;
 use crate::db::DbClient;
+use crate::metrics::{Counter, Registry};
 use crate::nm::{NodeManager, StageKey};
 use crate::rdma::Fabric;
 use crate::transport::{AppId, MessageHeader, Payload, RdmaEndpoint, RdmaSender, StageId, WorkflowMessage};
 use crate::util::{now_ns, Clock, NodeId, Uid};
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
-
-/// Submission outcome.
-#[derive(Debug, Clone, PartialEq, Eq)]
-pub enum Admission {
-    /// Accepted; poll the DB with this UID.
-    Accepted(Uid),
-    /// Fast-rejected: the set is at capacity — try another set.
-    Rejected,
-}
 
 /// Point-in-time export of one proxy's admission state, consumed by the
 /// cross-set [`crate::federation::FederationRouter`]: the federation
@@ -71,31 +74,47 @@ pub struct Proxy {
     nm: Arc<NodeManager>,
     monitor: RequestMonitor,
     db: Arc<DbClient>,
+    tracker: Arc<RequestTracker>,
     /// Entrance-stage senders per app, round-robin.
     senders: Mutex<HashMap<AppId, (Vec<RdmaSender>, usize)>>,
-    accepted: std::sync::atomic::AtomicU64,
-    rejected: std::sync::atomic::AtomicU64,
+    /// Per-priority lifetime counters (indexed by [`Priority::index`]),
+    /// shared into the set's metrics registry as
+    /// `accepted.<priority>` / `rejected.<priority>`.
+    accepted: [Arc<Counter>; 3],
+    rejected: [Arc<Counter>; 3],
 }
 
 impl Proxy {
+    #[allow(clippy::too_many_arguments)]
     pub fn new(
         node: NodeId,
         fabric: Fabric,
         nm: Arc<NodeManager>,
         db: Arc<DbClient>,
         clock: Arc<dyn Clock>,
-        monitor_window_ns: u64,
-        headroom: f64,
+        settings: &ProxySettings,
+        tracker: Arc<RequestTracker>,
+        metrics: Registry,
     ) -> Self {
+        let counters = |kind: &str| {
+            Priority::ALL
+                .map(|p| metrics.counter(&format!("{kind}.{}", p.label())))
+        };
         Self {
             node,
             fabric,
             nm,
-            monitor: RequestMonitor::new(clock, monitor_window_ns, headroom),
+            monitor: RequestMonitor::new(
+                clock,
+                settings.monitor_window_ms * 1_000_000,
+                settings.headroom,
+                settings.interactive_reserve,
+            ),
             db,
+            tracker,
             senders: Mutex::new(HashMap::new()),
-            accepted: Default::default(),
-            rejected: Default::default(),
+            accepted: counters("accepted"),
+            rejected: counters("rejected"),
         }
     }
 
@@ -114,14 +133,28 @@ impl Proxy {
         k as f64 / (stage0.exec_ms / 1000.0)
     }
 
-    /// Submit a generation request. Fast-rejects at capacity.
-    pub fn submit(&self, app: AppId, payload: Payload) -> Admission {
+    /// Submit a generation request. Fast-rejects at capacity with a
+    /// structured error; the payload rides back with the error so
+    /// multi-set gateways can fall through **without cloning** it up
+    /// front.
+    pub fn submit_request(
+        &self,
+        app: AppId,
+        payload: Payload,
+        opts: &SubmitOptions,
+    ) -> Result<Uid, (SubmitError, Payload)> {
         let capacity = self.capacity_rps(app);
-        if !self.monitor.admit(capacity) {
-            self.rejected.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-            return Admission::Rejected;
+        if capacity <= 0.0 {
+            self.rejected[opts.priority.index()].inc();
+            return Err((SubmitError::NoCapacity, payload));
+        }
+        if !self.monitor.admit(capacity, opts.priority) {
+            self.rejected[opts.priority.index()].inc();
+            let retry_after = self.monitor.retry_after_hint();
+            return Err((SubmitError::Overloaded { retry_after }, payload));
         }
         let uid = Uid::fresh(self.node);
+        self.tracker.register(uid, opts.priority, opts.deadline);
         let msg = WorkflowMessage {
             header: MessageHeader {
                 uid,
@@ -133,14 +166,15 @@ impl Proxy {
             payload,
         };
         if !self.forward(app, &msg) {
-            // No entrance instances (or ring full): treat as rejection so
-            // the client retries elsewhere rather than losing the request
-            // silently.
-            self.rejected.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-            return Admission::Rejected;
+            // No entrance instances (or ring full): hand the payload back
+            // so the client retries elsewhere rather than losing the
+            // request silently.
+            self.rejected[opts.priority.index()].inc();
+            self.tracker.finish(uid);
+            return Err((SubmitError::NoCapacity, msg.payload));
         }
-        self.accepted.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        Admission::Accepted(uid)
+        self.accepted[opts.priority.index()].inc();
+        Ok(uid)
     }
 
     fn forward(&self, app: AppId, msg: &WorkflowMessage) -> bool {
@@ -164,24 +198,28 @@ impl Proxy {
 
     /// Export the fast-reject state for the federation router.
     pub fn admission_snapshot(&self, app: AppId) -> AdmissionSnapshot {
+        let (accepted, rejected) = self.counts();
         AdmissionSnapshot {
             capacity_rps: self.capacity_rps(app),
             arrival_rps: self.monitor.rate_rps(),
-            accepted: self.accepted.load(std::sync::atomic::Ordering::Relaxed),
-            rejected: self.rejected.load(std::sync::atomic::Ordering::Relaxed),
+            accepted,
+            rejected,
         }
     }
 
-    /// Poll for a result (client retrieval path; purges on success).
-    pub fn poll_result(&self, uid: Uid) -> Option<Vec<u8>> {
-        self.db.fetch(uid)
-    }
-
-    /// (accepted, rejected) counters.
+    /// Lifetime (accepted, rejected) counts summed over priorities.
     pub fn counts(&self) -> (u64, u64) {
         (
-            self.accepted.load(std::sync::atomic::Ordering::Relaxed),
-            self.rejected.load(std::sync::atomic::Ordering::Relaxed),
+            self.accepted.iter().map(|c| c.get()).sum(),
+            self.rejected.iter().map(|c| c.get()).sum(),
+        )
+    }
+
+    /// Lifetime (accepted, rejected) counts for one priority class.
+    pub fn counts_for(&self, priority: Priority) -> (u64, u64) {
+        (
+            self.accepted[priority.index()].get(),
+            self.rejected[priority.index()].get(),
         )
     }
 
@@ -199,6 +237,38 @@ mod tests {
     use crate::rdma::RegionId;
     use crate::ringbuf::RingConfig;
     use crate::util::ManualClock;
+    use std::time::Duration;
+
+    fn settings() -> ProxySettings {
+        ProxySettings {
+            monitor_window_ms: 1_000,
+            headroom: 1.0,
+            interactive_reserve: 0.0,
+        }
+    }
+
+    fn mk_proxy(
+        clock: &ManualClock,
+        fabric: Fabric,
+        nm: Arc<NodeManager>,
+        db: Arc<DbClient>,
+        s: ProxySettings,
+    ) -> Proxy {
+        let tracker = Arc::new(RequestTracker::new(
+            Arc::new(clock.clone()),
+            Registry::new(),
+        ));
+        Proxy::new(
+            NodeId(1),
+            fabric,
+            nm,
+            db,
+            Arc::new(clock.clone()),
+            &s,
+            tracker,
+            Registry::new(),
+        )
+    }
 
     fn setup() -> (ManualClock, Arc<NodeManager>, Fabric, Proxy, RdmaEndpoint) {
         let clock = ManualClock::new();
@@ -213,16 +283,12 @@ mod tests {
             Arc::new(clock.clone()),
             u64::MAX,
         ))]));
-        let proxy = Proxy::new(
-            NodeId(1),
-            fabric.clone(),
-            nm.clone(),
-            db,
-            Arc::new(clock.clone()),
-            1_000_000_000, // 1 s window
-            1.0,
-        );
+        let proxy = mk_proxy(&clock, fabric.clone(), nm.clone(), db, settings());
         (clock, nm, fabric, proxy, ep)
+    }
+
+    fn submit(proxy: &Proxy, payload: Payload) -> Result<Uid, (SubmitError, Payload)> {
+        proxy.submit_request(AppId(1), payload, &SubmitOptions::default())
     }
 
     #[test]
@@ -244,9 +310,14 @@ mod tests {
         let mut rejected = 0;
         for i in 0..400 {
             clock.advance(1_000_000); // 1 ms apart = 1000 rps offered
-            match proxy.submit(AppId(1), Payload::Bytes(vec![i as u8])) {
-                Admission::Accepted(_) => accepted += 1,
-                Admission::Rejected => rejected += 1,
+            match submit(&proxy, Payload::Bytes(vec![i as u8])) {
+                Ok(_) => accepted += 1,
+                Err((SubmitError::Overloaded { retry_after }, _)) => {
+                    rejected += 1;
+                    assert!(retry_after > Duration::ZERO);
+                    assert!(retry_after <= Duration::from_secs(1));
+                }
+                Err((other, _)) => panic!("unexpected error {other:?}"),
             }
         }
         assert!(accepted > 0 && rejected > 0);
@@ -261,22 +332,51 @@ mod tests {
     }
 
     #[test]
-    fn no_entrance_instances_rejects() {
+    fn no_entrance_instances_is_no_capacity() {
         let clock = ManualClock::new();
         clock.set(1);
         let fabric = Fabric::ideal();
         let nm = Arc::new(NodeManager::new(ClusterConfig::i2v_default().apps, 0.85));
         let db = Arc::new(DbClient::new(vec![]));
-        let proxy = Proxy::new(
-            NodeId(1),
-            fabric,
-            nm,
-            db,
-            Arc::new(clock.clone()),
-            1_000_000_000,
-            1.0,
-        );
-        assert_eq!(proxy.submit(AppId(1), Payload::Bytes(vec![])), Admission::Rejected);
+        let proxy = mk_proxy(&clock, fabric, nm, db, settings());
+        match submit(&proxy, Payload::Bytes(vec![])) {
+            Err((SubmitError::NoCapacity, payload)) => {
+                // The payload rides back for a no-clone retry elsewhere.
+                assert_eq!(payload, Payload::Bytes(vec![]));
+            }
+            other => panic!("expected NoCapacity, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn admitted_requests_are_tracked_with_deadline() {
+        let (_c, _nm, _f, proxy, _ep) = setup();
+        let opts = SubmitOptions::interactive().with_deadline(Duration::from_secs(1));
+        let uid = proxy
+            .submit_request(AppId(1), Payload::Bytes(vec![1]), &opts)
+            .expect("admitted");
+        assert_eq!(proxy.tracker.priority_of(uid), Priority::Interactive);
+        assert_eq!(proxy.counts_for(Priority::Interactive), (1, 0));
+    }
+
+    #[test]
+    fn per_priority_counters_split_accept_and_reject() {
+        let (clock, _nm, _f, proxy, _ep) = setup();
+        // Budget 250; drive far past it with Batch, then verify the
+        // split counters.
+        for _ in 0..300 {
+            clock.advance(1_000_000);
+            let _ = proxy.submit_request(
+                AppId(1),
+                Payload::Bytes(vec![0]),
+                &SubmitOptions::batch(),
+            );
+        }
+        let (acc_b, rej_b) = proxy.counts_for(Priority::Batch);
+        assert!(acc_b > 0 && rej_b > 0);
+        assert_eq!(proxy.counts_for(Priority::Interactive), (0, 0));
+        let (acc, rej) = proxy.counts();
+        assert_eq!(acc + rej, 300);
     }
 
     #[test]
@@ -288,20 +388,41 @@ mod tests {
         // Admit a burst; the exported arrival rate and load rise.
         for _ in 0..50 {
             clock.advance(1_000_000);
-            let _ = proxy.submit(AppId(1), Payload::Bytes(vec![0]));
+            let _ = submit(&proxy, Payload::Bytes(vec![0]));
         }
         let s1 = proxy.admission_snapshot(AppId(1));
         assert!(s1.arrival_rps > 0.0);
         assert!(s1.load() > 0.0);
         assert_eq!(s1.accepted + s1.rejected, 50);
-        // Zero capacity exports an infinite load (routes last).
-        let zero = AdmissionSnapshot {
+    }
+
+    #[test]
+    fn snapshot_load_edge_cases() {
+        // Zero capacity: infinite load regardless of arrivals (a dead set
+        // must route last), including the 0/0 corner.
+        let dead_idle = AdmissionSnapshot {
             capacity_rps: 0.0,
             arrival_rps: 0.0,
             accepted: 0,
             rejected: 0,
         };
-        assert_eq!(zero.load(), f64::INFINITY);
+        assert_eq!(dead_idle.load(), f64::INFINITY);
+        let dead_busy = AdmissionSnapshot { arrival_rps: 50.0, ..dead_idle };
+        assert_eq!(dead_busy.load(), f64::INFINITY);
+        // Negative capacity (never produced, but load() must not divide).
+        let negative = AdmissionSnapshot { capacity_rps: -1.0, ..dead_idle };
+        assert_eq!(negative.load(), f64::INFINITY);
+        // Zero arrivals with real capacity: exactly idle.
+        let idle = AdmissionSnapshot {
+            capacity_rps: 100.0,
+            arrival_rps: 0.0,
+            accepted: 0,
+            rejected: 0,
+        };
+        assert_eq!(idle.load(), 0.0);
+        // Sanity: load is arrival/capacity elsewhere.
+        let half = AdmissionSnapshot { capacity_rps: 100.0, arrival_rps: 50.0, ..idle };
+        assert!((half.load() - 0.5).abs() < 1e-12);
     }
 
     #[test]

@@ -1,10 +1,20 @@
 //! Request Monitor (§5): sliding-window arrival-rate estimation feeding
 //! the fast-reject decision — "whenever the incoming request rate exceeds
 //! K/T_X, the proxy rejects additional requests."
+//!
+//! Extended for the SLO tiers of the unified [`crate::client`] API: a
+//! configurable fraction of the admission budget is **reserved for
+//! Interactive traffic**, so under overload Standard/Batch submissions
+//! hit their (smaller) ceiling first while user-facing requests still
+//! find headroom; and every rejection carries a `retry_after` hint — the
+//! time until the oldest admission slides out of the window and frees a
+//! slot.
 
+use crate::client::Priority;
 use crate::util::Clock;
 use std::collections::VecDeque;
 use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 /// Sliding-window admission controller.
 pub struct RequestMonitor {
@@ -13,22 +23,40 @@ pub struct RequestMonitor {
     /// Admission headroom multiplier on capacity (1.0 = exact Theorem-1
     /// rate).
     headroom: f64,
+    /// Fraction of the window budget reserved for Interactive traffic
+    /// (0.0 disables the reserve).
+    interactive_reserve: f64,
     admitted: Mutex<VecDeque<u64>>,
 }
 
 impl RequestMonitor {
-    pub fn new(clock: Arc<dyn Clock>, window_ns: u64, headroom: f64) -> Self {
+    pub fn new(
+        clock: Arc<dyn Clock>,
+        window_ns: u64,
+        headroom: f64,
+        interactive_reserve: f64,
+    ) -> Self {
         Self {
             clock,
             window_ns,
             headroom,
+            interactive_reserve: interactive_reserve.clamp(0.0, 1.0),
             admitted: Mutex::new(VecDeque::new()),
         }
     }
 
+    /// Window budget at the given capacity.
+    fn budget(&self, capacity_rps: f64) -> usize {
+        let b = (capacity_rps * (self.window_ns as f64 / 1e9) * self.headroom).floor()
+            as usize;
+        b.max(1)
+    }
+
     /// Decide admission given the current sustainable capacity
-    /// (requests/second). Records the arrival if admitted.
-    pub fn admit(&self, capacity_rps: f64) -> bool {
+    /// (requests/second) and the request's priority class. Records the
+    /// arrival if admitted. Interactive may fill the whole budget;
+    /// Standard/Batch stop at `budget - reserve`.
+    pub fn admit(&self, capacity_rps: f64, priority: Priority) -> bool {
         if capacity_rps <= 0.0 {
             return false;
         }
@@ -38,14 +66,39 @@ impl RequestMonitor {
         while q.front().is_some_and(|&t| t < cutoff) {
             q.pop_front();
         }
-        // Budget over the window: capacity × window seconds × headroom.
-        let budget =
-            (capacity_rps * (self.window_ns as f64 / 1e9) * self.headroom).floor() as usize;
-        if q.len() >= budget.max(1) {
+        let budget = self.budget(capacity_rps);
+        let reserved = (budget as f64 * self.interactive_reserve).floor() as usize;
+        let allowed = if priority == Priority::Interactive {
+            budget
+        } else {
+            // Even a full reserve leaves one non-interactive slot so the
+            // class is shed, not starved outright.
+            budget.saturating_sub(reserved).max(1)
+        };
+        if q.len() >= allowed {
             return false;
         }
         q.push_back(now);
         true
+    }
+
+    /// How long until the oldest in-window admission slides out and
+    /// frees a slot — the `retry_after` hint attached to rejections.
+    pub fn retry_after_hint(&self) -> Duration {
+        let now = self.clock.now_ns();
+        let mut q = self.admitted.lock().unwrap();
+        let cutoff = now.saturating_sub(self.window_ns);
+        while q.front().is_some_and(|&t| t < cutoff) {
+            q.pop_front();
+        }
+        match q.front() {
+            Some(&t0) => {
+                Duration::from_nanos((t0 + self.window_ns).saturating_sub(now).max(1))
+            }
+            // Empty window (capacity starvation, not rate): suggest a
+            // fraction of the window.
+            None => Duration::from_nanos((self.window_ns / 4).max(1)),
+        }
     }
 
     /// Current admitted-rate estimate (requests/second over the window).
@@ -68,7 +121,7 @@ mod tests {
     fn setup(window_ms: u64) -> (ManualClock, RequestMonitor) {
         let c = ManualClock::new();
         c.set(1);
-        let m = RequestMonitor::new(Arc::new(c.clone()), window_ms * 1_000_000, 1.0);
+        let m = RequestMonitor::new(Arc::new(c.clone()), window_ms * 1_000_000, 1.0, 0.0);
         (c, m)
     }
 
@@ -79,7 +132,7 @@ mod tests {
         let mut ok = 0;
         for _ in 0..20 {
             clock.advance(1_000_000);
-            if m.admit(10.0) {
+            if m.admit(10.0, Priority::Standard) {
                 ok += 1;
             }
         }
@@ -90,16 +143,16 @@ mod tests {
     fn window_slides() {
         let (clock, m) = setup(100);
         // Budget = 1 per 100 ms at 10 rps.
-        assert!(m.admit(10.0));
-        assert!(!m.admit(10.0));
+        assert!(m.admit(10.0, Priority::Standard));
+        assert!(!m.admit(10.0, Priority::Standard));
         clock.advance(150_000_000); // slide past the window
-        assert!(m.admit(10.0));
+        assert!(m.admit(10.0, Priority::Standard));
     }
 
     #[test]
     fn zero_capacity_rejects_all() {
         let (_clock, m) = setup(100);
-        assert!(!m.admit(0.0));
+        assert!(!m.admit(0.0, Priority::Interactive));
     }
 
     #[test]
@@ -107,7 +160,7 @@ mod tests {
         let (clock, m) = setup(1000);
         for _ in 0..5 {
             clock.advance(10_000_000);
-            m.admit(1000.0);
+            m.admit(1000.0, Priority::Standard);
         }
         assert!((m.rate_rps() - 5.0).abs() < 1e-9);
     }
@@ -116,14 +169,67 @@ mod tests {
     fn headroom_scales_budget() {
         let c = ManualClock::new();
         c.set(1);
-        let m = RequestMonitor::new(Arc::new(c.clone()), 1_000_000_000, 2.0);
+        let m = RequestMonitor::new(Arc::new(c.clone()), 1_000_000_000, 2.0, 0.0);
         let mut ok = 0;
         for _ in 0..30 {
             c.advance(1_000_000);
-            if m.admit(10.0) {
+            if m.admit(10.0, Priority::Standard) {
                 ok += 1;
             }
         }
         assert_eq!(ok, 20, "2x headroom doubles the budget");
+    }
+
+    #[test]
+    fn interactive_reserve_holds_headroom_under_overload() {
+        let c = ManualClock::new();
+        c.set(1);
+        // Budget 10, reserve floor(10 * 0.2) = 2: Standard stops at 8.
+        let m = RequestMonitor::new(Arc::new(c.clone()), 1_000_000_000, 1.0, 0.2);
+        let mut standard = 0;
+        for _ in 0..20 {
+            c.advance(1_000_000);
+            if m.admit(10.0, Priority::Standard) {
+                standard += 1;
+            }
+        }
+        assert_eq!(standard, 8, "standard is capped below the full budget");
+        // Batch is shed at the same ceiling...
+        c.advance(1_000_000);
+        assert!(!m.admit(10.0, Priority::Batch));
+        // ...while interactive still finds the reserved slots.
+        let mut interactive = 0;
+        for _ in 0..5 {
+            c.advance(1_000_000);
+            if m.admit(10.0, Priority::Interactive) {
+                interactive += 1;
+            }
+        }
+        assert_eq!(interactive, 2, "the reserve admits exactly the held-back slots");
+    }
+
+    #[test]
+    fn small_budgets_never_starve_standard() {
+        let c = ManualClock::new();
+        c.set(1);
+        // Budget 1 with a full reserve: standard still gets one slot.
+        let m = RequestMonitor::new(Arc::new(c.clone()), 1_000_000_000, 1.0, 1.0);
+        c.advance(1_000_000);
+        assert!(m.admit(1.0, Priority::Standard));
+    }
+
+    #[test]
+    fn retry_after_hint_tracks_oldest_admission() {
+        let (clock, m) = setup(1000);
+        assert!(m.admit(1.0, Priority::Standard)); // budget 1, admitted at t=1ms
+        clock.advance(1_000_000);
+        assert!(!m.admit(1.0, Priority::Standard));
+        // Oldest admission at ~1 ms into a 1 s window; ~999 ms remain.
+        let hint = m.retry_after_hint();
+        assert!(hint > Duration::from_millis(900) && hint <= Duration::from_secs(1));
+        // After the window slides, the hint collapses to the empty-window
+        // default.
+        clock.advance(1_100_000_000);
+        assert_eq!(m.retry_after_hint(), Duration::from_millis(250));
     }
 }

@@ -6,7 +6,7 @@
 //! appropriate next hop. When multiple destination instances are
 //! available, RD uses a round-robin mechanism."
 
-use crate::db::MemDb;
+use crate::db::{EntryKind, MemDb};
 use crate::rdma::{Fabric, RegionId};
 use crate::transport::{RdmaEndpoint, WorkflowMessage};
 use crate::util::Uid;
@@ -111,6 +111,16 @@ impl ResultDeliver {
         }
     }
 
+    /// Publish a terminal tombstone for a dropped request (deadline
+    /// exceeded / cancelled) to every DB replica — the data-plane half of
+    /// the unified lifecycle: result readers observe the same terminal
+    /// state the control plane decided, instead of waiting forever.
+    pub fn tombstone(&self, uid: Uid, kind: EntryKind) {
+        for db in &self.dbs {
+            db.put_tombstone(uid, kind);
+        }
+    }
+
     /// (delivered, dropped) counters.
     pub fn counts(&self) -> (u64, u64) {
         (self.delivered, self.dropped)
@@ -178,6 +188,21 @@ mod tests {
         for db in &dbs {
             let stored = db.fetch(m.header.uid).unwrap();
             assert_eq!(WorkflowMessage::decode(&stored).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn tombstone_reaches_every_replica() {
+        let fabric = Fabric::ideal();
+        let clock = Arc::new(ManualClock::new());
+        let dbs: Vec<Arc<MemDb>> = (0..2)
+            .map(|_| Arc::new(MemDb::new(clock.clone(), u64::MAX)))
+            .collect();
+        let rd = ResultDeliver::new(fabric, dbs.clone());
+        let u = Uid(77);
+        rd.tombstone(u, EntryKind::DeadlineExceeded);
+        for db in &dbs {
+            assert_eq!(db.fetch_entry(u), Some((EntryKind::DeadlineExceeded, vec![])));
         }
     }
 

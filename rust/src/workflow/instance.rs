@@ -6,8 +6,15 @@
 //!   changes, reconfigures the queue / executor binding / RD hops,
 //!   reports windowed utilization.
 //! - **rs** (RequestScheduler): drains the ring buffer into the
-//!   [`SchedQueue`] per the active mode.
-//! - **worker-i** (TaskWorkers): fetch → execute app logic → deliver.
+//!   [`SchedQueue`] per the active mode, tagging each arrival with its
+//!   [`crate::client::Priority`] from the set's
+//!   [`crate::client::RequestTracker`], and dropping messages whose
+//!   request was cancelled or whose deadline already passed (publishing
+//!   a tombstone instead).
+//! - **worker-i** (TaskWorkers): fetch → SLO check → execute app logic →
+//!   SLO re-check → deliver. The re-check drops results whose deadline
+//!   expired *during* execution — stage work past its deadline never
+//!   reaches the next ring.
 //!
 //! In Collaboration Mode every worker executes the broadcast request (the
 //! TP/PP ranks of §4.4) but only worker 0 delivers the aggregated result
@@ -15,14 +22,15 @@
 //! consolidated output before delivery").
 
 use super::{Assignment, ControlPlane, ResultDeliver, SchedQueue, StageRole};
+use crate::client::{InFlightVerdict, RequestTracker};
 use crate::config::SchedMode;
-use crate::db::MemDb;
+use crate::db::{EntryKind, MemDb};
 use crate::metrics::UtilizationWindow;
 use crate::rdma::{Fabric, RegionId};
 use crate::ringbuf::RingConfig;
 use crate::runtime::{ExecutorPool, StageExecutor};
 use crate::transport::{RdmaEndpoint, StageId, WorkflowMessage};
-use crate::util::{Clock, NodeId};
+use crate::util::{Clock, NodeId, Uid};
 use crate::workflow::AppLogic;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
@@ -60,6 +68,9 @@ pub struct InstanceStats {
     pub delivered: u64,
     pub dropped: u64,
     pub errors: u64,
+    /// In-flight work dropped by the SLO checks (cancelled requests and
+    /// deadline-expired stage work).
+    pub sla_dropped: u64,
 }
 
 struct Shared {
@@ -69,10 +80,31 @@ struct Shared {
     version: AtomicU64,
     executor: RwLock<Option<StageExecutor>>,
     deliver: Mutex<ResultDeliver>,
+    tracker: Arc<RequestTracker>,
     util: UtilizationWindow,
     shutdown: AtomicBool,
     processed: AtomicU64,
     errors: AtomicU64,
+    sla_dropped: AtomicU64,
+}
+
+impl Shared {
+    /// Drop a request the control plane declared dead: publish the
+    /// matching tombstone and count it. The tracker entry is
+    /// deliberately **kept**: in Collaboration Mode the other ranks
+    /// still hold broadcast copies and must see the same verdict, and a
+    /// cancelled UID must keep dropping late-arriving messages. The
+    /// entry is released when the client's handle consumes the
+    /// tombstone, or by the housekeeper's tracker sweep.
+    fn drop_for(&self, uid: Uid, verdict: InFlightVerdict) {
+        let kind = match verdict {
+            InFlightVerdict::Cancelled => EntryKind::Cancelled,
+            InFlightVerdict::DeadlineExceeded => EntryKind::DeadlineExceeded,
+            InFlightVerdict::Proceed => return,
+        };
+        self.deliver.lock().unwrap().tombstone(uid, kind);
+        self.sla_dropped.fetch_add(1, Ordering::Relaxed);
+    }
 }
 
 /// A running workflow instance.
@@ -92,6 +124,7 @@ impl Instance {
         logic: Arc<dyn AppLogic>,
         pool: ExecutorPool,
         dbs: Vec<Arc<MemDb>>,
+        tracker: Arc<RequestTracker>,
         clock: Arc<dyn Clock>,
     ) -> Self {
         let mut endpoint = RdmaEndpoint::new(fabric, cfg.ring);
@@ -104,10 +137,12 @@ impl Instance {
             version: AtomicU64::new(u64::MAX),
             executor: RwLock::new(None),
             deliver: Mutex::new(ResultDeliver::new(fabric.clone(), dbs)),
+            tracker,
             util: UtilizationWindow::new(clock, cfg.util_window.as_nanos() as u64),
             shutdown: AtomicBool::new(false),
             processed: AtomicU64::new(0),
             errors: AtomicU64::new(0),
+            sla_dropped: AtomicU64::new(0),
         });
 
         let mut threads = Vec::new();
@@ -136,7 +171,18 @@ impl Instance {
             threads.push(std::thread::spawn(move || {
                 while !shared.shutdown.load(Ordering::SeqCst) {
                     match endpoint.recv() {
-                        Some(msg) => shared.queue.dispatch(msg),
+                        Some(msg) => {
+                            let uid = msg.header.uid;
+                            match shared.tracker.verdict(uid) {
+                                InFlightVerdict::Proceed => {
+                                    let prio = shared.tracker.priority_of(uid);
+                                    shared.queue.dispatch(msg, prio);
+                                }
+                                // Cancelled / past-deadline arrivals never
+                                // reach a worker.
+                                verdict => shared.drop_for(uid, verdict),
+                            }
+                        }
                         None => std::thread::sleep(Duration::from_micros(100)),
                     }
                 }
@@ -192,6 +238,22 @@ impl Instance {
                     _ => continue, // reassigned to idle mid-flight: drop
                 }
             };
+            // In CM every worker holds a broadcast copy; rank 0 is the
+            // one that delivers, so it alone accounts SLO drops.
+            let lead = role.mode != SchedMode::Collaboration || widx == 0;
+            let uid = msg.header.uid;
+            // SLO check before spending compute (the request may have
+            // been cancelled / expired while queued).
+            match shared.tracker.verdict(uid) {
+                InFlightVerdict::Proceed => {}
+                verdict => {
+                    if lead {
+                        shared.drop_for(uid, verdict);
+                    }
+                    continue;
+                }
+            }
+            shared.tracker.note_stage(uid, role.stage_index);
             shared.util.busy();
             let result = logic.execute(&role.stage_name, &exec, &msg);
             shared.util.idle();
@@ -200,8 +262,18 @@ impl Instance {
                     shared.processed.fetch_add(1, Ordering::Relaxed);
                     // CM: all workers computed (TP ranks); rank 0 delivers
                     // the aggregated output.
-                    if role.mode == SchedMode::Collaboration && widx != 0 {
+                    if !lead {
                         continue;
+                    }
+                    // SLO re-check: the deadline may have expired during
+                    // execution — drop the stage output instead of
+                    // forwarding work that can no longer meet its SLO.
+                    match shared.tracker.verdict(uid) {
+                        InFlightVerdict::Proceed => {}
+                        verdict => {
+                            shared.drop_for(uid, verdict);
+                            continue;
+                        }
                     }
                     let out = WorkflowMessage {
                         header: crate::transport::MessageHeader {
@@ -242,6 +314,7 @@ impl Instance {
             delivered,
             dropped,
             errors: self.shared.errors.load(Ordering::Relaxed),
+            sla_dropped: self.shared.sla_dropped.load(Ordering::Relaxed),
         }
     }
 
@@ -258,6 +331,8 @@ impl Instance {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::client::Priority;
+    use crate::metrics::Registry;
     use crate::transport::{AppId, MessageHeader, Payload};
     use crate::util::{SystemClock, Uid};
     use crate::workflow::{EchoLogic, NextHop};
@@ -285,15 +360,12 @@ mod tests {
         }
     }
 
-    #[test]
-    fn instance_processes_and_stores() {
-        let fabric = Fabric::ideal();
-        let clock: Arc<dyn Clock> = Arc::new(SystemClock);
-        let db = Arc::new(MemDb::new(clock.clone(), u64::MAX));
-        let mut pool = ExecutorPool::new();
-        pool.insert("echo", StageExecutor::Simulated { busy: Duration::from_micros(50) });
+    fn mk_tracker(clock: &Arc<dyn Clock>) -> Arc<RequestTracker> {
+        Arc::new(RequestTracker::new(clock.clone(), Registry::new()))
+    }
 
-        let assignment = Assignment {
+    fn echo_assignment() -> Assignment {
+        Assignment {
             version: 1,
             role: Some(StageRole {
                 app: AppId(1),
@@ -303,14 +375,25 @@ mod tests {
                 workers: 2,
                 routes: vec![(AppId(1), vec![NextHop::Database])],
             }),
-        };
+        }
+    }
+
+    #[test]
+    fn instance_processes_and_stores() {
+        let fabric = Fabric::ideal();
+        let clock: Arc<dyn Clock> = Arc::new(SystemClock);
+        let db = Arc::new(MemDb::new(clock.clone(), u64::MAX));
+        let mut pool = ExecutorPool::new();
+        pool.insert("echo", StageExecutor::Simulated { busy: Duration::from_micros(50) });
+
         let inst = Instance::spawn(
             InstanceConfig { node: NodeId(1), ..Default::default() },
             &fabric,
-            Arc::new(FixedControl(assignment)),
+            Arc::new(FixedControl(echo_assignment())),
             Arc::new(EchoLogic),
             pool,
             vec![db.clone()],
+            mk_tracker(&clock),
             clock,
         );
 
@@ -334,6 +417,7 @@ mod tests {
         let stats = inst.stats();
         assert_eq!(stats.processed, 5);
         assert_eq!(stats.errors, 0);
+        assert_eq!(stats.sla_dropped, 0);
         inst.shutdown();
     }
 
@@ -348,6 +432,7 @@ mod tests {
             Arc::new(EchoLogic),
             ExecutorPool::new(),
             vec![],
+            mk_tracker(&clock),
             clock,
         );
         std::thread::sleep(Duration::from_millis(30));
@@ -355,6 +440,55 @@ mod tests {
         tx.send(&mk_msg(1, 0));
         std::thread::sleep(Duration::from_millis(50));
         assert_eq!(inst.stats().processed, 0);
+        inst.shutdown();
+    }
+
+    #[test]
+    fn cancelled_request_is_dropped_with_tombstone() {
+        let fabric = Fabric::ideal();
+        let clock: Arc<dyn Clock> = Arc::new(SystemClock);
+        let db = Arc::new(MemDb::new(clock.clone(), u64::MAX));
+        let mut pool = ExecutorPool::new();
+        pool.insert("echo", StageExecutor::Simulated { busy: Duration::ZERO });
+        let tracker = mk_tracker(&clock);
+
+        let inst = Instance::spawn(
+            InstanceConfig { node: NodeId(3), ..Default::default() },
+            &fabric,
+            Arc::new(FixedControl(echo_assignment())),
+            Arc::new(EchoLogic),
+            pool,
+            vec![db.clone()],
+            tracker.clone(),
+            clock,
+        );
+        std::thread::sleep(Duration::from_millis(50));
+
+        // Register + cancel BEFORE the message arrives: the RS drop path.
+        let m = mk_msg(9, 0);
+        tracker.register(m.header.uid, Priority::Standard, None);
+        tracker.cancel(m.header.uid);
+        let mut tx = crate::transport::RdmaEndpoint::sender_for(&fabric, inst.region_id());
+        assert!(tx.send(&m));
+
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while inst.stats().sla_dropped < 1 && std::time::Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(inst.stats().sla_dropped, 1);
+        assert_eq!(inst.stats().processed, 0, "no compute spent on cancelled work");
+        assert_eq!(
+            db.fetch_entry(m.header.uid),
+            Some((EntryKind::Cancelled, vec![])),
+            "tombstone published instead of a result"
+        );
+        // The entry stays so late copies (CM ranks, delayed ring writes)
+        // keep dropping; the handle or the housekeeper sweep removes it.
+        assert_eq!(
+            tracker.verdict(m.header.uid),
+            InFlightVerdict::Cancelled,
+            "late copies of a dropped request must still drop"
+        );
         inst.shutdown();
     }
 }

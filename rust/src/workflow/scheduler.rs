@@ -5,7 +5,14 @@
 //! maintains a shared local request queue; idle workers autonomously
 //! fetch tasks" (Figure 4a). Collaboration Mode broadcasts each request
 //! to every worker (Figure 4b).
+//!
+//! The shared IM queue is **priority-banded** for the SLO tiers of the
+//! unified [`crate::client`] API: Interactive arrivals are fetched ahead
+//! of Standard, and Standard ahead of Batch, so a backlog building at a
+//! bottleneck stage adds queueing delay to Batch traffic while
+//! Interactive latency stays flat. Within a band, order stays FIFO.
 
+use crate::client::Priority;
 use crate::config::SchedMode;
 use crate::transport::WorkflowMessage;
 use std::collections::VecDeque;
@@ -21,8 +28,8 @@ pub struct SchedQueue {
 struct Inner {
     mode: SchedMode,
     workers: usize,
-    /// IM: single shared queue.
-    shared: VecDeque<WorkflowMessage>,
+    /// IM: one FIFO per priority band, drained highest-priority-first.
+    bands: [VecDeque<WorkflowMessage>; 3],
     /// CM: one broadcast copy per worker.
     per_worker: Vec<VecDeque<WorkflowMessage>>,
     closed: bool,
@@ -35,7 +42,7 @@ impl SchedQueue {
             inner: Mutex::new(Inner {
                 mode,
                 workers: workers.max(1),
-                shared: VecDeque::new(),
+                bands: Default::default(),
                 per_worker: vec![VecDeque::new(); workers.max(1)],
                 closed: false,
                 generation: 0,
@@ -51,18 +58,20 @@ impl SchedQueue {
         let mut g = self.inner.lock().unwrap();
         g.mode = mode;
         g.workers = workers.max(1);
-        g.shared.clear();
+        g.bands = Default::default();
         g.per_worker = vec![VecDeque::new(); g.workers];
         g.generation += 1;
         drop(g);
         self.cv.notify_all();
     }
 
-    /// RS side: enqueue one arrival per the active mode.
-    pub fn dispatch(&self, msg: WorkflowMessage) {
+    /// RS side: enqueue one arrival per the active mode, into its
+    /// priority band (IM) or broadcast to every worker (CM — collective
+    /// execution cannot reorder per-rank).
+    pub fn dispatch(&self, msg: WorkflowMessage, priority: Priority) {
         let mut g = self.inner.lock().unwrap();
         match g.mode {
-            SchedMode::Individual => g.shared.push_back(msg),
+            SchedMode::Individual => g.bands[priority.index()].push_back(msg),
             SchedMode::Collaboration => {
                 for q in g.per_worker.iter_mut() {
                     q.push_back(msg.clone());
@@ -74,8 +83,9 @@ impl SchedQueue {
     }
 
     /// Worker side: blocking fetch with timeout. In IM any worker takes
-    /// from the shared queue (pull = natural load balancing); in CM
-    /// worker `widx` takes its broadcast copy.
+    /// the highest-priority pending message (pull = natural load
+    /// balancing; bands = SLO ordering); in CM worker `widx` takes its
+    /// broadcast copy.
     pub fn fetch(&self, widx: usize, timeout: Duration) -> Option<WorkflowMessage> {
         let mut g = self.inner.lock().unwrap();
         let deadline = std::time::Instant::now() + timeout;
@@ -84,7 +94,9 @@ impl SchedQueue {
                 return None;
             }
             let got = match g.mode {
-                SchedMode::Individual => g.shared.pop_front(),
+                SchedMode::Individual => {
+                    g.bands.iter_mut().find_map(VecDeque::pop_front)
+                }
                 SchedMode::Collaboration => {
                     g.per_worker.get_mut(widx).and_then(|q| q.pop_front())
                 }
@@ -101,11 +113,11 @@ impl SchedQueue {
         }
     }
 
-    /// Pending depth (IM: shared queue; CM: max per-worker).
+    /// Pending depth (IM: all bands; CM: max per-worker).
     pub fn depth(&self) -> usize {
         let g = self.inner.lock().unwrap();
         match g.mode {
-            SchedMode::Individual => g.shared.len(),
+            SchedMode::Individual => g.bands.iter().map(VecDeque::len).sum(),
             SchedMode::Collaboration => {
                 g.per_worker.iter().map(VecDeque::len).max().unwrap_or(0)
             }
@@ -131,8 +143,8 @@ impl RequestScheduler {
     }
 
     /// Handle one arrival.
-    pub fn on_arrival(&self, msg: WorkflowMessage) {
-        self.queue.dispatch(msg);
+    pub fn on_arrival(&self, msg: WorkflowMessage, priority: Priority) {
+        self.queue.dispatch(msg, priority);
     }
 }
 
@@ -158,7 +170,7 @@ mod tests {
     #[test]
     fn im_single_delivery() {
         let q = SchedQueue::new(SchedMode::Individual, 2);
-        q.dispatch(msg(1));
+        q.dispatch(msg(1), Priority::Standard);
         let a = q.fetch(0, Duration::from_millis(10));
         let b = q.fetch(1, Duration::from_millis(10));
         // Exactly one worker gets it.
@@ -168,7 +180,7 @@ mod tests {
     #[test]
     fn cm_broadcast_delivery() {
         let q = SchedQueue::new(SchedMode::Collaboration, 3);
-        q.dispatch(msg(7));
+        q.dispatch(msg(7), Priority::Standard);
         for w in 0..3 {
             assert_eq!(
                 q.fetch(w, Duration::from_millis(10)).unwrap().header.uid.0,
@@ -183,7 +195,7 @@ mod tests {
         // be overloaded while the other idles.
         let q = SchedQueue::new(SchedMode::Individual, 2);
         for i in 0..4 {
-            q.dispatch(msg(i));
+            q.dispatch(msg(i), Priority::Standard);
         }
         let mut counts = [0usize; 2];
         for _ in 0..4 {
@@ -198,6 +210,21 @@ mod tests {
     }
 
     #[test]
+    fn interactive_jumps_the_queue() {
+        let q = SchedQueue::new(SchedMode::Individual, 1);
+        q.dispatch(msg(1), Priority::Batch);
+        q.dispatch(msg(2), Priority::Standard);
+        q.dispatch(msg(3), Priority::Interactive);
+        q.dispatch(msg(4), Priority::Interactive);
+        let order: Vec<u128> = (0..4)
+            .map(|_| q.fetch(0, Duration::from_millis(10)).unwrap().header.uid.0)
+            .collect();
+        // Interactive first (FIFO within the band), then Standard, then
+        // Batch.
+        assert_eq!(order, vec![3, 4, 2, 1]);
+    }
+
+    #[test]
     fn fetch_times_out() {
         let q = SchedQueue::new(SchedMode::Individual, 1);
         let t0 = std::time::Instant::now();
@@ -208,10 +235,10 @@ mod tests {
     #[test]
     fn reconfigure_switches_mode() {
         let q = SchedQueue::new(SchedMode::Individual, 1);
-        q.dispatch(msg(1));
+        q.dispatch(msg(1), Priority::Standard);
         q.reconfigure(SchedMode::Collaboration, 2);
         assert_eq!(q.depth(), 0, "reconfigure drops pending work");
-        q.dispatch(msg(2));
+        q.dispatch(msg(2), Priority::Standard);
         assert!(q.fetch(0, Duration::from_millis(10)).is_some());
         assert!(q.fetch(1, Duration::from_millis(10)).is_some());
     }

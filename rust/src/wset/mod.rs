@@ -9,22 +9,31 @@
 //! then attempt to submit their request to a different RDMA-enabled
 //! set"), which is also the fault-isolation boundary.
 //!
+//! Both tiers serve through the unified [`crate::client::Gateway`] API:
+//! `submit_with(app, payload, SubmitOptions)` returns a typed
+//! [`crate::client::RequestHandle`] with priorities, deadlines, blocking
+//! `wait()`, and `cancel()`.
+//!
 //! [`MultiSet`] is the paper's *client-side* policy. The server-side
 //! alternative — a global load-aware router with cross-set spill and
 //! elastic instance donation — lives in [`crate::federation`] and uses
 //! the per-set elasticity hooks here ([`WorkflowSet::add_idle_instance`]
 //! / [`WorkflowSet::retire_idle_instance`]).
 
+use crate::client::{
+    Gateway, RequestHandle, RequestTracker, SubmitError, SubmitOptions,
+};
 use crate::config::{ClusterConfig, ExecModel};
 use crate::db::{DbClient, MemDb};
+use crate::metrics::Registry;
 use crate::nm::{NmCluster, NodeManager, StageKey};
 use crate::pipeline::{plan_chain, StageReq};
-use crate::proxy::{Admission, Proxy};
+use crate::proxy::Proxy;
 use crate::rdma::{Fabric, FabricConfig, LatencyModel};
 use crate::ringbuf::RingConfig;
 use crate::runtime::{ExecutorPool, PjrtRuntime, StageExecutor};
 use crate::transport::{AppId, Payload};
-use crate::util::{NodeId, Rng, SystemClock, Uid};
+use crate::util::{NodeId, Rng, SystemClock};
 use crate::workflow::{AppLogic, Instance, InstanceConfig};
 use std::sync::Arc;
 use std::time::Duration;
@@ -43,6 +52,8 @@ pub struct WorkflowSet {
     ring: RingConfig,
     pool: ExecutorPool,
     logic: Arc<dyn AppLogic>,
+    tracker: Arc<RequestTracker>,
+    metrics: Registry,
     housekeeper: Option<std::thread::JoinHandle<()>>,
     hk_stop: Arc<std::sync::atomic::AtomicBool>,
     /// Rebalance actions taken by the housekeeping loop (§8.2 timer).
@@ -90,6 +101,12 @@ impl WorkflowSet {
             .collect();
         let db_client = Arc::new(DbClient::new(dbs.clone()));
 
+        // Request-lifecycle control plane + metrics, shared by the proxy
+        // (per-priority accept/reject counters), the tracker
+        // (cancellation / deadline counters), and the instances.
+        let metrics = Registry::new();
+        let tracker = Arc::new(RequestTracker::new(clock.clone(), metrics.clone()));
+
         let ring = RingConfig {
             nslots: config.ring.nslots,
             cap_bytes: config.ring.cap_bytes,
@@ -109,8 +126,9 @@ impl WorkflowSet {
                 nm.clone(),
                 db_client.clone(),
                 clock.clone(),
-                config.proxy.monitor_window_ms * 1_000_000,
-                config.proxy.headroom,
+                &config.proxy,
+                tracker.clone(),
+                metrics.clone(),
             ),
             dbs: dbs.clone(),
             db_client,
@@ -120,6 +138,8 @@ impl WorkflowSet {
             ring,
             pool: pool.clone(),
             logic: logic.clone(),
+            tracker: tracker.clone(),
+            metrics,
             housekeeper: None,
             hk_stop: hk_stop.clone(),
             auto_rebalances: auto_rebalances.clone(),
@@ -140,9 +160,12 @@ impl WorkflowSet {
         }
 
         // Housekeeping loop (the paper's timers): NM primary heartbeats
-        // (§8.1), periodic §8.2 rebalancing, DB TTL purge (§3.4).
+        // (§8.1), periodic §8.2 rebalancing, DB TTL purge (§3.4), and the
+        // tracker sweep for lost requests (§9 message loss would
+        // otherwise leak entries).
         let heartbeat = Duration::from_millis(config.nm.heartbeat_ms);
         let auto_rebalance = config.nm.auto_rebalance;
+        let tracker_ttl_ns = config.db.ttl_ms * 1_000_000;
         set.housekeeper = Some(std::thread::spawn(move || {
             let mut last_sweep = std::time::Instant::now();
             while !hk_stop.load(std::sync::atomic::Ordering::SeqCst) {
@@ -156,6 +179,7 @@ impl WorkflowSet {
                     for db in &dbs {
                         db.purge_expired();
                     }
+                    tracker.purge_older_than(tracker_ttl_ns);
                     last_sweep = std::time::Instant::now();
                 }
                 std::thread::sleep(heartbeat);
@@ -187,6 +211,7 @@ impl WorkflowSet {
             self.logic.clone(),
             self.pool.clone(),
             self.dbs.clone(),
+            self.tracker.clone(),
             clock,
         );
         self.nm.register_instance(node, inst.region_id());
@@ -227,9 +252,41 @@ impl WorkflowSet {
         Self::build(config, instances_per_stage, logic, pool)
     }
 
-    /// Submit a request through the set's proxy.
-    pub fn submit(&self, app: AppId, payload: Payload) -> Admission {
-        self.proxy.submit(app, payload)
+    /// One admission attempt through the set's proxy — no gateway retry
+    /// policy applied. On rejection the payload rides back with the error
+    /// so multi-set callers can fall through to a sibling **without
+    /// cloning** it up front. Most callers want the [`Gateway`] impl.
+    pub fn submit_once(
+        &self,
+        app: AppId,
+        payload: Payload,
+        opts: &SubmitOptions,
+    ) -> Result<crate::util::Uid, (SubmitError, Payload)> {
+        self.proxy.submit_request(app, payload, opts)
+    }
+
+    /// Build the typed handle for a UID this set admitted. `set_idx` is
+    /// the caller-visible set index (0 for a standalone set; the
+    /// accepting index for multi-set / federation tiers).
+    pub fn handle_for(
+        &self,
+        uid: crate::util::Uid,
+        set_idx: usize,
+        opts: &SubmitOptions,
+    ) -> RequestHandle {
+        RequestHandle::new(uid, set_idx, self.tracker.clone(), self.db_client.clone(), opts)
+    }
+
+    /// The set's request-lifecycle control plane.
+    pub fn tracker(&self) -> &Arc<RequestTracker> {
+        &self.tracker
+    }
+
+    /// The set's metrics registry: per-priority `accepted.*`/`rejected.*`
+    /// from the proxy, `requests_cancelled` / `deadline_missed` from the
+    /// tracker.
+    pub fn metrics(&self) -> &Registry {
+        &self.metrics
     }
 
     /// The set's cluster configuration.
@@ -285,25 +342,6 @@ impl WorkflowSet {
         Some(node)
     }
 
-    /// Poll the DB layer for a result.
-    pub fn poll(&self, uid: Uid) -> Option<Vec<u8>> {
-        self.proxy.poll_result(uid)
-    }
-
-    /// Blocking poll with timeout.
-    pub fn wait_result(&self, uid: Uid, timeout: Duration) -> Option<Vec<u8>> {
-        let deadline = std::time::Instant::now() + timeout;
-        loop {
-            if let Some(r) = self.poll(uid) {
-                return Some(r);
-            }
-            if std::time::Instant::now() >= deadline {
-                return None;
-            }
-            std::thread::sleep(Duration::from_millis(5));
-        }
-    }
-
     /// Run one NM rebalance pass (§8.2); the paper runs this on a timer.
     pub fn rebalance(&self) -> Option<crate::nm::RebalanceAction> {
         self.nm.rebalance()
@@ -329,6 +367,22 @@ impl WorkflowSet {
     }
 }
 
+impl Gateway for WorkflowSet {
+    /// Submit through the set's proxy, applying the options' retry policy
+    /// on fast-reject.
+    fn submit_with(
+        &self,
+        app: AppId,
+        payload: Payload,
+        opts: SubmitOptions,
+    ) -> Result<RequestHandle, SubmitError> {
+        crate::client::retry_rounds(&opts, payload, |payload| {
+            self.submit_once(app, payload, &opts)
+                .map(|uid| self.handle_for(uid, 0, &opts))
+        })
+    }
+}
+
 /// Several regionally-autonomous sets + the client-side retry policy.
 pub struct MultiSet {
     pub sets: Vec<WorkflowSet>,
@@ -339,25 +393,39 @@ impl MultiSet {
     pub fn new(sets: Vec<WorkflowSet>, seed: u64) -> Self {
         Self { sets, rng: std::sync::Mutex::new(Rng::new(seed)) }
     }
+}
 
+impl Gateway for MultiSet {
     /// Client submission: random set first (§3: "incoming requests are
     /// distributed randomly across these sets"), then fall through on
-    /// fast-reject. Returns the accepting set index and UID.
-    pub fn submit(&self, app: AppId, payload: Payload) -> Option<(usize, Uid)> {
+    /// fast-reject. The payload moves from attempt to attempt — **no
+    /// clone is ever taken**; a rejecting proxy hands it back. The retry
+    /// policy re-walks the whole ring with backoff between rounds.
+    fn submit_with(
+        &self,
+        app: AppId,
+        payload: Payload,
+        opts: SubmitOptions,
+    ) -> Result<RequestHandle, SubmitError> {
         let n = self.sets.len();
-        let start = self.rng.lock().unwrap().below(n as u64) as usize;
-        for k in 0..n {
-            let idx = (start + k) % n;
-            if let Admission::Accepted(uid) = self.sets[idx].submit(app, payload.clone()) {
-                return Some((idx, uid));
-            }
+        if n == 0 {
+            return Err(SubmitError::NoCapacity);
         }
-        None
-    }
-
-    /// Poll the set that accepted.
-    pub fn poll(&self, set_idx: usize, uid: Uid) -> Option<Vec<u8>> {
-        self.sets[set_idx].poll(uid)
+        crate::client::retry_rounds(&opts, payload, |mut payload| {
+            let start = self.rng.lock().unwrap().below(n as u64) as usize;
+            let mut best: Option<Duration> = None;
+            for k in 0..n {
+                let idx = (start + k) % n;
+                match self.sets[idx].submit_once(app, payload, &opts) {
+                    Ok(uid) => return Ok(self.sets[idx].handle_for(uid, idx, &opts)),
+                    Err((e, p)) => {
+                        payload = p;
+                        best = e.fold_hint(best);
+                    }
+                }
+            }
+            Err((SubmitError::from_hint(best), payload))
+        })
     }
 }
 
@@ -389,6 +457,7 @@ pub fn build_pool(config: &ClusterConfig, runtime: Option<Arc<PjrtRuntime>>) -> 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::client::WaitOutcome;
     use crate::config::FabricKind;
     use crate::workflow::EchoLogic;
 
@@ -412,17 +481,19 @@ mod tests {
         let set = WorkflowSet::build(cfg, counts, Arc::new(EchoLogic), pool);
         std::thread::sleep(Duration::from_millis(80)); // assignments settle
 
-        let adm = set.submit(AppId(1), Payload::Bytes(b"request".to_vec()));
-        let Admission::Accepted(uid) = adm else {
-            panic!("expected acceptance, got {adm:?}")
+        let handle = set
+            .submit(AppId(1), Payload::Bytes(b"request".to_vec()))
+            .expect("must admit");
+        let WaitOutcome::Done(result) = handle.wait(Duration::from_secs(10)) else {
+            panic!("pipeline must produce a result")
         };
-        let result = set
-            .wait_result(uid, Duration::from_secs(10))
-            .expect("pipeline must produce a result");
         // EchoLogic passes the payload through all four stages into the DB.
         let msg = crate::transport::WorkflowMessage::decode(&result).unwrap();
         assert_eq!(msg.payload, Payload::Bytes(b"request".to_vec()));
-        assert_eq!(msg.header.uid, uid);
+        assert_eq!(msg.header.uid, handle.uid());
+        assert_eq!(handle.status(), crate::client::RequestStatus::Done);
+        // Per-priority accounting reached the set's registry.
+        assert_eq!(set.metrics().counter("accepted.standard").get(), 1);
         set.shutdown();
     }
 
@@ -463,6 +534,18 @@ mod tests {
             std::thread::sleep(Duration::from_millis(10));
         }
         assert_eq!(set.dbs[0].len(), 0, "housekeeper must purge expired results");
+
+        // Tracker sweep: a lost request's entry ages out with the TTL.
+        set.tracker().register(
+            crate::util::Uid::fresh(NodeId(8)),
+            crate::client::Priority::Standard,
+            None,
+        );
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while !set.tracker().is_empty() && std::time::Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert!(set.tracker().is_empty(), "housekeeper must sweep stale tracker entries");
         set.shutdown();
     }
 
@@ -497,16 +580,37 @@ mod tests {
         );
         std::thread::sleep(Duration::from_millis(80));
         let multi = MultiSet::new(vec![set0, set1], 7);
-        let (idx, uid) = multi
+        let handle = multi
             .submit(AppId(1), Payload::Bytes(vec![1]))
             .expect("second set must accept");
-        assert_eq!(idx, 1);
-        let deadline = std::time::Instant::now() + Duration::from_secs(10);
-        let mut got = None;
-        while got.is_none() && std::time::Instant::now() < deadline {
-            got = multi.poll(idx, uid);
-            std::thread::sleep(Duration::from_millis(5));
+        assert_eq!(handle.set(), 1);
+        assert!(matches!(
+            handle.wait(Duration::from_secs(10)),
+            WaitOutcome::Done(_)
+        ));
+        for s in multi.sets {
+            s.shutdown();
         }
-        assert!(got.is_some());
+    }
+
+    #[test]
+    fn multiset_with_no_capacity_anywhere_reports_it() {
+        let cfg = sim_config();
+        let pool = build_pool(&cfg, None);
+        let dead = WorkflowSet::build(
+            cfg.clone(),
+            vec![vec![0, 0, 0, 0]],
+            Arc::new(EchoLogic),
+            pool,
+        );
+        std::thread::sleep(Duration::from_millis(40));
+        let multi = MultiSet::new(vec![dead], 5);
+        assert_eq!(
+            multi.submit(AppId(1), Payload::Bytes(vec![2])).unwrap_err(),
+            SubmitError::NoCapacity
+        );
+        for s in multi.sets {
+            s.shutdown();
+        }
     }
 }

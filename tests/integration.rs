@@ -1,11 +1,11 @@
-//! Cross-module integration tests: full Workflow Set request lifecycle,
-//! fault-tolerance matrix rows from DESIGN.md §7 (message loss with no
-//! retransmission, DB replica failure, NM failover), and multi-set
-//! behaviour.
+//! Cross-module integration tests: full Workflow Set request lifecycle
+//! through the unified `Gateway`/`RequestHandle` API, fault-tolerance
+//! matrix rows from DESIGN.md §7 (message loss with no retransmission,
+//! DB replica failure, NM failover), and multi-set behaviour.
 
+use onepiece::client::{Gateway, WaitOutcome};
 use onepiece::config::{ClusterConfig, ExecModel, FabricKind};
 use onepiece::nm::StageKey;
-use onepiece::proxy::Admission;
 use onepiece::rdma::{Fabric, FabricConfig};
 use onepiece::transport::{AppId, Payload, WorkflowMessage};
 use onepiece::util::NodeId;
@@ -37,25 +37,26 @@ fn request_lifecycle_uid_threading() {
     let set = build(&cfg);
     std::thread::sleep(Duration::from_millis(80));
 
-    let Admission::Accepted(uid) = set.submit(AppId(1), Payload::Bytes(vec![42; 32]))
-    else {
-        panic!("must accept")
+    let handle = set
+        .submit(AppId(1), Payload::Bytes(vec![42; 32]))
+        .expect("must accept");
+    let WaitOutcome::Done(bytes) = handle.wait(Duration::from_secs(10)) else {
+        panic!("result expected")
     };
-    let bytes = set.wait_result(uid, Duration::from_secs(10)).expect("result");
     let msg = WorkflowMessage::decode(&bytes).unwrap();
     // The UID assigned at the proxy survives the whole lifecycle (§3.2),
     // the stage advanced past the last stage index, the proxy origin and
     // timestamp are preserved.
-    assert_eq!(msg.header.uid, uid);
+    assert_eq!(msg.header.uid, handle.uid());
     assert_eq!(msg.header.stage.0, 4);
     assert_eq!(msg.header.origin, set.proxy.node());
     assert!(msg.header.ts_ns > 0);
-    // Fetch purges per replica (other replicas expire by TTL — §3.4):
-    // after draining every replica the result is gone.
+    // The handle's observation purged one replica; the remaining replicas
+    // still hold copies (they expire by TTL — §3.4). Drain them directly.
     for _ in 1..set.dbs.len() {
-        let _ = set.poll(uid);
+        let _ = set.db_client.fetch(handle.uid());
     }
-    assert!(set.poll(uid).is_none());
+    assert!(set.db_client.fetch(handle.uid()).is_none());
     set.shutdown();
 }
 
@@ -65,17 +66,18 @@ fn pipelined_batch_all_complete() {
     let set = build(&cfg);
     std::thread::sleep(Duration::from_millis(80));
 
-    let mut uids = Vec::new();
+    let mut handles = Vec::new();
     for i in 0..30u8 {
-        if let Admission::Accepted(uid) = set.submit(AppId(1), Payload::Bytes(vec![i]))
-        {
-            uids.push((i, uid));
+        if let Ok(h) = set.submit(AppId(1), Payload::Bytes(vec![i])) {
+            handles.push((i, h));
         }
         std::thread::sleep(Duration::from_millis(2));
     }
-    assert!(uids.len() >= 25, "most requests admitted, got {}", uids.len());
-    for (i, uid) in &uids {
-        let bytes = set.wait_result(*uid, Duration::from_secs(15)).expect("result");
+    assert!(handles.len() >= 25, "most requests admitted, got {}", handles.len());
+    for (i, h) in &handles {
+        let WaitOutcome::Done(bytes) = h.wait(Duration::from_secs(15)) else {
+            panic!("request {i} must complete")
+        };
         let msg = WorkflowMessage::decode(&bytes).unwrap();
         assert_eq!(msg.payload, Payload::Bytes(vec![*i]), "payload integrity");
     }
@@ -98,31 +100,29 @@ fn message_loss_is_not_retransmitted() {
         write_drop_prob: 0.3,
         ..Default::default()
     });
-    let mut uids = Vec::new();
+    let mut handles = Vec::new();
     for i in 0..20u8 {
-        if let Admission::Accepted(uid) = set.submit(AppId(1), Payload::Bytes(vec![i]))
-        {
-            uids.push(uid);
+        if let Ok(h) = set.submit(AppId(1), Payload::Bytes(vec![i])) {
+            handles.push(h);
         }
         std::thread::sleep(Duration::from_millis(2));
     }
-    let completed = uids
+    let completed = handles
         .iter()
-        .filter(|u| set.wait_result(**u, Duration::from_secs(3)).is_some())
+        .filter(|h| matches!(h.wait(Duration::from_secs(3)), WaitOutcome::Done(_)))
         .count();
     // Some complete, some are lost; with 4 RDMA hops at 30% drop the
     // expected completion rate is (0.7)^4 ≈ 24% — allow a broad band but
-    // require BOTH losses and completions to occur.
-    assert!(completed < uids.len(), "losses must occur");
+    // require losses to occur (lost requests surface as TimedOut).
+    assert!(completed < handles.len(), "losses must occur");
 
     // Heal the fabric: the system recovers with no residue.
     set.fabric.set_config(FabricConfig { latency: None, ..Default::default() });
-    let Admission::Accepted(uid) = set.submit(AppId(1), Payload::Bytes(vec![99]))
-    else {
-        panic!()
-    };
+    let handle = set
+        .submit(AppId(1), Payload::Bytes(vec![99]))
+        .expect("post-loss submission must admit");
     assert!(
-        set.wait_result(uid, Duration::from_secs(10)).is_some(),
+        matches!(handle.wait(Duration::from_secs(10)), WaitOutcome::Done(_)),
         "post-loss requests must flow normally"
     );
     set.shutdown();
@@ -134,18 +134,20 @@ fn db_replica_failure_served_by_backup() {
     let set = build(&cfg);
     std::thread::sleep(Duration::from_millis(80));
 
-    let Admission::Accepted(uid) = set.submit(AppId(1), Payload::Bytes(vec![7]))
-    else {
-        panic!()
-    };
+    let handle = set.submit(AppId(1), Payload::Bytes(vec![7])).expect("admit");
     // Wait until the result is stored on all replicas (RD writes all).
     let deadline = std::time::Instant::now() + Duration::from_secs(10);
-    while set.dbs[1].peek(uid).is_none() && std::time::Instant::now() < deadline {
+    while set.dbs[1].peek(handle.uid()).is_none()
+        && std::time::Instant::now() < deadline
+    {
         std::thread::sleep(Duration::from_millis(5));
     }
-    // Kill replica 0; the client read path falls through to replica 1.
+    // Kill replica 0; the handle's read path falls through to replica 1.
     set.db_client.set_alive(0, false);
-    assert!(set.poll(uid).is_some(), "backup replica must serve the result");
+    assert!(
+        matches!(handle.wait(Duration::from_secs(5)), WaitOutcome::Done(_)),
+        "backup replica must serve the result"
+    );
     set.shutdown();
 }
 
@@ -168,7 +170,7 @@ fn nm_primary_failover() {
 #[test]
 fn multiset_isolates_set_failure() {
     // A set whose entrance stage is unassigned (simulating regional
-    // failure) rejects; the multi-set router places everything on the
+    // failure) rejects; the multi-set gateway places everything on the
     // healthy set.
     let cfg = fast_config();
     let dead = {
@@ -179,22 +181,19 @@ fn multiset_isolates_set_failure() {
     std::thread::sleep(Duration::from_millis(80));
     let multi = MultiSet::new(vec![dead, healthy], 3);
 
-    let mut placed = Vec::new();
+    let mut handles = Vec::new();
     for i in 0..10u8 {
-        let (idx, uid) = multi
+        let handle = multi
             .submit(AppId(1), Payload::Bytes(vec![i]))
             .expect("healthy set must absorb");
-        assert_eq!(idx, 1);
-        placed.push(uid);
+        assert_eq!(handle.set(), 1);
+        handles.push(handle);
     }
-    for uid in placed {
-        let deadline = std::time::Instant::now() + Duration::from_secs(10);
-        let mut got = false;
-        while !got && std::time::Instant::now() < deadline {
-            got = multi.poll(1, uid).is_some();
-            std::thread::sleep(Duration::from_millis(3));
-        }
-        assert!(got);
+    for handle in handles {
+        assert!(matches!(
+            handle.wait(Duration::from_secs(10)),
+            WaitOutcome::Done(_)
+        ));
     }
 }
 
@@ -214,11 +213,10 @@ fn idle_pool_instance_absorbs_hot_stage() {
     assert_eq!(set.nm.stage_instances(diffusion).len(), 1);
 
     // Saturate.
-    let mut uids = Vec::new();
+    let mut handles = Vec::new();
     for i in 0..40u8 {
-        if let Admission::Accepted(uid) = set.submit(AppId(1), Payload::Bytes(vec![i]))
-        {
-            uids.push(uid);
+        if let Ok(h) = set.submit(AppId(1), Payload::Bytes(vec![i])) {
+            handles.push(h);
         }
         std::thread::sleep(Duration::from_millis(2));
     }
@@ -228,11 +226,11 @@ fn idle_pool_instance_absorbs_hot_stage() {
     assert_eq!(set.nm.stage_instances(diffusion).len(), 2);
 
     // Everything still completes after the topology change.
-    let done = uids
+    let done = handles
         .iter()
-        .filter(|u| set.wait_result(**u, Duration::from_secs(20)).is_some())
+        .filter(|h| matches!(h.wait(Duration::from_secs(20)), WaitOutcome::Done(_)))
         .count();
-    assert!(done >= uids.len() * 8 / 10, "done={done}/{}", uids.len());
+    assert!(done >= handles.len() * 8 / 10, "done={done}/{}", handles.len());
     set.shutdown();
 }
 
@@ -261,21 +259,20 @@ fn instance_death_is_isolated() {
     set.nm.assign(victims[0], None);
     std::thread::sleep(Duration::from_millis(60)); // routing propagates
 
-    let mut uids = Vec::new();
+    let mut handles = Vec::new();
     for i in 0..20u8 {
-        if let Admission::Accepted(uid) = set.submit(AppId(1), Payload::Bytes(vec![i]))
-        {
-            uids.push(uid);
+        if let Ok(h) = set.submit(AppId(1), Payload::Bytes(vec![i])) {
+            handles.push(h);
         }
         std::thread::sleep(Duration::from_millis(2));
     }
-    let done = uids
+    let done = handles
         .iter()
-        .filter(|u| set.wait_result(**u, Duration::from_secs(10)).is_some())
+        .filter(|h| matches!(h.wait(Duration::from_secs(10)), WaitOutcome::Done(_)))
         .count();
     assert_eq!(
         done,
-        uids.len(),
+        handles.len(),
         "remaining instance must serve all post-failure requests"
     );
     assert_eq!(set.nm.stage_instances(diffusion).len(), 1);

@@ -1,0 +1,156 @@
+//! Request-lifecycle integration tests for the unified client gateway:
+//! cancellation and deadline expiry reach their typed terminal states
+//! **without leaking in-flight stage work** — dropped requests publish a
+//! tombstone instead of a result, tracker entries are released, and a
+//! late cancel against a completed request is a no-op.
+
+use onepiece::client::{Gateway, RequestStatus, SubmitOptions, WaitOutcome};
+use onepiece::config::{ClusterConfig, ExecModel, FabricKind};
+use onepiece::transport::{AppId, Payload};
+use onepiece::workflow::EchoLogic;
+use onepiece::wset::{build_pool, WorkflowSet};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// A pipeline whose diffusion stage is slow enough (300 ms) that a
+/// request is reliably *in flight* there when tests cancel it or let its
+/// deadline lapse.
+fn slow_diffusion_config() -> ClusterConfig {
+    let mut cfg = ClusterConfig::i2v_default();
+    cfg.fabric = FabricKind::Ideal;
+    let ms = [1.0, 1.0, 300.0, 1.0];
+    for (s, &m) in cfg.apps[0].stages.iter_mut().zip(&ms) {
+        s.exec = ExecModel::Simulated { ms: m };
+        s.exec_ms = m;
+    }
+    cfg.idle_pool = 0;
+    // Short TTL so the housekeeper's tracker sweep (which releases the
+    // entries of dropped requests — the data plane keeps them so late
+    // copies still drop) runs inside the tests' wait windows.
+    cfg.db.ttl_ms = 1_000;
+    cfg
+}
+
+fn build(cfg: &ClusterConfig) -> WorkflowSet {
+    let pool = build_pool(cfg, None);
+    WorkflowSet::build(cfg.clone(), vec![vec![1, 1, 1, 1]], Arc::new(EchoLogic), pool)
+}
+
+fn total_sla_dropped(set: &WorkflowSet) -> u64 {
+    set.instance_stats().iter().map(|(_, s, _)| s.sla_dropped).sum()
+}
+
+#[test]
+fn deadline_expiry_mid_pipeline_produces_tombstone() {
+    let set = build(&slow_diffusion_config());
+    std::thread::sleep(Duration::from_millis(80));
+
+    // 100 ms deadline against a 300 ms diffusion stage: the deadline
+    // lapses while the request is queued at / executing in diffusion.
+    let opts = SubmitOptions::default().with_deadline(Duration::from_millis(100));
+    let handle = set
+        .submit_with(AppId(1), Payload::Bytes(vec![1; 16]), opts)
+        .expect("must admit");
+
+    assert_eq!(
+        handle.wait(Duration::from_secs(5)),
+        WaitOutcome::DeadlineExceeded,
+        "deadline must surface as the typed terminal state"
+    );
+    assert_eq!(handle.status(), RequestStatus::DeadlineExceeded);
+
+    // No in-flight work leaks: the data plane dropped the request (a
+    // tombstone, not a result, reached the DB) and released its tracker
+    // entry.
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    while (total_sla_dropped(&set) == 0 || !set.tracker().is_empty())
+        && std::time::Instant::now() < deadline
+    {
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert!(total_sla_dropped(&set) >= 1, "stage work must be dropped");
+    assert!(set.tracker().is_empty(), "tracker entry must be released");
+    assert!(
+        set.db_client.fetch(handle.uid()).is_none(),
+        "no result may be published past the deadline"
+    );
+    assert_eq!(set.metrics().counter("deadline_missed").get(), 1);
+    set.shutdown();
+}
+
+#[test]
+fn cancellation_mid_pipeline_drops_in_flight_work() {
+    let set = build(&slow_diffusion_config());
+    std::thread::sleep(Duration::from_millis(80));
+
+    let handle = set
+        .submit(AppId(1), Payload::Bytes(vec![2; 16]))
+        .expect("must admit");
+    // Let the request reach the diffusion stage, then cancel mid-flight.
+    std::thread::sleep(Duration::from_millis(60));
+    assert!(handle.cancel(), "cancel must take effect on an in-flight request");
+    assert_eq!(handle.status(), RequestStatus::Cancelled);
+    assert_eq!(handle.wait(Duration::from_secs(5)), WaitOutcome::Cancelled);
+    assert!(!handle.cancel(), "second cancel is a no-op");
+
+    // The diffusion worker finishes its (wasted) execution and must then
+    // drop the output instead of delivering it downstream.
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    while (total_sla_dropped(&set) == 0 || !set.tracker().is_empty())
+        && std::time::Instant::now() < deadline
+    {
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert!(total_sla_dropped(&set) >= 1, "in-flight stage work must be dropped");
+    assert!(set.tracker().is_empty(), "tracker entry must be released");
+    assert!(
+        set.db_client.fetch(handle.uid()).is_none(),
+        "a cancelled request must never publish a result"
+    );
+    assert_eq!(set.metrics().counter("requests_cancelled").get(), 1);
+    set.shutdown();
+}
+
+#[test]
+fn cancel_after_completion_is_a_noop() {
+    let mut cfg = slow_diffusion_config();
+    // Fast pipeline for this one: completion wins the race by design.
+    for s in cfg.apps[0].stages.iter_mut() {
+        s.exec = ExecModel::Simulated { ms: 1.0 };
+        s.exec_ms = 1.0;
+    }
+    let set = build(&cfg);
+    std::thread::sleep(Duration::from_millis(80));
+
+    let handle = set
+        .submit(AppId(1), Payload::Bytes(vec![3; 16]))
+        .expect("must admit");
+    let WaitOutcome::Done(bytes) = handle.wait(Duration::from_secs(10)) else {
+        panic!("fast pipeline must complete")
+    };
+    assert!(!bytes.is_empty());
+    assert!(!handle.cancel(), "cancel after Done must not take effect");
+    assert_eq!(handle.status(), RequestStatus::Done, "Done is sticky");
+    assert_eq!(set.metrics().counter("requests_cancelled").get(), 0);
+    set.shutdown();
+}
+
+#[test]
+fn deadline_met_completes_normally() {
+    let mut cfg = slow_diffusion_config();
+    for s in cfg.apps[0].stages.iter_mut() {
+        s.exec = ExecModel::Simulated { ms: 1.0 };
+        s.exec_ms = 1.0;
+    }
+    let set = build(&cfg);
+    std::thread::sleep(Duration::from_millis(80));
+
+    let opts = SubmitOptions::interactive().with_deadline(Duration::from_secs(10));
+    let handle = set
+        .submit_with(AppId(1), Payload::Bytes(vec![4; 16]), opts)
+        .expect("must admit");
+    assert!(matches!(handle.wait(Duration::from_secs(10)), WaitOutcome::Done(_)));
+    assert_eq!(set.metrics().counter("deadline_missed").get(), 0);
+    assert_eq!(set.metrics().counter("accepted.interactive").get(), 1);
+    set.shutdown();
+}
