@@ -76,6 +76,9 @@ pub enum WaitOutcome {
     DeadlineExceeded,
     /// The request was cancelled.
     Cancelled,
+    /// The request was lost to a worker-instance failure and its
+    /// recovery retries (submit `RetryPolicy`) are exhausted.
+    Failed,
     /// The request was rejected (only reachable for handles observed in
     /// the rejected state; gateways report rejection as a
     /// [`crate::client::SubmitError`] instead).
@@ -170,6 +173,7 @@ impl RequestHandle {
                 }
                 EntryKind::DeadlineExceeded => RequestStatus::DeadlineExceeded,
                 EntryKind::Cancelled => RequestStatus::Cancelled,
+                EntryKind::Failed => RequestStatus::Failed,
             };
             self.tracker.finish(self.uid);
             return g.machine.observe(observed);
@@ -179,6 +183,7 @@ impl RequestHandle {
             TrackedState::DeadlineExceeded => {
                 g.machine.observe(RequestStatus::DeadlineExceeded)
             }
+            TrackedState::Failed => g.machine.observe(RequestStatus::Failed),
             TrackedState::InFlight { stage: Some(s) } => {
                 g.machine.observe(RequestStatus::Running { stage: s })
             }
@@ -231,6 +236,7 @@ impl RequestHandle {
                         return WaitOutcome::DeadlineExceeded
                     }
                     RequestStatus::Cancelled => return WaitOutcome::Cancelled,
+                    RequestStatus::Failed => return WaitOutcome::Failed,
                     RequestStatus::Rejected { .. } => return WaitOutcome::Rejected,
                     RequestStatus::Admitted | RequestStatus::Running { .. } => {}
                 }
@@ -284,6 +290,7 @@ mod tests {
             RequestStatus::Done,
             RequestStatus::Cancelled,
             RequestStatus::DeadlineExceeded,
+            RequestStatus::Failed,
             RequestStatus::Rejected { retry_after_hint: Duration::from_millis(5) },
         ] {
             let mut s = RequestState::new();

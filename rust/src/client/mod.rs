@@ -28,7 +28,7 @@ mod handle;
 mod tracker;
 
 pub use handle::{RequestHandle, RequestState, WaitOutcome};
-pub use tracker::{InFlightVerdict, RequestTracker, TrackedState};
+pub use tracker::{InFlightVerdict, ReplayVerdict, RequestTracker, TrackedState};
 
 use crate::transport::{AppId, Payload};
 use std::time::Duration;
@@ -70,10 +70,14 @@ impl Priority {
     }
 }
 
-/// Gateway-side retry policy applied on fast-reject.
+/// Gateway-side retry policy, applied in two places: on admission
+/// fast-reject (resubmit up to `max_attempts` times with backoff) and
+/// after a worker-instance crash (the recovery sweep replays a stranded
+/// request's checkpoint up to `max_attempts - 1` times before declaring
+/// it [`RequestStatus::Failed`]).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct RetryPolicy {
-    /// Total submission attempts (1 = no retry).
+    /// Total attempts (1 = no retry, and no crash-recovery replay).
     pub max_attempts: u32,
     /// Sleep between attempts.
     pub backoff: Duration,
@@ -197,6 +201,9 @@ pub enum RequestStatus {
     DeadlineExceeded,
     /// Cancelled via [`RequestHandle::cancel`].
     Cancelled,
+    /// Lost to a worker-instance failure with recovery retries
+    /// exhausted (bounded by the submit [`RetryPolicy`]).
+    Failed,
 }
 
 impl RequestStatus {
@@ -208,6 +215,7 @@ impl RequestStatus {
                 | RequestStatus::Rejected { .. }
                 | RequestStatus::DeadlineExceeded
                 | RequestStatus::Cancelled
+                | RequestStatus::Failed
         )
     }
 }
@@ -322,6 +330,7 @@ mod tests {
         assert!(RequestStatus::Done.is_terminal());
         assert!(RequestStatus::Cancelled.is_terminal());
         assert!(RequestStatus::DeadlineExceeded.is_terminal());
+        assert!(RequestStatus::Failed.is_terminal());
         assert!(
             RequestStatus::Rejected { retry_after_hint: Duration::ZERO }.is_terminal()
         );

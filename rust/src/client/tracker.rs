@@ -14,8 +14,9 @@
 //! message format while priorities and deadlines still reach every stage
 //! of the pipeline.
 
-use crate::client::Priority;
+use crate::client::{Priority, SubmitOptions};
 use crate::metrics::{Counter, Registry};
+use crate::rdma::RegionId;
 use crate::util::{Clock, Uid};
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
@@ -31,6 +32,10 @@ pub enum InFlightVerdict {
     /// The request's deadline passed: drop the work, publish a
     /// `DeadlineExceeded` tombstone.
     DeadlineExceeded,
+    /// The request was declared unrecoverable (instance failure with
+    /// recovery retries exhausted): drop the work, publish a `Failed`
+    /// tombstone.
+    Failed,
 }
 
 /// Handle-facing probe of a tracked request.
@@ -43,6 +48,23 @@ pub enum TrackedState {
     InFlight { stage: Option<u32> },
     Cancelled,
     DeadlineExceeded,
+    /// Lost to an instance failure; recovery exhausted.
+    Failed,
+}
+
+/// Outcome of [`RequestTracker::begin_replay`] — what the recovery
+/// sweep should do with a request stranded on a dead instance.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReplayVerdict {
+    /// Budget consumed: replay the checkpoint now.
+    Replay,
+    /// No replay budget left (the gateway's `RetryPolicy` bounds total
+    /// execution attempts): the request was marked failed; publish the
+    /// `Failed` tombstone.
+    Exhausted,
+    /// Already terminal (cancelled / failed / deadline passed /
+    /// untracked): nothing to do.
+    Terminal,
 }
 
 struct Entry {
@@ -50,10 +72,33 @@ struct Entry {
     /// Absolute deadline on the tracker's clock, if any.
     deadline_ns: Option<u64>,
     cancelled: bool,
+    failed: bool,
+    /// Flagged for the recovery sweep to replay from checkpoint: the
+    /// data plane holds (held) a message it can no longer progress —
+    /// e.g. its instance's role changed mid-queue during a donor steal.
+    stranded: bool,
     stage: Option<u32>,
+    /// Ring region the request was last sent to (proxy forward or RD
+    /// next-hop) — the recovery sweep uses it to find the in-flight
+    /// requests assigned to a dead instance.
+    location: Option<RegionId>,
+    /// Remaining recovery replays (from the submit `RetryPolicy`:
+    /// `max_attempts` bounds total execution attempts, the original
+    /// dispatch included).
+    replays_left: u32,
     registered_ns: u64,
     /// Guards the `deadline_missed` counter (count each UID once).
     deadline_counted: bool,
+}
+
+impl Entry {
+    /// Cancelled, failed, or past its deadline: no replay, no strand,
+    /// and no further terminal transition may overwrite it. The single
+    /// gate shared by `begin_replay` / `strand` / `mark_failed` /
+    /// `uids_at` so their terminal semantics cannot drift apart.
+    fn is_terminal(&self, now_ns: u64) -> bool {
+        self.cancelled || self.failed || self.deadline_ns.is_some_and(|d| now_ns > d)
+    }
 }
 
 /// Shared per-set request-lifecycle registry.
@@ -62,6 +107,7 @@ pub struct RequestTracker {
     metrics: Registry,
     cancelled_ctr: Arc<Counter>,
     deadline_ctr: Arc<Counter>,
+    failed_ctr: Arc<Counter>,
     inner: Mutex<HashMap<Uid, Entry>>,
 }
 
@@ -69,11 +115,13 @@ impl RequestTracker {
     pub fn new(clock: Arc<dyn Clock>, metrics: Registry) -> Self {
         let cancelled_ctr = metrics.counter("requests_cancelled");
         let deadline_ctr = metrics.counter("deadline_missed");
+        let failed_ctr = metrics.counter("requests_failed");
         Self {
             clock,
             metrics,
             cancelled_ctr,
             deadline_ctr,
+            failed_ctr,
             inner: Mutex::new(HashMap::new()),
         }
     }
@@ -84,18 +132,153 @@ impl RequestTracker {
         &self.metrics
     }
 
-    /// Track a freshly admitted request. `deadline` is relative to now.
-    pub fn register(&self, uid: Uid, priority: Priority, deadline: Option<Duration>) {
+    /// Track a freshly admitted request. `deadline` is relative to now;
+    /// `replays` is the recovery budget (how many times a crash may
+    /// replay this request before it is declared `Failed`).
+    pub fn register_full(
+        &self,
+        uid: Uid,
+        priority: Priority,
+        deadline: Option<Duration>,
+        replays: u32,
+    ) {
         let now = self.clock.now_ns();
         let entry = Entry {
             priority,
             deadline_ns: deadline.map(|d| now.saturating_add(d.as_nanos() as u64)),
             cancelled: false,
+            failed: false,
+            stranded: false,
             stage: None,
+            location: None,
+            replays_left: replays,
             registered_ns: now,
             deadline_counted: false,
         };
         self.inner.lock().unwrap().insert(uid, entry);
+    }
+
+    /// Track an admitted request with its submit options: the
+    /// `RetryPolicy`'s `max_attempts` bounds total execution attempts,
+    /// so the recovery budget is `max_attempts - 1` replays.
+    pub fn register_with(&self, uid: Uid, opts: &SubmitOptions) {
+        self.register_full(
+            uid,
+            opts.priority,
+            opts.deadline,
+            opts.retry.max_attempts.saturating_sub(1),
+        );
+    }
+
+    /// Track a freshly admitted request with no recovery budget (tests
+    /// and legacy callers).
+    pub fn register(&self, uid: Uid, priority: Priority, deadline: Option<Duration>) {
+        self.register_full(uid, priority, deadline, 0);
+    }
+
+    /// Record where `uid` was last sent (proxy entrance forward or RD
+    /// instance hop). The recovery sweep reads this back through
+    /// [`RequestTracker::uids_at`] when that ring's owner dies.
+    pub fn note_location(&self, uid: Uid, region: RegionId) {
+        if let Some(e) = self.inner.lock().unwrap().get_mut(&uid) {
+            e.location = Some(region);
+        }
+    }
+
+    /// In-flight UIDs whose last known location is `region` — the
+    /// requests stranded when the instance owning that ring dies.
+    /// Cancelled / failed / deadline-expired entries are excluded (they
+    /// are already terminal; nothing to recover).
+    pub fn uids_at(&self, region: RegionId) -> Vec<Uid> {
+        let now = self.clock.now_ns();
+        self.inner
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|(_, e)| e.location == Some(region) && !e.is_terminal(now))
+            .map(|(u, _)| *u)
+            .collect()
+    }
+
+    /// Consume one replay from `uid`'s recovery budget. Marks the entry
+    /// failed (counting `requests_failed` once) when the budget is
+    /// exhausted; the caller publishes the `Failed` tombstone.
+    pub fn begin_replay(&self, uid: Uid) -> ReplayVerdict {
+        let now = self.clock.now_ns();
+        let mut g = self.inner.lock().unwrap();
+        let Some(e) = g.get_mut(&uid) else {
+            return ReplayVerdict::Terminal;
+        };
+        if e.is_terminal(now) {
+            return ReplayVerdict::Terminal;
+        }
+        if e.replays_left == 0 {
+            e.failed = true;
+            self.failed_ctr.inc();
+            return ReplayVerdict::Exhausted;
+        }
+        e.replays_left -= 1;
+        ReplayVerdict::Replay
+    }
+
+    /// Flag `uid` for the recovery sweep to replay from its checkpoint:
+    /// the data plane holds a message it can no longer progress (the
+    /// instance's role changed mid-queue during a donor steal, or a
+    /// downstream ring refused the write). Returns `false` when the
+    /// request is untracked or already terminal — the caller then falls
+    /// back to a terminal verdict instead.
+    pub fn strand(&self, uid: Uid) -> bool {
+        let now = self.clock.now_ns();
+        let mut g = self.inner.lock().unwrap();
+        let Some(e) = g.get_mut(&uid) else { return false };
+        if e.is_terminal(now) {
+            return false;
+        }
+        e.stranded = true;
+        true
+    }
+
+    /// Clear `uid`'s stranded flag — the replay path consumed it (a UID
+    /// can be flagged *and* sit on a dead ring; whichever path replays
+    /// first must absorb the flag so one sweep never replays twice).
+    pub fn unstrand(&self, uid: Uid) {
+        if let Some(e) = self.inner.lock().unwrap().get_mut(&uid) {
+            e.stranded = false;
+        }
+    }
+
+    /// Drain the stranded set (recovery sweep: replay each from its
+    /// checkpoint, consuming replay budget as usual).
+    pub fn take_stranded(&self) -> Vec<Uid> {
+        let mut g = self.inner.lock().unwrap();
+        g.iter_mut()
+            .filter_map(|(u, e)| {
+                if e.stranded {
+                    e.stranded = false;
+                    Some(*u)
+                } else {
+                    None
+                }
+            })
+            .collect()
+    }
+
+    /// Declare `uid` unrecoverable outside the replay path (e.g. no
+    /// checkpoint or no surviving stage capacity). Returns `true` when
+    /// this call newly failed it. A request that already reached another
+    /// terminal state — cancelled, failed, or **deadline expired** — is
+    /// left alone: its existing verdict (and the matching tombstone
+    /// kind) takes precedence over `Failed`.
+    pub fn mark_failed(&self, uid: Uid) -> bool {
+        let now = self.clock.now_ns();
+        let mut g = self.inner.lock().unwrap();
+        let Some(e) = g.get_mut(&uid) else { return false };
+        if e.is_terminal(now) {
+            return false;
+        }
+        e.failed = true;
+        self.failed_ctr.inc();
+        true
     }
 
     /// Scheduling priority of a tracked request (Standard if unknown —
@@ -134,7 +317,11 @@ impl RequestTracker {
                         priority: Priority::Standard,
                         deadline_ns: None,
                         cancelled: true,
+                        failed: false,
+                        stranded: false,
                         stage: None,
+                        location: None,
+                        replays_left: 0,
                         registered_ns: self.clock.now_ns(),
                         deadline_counted: false,
                     },
@@ -159,6 +346,9 @@ impl RequestTracker {
         if e.cancelled {
             return InFlightVerdict::Cancelled;
         }
+        if e.failed {
+            return InFlightVerdict::Failed;
+        }
         if e.deadline_ns.is_some_and(|d| now > d) {
             if !e.deadline_counted {
                 e.deadline_counted = true;
@@ -179,6 +369,9 @@ impl RequestTracker {
         };
         if e.cancelled {
             return TrackedState::Cancelled;
+        }
+        if e.failed {
+            return TrackedState::Failed;
         }
         if e.deadline_ns.is_some_and(|d| now > d) {
             if !e.deadline_counted {
@@ -298,6 +491,101 @@ mod tests {
         t.cancel(u);
         c.advance(10_000_000);
         assert_eq!(t.verdict(u), InFlightVerdict::Cancelled);
+    }
+
+    #[test]
+    fn location_tracking_and_uids_at() {
+        let (c, t) = setup();
+        let (a, b, d) = (uid(10), uid(11), uid(12));
+        t.register_full(a, Priority::Standard, None, 1);
+        t.register_full(b, Priority::Standard, None, 1);
+        t.register_full(d, Priority::Standard, Some(Duration::from_millis(1)), 1);
+        t.note_location(a, RegionId(5));
+        t.note_location(b, RegionId(5));
+        t.note_location(d, RegionId(5));
+        t.cancel(b);
+        c.advance(2_000_000); // d's deadline lapses
+        let mut at = t.uids_at(RegionId(5));
+        at.sort();
+        assert_eq!(at, vec![a], "cancelled and expired requests are not recoverable");
+        assert!(t.uids_at(RegionId(6)).is_empty());
+        // Moving on clears the old location.
+        t.note_location(a, RegionId(6));
+        assert!(t.uids_at(RegionId(5)).is_empty());
+        assert_eq!(t.uids_at(RegionId(6)), vec![a]);
+    }
+
+    #[test]
+    fn replay_budget_exhausts_into_failed() {
+        let (_c, t) = setup();
+        let u = uid(13);
+        t.register_full(u, Priority::Standard, None, 2);
+        assert_eq!(t.begin_replay(u), ReplayVerdict::Replay);
+        assert_eq!(t.begin_replay(u), ReplayVerdict::Replay);
+        assert_eq!(t.begin_replay(u), ReplayVerdict::Exhausted);
+        assert_eq!(t.verdict(u), InFlightVerdict::Failed);
+        assert_eq!(t.probe(u), TrackedState::Failed);
+        assert_eq!(t.metrics().counter("requests_failed").get(), 1);
+        // Already failed: further sweeps see a terminal entry.
+        assert_eq!(t.begin_replay(u), ReplayVerdict::Terminal);
+        assert_eq!(t.metrics().counter("requests_failed").get(), 1, "counted once");
+    }
+
+    #[test]
+    fn register_with_derives_replay_budget_from_retry_policy() {
+        let (_c, t) = setup();
+        let u = uid(14);
+        // max_attempts = 3 → original dispatch + 2 replays.
+        let opts = SubmitOptions::default()
+            .with_retry(crate::client::RetryPolicy::attempts(3, Duration::ZERO));
+        t.register_with(u, &opts);
+        assert_eq!(t.begin_replay(u), ReplayVerdict::Replay);
+        assert_eq!(t.begin_replay(u), ReplayVerdict::Replay);
+        assert_eq!(t.begin_replay(u), ReplayVerdict::Exhausted);
+        // Default policy (1 attempt): no replays at all.
+        let v = uid(15);
+        t.register_with(v, &SubmitOptions::default());
+        assert_eq!(t.begin_replay(v), ReplayVerdict::Exhausted);
+    }
+
+    #[test]
+    fn strand_flags_in_flight_and_drains_once() {
+        let (c, t) = setup();
+        let (a, b, d) = (uid(30), uid(31), uid(32));
+        t.register_full(a, Priority::Standard, None, 1);
+        t.register_full(b, Priority::Standard, None, 1);
+        t.register_full(d, Priority::Standard, Some(Duration::from_millis(1)), 1);
+        assert!(t.strand(a));
+        t.cancel(b);
+        assert!(!t.strand(b), "terminal requests are not strandable");
+        c.advance(2_000_000);
+        assert!(!t.strand(d), "expired deadline wins over stranding");
+        assert!(!t.strand(uid(33)), "unknown UIDs are not strandable");
+        let drained = t.take_stranded();
+        assert_eq!(drained, vec![a]);
+        assert!(t.take_stranded().is_empty(), "drained exactly once");
+    }
+
+    #[test]
+    fn mark_failed_is_terminal_and_counted_once() {
+        let (_c, t) = setup();
+        let u = uid(16);
+        t.register(u, Priority::Standard, None);
+        assert!(t.mark_failed(u));
+        assert!(!t.mark_failed(u));
+        assert_eq!(t.verdict(u), InFlightVerdict::Failed);
+        assert!(!t.mark_failed(uid(17)), "unknown UIDs are not failable");
+        assert_eq!(t.metrics().counter("requests_failed").get(), 1);
+    }
+
+    #[test]
+    fn cancel_and_replay_do_not_mix() {
+        let (_c, t) = setup();
+        let u = uid(18);
+        t.register_full(u, Priority::Standard, None, 5);
+        t.cancel(u);
+        assert_eq!(t.begin_replay(u), ReplayVerdict::Terminal);
+        assert_eq!(t.verdict(u), InFlightVerdict::Cancelled, "cancellation wins");
     }
 
     #[test]

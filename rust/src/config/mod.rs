@@ -10,8 +10,8 @@
 mod types;
 
 pub use types::{
-    AppConfig, ClusterConfig, ConfigError, DbSettings, ExecModel, FabricKind,
-    NmSettings, ProxySettings, RingSettings, SchedMode, StageConfig,
+    AppConfig, ChaosSettings, ClusterConfig, ConfigError, DbSettings, ExecModel,
+    FabricKind, NmSettings, ProxySettings, RingSettings, SchedMode, StageConfig,
 };
 
 #[cfg(test)]

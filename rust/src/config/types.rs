@@ -156,6 +156,28 @@ pub struct NmSettings {
     /// Run the §8.2 rebalance pass on the housekeeping timer. Off by
     /// default so demos/tests drive rescheduling explicitly.
     pub auto_rebalance: bool,
+    /// Worker-instance failure detector: declare an instance dead when
+    /// its last heartbeat (piggybacked on the utilization report) is
+    /// older than this. 0 = detector off (the default — like
+    /// `auto_rebalance`, fault handling is opt-in so functional runs
+    /// keep deterministic instance sets).
+    pub instance_timeout_ms: u64,
+}
+
+/// Chaos / fault-injection settings (crash testing, E13).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChaosSettings {
+    /// Kill one randomly chosen assigned instance every this many ms
+    /// (driven by the set's housekeeping timer). 0 = chaos off.
+    pub kill_every_ms: u64,
+    /// RNG seed for victim selection.
+    pub seed: u64,
+}
+
+impl Default for ChaosSettings {
+    fn default() -> Self {
+        Self { kill_every_ms: 0, seed: 7 }
+    }
 }
 
 /// Database tuning (§3.4).
@@ -195,6 +217,8 @@ pub struct ClusterConfig {
     pub apps: Vec<AppConfig>,
     /// Idle-instance pool size per set (§8.2).
     pub idle_pool: usize,
+    /// Crash injection (off unless enabled).
+    pub chaos: ChaosSettings,
 }
 
 impl ClusterConfig {
@@ -213,6 +237,7 @@ impl ClusterConfig {
                 heartbeat_timeout_ms: 400,
                 replicas: 3,
                 auto_rebalance: false,
+                instance_timeout_ms: 0,
             },
             db: DbSettings { replicas: 2, ttl_ms: 60_000 },
             proxy: ProxySettings {
@@ -259,6 +284,7 @@ impl ClusterConfig {
                 ],
             }],
             idle_pool: 2,
+            chaos: ChaosSettings::default(),
         }
     }
 
@@ -281,6 +307,12 @@ impl ClusterConfig {
         }
         if !(0.0..=1.0).contains(&self.proxy.interactive_reserve) {
             return Err(err("proxy.interactive_reserve must be in [0,1]"));
+        }
+        if self.chaos.kill_every_ms > 0 && self.nm.instance_timeout_ms == 0 {
+            return Err(err(
+                "chaos.kill_every_ms requires nm.instance_timeout_ms > 0 \
+                 (killed instances would never be detected or repaired)",
+            ));
         }
         let mut ids = std::collections::HashSet::new();
         for app in &self.apps {
@@ -330,6 +362,17 @@ impl ClusterConfig {
                     Json::Num(self.nm.heartbeat_timeout_ms as f64),
                 ),
                 ("replicas", Json::Num(self.nm.replicas as f64)),
+                (
+                    "instance_timeout_ms",
+                    Json::Num(self.nm.instance_timeout_ms as f64),
+                ),
+            ]),
+        );
+        root.insert(
+            "chaos".into(),
+            obj(vec![
+                ("kill_every_ms", Json::Num(self.chaos.kill_every_ms as f64)),
+                ("seed", Json::Num(self.chaos.seed as f64)),
             ]),
         );
         root.insert(
@@ -432,8 +475,20 @@ impl ClusterConfig {
                     .get("auto_rebalance")
                     .and_then(Json::as_bool)
                     .unwrap_or(base.nm.auto_rebalance),
+                instance_timeout_ms: get_u(
+                    n,
+                    "instance_timeout_ms",
+                    base.nm.instance_timeout_ms,
+                ),
             },
             None => base.nm,
+        };
+        let chaos = match j.get("chaos") {
+            Some(c) => ChaosSettings {
+                kill_every_ms: get_u(c, "kill_every_ms", base.chaos.kill_every_ms),
+                seed: get_u(c, "seed", base.chaos.seed),
+            },
+            None => base.chaos,
         };
         let db = match j.get("db") {
             Some(d) => DbSettings {
@@ -522,6 +577,7 @@ impl ClusterConfig {
                 .get("idle_pool")
                 .and_then(Json::as_u64)
                 .unwrap_or(base.idle_pool as u64) as usize,
+            chaos,
         })
     }
 
@@ -580,5 +636,24 @@ mod tests {
     #[test]
     fn i2v_default_is_valid() {
         ClusterConfig::i2v_default().validate().unwrap();
+    }
+
+    #[test]
+    fn chaos_block_parses_and_requires_detector() {
+        let cfg = ClusterConfig::from_json_str(
+            r#"{"nm": {"instance_timeout_ms": 500},
+                "chaos": {"kill_every_ms": 1000, "seed": 3}}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.nm.instance_timeout_ms, 500);
+        assert_eq!(cfg.chaos.kill_every_ms, 1_000);
+        assert_eq!(cfg.chaos.seed, 3);
+        // Chaos without the failure detector is a misconfiguration.
+        assert!(ClusterConfig::from_json_str(r#"{"chaos": {"kill_every_ms": 1000}}"#)
+            .is_err());
+        // Round-trip keeps the new fields.
+        let back = ClusterConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.nm.instance_timeout_ms, 500);
+        assert_eq!(back.chaos, cfg.chaos);
     }
 }

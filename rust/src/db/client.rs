@@ -3,7 +3,7 @@
 //! due to ongoing replication or instance failure — the client proceeds
 //! to query another instance in the next attempt."
 
-use super::{EntryKind, MemDb};
+use super::{Checkpoint, EntryKind, MemDb};
 use crate::util::Uid;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -101,6 +101,36 @@ impl DbClient {
                 return None;
             }
             self.wait_signal(deadline - now);
+        }
+    }
+
+    /// Replicate a recovery checkpoint to every replica (the bytes are
+    /// shared, so replication costs refcounts, not copies). Dead
+    /// replicas are skipped — like result writes, the paper's
+    /// weak-consistency model tolerates a replica missing an update.
+    pub fn put_checkpoint(&self, uid: Uid, stage: u32, data: Arc<[u8]>) {
+        for r in &self.replicas {
+            if r.alive.load(Ordering::SeqCst) {
+                r.db.put_checkpoint(uid, stage, data.clone());
+            }
+        }
+    }
+
+    /// Read the newest live checkpoint for `uid` across replicas (the
+    /// recovery sweep's fallback read path; replicas may have diverged
+    /// if one missed a later stage's write).
+    pub fn checkpoint(&self, uid: Uid) -> Option<Checkpoint> {
+        self.replicas
+            .iter()
+            .filter(|r| r.alive.load(Ordering::SeqCst))
+            .filter_map(|r| r.db.checkpoint(uid))
+            .max_by_key(|c| c.stage)
+    }
+
+    /// Drop `uid`'s checkpoint on every replica (admission rolled back).
+    pub fn remove_checkpoint(&self, uid: Uid) {
+        for r in &self.replicas {
+            r.db.remove_checkpoint(uid);
         }
     }
 

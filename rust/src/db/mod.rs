@@ -15,14 +15,17 @@
 //! signalled through a condvar so result waiters **block** instead of
 //! busy-polling ([`MemDb::wait_signal`], [`DbClient::wait_entry`]), and
 //! the workflow data plane publishes [`EntryKind`] **tombstones**
-//! (deadline exceeded / cancelled) instead of results for dropped
-//! in-flight work.
+//! (deadline exceeded / cancelled / recovery failed) instead of results
+//! for dropped in-flight work, stores per-UID recovery [`Checkpoint`]s
+//! replayed after a worker-instance crash, and enforces
+//! **first-writer-wins** on terminal entries so a replay and a late
+//! original never double-publish.
 
 mod client;
 mod store;
 
 pub use client::DbClient;
-pub use store::{DbStats, EntryKind, MemDb, StoredResult};
+pub use store::{Checkpoint, DbStats, EntryKind, MemDb, StoredResult};
 
 #[cfg(test)]
 mod tests {

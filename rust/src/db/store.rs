@@ -1,6 +1,18 @@
 //! One database instance: an in-memory UID-keyed store with TTL and
 //! fetch-purge lifecycle, condvar waiters (blocking result waits without
-//! busy-polling), and request-lifecycle tombstones.
+//! busy-polling), request-lifecycle tombstones, and per-UID recovery
+//! **checkpoints** (the last completed stage's output, replayed by the
+//! worker-failure recovery sweep — see [`crate::wset`]).
+//!
+//! Terminal entries are **first-writer-wins**: while a result *or* a
+//! tombstone for a UID is resident, later writes for that UID are
+//! suppressed. This is the at-most-once publication guarantee the
+//! recovery path leans on — a late original result racing its replayed
+//! twin (or a `Failed` verdict racing a completion) can never
+//! double-publish to a reader. A duplicate arriving *after* the client
+//! consumed the entry (fetch purges) is inert — nothing reads that UID
+//! again — and is reclaimed by the TTL sweep, exactly like the residual
+//! copies on sibling replicas.
 
 use crate::util::{Clock, Uid};
 use std::collections::HashMap;
@@ -10,8 +22,8 @@ use std::time::Duration;
 /// What a stored entry represents. Besides real results the workflow
 /// data plane publishes **tombstones**: terminal markers written instead
 /// of a result when in-flight work was dropped (deadline passed,
-/// request cancelled), so every result reader observes the same terminal
-/// state the control plane decided.
+/// request cancelled, recovery exhausted), so every result reader
+/// observes the same terminal state the control plane decided.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum EntryKind {
     /// A real generation result.
@@ -20,6 +32,26 @@ pub enum EntryKind {
     DeadlineExceeded,
     /// The request was cancelled in flight.
     Cancelled,
+    /// The request was lost to an instance failure and its recovery
+    /// retries are exhausted (or no checkpoint / no capacity remained
+    /// to replay it).
+    Failed,
+}
+
+/// A per-UID recovery checkpoint: the encoded [`WorkflowMessage`] as it
+/// entered `stage` — exactly what a replay re-sends to that stage's
+/// surviving (or freshly promoted) instances. The bytes are shared
+/// (`Arc`) so replicating a checkpoint costs a refcount, not a copy.
+///
+/// [`WorkflowMessage`]: crate::transport::WorkflowMessage
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    /// Stage the message was about to enter when checkpointed.
+    pub stage: u32,
+    /// Encoded message bytes.
+    pub data: Arc<[u8]>,
+    /// Store time (instance clock, ns).
+    pub stored_at_ns: u64,
 }
 
 /// A stored generation result (or tombstone).
@@ -40,6 +72,10 @@ pub struct DbStats {
     pub misses: u64,
     pub purged_on_fetch: u64,
     pub expired: u64,
+    /// Writes suppressed by first-writer-wins (late duplicates).
+    pub dup_suppressed: u64,
+    /// Checkpoint writes accepted.
+    pub checkpoints: u64,
     /// Bytes currently resident.
     pub resident_bytes: u64,
 }
@@ -57,6 +93,9 @@ pub struct MemDb {
 #[derive(Default)]
 struct Inner {
     map: HashMap<Uid, StoredResult>,
+    /// Recovery checkpoints, kept separate from terminal entries so
+    /// result counts / reader semantics are unchanged by checkpointing.
+    ckpts: HashMap<Uid, Checkpoint>,
     stats: DbStats,
 }
 
@@ -71,12 +110,20 @@ impl MemDb {
         }
     }
 
-    /// Store a result (primary write path from ResultDeliver).
-    pub fn put(&self, uid: Uid, data: Vec<u8>) {
+    /// Store a result (primary write path from ResultDeliver). First
+    /// terminal write wins: if `uid` already holds a result **or** a
+    /// tombstone, the write is suppressed and `false` is returned — a
+    /// late original result and its recovery replay can never
+    /// double-publish. A winning write retires the UID's checkpoint.
+    pub fn put(&self, uid: Uid, data: Vec<u8>) -> bool {
         let mut g = self.inner.lock().unwrap();
+        if g.map.contains_key(&uid) {
+            g.stats.dup_suppressed += 1;
+            return false;
+        }
         g.stats.puts += 1;
         g.stats.resident_bytes += data.len() as u64;
-        let prev = g.map.insert(
+        g.map.insert(
             uid,
             StoredResult {
                 kind: EntryKind::Result,
@@ -84,20 +131,21 @@ impl MemDb {
                 stored_at_ns: self.clock.now_ns(),
             },
         );
-        if let Some(p) = prev {
-            g.stats.resident_bytes -= p.data.len() as u64;
-        }
+        g.ckpts.remove(&uid);
         drop(g);
         self.signal.notify_all();
+        true
     }
 
-    /// Publish a terminal tombstone (deadline/cancellation) for `uid`
-    /// instead of a result. A tombstone never overwrites a real result
-    /// that already arrived (first terminal write wins).
+    /// Publish a terminal tombstone (deadline / cancellation / recovery
+    /// exhausted) for `uid` instead of a result. Same first-writer-wins
+    /// rule as [`MemDb::put`]: an existing result *or* tombstone is
+    /// never overwritten.
     pub fn put_tombstone(&self, uid: Uid, kind: EntryKind) {
         debug_assert!(kind != EntryKind::Result, "use put() for results");
         let mut g = self.inner.lock().unwrap();
-        if matches!(g.map.get(&uid), Some(r) if r.kind == EntryKind::Result) {
+        if g.map.contains_key(&uid) {
+            g.stats.dup_suppressed += 1;
             return;
         }
         g.stats.tombstones += 1;
@@ -105,19 +153,70 @@ impl MemDb {
             uid,
             StoredResult { kind, data: Vec::new(), stored_at_ns: self.clock.now_ns() },
         );
+        g.ckpts.remove(&uid);
         drop(g);
         self.signal.notify_all();
+    }
+
+    /// Record the recovery checkpoint for `uid`: the encoded message as
+    /// it entered `stage`. Stage progress is monotone (a late
+    /// lower-stage write cannot rewind a newer checkpoint) and a UID
+    /// that already reached a terminal entry accepts no further
+    /// checkpoints.
+    pub fn put_checkpoint(&self, uid: Uid, stage: u32, data: Arc<[u8]>) {
+        let mut g = self.inner.lock().unwrap();
+        if g.map.contains_key(&uid) {
+            return;
+        }
+        if matches!(g.ckpts.get(&uid), Some(c) if c.stage >= stage) {
+            return;
+        }
+        g.stats.checkpoints += 1;
+        g.ckpts.insert(
+            uid,
+            Checkpoint { stage, data, stored_at_ns: self.clock.now_ns() },
+        );
+    }
+
+    /// Peek the live checkpoint for `uid` (recovery read path; the
+    /// checkpoint stays — a second failure may need it again). Expired
+    /// checkpoints read as a miss.
+    pub fn checkpoint(&self, uid: Uid) -> Option<Checkpoint> {
+        let now = self.clock.now_ns();
+        let g = self.inner.lock().unwrap();
+        g.ckpts
+            .get(&uid)
+            .filter(|c| now.saturating_sub(c.stored_at_ns) <= self.ttl_ns)
+            .cloned()
+    }
+
+    /// Drop the checkpoint for `uid` (e.g. the request was rejected
+    /// after its admission checkpoint was written).
+    pub fn remove_checkpoint(&self, uid: Uid) {
+        self.inner.lock().unwrap().ckpts.remove(&uid);
+    }
+
+    /// Live checkpoint count.
+    pub fn checkpoint_count(&self) -> usize {
+        self.inner.lock().unwrap().ckpts.len()
     }
 
     /// Store a replicated copy (keeps the origin's timestamp semantics
     /// simple: replicas restart the TTL, which only lengthens
     /// availability — acceptable per the paper's weak-consistency model).
+    /// Honors the same first-writer-wins rule as [`MemDb::put`]: a stale
+    /// replicated copy arriving after this replica already holds a
+    /// terminal entry (e.g. a `Failed` tombstone) must not resurrect the
+    /// request.
     pub fn put_replica(&self, uid: Uid, result: StoredResult) {
         let mut g = self.inner.lock().unwrap();
-        g.stats.resident_bytes += result.data.len() as u64;
-        if let Some(p) = g.map.insert(uid, result) {
-            g.stats.resident_bytes -= p.data.len() as u64;
+        if g.map.contains_key(&uid) {
+            g.stats.dup_suppressed += 1;
+            return;
         }
+        g.stats.resident_bytes += result.data.len() as u64;
+        g.map.insert(uid, result);
+        g.ckpts.remove(&uid);
         drop(g);
         self.signal.notify_all();
     }
@@ -148,6 +247,7 @@ impl MemDb {
         match kind {
             Some(k) if want(k) => {
                 let r = g.map.remove(&uid).expect("present: just peeked");
+                g.ckpts.remove(&uid);
                 g.stats.resident_bytes -= r.data.len() as u64;
                 if now.saturating_sub(r.stored_at_ns) <= self.ttl_ns {
                     g.stats.hits += 1;
@@ -202,6 +302,10 @@ impl MemDb {
         let purged = before - g.map.len();
         g.stats.expired += purged as u64;
         g.stats.resident_bytes -= freed;
+        // Checkpoints age out on the same TTL (a request this old has
+        // long since been swept from the tracker — nothing will replay).
+        g.ckpts
+            .retain(|_, c| now.saturating_sub(c.stored_at_ns) <= ttl);
         purged
     }
 
@@ -293,12 +397,72 @@ mod tests {
     }
 
     #[test]
-    fn overwrite_accounts_bytes() {
+    fn duplicate_put_first_writer_wins() {
         let (_c, db) = setup(1000);
         let u = uid(4);
-        db.put(u, vec![0; 100]);
-        db.put(u, vec![0; 10]);
-        assert_eq!(db.stats().resident_bytes, 10);
+        assert!(db.put(u, vec![1; 100]));
+        // A replayed twin's duplicate result is suppressed entirely.
+        assert!(!db.put(u, vec![2; 10]));
+        assert_eq!(db.stats().resident_bytes, 100);
+        assert_eq!(db.stats().dup_suppressed, 1);
+        assert_eq!(db.fetch(u), Some(vec![1; 100]));
+    }
+
+    #[test]
+    fn result_never_overwrites_tombstone() {
+        // A Failed verdict already published; the late original result
+        // must not resurrect the request (exactly one terminal entry).
+        let (_c, db) = setup(1000);
+        let u = uid(40);
+        db.put_tombstone(u, EntryKind::Failed);
+        assert!(!db.put(u, vec![9]));
+        db.put_tombstone(u, EntryKind::Cancelled); // also suppressed
+        assert_eq!(db.fetch_entry(u), Some((EntryKind::Failed, vec![])));
+        assert_eq!(db.fetch_entry(u), None, "consumed exactly once");
+    }
+
+    #[test]
+    fn checkpoint_lifecycle() {
+        let (_c, db) = setup(1000);
+        let u = uid(41);
+        let bytes: Arc<[u8]> = vec![1, 2, 3].into();
+        db.put_checkpoint(u, 1, bytes.clone());
+        // Monotone: a late stage-0 write cannot rewind.
+        db.put_checkpoint(u, 0, vec![9].into());
+        let c = db.checkpoint(u).unwrap();
+        assert_eq!((c.stage, &c.data[..]), (1, &[1u8, 2, 3][..]));
+        // Peek does not consume (a second failure may replay again).
+        assert!(db.checkpoint(u).is_some());
+        assert_eq!(db.checkpoint_count(), 1);
+        // A newer stage advances it; a terminal write retires it.
+        db.put_checkpoint(u, 2, vec![4].into());
+        assert_eq!(db.checkpoint(u).unwrap().stage, 2);
+        db.put(u, vec![7]);
+        assert_eq!(db.checkpoint_count(), 0, "terminal entry retires the checkpoint");
+        db.put_checkpoint(u, 3, bytes); // post-terminal writes are ignored
+        assert_eq!(db.checkpoint_count(), 0);
+    }
+
+    #[test]
+    fn checkpoints_expire_with_ttl() {
+        let (c, db) = setup(100);
+        db.put_checkpoint(uid(42), 1, vec![1].into());
+        c.advance(101);
+        assert!(db.checkpoint(uid(42)).is_none(), "expired checkpoint reads as miss");
+        db.purge_expired();
+        assert_eq!(db.checkpoint_count(), 0);
+    }
+
+    #[test]
+    fn fetch_retires_checkpoint() {
+        let (_c, db) = setup(1000);
+        let u = uid(43);
+        db.put_checkpoint(u, 1, vec![1].into());
+        // Tombstone retires it; consuming the tombstone keeps it gone.
+        db.put_tombstone(u, EntryKind::DeadlineExceeded);
+        assert_eq!(db.checkpoint_count(), 0);
+        assert!(db.fetch_entry(u).is_some());
+        assert_eq!(db.checkpoint_count(), 0);
     }
 
     #[test]

@@ -7,7 +7,8 @@
 
 use anyhow::{bail, Context, Result};
 use onepiece::client::{
-    Gateway, Priority, RequestHandle, RequestStatus, SubmitOptions, WaitOutcome,
+    Gateway, Priority, RequestHandle, RequestStatus, RetryPolicy, SubmitOptions,
+    WaitOutcome,
 };
 use onepiece::config::{ClusterConfig, ExecModel};
 use onepiece::federation::{FederationConfig, FederationRouter};
@@ -31,12 +32,17 @@ USAGE:
   onepiece serve [--requests N] [--steps S] [--artifacts DIR] [--sim]
       Run one Workflow Set end-to-end (PJRT stage executables unless
       --sim) and report latency/throughput.
-  onepiece federate [--sets N] [--rate R] [--duration S] --sim
+  onepiece federate [--sets N] [--rate R] [--duration S] [--kill-every S] --sim
       Run N Workflow Sets behind the global load-aware FederationRouter
       under bursty (MMPP) load with an Interactive/Standard/Batch SLO
       mix; report per-set throughput, spill count, reject rate,
       cross-set donations, per-priority admission, and
-      cancelled/deadline-missed lifecycle counts.
+      cancelled/deadline-missed lifecycle counts. --kill-every S turns
+      on chaos mode: each set's housekeeper kills one assigned instance
+      every S seconds; the failure detector evicts it, promotes a
+      replacement, and replays stranded requests from checkpoints
+      (instances_failed / requests_recovered / requests_failed are
+      reported).
   onepiece plan [--entrance N]
       Print the Theorem-1 instance plan for the i2v pipeline.
   onepiece trace (--fig5 | --fig6)
@@ -174,6 +180,7 @@ fn federate(flags: &HashMap<String, String>) -> Result<()> {
     let n_sets: usize = flags.get("sets").map_or(Ok(3), |s| s.parse())?;
     let rate: f64 = flags.get("rate").map_or(Ok(100.0), |s| s.parse())?;
     let duration_s: f64 = flags.get("duration").map_or(Ok(5.0), |s| s.parse())?;
+    let kill_every_s: Option<f64> = flags.get("kill-every").map(|s| s.parse()).transpose()?;
     if !flags.contains_key("sim") {
         bail!(
             "`onepiece federate` requires --sim for now: PJRT-backed federation \
@@ -200,6 +207,17 @@ fn federate(flags: &HashMap<String, String>) -> Result<()> {
         // admission reserve (10% of each set's budget).
         cfg.proxy.interactive_reserve = 0.1;
         cfg.idle_pool = 2;
+        if let Some(secs) = kill_every_s {
+            if secs <= 0.0 {
+                bail!("--kill-every must be > 0 seconds");
+            }
+            // Chaos mode: the housekeeper kills an assigned instance on
+            // this period; the failure detector (400 ms of heartbeat
+            // silence) evicts and repairs it.
+            cfg.chaos.kill_every_ms = (secs * 1000.0) as u64;
+            cfg.chaos.seed = 42;
+            cfg.nm.instance_timeout_ms = 400;
+        }
         cfg
     };
     let sets: Vec<WorkflowSet> = (0..n_sets)
@@ -255,11 +273,21 @@ fn federate(flags: &HashMap<String, String>) -> Result<()> {
 
     // SLO mix: one third of the traffic per priority class; Interactive
     // carries a 2 s end-to-end deadline (missed deadlines surface in the
-    // per-set `deadline_missed` counters below).
+    // per-set `deadline_missed` counters below). Under chaos, every
+    // class carries a 3-attempt retry policy — that budget is what the
+    // recovery sweep spends replaying requests stranded on killed
+    // instances.
+    let retry = if kill_every_s.is_some() {
+        RetryPolicy::attempts(3, Duration::ZERO)
+    } else {
+        RetryPolicy::default()
+    };
     let slo_mix = [
-        SubmitOptions::interactive().with_deadline(Duration::from_secs(2)),
-        SubmitOptions::default(),
-        SubmitOptions::batch(),
+        SubmitOptions::interactive()
+            .with_deadline(Duration::from_secs(2))
+            .with_retry(retry),
+        SubmitOptions::default().with_retry(retry),
+        SubmitOptions::batch().with_retry(retry),
     ];
     let payload = Payload::Bytes(vec![7u8; 64]);
     let t0 = Instant::now();
@@ -359,6 +387,17 @@ fn federate(flags: &HashMap<String, String>) -> Result<()> {
         set_get("requests_cancelled"),
         set_get("deadline_missed"),
     );
+    if kill_every_s.is_some() {
+        println!(
+            "chaos: kills {} | instances_failed {} | instances_replaced {} | \
+             requests_recovered {} | requests_failed {}",
+            set_get("chaos_kills"),
+            set_get("instances_failed"),
+            set_get("instances_replaced"),
+            set_get("requests_recovered"),
+            set_get("requests_failed"),
+        );
+    }
     println!(
         "latency: completed {}/{} | p50 {:.1} ms | p99 {:.1} ms | wall {wall:.1}s",
         latencies_ms.len(),

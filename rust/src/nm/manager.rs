@@ -17,10 +17,10 @@
 use crate::config::{AppConfig, SchedMode};
 use crate::rdma::RegionId;
 use crate::transport::AppId;
-use crate::util::NodeId;
+use crate::util::{Clock, NodeId, SystemClock};
 use crate::workflow::{Assignment, ControlPlane, NextHop, StageRole};
 use std::collections::{BTreeMap, HashMap};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 /// (app, stage index) — the unit of scaling.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -39,6 +39,25 @@ pub struct InstanceInfo {
     pub role: Option<StageKey>,
     /// Last reported utilization in [0, 1].
     pub util: f64,
+    /// Liveness: when the instance last reported utilization (the
+    /// report doubles as a heartbeat — no extra control message). The
+    /// failure detector declares the instance dead once this is older
+    /// than `nm.instance_timeout_ms`.
+    pub last_seen_ns: u64,
+}
+
+/// One instance the failure detector declared dead and evicted
+/// ([`NodeManager::detect_failures`]): what the recovery sweep needs to
+/// repair routing and replay the requests stranded on it.
+#[derive(Debug, Clone)]
+pub struct FailedInstance {
+    pub node: NodeId,
+    /// The stage it was serving (None = died in the idle pool).
+    pub role: Option<StageKey>,
+    /// Its inbox ring — in-flight requests last sent here are stranded.
+    pub region: Option<RegionId>,
+    /// Last heartbeat (detector clock, ns).
+    pub last_seen_ns: u64,
 }
 
 /// A rebalancing decision (for logging / the Fig-10 demo).
@@ -65,6 +84,7 @@ struct State {
 /// The central NodeManager (primary replica). Cheap handle: wrap in Arc.
 pub struct NodeManager {
     state: Mutex<State>,
+    clock: Arc<dyn Clock>,
     /// Scale-up utilization threshold (paper default 0.85).
     pub util_threshold: f64,
     /// Donor stages must be below this to give up an instance.
@@ -73,6 +93,16 @@ pub struct NodeManager {
 
 impl NodeManager {
     pub fn new(apps: Vec<AppConfig>, util_threshold: f64) -> Self {
+        Self::with_clock(apps, util_threshold, Arc::new(SystemClock))
+    }
+
+    /// Construct with an explicit clock (failure-detector tests drive a
+    /// [`crate::util::ManualClock`]).
+    pub fn with_clock(
+        apps: Vec<AppConfig>,
+        util_threshold: f64,
+        clock: Arc<dyn Clock>,
+    ) -> Self {
         Self {
             state: Mutex::new(State {
                 apps: apps.into_iter().map(|a| (AppId(a.id), a)).collect(),
@@ -81,6 +111,7 @@ impl NodeManager {
                 aliases: HashMap::new(),
                 next_version: 1,
             }),
+            clock,
             util_threshold,
             donor_max_util: 0.5,
         }
@@ -89,10 +120,17 @@ impl NodeManager {
     /// Register a workflow instance (TaskManager init, §4.2). Starts in
     /// the idle pool until assigned.
     pub fn register_instance(&self, node: NodeId, region: RegionId) {
+        let now = self.clock.now_ns();
         let mut s = self.state.lock().unwrap();
         s.instances.insert(
             node,
-            InstanceInfo { node, region: Some(region), role: None, util: 0.0 },
+            InstanceInfo {
+                node,
+                region: Some(region),
+                role: None,
+                util: 0.0,
+                last_seen_ns: now,
+            },
         );
         let v = s.next_version;
         s.next_version += 1;
@@ -321,6 +359,97 @@ impl NodeManager {
         })
     }
 
+    /// The failure detector: declare dead — and evict — every instance
+    /// whose last heartbeat is older than `timeout_ns`. Eviction mirrors
+    /// [`NodeManager::deregister_instance`]: the node leaves the
+    /// registry and every upstream stage's assignment version is bumped,
+    /// so `ResultDeliver`s drop the dead `NextHop` (and prune its
+    /// sender) on their next control poll. Returns the evicted
+    /// instances for the recovery sweep (repair + replay).
+    pub fn detect_failures(&self, timeout_ns: u64) -> Vec<FailedInstance> {
+        let now = self.clock.now_ns();
+        let mut s = self.state.lock().unwrap();
+        let dead: Vec<NodeId> = s
+            .instances
+            .values()
+            .filter(|i| now.saturating_sub(i.last_seen_ns) > timeout_ns)
+            .map(|i| i.node)
+            .collect();
+        let mut failed = Vec::with_capacity(dead.len());
+        for node in dead {
+            let Some(info) = s.instances.remove(&node) else { continue };
+            s.versions.remove(&node);
+            if let Some(role) = info.role {
+                Self::bump_upstream_of(&mut s, role);
+            }
+            failed.push(FailedInstance {
+                node: info.node,
+                role: info.role,
+                region: info.region,
+                last_seen_ns: info.last_seen_ns,
+            });
+        }
+        failed
+    }
+
+    /// Repair a stage that lost an instance: promote a replacement via
+    /// the §8.2 machinery — idle pool first, then the least-utilized
+    /// donor stage that can spare one (same donor rule as
+    /// [`NodeManager::rebalance`], but unconditional: the stage lost
+    /// capacity, no utilization threshold gates the refill). Returns the
+    /// action taken, if any donor existed.
+    pub fn promote_replacement(&self, to: StageKey) -> Option<RebalanceAction> {
+        let (donor, from, trigger_util) = {
+            let s = self.state.lock().unwrap();
+            let idle = s
+                .instances
+                .values()
+                .find(|i| i.role.is_none())
+                .map(|i| i.node);
+            let donor = idle.or_else(|| {
+                let mut sums: BTreeMap<StageKey, (f64, usize)> = BTreeMap::new();
+                for i in s.instances.values() {
+                    if let Some(r) = i.role {
+                        let e = sums.entry(r).or_insert((0.0, 0));
+                        e.0 += i.util;
+                        e.1 += 1;
+                    }
+                }
+                let mut candidates: Vec<(StageKey, f64)> = sums
+                    .iter()
+                    .filter(|(k, (_, n))| **k != to && *n > 1)
+                    .map(|(k, (sum, n))| (*k, sum / *n as f64))
+                    .filter(|(_, avg)| *avg < self.donor_max_util)
+                    .collect();
+                candidates.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+                candidates.first().and_then(|(k, _)| {
+                    s.instances
+                        .values()
+                        .filter(|i| i.role == Some(*k))
+                        .min_by(|a, b| a.util.partial_cmp(&b.util).unwrap())
+                        .map(|i| i.node)
+                })
+            })?;
+            let from = s.instances.get(&donor).and_then(|i| i.role);
+            // Not utilization-triggered: record the destination's
+            // current average (often 0.0 — everyone there just died).
+            let utils: Vec<f64> = s
+                .instances
+                .values()
+                .filter(|i| i.role == Some(Self::physical(&s, to)))
+                .map(|i| i.util)
+                .collect();
+            let trigger = if utils.is_empty() {
+                0.0
+            } else {
+                utils.iter().sum::<f64>() / utils.len() as f64
+            };
+            (donor, from, trigger)
+        };
+        self.assign(donor, Some(to));
+        Some(RebalanceAction { node: donor, from, to, trigger_util })
+    }
+
     /// Build the full per-app route set for an instance serving `phys`.
     fn routes_for(s: &State, phys: StageKey) -> Vec<(AppId, Vec<NextHop>)> {
         // The physical stage serves its own app plus every alias mapping
@@ -395,9 +524,13 @@ impl ControlPlane for NodeManager {
     }
 
     fn report_utilization(&self, node: NodeId, util: f64) {
+        let now = self.clock.now_ns();
         let mut s = self.state.lock().unwrap();
         if let Some(i) = s.instances.get_mut(&node) {
             i.util = util;
+            // The report doubles as a heartbeat: liveness piggybacks on
+            // the §8.2 utilization channel, no extra message.
+            i.last_seen_ns = now;
         }
     }
 }
@@ -560,6 +693,89 @@ mod tests {
         // The reclaimed instance is schedulable like any other.
         nm.assign(NodeId(7), Some(key(2)));
         assert_eq!(nm.stage_instances(key(2)), vec![NodeId(7)]);
+    }
+
+    #[test]
+    fn failure_detector_evicts_stale_instance_and_repair_promotes_idle() {
+        use crate::util::ManualClock;
+        let clock = ManualClock::new();
+        clock.set(1);
+        let nm = NodeManager::with_clock(
+            ClusterConfig::i2v_default().apps,
+            0.85,
+            Arc::new(clock.clone()),
+        );
+        nm.register_instance(NodeId(1), RegionId(10));
+        nm.register_instance(NodeId(2), RegionId(20));
+        nm.register_instance(NodeId(3), RegionId(30)); // idle pool
+        nm.assign(NodeId(1), Some(key(1)));
+        nm.assign(NodeId(2), Some(key(0))); // upstream of stage 1
+        let v_before = nm.get_assignment(NodeId(2)).version;
+
+        clock.advance(2_000_000_000);
+        // Nodes 2 and 3 heartbeat; node 1 has gone silent.
+        nm.report_utilization(NodeId(2), 0.1);
+        nm.report_utilization(NodeId(3), 0.0);
+        let failed = nm.detect_failures(1_000_000_000);
+        assert_eq!(failed.len(), 1);
+        assert_eq!(failed[0].node, NodeId(1));
+        assert_eq!(failed[0].role, Some(key(1)));
+        assert_eq!(failed[0].region, Some(RegionId(10)));
+        assert!(nm.stage_instances(key(1)).is_empty());
+        // Upstream observed the routing change (dead hop dropped).
+        assert!(nm.get_assignment(NodeId(2)).version > v_before);
+        assert!(nm.get_assignment(NodeId(2)).role.unwrap().routes[0].1.is_empty());
+
+        // Repair: the idle node takes over the orphaned stage and the
+        // upstream route points at its ring.
+        let act = nm.promote_replacement(key(1)).unwrap();
+        assert_eq!((act.node, act.from, act.to), (NodeId(3), None, key(1)));
+        assert_eq!(nm.stage_instances(key(1)), vec![NodeId(3)]);
+        let role = nm.get_assignment(NodeId(2)).role.unwrap();
+        assert_eq!(role.routes[0].1, vec![NextHop::Instance(RegionId(30))]);
+    }
+
+    #[test]
+    fn flapping_instance_heartbeat_resumes_before_timeout_is_kept() {
+        use crate::util::ManualClock;
+        let clock = ManualClock::new();
+        clock.set(1);
+        let nm = NodeManager::with_clock(
+            ClusterConfig::i2v_default().apps,
+            0.85,
+            Arc::new(clock.clone()),
+        );
+        nm.register_instance(NodeId(1), RegionId(10));
+        nm.assign(NodeId(1), Some(key(2)));
+        // Silence for *just under* the timeout, then the heartbeat
+        // resumes: the detector must not evict.
+        clock.advance(999_999_999);
+        nm.report_utilization(NodeId(1), 0.4);
+        clock.advance(500_000_000);
+        assert!(nm.detect_failures(1_000_000_000).is_empty(), "flapper survives");
+        assert_eq!(nm.stage_instances(key(2)), vec![NodeId(1)]);
+        // True silence past the timeout is detected.
+        clock.advance(600_000_000);
+        assert_eq!(nm.detect_failures(1_000_000_000).len(), 1);
+    }
+
+    #[test]
+    fn promote_replacement_steals_from_donor_when_pool_is_empty() {
+        let nm = nm();
+        for (n, stage) in [(1u32, 3u32), (2, 3)] {
+            nm.register_instance(NodeId(n), RegionId(n as u64 * 10));
+            nm.assign(NodeId(n), Some(key(stage)));
+        }
+        nm.report_utilization(NodeId(1), 0.10);
+        nm.report_utilization(NodeId(2), 0.20);
+        // Stage 2 lost its only instance; no idle pool — the cold stage
+        // 3 (two instances) donates its least-utilized one.
+        let act = nm.promote_replacement(key(2)).unwrap();
+        assert_eq!((act.node, act.from), (NodeId(1), Some(key(3))));
+        assert_eq!(nm.stage_instances(key(2)), vec![NodeId(1)]);
+        assert_eq!(nm.stage_instances(key(3)), vec![NodeId(2)]);
+        // Nothing left to give: a second repair finds no donor.
+        assert!(nm.promote_replacement(key(1)).is_none());
     }
 
     #[test]

@@ -9,10 +9,17 @@
 //!   [`NodeManager::share_stage`];
 //! - cross-set donate/reclaim for the federation layer —
 //!   [`NodeManager::release_idle`] / [`NodeManager::deregister_instance`]
-//!   (see [`crate::federation`]).
+//!   (see [`crate::federation`]);
+//! - worker-instance failure detection on heartbeat-piggybacked
+//!   utilization reports, with route repair and replacement promotion —
+//!   [`NodeManager::detect_failures`] /
+//!   [`NodeManager::promote_replacement`] (the recovery sweep in
+//!   [`crate::wset`] drives both).
 
 mod election;
 mod manager;
 
 pub use election::{NmCluster, ReplicaStatus};
-pub use manager::{InstanceInfo, NodeManager, RebalanceAction, StageKey};
+pub use manager::{
+    FailedInstance, InstanceInfo, NodeManager, RebalanceAction, StageKey,
+};

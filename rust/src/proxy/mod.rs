@@ -67,6 +67,10 @@ impl AdmissionSnapshot {
     }
 }
 
+/// One app's entrance producers — `(region, sender)` pairs plus the
+/// round-robin cursor.
+type AppSenders = (Vec<(crate::rdma::RegionId, RdmaSender)>, usize);
+
 /// A proxy bound to one Workflow Set.
 pub struct Proxy {
     node: NodeId,
@@ -75,13 +79,17 @@ pub struct Proxy {
     monitor: RequestMonitor,
     db: Arc<DbClient>,
     tracker: Arc<RequestTracker>,
-    /// Entrance-stage senders per app, round-robin.
-    senders: Mutex<HashMap<AppId, (Vec<RdmaSender>, usize)>>,
+    /// Entrance-stage senders per app (paired with their ring region so
+    /// forwards can record the request's location), round-robin.
+    senders: Mutex<HashMap<AppId, AppSenders>>,
     /// Per-priority lifetime counters (indexed by [`Priority::index`]),
     /// shared into the set's metrics registry as
     /// `accepted.<priority>` / `rejected.<priority>`.
     accepted: [Arc<Counter>; 3],
     rejected: [Arc<Counter>; 3],
+    /// Write the stage-0 admission checkpoint (on only when the set's
+    /// failure detector is enabled and can replay it).
+    checkpointing: bool,
 }
 
 impl Proxy {
@@ -95,6 +103,7 @@ impl Proxy {
         settings: &ProxySettings,
         tracker: Arc<RequestTracker>,
         metrics: Registry,
+        checkpointing: bool,
     ) -> Self {
         let counters = |kind: &str| {
             Priority::ALL
@@ -115,6 +124,7 @@ impl Proxy {
             senders: Mutex::new(HashMap::new()),
             accepted: counters("accepted"),
             rejected: counters("rejected"),
+            checkpointing,
         }
     }
 
@@ -154,7 +164,8 @@ impl Proxy {
             return Err((SubmitError::Overloaded { retry_after }, payload));
         }
         let uid = Uid::fresh(self.node);
-        self.tracker.register(uid, opts.priority, opts.deadline);
+        // Replay budget for crash recovery comes from the retry policy.
+        self.tracker.register_with(uid, opts);
         let msg = WorkflowMessage {
             header: MessageHeader {
                 uid,
@@ -165,35 +176,65 @@ impl Proxy {
             },
             payload,
         };
-        if !self.forward(app, &msg) {
+        // Admission checkpoint (stage 0, the original message): if the
+        // entrance instance dies before completing, the recovery sweep
+        // replays the request from here. Written before the forward so a
+        // crash immediately after admission is still recoverable; the
+        // forward reuses the same encoding (no second pass).
+        let encoded: Option<std::sync::Arc<[u8]>> = if self.checkpointing {
+            let ck: std::sync::Arc<[u8]> = msg.encode().into();
+            self.db.put_checkpoint(uid, 0, ck.clone());
+            Some(ck)
+        } else {
+            None
+        };
+        if !self.forward(app, &msg, encoded.as_deref()) {
             // No entrance instances (or ring full): hand the payload back
             // so the client retries elsewhere rather than losing the
             // request silently.
             self.rejected[opts.priority.index()].inc();
             self.tracker.finish(uid);
+            if self.checkpointing {
+                self.db.remove_checkpoint(uid);
+            }
             return Err((SubmitError::NoCapacity, msg.payload));
         }
         self.accepted[opts.priority.index()].inc();
         Ok(uid)
     }
 
-    fn forward(&self, app: AppId, msg: &WorkflowMessage) -> bool {
+    /// Forward to the entrance stage, round-robin. `encoded` carries the
+    /// admission checkpoint's encoding when checkpointing is on, so the
+    /// message is serialized exactly once either way.
+    fn forward(&self, app: AppId, msg: &WorkflowMessage, encoded: Option<&[u8]>) -> bool {
         let mut senders = self.senders.lock().unwrap();
         let entry = senders.entry(app).or_insert_with(|| (Vec::new(), 0));
-        // Refresh the sender set if the NM's entrance set changed size.
+        // Refresh the sender set if the NM's entrance set changed.
         let regions = self.nm.stage_regions(app, 0);
         if regions.is_empty() {
             return false;
         }
-        if entry.0.len() != regions.len() {
+        if entry.0.len() != regions.len()
+            || entry.0.iter().map(|(r, _)| *r).ne(regions.iter().copied())
+        {
             entry.0 = regions
                 .iter()
-                .map(|&rid| RdmaEndpoint::sender_for(&self.fabric, rid))
+                .map(|&rid| (rid, RdmaEndpoint::sender_for(&self.fabric, rid)))
                 .collect();
         }
         let idx = entry.1 % entry.0.len();
         entry.1 = entry.1.wrapping_add(1);
-        entry.0[idx].send(msg)
+        let (rid, tx) = &mut entry.0[idx];
+        let sent = match encoded {
+            Some(bytes) => tx.send_encoded(bytes),
+            None => tx.send(msg),
+        };
+        if sent {
+            // Record where the request entered the pipeline — the
+            // recovery sweep finds stranded requests by location.
+            self.tracker.note_location(msg.header.uid, *rid);
+        }
+        sent
     }
 
     /// Export the fast-reject state for the federation router.
@@ -267,6 +308,7 @@ mod tests {
             &s,
             tracker,
             Registry::new(),
+            true,
         )
     }
 

@@ -45,6 +45,15 @@ pub struct FedSimConfig {
     /// Move capacity between sets on a timer (cross-set donation).
     pub elastic: bool,
     pub rebalance_period_s: f64,
+    /// Worker-failure model: mean time between instance crashes across
+    /// the fleet (0 = no crashes). Each crash strands the victim
+    /// server's in-flight/queued requests; they replay after
+    /// `detect_s` (the E13 detect → repair → replay loop).
+    pub mtbf_s: f64,
+    /// Failure-detector delay: heartbeat-silence timeout + one
+    /// housekeeper sweep, paid once per crash by every stranded
+    /// request before its replay starts.
+    pub detect_s: f64,
 }
 
 impl FedSimConfig {
@@ -61,6 +70,8 @@ impl FedSimConfig {
             policy: FedPolicy::LoadAware,
             elastic: false,
             rebalance_period_s: 5.0,
+            mtbf_s: 0.0,
+            detect_s: 0.2,
         }
     }
 }
@@ -75,6 +86,10 @@ pub struct FedSimOutcome {
     pub spilled: usize,
     /// Cross-set capacity moves (elastic mode).
     pub donations: usize,
+    /// Instance crashes injected (fault model).
+    pub crashes: usize,
+    /// Requests stranded on a crashed server and replayed.
+    pub replays: usize,
     /// Requests finishing within the simulated horizon.
     pub completed: usize,
     pub p50_latency_s: f64,
@@ -148,9 +163,9 @@ impl SimSet {
         true
     }
 
-    /// FIFO dispatch onto the earliest-free server; returns completion
-    /// time.
-    fn serve(&mut self, t: f64, service_s: f64) -> f64 {
+    /// FIFO dispatch onto the earliest-free server; returns the chosen
+    /// server index and completion time.
+    fn serve(&mut self, t: f64, service_s: f64) -> (usize, f64) {
         let (idx, earliest) = self
             .servers
             .iter()
@@ -160,8 +175,48 @@ impl SimSet {
             .unwrap();
         let end = t.max(earliest) + service_s;
         self.servers[idx] = end;
-        end
+        (idx, end)
     }
+}
+
+/// One admitted request's bookkeeping (needed so the fault model can
+/// replay requests stranded on a crashed server).
+struct Record {
+    admit: f64,
+    end: f64,
+    set: usize,
+    server: usize,
+}
+
+/// One instance crash at `tc`: everything in flight / queued on a
+/// random server replays after the detector fires, re-executing
+/// sequentially on the repaired server (the E13 loop). Nothing is lost
+/// — the stranded requests just pay detection + requeue delay. Returns
+/// how many requests were replayed.
+fn crash_once(
+    sets: &mut [SimSet],
+    records: &mut [Record],
+    rng: &mut Rng,
+    tc: f64,
+    detect_s: f64,
+    service_s: f64,
+) -> usize {
+    let i = rng.below(sets.len() as u64) as usize;
+    let j = rng.below(sets[i].servers.len() as u64) as usize;
+    let mut restart = tc + detect_s;
+    let mut affected: Vec<&mut Record> = records
+        .iter_mut()
+        .filter(|r| r.set == i && r.server == j && r.end > tc)
+        .collect();
+    affected.sort_by(|a, b| a.end.partial_cmp(&b.end).unwrap());
+    let replayed = affected.len();
+    for r in affected {
+        restart += service_s;
+        r.end = restart;
+    }
+    // The server is back (repaired) once detection + replays end.
+    sets[i].servers[j] = restart;
+    replayed
 }
 
 /// Run the federation model over one arrival trace.
@@ -181,14 +236,29 @@ pub fn simulate_federation(
     // One server's worth of admission capacity moves per donation.
     let quantum_rps = 1.0 / cfg.service_s;
 
-    let mut latencies: Vec<f64> = Vec::new();
+    let mut records: Vec<Record> = Vec::new();
     let mut rejected = 0usize;
     let mut spilled = 0usize;
     let mut donations = 0usize;
-    let mut completed = 0usize;
+    let mut crashes = 0usize;
+    let mut replays = 0usize;
     let mut next_rebalance = cfg.rebalance_period_s;
+    let mut next_crash = if cfg.mtbf_s > 0.0 { cfg.mtbf_s } else { f64::INFINITY };
 
     for &t in &arrivals {
+        // --- fault model: periodic instance crashes ---
+        while t >= next_crash {
+            crashes += 1;
+            replays += crash_once(
+                &mut sets,
+                &mut records,
+                &mut rng,
+                next_crash,
+                cfg.detect_s,
+                cfg.service_s,
+            );
+            next_crash += cfg.mtbf_s;
+        }
         // --- elastic donation timer ---
         while cfg.elastic && t >= next_rebalance {
             let loads: Vec<f64> = sets
@@ -209,6 +279,17 @@ pub fn simulate_federation(
                     && loads[cold] <= 0.5
                     && sets[cold].servers.len() > 1
                 {
+                    // Retire records bound to the popped server slot:
+                    // its identity disappears, so they must no longer be
+                    // addressable by a later crash picking the same
+                    // index (their completion times stay as scheduled).
+                    let popped = sets[cold].servers.len() - 1;
+                    for r in records
+                        .iter_mut()
+                        .filter(|r| r.set == cold && r.server == popped)
+                    {
+                        r.server = usize::MAX;
+                    }
                     sets[cold].servers.pop();
                     sets[cold].capacity_rps =
                         (sets[cold].capacity_rps - quantum_rps).max(0.0);
@@ -256,23 +337,39 @@ pub fn simulate_federation(
                 if attempt > 0 {
                     spilled += 1;
                 }
-                let end = sets[i].serve(t, cfg.service_s);
-                latencies.push(end - t);
-                if end <= cfg.duration_s {
-                    completed += 1;
-                }
+                let (server, end) = sets[i].serve(t, cfg.service_s);
+                records.push(Record { admit: t, end, set: i, server });
             }
             None => rejected += 1,
         }
     }
 
+    // Crashes scheduled after the last arrival still strand the queued
+    // backlog — the trace ends, the fleet keeps failing.
+    while cfg.mtbf_s > 0.0 && next_crash <= cfg.duration_s {
+        crashes += 1;
+        replays += crash_once(
+            &mut sets,
+            &mut records,
+            &mut rng,
+            next_crash,
+            cfg.detect_s,
+            cfg.service_s,
+        );
+        next_crash += cfg.mtbf_s;
+    }
+
+    let mut latencies: Vec<f64> = records.iter().map(|r| r.end - r.admit).collect();
     latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let completed = records.iter().filter(|r| r.end <= cfg.duration_s).count();
     FedSimOutcome {
         offered: arrivals.len(),
-        admitted: latencies.len(),
+        admitted: records.len(),
         rejected,
         spilled,
         donations,
+        crashes,
+        replays,
         completed,
         p50_latency_s: percentile(&latencies, 0.5),
         p99_latency_s: percentile(&latencies, 0.99),
@@ -353,6 +450,30 @@ mod tests {
             elastic.spilled,
             frozen.spilled
         );
+    }
+
+    #[test]
+    fn crashes_replay_without_losing_requests() {
+        // Fault model shape: crashes strand and replay requests — the
+        // tail stretches by detection + re-service, but admitted counts
+        // are identical and nothing disappears.
+        let offered = ArrivalProcess::Poisson { rate_rps: 8.0 };
+        let cfg = FedSimConfig::balanced(3, 5.0, 120.0);
+        let healthy = simulate_federation(&cfg, &offered, 21);
+        let mut faulty_cfg = cfg.clone();
+        faulty_cfg.mtbf_s = 5.0;
+        faulty_cfg.detect_s = 0.5;
+        let faulty = simulate_federation(&faulty_cfg, &offered, 21);
+        assert!(faulty.crashes > 0);
+        assert!(faulty.replays > 0, "crashes must strand in-flight work");
+        assert_eq!(faulty.admitted, healthy.admitted, "no request is lost");
+        assert!(
+            faulty.p99_latency_s >= healthy.p99_latency_s,
+            "recovery delay must show up in the tail: {} vs {}",
+            faulty.p99_latency_s,
+            healthy.p99_latency_s
+        );
+        assert_eq!(healthy.crashes + healthy.replays, 0);
     }
 
     #[test]

@@ -144,10 +144,20 @@ impl RdmaSender {
     /// or lock contention beyond the retry budget) — the no-retransmission
     /// policy of §9 pushes recovery to the application layer.
     pub fn send(&mut self, msg: &WorkflowMessage) -> bool {
-        self.scratch.clear();
-        msg.encode_into(&mut self.scratch);
+        let mut scratch = std::mem::take(&mut self.scratch);
+        scratch.clear();
+        msg.encode_into(&mut scratch);
+        let ok = self.send_encoded(&scratch);
+        self.scratch = scratch;
+        ok
+    }
+
+    /// Send pre-encoded frame bytes. Callers that already hold the
+    /// encoded message (checkpointing delivery shares one buffer between
+    /// the ring push and the DB checkpoint) avoid a second encode.
+    pub fn send_encoded(&mut self, bytes: &[u8]) -> bool {
         for _ in 0..=self.max_retries {
-            match self.producer.push(&self.scratch, None) {
+            match self.producer.push(bytes, None) {
                 Ok(_) => return true,
                 Err(PushError::Full) | Err(PushError::LostRace) => {
                     std::thread::yield_now();

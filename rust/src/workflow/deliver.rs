@@ -22,6 +22,26 @@ pub enum NextHop {
     Database,
 }
 
+/// What happened to one delivered message. `Sent` carries the chosen
+/// ring region so the caller can record the request's location with the
+/// control plane (the recovery sweep finds stranded requests by it).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Delivery {
+    /// Forwarded into an instance's ring.
+    Sent(RegionId),
+    /// Final stage: persisted to the database layer.
+    Stored,
+    /// No route / ring refused the write.
+    Dropped,
+}
+
+impl Delivery {
+    /// True unless the message was dropped.
+    pub fn ok(self) -> bool {
+        !matches!(self, Delivery::Dropped)
+    }
+}
+
 /// Result router for one instance. Routes are **per application** — a
 /// shared instance (§8.3) serves several workflows whose next stages
 /// differ, so RD keys the hop list by the message's app id.
@@ -31,6 +51,10 @@ pub struct ResultDeliver {
     senders: HashMap<RegionId, crate::transport::RdmaSender>,
     dbs: Vec<Arc<MemDb>>,
     rr: HashMap<crate::transport::AppId, usize>,
+    /// Write per-hop recovery checkpoints (off by default, like the
+    /// failure detector that replays them — disabled deployments pay
+    /// zero encode/replication overhead).
+    checkpointing: bool,
     delivered: u64,
     dropped: u64,
 }
@@ -43,13 +67,25 @@ impl ResultDeliver {
             senders: HashMap::new(),
             dbs,
             rr: HashMap::new(),
+            checkpointing: false,
             delivered: 0,
             dropped: 0,
         }
     }
 
+    /// Enable/disable per-hop recovery checkpoints (the wset wires this
+    /// to `nm.instance_timeout_ms > 0`).
+    pub fn set_checkpointing(&mut self, on: bool) {
+        self.checkpointing = on;
+    }
+
     /// Install per-app routing from a (re)assignment. Senders for
-    /// already-known regions are kept (connection reuse).
+    /// regions still referenced are kept (connection reuse); senders for
+    /// regions no route mentions any more are **pruned** — a retired or
+    /// dead instance must not keep a ring producer alive forever.
+    /// Per-app round-robin counters survive the update (an NM
+    /// reassignment must not skew load back onto each app's first hop);
+    /// counters for apps no longer routed are dropped.
     pub fn set_routes(&mut self, routes: Vec<(crate::transport::AppId, Vec<NextHop>)>) {
         for (_, hops) in &routes {
             for hop in hops {
@@ -63,7 +99,13 @@ impl ResultDeliver {
             }
         }
         self.routes = routes.into_iter().collect();
-        self.rr.clear();
+        let routes = &self.routes;
+        self.senders.retain(|rid, _| {
+            routes
+                .values()
+                .any(|hops| hops.contains(&NextHop::Instance(*rid)))
+        });
+        self.rr.retain(|app, _| routes.contains_key(app));
     }
 
     /// Hop list for an app (tests).
@@ -74,41 +116,76 @@ impl ResultDeliver {
     /// Deliver one result message. Round-robin across the app's instance
     /// hops; DB hops write to every replica ("data is automatically
     /// replicated across multiple database instances", §3.4).
-    pub fn deliver(&mut self, msg: &WorkflowMessage) -> bool {
+    ///
+    /// An instance hop doubles as a **stage-completion checkpoint**: the
+    /// forwarded message (the last completed stage's output, stamped
+    /// with the stage it is entering) is written to the database layer
+    /// so the recovery sweep can replay it if the receiving instance
+    /// dies (§ worker fault tolerance). The encode happens once; the
+    /// replicas share the buffer.
+    pub fn deliver(&mut self, msg: &WorkflowMessage) -> Delivery {
         let app = msg.header.app;
         let Some(hops) = self.routes.get(&app) else {
             self.dropped += 1;
-            return false;
+            return Delivery::Dropped;
         };
         if hops.is_empty() {
             self.dropped += 1;
-            return false;
+            return Delivery::Dropped;
         }
         let rr = self.rr.entry(app).or_insert(0);
         let hop = hops[*rr % hops.len()].clone();
         *rr = rr.wrapping_add(1);
-        let ok = match hop {
+        let outcome = match hop {
             NextHop::Instance(rid) => {
+                let ckpt = self.checkpointing && !self.dbs.is_empty();
                 let tx = self.senders.get_mut(&rid).expect("sender built in set_routes");
-                tx.send(msg)
+                if ckpt {
+                    // Encode once; the ring push and every replica's
+                    // checkpoint share the same buffer.
+                    let bytes: Arc<[u8]> = msg.encode().into();
+                    if tx.send_encoded(&bytes) {
+                        for db in &self.dbs {
+                            db.put_checkpoint(
+                                msg.header.uid,
+                                msg.header.stage.0,
+                                bytes.clone(),
+                            );
+                        }
+                        Delivery::Sent(rid)
+                    } else {
+                        Delivery::Dropped
+                    }
+                } else if tx.send(msg) {
+                    Delivery::Sent(rid)
+                } else {
+                    Delivery::Dropped
+                }
             }
             NextHop::Database => {
                 self.store(msg.header.uid, msg.encode());
-                true
+                Delivery::Stored
             }
         };
-        if ok {
+        if outcome.ok() {
             self.delivered += 1;
         } else {
             self.dropped += 1;
         }
-        ok
+        outcome
     }
 
+    /// Replicate a final result: encode once, clone for all replicas but
+    /// the last, move the buffer into the last (mirrors the gateway's
+    /// spill-clone fix — the common single-replica case never copies).
     fn store(&self, uid: Uid, bytes: Vec<u8>) {
-        for db in &self.dbs {
+        let Some((last, rest)) = self.dbs.split_last() else {
+            return;
+        };
+        for db in rest {
             db.put(uid, bytes.clone());
         }
+        last.put(uid, bytes);
     }
 
     /// Publish a terminal tombstone for a dropped request (deadline
@@ -124,6 +201,11 @@ impl ResultDeliver {
     /// (delivered, dropped) counters.
     pub fn counts(&self) -> (u64, u64) {
         (self.delivered, self.dropped)
+    }
+
+    /// Number of live ring producers (tests: sender pruning).
+    pub fn sender_count(&self) -> usize {
+        self.senders.len()
     }
 }
 
@@ -161,7 +243,7 @@ mod tests {
             ],
         )]);
         for i in 0..6 {
-            assert!(rd.deliver(&msg(i)));
+            assert!(rd.deliver(&msg(i)).ok());
         }
         let mut n1 = 0;
         while ep1.recv().is_some() {
@@ -184,7 +266,7 @@ mod tests {
         let mut rd = ResultDeliver::new(fabric, dbs.clone());
         rd.set_routes(vec![(AppId(1), vec![NextHop::Database])]);
         let m = msg(9);
-        assert!(rd.deliver(&m));
+        assert_eq!(rd.deliver(&m), Delivery::Stored);
         for db in &dbs {
             let stored = db.fetch(m.header.uid).unwrap();
             assert_eq!(WorkflowMessage::decode(&stored).unwrap(), m);
@@ -207,10 +289,86 @@ mod tests {
     }
 
     #[test]
+    fn set_routes_prunes_retired_senders() {
+        let fabric = Fabric::ideal();
+        let mut ep1 = RdmaEndpoint::new(&fabric, RingConfig::default());
+        let ep2 = RdmaEndpoint::new(&fabric, RingConfig::default());
+        let mut rd = ResultDeliver::new(fabric.clone(), vec![]);
+        rd.set_routes(vec![(
+            AppId(1),
+            vec![
+                NextHop::Instance(ep1.region_id()),
+                NextHop::Instance(ep2.region_id()),
+            ],
+        )]);
+        assert_eq!(rd.sender_count(), 2);
+        // The NM evicts ep2's instance: the reassignment no longer
+        // references its region, so its producer must be dropped.
+        rd.set_routes(vec![(AppId(1), vec![NextHop::Instance(ep1.region_id())])]);
+        assert_eq!(rd.sender_count(), 1, "dead region's producer pruned");
+        assert!(rd.deliver(&msg(0)).ok());
+        assert!(ep1.recv().is_some());
+    }
+
+    #[test]
+    fn round_robin_survives_route_updates() {
+        let fabric = Fabric::ideal();
+        let mut ep1 = RdmaEndpoint::new(&fabric, RingConfig::default());
+        let mut ep2 = RdmaEndpoint::new(&fabric, RingConfig::default());
+        let routes = || {
+            vec![(
+                AppId(1),
+                vec![
+                    NextHop::Instance(ep1.region_id()),
+                    NextHop::Instance(ep2.region_id()),
+                ],
+            )]
+        };
+        let mut rd = ResultDeliver::new(fabric.clone(), vec![]);
+        rd.set_routes(routes());
+        // One delivery lands on ep1; an NM reassignment (same hops) must
+        // not reset the counter back onto ep1.
+        assert_eq!(rd.deliver(&msg(0)), Delivery::Sent(ep1.region_id()));
+        rd.set_routes(routes());
+        assert_eq!(rd.deliver(&msg(1)), Delivery::Sent(ep2.region_id()));
+        assert!(ep1.recv().is_some());
+        assert!(ep2.recv().is_some());
+        // Counters for apps that lost all routes are dropped.
+        rd.set_routes(vec![]);
+        assert_eq!(rd.deliver(&msg(2)), Delivery::Dropped);
+    }
+
+    #[test]
+    fn instance_hop_writes_recovery_checkpoint() {
+        let fabric = Fabric::ideal();
+        let mut ep = RdmaEndpoint::new(&fabric, RingConfig::default());
+        let clock = Arc::new(ManualClock::new());
+        let dbs: Vec<Arc<MemDb>> = (0..2)
+            .map(|_| Arc::new(MemDb::new(clock.clone(), u64::MAX)))
+            .collect();
+        let mut rd = ResultDeliver::new(fabric.clone(), dbs.clone());
+        rd.set_checkpointing(true);
+        rd.set_routes(vec![(AppId(1), vec![NextHop::Instance(ep.region_id())])]);
+        let m = msg(5); // header.stage = 1: entering stage 1
+        assert!(rd.deliver(&m).ok());
+        for db in &dbs {
+            let ck = db.checkpoint(m.header.uid).expect("checkpoint on every replica");
+            assert_eq!(ck.stage, 1);
+            assert_eq!(
+                WorkflowMessage::decode(&ck.data).unwrap(),
+                m,
+                "checkpoint replays the exact forwarded message"
+            );
+            assert_eq!(db.len(), 0, "checkpoints are not terminal entries");
+        }
+        assert!(ep.recv().is_some());
+    }
+
+    #[test]
     fn no_hops_drops() {
         let fabric = Fabric::ideal();
         let mut rd = ResultDeliver::new(fabric, vec![]);
-        assert!(!rd.deliver(&msg(0)));
+        assert_eq!(rd.deliver(&msg(0)), Delivery::Dropped);
         assert_eq!(rd.counts(), (0, 1));
     }
 
@@ -230,8 +388,8 @@ mod tests {
         m1.header.app = AppId(1);
         let mut m2 = msg(2);
         m2.header.app = AppId(2);
-        assert!(rd.deliver(&m1));
-        assert!(rd.deliver(&m2));
+        assert!(rd.deliver(&m1).ok());
+        assert!(rd.deliver(&m2).ok());
         assert_eq!(ep_a.recv().unwrap().header.uid, m1.header.uid);
         assert!(db.fetch(m2.header.uid).is_some());
     }

@@ -21,7 +21,7 @@
 //! (§4.5: "partial results from all workers are aggregated into a single
 //! consolidated output before delivery").
 
-use super::{Assignment, ControlPlane, ResultDeliver, SchedQueue, StageRole};
+use super::{Assignment, ControlPlane, Delivery, ResultDeliver, SchedQueue, StageRole};
 use crate::client::{InFlightVerdict, RequestTracker};
 use crate::config::SchedMode;
 use crate::db::{EntryKind, MemDb};
@@ -47,6 +47,11 @@ pub struct InstanceConfig {
     /// Max workers this instance can spin up (threads are created up
     /// front; the assignment's `workers` count activates a subset).
     pub max_workers: usize,
+    /// Write per-hop recovery checkpoints (the wset enables this only
+    /// when `nm.instance_timeout_ms` turns the failure detector on —
+    /// without it nothing ever replays them, so the default is off,
+    /// mirroring the detector's own default).
+    pub checkpointing: bool,
 }
 
 impl Default for InstanceConfig {
@@ -57,6 +62,7 @@ impl Default for InstanceConfig {
             control_poll: Duration::from_millis(5),
             util_window: Duration::from_millis(500),
             max_workers: 4,
+            checkpointing: false,
         }
     }
 }
@@ -73,6 +79,19 @@ pub struct InstanceStats {
     pub sla_dropped: u64,
 }
 
+/// How many 1 ms park-and-requeue rounds a message may spend on a
+/// roleless instance before it is declared lost. The promotion race this
+/// protects against (a recovery replay lands before the control thread
+/// applies the new assignment) resolves within one or two control polls
+/// (~5 ms); 100 rounds is a generous bound that still terminates stray
+/// traffic to a persistently idle instance.
+const MAX_ROLELESS_REQUEUES: u32 = 100;
+
+/// Backstop bound on the parked-message counter map (entries for
+/// messages that vanished mid-park, e.g. a queue reconfigure, would
+/// otherwise accumulate).
+const MAX_PARKED_ENTRIES: usize = 4096;
+
 struct Shared {
     node: NodeId,
     queue: Arc<SchedQueue>,
@@ -82,7 +101,19 @@ struct Shared {
     deliver: Mutex<ResultDeliver>,
     tracker: Arc<RequestTracker>,
     util: UtilizationWindow,
+    /// Requeue counts for messages parked while the instance has no
+    /// role (shared across workers so the patience bound does not
+    /// multiply by worker count).
+    parked: Mutex<std::collections::HashMap<Uid, u32>>,
+    /// The set runs a recovery sweep (mirrors `checkpointing`): messages
+    /// the data plane cannot progress are handed to it for checkpoint
+    /// replay instead of being failed outright.
+    recovery_enabled: bool,
     shutdown: AtomicBool,
+    /// Crash injection (chaos testing): when set, every thread goes
+    /// dormant — no heartbeats, no ring drains, no stage work — exactly
+    /// as if the process died, but still joinable on shutdown.
+    crashed: Arc<AtomicBool>,
     processed: AtomicU64,
     errors: AtomicU64,
     sla_dropped: AtomicU64,
@@ -100,10 +131,60 @@ impl Shared {
         let kind = match verdict {
             InFlightVerdict::Cancelled => EntryKind::Cancelled,
             InFlightVerdict::DeadlineExceeded => EntryKind::DeadlineExceeded,
+            InFlightVerdict::Failed => EntryKind::Failed,
             InFlightVerdict::Proceed => return,
         };
         self.deliver.lock().unwrap().tombstone(uid, kind);
         self.sla_dropped.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Declare `uid` lost (no downstream capacity, or stranded on a
+    /// roleless instance) — a case the recovery sweep can never reach
+    /// because this instance's ring owner is alive. Tracked requests get
+    /// a terminal `Failed` tombstone; an already-cancelled or
+    /// deadline-expired request keeps its own verdict (and tombstone
+    /// kind); untracked messages keep the paper's silent-drop semantics.
+    fn fail_for(&self, uid: Uid) {
+        match self.tracker.verdict(uid) {
+            InFlightVerdict::Proceed => {
+                if self.tracker.mark_failed(uid) {
+                    self.deliver.lock().unwrap().tombstone(uid, EntryKind::Failed);
+                }
+            }
+            verdict => self.drop_for(uid, verdict),
+        }
+    }
+
+    /// A message the data plane cannot progress (role changed mid-queue
+    /// during a donor steal, persistently roleless, downstream refused):
+    /// hand the request to the recovery sweep for a checkpoint replay
+    /// when the subsystem is on — these requests can still complete —
+    /// else fail it terminally rather than strand the client.
+    fn strand_or_fail(&self, uid: Uid) {
+        if self.recovery_enabled && self.tracker.strand(uid) {
+            return; // the sweep replays it from its checkpoint
+        }
+        self.fail_for(uid);
+    }
+}
+
+/// Remote-control switch for crash injection: lets the set's chaos
+/// driver (housekeeper) kill an instance it does not own. Cloneable and
+/// cheap; killing is idempotent.
+#[derive(Clone)]
+pub struct CrashHandle {
+    crashed: Arc<AtomicBool>,
+}
+
+impl CrashHandle {
+    /// Simulate an instance crash: all threads go dormant immediately.
+    pub fn kill(&self) {
+        self.crashed.store(true, Ordering::SeqCst);
+    }
+
+    /// True once the instance was killed.
+    pub fn is_crashed(&self) -> bool {
+        self.crashed.load(Ordering::SeqCst)
     }
 }
 
@@ -130,16 +211,21 @@ impl Instance {
         let mut endpoint = RdmaEndpoint::new(fabric, cfg.ring);
         let region_id = endpoint.region_id();
         let queue = SchedQueue::new(SchedMode::Individual, cfg.max_workers);
+        let mut rd = ResultDeliver::new(fabric.clone(), dbs);
+        rd.set_checkpointing(cfg.checkpointing);
         let shared = Arc::new(Shared {
             node: cfg.node,
             queue: queue.clone(),
             role: RwLock::new(None),
             version: AtomicU64::new(u64::MAX),
             executor: RwLock::new(None),
-            deliver: Mutex::new(ResultDeliver::new(fabric.clone(), dbs)),
+            deliver: Mutex::new(rd),
             tracker,
             util: UtilizationWindow::new(clock, cfg.util_window.as_nanos() as u64),
+            parked: Mutex::new(std::collections::HashMap::new()),
+            recovery_enabled: cfg.checkpointing,
             shutdown: AtomicBool::new(false),
+            crashed: Arc::new(AtomicBool::new(false)),
             processed: AtomicU64::new(0),
             errors: AtomicU64::new(0),
             sla_dropped: AtomicU64::new(0),
@@ -154,6 +240,13 @@ impl Instance {
             let poll = cfg.control_poll;
             threads.push(std::thread::spawn(move || {
                 while !shared.shutdown.load(Ordering::SeqCst) {
+                    // A crashed instance stops heartbeating (the
+                    // utilization report doubles as liveness, §8.2) —
+                    // this is what the NM's failure detector observes.
+                    if shared.crashed.load(Ordering::SeqCst) {
+                        std::thread::sleep(poll);
+                        continue;
+                    }
                     let a: Assignment = control.get_assignment(shared.node);
                     if a.version != shared.version.load(Ordering::SeqCst) {
                         Self::apply_assignment(&shared, &pool, &a);
@@ -170,6 +263,12 @@ impl Instance {
             let shared = shared.clone();
             threads.push(std::thread::spawn(move || {
                 while !shared.shutdown.load(Ordering::SeqCst) {
+                    if shared.crashed.load(Ordering::SeqCst) {
+                        // Crashed: the ring fills and messages strand —
+                        // the recovery sweep replays them elsewhere.
+                        std::thread::sleep(Duration::from_millis(5));
+                        continue;
+                    }
                     match endpoint.recv() {
                         Some(msg) => {
                             let uid = msg.header.uid;
@@ -206,7 +305,12 @@ impl Instance {
             Some(role) => {
                 let exec = pool.get(&role.stage_name).cloned();
                 *shared.executor.write().unwrap() = exec;
-                shared.queue.reconfigure(role.mode, role.workers);
+                // A mode/shape change drains the queue; strand the
+                // displaced work for the recovery sweep (route-only
+                // updates preserve it — see SchedQueue::reconfigure).
+                for m in shared.queue.reconfigure(role.mode, role.workers) {
+                    shared.strand_or_fail(m.header.uid);
+                }
                 shared
                     .deliver
                     .lock()
@@ -216,8 +320,16 @@ impl Instance {
             }
             None => {
                 // Parked in the idle pool (§8.2): no executor, no hops.
+                // Strand pending work (one copy per request — CM
+                // broadcast copies are deduplicated) so it reaches the
+                // recovery path instead of circulating, and normalize
+                // the queue so later stray arrivals hold single copies.
                 *shared.executor.write().unwrap() = None;
                 *shared.role.write().unwrap() = None;
+                for m in shared.queue.drain_pending() {
+                    shared.strand_or_fail(m.header.uid);
+                }
+                let _ = shared.queue.reconfigure(SchedMode::Individual, 1);
             }
         }
     }
@@ -227,6 +339,10 @@ impl Instance {
             if shared.shutdown.load(Ordering::SeqCst) {
                 return;
             }
+            if shared.crashed.load(Ordering::SeqCst) {
+                std::thread::sleep(Duration::from_millis(5));
+                continue;
+            }
             let Some(msg) = shared.queue.fetch(widx, Duration::from_millis(20)) else {
                 continue;
             };
@@ -235,13 +351,77 @@ impl Instance {
                 let e = shared.executor.read().unwrap();
                 match (r.clone(), e.clone()) {
                     (Some(r), Some(e)) => (r, e),
-                    _ => continue, // reassigned to idle mid-flight: drop
+                    _ => {
+                        // No role (yet): the control thread may be
+                        // mid-apply of a promotion and recovery replays
+                        // race it — park the message back instead of
+                        // dropping it, up to a patience bound. In CM the
+                        // queue holds one broadcast copy per worker and
+                        // a re-dispatch would re-broadcast: only rank 0
+                        // parks its copy, siblings drop theirs.
+                        if shared.queue.mode() == SchedMode::Collaboration && widx != 0
+                        {
+                            continue;
+                        }
+                        let uid = msg.header.uid;
+                        let exhausted = {
+                            let mut parked = shared.parked.lock().unwrap();
+                            if parked.len() > MAX_PARKED_ENTRIES {
+                                parked.clear();
+                            }
+                            let n = parked.entry(uid).or_insert(0);
+                            *n += 1;
+                            let exhausted = *n > MAX_ROLELESS_REQUEUES;
+                            if exhausted {
+                                parked.remove(&uid);
+                            }
+                            exhausted
+                        };
+                        if exhausted {
+                            // Persistently roleless: the message will
+                            // never execute here — hand it to the
+                            // recovery sweep (or fail terminally).
+                            shared.strand_or_fail(uid);
+                            continue;
+                        }
+                        std::thread::sleep(Duration::from_millis(1));
+                        let prio = shared.tracker.priority_of(uid);
+                        shared.queue.dispatch(msg, prio);
+                        continue;
+                    }
                 }
             };
+            {
+                let mut parked = shared.parked.lock().unwrap();
+                if !parked.is_empty() {
+                    parked.remove(&msg.header.uid);
+                }
+            }
             // In CM every worker holds a broadcast copy; rank 0 is the
-            // one that delivers, so it alone accounts SLO drops.
+            // one that delivers, so it alone accounts SLO drops and
+            // strands displaced work.
             let lead = role.mode != SchedMode::Collaboration || widx == 0;
             let uid = msg.header.uid;
+            // Stage sanity: a message that survived an idle-parking
+            // requeue (or drained into a donor-stolen instance) must not
+            // execute under a different stage role — its request can
+            // still complete via a checkpoint replay (routine donor
+            // steals must not turn into request failures), so strand it
+            // for the recovery sweep rather than computing garbage.
+            // Applies to every app the role serves: shared apps alias at
+            // the same stage index (§8.3 `share_stage` usage — the
+            // worker stamps `role.stage_index + 1` on every output, so
+            // same-index aliasing is already a standing assumption), and
+            // a message for an app with no route here could never be
+            // delivered after execution anyway.
+            let served = msg.header.app == role.app
+                || role.routes.iter().any(|(a, _)| *a == msg.header.app);
+            if !served || msg.header.stage.0 != role.stage_index {
+                if lead {
+                    shared.strand_or_fail(uid);
+                }
+                continue;
+            }
             // SLO check before spending compute (the request may have
             // been cancelled / expired while queued).
             match shared.tracker.verdict(uid) {
@@ -259,6 +439,11 @@ impl Instance {
             shared.util.idle();
             match result {
                 Ok(payload) => {
+                    // A crash that fired mid-execution kills the output
+                    // too — a dead process delivers nothing.
+                    if shared.crashed.load(Ordering::SeqCst) {
+                        continue;
+                    }
                     shared.processed.fetch_add(1, Ordering::Relaxed);
                     // CM: all workers computed (TP ranks); rank 0 delivers
                     // the aggregated output.
@@ -282,7 +467,26 @@ impl Instance {
                         },
                         payload,
                     };
-                    shared.deliver.lock().unwrap().deliver(&out);
+                    let delivery = shared.deliver.lock().unwrap().deliver(&out);
+                    match delivery {
+                        // Tell the control plane where the request went
+                        // — if that instance dies, the recovery sweep
+                        // finds the request by this location.
+                        Delivery::Sent(region) => {
+                            shared.tracker.note_location(uid, region)
+                        }
+                        Delivery::Stored => {}
+                        Delivery::Dropped => {
+                            // No downstream capacity (the next stage
+                            // lost every instance, or its ring refused
+                            // the write). A transient full ring can
+                            // still clear — strand for a checkpoint
+                            // replay; otherwise a terminal tombstone
+                            // beats a silent §9 loss the client would
+                            // wait out.
+                            shared.strand_or_fail(uid);
+                        }
+                    }
                 }
                 Err(_) => {
                     shared.errors.fetch_add(1, Ordering::Relaxed);
@@ -304,6 +508,24 @@ impl Instance {
     /// Windowed utilization (what the TaskManager reports to the NM).
     pub fn utilization(&self) -> f64 {
         self.shared.util.value()
+    }
+
+    /// Crash injection: simulate this instance dying. All threads go
+    /// dormant (no heartbeats, no ring drains, no stage work); the NM's
+    /// failure detector notices the missing utilization reports and the
+    /// recovery sweep repairs routing and replays stranded requests.
+    pub fn inject_crash(&self) {
+        self.shared.crashed.store(true, Ordering::SeqCst);
+    }
+
+    /// True once [`Instance::inject_crash`] (or a [`CrashHandle`]) fired.
+    pub fn is_crashed(&self) -> bool {
+        self.shared.crashed.load(Ordering::SeqCst)
+    }
+
+    /// Remote-control switch for the set's chaos driver.
+    pub fn crash_handle(&self) -> CrashHandle {
+        CrashHandle { crashed: self.shared.crashed.clone() }
     }
 
     /// Stats snapshot.
@@ -440,6 +662,44 @@ mod tests {
         tx.send(&mk_msg(1, 0));
         std::thread::sleep(Duration::from_millis(50));
         assert_eq!(inst.stats().processed, 0);
+        inst.shutdown();
+    }
+
+    #[test]
+    fn crashed_instance_goes_dormant_but_shuts_down() {
+        let fabric = Fabric::ideal();
+        let clock: Arc<dyn Clock> = Arc::new(SystemClock);
+        let db = Arc::new(MemDb::new(clock.clone(), u64::MAX));
+        let mut pool = ExecutorPool::new();
+        pool.insert("echo", StageExecutor::Simulated { busy: Duration::ZERO });
+        let inst = Instance::spawn(
+            InstanceConfig { node: NodeId(4), ..Default::default() },
+            &fabric,
+            Arc::new(FixedControl(echo_assignment())),
+            Arc::new(EchoLogic),
+            pool,
+            vec![db.clone()],
+            mk_tracker(&clock),
+            clock,
+        );
+        std::thread::sleep(Duration::from_millis(50));
+        let mut tx = crate::transport::RdmaEndpoint::sender_for(&fabric, inst.region_id());
+        assert!(tx.send(&mk_msg(1, 0)));
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while inst.stats().processed < 1 && std::time::Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(inst.stats().processed, 1);
+
+        let handle = inst.crash_handle();
+        handle.kill();
+        assert!(handle.is_crashed() && inst.is_crashed());
+        // Messages after the crash strand in the ring: no processing, no
+        // stores — exactly a dead process, but still joinable.
+        assert!(tx.send(&mk_msg(2, 0)));
+        std::thread::sleep(Duration::from_millis(60));
+        assert_eq!(inst.stats().processed, 1, "crashed instance does no work");
+        assert_eq!(db.len(), 1);
         inst.shutdown();
     }
 

@@ -18,8 +18,8 @@ mod instance;
 mod logic;
 mod scheduler;
 
-pub use deliver::{NextHop, ResultDeliver};
-pub use instance::{Instance, InstanceConfig, InstanceStats};
+pub use deliver::{Delivery, NextHop, ResultDeliver};
+pub use instance::{CrashHandle, Instance, InstanceConfig, InstanceStats};
 pub use logic::{AppLogic, EchoLogic, I2vLogic};
 pub use scheduler::{RequestScheduler, SchedQueue};
 

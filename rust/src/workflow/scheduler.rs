@@ -15,6 +15,7 @@
 use crate::client::Priority;
 use crate::config::SchedMode;
 use crate::transport::WorkflowMessage;
+use crate::util::Uid;
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
@@ -51,18 +52,55 @@ impl SchedQueue {
         })
     }
 
-    /// Reconfigure mode/worker-count (assignment change). Pending work is
-    /// dropped — the paper's no-retransmission stance extends to
-    /// reassignment; in-flight requests expire at the client.
-    pub fn reconfigure(&self, mode: SchedMode, workers: usize) {
+    /// Reconfigure mode/worker-count (assignment change). A route-only
+    /// update (same mode, same worker count) preserves pending work;
+    /// a real mode/shape change drains it and **returns** the displaced
+    /// messages (CM broadcast copies deduplicated by UID) so the caller
+    /// can strand them for recovery instead of losing them silently.
+    pub fn reconfigure(&self, mode: SchedMode, workers: usize) -> Vec<WorkflowMessage> {
+        let workers = workers.max(1);
         let mut g = self.inner.lock().unwrap();
+        if g.mode == mode && g.workers == workers {
+            return Vec::new(); // pending work is still valid
+        }
+        let dropped = Self::drain_locked(&mut g);
         g.mode = mode;
-        g.workers = workers.max(1);
-        g.bands = Default::default();
+        g.workers = workers;
         g.per_worker = vec![VecDeque::new(); g.workers];
         g.generation += 1;
         drop(g);
         self.cv.notify_all();
+        dropped
+    }
+
+    /// Drain everything pending (deduplicating CM broadcast copies by
+    /// UID) — used when the instance parks to idle, so displaced work
+    /// reaches the recovery path exactly once per request.
+    pub fn drain_pending(&self) -> Vec<WorkflowMessage> {
+        let mut g = self.inner.lock().unwrap();
+        Self::drain_locked(&mut g)
+    }
+
+    /// Current scheduling mode (workers consult this while roleless).
+    pub fn mode(&self) -> SchedMode {
+        self.inner.lock().unwrap().mode
+    }
+
+    fn drain_locked(g: &mut Inner) -> Vec<WorkflowMessage> {
+        let mut out: Vec<WorkflowMessage> = Vec::new();
+        for band in g.bands.iter_mut() {
+            out.extend(band.drain(..));
+        }
+        let mut seen: std::collections::HashSet<Uid> =
+            out.iter().map(|m| m.header.uid).collect();
+        for q in g.per_worker.iter_mut() {
+            for m in q.drain(..) {
+                if seen.insert(m.header.uid) {
+                    out.push(m);
+                }
+            }
+        }
+        out
     }
 
     /// RS side: enqueue one arrival per the active mode, into its
@@ -236,11 +274,35 @@ mod tests {
     fn reconfigure_switches_mode() {
         let q = SchedQueue::new(SchedMode::Individual, 1);
         q.dispatch(msg(1), Priority::Standard);
-        q.reconfigure(SchedMode::Collaboration, 2);
-        assert_eq!(q.depth(), 0, "reconfigure drops pending work");
+        let displaced = q.reconfigure(SchedMode::Collaboration, 2);
+        assert_eq!(q.depth(), 0, "reconfigure drains pending work");
+        assert_eq!(displaced.len(), 1, "displaced work is returned, not lost");
         q.dispatch(msg(2), Priority::Standard);
         assert!(q.fetch(0, Duration::from_millis(10)).is_some());
         assert!(q.fetch(1, Duration::from_millis(10)).is_some());
+    }
+
+    #[test]
+    fn route_only_reconfigure_preserves_pending() {
+        let q = SchedQueue::new(SchedMode::Individual, 2);
+        q.dispatch(msg(1), Priority::Standard);
+        // Same mode + worker count (a routing-only assignment bump):
+        // pending work must survive.
+        assert!(q.reconfigure(SchedMode::Individual, 2).is_empty());
+        assert_eq!(q.depth(), 1);
+        assert!(q.fetch(0, Duration::from_millis(10)).is_some());
+    }
+
+    #[test]
+    fn drain_pending_dedupes_cm_broadcast_copies() {
+        let q = SchedQueue::new(SchedMode::Collaboration, 3);
+        q.dispatch(msg(7), Priority::Standard);
+        q.dispatch(msg(8), Priority::Standard);
+        let mut uids: Vec<u128> =
+            q.drain_pending().iter().map(|m| m.header.uid.0).collect();
+        uids.sort();
+        assert_eq!(uids, vec![7, 8], "one copy per request, not per worker");
+        assert_eq!(q.depth(), 0);
     }
 
     #[test]

@@ -19,6 +19,19 @@
 //! elastic instance donation — lives in [`crate::federation`] and uses
 //! the per-set elasticity hooks here ([`WorkflowSet::add_idle_instance`]
 //! / [`WorkflowSet::retire_idle_instance`]).
+//!
+//! **Worker fault tolerance**: with `nm.instance_timeout_ms` set, the
+//! housekeeping timer runs the [`RecoverySweep`] — dead instances
+//! (silent heartbeats) are evicted, their stages refilled from the idle
+//! pool / a donor stage, and their in-flight requests replayed from
+//! per-stage checkpoints, with `Failed` tombstones once the submit
+//! `RetryPolicy` budget is exhausted. `chaos.kill_every_ms` turns the
+//! same timer into a crash injector for fault drills
+//! ([`WorkflowSet::inject_crash`] does it deterministically).
+
+mod recovery;
+
+pub use recovery::RecoverySweep;
 
 use crate::client::{
     Gateway, RequestHandle, RequestTracker, SubmitError, SubmitOptions,
@@ -34,9 +47,13 @@ use crate::ringbuf::RingConfig;
 use crate::runtime::{ExecutorPool, PjrtRuntime, StageExecutor};
 use crate::transport::{AppId, Payload};
 use crate::util::{NodeId, Rng, SystemClock};
-use crate::workflow::{AppLogic, Instance, InstanceConfig};
-use std::sync::Arc;
+use crate::workflow::{AppLogic, CrashHandle, Instance, InstanceConfig};
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
+
+/// Per-instance crash switches, shared between the set and its
+/// housekeeper's chaos driver.
+type CrashRegistry = Arc<Mutex<Vec<(NodeId, CrashHandle)>>>;
 
 /// A fully wired Workflow Set.
 pub struct WorkflowSet {
@@ -56,6 +73,10 @@ pub struct WorkflowSet {
     metrics: Registry,
     housekeeper: Option<std::thread::JoinHandle<()>>,
     hk_stop: Arc<std::sync::atomic::AtomicBool>,
+    /// Crash switches per instance, shared with the housekeeper's chaos
+    /// driver (`chaos.kill_every_ms`) and the public crash-injection
+    /// API.
+    crash_handles: CrashRegistry,
     /// Rebalance actions taken by the housekeeping loop (§8.2 timer).
     pub auto_rebalances: Arc<std::sync::atomic::AtomicU64>,
 }
@@ -116,6 +137,7 @@ impl WorkflowSet {
 
         let hk_stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
         let auto_rebalances = Arc::new(std::sync::atomic::AtomicU64::new(0));
+        let crash_handles: CrashRegistry = Arc::new(Mutex::new(Vec::new()));
         let mut set = Self {
             fabric: fabric.clone(),
             nm: nm.clone(),
@@ -129,6 +151,7 @@ impl WorkflowSet {
                 &config.proxy,
                 tracker.clone(),
                 metrics.clone(),
+                config.nm.instance_timeout_ms > 0,
             ),
             dbs: dbs.clone(),
             db_client,
@@ -142,6 +165,7 @@ impl WorkflowSet {
             metrics,
             housekeeper: None,
             hk_stop: hk_stop.clone(),
+            crash_handles: crash_handles.clone(),
             auto_rebalances: auto_rebalances.clone(),
         };
 
@@ -160,19 +184,63 @@ impl WorkflowSet {
         }
 
         // Housekeeping loop (the paper's timers): NM primary heartbeats
-        // (§8.1), periodic §8.2 rebalancing, DB TTL purge (§3.4), and the
+        // (§8.1), periodic §8.2 rebalancing, DB TTL purge (§3.4), the
         // tracker sweep for lost requests (§9 message loss would
-        // otherwise leak entries).
+        // otherwise leak entries), the worker-failure detector +
+        // recovery sweep (when `nm.instance_timeout_ms` enables it), and
+        // the chaos driver (when `chaos.kill_every_ms` enables it).
         let heartbeat = Duration::from_millis(config.nm.heartbeat_ms);
         let auto_rebalance = config.nm.auto_rebalance;
         let tracker_ttl_ns = config.db.ttl_ms * 1_000_000;
+        let instance_timeout_ns = config.nm.instance_timeout_ms * 1_000_000;
+        let chaos = config.chaos;
+        let mut recovery = RecoverySweep::new(
+            nm.clone(),
+            tracker.clone(),
+            dbs.clone(),
+            set.db_client.clone(),
+            fabric.clone(),
+            clock.clone(),
+            instance_timeout_ns,
+            &set.metrics,
+        );
+        let chaos_kills = set.metrics.counter("chaos_kills");
+        let hk_handles = crash_handles.clone();
         set.housekeeper = Some(std::thread::spawn(move || {
             let mut last_sweep = std::time::Instant::now();
+            let mut last_kill = std::time::Instant::now();
+            let kill_every = Duration::from_millis(chaos.kill_every_ms.max(1));
+            let mut chaos_rng = Rng::new(chaos.seed);
             while !hk_stop.load(std::sync::atomic::Ordering::SeqCst) {
                 if let Some(primary) = nm_cluster.primary() {
                     nm_cluster.heartbeat(primary);
                 }
+                if chaos.kill_every_ms > 0 && last_kill.elapsed() >= kill_every {
+                    // Chaos: kill one random live *assigned* instance
+                    // (idle-pool spares are the repair path, not the
+                    // victim pool).
+                    let assigned: std::collections::HashSet<NodeId> = nm
+                        .instances()
+                        .into_iter()
+                        .filter(|i| i.role.is_some())
+                        .map(|i| i.node)
+                        .collect();
+                    let handles = hk_handles.lock().unwrap();
+                    let victims: Vec<&(NodeId, CrashHandle)> = handles
+                        .iter()
+                        .filter(|(n, h)| assigned.contains(n) && !h.is_crashed())
+                        .collect();
+                    if !victims.is_empty() {
+                        let idx = chaos_rng.below(victims.len() as u64) as usize;
+                        victims[idx].1.kill();
+                        chaos_kills.inc();
+                    }
+                    last_kill = std::time::Instant::now();
+                }
                 if last_sweep.elapsed() > heartbeat * 5 {
+                    if instance_timeout_ns > 0 {
+                        recovery.sweep();
+                    }
                     if auto_rebalance && nm.rebalance().is_some() {
                         auto_rebalances.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                     }
@@ -198,6 +266,9 @@ impl WorkflowSet {
                 ring,
                 control_poll: Duration::from_millis(5),
                 util_window: Duration::from_millis(self.config.nm.util_window_ms),
+                // Checkpoints are only useful (and only paid for) when
+                // the failure detector can replay them.
+                checkpointing: self.config.nm.instance_timeout_ms > 0,
                 max_workers: self
                     .config
                     .apps
@@ -215,6 +286,10 @@ impl WorkflowSet {
             clock,
         );
         self.nm.register_instance(node, inst.region_id());
+        self.crash_handles
+            .lock()
+            .unwrap()
+            .push((node, inst.crash_handle()));
         self.instances.push(inst);
         node
     }
@@ -283,8 +358,11 @@ impl WorkflowSet {
     }
 
     /// The set's metrics registry: per-priority `accepted.*`/`rejected.*`
-    /// from the proxy, `requests_cancelled` / `deadline_missed` from the
-    /// tracker.
+    /// from the proxy, `requests_cancelled` / `deadline_missed` /
+    /// `requests_failed` from the tracker, and the fault-tolerance
+    /// counters `instances_failed` / `instances_replaced` /
+    /// `requests_recovered` / `chaos_kills` plus the
+    /// `recovery_latency_ns` histogram from the recovery sweep.
     pub fn metrics(&self) -> &Registry {
         &self.metrics
     }
@@ -339,7 +417,34 @@ impl WorkflowSet {
             let inst = self.instances.swap_remove(idx);
             inst.shutdown();
         }
+        self.crash_handles.lock().unwrap().retain(|(n, _)| *n != node);
         Some(node)
+    }
+
+    /// Crash injection: simulate the death of `node` (threads go
+    /// dormant; heartbeats stop; the failure detector takes it from
+    /// there). Returns `false` for unknown nodes.
+    pub fn inject_crash(&self, node: NodeId) -> bool {
+        let handles = self.crash_handles.lock().unwrap();
+        match handles.iter().find(|(n, _)| *n == node) {
+            Some((_, h)) => {
+                h.kill();
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Crash injection by stage: kill the first live instance serving
+    /// `key`. Returns the victim, if the stage had one.
+    pub fn inject_crash_at_stage(&self, key: StageKey) -> Option<NodeId> {
+        let serving = self.nm.stage_instances(key);
+        let handles = self.crash_handles.lock().unwrap();
+        let (node, h) = handles
+            .iter()
+            .find(|(n, h)| serving.contains(n) && !h.is_crashed())?;
+        h.kill();
+        Some(*node)
     }
 
     /// Run one NM rebalance pass (§8.2); the paper runs this on a timer.

@@ -1,0 +1,231 @@
+//! The worker-failure recovery sweep: detect → repair → replay.
+//!
+//! Run by the set's housekeeping timer (when `nm.instance_timeout_ms`
+//! enables the failure detector), one [`RecoverySweep::sweep`] per tick:
+//!
+//! 1. **Detect** — [`NodeManager::detect_failures`] evicts every
+//!    instance whose heartbeat (piggybacked on its §8.2 utilization
+//!    report) went silent for longer than the timeout, bumping upstream
+//!    assignment versions so `ResultDeliver`s drop the dead hop and
+//!    prune its ring producer.
+//! 2. **Repair** — [`NodeManager::promote_replacement`] refills the
+//!    orphaned stage through the existing §8.2 machinery: idle pool
+//!    first, then a donor stage that can spare an instance.
+//! 3. **Replay** — every in-flight UID whose last recorded location is
+//!    the dead instance's ring is re-sent from its last completed
+//!    stage's checkpoint ([`MemDb::checkpoint`]) to the stage's
+//!    surviving / promoted instances. Replays consume the request's
+//!    recovery budget (the submit `RetryPolicy`); when it runs out — or
+//!    no checkpoint / no capacity remains — a `Failed` tombstone is
+//!    published so the client observes a terminal state instead of a
+//!    hang. First-writer-wins in the database layer guarantees a replay
+//!    and a late original result never double-publish.
+
+use crate::client::{ReplayVerdict, RequestTracker};
+use crate::db::{DbClient, EntryKind, MemDb};
+use crate::metrics::{Counter, Histogram, Registry};
+use crate::nm::NodeManager;
+use crate::rdma::{Fabric, RegionId};
+use crate::transport::{RdmaEndpoint, RdmaSender, WorkflowMessage};
+use crate::util::{Clock, Uid};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// One set's failure detector + repair + replay driver. Owned by the
+/// housekeeping thread; keeps a ring-producer cache across sweeps.
+pub struct RecoverySweep {
+    nm: Arc<NodeManager>,
+    tracker: Arc<RequestTracker>,
+    dbs: Vec<Arc<MemDb>>,
+    db: Arc<DbClient>,
+    fabric: Fabric,
+    clock: Arc<dyn Clock>,
+    /// Heartbeat-silence threshold (ns).
+    timeout_ns: u64,
+    senders: HashMap<RegionId, RdmaSender>,
+    /// Recently evicted rings, revisited for one grace window: an
+    /// upstream with a stale route (control poll ~5 ms) can deliver into
+    /// a dead ring *after* the eviction sweep's replay snapshot; without
+    /// a revisit those requests would strand forever.
+    recent_dead: Vec<(RegionId, u64 /* last_seen_ns */, u64 /* evicted_at_ns */)>,
+    instances_failed: Arc<Counter>,
+    instances_replaced: Arc<Counter>,
+    requests_recovered: Arc<Counter>,
+    /// Time from an instance's last heartbeat to each of its requests
+    /// being replayed (ns) — the stranded time a client observed.
+    recovery_latency: Arc<Histogram>,
+}
+
+impl RecoverySweep {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        nm: Arc<NodeManager>,
+        tracker: Arc<RequestTracker>,
+        dbs: Vec<Arc<MemDb>>,
+        db: Arc<DbClient>,
+        fabric: Fabric,
+        clock: Arc<dyn Clock>,
+        timeout_ns: u64,
+        metrics: &Registry,
+    ) -> Self {
+        Self {
+            nm,
+            tracker,
+            dbs,
+            db,
+            fabric,
+            clock,
+            timeout_ns,
+            senders: HashMap::new(),
+            recent_dead: Vec::new(),
+            instances_failed: metrics.counter("instances_failed"),
+            instances_replaced: metrics.counter("instances_replaced"),
+            requests_recovered: metrics.counter("requests_recovered"),
+            recovery_latency: metrics.histogram("recovery_latency_ns"),
+        }
+    }
+
+    /// One detect → repair → replay pass. Returns the number of dead
+    /// instances handled (0 on the healthy fast path).
+    pub fn sweep(&mut self) -> usize {
+        // Revisit recently dead rings first: anything that raced into
+        // them since the previous sweep still needs a replay (or a
+        // terminal verdict). One detector-timeout of grace comfortably
+        // covers the stale-route window.
+        let now = self.clock.now_ns();
+        let grace_ns = self.timeout_ns.max(1_000_000_000);
+        self.recent_dead
+            .retain(|(_, _, evicted_at)| now.saturating_sub(*evicted_at) <= grace_ns);
+        let revisit = std::mem::take(&mut self.recent_dead);
+        for (region, last_seen, evicted_at) in revisit {
+            self.replay_stranded(region, last_seen);
+            self.recent_dead.push((region, last_seen, evicted_at));
+        }
+        let failures = self.nm.detect_failures(self.timeout_ns);
+        for f in &failures {
+            self.instances_failed.inc();
+            if let Some(role) = f.role {
+                if self.nm.promote_replacement(role).is_some() {
+                    self.instances_replaced.inc();
+                }
+            }
+            if let Some(region) = f.region {
+                self.replay_stranded(region, f.last_seen_ns);
+                // The dead ring will never be drained again; keep it on
+                // the revisit list for the grace window.
+                self.senders.remove(&region);
+                self.recent_dead.push((region, f.last_seen_ns, now));
+            }
+        }
+        // Requests the data plane handed over directly (role changed
+        // mid-queue during a donor steal, downstream ring refused): same
+        // replay path, the instance itself is alive. Stranding time is
+        // within one sweep period, so record latency from `now`.
+        for uid in self.tracker.take_stranded() {
+            self.replay_uid(uid, now);
+        }
+        // Prune producers whose ring no live instance owns any more —
+        // healthy retirement (elastic donation / deregister) never
+        // passes through detect_failures, and a retired ring must not
+        // hold a producer forever (the same leak the set_routes fix
+        // closed in ResultDeliver).
+        if !self.senders.is_empty() {
+            let live: std::collections::HashSet<RegionId> = self
+                .nm
+                .instances()
+                .into_iter()
+                .filter_map(|i| i.region)
+                .collect();
+            self.senders.retain(|rid, _| live.contains(rid));
+        }
+        failures.len()
+    }
+
+    /// Replay (or fail) every in-flight request stranded on `region`.
+    fn replay_stranded(&mut self, region: RegionId, last_seen_ns: u64) {
+        for uid in self.tracker.uids_at(region) {
+            self.replay_uid(uid, last_seen_ns);
+        }
+    }
+
+    /// Replay one request from its newest checkpoint, or publish its
+    /// terminal `Failed` state when it cannot be replayed.
+    fn replay_uid(&mut self, uid: Uid, last_seen_ns: u64) {
+        // Consume any pending stranded flag: a UID reached via its dead
+        // ring must not be replayed a second time by this sweep's
+        // take_stranded() loop (double replay would burn budget and
+        // dispatch duplicate work).
+        self.tracker.unstrand(uid);
+        // A terminal entry already exists on some replica (the crash
+        // raced completion): the handle will consume it — replaying
+        // would only burn budget, and first-writer-wins would suppress
+        // the duplicate anyway.
+        if self.dbs.iter().any(|db| db.peek(uid).is_some()) {
+            return;
+        }
+        // Newest checkpoint across replicas (replicas may have diverged
+        // if one missed a later stage's write — replaying a stale
+        // earlier stage would re-execute completed work).
+        let Some(ck) = self.db.checkpoint(uid) else {
+            self.fail(uid);
+            return;
+        };
+        let Ok(msg) = WorkflowMessage::decode(&ck.data) else {
+            self.fail(uid);
+            return;
+        };
+        let regions = self.nm.stage_regions(msg.header.app, ck.stage);
+        if regions.is_empty() {
+            // Repair found no replacement: the stage is gone.
+            self.fail(uid);
+            return;
+        }
+        match self.tracker.begin_replay(uid) {
+            ReplayVerdict::Terminal => {}
+            ReplayVerdict::Exhausted => self.publish_failed(uid),
+            ReplayVerdict::Replay => {
+                // Deterministic first pick by UID, then fall through the
+                // stage's other live rings — one momentarily full ring
+                // (replayed backlog draining) must not fail a request
+                // a sibling instance could accept.
+                let start = (uid.0 % regions.len() as u128) as usize;
+                let mut sent = false;
+                for k in 0..regions.len() {
+                    let target = regions[(start + k) % regions.len()];
+                    let tx = self.senders.entry(target).or_insert_with(|| {
+                        RdmaEndpoint::sender_for(&self.fabric, target)
+                    });
+                    if tx.send(&msg) {
+                        self.tracker.note_location(uid, target);
+                        self.requests_recovered.inc();
+                        self.recovery_latency
+                            .record(self.clock.now_ns().saturating_sub(last_seen_ns));
+                        sent = true;
+                        break;
+                    }
+                }
+                if !sent {
+                    // Every live ring refused the write (sustained
+                    // backpressure): give up rather than hang the
+                    // client.
+                    self.fail(uid);
+                }
+            }
+        }
+    }
+
+    /// Declare `uid` unrecoverable and publish its terminal state.
+    fn fail(&self, uid: Uid) {
+        if self.tracker.mark_failed(uid) {
+            self.publish_failed(uid);
+        }
+    }
+
+    /// Publish the `Failed` tombstone to every replica (first-writer-
+    /// wins: a result that sneaked in concurrently is preserved).
+    fn publish_failed(&self, uid: Uid) {
+        for db in &self.dbs {
+            db.put_tombstone(uid, EntryKind::Failed);
+        }
+    }
+}

@@ -1,0 +1,240 @@
+//! Worker-instance fault-tolerance integration tests: with crash
+//! injection killing instances mid-pipeline, every admitted request
+//! reaches a terminal state — `Done` after checkpoint replay onto a
+//! promoted replacement, or a `Failed` tombstone once the submit
+//! `RetryPolicy`'s recovery budget is exhausted — and none hang.
+//!
+//! Detector edge cases (flapping heartbeats, donor-stage promotion) are
+//! unit-tested in `nm::manager`; first-writer-wins publication is
+//! unit-tested in `db::store`. These tests drive the full wset loop:
+//! housekeeper detection → NM repair → checkpoint replay → client
+//! handle.
+
+use onepiece::client::{
+    Gateway, RequestStatus, RetryPolicy, SubmitOptions, WaitOutcome,
+};
+use onepiece::config::{ClusterConfig, ExecModel, FabricKind};
+use onepiece::nm::StageKey;
+use onepiece::transport::{AppId, Payload};
+use onepiece::workflow::EchoLogic;
+use onepiece::wset::{build_pool, WorkflowSet};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// A pipeline with the failure detector on (150 ms heartbeat silence,
+/// housekeeper sweeping every ~50 ms) and a slow diffusion stage so
+/// requests are reliably in flight there when tests crash it.
+fn fault_config(stage_ms: [f64; 4]) -> ClusterConfig {
+    let mut cfg = ClusterConfig::i2v_default();
+    cfg.fabric = FabricKind::Ideal;
+    for (s, &m) in cfg.apps[0].stages.iter_mut().zip(&stage_ms) {
+        s.exec = ExecModel::Simulated { ms: m };
+        s.exec_ms = m;
+    }
+    cfg.nm.heartbeat_ms = 10;
+    cfg.nm.instance_timeout_ms = 150;
+    cfg.idle_pool = 1;
+    cfg
+}
+
+fn build(cfg: &ClusterConfig) -> WorkflowSet {
+    let pool = build_pool(cfg, None);
+    WorkflowSet::build(cfg.clone(), vec![vec![1, 1, 1, 1]], Arc::new(EchoLogic), pool)
+}
+
+fn diffusion() -> StageKey {
+    StageKey { app: AppId(1), stage: 2 }
+}
+
+#[test]
+fn killed_mid_pipeline_instance_every_request_terminates() {
+    let cfg = fault_config([1.0, 1.0, 60.0, 1.0]);
+    let set = build(&cfg);
+    std::thread::sleep(Duration::from_millis(80));
+
+    // Recovery budget: 3 total attempts = original + 2 replays.
+    let opts = SubmitOptions::default()
+        .with_retry(RetryPolicy::attempts(3, Duration::ZERO));
+    let handles: Vec<_> = (0..6)
+        .map(|i| {
+            set.submit_with(AppId(1), Payload::Bytes(vec![i as u8; 16]), opts)
+                .expect("must admit")
+        })
+        .collect();
+    // Let the stream reach diffusion (60 ms/req on one instance: a
+    // backlog forms there), then kill that instance.
+    std::thread::sleep(Duration::from_millis(40));
+    let victim = set
+        .inject_crash_at_stage(diffusion())
+        .expect("diffusion must have an instance to kill");
+
+    let mut done = 0;
+    let mut failed = 0;
+    for h in &handles {
+        match h.wait(Duration::from_secs(15)) {
+            WaitOutcome::Done(_) => done += 1,
+            WaitOutcome::Failed => failed += 1,
+            other => panic!(
+                "request {:?} must reach a terminal state, got {other:?} \
+                 (victim was {victim:?})",
+                h.uid()
+            ),
+        }
+    }
+    assert_eq!(done + failed, 6, "no request may hang");
+    assert!(done >= 1, "replay onto the promoted replacement must complete work");
+
+    let m = set.metrics();
+    assert!(m.counter("instances_failed").get() >= 1, "detector must fire");
+    assert!(
+        m.counter("instances_replaced").get() >= 1,
+        "idle-pool promotion must repair the stage"
+    );
+    assert!(
+        m.counter("requests_recovered").get() >= 1,
+        "stranded requests must be replayed"
+    );
+    assert!(
+        m.histogram("recovery_latency_ns").snapshot().count >= 1,
+        "recovery latency must be recorded"
+    );
+    set.shutdown();
+}
+
+#[test]
+fn crash_racing_completion_publishes_exactly_one_terminal_entry() {
+    // The request *completes* (result stored) just before its final-
+    // stage instance dies. The recovery sweep must notice the terminal
+    // entry and not replay — the client sees exactly one outcome.
+    let mut cfg = fault_config([1.0, 1.0, 1.0, 1.0]);
+    cfg.db.replicas = 1; // single replica: any duplicate would be visible
+    let set = build(&cfg);
+    std::thread::sleep(Duration::from_millis(80));
+
+    let opts = SubmitOptions::default()
+        .with_retry(RetryPolicy::attempts(3, Duration::ZERO));
+    let handle = set
+        .submit_with(AppId(1), Payload::Bytes(vec![9; 16]), opts)
+        .expect("must admit");
+    // Wait for the result to land in the DB *without* consuming it.
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    while set.dbs[0].peek(handle.uid()).is_none() {
+        assert!(std::time::Instant::now() < deadline, "pipeline must complete");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    // Now the final-stage instance "dies" with the tracker still
+    // holding the request's location there.
+    set.inject_crash_at_stage(StageKey { app: AppId(1), stage: 3 })
+        .expect("final stage instance");
+    // Let detection + the recovery sweep run.
+    std::thread::sleep(Duration::from_millis(400));
+    let m = set.metrics();
+    assert!(m.counter("instances_failed").get() >= 1, "detector must fire");
+    assert_eq!(
+        m.counter("requests_recovered").get(),
+        0,
+        "a completed request must not be replayed"
+    );
+    assert_eq!(m.counter("requests_failed").get(), 0);
+    // The one terminal entry is the result.
+    let WaitOutcome::Done(bytes) = handle.wait(Duration::from_secs(5)) else {
+        panic!("completed request must read back Done")
+    };
+    assert!(!bytes.is_empty());
+    assert!(
+        set.db_client.fetch_entry(handle.uid()).is_none(),
+        "exactly one terminal entry: nothing left after the handle consumed it"
+    );
+    set.shutdown();
+}
+
+#[test]
+fn final_stage_crash_replays_from_last_checkpoint_and_completes() {
+    // The dead instance is the request's *final* stage: the replay must
+    // re-enter at stage 3 (from the stage-3 checkpoint written by the
+    // stage-2 deliver), not restart the pipeline.
+    let cfg = fault_config([1.0, 1.0, 1.0, 200.0]);
+    let set = build(&cfg);
+    std::thread::sleep(Duration::from_millis(80));
+
+    let opts = SubmitOptions::default()
+        .with_retry(RetryPolicy::attempts(3, Duration::ZERO));
+    let handle = set
+        .submit_with(AppId(1), Payload::Bytes(vec![5; 16]), opts)
+        .expect("must admit");
+    // Let it reach the (slow) final stage, then kill it.
+    std::thread::sleep(Duration::from_millis(50));
+    set.inject_crash_at_stage(StageKey { app: AppId(1), stage: 3 })
+        .expect("final stage instance");
+
+    let WaitOutcome::Done(bytes) = handle.wait(Duration::from_secs(15)) else {
+        panic!("replayed final stage must still produce the result")
+    };
+    let msg = onepiece::transport::WorkflowMessage::decode(&bytes).unwrap();
+    assert_eq!(msg.payload, Payload::Bytes(vec![5; 16]));
+    let m = set.metrics();
+    assert!(m.counter("requests_recovered").get() >= 1, "final stage replayed");
+    assert!(m.counter("instances_replaced").get() >= 1);
+    set.shutdown();
+}
+
+#[test]
+fn exhausted_retry_budget_publishes_failed_tombstone() {
+    // Default RetryPolicy (1 attempt) = no recovery budget: a crash
+    // fails the request fast — terminal `Failed`, not a hang — even
+    // though the stage itself is repaired for future traffic.
+    let cfg = fault_config([1.0, 1.0, 300.0, 1.0]);
+    let set = build(&cfg);
+    std::thread::sleep(Duration::from_millis(80));
+
+    let handle = set
+        .submit(AppId(1), Payload::Bytes(vec![3; 16]))
+        .expect("must admit");
+    std::thread::sleep(Duration::from_millis(40)); // in flight at diffusion
+    set.inject_crash_at_stage(diffusion()).expect("diffusion instance");
+
+    assert_eq!(handle.wait(Duration::from_secs(10)), WaitOutcome::Failed);
+    assert_eq!(handle.status(), RequestStatus::Failed, "Failed is sticky");
+    let m = set.metrics();
+    assert_eq!(m.counter("requests_recovered").get(), 0, "no budget, no replay");
+    assert!(m.counter("requests_failed").get() >= 1);
+    assert!(
+        m.counter("instances_replaced").get() >= 1,
+        "the stage is still repaired for future traffic"
+    );
+    set.shutdown();
+}
+
+#[test]
+fn chaos_config_block_drives_housekeeper_kills() {
+    // chaos.kill_every_ms turns the housekeeper into the crash
+    // injector: instances die on a timer and the same sweep repairs
+    // them — admitted traffic keeps reaching terminal states.
+    let mut cfg = fault_config([1.0, 1.0, 5.0, 1.0]);
+    cfg.chaos.kill_every_ms = 200;
+    cfg.chaos.seed = 11;
+    cfg.idle_pool = 2;
+    let set = build(&cfg);
+    std::thread::sleep(Duration::from_millis(80));
+
+    let opts = SubmitOptions::default()
+        .with_retry(RetryPolicy::attempts(4, Duration::ZERO));
+    let mut outcomes = (0usize, 0usize); // (done, failed)
+    for i in 0..20 {
+        if let Ok(h) = set.submit_with(AppId(1), Payload::Bytes(vec![i as u8; 8]), opts)
+        {
+            match h.wait(Duration::from_secs(15)) {
+                WaitOutcome::Done(_) => outcomes.0 += 1,
+                WaitOutcome::Failed => outcomes.1 += 1,
+                other => panic!("request {i} must terminate, got {other:?}"),
+            }
+        }
+        std::thread::sleep(Duration::from_millis(30));
+    }
+    assert!(outcomes.0 >= 1, "work must keep completing under chaos");
+    assert!(
+        set.metrics().counter("chaos_kills").get() >= 1,
+        "the chaos driver must have killed at least one instance"
+    );
+    set.shutdown();
+}
