@@ -8,6 +8,7 @@ use onepiece::util::{ManualClock, NodeId};
 use std::sync::Arc;
 
 fn main() {
+    let mut report = bench::Report::new("e10_election");
     bench::header("E13a: election latency vs replica-set size");
     for n in [3u32, 5, 7, 9] {
         let clock = ManualClock::new();
@@ -17,10 +18,11 @@ fn main() {
             1_000,
         );
         let mut term_candidate = 1u32;
-        bench::quick(&format!("replicas={n}"), || {
+        let r = bench::quick(&format!("replicas={n}"), || {
             term_candidate = (term_candidate + 1) % n;
             cluster.elect(NodeId(term_candidate)).unwrap();
         });
+        report.add_result(&format!("election_r{n}"), &r);
     }
 
     println!("\n=== E13b: failover walkthrough ===");
@@ -48,4 +50,6 @@ fn main() {
     }
     println!("100 terms × 4 concurrent candidates: {collisions} safety violations");
     assert_eq!(collisions, 0, "Paxos must never elect two leaders in one term");
+    report.add("safety_violations", collisions as f64);
+    report.write();
 }

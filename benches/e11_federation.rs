@@ -37,6 +37,7 @@ fn header(title: &str) {
 }
 
 fn main() {
+    let mut report = onepiece::bench::Report::new("e11_federation");
     // --- 1. Reject rate at identical offered load: 1 set vs 3 sets ---
     header("E11a: 1 set vs 3-set federation, identical offered load");
     for mult in [0.8, 1.5, 2.5] {
@@ -57,6 +58,10 @@ fn main() {
             fed.reject_rate() <= single.reject_rate(),
             "federation must not reject more than a single set at equal load"
         );
+        report
+            .add(format!("single.reject_rate.x{mult}"), single.reject_rate())
+            .add(format!("fed3.reject_rate.x{mult}"), fed.reject_rate())
+            .add(format!("fed3.p99_s.x{mult}"), fed.p99_latency_s);
     }
 
     // --- 2. Routing policy under regional skew ---
@@ -91,6 +96,15 @@ fn main() {
     let elastic = simulate_federation(&cfg, &bursty, SEED);
     row("static capacity", &frozen);
     row("elastic donation", &elastic);
+    report
+        .add("skew.random.spilled", random.spilled as f64)
+        .add("skew.load_aware.spilled", load_aware.spilled as f64)
+        .add("skew.random.spread", random.admitted_spread() as f64)
+        .add("skew.load_aware.spread", load_aware.admitted_spread() as f64)
+        .add("elastic.donations", elastic.donations as f64)
+        .add("elastic.spilled", elastic.spilled as f64)
+        .add("static.spilled", frozen.spilled as f64);
+    report.write();
 
     println!(
         "\nshape: federation turns a hard per-set capacity wall into a fleet-wide \

@@ -20,6 +20,7 @@
 //!
 //! Run: `cargo bench --bench e12_slo_tiers`
 
+use onepiece::bench::Report;
 use onepiece::client::{Gateway, Priority, RequestHandle, SubmitOptions, WaitOutcome};
 use onepiece::config::{ClusterConfig, ExecModel, FabricKind};
 use onepiece::transport::{AppId, Payload};
@@ -172,5 +173,16 @@ fn main() {
          priority) while batch absorbs the diffusion backlog and the \
          deadline misses"
     );
+    let mut report = Report::new("e12_slo_tiers");
+    for p in Priority::ALL {
+        let idx = p.index();
+        report
+            .add(format!("{}.offered", p.label()), offered[idx] as f64)
+            .add(format!("{}.rejected", p.label()), rejected[idx] as f64)
+            .add(format!("{}.completed", p.label()), latencies[idx].len() as f64)
+            .add(format!("{}.p99_ms", p.label()), p99(idx))
+            .add(format!("{}.miss_rate", p.label()), miss_rate(idx));
+    }
+    report.write();
     set.shutdown();
 }

@@ -138,6 +138,7 @@ fn run_one(mtbf: Option<Duration>) -> (Outcome, WorkflowSet) {
 }
 
 fn main() {
+    let mut report = onepiece::bench::Report::new("e13_fault_recovery");
     println!("=== E13: fault recovery under periodic instance kills ===");
     println!(
         "offered 100 req/s | diffusion 2 instances, 8 ms | detector timeout \
@@ -213,8 +214,16 @@ fn main() {
             out.done,
             out.failed
         );
+        let key = mtbf.map_or("healthy".into(), |d| format!("mtbf{}", d.as_millis()));
+        report
+            .add(format!("{key}.steady_rps"), steady)
+            .add(format!("{key}.dip_rps"), dip)
+            .add(format!("{key}.recover_ms"), recover_ms)
+            .add(format!("{key}.failed"), out.failed as f64)
+            .add(format!("{key}.replay_p50_ms"), lat.p50 as f64 / 1e6);
         set.shutdown();
     }
+    report.write();
     println!(
         "\nshape: goodput dips for roughly one detector timeout + replay \
          round after each kill, then returns to steady state; halving MTBF \

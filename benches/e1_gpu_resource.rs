@@ -6,6 +6,7 @@
 //! Sweeps mean load and burstiness; prints the resource-consumption
 //! ratio curve so the crossover structure is visible, not just one point.
 
+use onepiece::bench::Report;
 use onepiece::sim::{
     simulate_disaggregated, simulate_monolithic, wan_stages, ArrivalProcess,
     ResourceSimConfig,
@@ -81,6 +82,13 @@ fn main() {
          (shape: disaggregation wins everywhere, margin grows with burstiness)",
         max.1, max.0
     );
+    let mut report = Report::new("e1_gpu_resource");
+    report.add("max_provisioned_ratio", max.1);
+    let min = ratios
+        .iter()
+        .cloned()
+        .fold(("", f64::INFINITY), |a, b| if b.1 < a.1 { b } else { a });
+    report.add("min_provisioned_ratio", min.1);
 
     // --- the paper's accounting: §8.2/§4.2 let OnePiece's idle instances
     // be repurposed for lower-priority work (model training), so the
@@ -137,4 +145,6 @@ fn main() {
         one_tp / mono_tp
     );
     println!("(paper's Ant Group reference reports 2.4x from the same mechanism: no idle pinned GPUs)");
+    report.add("fixed_fleet_throughput_ratio", one_tp / mono_tp);
+    report.write();
 }

@@ -2,9 +2,10 @@
 //! schedules exactly: stage X (4 s) feeding stage Y (12 s), Theorem-1
 //! sized, printing the gantt and the steady-state output interval.
 
+use onepiece::bench::Report;
 use onepiece::pipeline::{instances_needed, trace_schedule, TraceStage};
 
-fn run(title: &str, workers_x: usize, admit_s: f64) {
+fn run(title: &str, workers_x: usize, admit_s: f64) -> f64 {
     let m = instances_needed(workers_x, 4.0, 12.0);
     let stages = vec![
         TraceStage { name: "X".into(), exec_s: 4.0, instances: 1, workers: workers_x },
@@ -19,11 +20,15 @@ fn run(title: &str, workers_x: usize, admit_s: f64) {
         trace.output_interval_s, admit_s, trace.completions[0]
     );
     assert!((trace.output_interval_s - admit_s).abs() < 1e-6);
+    trace.output_interval_s
 }
 
 fn main() {
-    run("Figure 5: 1 X-worker, 3 Y-instances", 1, 4.0);
-    run("Figure 6: 2 X-workers, 6 Y-instances", 2, 2.0);
+    let mut report = Report::new("e2_pipeline_schedule");
+    let fig5 = run("Figure 5: 1 X-worker, 3 Y-instances", 1, 4.0);
+    let fig6 = run("Figure 6: 2 X-workers, 6 Y-instances", 2, 2.0);
+    report.add("fig5_output_interval_s", fig5);
+    report.add("fig6_output_interval_s", fig6);
 
     // Ablation: undersized Y (Theorem-1 violated) degrades the interval.
     let stages = vec![
@@ -36,4 +41,6 @@ fn main() {
         "output interval degrades to {:.1} s (= T_Y / M = 6 s), queue grows unboundedly",
         trace.output_interval_s
     );
+    report.add("undersized_output_interval_s", trace.output_interval_s);
+    report.write();
 }

@@ -35,6 +35,7 @@ fn msg(bytes: usize) -> WorkflowMessage {
 
 fn main() {
     let sizes = [4 << 10, 64 << 10, 1 << 20, 16 << 20];
+    let mut report = onepiece::bench::Report::new("e4_rdma_vs_tcp");
 
     println!("=== E5a: modelled one-way transfer time (latency model only) ===");
     println!(
@@ -53,6 +54,7 @@ fn main() {
             t / 1e3,
             t / r
         );
+        report.add(format!("modelled_tcp_over_rdma_{}kib", s / 1024), t / r);
     }
 
     println!("\n=== E5b: measured software-path time per message (this host) ===");
@@ -73,18 +75,20 @@ fn main() {
             RingConfig { nslots: 64, cap_bytes: 64 << 20, ..Default::default() },
         );
         let mut tx = ep.sender();
-        bench::quick(&format!("ringbuf  {:>6} KiB", s / 1024), || {
+        let ring = bench::quick(&format!("ringbuf  {:>6} KiB", s / 1024), || {
             assert!(tx.send(&m));
             while ep.recv().is_none() {}
         });
+        report.add_result(&format!("ringbuf_{}kib", s / 1024), &ring);
 
         // TCP path: real sockets through the kernel.
         let mut tep = TcpEndpoint::new().unwrap();
         let mut ttx = tep.sender().unwrap();
-        bench::quick(&format!("tcp      {:>6} KiB", s / 1024), || {
+        let sock = bench::quick(&format!("tcp      {:>6} KiB", s / 1024), || {
             assert!(ttx.send(&m));
             while tep.recv_timeout(Duration::from_secs(5)).is_none() {}
         });
+        report.add_result(&format!("tcp_{}kib", s / 1024), &sock);
     }
 
     println!("\n=== E5c: NCCL limitations (L1-L4, §6) ===");
@@ -97,4 +101,5 @@ fn main() {
         nccl.gpu_busy_ns
     );
     println!("L1 tensor-only + L4 no message context: enforced by the NcclStub API types");
+    report.write();
 }

@@ -12,6 +12,7 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
 fn main() {
+    let mut report = bench::Report::new("e5_ringbuf");
     // --- size sweep, single producer ---
     bench::header("E6a: push+pop per message (1 producer)");
     for size in [64usize, 1024, 16 << 10, 256 << 10] {
@@ -21,10 +22,11 @@ fn main() {
         let prod = RingProducer::new(fabric.connect(id).unwrap(), cfg, Arc::new(SystemClock), 1);
         let mut cons = RingConsumer::new(region, cfg);
         let payload = vec![7u8; size];
-        bench::quick(&format!("msg {:>7} B", size), || {
+        let r = bench::quick(&format!("msg {:>7} B", size), || {
             prod.push(&payload, None).unwrap();
             cons.pop().unwrap().unwrap();
         });
+        report.add_result(&format!("push_pop_{size}b"), &r);
     }
 
     // --- contention sweep: N producer threads, 1 consumer ---
@@ -86,6 +88,10 @@ fn main() {
             format!("producers={nprod} msg=256B"),
             got as f64 / t0.elapsed().as_secs_f64() / 1e6,
             sent
+        );
+        report.add(
+            format!("contended_msgs_per_sec_p{nprod}"),
+            got as f64 / t0.elapsed().as_secs_f64(),
         );
     }
 
@@ -176,4 +182,5 @@ fn main() {
         );
     }
     println!("\n(corruption stays bounded regardless of timeout: blast radius is one entry)");
+    report.write();
 }

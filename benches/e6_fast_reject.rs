@@ -57,6 +57,7 @@ fn run(offered_rps: f64, capacity_rps: f64, fast_reject: bool) -> (f64, f64, f64
 
 fn main() {
     let capacity = 10.0;
+    let mut report = onepiece::bench::Report::new("e6_fast_reject");
     println!("=== E8: fast-reject under offered-load sweep (capacity {capacity} req/s) ===");
     println!(
         "{:<12} {:>14} {:>12} {:>12} | {:>14} {:>12} {:>12}",
@@ -76,7 +77,13 @@ fn main() {
             g2,
             p2
         );
+        report
+            .add(format!("fr.goodput.x{mult}"), g1)
+            .add(format!("fr.p99_s.x{mult}"), p1)
+            .add(format!("nofr.goodput.x{mult}"), g2)
+            .add(format!("nofr.p99_s.x{mult}"), p2);
     }
+    report.write();
     println!(
         "\nshape: with fast-reject, p99 stays ~flat past capacity and goodput \
          plateaus; without it, p99 grows with offered load (unbounded queue)"

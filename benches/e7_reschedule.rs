@@ -69,6 +69,7 @@ fn main() {
     assert_eq!(nm.stage_instances(key(3)).len(), 1);
 
     // --- decision latency vs fleet size ---
+    let mut report = bench::Report::new("e7_reschedule");
     bench::header("E9b: rebalance decision latency vs fleet size");
     for fleet in [16usize, 64, 256, 1024] {
         let nm = NodeManager::new(ClusterConfig::i2v_default().apps, 0.85);
@@ -78,7 +79,7 @@ fn main() {
             nm.assign(n, Some(key((i % 4) as u32)));
             nm.report_utilization(n, if i % 4 == 2 { 0.99 } else { 0.3 });
         }
-        bench::quick(&format!("fleet={fleet} instances"), || {
+        let r = bench::quick(&format!("fleet={fleet} instances"), || {
             // Rebalance + undo so each iteration sees the same state.
             if let Some(a) = nm.rebalance() {
                 nm.assign(a.node, a.from);
@@ -88,5 +89,7 @@ fn main() {
                 nm.report_utilization(a.node, 0.3);
             }
         });
+        report.add_result(&format!("rebalance_fleet{fleet}"), &r);
     }
+    report.write();
 }

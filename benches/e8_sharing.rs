@@ -50,6 +50,11 @@ fn main() {
         unshared,
         100.0 * (2.0 * per_app as f64 - unshared as f64) / (2.0 * per_app as f64)
     );
+    let mut report = onepiece::bench::Report::new("e8_sharing");
+    report.add(
+        "gpu_saving_frac",
+        (2.0 * per_app as f64 - unshared as f64) / (2.0 * per_app as f64),
+    );
 
     // --- live shared pipeline: one set serving both apps, sharing all
     //     stages except diffusion ---
@@ -86,6 +91,9 @@ fn main() {
         done[0], done[1]
     );
     assert!(done[0] >= 4 && done[1] >= 4, "both workflows must flow");
+    report.add("app1_completed", done[0] as f64);
+    report.add("app2_completed", done[1] as f64);
+    report.write();
     set.shutdown();
     println!("both workflows complete over the SAME encoder/decoder instances; only diffusion differs");
 }

@@ -9,16 +9,18 @@ use std::sync::Arc;
 
 fn main() {
     let clock = Arc::new(SystemClock);
+    let mut report = bench::Report::new("e9_db");
 
     bench::header("E9a: put + fetch-purge per result");
     for size in [1 << 10, 64 << 10, 1 << 20, 16 << 20] {
         let db = MemDb::new(clock.clone(), u64::MAX);
         let data = vec![5u8; size];
-        bench::quick(&format!("value {:>6} KiB", size / 1024), || {
+        let r = bench::quick(&format!("value {:>6} KiB", size / 1024), || {
             let uid = Uid::fresh(NodeId(1));
             db.put(uid, data.clone());
             assert!(db.fetch(uid).is_some());
         });
+        report.add_result(&format!("put_fetch_{}kib", size / 1024), &r);
     }
 
     bench::header("E9b: replication fan-out (put to N replicas)");
@@ -27,7 +29,7 @@ fn main() {
             .map(|_| Arc::new(MemDb::new(clock.clone(), u64::MAX)))
             .collect();
         let data = vec![7u8; 256 << 10];
-        bench::quick(&format!("replicas={replicas} value=256KiB"), || {
+        let r = bench::quick(&format!("replicas={replicas} value=256KiB"), || {
             let uid = Uid::fresh(NodeId(1));
             for db in &dbs {
                 db.put(uid, data.clone());
@@ -35,6 +37,7 @@ fn main() {
             // One fetch purges the primary; peers expire by TTL.
             assert!(dbs[0].fetch(uid).is_some());
         });
+        report.add_result(&format!("replicated_put_r{replicas}"), &r);
     }
 
     bench::header("E9c: client fall-through on replica failure");
@@ -44,11 +47,12 @@ fn main() {
             .collect();
         let client = DbClient::new(dbs.clone());
         client.set_alive(0, false); // dead primary
-        bench::quick("fetch with dead primary (2 hops)", || {
+        let r = bench::quick("fetch with dead primary (2 hops)", || {
             let uid = Uid::fresh(NodeId(1));
             dbs[1].put(uid, vec![1u8; 1024]);
             assert!(client.fetch(uid).is_some());
         });
+        report.add_result("fetch_dead_primary", &r);
     }
 
     bench::header("E9d: TTL purge sweep");
@@ -56,12 +60,14 @@ fn main() {
         use onepiece::util::ManualClock;
         let mclock = ManualClock::new();
         let db = MemDb::new(Arc::new(mclock.clone()), 1_000);
-        bench::quick("purge 10k expired entries", || {
+        let r = bench::quick("purge 10k expired entries", || {
             for i in 0..10_000u32 {
                 db.put(Uid(i as u128), vec![0u8; 64]);
             }
             mclock.advance(10_000);
             assert_eq!(db.purge_expired(), 10_000);
         });
+        report.add_result("ttl_purge_10k", &r);
     }
+    report.write();
 }

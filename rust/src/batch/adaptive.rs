@@ -1,0 +1,169 @@
+//! The adaptive batch-window controller.
+//!
+//! Static windows force a bad trade: sized for peak they tax latency at
+//! low load, sized for latency they starve batches under backlog. Batch
+//! sizing must react to load rather than stay a static knob, so the
+//! effective window here moves between ~0 and the policy's `max_wait`
+//! from two signals the instance already has:
+//!
+//! - **fill + backlog** (per formed batch): a batch that filled to
+//!   `max_batch`, or left messages queued behind it, means arrivals
+//!   outpace service — grow the window toward `max_wait` so batches
+//!   fatten. A batch that closed under half-full means the window is
+//!   buying latency without buying amortization — shrink it.
+//! - **utilization** (per §4.2 report): a mostly-idle instance has no
+//!   throughput problem to solve — shrink toward immediate dispatch so
+//!   light traffic keeps single-request latency.
+//!
+//! The current window is exported to the NodeManager with the
+//! utilization heartbeat so the §8.2 allocator can tell "stage is slow"
+//! from "stage is coalescing on purpose".
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Utilization under which the controller treats the instance as idle
+/// and collapses the window for latency.
+const IDLE_UTIL: f64 = 0.3;
+
+/// Shrink floor: never adapt below `max_wait / SHRINK_DENOM` (a window
+/// of exactly zero could never re-grow from fill observations alone
+/// because no batch would ever form).
+const SHRINK_DENOM: u64 = 16;
+
+/// Lock-free adaptive window shared by an instance's workers (who form
+/// batches) and its control thread (who feeds utilization and exports
+/// the value).
+pub struct AdaptiveWindow {
+    /// Current effective window, µs. `u64::MAX` = unset (first use
+    /// starts from the policy cap).
+    window_us: AtomicU64,
+    /// Last policy cap seen, µs (the shrink floor derives from it).
+    cap_us: AtomicU64,
+}
+
+impl Default for AdaptiveWindow {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl AdaptiveWindow {
+    pub fn new() -> Self {
+        Self {
+            window_us: AtomicU64::new(u64::MAX),
+            cap_us: AtomicU64::new(0),
+        }
+    }
+
+    fn floor_us(cap_us: u64) -> u64 {
+        (cap_us / SHRINK_DENOM).max(1)
+    }
+
+    /// Effective window for the next batch under `cap` (the policy's
+    /// per-class `max_wait`). Also remembers the cap for the
+    /// utilization-driven shrink path.
+    pub fn current(&self, cap: Duration) -> Duration {
+        let cap_us = cap.as_micros() as u64;
+        self.cap_us.store(cap_us, Ordering::Relaxed);
+        Duration::from_micros(self.window_us.load(Ordering::Relaxed).min(cap_us))
+    }
+
+    /// Feed one formed batch: `filled` members out of `max_batch`
+    /// possible, with `backlog` messages still queued when it closed.
+    pub fn observe(&self, filled: usize, max_batch: usize, backlog: usize, cap: Duration) {
+        let cap_us = cap.as_micros() as u64;
+        if cap_us == 0 {
+            return;
+        }
+        let cur = self.window_us.load(Ordering::Relaxed).min(cap_us);
+        let next = if filled >= max_batch || backlog > 0 {
+            // Demand: arrivals outpace service — open the window toward
+            // the cap so batches reach max_batch.
+            (cur.saturating_mul(3) / 2).max(cur + 1).min(cap_us)
+        } else if filled <= max_batch / 2 {
+            // The window closed under half-full: it is buying latency,
+            // not amortization.
+            (cur / 2).max(Self::floor_us(cap_us))
+        } else {
+            cur
+        };
+        self.window_us.store(next, Ordering::Relaxed);
+    }
+
+    /// Feed a §4.2 utilization sample (the instance control thread calls
+    /// this each report period): an idle instance collapses its window.
+    pub fn observe_utilization(&self, util: f64) {
+        if util >= IDLE_UTIL {
+            return;
+        }
+        let cap_us = self.cap_us.load(Ordering::Relaxed);
+        if cap_us == 0 {
+            return;
+        }
+        let cur = self.window_us.load(Ordering::Relaxed).min(cap_us);
+        self.window_us
+            .store((cur / 2).max(Self::floor_us(cap_us)), Ordering::Relaxed);
+    }
+
+    /// Current window in µs — what the control thread exports to the
+    /// NodeManager (`0` until the first [`AdaptiveWindow::current`]).
+    pub fn window_us(&self) -> u64 {
+        let cap = self.cap_us.load(Ordering::Relaxed);
+        self.window_us.load(Ordering::Relaxed).min(cap)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const CAP: Duration = Duration::from_micros(1_600);
+
+    #[test]
+    fn starts_at_the_policy_cap() {
+        let w = AdaptiveWindow::new();
+        assert_eq!(w.current(CAP), CAP);
+        assert_eq!(w.window_us(), 1_600);
+    }
+
+    #[test]
+    fn backlog_grows_and_low_fill_shrinks() {
+        let w = AdaptiveWindow::new();
+        let _ = w.current(CAP);
+        // Half-empty batches: shrink toward the floor…
+        for _ in 0..10 {
+            w.observe(1, 8, 0, CAP);
+        }
+        assert_eq!(w.window_us(), 100, "floor = cap/16");
+        // …then sustained backlog re-opens the window up to the cap.
+        for _ in 0..12 {
+            w.observe(8, 8, 3, CAP);
+        }
+        assert_eq!(w.window_us(), 1_600);
+        // Mid-fill without backlog holds steady.
+        let before = w.window_us();
+        w.observe(6, 8, 0, CAP);
+        assert_eq!(w.window_us(), before);
+    }
+
+    #[test]
+    fn low_utilization_collapses_window() {
+        let w = AdaptiveWindow::new();
+        let _ = w.current(CAP);
+        w.observe_utilization(0.05);
+        assert_eq!(w.window_us(), 800);
+        // Busy instances keep their window.
+        w.observe_utilization(0.9);
+        assert_eq!(w.window_us(), 800);
+    }
+
+    #[test]
+    fn zero_cap_is_inert() {
+        let w = AdaptiveWindow::new();
+        assert_eq!(w.current(Duration::ZERO), Duration::ZERO);
+        w.observe(8, 8, 9, Duration::ZERO);
+        w.observe_utilization(0.0);
+        assert_eq!(w.window_us(), 0);
+    }
+}

@@ -1,0 +1,306 @@
+//! The batch assembler: turns single-message queue fetches into
+//! micro-batches.
+
+use super::{AdaptiveWindow, BatchPolicy};
+use crate::client::RequestTracker;
+use crate::transport::WorkflowMessage;
+use crate::workflow::SchedQueue;
+use std::time::{Duration, Instant};
+
+/// One assembled micro-batch: ≥ 1 compatible messages (same app, same
+/// stage, same priority band) a worker executes in a single
+/// `AppLogic::execute_batch` invocation.
+#[derive(Debug)]
+pub struct MicroBatch {
+    pub members: Vec<WorkflowMessage>,
+    /// How long formation waited after the first member (0 for bypass).
+    pub wait: Duration,
+    /// The policy bypassed batching for this request (Interactive-class
+    /// bypass or the worker-0 fast lane) — accounted separately from
+    /// formed batches.
+    pub bypassed: bool,
+}
+
+impl MicroBatch {
+    /// A batch of one, formed without waiting.
+    pub fn single(msg: WorkflowMessage, bypassed: bool) -> Self {
+        Self { members: vec![msg], wait: Duration::ZERO, bypassed }
+    }
+
+    pub fn len(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+}
+
+/// Per-instance batch former. Holds one [`AdaptiveWindow`] **per
+/// priority band** — batches only form within a band, and per-class
+/// `max_wait` overrides would otherwise clobber each other's window and
+/// cap state through a shared controller. The policy arrives per call
+/// because reassignment can change it at any control poll.
+#[derive(Default)]
+pub struct BatchAssembler {
+    adaptive: [AdaptiveWindow; 3],
+}
+
+impl BatchAssembler {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Feed a §4.2 utilization sample to every band's controller (an
+    /// idle instance collapses all windows for latency).
+    pub fn observe_utilization(&self, util: f64) {
+        for w in &self.adaptive {
+            w.observe_utilization(util);
+        }
+    }
+
+    /// The widest effective window across bands, µs — what the control
+    /// thread exports to the NodeManager (0 until the first batch).
+    pub fn window_us(&self) -> u64 {
+        self.adaptive.iter().map(AdaptiveWindow::window_us).max().unwrap_or(0)
+    }
+
+    /// Grow `first` (already fetched from the queue) into a micro-batch
+    /// by draining compatible messages — same app, same stage, same
+    /// priority band — until one of the closing conditions fires:
+    ///
+    /// - **size**: `max_batch` for the first member's SLO class;
+    /// - **deadline of the oldest member**: the batch never waits the
+    ///   first member past its SLO deadline to fatten itself;
+    /// - **window expiry**: the (adaptive) formation window runs out.
+    ///
+    /// `fast_lane` callers (worker 0 of a multi-worker stage) always get
+    /// a bypass batch of one, so one worker stays immediately available
+    /// for bypassing Interactive arrivals.
+    pub fn assemble(
+        &self,
+        first: WorkflowMessage,
+        policy: &BatchPolicy,
+        queue: &SchedQueue,
+        tracker: &RequestTracker,
+        fast_lane: bool,
+    ) -> MicroBatch {
+        let prio = tracker.priority_of(first.header.uid);
+        let cap = policy.max_batch_for(prio);
+        if fast_lane || cap <= 1 {
+            return MicroBatch::single(first, true);
+        }
+        let wait_cap = policy.max_wait_for(prio);
+        let band = prio.index();
+        let window = if policy.adaptive {
+            self.adaptive[band].current(wait_cap)
+        } else {
+            wait_cap
+        };
+        let start = Instant::now();
+        let mut close = start + window;
+        // Deadline-of-oldest-member: `first` is the oldest (FIFO bands),
+        // so its remaining SLO budget caps the wait.
+        if let Some(left) = tracker.time_left(first.header.uid) {
+            close = close.min(start + left);
+        }
+        let (app, stage) = (first.header.app, first.header.stage);
+        let mut members = vec![first];
+        while members.len() < cap {
+            match queue.fetch_matching(band, app, stage, close) {
+                Some(m) => members.push(m),
+                // Window expired / queue closed / mode changed.
+                None => break,
+            }
+        }
+        let wait = start.elapsed();
+        if policy.adaptive {
+            // Backlog = messages this batch *could* have taken (same
+            // band/app/stage) — unrelated or bypass-class queue depth
+            // must not hold the window open for a class with nothing to
+            // coalesce.
+            self.adaptive[band].observe(
+                members.len(),
+                cap,
+                queue.depth_matching(band, app, stage),
+                wait_cap,
+            );
+        }
+        MicroBatch { members, wait, bypassed: false }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::client::Priority;
+    use crate::config::{BatchSettings, SchedMode};
+    use crate::metrics::Registry;
+    use crate::transport::{AppId, MessageHeader, Payload, StageId};
+    use crate::util::{NodeId, SystemClock, Uid};
+    use std::sync::Arc;
+
+    fn msg(i: u32, app: u32, stage: u32) -> WorkflowMessage {
+        WorkflowMessage {
+            header: MessageHeader {
+                uid: Uid(i as u128),
+                ts_ns: 0,
+                app: AppId(app),
+                stage: StageId(stage),
+                origin: NodeId(0),
+            },
+            payload: Payload::Bytes(vec![i as u8]),
+        }
+    }
+
+    fn setup() -> (Arc<SchedQueue>, Arc<RequestTracker>, BatchPolicy) {
+        let queue = SchedQueue::new(SchedMode::Individual, 2);
+        let clock: Arc<dyn crate::util::Clock> = Arc::new(SystemClock);
+        let tracker = Arc::new(RequestTracker::new(clock, Registry::new()));
+        let policy = BatchPolicy::from_settings(&BatchSettings {
+            max_batch: 4,
+            max_wait_us: 20_000, // 20 ms window: plenty for queued members
+            adaptive: false,
+            interactive_bypass: true,
+            max_starvation_ms: 0,
+        });
+        (queue, tracker, policy)
+    }
+
+    fn reg(tracker: &RequestTracker, i: u32, prio: Priority) {
+        tracker.register(Uid(i as u128), prio, None);
+    }
+
+    #[test]
+    fn closes_on_size_with_compatible_members() {
+        let (queue, tracker, policy) = setup();
+        let asm = BatchAssembler::new();
+        for i in 0..6 {
+            reg(&tracker, i, Priority::Batch);
+            queue.dispatch(msg(i, 1, 0), Priority::Batch);
+        }
+        let first = queue.fetch(0, Duration::from_millis(10)).unwrap();
+        let t0 = Instant::now();
+        let b = asm.assemble(first, &policy, &queue, &tracker, false);
+        assert_eq!(b.len(), 4, "closes on max_batch");
+        assert!(!b.bypassed);
+        assert!(
+            t0.elapsed() < Duration::from_millis(15),
+            "a full queue must not wait out the window"
+        );
+        assert_eq!(queue.depth(), 2, "surplus stays queued");
+        let uids: Vec<u128> = b.members.iter().map(|m| m.header.uid.0).collect();
+        assert_eq!(uids, vec![0, 1, 2, 3], "FIFO order preserved");
+    }
+
+    #[test]
+    fn closes_on_window_expiry_when_queue_runs_dry() {
+        let (queue, tracker, policy) = setup();
+        let asm = BatchAssembler::new();
+        for i in 0..2 {
+            reg(&tracker, i, Priority::Standard);
+            queue.dispatch(msg(i, 1, 0), Priority::Standard);
+        }
+        let first = queue.fetch(0, Duration::from_millis(10)).unwrap();
+        let t0 = Instant::now();
+        let b = asm.assemble(first, &policy, &queue, &tracker, false);
+        assert_eq!(b.len(), 2, "takes what arrived, then times out");
+        assert!(t0.elapsed() >= Duration::from_millis(19), "waited the window out");
+    }
+
+    #[test]
+    fn interactive_bypasses_and_fast_lane_bypasses() {
+        let (queue, tracker, policy) = setup();
+        let asm = BatchAssembler::new();
+        reg(&tracker, 7, Priority::Interactive);
+        let b = asm.assemble(msg(7, 1, 0), &policy, &queue, &tracker, false);
+        assert!(b.bypassed);
+        assert_eq!(b.len(), 1);
+        // Fast lane: even a Batch-class request stays single on worker 0.
+        reg(&tracker, 8, Priority::Batch);
+        let b = asm.assemble(msg(8, 1, 0), &policy, &queue, &tracker, true);
+        assert!(b.bypassed);
+        assert_eq!(b.len(), 1);
+    }
+
+    #[test]
+    fn incompatible_messages_stay_queued() {
+        let (queue, tracker, policy) = setup();
+        let asm = BatchAssembler::new();
+        for (i, (app, stage, prio)) in [
+            (1, 0, Priority::Batch),     // compatible
+            (2, 0, Priority::Batch),     // other app
+            (1, 1, Priority::Batch),     // other stage
+            (1, 0, Priority::Standard),  // other band
+        ]
+        .into_iter()
+        .enumerate()
+        {
+            let i = i as u32;
+            reg(&tracker, i, prio);
+            queue.dispatch(msg(i, app, stage), prio);
+        }
+        reg(&tracker, 9, Priority::Batch);
+        let b = asm.assemble(msg(9, 1, 0), &policy, &queue, &tracker, false);
+        let uids: Vec<u128> = b.members.iter().map(|m| m.header.uid.0).collect();
+        assert_eq!(uids, vec![9, 0], "only the same-app/stage/band member joins");
+        assert_eq!(queue.depth(), 3, "incompatible messages remain for other workers");
+    }
+
+    #[test]
+    fn oldest_member_deadline_caps_the_window() {
+        let (queue, tracker, policy) = setup();
+        let asm = BatchAssembler::new();
+        // 5 ms of SLO budget left against a 20 ms window: formation must
+        // close early instead of holding the request past its deadline.
+        tracker.register(Uid(1), Priority::Batch, Some(Duration::from_millis(5)));
+        let t0 = Instant::now();
+        let b = asm.assemble(msg(1, 1, 0), &policy, &queue, &tracker, false);
+        assert_eq!(b.len(), 1);
+        assert!(
+            t0.elapsed() < Duration::from_millis(15),
+            "deadline-of-oldest must beat window expiry ({:?})",
+            t0.elapsed()
+        );
+    }
+
+    #[test]
+    fn incompatible_backlog_does_not_hold_the_window_open() {
+        let (queue, tracker, mut policy) = setup();
+        policy.adaptive = true;
+        let asm = BatchAssembler::new();
+        // Unrelated bypass-class backlog sits in band 0.
+        for i in 0..6 {
+            reg(&tracker, i, Priority::Interactive);
+            queue.dispatch(msg(i, 1, 0), Priority::Interactive);
+        }
+        // A lone Standard request closes under-filled: with whole-queue
+        // depth as the backlog signal the window would ratchet toward
+        // the cap; the compatible-only signal shrinks it instead.
+        reg(&tracker, 9, Priority::Standard);
+        let cap_us = policy.max_wait_for(Priority::Standard).as_micros() as u64;
+        let b = asm.assemble(msg(9, 1, 0), &policy, &queue, &tracker, false);
+        assert_eq!(b.len(), 1);
+        assert!(
+            asm.window_us() < cap_us,
+            "unrelated backlog must not count as coalescing demand"
+        );
+    }
+
+    #[test]
+    fn adaptive_policy_feeds_the_controller() {
+        let (queue, tracker, mut policy) = setup();
+        policy.adaptive = true;
+        let asm = BatchAssembler::new();
+        for i in 0..8 {
+            reg(&tracker, i, Priority::Batch);
+            queue.dispatch(msg(i, 1, 0), Priority::Batch);
+        }
+        let first = queue.fetch(0, Duration::from_millis(10)).unwrap();
+        let b = asm.assemble(first, &policy, &queue, &tracker, false);
+        assert_eq!(b.len(), 4);
+        // Full batch + backlog: the controller must have seen demand and
+        // kept the window open (it starts at the cap).
+        assert_eq!(asm.window_us(), 20_000);
+    }
+}

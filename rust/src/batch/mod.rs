@@ -1,0 +1,49 @@
+//! Adaptive micro-batching for the stage data plane (§4.3–§4.5
+//! extended).
+//!
+//! The paper's stage executors pay full per-invocation overhead for
+//! every request: weight streaming, kernel launch, and the
+//! `AppLogic::execute` dispatch all repeat per message, and the
+//! [`crate::workflow::SchedQueue`] hands TaskWorkers exactly one
+//! `WorkflowMessage` at a time. Diffusion-style stages amortize most of
+//! that cost across a batch — micro-served diffusion serving gains the
+//! bulk of its throughput from stage-local request batching — so this
+//! module inserts an **adaptive micro-batching engine** between the
+//! scheduler queue and the workers:
+//!
+//! - [`BatchPolicy`] — per-stage knobs from the config `batch` block:
+//!   `max_batch`, the formation window `max_wait`, and per-priority
+//!   overrides so Interactive traffic bypasses batching entirely while
+//!   Batch-tier traffic coalesces aggressively.
+//! - [`BatchAssembler`] — drains *compatible* messages (same app, same
+//!   stage, same priority band) from the queue into a [`MicroBatch`],
+//!   closing on size, on the **deadline of the oldest member** (never
+//!   wait a request past its SLO to fatten a batch), or on window
+//!   expiry.
+//! - [`AdaptiveWindow`] — resizes the effective window from observed
+//!   fill and backlog plus the §4.2 utilization reports: low utilization
+//!   shrinks the window (latency mode), backlog grows it toward
+//!   `max_batch` (throughput mode). The current window is exported to
+//!   the NodeManager alongside the utilization heartbeat
+//!   ([`crate::workflow::ControlPlane::report_batch_window`]) so §8.2
+//!   elastic reallocation and batch sizing don't fight each other.
+//!
+//! Batching is **off by default**: without a config `batch` block the
+//! worker loop takes the single-request path unchanged. Collaboration
+//! Mode never batches (one broadcast request occupies all ranks), and
+//! when a stage runs more than one worker, worker 0 becomes a
+//! **reserved fast lane** serving only the bypass classes — without the
+//! reservation, bypass would skip batch *formation* but still wait
+//! behind a worker pool entirely mid-batch (head-of-line blocking),
+//! costing bypassing traffic the very tail latency it was promised.
+//! Mirrors the proxy's `interactive_reserve`: a slice of capacity is
+//! the price of the latency guarantee. Single-worker stages have no
+//! lane to spare; there, Interactive bypass skips formation only.
+
+mod adaptive;
+mod assembler;
+mod policy;
+
+pub use adaptive::AdaptiveWindow;
+pub use assembler::{BatchAssembler, MicroBatch};
+pub use policy::{BatchPolicy, ClassPolicy};

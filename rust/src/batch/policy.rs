@@ -1,0 +1,135 @@
+//! Per-stage batching policy: size/window caps with per-priority
+//! overrides.
+
+use crate::client::Priority;
+use crate::config::BatchSettings;
+use std::time::Duration;
+
+/// Override of the batching knobs for one SLO class. `None` fields
+/// inherit the stage-wide value.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ClassPolicy {
+    pub max_batch: Option<usize>,
+    pub max_wait: Option<Duration>,
+}
+
+/// Resolved per-stage batching policy, carried inside the
+/// [`crate::workflow::StageRole`] an instance receives from the
+/// NodeManager. Built from the config's [`BatchSettings`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct BatchPolicy {
+    /// Stage-wide member cap per micro-batch.
+    pub max_batch: usize,
+    /// Stage-wide formation-window cap (the adaptive controller shrinks
+    /// the effective window below this).
+    pub max_wait: Duration,
+    /// Let [`crate::batch::AdaptiveWindow`] resize the window.
+    pub adaptive: bool,
+    /// Per-priority overrides, indexed by [`Priority::index`]. The
+    /// default derived from `interactive_bypass` pins Interactive to
+    /// `max_batch = 1, max_wait = 0` — a bypassing request is executed
+    /// the moment a worker fetches it.
+    pub per_priority: [ClassPolicy; 3],
+}
+
+impl BatchPolicy {
+    /// Resolve a config `batch` block into a policy.
+    pub fn from_settings(s: &BatchSettings) -> Self {
+        let mut per_priority = [ClassPolicy::default(); 3];
+        if s.interactive_bypass {
+            per_priority[Priority::Interactive.index()] = ClassPolicy {
+                max_batch: Some(1),
+                max_wait: Some(Duration::ZERO),
+            };
+        }
+        Self {
+            max_batch: s.max_batch.max(1),
+            max_wait: Duration::from_micros(s.max_wait_us),
+            adaptive: s.adaptive,
+            per_priority,
+        }
+    }
+
+    /// Effective member cap for one SLO class.
+    pub fn max_batch_for(&self, p: Priority) -> usize {
+        self.per_priority[p.index()]
+            .max_batch
+            .unwrap_or(self.max_batch)
+            .max(1)
+    }
+
+    /// Effective window cap for one SLO class.
+    pub fn max_wait_for(&self, p: Priority) -> Duration {
+        self.per_priority[p.index()].max_wait.unwrap_or(self.max_wait)
+    }
+
+    /// True when this class takes the single-request path (no batch is
+    /// ever formed for it).
+    pub fn bypasses(&self, p: Priority) -> bool {
+        self.max_batch_for(p) <= 1
+    }
+
+    /// True when at least one SLO class bypasses batching — the
+    /// condition under which a multi-worker stage reserves worker 0 as
+    /// the bypass fast lane. When nothing bypasses, there is no lane to
+    /// reserve and every worker batches.
+    pub fn any_bypass(&self) -> bool {
+        Priority::ALL.iter().any(|p| self.bypasses(*p))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn settings() -> BatchSettings {
+        BatchSettings {
+            max_batch: 8,
+            max_wait_us: 2_000,
+            adaptive: true,
+            interactive_bypass: true,
+            max_starvation_ms: 0,
+        }
+    }
+
+    #[test]
+    fn interactive_bypass_pins_class_to_single() {
+        let p = BatchPolicy::from_settings(&settings());
+        assert!(p.bypasses(Priority::Interactive));
+        assert_eq!(p.max_batch_for(Priority::Interactive), 1);
+        assert_eq!(p.max_wait_for(Priority::Interactive), Duration::ZERO);
+        // The coalescing classes inherit the stage-wide knobs.
+        for q in [Priority::Standard, Priority::Batch] {
+            assert_eq!(p.max_batch_for(q), 8);
+            assert_eq!(p.max_wait_for(q), Duration::from_micros(2_000));
+            assert!(!p.bypasses(q));
+        }
+    }
+
+    #[test]
+    fn bypass_off_batches_every_class() {
+        let mut s = settings();
+        s.interactive_bypass = false;
+        let p = BatchPolicy::from_settings(&s);
+        assert!(!p.bypasses(Priority::Interactive));
+        assert_eq!(p.max_batch_for(Priority::Interactive), 8);
+        // No class bypasses → no fast lane is reserved.
+        assert!(!p.any_bypass());
+        assert!(BatchPolicy::from_settings(&settings()).any_bypass());
+    }
+
+    #[test]
+    fn explicit_class_override_wins() {
+        let mut p = BatchPolicy::from_settings(&settings());
+        p.per_priority[Priority::Batch.index()] = ClassPolicy {
+            max_batch: Some(32),
+            max_wait: Some(Duration::from_millis(10)),
+        };
+        assert_eq!(p.max_batch_for(Priority::Batch), 32);
+        assert_eq!(p.max_wait_for(Priority::Batch), Duration::from_millis(10));
+        // Zero-sized overrides clamp to a real batch of one.
+        p.per_priority[Priority::Standard.index()].max_batch = Some(0);
+        assert_eq!(p.max_batch_for(Priority::Standard), 1);
+        assert!(p.bypasses(Priority::Standard));
+    }
+}

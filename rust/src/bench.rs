@@ -5,7 +5,13 @@
 //! experiment prints paper-style rows. Wall-clock based; for modelled
 //! results (fabric latency) the benches read simulated-ns counters
 //! instead.
+//!
+//! Every experiment additionally writes a machine-readable
+//! `BENCH_<name>.json` via [`Report`] — a flat `metric → value` map —
+//! so the performance trajectory of the repo can be tracked across
+//! commits instead of living only in scrollback.
 
+use crate::util::Json;
 use std::time::{Duration, Instant};
 
 /// Result of one timed benchmark.
@@ -86,6 +92,65 @@ pub fn quick<F: FnMut()>(name: &str, f: F) -> BenchResult {
     bench(name, Duration::from_millis(100), Duration::from_millis(400), f)
 }
 
+/// Machine-readable experiment report. Collects named scalar metrics
+/// and writes `BENCH_<name>.json` into the working directory (the repo
+/// root under `cargo bench`), alongside the human-readable table:
+///
+/// ```json
+/// {"bench": "e14_microbatch", "metrics": {"batch_tier_speedup": 2.6}}
+/// ```
+pub struct Report {
+    name: String,
+    metrics: Vec<(String, f64)>,
+}
+
+impl Report {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self { name: name.into(), metrics: Vec::new() }
+    }
+
+    /// Record one scalar. Non-finite values are skipped (they would
+    /// break the JSON) — absent keys are the "could not measure" signal.
+    pub fn add(&mut self, metric: impl Into<String>, value: f64) -> &mut Self {
+        if value.is_finite() {
+            self.metrics.push((metric.into(), value));
+        }
+        self
+    }
+
+    /// Record a [`BenchResult`]'s headline numbers under
+    /// `<prefix>.{mean_ns,p50_ns,p99_ns,ops_per_sec}`.
+    pub fn add_result(&mut self, prefix: &str, r: &BenchResult) -> &mut Self {
+        self.add(format!("{prefix}.mean_ns"), r.mean_ns)
+            .add(format!("{prefix}.p50_ns"), r.p50_ns)
+            .add(format!("{prefix}.p99_ns"), r.p99_ns)
+            .add(format!("{prefix}.ops_per_sec"), r.ops_per_sec())
+    }
+
+    /// The report as a JSON document.
+    pub fn to_json(&self) -> Json {
+        let metrics: std::collections::BTreeMap<String, Json> = self
+            .metrics
+            .iter()
+            .map(|(k, v)| (k.clone(), Json::Num(*v)))
+            .collect();
+        let mut root = std::collections::BTreeMap::new();
+        root.insert("bench".to_string(), Json::Str(self.name.clone()));
+        root.insert("metrics".to_string(), Json::Obj(metrics));
+        Json::Obj(root)
+    }
+
+    /// Write `BENCH_<name>.json` and print where it went. Benches call
+    /// this last; an unwritable working directory fails the bench (a
+    /// silently missing perf record is worse than a loud one).
+    pub fn write(&self) {
+        let path = format!("BENCH_{}.json", self.name);
+        std::fs::write(&path, self.to_json().to_string_compact() + "\n")
+            .unwrap_or_else(|e| panic!("write {path}: {e}"));
+        println!("\nmachine-readable results: {path}");
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -104,6 +169,32 @@ mod tests {
         assert!(r.mean_ns > 0.0);
         assert!(r.p50_ns <= r.p99_ns);
         assert!(r.min_ns <= r.p50_ns);
+    }
+
+    #[test]
+    fn report_serializes_and_skips_non_finite() {
+        let mut r = Report::new("unit");
+        r.add("a", 1.5).add("nan", f64::NAN).add("inf", f64::INFINITY);
+        r.add_result(
+            "b",
+            &BenchResult {
+                iters: 1,
+                mean_ns: 2e6,
+                p50_ns: 2e6,
+                p95_ns: 2e6,
+                p99_ns: 3e6,
+                min_ns: 1e6,
+            },
+        );
+        let j = r.to_json();
+        let back = Json::parse(&j.to_string_compact()).unwrap();
+        assert_eq!(back.get("bench").and_then(Json::as_str), Some("unit"));
+        let m = back.get("metrics").unwrap();
+        assert_eq!(m.get("a").and_then(Json::as_f64), Some(1.5));
+        assert_eq!(m.get("b.p99_ns").and_then(Json::as_f64), Some(3e6));
+        assert!((m.get("b.ops_per_sec").and_then(Json::as_f64).unwrap() - 500.0).abs() < 1e-9);
+        assert!(m.get("nan").is_none(), "non-finite values are dropped");
+        assert!(m.get("inf").is_none());
     }
 
     #[test]

@@ -281,6 +281,20 @@ impl RequestTracker {
         true
     }
 
+    /// Remaining SLO budget of a tracked request: time until its
+    /// deadline, `None` when it has no deadline (or is untracked). The
+    /// batch assembler uses this so formation never holds the oldest
+    /// member past its deadline; returns `Duration::ZERO` once expired.
+    pub fn time_left(&self, uid: Uid) -> Option<Duration> {
+        let now = self.clock.now_ns();
+        self.inner
+            .lock()
+            .unwrap()
+            .get(&uid)
+            .and_then(|e| e.deadline_ns)
+            .map(|d| Duration::from_nanos(d.saturating_sub(now)))
+    }
+
     /// Scheduling priority of a tracked request (Standard if unknown —
     /// e.g. the entry aged out of the tracker).
     pub fn priority_of(&self, uid: Uid) -> Priority {
@@ -468,6 +482,23 @@ mod tests {
         let u = uid(3);
         assert!(t.cancel(u));
         assert_eq!(t.verdict(u), InFlightVerdict::Cancelled);
+    }
+
+    #[test]
+    fn time_left_tracks_the_deadline() {
+        let (c, t) = setup();
+        let u = uid(20);
+        t.register(u, Priority::Batch, Some(Duration::from_millis(10)));
+        assert_eq!(t.time_left(u), Some(Duration::from_millis(10)));
+        c.advance(4_000_000);
+        assert_eq!(t.time_left(u), Some(Duration::from_millis(6)));
+        c.advance(10_000_000);
+        assert_eq!(t.time_left(u), Some(Duration::ZERO), "expired clamps to zero");
+        // No deadline / untracked: no budget to report.
+        let v = uid(21);
+        t.register(v, Priority::Batch, None);
+        assert_eq!(t.time_left(v), None);
+        assert_eq!(t.time_left(uid(22)), None);
     }
 
     #[test]

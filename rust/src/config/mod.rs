@@ -10,8 +10,9 @@
 mod types;
 
 pub use types::{
-    AppConfig, ChaosSettings, ClusterConfig, ConfigError, DbSettings, ExecModel,
-    FabricKind, NmSettings, ProxySettings, RingSettings, SchedMode, StageConfig,
+    AppConfig, BatchSettings, ChaosSettings, ClusterConfig, ConfigError, DbSettings,
+    ExecModel, FabricKind, NmSettings, ProxySettings, RingSettings, SchedMode,
+    StageConfig,
 };
 
 #[cfg(test)]

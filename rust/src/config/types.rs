@@ -110,6 +110,49 @@ impl ExecModel {
     }
 }
 
+/// Micro-batching settings for the stage data plane (the adaptive
+/// engine in [`crate::batch`]). **Absent = batching off**: without a
+/// `batch` block the single-request path is taken unchanged.
+///
+/// Appears in two places: a top-level `batch` block supplies the default
+/// for every Individual-mode stage, and a per-stage `batch` block
+/// overrides it (Collaboration-mode stages never batch — collective
+/// execution broadcasts one request to all ranks).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BatchSettings {
+    /// Upper bound on members per micro-batch (>= 1; 1 = batching
+    /// effectively off for the stage).
+    pub max_batch: usize,
+    /// Batch-formation window: how long the assembler waits for more
+    /// compatible members after the first, µs. The adaptive controller
+    /// shrinks/grows the *effective* window below this cap.
+    pub max_wait_us: u64,
+    /// Resize the window from observed arrival rate / utilization
+    /// (low load → shrink for latency, backlog → grow toward
+    /// `max_batch`).
+    pub adaptive: bool,
+    /// Interactive-class requests bypass batching entirely (fetched and
+    /// executed one at a time, ahead of forming batches).
+    pub interactive_bypass: bool,
+    /// SchedQueue aging guard: a queued message older than this is
+    /// promoted past higher priority bands, so sustained Interactive
+    /// load cannot starve the Batch band forever. 0 = off (strict
+    /// highest-band-first, the pre-batching behaviour).
+    pub max_starvation_ms: u64,
+}
+
+impl Default for BatchSettings {
+    fn default() -> Self {
+        Self {
+            max_batch: 8,
+            max_wait_us: 2_000,
+            adaptive: true,
+            interactive_bypass: true,
+            max_starvation_ms: 0,
+        }
+    }
+}
+
 /// One workflow stage (§3.3, §4).
 #[derive(Debug, Clone, PartialEq)]
 pub struct StageConfig {
@@ -122,6 +165,9 @@ pub struct StageConfig {
     pub gpus_per_instance: usize,
     pub workers: usize,
     pub mode: SchedMode,
+    /// Per-stage micro-batching override (None = inherit the top-level
+    /// `batch` block, or no batching when that is absent too).
+    pub batch: Option<BatchSettings>,
 }
 
 /// One application workflow (§4.5: the app id routes messages).
@@ -219,6 +265,11 @@ pub struct ClusterConfig {
     pub idle_pool: usize,
     /// Crash injection (off unless enabled).
     pub chaos: ChaosSettings,
+    /// Adaptive micro-batching default for every Individual-mode stage
+    /// (per-stage `batch` blocks override it). **None = batching off**;
+    /// the data plane then runs the paper's one-request-per-invocation
+    /// path unchanged.
+    pub batch: Option<BatchSettings>,
 }
 
 impl ClusterConfig {
@@ -256,6 +307,7 @@ impl ClusterConfig {
                         gpus_per_instance: 1,
                         workers: 1,
                         mode: SchedMode::Individual,
+                        batch: None,
                     },
                     StageConfig {
                         name: "vae_encode".into(),
@@ -264,6 +316,7 @@ impl ClusterConfig {
                         gpus_per_instance: 1,
                         workers: 1,
                         mode: SchedMode::Individual,
+                        batch: None,
                     },
                     StageConfig {
                         name: "diffusion".into(),
@@ -272,6 +325,7 @@ impl ClusterConfig {
                         gpus_per_instance: 1,
                         workers: 1,
                         mode: SchedMode::Collaboration,
+                        batch: None,
                     },
                     StageConfig {
                         name: "vae_decode".into(),
@@ -280,12 +334,58 @@ impl ClusterConfig {
                         gpus_per_instance: 1,
                         workers: 1,
                         mode: SchedMode::Individual,
+                        batch: None,
                     },
                 ],
             }],
             idle_pool: 2,
             chaos: ChaosSettings::default(),
+            batch: None,
         }
+    }
+
+    /// Effective micro-batching settings for one stage: the per-stage
+    /// `batch` block wins, else the top-level default. Collaboration-mode
+    /// stages never batch (one broadcast request occupies every rank),
+    /// so they resolve to `None` regardless.
+    pub fn stage_batch(&self, stage: &StageConfig) -> Option<BatchSettings> {
+        if stage.mode == SchedMode::Collaboration {
+            return None;
+        }
+        stage.batch.or(self.batch)
+    }
+
+    /// The SchedQueue aging bound instances run with: the smallest
+    /// **non-zero** `max_starvation_ms` across the top-level `batch`
+    /// block and every per-stage override. The queue is instance-wide
+    /// and instances are reassigned across stages over their lifetime,
+    /// so the strongest anti-starvation guarantee any stage asks for
+    /// wins. Returns 0 (guard off) when no block sets it.
+    pub fn effective_max_starvation_ms(&self) -> u64 {
+        self.apps
+            .iter()
+            .flat_map(|a| a.stages.iter())
+            .filter_map(|s| self.stage_batch(s))
+            .map(|b| b.max_starvation_ms)
+            .chain(self.batch.map(|b| b.max_starvation_ms))
+            .filter(|&ms| ms > 0)
+            .min()
+            .unwrap_or(0)
+    }
+
+    /// The app list with each stage's `batch` field materialized to its
+    /// *effective* settings (per-stage override, else the top-level
+    /// default, never for Collaboration stages) — what the NodeManager
+    /// is handed so assignments carry a ready [`BatchSettings`] without
+    /// re-consulting the top-level block.
+    pub fn apps_with_effective_batch(&self) -> Vec<AppConfig> {
+        let mut apps = self.apps.clone();
+        for app in &mut apps {
+            for s in &mut app.stages {
+                s.batch = self.stage_batch(s);
+            }
+        }
+        apps
     }
 
     /// Validate invariants the rest of the system assumes.
@@ -314,6 +414,11 @@ impl ClusterConfig {
                  (killed instances would never be detected or repaired)",
             ));
         }
+        if let Some(b) = &self.batch {
+            if b.max_batch == 0 {
+                return Err(err("batch.max_batch must be >= 1"));
+            }
+        }
         let mut ids = std::collections::HashSet::new();
         for app in &self.apps {
             if !ids.insert(app.id) {
@@ -331,6 +436,14 @@ impl ClusterConfig {
                         "stage {}: workers and gpus_per_instance must be >= 1",
                         s.name
                     )));
+                }
+                if let Some(b) = &s.batch {
+                    if b.max_batch == 0 {
+                        return Err(err(format!(
+                            "stage {}: batch.max_batch must be >= 1",
+                            s.name
+                        )));
+                    }
                 }
             }
         }
@@ -375,6 +488,9 @@ impl ClusterConfig {
                 ("seed", Json::Num(self.chaos.seed as f64)),
             ]),
         );
+        if let Some(b) = &self.batch {
+            root.insert("batch".into(), batch_to_json(b));
+        }
         root.insert(
             "db".into(),
             obj(vec![
@@ -411,7 +527,7 @@ impl ClusterConfig {
                                     a.stages
                                         .iter()
                                         .map(|s| {
-                                            obj(vec![
+                                            let mut fields = vec![
                                                 ("name", Json::Str(s.name.clone())),
                                                 ("exec", s.exec.to_json()),
                                                 ("exec_ms", Json::Num(s.exec_ms)),
@@ -421,7 +537,11 @@ impl ClusterConfig {
                                                 ),
                                                 ("workers", Json::Num(s.workers as f64)),
                                                 ("mode", Json::Str(s.mode.as_str().into())),
-                                            ])
+                                            ];
+                                            if let Some(b) = &s.batch {
+                                                fields.push(("batch", batch_to_json(b)));
+                                            }
+                                            obj(fields)
                                         })
                                         .collect(),
                                 ),
@@ -541,6 +661,7 @@ impl ClusterConfig {
                             mode: SchedMode::parse(
                                 s.get("mode").and_then(Json::as_str).unwrap_or("individual"),
                             )?,
+                            batch: s.get("batch").map(parse_batch),
                         });
                     }
                     apps.push(AppConfig {
@@ -578,6 +699,7 @@ impl ClusterConfig {
                 .and_then(Json::as_u64)
                 .unwrap_or(base.idle_pool as u64) as usize,
             chaos,
+            batch: j.get("batch").map(parse_batch),
         })
     }
 
@@ -591,6 +713,38 @@ impl ClusterConfig {
 
 fn obj(fields: Vec<(&str, Json)>) -> Json {
     Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+fn batch_to_json(b: &BatchSettings) -> Json {
+    obj(vec![
+        ("max_batch", Json::Num(b.max_batch as f64)),
+        ("max_wait_us", Json::Num(b.max_wait_us as f64)),
+        ("adaptive", Json::Bool(b.adaptive)),
+        ("interactive_bypass", Json::Bool(b.interactive_bypass)),
+        ("max_starvation_ms", Json::Num(b.max_starvation_ms as f64)),
+    ])
+}
+
+/// Parse a `batch` block; missing fields inherit [`BatchSettings`]
+/// defaults (so `{"max_batch": 16}` is a complete override).
+fn parse_batch(j: &Json) -> BatchSettings {
+    let d = BatchSettings::default();
+    BatchSettings {
+        max_batch: j
+            .get("max_batch")
+            .and_then(Json::as_u64)
+            .unwrap_or(d.max_batch as u64) as usize,
+        max_wait_us: j.get("max_wait_us").and_then(Json::as_u64).unwrap_or(d.max_wait_us),
+        adaptive: j.get("adaptive").and_then(Json::as_bool).unwrap_or(d.adaptive),
+        interactive_bypass: j
+            .get("interactive_bypass")
+            .and_then(Json::as_bool)
+            .unwrap_or(d.interactive_bypass),
+        max_starvation_ms: j
+            .get("max_starvation_ms")
+            .and_then(Json::as_u64)
+            .unwrap_or(d.max_starvation_ms),
+    }
 }
 
 #[cfg(test)]
@@ -636,6 +790,69 @@ mod tests {
     #[test]
     fn i2v_default_is_valid() {
         ClusterConfig::i2v_default().validate().unwrap();
+    }
+
+    #[test]
+    fn batch_block_parses_inherits_and_resolves_per_stage() {
+        // Top-level block with partial fields: the rest inherit defaults.
+        let cfg = ClusterConfig::from_json_str(
+            r#"{"batch": {"max_batch": 16, "max_starvation_ms": 250}}"#,
+        )
+        .unwrap();
+        let b = cfg.batch.unwrap();
+        assert_eq!(b.max_batch, 16);
+        assert_eq!(b.max_starvation_ms, 250);
+        assert_eq!(b.max_wait_us, BatchSettings::default().max_wait_us);
+        assert!(b.interactive_bypass && b.adaptive);
+        // Resolution: IM stages inherit the global block; the CM
+        // diffusion stage never batches.
+        let stages = &cfg.apps[0].stages;
+        assert_eq!(cfg.stage_batch(&stages[0]).unwrap().max_batch, 16);
+        assert!(cfg.stage_batch(&stages[2]).is_none(), "CM stages never batch");
+        let eff = cfg.apps_with_effective_batch();
+        assert_eq!(eff[0].stages[0].batch.unwrap().max_batch, 16);
+        assert!(eff[0].stages[2].batch.is_none());
+        // Round-trip keeps both block levels.
+        let mut cfg2 = cfg.clone();
+        cfg2.apps[0].stages[0].batch =
+            Some(BatchSettings { max_batch: 4, ..BatchSettings::default() });
+        let back = ClusterConfig::from_json(&cfg2.to_json()).unwrap();
+        assert_eq!(back.batch, cfg2.batch);
+        assert_eq!(back.apps[0].stages[0].batch.unwrap().max_batch, 4);
+        // Per-stage override beats the global block.
+        assert_eq!(back.stage_batch(&back.apps[0].stages[0]).unwrap().max_batch, 4);
+        // Zero max_batch is a misconfiguration.
+        assert!(
+            ClusterConfig::from_json_str(r#"{"batch": {"max_batch": 0}}"#).is_err()
+        );
+    }
+
+    #[test]
+    fn absent_batch_block_means_batching_off() {
+        let cfg = ClusterConfig::i2v_default();
+        assert!(cfg.batch.is_none());
+        for s in &cfg.apps[0].stages {
+            assert!(cfg.stage_batch(s).is_none());
+        }
+        assert_eq!(cfg.effective_max_starvation_ms(), 0);
+    }
+
+    #[test]
+    fn per_stage_starvation_guard_reaches_the_effective_bound() {
+        // A per-stage block alone (no top-level one) must still arm the
+        // aging guard — the satellite failure this knob exists for.
+        let mut cfg = ClusterConfig::i2v_default();
+        cfg.apps[0].stages[0].batch = Some(BatchSettings {
+            max_starvation_ms: 250,
+            ..BatchSettings::default()
+        });
+        assert_eq!(cfg.effective_max_starvation_ms(), 250);
+        // With a top-level block too, the smallest non-zero bound wins;
+        // zero entries (guard off for that block) are ignored.
+        cfg.batch = Some(BatchSettings { max_starvation_ms: 0, ..BatchSettings::default() });
+        assert_eq!(cfg.effective_max_starvation_ms(), 250);
+        cfg.batch = Some(BatchSettings { max_starvation_ms: 100, ..BatchSettings::default() });
+        assert_eq!(cfg.effective_max_starvation_ms(), 100);
     }
 
     #[test]

@@ -28,6 +28,7 @@
 //! lifecycle walkthrough, and `EXPERIMENTS.md` for the experiment index
 //! mapping every bench/example to the paper claim it reproduces.
 
+pub mod batch;
 pub mod bench;
 pub mod client;
 pub mod config;

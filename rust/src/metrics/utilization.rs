@@ -10,11 +10,17 @@ use crate::util::Clock;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
-/// Busy/idle interval record.
+/// Busy/idle interval record. `weight` is the number of requests the
+/// interval served: a micro-batched execution covers several requests in
+/// one (amortized, shorter) busy span, and counting it as one unit of
+/// work would make the NodeManager under-estimate load on batching
+/// stages (and the elastic allocator then mis-size them). Weighting the
+/// span by its members reports the *demand* the stage absorbed.
 #[derive(Debug, Clone, Copy)]
 struct Span {
     start_ns: u64,
     end_ns: u64,
+    weight: u32,
 }
 
 /// Sliding-window utilization estimator. Thread-safe; one per worker (the
@@ -43,8 +49,17 @@ impl UtilizationWindow {
             .store(self.clock.now_ns().max(1), Ordering::SeqCst);
     }
 
-    /// Mark the end of the current busy interval.
+    /// Mark the end of the current busy interval (one request served).
     pub fn idle(&self) {
+        self.idle_n(1);
+    }
+
+    /// Mark the end of the current busy interval, which served `n`
+    /// requests (a micro-batch): the span is weighted by `n`, so an
+    /// amortized batch execution reports the demand it absorbed instead
+    /// of only its wall time — one unit per *request*, not one per
+    /// worker invocation.
+    pub fn idle_n(&self, n: u32) {
         let since = self.busy_since.swap(0, Ordering::SeqCst);
         if since == 0 {
             return;
@@ -54,13 +69,16 @@ impl UtilizationWindow {
         spans.push(Span {
             start_ns: since,
             end_ns: now,
+            weight: n.max(1),
         });
         // Garbage-collect spans that fell out of the window.
         let cutoff = now.saturating_sub(self.window_ns);
         spans.retain(|s| s.end_ns >= cutoff);
     }
 
-    /// Busy fraction in [0, 1] over the trailing window.
+    /// Busy fraction in [0, 1] over the trailing window (weighted spans
+    /// can saturate it early; the cap keeps the §8.2 semantics "1.0 =
+    /// fully loaded").
     pub fn value(&self) -> f64 {
         let now = self.clock.now_ns();
         let cutoff = now.saturating_sub(self.window_ns);
@@ -70,11 +88,12 @@ impl UtilizationWindow {
             for s in spans.iter() {
                 let start = s.start_ns.max(cutoff);
                 if s.end_ns > start {
-                    busy += s.end_ns - start;
+                    busy += (s.end_ns - start).saturating_mul(s.weight as u64);
                 }
             }
         }
-        // Include the in-flight busy interval, if any.
+        // Include the in-flight busy interval, if any (its batch size is
+        // unknown until it ends — weight 1 until then).
         let since = self.busy_since.load(Ordering::SeqCst);
         if since != 0 {
             busy += now.saturating_sub(since.max(cutoff));
@@ -134,6 +153,28 @@ mod tests {
         clock.advance(500);
         let v = w.value(); // still busy, never called idle()
         assert!((v - 0.5).abs() < 0.01, "v={v}");
+    }
+
+    #[test]
+    fn batched_span_counts_per_request() {
+        // A batch of 4 served in 500 ns of a 2000 ns window: per-request
+        // accounting reports 4×500/2000 = 1.0-capped demand, where
+        // per-invocation accounting would claim a misleading 0.25.
+        let (clock, w) = setup(2_000);
+        clock.advance(2_000);
+        w.busy();
+        clock.advance(500);
+        w.idle_n(4);
+        clock.advance(1_500);
+        assert!((w.value() - 1.0).abs() < 1e-9, "v={}", w.value());
+        // Weight 1 degenerates to the unweighted fraction.
+        let (clock, w) = setup(2_000);
+        clock.advance(2_000);
+        w.busy();
+        clock.advance(500);
+        w.idle_n(1);
+        clock.advance(1_500);
+        assert!((w.value() - 0.25).abs() < 0.01, "v={}", w.value());
     }
 
     #[test]

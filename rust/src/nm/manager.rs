@@ -39,6 +39,11 @@ pub struct InstanceInfo {
     pub role: Option<StageKey>,
     /// Last reported utilization in [0, 1].
     pub util: f64,
+    /// Last reported effective batch-formation window, µs (0 = the
+    /// instance is not batching). Exported so §8.2 elastic reallocation
+    /// and adaptive batch sizing don't fight: a stage holding a wide
+    /// window is coalescing on purpose, not starving for capacity.
+    pub batch_window_us: u64,
     /// Liveness: when the instance last reported utilization (the
     /// report doubles as a heartbeat — no extra control message). The
     /// failure detector declares the instance dead once this is older
@@ -129,6 +134,7 @@ impl NodeManager {
                 region: Some(region),
                 role: None,
                 util: 0.0,
+                batch_window_us: 0,
                 last_seen_ns: now,
             },
         );
@@ -177,6 +183,10 @@ impl NodeManager {
         if let Some(info) = s.instances.get_mut(&node) {
             info.role = role;
             info.util = 0.0;
+            // The old stage's batch window is meaningless under the new
+            // role; a non-batching role never reports again, so a stale
+            // value would advertise coalescing forever.
+            info.batch_window_us = 0;
         }
         // Bump this node and every node whose routing may have changed
         // (stages that feed the affected stages).
@@ -497,6 +507,17 @@ impl NodeManager {
                 mode: stage_cfg.mode,
                 workers: stage_cfg.workers,
                 routes: Self::routes_for(s, key),
+                // Micro-batching rides the assignment: the stage's
+                // (effective) `batch` block becomes a resolved policy.
+                // Individual Mode only — CM broadcasts one request to
+                // every rank, so there is nothing to coalesce.
+                batch: match stage_cfg.mode {
+                    SchedMode::Individual => stage_cfg
+                        .batch
+                        .as_ref()
+                        .map(crate::batch::BatchPolicy::from_settings),
+                    SchedMode::Collaboration => None,
+                },
             }
         });
         Assignment { version, role }
@@ -531,6 +552,13 @@ impl ControlPlane for NodeManager {
             // The report doubles as a heartbeat: liveness piggybacks on
             // the §8.2 utilization channel, no extra message.
             i.last_seen_ns = now;
+        }
+    }
+
+    fn report_batch_window(&self, node: NodeId, window_us: u64) {
+        let mut s = self.state.lock().unwrap();
+        if let Some(i) = s.instances.get_mut(&node) {
+            i.batch_window_us = window_us;
         }
     }
 }
@@ -776,6 +804,41 @@ mod tests {
         assert_eq!(nm.stage_instances(key(3)), vec![NodeId(2)]);
         // Nothing left to give: a second repair finds no donor.
         assert!(nm.promote_replacement(key(1)).is_none());
+    }
+
+    #[test]
+    fn assignment_carries_batch_policy_for_im_stages_only() {
+        let mut cfg = ClusterConfig::i2v_default();
+        cfg.batch = Some(crate::config::BatchSettings::default());
+        let nm = NodeManager::new(cfg.apps_with_effective_batch(), 0.85);
+        nm.register_instance(NodeId(1), RegionId(10));
+        nm.register_instance(NodeId(2), RegionId(20));
+        nm.assign(NodeId(1), Some(key(0))); // text_encoder (Individual)
+        nm.assign(NodeId(2), Some(key(2))); // diffusion (Collaboration)
+        let policy = nm.get_assignment(NodeId(1)).role.unwrap().batch.unwrap();
+        assert_eq!(policy.max_batch, 8);
+        assert!(policy.bypasses(crate::client::Priority::Interactive));
+        assert!(
+            nm.get_assignment(NodeId(2)).role.unwrap().batch.is_none(),
+            "CM stages never batch"
+        );
+        // The adaptive window export lands in the registry snapshot.
+        nm.report_batch_window(NodeId(1), 1_234);
+        let info = nm
+            .instances()
+            .into_iter()
+            .find(|i| i.node == NodeId(1))
+            .unwrap();
+        assert_eq!(info.batch_window_us, 1_234);
+        // Reassignment invalidates the old stage's window: a stale value
+        // would advertise "coalescing on purpose" forever.
+        nm.assign(NodeId(1), Some(key(3)));
+        let info = nm
+            .instances()
+            .into_iter()
+            .find(|i| i.node == NodeId(1))
+            .unwrap();
+        assert_eq!(info.batch_window_us, 0, "window resets with the role");
     }
 
     #[test]

@@ -124,20 +124,63 @@ impl ResultDeliver {
     /// dies (§ worker fault tolerance). The encode happens once; the
     /// replicas share the buffer.
     pub fn deliver(&mut self, msg: &WorkflowMessage) -> Delivery {
-        let app = msg.header.app;
-        let Some(hops) = self.routes.get(&app) else {
-            self.dropped += 1;
-            return Delivery::Dropped;
-        };
+        match self.pick_hop(msg.header.app) {
+            Some(hop) => self.deliver_to(&hop, msg),
+            None => {
+                self.dropped += 1;
+                Delivery::Dropped
+            }
+        }
+    }
+
+    /// Coalesced delivery for a micro-batch's results: **one** hop
+    /// choice per app for the whole batch (the round-robin counter
+    /// advances once, so the batch lands on a single downstream ring and
+    /// stays batchable there) and one encode-and-push pass per member.
+    /// Per-UID recovery checkpoints and the database layer's
+    /// first-writer-wins terminals are preserved — each member goes
+    /// through exactly the single-message push path against the chosen
+    /// hop. Returns one [`Delivery`] per input, in order.
+    pub fn deliver_batch(&mut self, msgs: &[WorkflowMessage]) -> Vec<Delivery> {
+        let mut chosen: HashMap<crate::transport::AppId, Option<NextHop>> =
+            HashMap::new();
+        let mut out = Vec::with_capacity(msgs.len());
+        for msg in msgs {
+            let app = msg.header.app;
+            let hop = chosen
+                .entry(app)
+                .or_insert_with(|| self.pick_hop(app))
+                .clone();
+            out.push(match hop {
+                Some(hop) => self.deliver_to(&hop, msg),
+                None => {
+                    self.dropped += 1;
+                    Delivery::Dropped
+                }
+            });
+        }
+        out
+    }
+
+    /// Choose the next hop for `app`, advancing its round-robin counter
+    /// (None = no route / empty hop list; the caller accounts the drop).
+    fn pick_hop(&mut self, app: crate::transport::AppId) -> Option<NextHop> {
+        let hops = self.routes.get(&app)?;
         if hops.is_empty() {
-            self.dropped += 1;
-            return Delivery::Dropped;
+            return None;
         }
         let rr = self.rr.entry(app).or_insert(0);
         let hop = hops[*rr % hops.len()].clone();
         *rr = rr.wrapping_add(1);
+        Some(hop)
+    }
+
+    /// Push one message to an already-chosen hop, writing the recovery
+    /// checkpoint (when enabled) and counting the outcome.
+    fn deliver_to(&mut self, hop: &NextHop, msg: &WorkflowMessage) -> Delivery {
         let outcome = match hop {
             NextHop::Instance(rid) => {
+                let rid = *rid;
                 let ckpt = self.checkpointing && !self.dbs.is_empty();
                 let tx = self.senders.get_mut(&rid).expect("sender built in set_routes");
                 if ckpt {
@@ -362,6 +405,71 @@ mod tests {
             assert_eq!(db.len(), 0, "checkpoints are not terminal entries");
         }
         assert!(ep.recv().is_some());
+    }
+
+    #[test]
+    fn batch_lands_on_one_ring_and_advances_rr_once() {
+        let fabric = Fabric::ideal();
+        let mut ep1 = RdmaEndpoint::new(&fabric, RingConfig::default());
+        let mut ep2 = RdmaEndpoint::new(&fabric, RingConfig::default());
+        let mut rd = ResultDeliver::new(fabric.clone(), vec![]);
+        rd.set_routes(vec![(
+            AppId(1),
+            vec![
+                NextHop::Instance(ep1.region_id()),
+                NextHop::Instance(ep2.region_id()),
+            ],
+        )]);
+        let batch: Vec<WorkflowMessage> = (0..4).map(msg).collect();
+        let deliveries = rd.deliver_batch(&batch);
+        assert_eq!(deliveries.len(), 4);
+        assert!(deliveries
+            .iter()
+            .all(|d| *d == Delivery::Sent(ep1.region_id())));
+        let mut n1 = 0;
+        while ep1.recv().is_some() {
+            n1 += 1;
+        }
+        assert_eq!(n1, 4, "the whole batch stays together (re-batchable downstream)");
+        // The counter advanced once for the batch, so the *next* batch
+        // round-robins to the sibling ring.
+        assert!(rd
+            .deliver_batch(&[msg(9)])
+            .iter()
+            .all(|d| *d == Delivery::Sent(ep2.region_id())));
+        assert!(ep2.recv().is_some());
+        assert_eq!(rd.counts(), (5, 0));
+    }
+
+    #[test]
+    fn batch_checkpoints_every_member() {
+        let fabric = Fabric::ideal();
+        let mut ep = RdmaEndpoint::new(&fabric, RingConfig::default());
+        let clock = Arc::new(ManualClock::new());
+        let db = Arc::new(MemDb::new(clock, u64::MAX));
+        let mut rd = ResultDeliver::new(fabric.clone(), vec![db.clone()]);
+        rd.set_checkpointing(true);
+        rd.set_routes(vec![(AppId(1), vec![NextHop::Instance(ep.region_id())])]);
+        let batch: Vec<WorkflowMessage> = (0..3).map(msg).collect();
+        assert!(rd.deliver_batch(&batch).iter().all(|d| d.ok()));
+        for m in &batch {
+            let ck = db.checkpoint(m.header.uid).expect("per-UID checkpoint");
+            assert_eq!(ck.stage, 1);
+            assert_eq!(WorkflowMessage::decode(&ck.data).unwrap(), *m);
+            assert!(ep.recv().is_some());
+        }
+    }
+
+    #[test]
+    fn batch_without_routes_drops_each_member() {
+        let fabric = Fabric::ideal();
+        let mut rd = ResultDeliver::new(fabric, vec![]);
+        let batch: Vec<WorkflowMessage> = (0..2).map(msg).collect();
+        assert!(rd
+            .deliver_batch(&batch)
+            .iter()
+            .all(|d| *d == Delivery::Dropped));
+        assert_eq!(rd.counts(), (0, 2));
     }
 
     #[test]

@@ -22,10 +22,11 @@
 //! consolidated output before delivery").
 
 use super::{Assignment, ControlPlane, Delivery, ResultDeliver, SchedQueue, StageRole};
+use crate::batch::{BatchAssembler, MicroBatch};
 use crate::client::{InFlightVerdict, RequestTracker};
 use crate::config::SchedMode;
 use crate::db::{EntryKind, MemDb};
-use crate::metrics::UtilizationWindow;
+use crate::metrics::{Counter, Histogram, UtilizationWindow};
 use crate::rdma::{Fabric, RegionId};
 use crate::ringbuf::RingConfig;
 use crate::runtime::{ExecutorPool, StageExecutor};
@@ -52,6 +53,10 @@ pub struct InstanceConfig {
     /// without it nothing ever replays them, so the default is off,
     /// mirroring the detector's own default).
     pub checkpointing: bool,
+    /// SchedQueue aging guard (`batch.max_starvation_ms`): a queued
+    /// message older than this is promoted past higher priority bands.
+    /// Zero (the default) keeps strict highest-band-first.
+    pub max_starvation: Duration,
 }
 
 impl Default for InstanceConfig {
@@ -63,6 +68,7 @@ impl Default for InstanceConfig {
             util_window: Duration::from_millis(500),
             max_workers: 4,
             checkpointing: false,
+            max_starvation: Duration::ZERO,
         }
     }
 }
@@ -101,6 +107,17 @@ struct Shared {
     deliver: Mutex<ResultDeliver>,
     tracker: Arc<RequestTracker>,
     util: UtilizationWindow,
+    /// Micro-batch former + adaptive window (one per instance, shared
+    /// by the worker pool; active only while the role carries a
+    /// [`crate::batch::BatchPolicy`]).
+    assembler: BatchAssembler,
+    /// Batching metrics (from the set registry the tracker carries):
+    /// formed-batch size / formation-wait histograms and the
+    /// formed-vs-bypassed counters.
+    batch_size_h: Arc<Histogram>,
+    batch_wait_h: Arc<Histogram>,
+    batches_executed: Arc<Counter>,
+    batch_bypass: Arc<Counter>,
     /// Requeue counts for messages parked while the instance has no
     /// role (shared across workers so the patience bound does not
     /// multiply by worker count).
@@ -210,9 +227,11 @@ impl Instance {
     ) -> Self {
         let mut endpoint = RdmaEndpoint::new(fabric, cfg.ring);
         let region_id = endpoint.region_id();
-        let queue = SchedQueue::new(SchedMode::Individual, cfg.max_workers);
+        let queue =
+            SchedQueue::with_aging(SchedMode::Individual, cfg.max_workers, cfg.max_starvation);
         let mut rd = ResultDeliver::new(fabric.clone(), dbs);
         rd.set_checkpointing(cfg.checkpointing);
+        let metrics = tracker.metrics().clone();
         let shared = Arc::new(Shared {
             node: cfg.node,
             queue: queue.clone(),
@@ -222,6 +241,11 @@ impl Instance {
             deliver: Mutex::new(rd),
             tracker,
             util: UtilizationWindow::new(clock, cfg.util_window.as_nanos() as u64),
+            assembler: BatchAssembler::new(),
+            batch_size_h: metrics.histogram("batch_size"),
+            batch_wait_h: metrics.histogram("batch_wait_ns"),
+            batches_executed: metrics.counter("batches_executed"),
+            batch_bypass: metrics.counter("batch_bypass"),
             parked: Mutex::new(std::collections::HashMap::new()),
             recovery_enabled: cfg.checkpointing,
             shutdown: AtomicBool::new(false),
@@ -252,7 +276,37 @@ impl Instance {
                         Self::apply_assignment(&shared, &pool, &a);
                         shared.version.store(a.version, Ordering::SeqCst);
                     }
-                    control.report_utilization(shared.node, shared.util.value());
+                    let util = shared.util.value();
+                    control.report_utilization(shared.node, util);
+                    // Batching stages: feed the utilization sample into
+                    // the adaptive controller (idle → shrink the window
+                    // for latency) and export the effective window so
+                    // §8.2 reallocation and batch sizing don't fight.
+                    let policy = shared
+                        .role
+                        .read()
+                        .unwrap()
+                        .as_ref()
+                        .and_then(|r| r.batch.as_ref().map(|p| (p.adaptive, p.max_wait)));
+                    if let Some((adaptive, max_wait)) = policy {
+                        let max_wait_us = max_wait.as_micros() as u64;
+                        let window_us = if adaptive {
+                            shared.assembler.observe_utilization(util);
+                            // 0 = "no batch formed yet" (unset) — the
+                            // stage still coalesces on purpose, so
+                            // report the policy cap, never 0 (the NM
+                            // reads 0 as "not batching").
+                            match shared.assembler.window_us() {
+                                0 => max_wait_us,
+                                w => w,
+                            }
+                        } else {
+                            // Static window: the configured cap *is* the
+                            // effective window.
+                            max_wait_us
+                        };
+                        control.report_batch_window(shared.node, window_us);
+                    }
                     std::thread::sleep(poll);
                 }
             }));
@@ -334,6 +388,32 @@ impl Instance {
         }
     }
 
+    /// The reserved fast lane of a batching stage: with a batch policy
+    /// on a multi-worker IM stage, worker 0 serves **only** the bypass
+    /// classes (band mask), so a bypassing Interactive arrival never
+    /// finds every worker mid-batch — without it, bypass would only skip
+    /// formation, not the head-of-line wait behind in-flight batches.
+    /// Returns `None` (no reservation) when nothing bypasses, when the
+    /// stage runs a single worker (reserving it would disable the stage)
+    /// or when batching is off.
+    fn lane_mask(shared: &Shared, widx: usize) -> Option<[bool; 3]> {
+        if widx != 0 {
+            return None;
+        }
+        let r = shared.role.read().unwrap();
+        let role = r.as_ref()?;
+        let policy = role.batch.as_ref()?;
+        if role.mode != SchedMode::Individual || role.workers <= 1 {
+            return None;
+        }
+        let mask = [
+            policy.bypasses(crate::client::Priority::Interactive),
+            policy.bypasses(crate::client::Priority::Standard),
+            policy.bypasses(crate::client::Priority::Batch),
+        ];
+        mask.iter().any(|b| *b).then_some(mask)
+    }
+
     fn worker_loop(shared: &Arc<Shared>, logic: &dyn AppLogic, widx: usize) {
         loop {
             if shared.shutdown.load(Ordering::SeqCst) {
@@ -343,7 +423,11 @@ impl Instance {
                 std::thread::sleep(Duration::from_millis(5));
                 continue;
             }
-            let Some(msg) = shared.queue.fetch(widx, Duration::from_millis(20)) else {
+            let fetched = match Self::lane_mask(shared, widx) {
+                Some(mask) => shared.queue.fetch_from(widx, mask, Duration::from_millis(20)),
+                None => shared.queue.fetch(widx, Duration::from_millis(20)),
+            };
+            let Some(msg) = fetched else {
                 continue;
             };
             let (role, exec) = {
@@ -433,63 +517,141 @@ impl Instance {
                     continue;
                 }
             }
-            shared.tracker.note_stage(uid, role.stage_index);
-            shared.util.busy();
-            let result = logic.execute(&role.stage_name, &exec, &msg);
-            shared.util.idle();
-            match result {
-                Ok(payload) => {
-                    // A crash that fired mid-execution kills the output
-                    // too — a dead process delivers nothing.
-                    if shared.crashed.load(Ordering::SeqCst) {
-                        continue;
+            // ---- micro-batch formation (IM stages carrying a policy;
+            // everything else is a batch of one, taking exactly the
+            // single-request path below). The reserved fast lane
+            // (worker 0, see `lane_mask`) only ever fetches bypass
+            // classes; `fast_lane` here just closes the race where a
+            // role change lands between its fetch and this point.
+            let batch = match &role.batch {
+                Some(policy) if role.mode == SchedMode::Individual => {
+                    // Mirrors `lane_mask`: worker 0 is only a bypass
+                    // lane when a reservation is actually active — with
+                    // nothing bypassing, it batches like everyone else.
+                    let fast_lane =
+                        widx == 0 && role.workers > 1 && policy.any_bypass();
+                    let b = shared.assembler.assemble(
+                        msg,
+                        policy,
+                        &shared.queue,
+                        &shared.tracker,
+                        fast_lane,
+                    );
+                    if b.bypassed {
+                        shared.batch_bypass.inc();
+                    } else {
+                        shared.batches_executed.inc();
+                        shared.batch_size_h.record(b.len() as u64);
+                        shared.batch_wait_h.record(b.wait.as_nanos() as u64);
                     }
-                    shared.processed.fetch_add(1, Ordering::Relaxed);
-                    // CM: all workers computed (TP ranks); rank 0 delivers
-                    // the aggregated output.
-                    if !lead {
-                        continue;
-                    }
-                    // SLO re-check: the deadline may have expired during
-                    // execution — drop the stage output instead of
-                    // forwarding work that can no longer meet its SLO.
-                    match shared.tracker.verdict(uid) {
-                        InFlightVerdict::Proceed => {}
-                        verdict => {
-                            shared.drop_for(uid, verdict);
-                            continue;
-                        }
-                    }
-                    let out = WorkflowMessage {
-                        header: crate::transport::MessageHeader {
-                            stage: StageId(role.stage_index + 1),
-                            ..msg.header
-                        },
-                        payload,
-                    };
-                    let delivery = shared.deliver.lock().unwrap().deliver(&out);
-                    match delivery {
-                        // Tell the control plane where the request went
-                        // — if that instance dies, the recovery sweep
-                        // finds the request by this location.
-                        Delivery::Sent(region) => {
-                            shared.tracker.note_location(uid, region)
-                        }
-                        Delivery::Stored => {}
-                        Delivery::Dropped => {
-                            // No downstream capacity (the next stage
-                            // lost every instance, or its ring refused
-                            // the write). A transient full ring can
-                            // still clear — strand for a checkpoint
-                            // replay; otherwise a terminal tombstone
-                            // beats a silent §9 loss the client would
-                            // wait out.
-                            shared.strand_or_fail(uid);
+                    b
+                }
+                _ => MicroBatch::single(msg, false),
+            };
+            // Re-check members picked up during formation: a request
+            // cancelled / expired while the batch formed is dropped here
+            // without poisoning the rest (the first member was checked
+            // above, before formation).
+            let mut members = Vec::with_capacity(batch.len());
+            for (i, m) in batch.members.into_iter().enumerate() {
+                if i == 0 {
+                    members.push(m);
+                    continue;
+                }
+                match shared.tracker.verdict(m.header.uid) {
+                    InFlightVerdict::Proceed => members.push(m),
+                    verdict => {
+                        if lead {
+                            shared.drop_for(m.header.uid, verdict);
                         }
                     }
                 }
-                Err(_) => {
+            }
+            for m in &members {
+                shared.tracker.note_stage(m.header.uid, role.stage_index);
+            }
+            shared.util.busy();
+            let results = logic.execute_batch(&role.stage_name, &exec, &members);
+            // Utilization is weighted per *request*, not per invocation:
+            // an amortized batch must report the demand it absorbed or
+            // the NM under-estimates load on batching stages.
+            shared.util.idle_n(members.len() as u32);
+            // A crash that fired mid-execution kills the output too — a
+            // dead process delivers nothing.
+            if shared.crashed.load(Ordering::SeqCst) {
+                continue;
+            }
+            // Defensive: `execute_batch` owes one result per member. A
+            // custom logic that breaks the contract must not leave the
+            // unmatched tail in limbo (no result, no tombstone — the
+            // client would hang), so the tail errors out and reaches the
+            // recovery sweep / a terminal state like any failed member.
+            if results.len() < members.len() {
+                for m in &members[results.len()..] {
                     shared.errors.fetch_add(1, Ordering::Relaxed);
+                    if lead {
+                        shared.strand_or_fail(m.header.uid);
+                    }
+                }
+            }
+            let mut outs: Vec<WorkflowMessage> = Vec::with_capacity(members.len());
+            for (m, result) in members.iter().zip(results) {
+                let uid = m.header.uid;
+                match result {
+                    Ok(payload) => {
+                        shared.processed.fetch_add(1, Ordering::Relaxed);
+                        // CM: all workers computed (TP ranks); rank 0
+                        // delivers the aggregated output.
+                        if !lead {
+                            continue;
+                        }
+                        // SLO re-check: the deadline may have expired
+                        // during execution — drop this member's output
+                        // instead of forwarding work that can no longer
+                        // meet its SLO (its batchmates are unaffected).
+                        match shared.tracker.verdict(uid) {
+                            InFlightVerdict::Proceed => {}
+                            verdict => {
+                                shared.drop_for(uid, verdict);
+                                continue;
+                            }
+                        }
+                        outs.push(WorkflowMessage {
+                            header: crate::transport::MessageHeader {
+                                stage: StageId(role.stage_index + 1),
+                                ..m.header
+                            },
+                            payload,
+                        });
+                    }
+                    Err(_) => {
+                        shared.errors.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+            if outs.is_empty() {
+                continue;
+            }
+            // Coalesced delivery: one hop choice + one push pass for the
+            // whole batch (identical to `deliver` for a batch of one).
+            let deliveries = shared.deliver.lock().unwrap().deliver_batch(&outs);
+            for (out, delivery) in outs.iter().zip(deliveries) {
+                let uid = out.header.uid;
+                match delivery {
+                    // Tell the control plane where the request went — if
+                    // that instance dies, the recovery sweep finds the
+                    // request by this location.
+                    Delivery::Sent(region) => shared.tracker.note_location(uid, region),
+                    Delivery::Stored => {}
+                    Delivery::Dropped => {
+                        // No downstream capacity (the next stage lost
+                        // every instance, or its ring refused the
+                        // write). A transient full ring can still clear
+                        // — strand for a checkpoint replay; otherwise a
+                        // terminal tombstone beats a silent §9 loss the
+                        // client would wait out.
+                        shared.strand_or_fail(uid);
+                    }
                 }
             }
         }
@@ -596,6 +758,7 @@ mod tests {
                 mode: SchedMode::Individual,
                 workers: 2,
                 routes: vec![(AppId(1), vec![NextHop::Database])],
+                batch: None,
             }),
         }
     }
@@ -640,6 +803,116 @@ mod tests {
         assert_eq!(stats.processed, 5);
         assert_eq!(stats.errors, 0);
         assert_eq!(stats.sla_dropped, 0);
+        inst.shutdown();
+    }
+
+    #[test]
+    fn batched_assignment_coalesces_and_counts_per_request() {
+        let fabric = Fabric::ideal();
+        let clock: Arc<dyn Clock> = Arc::new(SystemClock);
+        let db = Arc::new(MemDb::new(clock.clone(), u64::MAX));
+        let mut pool = ExecutorPool::new();
+        pool.insert("echo", StageExecutor::Simulated { busy: Duration::from_millis(3) });
+        let tracker = mk_tracker(&clock);
+        let mut assignment = echo_assignment();
+        if let Some(role) = assignment.role.as_mut() {
+            role.batch = Some(crate::batch::BatchPolicy::from_settings(
+                &crate::config::BatchSettings {
+                    max_batch: 4,
+                    max_wait_us: 50_000,
+                    adaptive: false,
+                    interactive_bypass: true,
+                    max_starvation_ms: 0,
+                },
+            ));
+        }
+        let inst = Instance::spawn(
+            InstanceConfig { node: NodeId(9), max_workers: 2, ..Default::default() },
+            &fabric,
+            Arc::new(FixedControl(assignment)),
+            Arc::new(EchoLogic),
+            pool,
+            vec![db.clone()],
+            tracker.clone(),
+            clock,
+        );
+        std::thread::sleep(Duration::from_millis(50));
+        let mut tx = crate::transport::RdmaEndpoint::sender_for(&fabric, inst.region_id());
+        for i in 0..8 {
+            // Batch-class requests coalesce (Interactive would bypass).
+            tracker.register(Uid(i as u128), Priority::Batch, None);
+            assert!(tx.send(&mk_msg(i, 0)));
+        }
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while db.len() < 8 && std::time::Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert_eq!(db.len(), 8, "every member's result is stored");
+        let stats = inst.stats();
+        assert_eq!(stats.processed, 8, "processed counts per request, not per batch");
+        assert_eq!(stats.errors, 0);
+        let m = tracker.metrics();
+        assert!(m.counter("batches_executed").get() >= 1, "batches formed");
+        assert!(
+            m.histogram("batch_size").snapshot().max >= 2,
+            "at least one multi-member batch (worker 1 coalesces; worker 0 is the \
+             fast lane)"
+        );
+        inst.shutdown();
+    }
+
+    #[test]
+    fn batching_stage_reports_its_window_to_the_control_plane() {
+        // A static-window policy must export its configured cap — the
+        // NM reads 0 as "not batching" and would misjudge the stage.
+        struct Capture(Assignment, Arc<AtomicU64>);
+        impl ControlPlane for Capture {
+            fn get_assignment(&self, _node: NodeId) -> Assignment {
+                self.0.clone()
+            }
+            fn report_utilization(&self, _node: NodeId, _util: f64) {}
+            fn report_batch_window(&self, _node: NodeId, window_us: u64) {
+                self.1.store(window_us, Ordering::SeqCst);
+            }
+        }
+        let fabric = Fabric::ideal();
+        let clock: Arc<dyn Clock> = Arc::new(SystemClock);
+        let mut pool = ExecutorPool::new();
+        pool.insert("echo", StageExecutor::Simulated { busy: Duration::ZERO });
+        let mut assignment = echo_assignment();
+        if let Some(role) = assignment.role.as_mut() {
+            role.batch = Some(crate::batch::BatchPolicy::from_settings(
+                &crate::config::BatchSettings {
+                    max_batch: 8,
+                    max_wait_us: 2_000,
+                    adaptive: false,
+                    interactive_bypass: true,
+                    max_starvation_ms: 0,
+                },
+            ));
+        }
+        let seen = Arc::new(AtomicU64::new(u64::MAX));
+        let inst = Instance::spawn(
+            InstanceConfig { node: NodeId(11), ..Default::default() },
+            &fabric,
+            Arc::new(Capture(assignment, seen.clone())),
+            Arc::new(EchoLogic),
+            pool,
+            vec![],
+            mk_tracker(&clock),
+            clock,
+        );
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while seen.load(Ordering::SeqCst) == u64::MAX
+            && std::time::Instant::now() < deadline
+        {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(
+            seen.load(Ordering::SeqCst),
+            2_000,
+            "static-window stages report their cap, never 0"
+        );
         inst.shutdown();
     }
 

@@ -20,7 +20,7 @@ mod scheduler;
 
 pub use deliver::{Delivery, NextHop, ResultDeliver};
 pub use instance::{CrashHandle, Instance, InstanceConfig, InstanceStats};
-pub use logic::{AppLogic, EchoLogic, I2vLogic};
+pub use logic::{AppLogic, EchoLogic, I2vLogic, I2V_BATCH_FIXED_FRAC};
 pub use scheduler::{RequestScheduler, SchedQueue};
 
 use crate::config::SchedMode;
@@ -49,6 +49,10 @@ pub struct StageRole {
     pub workers: usize,
     /// Per-app delivery destinations.
     pub routes: Vec<(AppId, Vec<NextHop>)>,
+    /// Micro-batching policy for this stage (None = the single-request
+    /// path; resolved by the NM from the config's `batch` blocks —
+    /// Individual Mode only).
+    pub batch: Option<crate::batch::BatchPolicy>,
 }
 
 /// The instance-facing slice of the NodeManager. Implemented by
@@ -59,4 +63,11 @@ pub trait ControlPlane: Send + Sync {
     fn get_assignment(&self, node: NodeId) -> Assignment;
     /// Periodic utilization report (drives §8.2 rebalancing).
     fn report_utilization(&self, node: NodeId, util: f64);
+    /// Periodic batch-window report from batching stages (µs): the
+    /// current effective window of the instance's
+    /// [`crate::batch::AdaptiveWindow`], piggybacked on the utilization
+    /// heartbeat so the §8.2 allocator can tell a stage that is slow
+    /// from one that is coalescing on purpose. Default no-op (control
+    /// planes without elastic scaling can ignore it).
+    fn report_batch_window(&self, _node: NodeId, _window_us: u64) {}
 }

@@ -14,11 +14,11 @@
 
 use crate::client::Priority;
 use crate::config::SchedMode;
-use crate::transport::WorkflowMessage;
+use crate::transport::{AppId, StageId, WorkflowMessage};
 use crate::util::Uid;
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Shared scheduling queue between the RS thread and the worker pool.
 pub struct SchedQueue {
@@ -29,22 +29,42 @@ pub struct SchedQueue {
 struct Inner {
     mode: SchedMode,
     workers: usize,
-    /// IM: one FIFO per priority band, drained highest-priority-first.
-    bands: [VecDeque<WorkflowMessage>; 3],
+    /// IM: one FIFO per priority band (message + enqueue time, for the
+    /// aging guard), drained highest-priority-first.
+    bands: [VecDeque<(WorkflowMessage, Instant)>; 3],
     /// CM: one broadcast copy per worker.
     per_worker: Vec<VecDeque<WorkflowMessage>>,
+    /// Aging guard against band starvation: a queued message older than
+    /// this is promoted past higher bands. `None` = strict
+    /// highest-band-first (the default).
+    max_starvation: Option<Duration>,
     closed: bool,
     generation: u64,
 }
 
 impl SchedQueue {
     pub fn new(mode: SchedMode, workers: usize) -> Arc<Self> {
+        Self::with_aging(mode, workers, Duration::ZERO)
+    }
+
+    /// Like [`SchedQueue::new`] but with the starvation guard enabled:
+    /// strict highest-band-first draining can starve the Batch band
+    /// indefinitely under sustained Interactive load, so a message
+    /// queued longer than `max_starvation` (> 0) is promoted ahead of
+    /// younger higher-band arrivals. `Duration::ZERO` keeps the guard
+    /// off.
+    pub fn with_aging(
+        mode: SchedMode,
+        workers: usize,
+        max_starvation: Duration,
+    ) -> Arc<Self> {
         Arc::new(Self {
             inner: Mutex::new(Inner {
                 mode,
                 workers: workers.max(1),
                 bands: Default::default(),
                 per_worker: vec![VecDeque::new(); workers.max(1)],
+                max_starvation: (!max_starvation.is_zero()).then_some(max_starvation),
                 closed: false,
                 generation: 0,
             }),
@@ -89,7 +109,7 @@ impl SchedQueue {
     fn drain_locked(g: &mut Inner) -> Vec<WorkflowMessage> {
         let mut out: Vec<WorkflowMessage> = Vec::new();
         for band in g.bands.iter_mut() {
-            out.extend(band.drain(..));
+            out.extend(band.drain(..).map(|(m, _)| m));
         }
         let mut seen: std::collections::HashSet<Uid> =
             out.iter().map(|m| m.header.uid).collect();
@@ -109,7 +129,9 @@ impl SchedQueue {
     pub fn dispatch(&self, msg: WorkflowMessage, priority: Priority) {
         let mut g = self.inner.lock().unwrap();
         match g.mode {
-            SchedMode::Individual => g.bands[priority.index()].push_back(msg),
+            SchedMode::Individual => {
+                g.bands[priority.index()].push_back((msg, Instant::now()))
+            }
             SchedMode::Collaboration => {
                 for q in g.per_worker.iter_mut() {
                     q.push_back(msg.clone());
@@ -120,21 +142,65 @@ impl SchedQueue {
         self.cv.notify_all();
     }
 
+    /// IM pop restricted to `allowed` bands: the aging guard first (the
+    /// *oldest* starved message in an allowed lower band jumps ahead —
+    /// Interactive, band 0, can never starve by construction), then
+    /// strict highest-band-first.
+    fn pop_im(g: &mut Inner, allowed: &[bool; 3]) -> Option<WorkflowMessage> {
+        if let Some(max_age) = g.max_starvation {
+            let now = Instant::now();
+            let mut starved: Option<(usize, Instant)> = None;
+            for (b, q) in g.bands.iter().enumerate().skip(1) {
+                if !allowed[b] {
+                    continue;
+                }
+                if let Some((_, ts)) = q.front() {
+                    if now.duration_since(*ts) >= max_age
+                        && starved.is_none_or(|(_, best)| *ts < best)
+                    {
+                        starved = Some((b, *ts));
+                    }
+                }
+            }
+            if let Some((b, _)) = starved {
+                return g.bands[b].pop_front().map(|(m, _)| m);
+            }
+        }
+        g.bands
+            .iter_mut()
+            .zip(allowed)
+            .find_map(|(q, ok)| ok.then(|| q.pop_front().map(|(m, _)| m)).flatten())
+    }
+
     /// Worker side: blocking fetch with timeout. In IM any worker takes
     /// the highest-priority pending message (pull = natural load
-    /// balancing; bands = SLO ordering); in CM worker `widx` takes its
-    /// broadcast copy.
+    /// balancing; bands = SLO ordering; the aging guard promotes starved
+    /// lower-band messages); in CM worker `widx` takes its broadcast
+    /// copy.
     pub fn fetch(&self, widx: usize, timeout: Duration) -> Option<WorkflowMessage> {
+        self.fetch_from(widx, [true; 3], timeout)
+    }
+
+    /// [`SchedQueue::fetch`] restricted to a subset of priority bands
+    /// (IM only; the mask is ignored in CM, where every rank must
+    /// consume its broadcast copy). The reserved fast lane of a batching
+    /// stage uses this to serve *only* the bypass classes, so a
+    /// bypassing Interactive arrival never waits behind a worker pool
+    /// that is entirely mid-batch.
+    pub fn fetch_from(
+        &self,
+        widx: usize,
+        allowed: [bool; 3],
+        timeout: Duration,
+    ) -> Option<WorkflowMessage> {
         let mut g = self.inner.lock().unwrap();
-        let deadline = std::time::Instant::now() + timeout;
+        let deadline = Instant::now() + timeout;
         loop {
             if g.closed {
                 return None;
             }
             let got = match g.mode {
-                SchedMode::Individual => {
-                    g.bands.iter_mut().find_map(VecDeque::pop_front)
-                }
+                SchedMode::Individual => Self::pop_im(&mut g, &allowed),
                 SchedMode::Collaboration => {
                     g.per_worker.get_mut(widx).and_then(|q| q.pop_front())
                 }
@@ -142,13 +208,65 @@ impl SchedQueue {
             if let Some(m) = got {
                 return Some(m);
             }
-            let now = std::time::Instant::now();
+            let now = Instant::now();
             if now >= deadline {
                 return None;
             }
             let (guard, _) = self.cv.wait_timeout(g, deadline - now).unwrap();
             g = guard;
         }
+    }
+
+    /// Batch-assembly fetch: block until a *compatible* message — same
+    /// app, same stage, in priority band `band` — is available, or
+    /// `deadline` passes. Incompatible messages are left queued (in
+    /// order) for other workers; Individual Mode only (`None`
+    /// immediately if the queue is reconfigured into CM mid-wait, so an
+    /// assembling worker never holds a broadcast copy hostage).
+    pub fn fetch_matching(
+        &self,
+        band: usize,
+        app: AppId,
+        stage: StageId,
+        deadline: Instant,
+    ) -> Option<WorkflowMessage> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if g.closed || g.mode != SchedMode::Individual {
+                return None;
+            }
+            let found = g.bands.get_mut(band).and_then(|q| {
+                q.iter()
+                    .position(|(m, _)| m.header.app == app && m.header.stage == stage)
+                    .and_then(|idx| q.remove(idx).map(|(m, _)| m))
+            });
+            if let Some(m) = found {
+                return Some(m);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (guard, _) = self.cv.wait_timeout(g, deadline - now).unwrap();
+            g = guard;
+        }
+    }
+
+    /// Pending messages *compatible* with a forming batch — same app,
+    /// same stage, in `band`. The adaptive window controller reads this
+    /// (not the whole-queue [`SchedQueue::depth`]) as its backlog
+    /// signal: unrelated or bypass-class backlog must not force the
+    /// window open for a class that has nothing to coalesce with.
+    pub fn depth_matching(&self, band: usize, app: AppId, stage: StageId) -> usize {
+        let g = self.inner.lock().unwrap();
+        if g.mode != SchedMode::Individual {
+            return 0;
+        }
+        g.bands.get(band).map_or(0, |q| {
+            q.iter()
+                .filter(|(m, _)| m.header.app == app && m.header.stage == stage)
+                .count()
+        })
     }
 
     /// Pending depth (IM: all bands; CM: max per-worker).
@@ -260,6 +378,110 @@ mod tests {
         // Interactive first (FIFO within the band), then Standard, then
         // Batch.
         assert_eq!(order, vec![3, 4, 2, 1]);
+    }
+
+    #[test]
+    fn aging_guard_rescues_batch_band_under_sustained_interactive_load() {
+        // Strict highest-band-first would never reach the Batch message
+        // while Interactive arrivals keep coming; the aging guard must
+        // dispatch it once it has waited `max_starvation`.
+        let q = SchedQueue::with_aging(
+            SchedMode::Individual,
+            1,
+            Duration::from_millis(30),
+        );
+        let batch_uid = 999;
+        q.dispatch(msg(batch_uid), Priority::Batch);
+        let mut batch_served_after = None;
+        for round in 0..200u32 {
+            // Continuous Interactive arrivals: one lands before every
+            // fetch, so the Interactive band is never empty.
+            q.dispatch(msg(round), Priority::Interactive);
+            let got = q.fetch(0, Duration::from_millis(10)).unwrap();
+            if got.header.uid.0 == batch_uid as u128 {
+                batch_served_after = Some(round);
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let round = batch_served_after
+            .expect("starved Batch message must eventually dispatch");
+        assert!(round > 0, "strict priority still holds before the age bound");
+    }
+
+    #[test]
+    fn aging_off_starves_lower_bands_indefinitely() {
+        // The pre-batching default: without the guard, Batch never runs
+        // while Interactive arrivals persist (this is the failure mode
+        // the guard exists for).
+        let q = SchedQueue::new(SchedMode::Individual, 1);
+        q.dispatch(msg(999), Priority::Batch);
+        std::thread::sleep(Duration::from_millis(40));
+        for i in 0..20 {
+            q.dispatch(msg(i), Priority::Interactive);
+            let got = q.fetch(0, Duration::from_millis(10)).unwrap();
+            assert_eq!(got.header.uid.0, i as u128, "strict band order holds");
+        }
+        assert_eq!(q.depth(), 1, "the Batch message is still waiting");
+    }
+
+    #[test]
+    fn fetch_matching_takes_only_compatible_and_preserves_order() {
+        use crate::transport::{AppId, StageId};
+        let q = SchedQueue::new(SchedMode::Individual, 1);
+        let mut other_app = msg(1);
+        other_app.header.app = AppId(2);
+        q.dispatch(other_app, Priority::Standard);
+        q.dispatch(msg(2), Priority::Standard);
+        q.dispatch(msg(3), Priority::Standard);
+        let deadline = std::time::Instant::now() + Duration::from_millis(20);
+        let a = q
+            .fetch_matching(Priority::Standard.index(), AppId(0), StageId(0), deadline)
+            .unwrap();
+        assert_eq!(a.header.uid.0, 2, "skips the incompatible head");
+        let b = q
+            .fetch_matching(Priority::Standard.index(), AppId(0), StageId(0), deadline)
+            .unwrap();
+        assert_eq!(b.header.uid.0, 3);
+        // Nothing compatible left: blocks until the deadline, then None.
+        let t0 = std::time::Instant::now();
+        assert!(q
+            .fetch_matching(Priority::Standard.index(), AppId(0), StageId(0), deadline)
+            .is_none());
+        assert!(t0.elapsed() >= Duration::from_millis(1));
+        // The incompatible message is still there for a normal fetch.
+        assert_eq!(q.fetch(0, Duration::from_millis(10)).unwrap().header.app, AppId(2));
+    }
+
+    #[test]
+    fn fetch_from_serves_only_allowed_bands() {
+        let q = SchedQueue::new(SchedMode::Individual, 1);
+        q.dispatch(msg(1), Priority::Batch);
+        q.dispatch(msg(2), Priority::Interactive);
+        // An Interactive-only mask (the reserved fast lane) takes the
+        // Interactive message, then times out with Batch work pending.
+        let mask = [true, false, false];
+        assert_eq!(
+            q.fetch_from(0, mask, Duration::from_millis(10)).unwrap().header.uid.0,
+            2
+        );
+        assert!(q.fetch_from(0, mask, Duration::from_millis(10)).is_none());
+        assert_eq!(q.depth(), 1, "the Batch message stays for the other workers");
+        assert!(q.fetch(0, Duration::from_millis(10)).is_some());
+    }
+
+    #[test]
+    fn fetch_matching_refuses_collaboration_mode() {
+        use crate::transport::{AppId, StageId};
+        let q = SchedQueue::new(SchedMode::Collaboration, 2);
+        q.dispatch(msg(1), Priority::Standard);
+        let deadline = std::time::Instant::now() + Duration::from_secs(1);
+        let t0 = std::time::Instant::now();
+        assert!(q.fetch_matching(1, AppId(0), StageId(0), deadline).is_none());
+        assert!(
+            t0.elapsed() < Duration::from_millis(500),
+            "CM returns immediately, not at the deadline"
+        );
     }
 
     #[test]

@@ -105,7 +105,14 @@ impl WorkflowSet {
         };
         let clock: Arc<dyn crate::util::Clock> = Arc::new(SystemClock);
 
-        let nm = Arc::new(NodeManager::new(config.apps.clone(), config.nm.util_threshold));
+        // The NM hands out assignments with each stage's *effective*
+        // batch settings materialized (per-stage `batch` block, else the
+        // top-level one; never for CM stages) so instances receive a
+        // ready policy.
+        let nm = Arc::new(NodeManager::new(
+            config.apps_with_effective_batch(),
+            config.nm.util_threshold,
+        ));
         let nm_nodes: Vec<NodeId> = (9000..9000 + config.nm.replicas as u32)
             .map(NodeId)
             .collect();
@@ -276,6 +283,13 @@ impl WorkflowSet {
                     .flat_map(|a| a.stages.iter().map(|s| s.workers))
                     .max()
                     .unwrap_or(1),
+                // The aging guard rides the batch blocks (it guards the
+                // same Batch-band backlog batching creates); per-stage
+                // overrides count too — the queue is instance-wide, so
+                // the strongest configured bound wins.
+                max_starvation: Duration::from_millis(
+                    self.config.effective_max_starvation_ms(),
+                ),
             },
             &self.fabric,
             self.nm.clone(),
@@ -599,6 +613,47 @@ mod tests {
         assert_eq!(handle.status(), crate::client::RequestStatus::Done);
         // Per-priority accounting reached the set's registry.
         assert_eq!(set.metrics().counter("accepted.standard").get(), 1);
+        set.shutdown();
+    }
+
+    #[test]
+    fn batching_set_serves_requests_end_to_end() {
+        use crate::client::{SubmitOptions, WaitOutcome};
+        let mut cfg = sim_config();
+        cfg.batch = Some(crate::config::BatchSettings {
+            max_batch: 4,
+            max_wait_us: 5_000,
+            adaptive: true,
+            interactive_bypass: true,
+            max_starvation_ms: 100,
+        });
+        // Diffusion defaults to CM; run it IM here so every stage can
+        // coalesce.
+        cfg.apps[0].stages[2].mode = crate::config::SchedMode::Individual;
+        let pool = build_pool(&cfg, None);
+        let set = WorkflowSet::build(cfg, vec![vec![1, 1, 1, 1]], Arc::new(EchoLogic), pool);
+        std::thread::sleep(Duration::from_millis(80));
+        let mut handles = Vec::new();
+        for i in 0..8u8 {
+            handles.push(
+                set.submit_with(
+                    AppId(1),
+                    Payload::Bytes(vec![i; 16]),
+                    SubmitOptions::batch(),
+                )
+                .expect("must admit"),
+            );
+        }
+        for h in handles {
+            assert!(
+                matches!(h.wait(Duration::from_secs(10)), WaitOutcome::Done(_)),
+                "batched pipeline must still complete every request"
+            );
+        }
+        assert!(
+            set.metrics().counter("batches_executed").get() >= 1,
+            "the burst must have formed at least one micro-batch"
+        );
         set.shutdown();
     }
 

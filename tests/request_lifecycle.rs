@@ -5,7 +5,7 @@
 //! late cancel against a completed request is a no-op.
 
 use onepiece::client::{Gateway, RequestStatus, SubmitOptions, WaitOutcome};
-use onepiece::config::{ClusterConfig, ExecModel, FabricKind};
+use onepiece::config::{BatchSettings, ClusterConfig, ExecModel, FabricKind, SchedMode};
 use onepiece::transport::{AppId, Payload};
 use onepiece::workflow::EchoLogic;
 use onepiece::wset::{build_pool, WorkflowSet};
@@ -108,6 +108,112 @@ fn cancellation_mid_pipeline_drops_in_flight_work() {
         "a cancelled request must never publish a result"
     );
     assert_eq!(set.metrics().counter("requests_cancelled").get(), 1);
+    set.shutdown();
+}
+
+/// Batch-vs-lifecycle interaction: three Batch-class requests coalesce
+/// into one micro-batch; mid-flight, one member is cancelled and another
+/// hits its deadline. The surviving member must complete, each dropped
+/// member must publish its own terminal tombstone exactly once, and a
+/// recovery sweep over the (crashed) serving instance must not resubmit
+/// any of them — they are all terminal.
+#[test]
+fn batch_member_cancel_and_deadline_do_not_poison_the_batch() {
+    let mut cfg = ClusterConfig::i2v_default();
+    cfg.fabric = FabricKind::Ideal;
+    let ms = [1.0, 1.0, 200.0, 1.0];
+    for (s, &m) in cfg.apps[0].stages.iter_mut().zip(&ms) {
+        s.exec = ExecModel::Simulated { ms: m };
+        s.exec_ms = m;
+    }
+    // Diffusion runs IM so it can batch; a generous window (100 ms) lets
+    // the three submissions coalesce at every stage.
+    cfg.apps[0].stages[2].mode = SchedMode::Individual;
+    cfg.batch = Some(BatchSettings {
+        max_batch: 4,
+        max_wait_us: 100_000,
+        adaptive: false,
+        interactive_bypass: true,
+        max_starvation_ms: 0,
+    });
+    // Failure detector + checkpoints on, so the recovery-sweep half of
+    // the scenario is live (sweep every ~100 ms, evict after 400 ms).
+    cfg.nm.heartbeat_ms = 20;
+    cfg.nm.instance_timeout_ms = 400;
+    cfg.idle_pool = 0;
+    cfg.db.ttl_ms = 60_000;
+    let set = build(&cfg);
+    std::thread::sleep(Duration::from_millis(80));
+
+    // Three Batch-class members submitted back-to-back: they ride the
+    // same micro-batch through the 200 ms diffusion stage. B carries a
+    // deadline that lapses while that batch is in flight.
+    let a = set
+        .submit_with(AppId(1), Payload::Bytes(vec![1; 16]), SubmitOptions::batch())
+        .expect("must admit");
+    let b = set
+        .submit_with(
+            AppId(1),
+            Payload::Bytes(vec![2; 16]),
+            SubmitOptions::batch().with_deadline(Duration::from_millis(450)),
+        )
+        .expect("must admit");
+    let c = set
+        .submit_with(AppId(1), Payload::Bytes(vec![3; 16]), SubmitOptions::batch())
+        .expect("must admit");
+
+    // Cancel A once the batch is past the entrance stages.
+    std::thread::sleep(Duration::from_millis(250));
+    assert!(a.cancel(), "cancel must land on the in-flight member");
+
+    // The surviving member completes despite its batchmates dying.
+    assert!(
+        matches!(c.wait(Duration::from_secs(10)), WaitOutcome::Done(_)),
+        "remaining member must complete"
+    );
+    assert_eq!(a.wait(Duration::from_secs(10)), WaitOutcome::Cancelled);
+    assert_eq!(b.wait(Duration::from_secs(10)), WaitOutcome::DeadlineExceeded);
+    assert_eq!(a.status(), RequestStatus::Cancelled);
+    assert_eq!(b.status(), RequestStatus::DeadlineExceeded);
+    assert_eq!(c.status(), RequestStatus::Done);
+
+    let m = set.metrics();
+    assert!(m.counter("batches_executed").get() >= 1, "a batch must have formed");
+    assert_eq!(m.counter("requests_cancelled").get(), 1);
+    assert_eq!(m.counter("deadline_missed").get(), 1);
+    assert_eq!(m.counter("requests_failed").get(), 0, "nobody may escalate to Failed");
+    // First-writer-wins held: each terminal entry was written once per
+    // replica at most (re-publishes from late pipeline stages are
+    // suppressed, not duplicated — `dup_suppressed` counts them).
+    assert!(
+        set.db_client.fetch(c.uid()).is_none(),
+        "C's result was consumed by wait() and must not reappear"
+    );
+
+    // Recovery must not resubmit completed/terminal batch members: kill
+    // the diffusion instance *after* the batch resolved; the sweep
+    // evicts it but finds nothing recoverable at its ring.
+    let recovered_before = m.counter("requests_recovered").get();
+    let victim = set.inject_crash_at_stage(onepiece::nm::StageKey {
+        app: AppId(1),
+        stage: 2,
+    });
+    assert!(victim.is_some(), "diffusion instance must exist to crash");
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    while m.counter("instances_failed").get() == 0
+        && std::time::Instant::now() < deadline
+    {
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert!(m.counter("instances_failed").get() >= 1, "detector must evict the crash");
+    // A couple more sweeps, then: no replay may have fired.
+    std::thread::sleep(Duration::from_millis(300));
+    assert_eq!(
+        m.counter("requests_recovered").get(),
+        recovered_before,
+        "recovery replay must not resubmit completed/terminal batch members"
+    );
+    assert_eq!(m.counter("requests_failed").get(), 0);
     set.shutdown();
 }
 
