@@ -1,0 +1,117 @@
+//! E15 — ring verb coalescing: modelled fabric time per message for the
+//! three producer paths, swept over payload size × batch size.
+//!
+//! - **single** — `push` with the cached-header fast path disabled
+//!   (~7 verbs: the vectored GH, packed lock, and CAS-pair UH are
+//!   always on — the pre-coalescing 12-verb protocol no longer exists
+//!   in code; its cost is the analytic "before" column of the DESIGN.md
+//!   verb budget). Speedups below are against this *harder* baseline,
+//!   so they understate the PR-over-PR win.
+//! - **cached** — `push` with the fast path on: the slot read and
+//!   Case-7 scan are skipped when the validation read matches.
+//! - **push_many(k)** — the batched protocol: one lock, one GH, one
+//!   coalesced WB, k WLs, one doorbell-batched UH, one unlock.
+//!
+//! The fabric runs the calibrated InfiniBand model in `WaitMode::None`,
+//! so the numbers are the *modelled* verbs cost (`base_ns` per verb +
+//! line-rate bytes), read from `Fabric::simulated_ns()` — wall-clock
+//! noise does not enter. Target: ≥ 3× reduction in modelled ns/message
+//! for `push_many` at batch ≥ 8 vs the per-message push (asserted).
+
+use onepiece::bench;
+use onepiece::rdma::{Fabric, FabricConfig, LatencyModel};
+use onepiece::ringbuf::{create_ring, RingConfig, RingConsumer, RingProducer};
+use onepiece::util::SystemClock;
+use std::sync::Arc;
+
+/// Modelled (ns_per_msg, verbs_per_msg) for `rounds` batches of `batch`
+/// messages of `payload` bytes.
+fn measure(payload: usize, batch: usize, cached: bool) -> (f64, f64) {
+    let cfg = RingConfig {
+        nslots: 1024,
+        cap_bytes: 64 << 20,
+        ..Default::default()
+    };
+    let fabric = Fabric::new(FabricConfig {
+        latency: Some(LatencyModel::infiniband_100g()),
+        ..Default::default()
+    });
+    let (id, region) = create_ring(&fabric, cfg);
+    let prod = RingProducer::new(fabric.connect(id).unwrap(), cfg, Arc::new(SystemClock), 1);
+    prod.set_caching(cached);
+    let mut cons = RingConsumer::new(region, cfg);
+    let msg = vec![7u8; payload];
+    let refs: Vec<&[u8]> = (0..batch).map(|_| msg.as_slice()).collect();
+
+    // Warm up (fills the producer cache when enabled).
+    prod.push(&msg, None).unwrap();
+    cons.pop().unwrap().unwrap();
+
+    let rounds = 200usize;
+    let ns0 = fabric.simulated_ns();
+    let (ops0, _) = fabric.traffic();
+    for _ in 0..rounds {
+        if batch == 1 {
+            prod.push(&msg, None).unwrap();
+        } else {
+            let out = prod.push_many(&refs, None).unwrap();
+            assert_eq!(out.accepted, batch, "ring sized to fit the batch");
+        }
+        for r in cons.pop_many(batch) {
+            r.unwrap();
+        }
+    }
+    let msgs = (rounds * batch) as f64;
+    let ns = (fabric.simulated_ns() - ns0) as f64 / msgs;
+    let (ops1, _) = fabric.traffic();
+    (ns, (ops1 - ops0) as f64 / msgs)
+}
+
+fn main() {
+    let mut report = bench::Report::new("e15_ring_coalescing");
+    println!("\n=== E15: modelled fabric time per message (2 µs/verb base) ===");
+    println!(
+        "{:<12} {:<14} {:>14} {:>12} {:>10}",
+        "payload", "path", "ns/msg", "verbs/msg", "speedup"
+    );
+
+    for payload in [100usize, 1024, 16 << 10] {
+        let (single_ns, single_verbs) = measure(payload, 1, false);
+        let (cached_ns, cached_verbs) = measure(payload, 1, true);
+        let mut rows = vec![
+            ("single".to_string(), single_ns, single_verbs),
+            ("cached".to_string(), cached_ns, cached_verbs),
+        ];
+        let mut batch8_ns = f64::INFINITY;
+        for batch in [4usize, 8, 16] {
+            let (ns, verbs) = measure(payload, batch, true);
+            if batch == 8 {
+                batch8_ns = ns;
+            }
+            rows.push((format!("push_many({batch})"), ns, verbs));
+        }
+        for (path, ns, verbs) in &rows {
+            println!(
+                "{:<12} {:<14} {:>12.0}ns {:>12.2} {:>9.2}x",
+                format!("{payload} B"),
+                path,
+                ns,
+                verbs,
+                single_ns / ns
+            );
+            let key = path.replace('(', "_").replace(')', "");
+            report.add(format!("{key}_{payload}b.ns_per_msg"), *ns);
+            report.add(format!("{key}_{payload}b.verbs_per_msg"), *verbs);
+        }
+        let speedup = single_ns / batch8_ns;
+        report.add(format!("speedup_batch8_{payload}b"), speedup);
+        assert!(
+            speedup >= 3.0,
+            "{payload} B: push_many(8) must cut modelled fabric ns/msg ≥ 3x \
+             vs per-message push (got {speedup:.2}x)"
+        );
+        println!();
+    }
+    println!("(push_many at batch 8 is ≥ 3x cheaper per message than per-message push)");
+    report.write();
+}

@@ -107,10 +107,31 @@ fn main() {
         size.max,
         wait.p50 as f64 / 1e6
     );
+    let ring_pushes = m.counter("ring_pushes_total").get();
+    let ring_messages = m.counter("ring_messages_total").get();
+    let ring_verbs = m.counter("ring_verbs_total").get();
+    println!(
+        "ring data plane: {} messages in {} pushes ({:.2} verbs/message)",
+        ring_messages,
+        ring_pushes,
+        ring_verbs as f64 / ring_messages.max(1) as f64
+    );
     assert_eq!(done, handles.len(), "every admitted request must complete");
     assert!(
         m.counter("batches_executed").get() >= 1,
         "the burst must form at least one micro-batch"
+    );
+    // The e15 coalescing invariant: with batched delivery on, a
+    // micro-batch crosses each ring as one locked push, so the set-wide
+    // push count must stay below the per-member message count.
+    assert!(
+        ring_pushes < ring_messages,
+        "coalesced delivery must push fewer times ({ring_pushes}) than \
+         members delivered ({ring_messages})"
+    );
+    println!(
+        "batched delivery invariant OK: ring_pushes_total ({ring_pushes}) < \
+         members_delivered ({ring_messages})"
     );
     set.shutdown();
     println!("done: batching amortized the burst; Interactive bypassed it");

@@ -217,9 +217,15 @@ impl Proxy {
         if entry.0.len() != regions.len()
             || entry.0.iter().map(|(r, _)| *r).ne(regions.iter().copied())
         {
+            let ring_metrics =
+                crate::transport::RingMetrics::from_registry(self.tracker.metrics());
             entry.0 = regions
                 .iter()
-                .map(|&rid| (rid, RdmaEndpoint::sender_for(&self.fabric, rid)))
+                .map(|&rid| {
+                    let mut tx = RdmaEndpoint::sender_for(&self.fabric, rid);
+                    tx.set_metrics(ring_metrics.clone());
+                    (rid, tx)
+                })
                 .collect();
         }
         let idx = entry.1 % entry.0.len();

@@ -125,7 +125,8 @@ struct FabricInner {
     next_id: AtomicU64,
     config: Mutex<FabricConfig>,
     // Hot-path mirror of `config` (EXPERIMENTS.md §Perf: a Mutex lock per
-    // verb — ~12 verbs per ring push — dominated small-message cost).
+    // verb — 12 verbs per ring push before the e15 coalescing, ~6 after —
+    // dominated small-message cost).
     hot_latency_on: std::sync::atomic::AtomicBool,
     hot_base_ns: AtomicU64,
     hot_fs_per_byte: AtomicU64,
@@ -348,6 +349,59 @@ impl QueuePair {
             OpOutcome { simulated_ns, delivered: true },
         ))
     }
+
+    /// Vectored read of `out.len()` contiguous 64-bit words starting at
+    /// word-aligned `off`, charged as **one** verb (`base_ns` + 8·n
+    /// bytes). Each word is loaded with the same atomic semantics as
+    /// [`QueuePair::post_read_u64`]. This is the GH header-snapshot op:
+    /// on real hardware it is a single READ work request covering the
+    /// contiguous header words — one doorbell, one completion — instead
+    /// of n separate verbs.
+    pub fn post_read_words(&self, off: usize, out: &mut [u64]) -> Result<OpOutcome, RdmaError> {
+        self.check(off, out.len() * 8)?;
+        let simulated_ns = self.fabric.account(out.len() * 8);
+        for (i, w) in out.iter_mut().enumerate() {
+            *w = self.region.load_u64(off + i * 8);
+        }
+        Ok(OpOutcome { simulated_ns, delivered: true })
+    }
+
+    /// Vectored write of contiguous 64-bit words at word-aligned `off`,
+    /// charged as one verb. Control-plane (header) op: like
+    /// [`QueuePair::post_write_u64`] it is never dropped by fault
+    /// injection — it completes or the QP breaks.
+    pub fn post_write_words(&self, off: usize, vals: &[u64]) -> Result<OpOutcome, RdmaError> {
+        self.check(off, vals.len() * 8)?;
+        let simulated_ns = self.fabric.account(vals.len() * 8);
+        for (i, v) in vals.iter().enumerate() {
+            self.region.store_u64(off + i * 8, *v);
+        }
+        Ok(OpOutcome { simulated_ns, delivered: true })
+    }
+
+    /// Two CAS work requests posted with a **single doorbell**, charged
+    /// as one verb. Both execute in posting order with independent
+    /// compare semantics (a doorbell batch on a real QP: the WRs share
+    /// the PCIe round trip and completion, not their atomicity). Used by
+    /// the ring's UH step to advance both tail words for one `base_ns`.
+    #[allow(clippy::too_many_arguments)]
+    #[allow(clippy::type_complexity)]
+    pub fn post_cas_pair(
+        &self,
+        off1: usize,
+        expected1: u64,
+        new1: u64,
+        off2: usize,
+        expected2: u64,
+        new2: u64,
+    ) -> Result<((Result<u64, u64>, Result<u64, u64>), OpOutcome), RdmaError> {
+        self.check(off1, 8)?;
+        self.check(off2, 8)?;
+        let simulated_ns = self.fabric.account(16);
+        let r1 = self.region.cas_u64(off1, expected1, new1);
+        let r2 = self.region.cas_u64(off2, expected2, new2);
+        Ok(((r1, r2), OpOutcome { simulated_ns, delivered: true }))
+    }
 }
 
 #[cfg(test)]
@@ -437,6 +491,42 @@ mod tests {
         // CAS is control-plane: never dropped.
         let (r, _) = qp.post_cas(0, 0, 1).unwrap();
         assert_eq!(r, Ok(0));
+    }
+
+    #[test]
+    fn vectored_words_roundtrip_as_one_verb() {
+        let fabric = Fabric::new(FabricConfig {
+            latency: Some(LatencyModel::infiniband_100g()),
+            ..Default::default()
+        });
+        let (id, _) = fabric.register(64);
+        let qp = fabric.connect(id).unwrap();
+        let out = qp.post_write_words(16, &[7, 8, 9]).unwrap();
+        // One verb: one base_ns, not three.
+        assert!(out.simulated_ns < 2 * LatencyModel::infiniband_100g().base_ns);
+        let mut words = [0u64; 3];
+        let out = qp.post_read_words(16, &mut words).unwrap();
+        assert_eq!(words, [7, 8, 9]);
+        assert!(out.simulated_ns < 2 * LatencyModel::infiniband_100g().base_ns);
+        let (ops, bytes) = fabric.traffic();
+        assert_eq!(ops, 2, "a vectored op is a single verb");
+        assert_eq!(bytes, 48);
+        // Bounds still enforced.
+        assert!(qp.post_read_words(56, &mut words).is_err());
+    }
+
+    #[test]
+    fn cas_pair_independent_compares_one_verb() {
+        let fabric = Fabric::ideal();
+        let (id, _) = fabric.register(32);
+        let qp = fabric.connect(id).unwrap();
+        qp.post_write_u64(8, 5).unwrap();
+        // First CAS matches, second does not: independent outcomes.
+        let ((r1, r2), _) = qp.post_cas_pair(0, 0, 1, 8, 0, 2).unwrap();
+        assert_eq!(r1, Ok(0));
+        assert_eq!(r2, Err(5));
+        let (ops, _) = fabric.traffic();
+        assert_eq!(ops, 1, "a doorbell-batched CAS pair is one verb");
     }
 
     #[test]

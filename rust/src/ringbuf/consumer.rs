@@ -120,6 +120,24 @@ impl RingConsumer {
         self.region.store_u64(layout::VHEAD_OFF, self.vhead_off);
     }
 
+    /// Batch pop: drain up to `max` entries in one round — an arriving
+    /// micro-batch is seen whole, so downstream batch formation isn't
+    /// fed one message per poll. Driven purely by the per-slot busy
+    /// bits (like [`RingConsumer::pop`], which never reads the producer
+    /// tail), so an entry whose producer died between WL and UH is
+    /// still drained immediately instead of waiting for a later push's
+    /// Case-7 recovery to advance the header.
+    pub fn pop_many(&mut self, max: usize) -> Vec<Result<Vec<u8>, PopError>> {
+        let mut out = Vec::new();
+        for _ in 0..max {
+            match self.pop() {
+                Some(r) => out.push(r),
+                None => break,
+            }
+        }
+        out
+    }
+
     /// Number of published-but-unconsumed entries (approximate; racy read
     /// of the producer tail).
     pub fn backlog(&self) -> u64 {

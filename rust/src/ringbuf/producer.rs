@@ -1,32 +1,71 @@
 //! Producer (sender) side of the double-ring buffer.
 //!
 //! Implements the paper's §6.1 sender operations over one-sided RDMA
-//! verbs only:
+//! verbs only, with the e15 **verb-coalesced** data plane:
 //!
-//! 1. acquire the CAS spin-lock (stealing it if held longer than the
-//!    timeout — the deadlock-resolution mechanism),
-//! 2. **GH** — read the header and the size slot at the tail,
+//! 1. acquire the CAS spin-lock — one verb: the lock word packs a
+//!    per-acquisition tag (high 16 bits) and the acquire timestamp
+//!    (low 48 bits), so locking, lease-stamping, and (on contention)
+//!    lease inspection are all carried by the CAS itself; a holder past
+//!    the timeout is stolen exactly as before (the deadlock-resolution
+//!    mechanism),
+//! 2. **GH** — one vectored read of the four header words; when the
+//!    producer's cache from its last successful push still matches the
+//!    tail, the size-slot read and the Case-7 recovery scan are skipped
+//!    entirely (the cached-header fast path, see below),
 //! 3. recover a predecessor lost after WL (busy slot ⇒ advance header
 //!    on its behalf — proof Case 7),
 //! 4. space check (slot ring + byte ring),
-//! 5. **WB** — write the frame into the buffer region,
-//! 6. **WL** — CAS the size word (busy bit + length); a failed CAS means
-//!    a lock stealer finalized this slot first (Cases 2/3/6) — abort,
-//! 7. **UH** — advance the header tails,
+//! 5. **WB** — write the frame(s) into the buffer region; frames are
+//!    built in a producer-owned scratch (no allocation in steady state)
+//!    and a batched push writes each physically contiguous run of
+//!    frames with a single verb,
+//! 6. **WL** — CAS the size word (busy bit + length) per frame; a
+//!    failed CAS means a lock stealer finalized this slot first
+//!    (Cases 2/3/6) — abort (single push) or finalize the accepted
+//!    prefix (batched push),
+//! 7. **UH** — advance both header tails with one doorbell-batched CAS
+//!    pair,
 //! 8. unlock (ignoring failure if the lock was stolen meanwhile).
 //!
+//! ## Cached-header fast path
+//!
+//! After a push whose UH CAS pair actually advanced the header (a
+//! benignly-failed UH means a stealer moved the tail mid-push — the
+//! cache is dropped then, or it could alias a tail already holding the
+//! stealer's frame), the producer remembers the tail it published
+//! (`vtail_off`, `vtail_slot`). The next GH still performs its one
+//! vectored header read — that read *is* the validation — and if the
+//! tail matches the cache, nobody pushed in between: the slot at the
+//! tail is guaranteed clear (or the slot ring is full, which the space
+//! check catches from the same read), so the per-slot read and the
+//! Case-7 scan are skipped and the WL expectation is 0. A naive variant
+//! that skips GH entirely and trusts the WL CAS alone is **unsound**:
+//! if other producers pushed and the consumer already drained the slot
+//! back to 0, the CAS succeeds on a position the consumer's cursor has
+//! passed and the message is silently lost (ABA). The validated-read
+//! variant closes that hole at the cost of one verb, and any mismatch
+//! or WL failure falls back to the full GH scan on the next attempt.
+//!
 //! [`ProducerSession`] exposes each protocol step separately so the
-//! liveness tests can interleave two producers in every Case 1–8 order;
-//! [`RingProducer::push`] is the production path driving a session
-//! straight through, with optional fault injection ([`DieAt`]).
+//! liveness tests can interleave two producers in every Case 1–8 order
+//! (including mid-batch deaths via [`ProducerSession::wl_at`]);
+//! [`RingProducer::push`] / [`RingProducer::push_many`] are the
+//! production paths driving a session straight through, with optional
+//! fault injection ([`DieAt`]).
 
 use super::{layout, RingConfig};
 use crate::rdma::{QueuePair, RdmaError};
 use crate::util::{frame_checksum, Clock};
+use std::cell::{Cell, RefCell};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 /// Fault injection point: the producer "dies" (abandons the protocol,
-/// leaving partial state) after completing the named step.
+/// leaving partial state) after completing the named step. For
+/// `push_many`, `AfterWb` means after the coalesced frame write and
+/// `AfterWl` after the *last* slot CAS; deaths between individual WLs
+/// are driven through the stepped [`ProducerSession::wl_at`] API.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum DieAt {
     AfterLock,
@@ -82,31 +121,137 @@ pub struct PushOutcome {
     pub simulated_ns: u64,
     /// Whether the lock was stolen from a timed-out holder.
     pub stole_lock: bool,
+    /// One-sided verbs issued by this push (doorbell batches count 1).
+    pub verbs: u64,
+    /// Whether the cached-header fast path skipped the full GH scan.
+    pub cache_hit: bool,
+}
+
+/// Successful (possibly partial) batched push summary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BatchPushOutcome {
+    /// Frames actually published — always a *prefix* of the input (the
+    /// ring filled, or a lock stealer took the remaining slots). The
+    /// caller re-offers the tail through its own retry/recovery path.
+    pub accepted: usize,
+    /// Virtual slot of the first published frame.
+    pub first_vslot: u64,
+    /// Total modelled fabric time spent on the verbs.
+    pub simulated_ns: u64,
+    /// Whether the lock was stolen from a timed-out holder.
+    pub stole_lock: bool,
+    /// One-sided verbs issued (doorbell batches count 1).
+    pub verbs: u64,
+    /// Whether the cached-header fast path skipped the full GH scan.
+    pub cache_hit: bool,
+}
+
+/// Lock word layout: acquisition tag (high 16 bits, never 0 while
+/// held) and acquire timestamp (low 48 bits of the producer clock's
+/// nanoseconds). The steal check measures the hold modulo 2^48 (~78 h),
+/// so clock wraps never leave a dead holder's lock unstealable; only a
+/// hold longer than a full wrap aliases (steal deferred, still bounded).
+const LOCK_TS_MASK: u64 = (1 << 48) - 1;
+
+/// Per-acquisition-attempt tag counter. Unlock/steal CAS on the *exact*
+/// packed word, so correctness needs the word to differ between any two
+/// concurrent holders of one lock: a fresh tag per attempt makes a
+/// collision require both a 65535-attempt counter wrap *and* an
+/// identical masked timestamp (producer ids, which callers may reuse at
+/// scale, never enter the word).
+static LOCK_TAG: AtomicU64 = AtomicU64::new(0);
+
+fn lock_word(now_ns: u64) -> u64 {
+    let tag = (LOCK_TAG.fetch_add(1, Ordering::Relaxed) % 0xFFFF) + 1; // 1..=0xFFFF
+    (tag << 48) | (now_ns & LOCK_TS_MASK)
+}
+
+/// Tail snapshot a producer keeps from its last successful push.
+#[derive(Debug, Clone, Copy)]
+struct HeaderCache {
+    vtail_off: u64,
+    vtail_slot: u64,
 }
 
 /// A sender bound to one ring via a queue pair.
+///
+/// Owns the reusable frame scratch and the header cache, so it is
+/// `Send` but **not** `Sync` — one producer per sending thread (the
+/// protocol's producer id uniqueness already requires that).
 pub struct RingProducer {
     qp: QueuePair,
     config: RingConfig,
     clock: Arc<dyn Clock>,
-    /// Non-zero, unique per producer (lock ownership word).
+    /// Non-zero, unique per producer (frame attribution; the lock word
+    /// itself carries a per-acquisition tag, not this id).
     id: u64,
+    /// Frame-build scratch, reused across pushes (zero-alloc steady
+    /// state: `wb`/`wb_many` never allocate once warm).
+    scratch: RefCell<Vec<u8>>,
+    /// Cached tail from the last successful push (fast-path GH).
+    cache: Cell<Option<HeaderCache>>,
+    /// Fast path enable (benches compare against the uncached protocol).
+    caching: Cell<bool>,
 }
 
 impl RingProducer {
     /// `id` must be non-zero and unique among producers of this ring.
     pub fn new(qp: QueuePair, config: RingConfig, clock: Arc<dyn Clock>, id: u64) -> Self {
-        assert!(id != 0, "producer id 0 is the unlocked sentinel");
-        Self { qp, config, clock, id }
+        assert!(id != 0, "producer id must be non-zero");
+        Self {
+            qp,
+            config,
+            clock,
+            id,
+            scratch: RefCell::new(Vec::new()),
+            cache: Cell::new(None),
+            caching: Cell::new(true),
+        }
     }
 
-    /// Producer id (lock word value while held).
+    /// Producer id.
     pub fn id(&self) -> u64 {
         self.id
     }
 
+    /// True if a payload of `len` bytes can *ever* fit this ring (its
+    /// frame is no larger than the byte-ring capacity). A `false` here
+    /// means `Full` is permanent for this payload — retrying is futile.
+    pub fn accepts(&self, len: usize) -> bool {
+        RingConfig::frame_len(len) <= self.config.cap_bytes
+    }
+
+    /// Enable/disable the cached-header fast path (default on). The
+    /// protocol is identical either way; benches disable it to measure
+    /// the uncoalesced baseline.
+    pub fn set_caching(&self, on: bool) {
+        self.caching.set(on);
+        if !on {
+            self.cache.set(None);
+        }
+    }
+
     /// Full protocol push. `die_at` injects a mid-protocol failure.
+    ///
+    /// A `LostRace` on a cached-header attempt is retried **once**
+    /// through the full GH scan (the failed WL already invalidated the
+    /// cache): a ghost busy word left by a producer that died after WL
+    /// needs the Case-7 recovery pass the fast path skipped, and the
+    /// old uncached push resolved that case internally — callers keep
+    /// seeing `LostRace` only for genuine mid-push steals.
     pub fn push(&self, payload: &[u8], die_at: Option<DieAt>) -> Result<PushOutcome, PushError> {
+        let had_cache = self.caching.get() && self.cache.get().is_some();
+        match self.push_protocol(payload, die_at) {
+            Err(PushError::LostRace) if had_cache => self.push_protocol(payload, die_at),
+            r => r,
+        }
+    }
+
+    fn push_protocol(
+        &self,
+        payload: &[u8],
+        die_at: Option<DieAt>,
+    ) -> Result<PushOutcome, PushError> {
         let mut s = self.begin()?;
         macro_rules! die_check {
             ($point:expr) => {
@@ -126,37 +271,132 @@ impl RingProducer {
         s.uh()?;
         die_check!(DieAt::AfterUh);
         s.unlock()?;
+        // Record the cache only when OUR UH advanced the header: a
+        // benignly-failed UH means a lock stealer moved the tail during
+        // this push, and the tail can land exactly where we would have
+        // put it while the slot there already holds the stealer's
+        // frame — a cache recorded then would pass the next push's
+        // validation read and WB over a committed entry.
+        if s.uh_ok {
+            self.cache.set(Some(HeaderCache {
+                vtail_off: s.next_v,
+                vtail_slot: s.vtail_slot + 1,
+            }));
+        } else {
+            self.cache.set(None);
+        }
         Ok(s.outcome())
     }
 
-    /// Begin a stepped session: acquires the lock (with timeout stealing).
+    /// Batched push: one lock acquisition, one GH, one reservation walk
+    /// over all frames (the wrap rule applies per frame, exactly as
+    /// sequential pushes would place them), one coalesced WB per
+    /// physically contiguous run, per-slot WLs, one doorbell-batched
+    /// UH, one unlock.
+    ///
+    /// Partial failure is a *prefix*: if the ring fills mid-batch (or a
+    /// stealer takes a later slot), the accepted prefix is published
+    /// and counted in [`BatchPushOutcome::accepted`]; the caller
+    /// retries or strands the tail through its recovery path.
+    /// `push_many(&[f])` leaves byte-identical ring state to `push(f)`.
+    /// Like [`RingProducer::push`], a `LostRace` on a cached-header
+    /// attempt is retried once through the full GH scan.
+    pub fn push_many(
+        &self,
+        payloads: &[&[u8]],
+        die_at: Option<DieAt>,
+    ) -> Result<BatchPushOutcome, PushError> {
+        let had_cache = self.caching.get() && self.cache.get().is_some();
+        match self.push_many_protocol(payloads, die_at) {
+            Err(PushError::LostRace) if had_cache => self.push_many_protocol(payloads, die_at),
+            r => r,
+        }
+    }
+
+    fn push_many_protocol(
+        &self,
+        payloads: &[&[u8]],
+        die_at: Option<DieAt>,
+    ) -> Result<BatchPushOutcome, PushError> {
+        if payloads.is_empty() {
+            return Ok(BatchPushOutcome {
+                accepted: 0,
+                first_vslot: 0,
+                simulated_ns: 0,
+                stole_lock: false,
+                verbs: 0,
+                cache_hit: false,
+            });
+        }
+        let mut s = self.begin()?;
+        macro_rules! die_check {
+            ($point:expr) => {
+                if die_at == Some($point) {
+                    return Err(PushError::Died($point));
+                }
+            };
+        }
+        die_check!(DieAt::AfterLock);
+        s.gh()?;
+        die_check!(DieAt::AfterGh);
+        let accepted = s.reserve_many(payloads)?;
+        s.wb_many(&payloads[..accepted])?;
+        die_check!(DieAt::AfterWb);
+        let accepted = s.wl_many()?;
+        die_check!(DieAt::AfterWl);
+        s.uh_many()?;
+        die_check!(DieAt::AfterUh);
+        s.unlock()?;
+        // Same UH-success gate as `push` (see there).
+        if s.uh_ok {
+            self.cache.set(Some(HeaderCache {
+                vtail_off: s.batch_end_v,
+                vtail_slot: s.vtail_slot + accepted as u64,
+            }));
+        } else {
+            self.cache.set(None);
+        }
+        let mut out = s.batch_outcome();
+        out.accepted = accepted;
+        Ok(out)
+    }
+
+    /// Begin a stepped session: acquires the lock (with timeout
+    /// stealing). One verb on the uncontended path — the CAS installs
+    /// the packed owner+timestamp word; on contention the failed CAS
+    /// already returned the holder's word, so the lease check needs no
+    /// extra read.
     pub fn begin(&self) -> Result<ProducerSession<'_>, PushError> {
         let mut sim_ns = 0u64;
+        let mut verbs = 0u64;
         let mut stole = false;
         for _ in 0..self.config.max_lock_spins {
-            let (res, out) = self.qp.post_cas(layout::LOCK, 0, self.id)?;
+            let word = lock_word(self.clock.now_ns());
+            let (res, out) = self.qp.post_cas(layout::LOCK, 0, word)?;
             sim_ns += out.simulated_ns;
+            verbs += 1;
             match res {
-                Ok(_) => {
-                    let out = self
-                        .qp
-                        .post_write_u64(layout::LOCK_TS, self.clock.now_ns())?;
-                    sim_ns += out.simulated_ns;
-                    return Ok(ProducerSession::new(self, sim_ns, stole));
-                }
-                Err(owner) => {
+                Ok(_) => return Ok(ProducerSession::new(self, sim_ns, verbs, stole, word)),
+                Err(prev) => {
                     // Timeout steal: the paper's deadlock resolution.
-                    let (ts, out) = self.qp.post_read_u64(layout::LOCK_TS)?;
-                    sim_ns += out.simulated_ns;
+                    // The holder's acquire timestamp rode back in the
+                    // failed CAS result. Elapsed time is computed mod
+                    // 2^48 so a clock that wrapped the 48-bit field
+                    // still measures the hold correctly (an elapsed
+                    // beyond 2^48 ns aliases short — at worst a late
+                    // steal deferred to the next wrap, never a stuck
+                    // dead lock).
+                    let ts = prev & LOCK_TS_MASK;
                     let now = self.clock.now_ns();
-                    if now.saturating_sub(ts) > self.config.lock_timeout_ns {
-                        let (res, out) = self.qp.post_cas(layout::LOCK, owner, self.id)?;
+                    let elapsed = now.wrapping_sub(ts) & LOCK_TS_MASK;
+                    if elapsed > self.config.lock_timeout_ns {
+                        let word = lock_word(now);
+                        let (res, out) = self.qp.post_cas(layout::LOCK, prev, word)?;
                         sim_ns += out.simulated_ns;
+                        verbs += 1;
                         if res.is_ok() {
                             stole = true;
-                            let out = self.qp.post_write_u64(layout::LOCK_TS, now)?;
-                            sim_ns += out.simulated_ns;
-                            return Ok(ProducerSession::new(self, sim_ns, stole));
+                            return Ok(ProducerSession::new(self, sim_ns, verbs, stole, word));
                         }
                     }
                     std::hint::spin_loop();
@@ -172,7 +412,11 @@ impl RingProducer {
 pub struct ProducerSession<'a> {
     prod: &'a RingProducer,
     sim_ns: u64,
+    verbs: u64,
     stole_lock: bool,
+    /// Exact word we installed in the lock (unlock CASes it back to 0).
+    lock_word: u64,
+    cache_hit: bool,
     // Header snapshot from GH.
     vtail_off: u64,
     vtail_slot: u64,
@@ -180,21 +424,33 @@ pub struct ProducerSession<'a> {
     vhead_off: u64,
     /// Size word observed at the tail slot during GH (WL CAS expectation).
     observed_size_word: u64,
-    // Reservation.
+    // Single-push reservation.
     start_v: u64,
     next_v: u64,
     frame_len: usize,
     payload_len: usize,
+    // Batched reservation: per-frame (start_v, frame_len) and the
+    // virtual offset one past the last accepted frame.
+    batch: Vec<(u64, usize)>,
+    batch_end_v: u64,
+    /// True iff the UH CAS pair actually advanced the header (both
+    /// compares matched the GH snapshot). A benignly-failed UH means a
+    /// stealer moved the tail during our push — the producer cache must
+    /// NOT be recorded then (see the push drivers).
+    uh_ok: bool,
     done_gh: bool,
     done_reserve: bool,
 }
 
 impl<'a> ProducerSession<'a> {
-    fn new(prod: &'a RingProducer, sim_ns: u64, stole_lock: bool) -> Self {
+    fn new(prod: &'a RingProducer, sim_ns: u64, verbs: u64, stole_lock: bool, lock_word: u64) -> Self {
         Self {
             prod,
             sim_ns,
+            verbs,
             stole_lock,
+            lock_word,
+            cache_hit: false,
             vtail_off: 0,
             vtail_slot: 0,
             vhead_slot: 0,
@@ -204,6 +460,9 @@ impl<'a> ProducerSession<'a> {
             next_v: 0,
             frame_len: 0,
             payload_len: 0,
+            batch: Vec::new(),
+            batch_end_v: 0,
+            uh_ok: false,
             done_gh: false,
             done_reserve: false,
         }
@@ -217,32 +476,59 @@ impl<'a> ProducerSession<'a> {
         &self.prod.config
     }
 
-    /// GH: read the header and the size slot at the tail; recover any
-    /// predecessor lost after WL (Case 7) by advancing the header first.
+    /// True if this session's GH took the cached-header fast path.
+    pub fn used_cache(&self) -> bool {
+        self.cache_hit
+    }
+
+    /// GH: one vectored read of the four header words. If the tail
+    /// matches this producer's cache from its last successful push,
+    /// nothing was pushed in between — skip the size-slot read and the
+    /// Case-7 scan (the fast path; see the module docs for why the
+    /// validation read is load-bearing). Otherwise read the tail slot
+    /// and recover any predecessor lost after WL (Case 7) by advancing
+    /// the header on its behalf.
     pub fn gh(&mut self) -> Result<(), PushError> {
-        let mut read = |off: usize| -> Result<u64, PushError> {
-            let (v, out) = self.prod.qp.post_read_u64(off)?;
-            self.sim_ns += out.simulated_ns;
-            Ok(v)
-        };
-        self.vtail_off = read(layout::VTAIL_OFF)?;
-        self.vtail_slot = read(layout::VTAIL_SLOT)?;
-        self.vhead_slot = read(layout::VHEAD_SLOT)?;
-        self.vhead_off = read(layout::VHEAD_OFF)?;
+        let mut hdr = [0u64; 4];
+        let out = self.qp().post_read_words(layout::VTAIL_OFF, &mut hdr)?;
+        self.sim_ns += out.simulated_ns;
+        self.verbs += 1;
+        self.vtail_off = hdr[0];
+        self.vtail_slot = hdr[1];
+        self.vhead_slot = hdr[2];
+        self.vhead_off = hdr[3];
+
+        if self.prod.caching.get() {
+            if let Some(c) = self.prod.cache.get() {
+                if c.vtail_off == self.vtail_off
+                    && c.vtail_slot == self.vtail_slot
+                    && self.vhead_slot <= self.vtail_slot
+                {
+                    // Tail unchanged since our own push completed: the
+                    // tail slot was left clear by the consumer (or the
+                    // slot ring is full, which `reserve` rejects from
+                    // the head/tail distance in this same snapshot).
+                    self.observed_size_word = 0;
+                    self.cache_hit = true;
+                    self.done_gh = true;
+                    return Ok(());
+                }
+            }
+        }
 
         // The consumer may already have consumed entries the header never
         // covered (a producer lost after WL whose entry the consumer read
         // before anyone ran Case-7 recovery). The head is then *ahead* of
-        // the tail; fast-forward the tail to re-synchronize.
+        // the tail; fast-forward the tail to re-synchronize (both tail
+        // words ride one vectored write).
         if self.vhead_slot > self.vtail_slot {
             self.vtail_slot = self.vhead_slot;
             self.vtail_off = self.vhead_off;
-            let out = self.qp().post_write_u64(layout::VTAIL_OFF, self.vtail_off)?;
-            self.sim_ns += out.simulated_ns;
             let out = self
                 .qp()
-                .post_write_u64(layout::VTAIL_SLOT, self.vtail_slot)?;
+                .post_write_words(layout::VTAIL_OFF, &[self.vtail_off, self.vtail_slot])?;
             self.sim_ns += out.simulated_ns;
+            self.verbs += 1;
         }
 
         // Case-7 recovery loop: a sender lost after WL leaves a busy slot
@@ -262,18 +548,18 @@ impl<'a> ProducerSession<'a> {
             let slot_off = self.cfg().slot_off(self.vtail_slot);
             let (word, out) = self.qp().post_read_u64(slot_off)?;
             self.sim_ns += out.simulated_ns;
+            self.verbs += 1;
             if word & layout::BUSY == 0 {
                 self.observed_size_word = word;
                 break;
             }
             let flen = (word & !layout::BUSY) as usize;
             let (_, next) = self.cfg().wrap(self.vtail_off, flen);
-            let out = self.qp().post_write_u64(layout::VTAIL_OFF, next)?;
-            self.sim_ns += out.simulated_ns;
             let out = self
                 .qp()
-                .post_write_u64(layout::VTAIL_SLOT, self.vtail_slot + 1)?;
+                .post_write_words(layout::VTAIL_OFF, &[next, self.vtail_slot + 1])?;
             self.sim_ns += out.simulated_ns;
+            self.verbs += 1;
             self.vtail_off = next;
             self.vtail_slot += 1;
         }
@@ -286,6 +572,7 @@ impl<'a> ProducerSession<'a> {
         assert!(self.done_gh, "reserve before gh");
         let frame_len = RingConfig::frame_len(len);
         if frame_len > self.cfg().cap_bytes {
+            self.abort_unlock();
             return Err(PushError::Full); // can never fit
         }
         // Slot ring full?
@@ -307,18 +594,96 @@ impl<'a> ProducerSession<'a> {
         Ok(())
     }
 
-    /// WB: write the frame (`[len][crc][payload][pad]`) into the buffer.
+    /// Batched space check: walk the payloads through the wrap rule,
+    /// accepting the longest prefix that fits both rings. Returns the
+    /// accepted count (≥ 1), or `Full` (after releasing the lock) when
+    /// not even the first frame fits.
+    pub fn reserve_many(&mut self, payloads: &[&[u8]]) -> Result<usize, PushError> {
+        assert!(self.done_gh, "reserve_many before gh");
+        self.batch.clear();
+        self.batch.reserve(payloads.len());
+        let mut voff = self.vtail_off;
+        for (i, p) in payloads.iter().enumerate() {
+            let frame_len = RingConfig::frame_len(p.len());
+            if frame_len > self.cfg().cap_bytes {
+                break; // this frame can never fit; accept the prefix
+            }
+            if self.vtail_slot + i as u64 - self.vhead_slot >= self.cfg().nslots as u64 {
+                break; // slot ring full
+            }
+            let (start_v, next_v) = self.cfg().wrap(voff, frame_len);
+            if next_v - self.vhead_off > self.cfg().cap_bytes as u64 {
+                break; // byte ring full
+            }
+            self.batch.push((start_v, frame_len));
+            voff = next_v;
+        }
+        if self.batch.is_empty() {
+            self.abort_unlock();
+            return Err(PushError::Full);
+        }
+        self.batch_end_v = voff;
+        self.done_reserve = true;
+        Ok(self.batch.len())
+    }
+
+    /// Build one frame (`[len][crc][payload][pad]`) into `buf`.
+    fn build_frame(buf: &mut Vec<u8>, payload: &[u8], frame_len: usize) {
+        let base = buf.len();
+        buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        buf.extend_from_slice(&frame_checksum(payload).to_le_bytes());
+        buf.extend_from_slice(payload);
+        buf.resize(base + frame_len, 0);
+    }
+
+    /// WB: write the frame into the buffer region. The frame is built
+    /// in the producer's reusable scratch — no allocation once warm.
     pub fn wb(&mut self, payload: &[u8]) -> Result<(), PushError> {
         assert!(self.done_reserve, "wb before reserve");
         assert_eq!(payload.len(), self.payload_len, "payload changed size");
-        let mut frame = Vec::with_capacity(self.frame_len);
-        frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
-        frame.extend_from_slice(&frame_checksum(payload).to_le_bytes());
-        frame.extend_from_slice(payload);
-        frame.resize(self.frame_len, 0);
+        let mut frame = self.prod.scratch.borrow_mut();
+        frame.clear();
+        Self::build_frame(&mut frame, payload, self.frame_len);
         let off = self.cfg().phys(self.start_v);
         let out = self.qp().post_write(off, &frame)?;
         self.sim_ns += out.simulated_ns;
+        self.verbs += 1;
+        Ok(())
+    }
+
+    /// Batched WB: concatenate each *physically contiguous* run of
+    /// reserved frames in the scratch and write it with a single verb.
+    /// A batch spans at most one wrap boundary (its total size is
+    /// bounded by the ring capacity), so this is one or two verbs.
+    pub fn wb_many(&mut self, payloads: &[&[u8]]) -> Result<(), PushError> {
+        assert!(self.done_reserve, "wb_many before reserve_many");
+        assert!(
+            payloads.len() >= self.batch.len(),
+            "wb_many needs every reserved payload"
+        );
+        let mut frame = self.prod.scratch.borrow_mut();
+        frame.clear();
+        let mut run_phys = 0usize;
+        for i in 0..self.batch.len() {
+            let (start_v, frame_len) = self.batch[i];
+            let phys = self.cfg().phys(start_v);
+            if !frame.is_empty() && phys != run_phys + frame.len() {
+                // Wrap boundary: flush the finished run.
+                let out = self.qp().post_write(run_phys, &frame)?;
+                self.sim_ns += out.simulated_ns;
+                self.verbs += 1;
+                frame.clear();
+            }
+            if frame.is_empty() {
+                run_phys = phys;
+            }
+            Self::build_frame(&mut frame, payloads[i], frame_len);
+        }
+        if !frame.is_empty() {
+            let out = self.qp().post_write(run_phys, &frame)?;
+            self.sim_ns += out.simulated_ns;
+            self.verbs += 1;
+        }
         Ok(())
     }
 
@@ -332,37 +697,100 @@ impl<'a> ProducerSession<'a> {
             .qp()
             .post_cas(slot_off, self.observed_size_word, new_word)?;
         self.sim_ns += out.simulated_ns;
+        self.verbs += 1;
         if res.is_err() {
+            // Invalidate the header cache: the retry must run the full
+            // GH scan (the winner moved the tail, or a ghost busy word
+            // needs the Case-7 recovery pass).
+            self.prod.cache.set(None);
             self.abort_unlock();
             return Err(PushError::LostRace);
         }
         Ok(())
     }
 
-    /// UH: advance the header tails. Uses CAS with the GH-snapshot as the
-    /// expectation; a failed CAS means another producer (racing on a
-    /// stolen lock) already advanced identically — benign (Cases 4/8).
+    /// WL for the `i`-th reserved frame of a batch (stepped API — the
+    /// liveness tests die between individual slot CASes with this).
+    pub fn wl_at(&mut self, i: usize) -> Result<(), PushError> {
+        assert!(self.done_reserve, "wl_at before reserve_many");
+        let (_, frame_len) = self.batch[i];
+        let slot_off = self.cfg().slot_off(self.vtail_slot + i as u64);
+        let expected = if i == 0 { self.observed_size_word } else { 0 };
+        let new_word = layout::BUSY | frame_len as u64;
+        let (res, out) = self.qp().post_cas(slot_off, expected, new_word)?;
+        self.sim_ns += out.simulated_ns;
+        self.verbs += 1;
+        if res.is_err() {
+            return Err(PushError::LostRace);
+        }
+        Ok(())
+    }
+
+    /// Batched WL: one CAS per reserved slot. A failure at slot `i > 0`
+    /// truncates the batch to the published prefix `i` (the stealer owns
+    /// the rest); a failure at slot 0 aborts like [`ProducerSession::wl`].
+    pub fn wl_many(&mut self) -> Result<usize, PushError> {
+        for i in 0..self.batch.len() {
+            if self.wl_at(i).is_err() {
+                self.prod.cache.set(None);
+                if i == 0 {
+                    self.abort_unlock();
+                    return Err(PushError::LostRace);
+                }
+                self.batch.truncate(i);
+                let (s, l) = self.batch[i - 1];
+                self.batch_end_v = s + l as u64;
+                return Ok(i);
+            }
+        }
+        Ok(self.batch.len())
+    }
+
+    /// UH: advance both header tails with one doorbell-batched CAS pair,
+    /// expecting the GH snapshot; a failed compare means another
+    /// producer (racing on a stolen lock) already advanced identically —
+    /// benign (Cases 4/8).
     pub fn uh(&mut self) -> Result<(), PushError> {
-        let (_, out) = self
-            .qp()
-            .post_cas(layout::VTAIL_OFF, self.vtail_off, self.next_v)?;
+        let ((r1, r2), out) = self.qp().post_cas_pair(
+            layout::VTAIL_OFF,
+            self.vtail_off,
+            self.next_v,
+            layout::VTAIL_SLOT,
+            self.vtail_slot,
+            self.vtail_slot + 1,
+        )?;
         self.sim_ns += out.simulated_ns;
-        let (_, out) = self
-            .qp()
-            .post_cas(layout::VTAIL_SLOT, self.vtail_slot, self.vtail_slot + 1)?;
+        self.verbs += 1;
+        self.uh_ok = r1.is_ok() && r2.is_ok();
+        Ok(())
+    }
+
+    /// UH for the accepted batch prefix (one verb).
+    pub fn uh_many(&mut self) -> Result<(), PushError> {
+        let ((r1, r2), out) = self.qp().post_cas_pair(
+            layout::VTAIL_OFF,
+            self.vtail_off,
+            self.batch_end_v,
+            layout::VTAIL_SLOT,
+            self.vtail_slot,
+            self.vtail_slot + self.batch.len() as u64,
+        )?;
         self.sim_ns += out.simulated_ns;
+        self.verbs += 1;
+        self.uh_ok = r1.is_ok() && r2.is_ok();
         Ok(())
     }
 
     /// Release the lock if we still own it (a stealer may hold it now).
     pub fn unlock(&mut self) -> Result<(), PushError> {
-        let (_, out) = self.qp().post_cas(layout::LOCK, self.prod.id, 0)?;
+        let (_, out) = self.qp().post_cas(layout::LOCK, self.lock_word, 0)?;
         self.sim_ns += out.simulated_ns;
+        self.verbs += 1;
         Ok(())
     }
 
     fn abort_unlock(&mut self) {
-        let _ = self.qp().post_cas(layout::LOCK, self.prod.id, 0);
+        let _ = self.qp().post_cas(layout::LOCK, self.lock_word, 0);
     }
 
     /// Where this session's frame was (or would be) placed.
@@ -376,6 +804,20 @@ impl<'a> ProducerSession<'a> {
             vslot: self.vtail_slot,
             simulated_ns: self.sim_ns,
             stole_lock: self.stole_lock,
+            verbs: self.verbs,
+            cache_hit: self.cache_hit,
+        }
+    }
+
+    /// Completed-batch summary (`accepted` is filled by the driver).
+    fn batch_outcome(&self) -> BatchPushOutcome {
+        BatchPushOutcome {
+            accepted: self.batch.len(),
+            first_vslot: self.vtail_slot,
+            simulated_ns: self.sim_ns,
+            stole_lock: self.stole_lock,
+            verbs: self.verbs,
+            cache_hit: self.cache_hit,
         }
     }
 }

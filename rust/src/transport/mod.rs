@@ -17,5 +17,5 @@ mod tcp_endpoint;
 
 pub use message::{AppId, MessageHeader, Payload, StageId, WorkflowMessage};
 pub use nccl_stub::{NcclError, NcclStub};
-pub use rdma_endpoint::{RdmaEndpoint, RdmaSender};
+pub use rdma_endpoint::{RdmaEndpoint, RdmaSender, RingMetrics};
 pub use tcp_endpoint::{TcpEndpoint, TcpSender};

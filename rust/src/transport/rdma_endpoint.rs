@@ -7,6 +7,7 @@
 //! ring checksum, or pushes abandoned under contention after the retry
 //! budget, are *dropped* — §9: OnePiece does not retransmit.
 
+use crate::metrics::{Counter, Histogram, Registry};
 use crate::rdma::{Fabric, RegionId};
 use crate::ringbuf::{
     create_ring, PopError, PushError, RingConfig, RingConsumer, RingProducer,
@@ -16,6 +17,45 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use super::WorkflowMessage;
+
+/// Ring-path instrumentation handles (set `Registry` metrics), shared by
+/// every sender a component owns:
+///
+/// - `ring_pushes_total` — completed push protocol rounds (one lock
+///   acquisition each; a batched push of k frames counts **1**),
+/// - `ring_messages_total` — frames published by those rounds,
+/// - `ring_verbs_total` — one-sided verbs those rounds spent,
+/// - `push_verbs` — histogram of verbs per completed round.
+///
+/// `ring_verbs_total / ring_messages_total` is the observable
+/// verbs-per-message the e15 coalescing drives down; `onepiece federate`
+/// prints all of these with the rest of the set counters.
+#[derive(Clone)]
+pub struct RingMetrics {
+    pub pushes: Arc<Counter>,
+    pub messages: Arc<Counter>,
+    pub verbs: Arc<Counter>,
+    pub push_verbs: Arc<Histogram>,
+}
+
+impl RingMetrics {
+    /// Resolve the ring-path metric handles from a set registry.
+    pub fn from_registry(r: &Registry) -> Self {
+        Self {
+            pushes: r.counter("ring_pushes_total"),
+            messages: r.counter("ring_messages_total"),
+            verbs: r.counter("ring_verbs_total"),
+            push_verbs: r.histogram("push_verbs"),
+        }
+    }
+
+    fn record(&self, accepted: u64, verbs: u64) {
+        self.pushes.inc();
+        self.messages.add(accepted);
+        self.verbs.add(verbs);
+        self.push_verbs.record(verbs);
+    }
+}
 
 /// Receiving side of an RDMA message queue (owns the ring consumer).
 pub struct RdmaEndpoint {
@@ -35,6 +75,7 @@ pub struct RdmaSender {
     /// Encode scratch buffer (reused across sends — zero alloc steady
     /// state on the hot path).
     scratch: Vec<u8>,
+    metrics: Option<RingMetrics>,
     dropped: u64,
 }
 
@@ -72,6 +113,7 @@ impl RdmaEndpoint {
             producer: RingProducer::new(qp, self.config, self.clock.clone(), id),
             max_retries: 64,
             scratch: Vec::new(),
+            metrics: None,
             dropped: 0,
         }
     }
@@ -89,6 +131,7 @@ impl RdmaEndpoint {
             producer: RingProducer::new(qp, config, Arc::new(SystemClock), id),
             max_retries: 64,
             scratch: Vec::new(),
+            metrics: None,
             dropped: 0,
         }
     }
@@ -111,6 +154,29 @@ impl RdmaEndpoint {
                 }
             }
         }
+    }
+
+    /// Batch receive: drain up to `max` messages into `out` in one
+    /// round ([`RingConsumer::pop_many`]) — the RS sees a coalesced
+    /// arrival burst whole instead of one message per poll, so
+    /// downstream batch formation gets its members together. Returns
+    /// the number of messages appended; corrupted/undecodable frames are
+    /// counted and skipped as in [`RdmaEndpoint::recv`].
+    pub fn recv_many(&mut self, max: usize, out: &mut Vec<WorkflowMessage>) -> usize {
+        let mut n = 0usize;
+        for r in self.consumer.pop_many(max) {
+            match r {
+                Ok(bytes) => match WorkflowMessage::decode(&bytes) {
+                    Ok(m) => {
+                        out.push(m);
+                        n += 1;
+                    }
+                    Err(CodecError(_)) => self.corrupted += 1,
+                },
+                Err(PopError::Corrupted { .. }) => self.corrupted += 1,
+            }
+        }
+        n
     }
 
     /// Blocking receive with a wall-clock timeout; polls with a short
@@ -140,6 +206,29 @@ impl RdmaEndpoint {
 }
 
 impl RdmaSender {
+    /// Attach ring-path instrumentation (set `Registry` handles). Every
+    /// completed push round this sender performs is counted.
+    pub fn set_metrics(&mut self, metrics: RingMetrics) {
+        self.metrics = Some(metrics);
+    }
+
+    /// Bounded exponential backoff between push retries: the first few
+    /// retries only yield (transient lock contention clears in that
+    /// window), later ones sleep 1 µs, 2 µs, … capped at **64 µs** — a
+    /// persistently full ring must not busy-spin a worker core while
+    /// the consumer needs that core to drain it. The cap is kept small
+    /// because workers retry while holding the instance's shared
+    /// delivery lock: a long sleep here would head-of-line block the
+    /// sibling workers' (and the Interactive fast lane's) deliveries.
+    fn backoff(attempt: usize) {
+        if attempt < 8 {
+            std::thread::yield_now();
+        } else {
+            let us = (1u64 << (attempt - 8).min(6)).min(64);
+            std::thread::sleep(std::time::Duration::from_micros(us));
+        }
+    }
+
     /// Send a message. Returns `false` if dropped (ring persistently full
     /// or lock contention beyond the retry budget) — the no-retransmission
     /// policy of §9 pushes recovery to the application layer.
@@ -152,21 +241,84 @@ impl RdmaSender {
         ok
     }
 
+    /// True if a message of `len` encoded bytes can ever fit the
+    /// destination ring — `false` means any push would be permanently
+    /// `Full` and retrying is futile.
+    pub fn accepts(&self, len: usize) -> bool {
+        self.producer.accepts(len)
+    }
+
     /// Send pre-encoded frame bytes. Callers that already hold the
     /// encoded message (checkpointing delivery shares one buffer between
     /// the ring push and the DB checkpoint) avoid a second encode.
     pub fn send_encoded(&mut self, bytes: &[u8]) -> bool {
-        for _ in 0..=self.max_retries {
+        if !self.accepts(bytes.len()) {
+            // Permanently oversized: drop now instead of burning the
+            // whole retry budget on a Full that can never clear.
+            self.dropped += 1;
+            return false;
+        }
+        for attempt in 0..=self.max_retries {
             match self.producer.push(bytes, None) {
-                Ok(_) => return true,
-                Err(PushError::Full) | Err(PushError::LostRace) => {
-                    std::thread::yield_now();
+                Ok(out) => {
+                    if let Some(m) = &self.metrics {
+                        m.record(1, out.verbs);
+                    }
+                    return true;
                 }
+                Err(PushError::Full) | Err(PushError::LostRace) => Self::backoff(attempt),
                 Err(_) => break,
             }
         }
         self.dropped += 1;
         false
+    }
+
+    /// Send a batch of pre-encoded frames through [`RingProducer::push_many`]:
+    /// the whole batch crosses the fabric under **one** ring lock
+    /// acquisition (one push round) when it fits. A partially accepted
+    /// batch retries its tail under the same backoff/retry budget as
+    /// single sends; the return value is the number of frames delivered
+    /// — always a prefix, so per-sender FIFO order is preserved and the
+    /// caller routes the undelivered tail through its recovery path.
+    pub fn send_batch(&mut self, frames: &[&[u8]]) -> usize {
+        let mut sent = 0usize;
+        let mut attempt = 0usize;
+        while sent < frames.len() && attempt <= self.max_retries {
+            if !self.accepts(frames[sent].len()) {
+                // The next frame can never fit: its Full is permanent,
+                // so retrying would head-of-line block the rest of the
+                // budget for nothing. Stop here; the undelivered tail
+                // is reported to the caller (prefix semantics).
+                break;
+            }
+            match self.producer.push_many(&frames[sent..], None) {
+                Ok(out) => {
+                    if let Some(m) = &self.metrics {
+                        m.record(out.accepted as u64, out.verbs);
+                    }
+                    sent += out.accepted;
+                    if sent < frames.len() {
+                        // Ring filled (or a stealer took the tail slots)
+                        // mid-batch: back off before re-offering. A
+                        // round that made progress resets the budget —
+                        // only consecutive fruitless rounds should
+                        // exhaust it, or a large batch through a small
+                        // ring would drop its tail while the consumer
+                        // is draining normally.
+                        attempt = 0;
+                        Self::backoff(attempt);
+                    }
+                }
+                Err(PushError::Full) | Err(PushError::LostRace) => {
+                    Self::backoff(attempt);
+                    attempt += 1;
+                }
+                Err(_) => break,
+            }
+        }
+        self.dropped += (frames.len() - sent) as u64;
+        sent
     }
 
     /// Messages dropped by this sender.
@@ -266,6 +418,68 @@ mod tests {
         }
         assert_eq!(got.len(), 400);
         assert_eq!(ep.corrupted_count(), 0);
+    }
+
+    #[test]
+    fn send_batch_delivers_in_order_under_one_push_round() {
+        let fabric = Fabric::ideal();
+        let mut ep = RdmaEndpoint::new(&fabric, RingConfig::default());
+        let mut tx = ep.sender();
+        let m = RingMetrics::from_registry(&crate::metrics::Registry::new());
+        tx.set_metrics(m.clone());
+        let msgs: Vec<WorkflowMessage> = (0..5).map(msg).collect();
+        let encoded: Vec<Vec<u8>> = msgs.iter().map(|m| m.encode()).collect();
+        let frames: Vec<&[u8]> = encoded.iter().map(Vec::as_slice).collect();
+        assert_eq!(tx.send_batch(&frames), 5);
+        assert_eq!(m.pushes.get(), 1, "whole batch under one lock acquisition");
+        assert_eq!(m.messages.get(), 5);
+        assert!(m.verbs.get() >= 5, "at least one WL per frame");
+        for want in &msgs {
+            assert_eq!(&ep.recv().unwrap(), want, "FIFO order preserved");
+        }
+        assert!(ep.recv().is_none());
+    }
+
+    #[test]
+    fn send_batch_partial_on_full_ring_returns_prefix() {
+        let fabric = Fabric::ideal();
+        let mut ep = RdmaEndpoint::new(
+            &fabric,
+            RingConfig {
+                nslots: 2,
+                cap_bytes: 512,
+                ..Default::default()
+            },
+        );
+        let mut tx = ep.sender();
+        tx.max_retries = 2;
+        let msgs: Vec<WorkflowMessage> = (0..4).map(msg).collect();
+        let encoded: Vec<Vec<u8>> = msgs.iter().map(|m| m.encode()).collect();
+        let frames: Vec<&[u8]> = encoded.iter().map(Vec::as_slice).collect();
+        // Only 2 slots: the accepted prefix is delivered, the tail drops.
+        assert_eq!(tx.send_batch(&frames), 2);
+        assert_eq!(tx.dropped_count(), 2);
+        assert_eq!(ep.recv().unwrap(), msgs[0]);
+        assert_eq!(ep.recv().unwrap(), msgs[1]);
+        assert!(ep.recv().is_none());
+    }
+
+    #[test]
+    fn recv_many_drains_a_burst_in_one_round() {
+        let fabric = Fabric::ideal();
+        let mut ep = RdmaEndpoint::new(&fabric, RingConfig::default());
+        let mut tx = ep.sender();
+        for i in 0..6 {
+            assert!(tx.send(&msg(i)));
+        }
+        let mut out = Vec::new();
+        assert_eq!(ep.recv_many(4, &mut out), 4, "bounded by max");
+        assert_eq!(ep.recv_many(64, &mut out), 2);
+        assert_eq!(out.len(), 6);
+        for (i, m) in out.iter().enumerate() {
+            assert_eq!(m.header.uid.0 as u32, i as u32);
+        }
+        assert_eq!(ep.recv_many(64, &mut out), 0);
     }
 
     #[test]

@@ -55,6 +55,9 @@ pub struct ResultDeliver {
     /// failure detector that replays them — disabled deployments pay
     /// zero encode/replication overhead).
     checkpointing: bool,
+    /// Ring-path instrumentation handed to every sender (set registry
+    /// counters; None until the owning instance wires its registry in).
+    metrics: Option<crate::transport::RingMetrics>,
     delivered: u64,
     dropped: u64,
 }
@@ -68,6 +71,7 @@ impl ResultDeliver {
             dbs,
             rr: HashMap::new(),
             checkpointing: false,
+            metrics: None,
             delivered: 0,
             dropped: 0,
         }
@@ -77,6 +81,15 @@ impl ResultDeliver {
     /// to `nm.instance_timeout_ms > 0`).
     pub fn set_checkpointing(&mut self, on: bool) {
         self.checkpointing = on;
+    }
+
+    /// Attach ring-path metrics (`ring_pushes_total` / `ring_verbs_total`
+    /// / …) to every current and future sender this router owns.
+    pub fn set_metrics(&mut self, metrics: crate::transport::RingMetrics) {
+        for tx in self.senders.values_mut() {
+            tx.set_metrics(metrics.clone());
+        }
+        self.metrics = Some(metrics);
     }
 
     /// Install per-app routing from a (re)assignment. Senders for
@@ -93,7 +106,11 @@ impl ResultDeliver {
                     self.senders.entry(*rid).or_insert_with(|| {
                         // Producers only need the region id; geometry is
                         // read from the ring header.
-                        RdmaEndpoint::sender_for(&self.fabric, *rid)
+                        let mut tx = RdmaEndpoint::sender_for(&self.fabric, *rid);
+                        if let Some(m) = &self.metrics {
+                            tx.set_metrics(m.clone());
+                        }
+                        tx
                     });
                 }
             }
@@ -136,28 +153,85 @@ impl ResultDeliver {
     /// Coalesced delivery for a micro-batch's results: **one** hop
     /// choice per app for the whole batch (the round-robin counter
     /// advances once, so the batch lands on a single downstream ring and
-    /// stays batchable there) and one encode-and-push pass per member.
-    /// Per-UID recovery checkpoints and the database layer's
-    /// first-writer-wins terminals are preserved — each member goes
-    /// through exactly the single-message push path against the chosen
-    /// hop. Returns one [`Delivery`] per input, in order.
+    /// stays batchable there), and every member bound for the same ring
+    /// crosses the fabric as **one** batched push
+    /// ([`crate::transport::RdmaSender::send_batch`]) — one lock
+    /// acquisition for the group instead of one per member. Per-UID
+    /// recovery checkpoints and the database layer's first-writer-wins
+    /// terminals are preserved; a ring that fills mid-batch accepts a
+    /// prefix and the rest report [`Delivery::Dropped`], which the
+    /// worker strands into the recovery path. A batch of one is
+    /// byte-identical to the single-message [`ResultDeliver::deliver`]
+    /// ring protocol. Returns one [`Delivery`] per input, in order.
     pub fn deliver_batch(&mut self, msgs: &[WorkflowMessage]) -> Vec<Delivery> {
-        let mut chosen: HashMap<crate::transport::AppId, Option<NextHop>> =
-            HashMap::new();
-        let mut out = Vec::with_capacity(msgs.len());
-        for msg in msgs {
+        let mut chosen: HashMap<crate::transport::AppId, Option<NextHop>> = HashMap::new();
+        let mut out = vec![Delivery::Dropped; msgs.len()];
+        // Same-ring members keep their relative order inside one group
+        // (per-sender FIFO is preserved through the batched push).
+        let mut groups: Vec<(RegionId, Vec<usize>)> = Vec::new();
+        for (idx, msg) in msgs.iter().enumerate() {
             let app = msg.header.app;
             let hop = chosen
                 .entry(app)
                 .or_insert_with(|| self.pick_hop(app))
                 .clone();
-            out.push(match hop {
-                Some(hop) => self.deliver_to(&hop, msg),
+            match hop {
                 None => {
                     self.dropped += 1;
-                    Delivery::Dropped
                 }
-            });
+                Some(NextHop::Database) => {
+                    self.store(msg.header.uid, msg.encode());
+                    self.delivered += 1;
+                    out[idx] = Delivery::Stored;
+                }
+                Some(NextHop::Instance(rid)) => {
+                    match groups.iter_mut().find(|(r, _)| *r == rid) {
+                        Some((_, idxs)) => idxs.push(idx),
+                        None => groups.push((rid, vec![idx])),
+                    }
+                }
+            }
+        }
+        for (rid, idxs) in groups {
+            let ckpt = self.checkpointing && !self.dbs.is_empty();
+            let tx = self.senders.get_mut(&rid).expect("sender built in set_routes");
+            // Encode each member once (the Arc wrap for checkpoint
+            // sharing is deferred to the accepted members, so the
+            // checkpointing-off path pays no extra copy). A member that
+            // can *never* fit the ring is dropped up front — it must
+            // not head-of-line block its deliverable batchmates.
+            let mut encoded: Vec<Vec<u8>> = Vec::with_capacity(idxs.len());
+            let mut sendable: Vec<usize> = Vec::with_capacity(idxs.len());
+            for &i in &idxs {
+                let bytes = msgs[i].encode();
+                if tx.accepts(bytes.len()) {
+                    encoded.push(bytes);
+                    sendable.push(i);
+                } else {
+                    self.dropped += 1;
+                }
+            }
+            let frames: Vec<&[u8]> = encoded.iter().map(Vec::as_slice).collect();
+            let accepted = tx.send_batch(&frames);
+            drop(frames);
+            for (k, &i) in sendable.iter().enumerate() {
+                if k < accepted {
+                    if ckpt {
+                        let bytes: Arc<[u8]> = std::mem::take(&mut encoded[k]).into();
+                        for db in &self.dbs {
+                            db.put_checkpoint(
+                                msgs[i].header.uid,
+                                msgs[i].header.stage.0,
+                                bytes.clone(),
+                            );
+                        }
+                    }
+                    self.delivered += 1;
+                    out[i] = Delivery::Sent(rid);
+                } else {
+                    self.dropped += 1;
+                }
+            }
         }
         out
     }
@@ -442,6 +516,33 @@ mod tests {
     }
 
     #[test]
+    fn same_hop_batch_is_one_ring_lock_acquisition() {
+        let fabric = Fabric::ideal();
+        let mut ep = RdmaEndpoint::new(&fabric, RingConfig::default());
+        let reg = crate::metrics::Registry::new();
+        let mut rd = ResultDeliver::new(fabric.clone(), vec![]);
+        rd.set_metrics(crate::transport::RingMetrics::from_registry(&reg));
+        rd.set_routes(vec![(AppId(1), vec![NextHop::Instance(ep.region_id())])]);
+        let batch: Vec<WorkflowMessage> = (0..6).map(msg).collect();
+        assert!(rd.deliver_batch(&batch).iter().all(|d| d.ok()));
+        assert_eq!(
+            reg.counter("ring_pushes_total").get(),
+            1,
+            "an n-member same-hop batch is exactly one ring lock acquisition"
+        );
+        assert_eq!(reg.counter("ring_messages_total").get(), 6);
+        assert!(reg.counter("ring_verbs_total").get() >= 6);
+        // A batch of one goes through the same path as a single push.
+        assert!(rd.deliver_batch(&[msg(9)]).iter().all(|d| d.ok()));
+        assert_eq!(reg.counter("ring_pushes_total").get(), 2);
+        let mut n = 0;
+        while ep.recv().is_some() {
+            n += 1;
+        }
+        assert_eq!(n, 7, "every member delivered");
+    }
+
+    #[test]
     fn batch_checkpoints_every_member() {
         let fabric = Fabric::ideal();
         let mut ep = RdmaEndpoint::new(&fabric, RingConfig::default());
@@ -458,6 +559,37 @@ mod tests {
             assert_eq!(WorkflowMessage::decode(&ck.data).unwrap(), *m);
             assert!(ep.recv().is_some());
         }
+    }
+
+    #[test]
+    fn oversized_member_does_not_block_batchmates() {
+        let fabric = Fabric::ideal();
+        let mut ep = RdmaEndpoint::new(
+            &fabric,
+            RingConfig {
+                nslots: 16,
+                cap_bytes: 256,
+                ..Default::default()
+            },
+        );
+        let mut rd = ResultDeliver::new(fabric.clone(), vec![]);
+        rd.set_routes(vec![(AppId(1), vec![NextHop::Instance(ep.region_id())])]);
+        let mut big = msg(1);
+        // Frame larger than the byte ring: permanently unacceptable.
+        big.payload = Payload::Bytes(vec![9u8; 512]);
+        let batch = vec![msg(0), big, msg(2)];
+        let d = rd.deliver_batch(&batch);
+        assert_eq!(d[0], Delivery::Sent(ep.region_id()));
+        assert_eq!(d[1], Delivery::Dropped, "oversized member drops alone");
+        assert_eq!(
+            d[2],
+            Delivery::Sent(ep.region_id()),
+            "trailing batchmate must not be head-of-line blocked"
+        );
+        assert_eq!(ep.recv().unwrap().header.uid, Uid(0));
+        assert_eq!(ep.recv().unwrap().header.uid, Uid(2));
+        assert!(ep.recv().is_none());
+        assert_eq!(rd.counts(), (2, 1));
     }
 
     #[test]

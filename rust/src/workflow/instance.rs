@@ -232,6 +232,9 @@ impl Instance {
         let mut rd = ResultDeliver::new(fabric.clone(), dbs);
         rd.set_checkpointing(cfg.checkpointing);
         let metrics = tracker.metrics().clone();
+        // Ring-path observability: every downstream push this instance
+        // performs lands in the set's ring_* counters.
+        rd.set_metrics(crate::transport::RingMetrics::from_registry(&metrics));
         let shared = Arc::new(Shared {
             node: cfg.node,
             queue: queue.clone(),
@@ -316,6 +319,12 @@ impl Instance {
         {
             let shared = shared.clone();
             threads.push(std::thread::spawn(move || {
+                // Batched drain: a coalesced arrival burst (one
+                // `push_many` from an upstream batch) is pulled out of
+                // the ring in one header-read round, so the batch
+                // assembler sees its members together instead of one
+                // per 100 µs poll.
+                let mut inbox: Vec<WorkflowMessage> = Vec::new();
                 while !shared.shutdown.load(Ordering::SeqCst) {
                     if shared.crashed.load(Ordering::SeqCst) {
                         // Crashed: the ring fills and messages strand —
@@ -323,20 +332,21 @@ impl Instance {
                         std::thread::sleep(Duration::from_millis(5));
                         continue;
                     }
-                    match endpoint.recv() {
-                        Some(msg) => {
-                            let uid = msg.header.uid;
-                            match shared.tracker.verdict(uid) {
-                                InFlightVerdict::Proceed => {
-                                    let prio = shared.tracker.priority_of(uid);
-                                    shared.queue.dispatch(msg, prio);
-                                }
-                                // Cancelled / past-deadline arrivals never
-                                // reach a worker.
-                                verdict => shared.drop_for(uid, verdict),
+                    if endpoint.recv_many(64, &mut inbox) == 0 {
+                        std::thread::sleep(Duration::from_micros(100));
+                        continue;
+                    }
+                    for msg in inbox.drain(..) {
+                        let uid = msg.header.uid;
+                        match shared.tracker.verdict(uid) {
+                            InFlightVerdict::Proceed => {
+                                let prio = shared.tracker.priority_of(uid);
+                                shared.queue.dispatch(msg, prio);
                             }
+                            // Cancelled / past-deadline arrivals never
+                            // reach a worker.
+                            verdict => shared.drop_for(uid, verdict),
                         }
-                        None => std::thread::sleep(Duration::from_micros(100)),
                     }
                 }
             }));

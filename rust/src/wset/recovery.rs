@@ -43,6 +43,8 @@ pub struct RecoverySweep {
     /// Heartbeat-silence threshold (ns).
     timeout_ns: u64,
     senders: HashMap<RegionId, RdmaSender>,
+    /// Ring-path counters attached to every replay sender.
+    ring_metrics: crate::transport::RingMetrics,
     /// Recently evicted rings, revisited for one grace window: an
     /// upstream with a stale route (control poll ~5 ms) can deliver into
     /// a dead ring *after* the eviction sweep's replay snapshot; without
@@ -77,6 +79,7 @@ impl RecoverySweep {
             clock,
             timeout_ns,
             senders: HashMap::new(),
+            ring_metrics: crate::transport::RingMetrics::from_registry(metrics),
             recent_dead: Vec::new(),
             instances_failed: metrics.counter("instances_failed"),
             instances_replaced: metrics.counter("instances_replaced"),
@@ -193,7 +196,9 @@ impl RecoverySweep {
                 for k in 0..regions.len() {
                     let target = regions[(start + k) % regions.len()];
                     let tx = self.senders.entry(target).or_insert_with(|| {
-                        RdmaEndpoint::sender_for(&self.fabric, target)
+                        let mut tx = RdmaEndpoint::sender_for(&self.fabric, target);
+                        tx.set_metrics(self.ring_metrics.clone());
+                        tx
                     });
                     if tx.send(&msg) {
                         self.tracker.note_location(uid, target);

@@ -310,6 +310,227 @@ fn lost_after_wb() {
     assert_eq!(h.consumer.pop().unwrap().unwrap(), b"fresh");
 }
 
+/// Mid-batch death, variant A: the producer dies after the coalesced
+/// WB but before any WL. No size word was published, so the batch is
+/// invisible; a stealer takes the lock and the ring moves on over the
+/// orphaned bytes.
+#[test]
+fn push_many_lost_after_wb_is_invisible() {
+    let mut h = Harness::new();
+    let x = h.producer(1);
+    let y = h.producer(2);
+
+    let payloads: Vec<&[u8]> = vec![b"aaaa", b"bbbbbbbb", b"cc"];
+    let mut xs = x.begin().unwrap();
+    xs.gh().unwrap();
+    assert_eq!(xs.reserve_many(&payloads).unwrap(), 3);
+    xs.wb_many(&payloads).unwrap();
+    drop(xs); // X dies: frames written, nothing published
+
+    assert!(h.consumer.pop().is_none(), "unpublished batch is invisible");
+    h.tl();
+    let out = y.push(b"fresh", None).unwrap();
+    assert!(out.stole_lock);
+    assert_eq!(h.consumer.pop().unwrap().unwrap(), b"fresh");
+    assert!(h.consumer.pop().is_none());
+}
+
+/// Mid-batch death, variant B: the producer dies after the k-th WL
+/// (here 2 of 3 slots published, header never advanced). The next
+/// producer's GH runs Case-7 recovery over *both* committed slots, the
+/// consumer reads them, and every slot in the ring is eventually freed.
+#[test]
+fn push_many_lost_after_kth_wl_case7_frees_every_slot() {
+    let mut h = Harness::new();
+    let x = h.producer(1);
+    let y = h.producer(2);
+
+    let payloads: Vec<&[u8]> = vec![b"first-of-batch", b"second-of-batch", b"third"];
+    let mut xs = x.begin().unwrap();
+    xs.gh().unwrap();
+    assert_eq!(xs.reserve_many(&payloads).unwrap(), 3);
+    xs.wb_many(&payloads).unwrap();
+    xs.wl_at(0).unwrap();
+    xs.wl_at(1).unwrap();
+    drop(xs); // X dies between the 2nd and 3rd WL (before UH/unlock)
+
+    h.tl();
+    let out = y.push(b"after-recovery", None).unwrap();
+    assert!(out.stole_lock);
+    assert_eq!(out.vslot, 2, "Y lands after X's two recovered entries");
+
+    assert_eq!(h.consumer.pop().unwrap().unwrap(), b"first-of-batch");
+    assert_eq!(h.consumer.pop().unwrap().unwrap(), b"second-of-batch");
+    assert_eq!(h.consumer.pop().unwrap().unwrap(), b"after-recovery");
+    assert!(h.consumer.pop().is_none());
+
+    // Every slot is free again: fill the whole slot ring and drain it.
+    for i in 0..h.cfg.nslots {
+        y.push(&[i as u8; 8], None).unwrap();
+    }
+    for i in 0..h.cfg.nslots {
+        assert_eq!(h.consumer.pop().unwrap().unwrap(), vec![i as u8; 8]);
+    }
+    assert!(h.consumer.pop().is_none());
+}
+
+/// The cached-header fast path engages after a successful push (fewer
+/// verbs, same bytes) and a stale cache is rejected by the validation
+/// read, not trusted.
+#[test]
+fn cached_header_fast_path_spends_fewer_verbs() {
+    let mut h = Harness::new();
+    let x = h.producer(1);
+    let cold = x.push(b"cold", None).unwrap();
+    assert!(!cold.cache_hit, "first push has no cache");
+    let warm = x.push(b"warm", None).unwrap();
+    assert!(warm.cache_hit, "tail unchanged: fast path");
+    assert!(
+        warm.verbs < cold.verbs,
+        "fast path must save verbs ({} vs {})",
+        warm.verbs,
+        cold.verbs
+    );
+    assert_eq!(h.consumer.pop().unwrap().unwrap(), b"cold");
+    assert_eq!(h.consumer.pop().unwrap().unwrap(), b"warm");
+
+    // Another producer moves the tail: the validation read must reject
+    // the stale cache (slow path) and still place the frame correctly.
+    let y = h.producer(2);
+    y.push(b"interloper", None).unwrap();
+    let out = x.push(b"after-move", None).unwrap();
+    assert!(!out.cache_hit, "stale tail rejected by the validation read");
+    assert_eq!(h.consumer.pop().unwrap().unwrap(), b"interloper");
+    assert_eq!(h.consumer.pop().unwrap().unwrap(), b"after-move");
+}
+
+/// A cached-header producer racing a lock stealer: the stealer takes
+/// the producer's target slot, the WL CAS detects it (LostRace), and
+/// the retry falls back to the full GH scan.
+#[test]
+fn cached_header_producer_races_lock_stealer_and_falls_back() {
+    let mut h = Harness::new();
+    let x = h.producer(1);
+    let y = h.producer(2);
+
+    x.push(b"warm-up", None).unwrap(); // warms X's header cache
+    let mut xs = x.begin().unwrap();
+    xs.gh().unwrap();
+    assert!(xs.used_cache(), "second push takes the fast path");
+    xs.reserve(4).unwrap();
+    xs.wb(b"XXXX").unwrap();
+
+    // X stalls past the timeout; Y steals and takes the same slot.
+    h.tl();
+    let out = y.push(b"YYYY", None).unwrap();
+    assert!(out.stole_lock);
+
+    assert_eq!(xs.wl(), Err(PushError::LostRace), "stale fast path detected at WL");
+    drop(xs);
+
+    // The failed WL invalidated the cache: the retry runs the full GH
+    // scan and lands after Y.
+    let out = x.push(b"retry", None).unwrap();
+    assert!(!out.cache_hit, "fallback to the full GH after LostRace");
+    assert_eq!(h.consumer.pop().unwrap().unwrap(), b"warm-up");
+    assert_eq!(h.consumer.pop().unwrap().unwrap(), b"YYYY");
+    assert_eq!(h.consumer.pop().unwrap().unwrap(), b"retry");
+    assert!(h.consumer.pop().is_none());
+}
+
+/// `push_many` places frames exactly where the same sequence of single
+/// pushes would — including across the wrap boundary (the per-frame
+/// wrap rule) — verified by running twin rings in lockstep.
+#[test]
+fn push_many_wrap_matches_sequential_pushes() {
+    let cfg = RingConfig {
+        nslots: 16,
+        cap_bytes: 256,
+        lock_timeout_ns: TIMEOUT_NS,
+        max_lock_spins: 64,
+    };
+    let mk = |pid: u64| {
+        let fabric = Fabric::ideal();
+        let (id, region) = create_ring(&fabric, cfg);
+        let clock = ManualClock::new();
+        clock.set(1);
+        let prod = RingProducer::new(
+            fabric.connect(id).unwrap(),
+            cfg,
+            Arc::new(clock),
+            pid,
+        );
+        (prod, RingConsumer::new(region, cfg))
+    };
+    let (pa, mut ca) = mk(1); // batched ring
+    let (pb, mut cb) = mk(1); // sequential ring
+
+    // 48+112+24+64 = 248 bytes of frames per round on a 256-byte ring:
+    // every round crosses the wrap boundary at a different phase.
+    let sizes = [40usize, 100, 16, 56];
+    for round in 0..12u8 {
+        let payloads: Vec<Vec<u8>> = sizes
+            .iter()
+            .map(|&s| vec![round; s])
+            .collect();
+        let refs: Vec<&[u8]> = payloads.iter().map(Vec::as_slice).collect();
+        let out = pa.push_many(&refs, None).unwrap();
+        assert_eq!(out.accepted, refs.len(), "round {round}: batch fits");
+        for p in &payloads {
+            pb.push(p, None).unwrap();
+        }
+        for p in &payloads {
+            assert_eq!(&ca.pop().unwrap().unwrap(), p, "round {round}");
+            assert_eq!(&cb.pop().unwrap().unwrap(), p, "round {round}");
+        }
+        assert_eq!(
+            ca.cursor(),
+            cb.cursor(),
+            "round {round}: identical placement (same vslot + voff advance)"
+        );
+    }
+    assert!(ca.pop().is_none());
+    assert!(cb.pop().is_none());
+}
+
+/// A one-frame `push_many` leaves the ring region byte-identical to a
+/// plain `push` — batching disabled therefore *is* the single-push
+/// protocol, not a near miss.
+#[test]
+fn push_many_of_one_is_byte_identical_to_push() {
+    let cfg = RingConfig {
+        nslots: 8,
+        cap_bytes: 512,
+        lock_timeout_ns: TIMEOUT_NS,
+        max_lock_spins: 64,
+    };
+    let clock = ManualClock::new();
+    clock.set(7); // same lock timestamps on both rings
+    let mk = || {
+        let fabric = Fabric::ideal();
+        let (id, region) = create_ring(&fabric, cfg);
+        let prod = RingProducer::new(
+            fabric.connect(id).unwrap(),
+            cfg,
+            Arc::new(clock.clone()),
+            1,
+        );
+        (prod, region)
+    };
+    let (pa, ra) = mk();
+    let (pb, rb) = mk();
+    pa.push(b"identical payload bytes", None).unwrap();
+    let out = pb.push_many(&[b"identical payload bytes"], None).unwrap();
+    assert_eq!(out.accepted, 1);
+    for off in (0..cfg.region_len()).step_by(8) {
+        assert_eq!(
+            ra.load_u64(off),
+            rb.load_u64(off),
+            "word at byte {off} differs"
+        );
+    }
+}
+
 /// DESIGN.md §6 ablation: under the same fault (producer dies between
 /// write and commit), the single-ring baseline deadlocks permanently
 /// while the double ring recovers via timeout + size region.
