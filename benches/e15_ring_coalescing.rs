@@ -19,10 +19,87 @@
 //! for `push_many` at batch ≥ 8 vs the per-message push (asserted).
 
 use onepiece::bench;
+use onepiece::metrics::Registry;
 use onepiece::rdma::{Fabric, FabricConfig, LatencyModel};
 use onepiece::ringbuf::{create_ring, RingConfig, RingConsumer, RingProducer};
-use onepiece::util::SystemClock;
+use onepiece::transport::{
+    AppId, MessageHeader, Payload, RdmaEndpoint, RingMetrics, StageId, WorkflowMessage,
+};
+use onepiece::util::{NodeId, SystemClock, Uid};
 use std::sync::Arc;
+
+/// Modelled host memcpy cost (≈4 GB/s effective single-core copy
+/// bandwidth) charged per *critical-path* copied byte: eager pays its
+/// frame-build and pop-out copies on the transfer path; the rendezvous
+/// staging copy is the serialization ingress (the payload had to be
+/// materialized into registered memory regardless) and stays off it.
+const MEMCPY_NS_PER_BYTE: f64 = 0.25;
+
+/// One payload-plane sample: modelled delivery ns/msg, payload bytes
+/// copied per message, and one-sided payload reads per message.
+struct PlaneSample {
+    modelled_ns: f64,
+    copied_per_msg: f64,
+    reads_per_msg: f64,
+    enc_len: usize,
+}
+
+/// Drive `rounds` send+recv cycles of one `payload_bytes` message over
+/// an instrumented endpoint with the given rendezvous cutover
+/// (0 = eager) and read the modelled cost back from the fabric's
+/// simulated-ns counter plus the copy-accounting metrics.
+fn measure_plane(payload_bytes: usize, threshold: usize, rounds: usize) -> PlaneSample {
+    let fabric = Fabric::new(FabricConfig {
+        latency: Some(LatencyModel::infiniband_100g()),
+        ..Default::default()
+    });
+    let reg = Registry::new();
+    let m = RingMetrics::from_registry(&reg);
+    let mut ep = RdmaEndpoint::new(
+        &fabric,
+        RingConfig { nslots: 64, cap_bytes: 64 << 20, ..Default::default() },
+    );
+    ep.set_metrics(m.clone());
+    let mut tx = ep.sender();
+    tx.set_metrics(m.clone());
+    tx.set_rendezvous_threshold(threshold);
+    let msg = WorkflowMessage {
+        header: MessageHeader {
+            uid: Uid(1),
+            ts_ns: 0,
+            app: AppId(1),
+            stage: StageId(0),
+            origin: NodeId(0),
+        },
+        payload: Payload::Bytes(vec![0xAB; payload_bytes]),
+    };
+    let enc_len = msg.encode().len();
+
+    // Warm up: fills the producer header cache and registers the slab.
+    assert!(tx.send(&msg));
+    assert!(ep.recv().is_some());
+    let ns0 = fabric.simulated_ns();
+    let copied0 = m.payload_bytes_copied.get();
+    let reads0 = m.rendezvous_reads.get();
+    for _ in 0..rounds {
+        assert!(tx.send(&msg));
+        assert!(ep.recv().is_some(), "modelled plane must deliver");
+    }
+    let n = rounds as f64;
+    let copied_per_msg = (m.payload_bytes_copied.get() - copied0) as f64 / n;
+    PlaneSample {
+        modelled_ns: (fabric.simulated_ns() - ns0) as f64 / n
+            + MEMCPY_NS_PER_BYTE
+                * if threshold == 0 {
+                    copied_per_msg
+                } else {
+                    0.0 // the staging copy is off the transfer path
+                },
+        copied_per_msg,
+        reads_per_msg: (m.rendezvous_reads.get() - reads0) as f64 / n,
+        enc_len,
+    }
+}
 
 /// Modelled (ns_per_msg, verbs_per_msg) for `rounds` batches of `batch`
 /// messages of `payload` bytes.
@@ -113,5 +190,63 @@ fn main() {
         println!();
     }
     println!("(push_many at batch 8 is ≥ 3x cheaper per message than per-message push)");
+
+    // --- E15b: eager vs rendezvous payload plane (DESIGN.md §2) ---
+    //
+    // Modelled delivery cost = simulated fabric ns (verbs + line-rate
+    // bytes) + memcpy ns for critical-path host copies. Eager moves the
+    // payload through the ring (2 copies: frame build, pop out);
+    // rendezvous moves a 40-byte descriptor and pulls the staged payload
+    // with one one-sided READ (0 critical-path copies).
+    println!("\n=== E15b: payload plane, eager vs rendezvous (modelled) ===");
+    println!(
+        "{:<12} {:>14} {:>14} {:>10} {:>14} {:>12}",
+        "payload", "eager ns/msg", "rdv ns/msg", "rdv/eager", "eager cp B/msg", "rdv cp B/msg"
+    );
+    let threshold = 4 << 10; // force every swept size onto the staged plane
+    let mut speedup_16m = 0.0;
+    for &size in &[4 << 10, 64 << 10, 1 << 20, 16 << 20] {
+        let rounds = if size >= 1 << 20 { 8 } else { 64 };
+        let eager = measure_plane(size, 0, rounds);
+        let rdv = measure_plane(size, threshold, rounds);
+        let speedup = eager.modelled_ns / rdv.modelled_ns;
+        println!(
+            "{:<12} {:>11.0} ns {:>11.0} ns {:>9.2}x {:>14.0} {:>12.0}",
+            format!("{} KiB", size / 1024),
+            eager.modelled_ns,
+            rdv.modelled_ns,
+            speedup,
+            eager.copied_per_msg,
+            rdv.copied_per_msg
+        );
+        let kib = size / 1024;
+        report.add(format!("eager_{kib}kib.modelled_ns_per_msg"), eager.modelled_ns);
+        report.add(format!("eager_{kib}kib.bytes_copied_per_msg"), eager.copied_per_msg);
+        report.add(format!("rdv_{kib}kib.modelled_ns_per_msg"), rdv.modelled_ns);
+        report.add(format!("rdv_{kib}kib.bytes_copied_per_msg"), rdv.copied_per_msg);
+        report.add(format!("rdv_over_eager_{kib}kib"), speedup);
+
+        // Zero-copy signature, asserted at every size: exactly one
+        // staging copy and one one-sided READ per rendezvous message,
+        // vs two full copies per eager message.
+        assert_eq!(
+            rdv.copied_per_msg, rdv.enc_len as f64,
+            "{kib} KiB: rendezvous must pay exactly one staging copy"
+        );
+        assert_eq!(
+            rdv.reads_per_msg, 1.0,
+            "{kib} KiB: exactly one one-sided READ per message"
+        );
+        assert_eq!(eager.copied_per_msg, 2.0 * eager.enc_len as f64);
+        if size == 16 << 20 {
+            speedup_16m = speedup;
+        }
+    }
+    assert!(
+        speedup_16m >= 4.0,
+        "16 MiB: rendezvous must cut modelled delivery ns/msg ≥ 4x vs eager \
+         (got {speedup_16m:.2}x)"
+    );
+    println!("(rendezvous at 16 MiB is ≥ 4x cheaper per message than eager)");
     report.write();
 }

@@ -11,14 +11,19 @@
 //!     argument (§2.1: TCP burns CPU on copies and syscalls).
 
 use onepiece::bench;
+use onepiece::metrics::Registry;
 use onepiece::rdma::{Fabric, FabricConfig, LatencyModel, WaitMode};
 use onepiece::ringbuf::RingConfig;
 use onepiece::transport::{
-    AppId, MessageHeader, NcclStub, Payload, RdmaEndpoint, StageId, TcpEndpoint,
-    WorkflowMessage,
+    AppId, MessageHeader, NcclStub, Payload, RdmaEndpoint, RingMetrics, StageId,
+    TcpEndpoint, WorkflowMessage,
 };
 use onepiece::util::{NodeId, Uid};
 use std::time::Duration;
+
+/// Modelled host memcpy cost per critical-path copied byte (see the
+/// E15b twin of this sweep for the accounting argument).
+const MEMCPY_NS_PER_BYTE: f64 = 0.25;
 
 fn msg(bytes: usize) -> WorkflowMessage {
     WorkflowMessage {
@@ -90,6 +95,66 @@ fn main() {
         });
         report.add_result(&format!("tcp_{}kib", s / 1024), &sock);
     }
+
+    println!("\n=== E5d: eager vs rendezvous ring path (modelled IB, per message) ===");
+    println!(
+        "{:<12} {:>14} {:>14} {:>10} {:>16}",
+        "payload", "eager ns/msg", "rdv ns/msg", "rdv/eager", "copied B/msg e/r"
+    );
+    for &s in &sizes {
+        let m = msg(s);
+        let plane = |threshold: usize| -> (f64, f64) {
+            let fabric = Fabric::new(FabricConfig {
+                latency: Some(LatencyModel::infiniband_100g()),
+                wait: WaitMode::None,
+                ..Default::default()
+            });
+            let reg = Registry::new();
+            let rm = RingMetrics::from_registry(&reg);
+            let mut ep = RdmaEndpoint::new(
+                &fabric,
+                RingConfig { nslots: 64, cap_bytes: 64 << 20, ..Default::default() },
+            );
+            ep.set_metrics(rm.clone());
+            let mut tx = ep.sender();
+            tx.set_metrics(rm.clone());
+            tx.set_rendezvous_threshold(threshold);
+            assert!(tx.send(&m)); // warm-up round
+            assert!(ep.recv().is_some());
+            let rounds = if s >= 1 << 20 { 8u64 } else { 64 };
+            let ns0 = fabric.simulated_ns();
+            let copied0 = rm.payload_bytes_copied.get();
+            for _ in 0..rounds {
+                assert!(tx.send(&m));
+                assert!(ep.recv().is_some());
+            }
+            let copied = (rm.payload_bytes_copied.get() - copied0) as f64 / rounds as f64;
+            let fabric_ns = (fabric.simulated_ns() - ns0) as f64 / rounds as f64;
+            // Eager's two copies ride the transfer path; the rendezvous
+            // staging copy is the serialization ingress and does not.
+            let critical = if threshold == 0 { copied } else { 0.0 };
+            (fabric_ns + MEMCPY_NS_PER_BYTE * critical, copied)
+        };
+        let (eager_ns, eager_copied) = plane(0);
+        let (rdv_ns, rdv_copied) = plane(4 << 10);
+        println!(
+            "{:<12} {:>11.0} ns {:>11.0} ns {:>9.2}x {:>8.0}/{:<8.0}",
+            format!("{} KiB", s / 1024),
+            eager_ns,
+            rdv_ns,
+            eager_ns / rdv_ns,
+            eager_copied,
+            rdv_copied
+        );
+        let kib = s / 1024;
+        report.add(format!("eager_{kib}kib.modelled_ns_per_msg"), eager_ns);
+        report.add(format!("eager_{kib}kib.bytes_copied_per_msg"), eager_copied);
+        report.add(format!("rdv_{kib}kib.modelled_ns_per_msg"), rdv_ns);
+        report.add(format!("rdv_{kib}kib.bytes_copied_per_msg"), rdv_copied);
+        report.add(format!("rdv_over_eager_{kib}kib"), eager_ns / rdv_ns);
+    }
+    println!("(crossover sits in the tens of KiB: below it the descriptor+READ verbs");
+    println!(" outweigh the saved copies, above it the saved memcpys dominate)");
 
     println!("\n=== E5c: NCCL limitations (L1-L4, §6) ===");
     let mut nccl = NcclStub::new(1024);

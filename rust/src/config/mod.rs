@@ -11,8 +11,8 @@ mod types;
 
 pub use types::{
     AppConfig, BatchSettings, ChaosSettings, ClusterConfig, ConfigError, DbSettings,
-    ExecModel, FabricKind, NmSettings, ProxySettings, RingSettings, SchedMode,
-    StageConfig,
+    ExecModel, FabricKind, NmSettings, ProxySettings, RdmaSettings, RingSettings,
+    SchedMode, StageConfig,
 };
 
 #[cfg(test)]

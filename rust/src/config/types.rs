@@ -226,6 +226,18 @@ impl Default for ChaosSettings {
     }
 }
 
+/// RDMA data-plane tuning (DESIGN.md §2, large-payload plane).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct RdmaSettings {
+    /// Eager/rendezvous cutover: encoded messages of at least this many
+    /// bytes are staged in a registered slab and announced through the
+    /// ring by a fixed 40-byte descriptor frame, which the receiver
+    /// resolves with one one-sided READ. 0 (the default) keeps every
+    /// message eager — inline in the ring, exactly the pre-rendezvous
+    /// data plane.
+    pub rendezvous_threshold_bytes: usize,
+}
+
 /// Database tuning (§3.4).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct DbSettings {
@@ -265,6 +277,8 @@ pub struct ClusterConfig {
     pub idle_pool: usize,
     /// Crash injection (off unless enabled).
     pub chaos: ChaosSettings,
+    /// RDMA data-plane tuning (eager/rendezvous cutover).
+    pub rdma: RdmaSettings,
     /// Adaptive micro-batching default for every Individual-mode stage
     /// (per-stage `batch` blocks override it). **None = batching off**;
     /// the data plane then runs the paper's one-request-per-invocation
@@ -340,6 +354,7 @@ impl ClusterConfig {
             }],
             idle_pool: 2,
             chaos: ChaosSettings::default(),
+            rdma: RdmaSettings::default(),
             batch: None,
         }
     }
@@ -488,6 +503,13 @@ impl ClusterConfig {
                 ("seed", Json::Num(self.chaos.seed as f64)),
             ]),
         );
+        root.insert(
+            "rdma".into(),
+            obj(vec![(
+                "rendezvous_threshold_bytes",
+                Json::Num(self.rdma.rendezvous_threshold_bytes as f64),
+            )]),
+        );
         if let Some(b) = &self.batch {
             root.insert("batch".into(), batch_to_json(b));
         }
@@ -610,6 +632,16 @@ impl ClusterConfig {
             },
             None => base.chaos,
         };
+        let rdma = match j.get("rdma") {
+            Some(r) => RdmaSettings {
+                rendezvous_threshold_bytes: get_u(
+                    r,
+                    "rendezvous_threshold_bytes",
+                    base.rdma.rendezvous_threshold_bytes as u64,
+                ) as usize,
+            },
+            None => base.rdma,
+        };
         let db = match j.get("db") {
             Some(d) => DbSettings {
                 replicas: get_u(d, "replicas", base.db.replicas as u64) as usize,
@@ -699,6 +731,7 @@ impl ClusterConfig {
                 .and_then(Json::as_u64)
                 .unwrap_or(base.idle_pool as u64) as usize,
             chaos,
+            rdma,
             batch: j.get("batch").map(parse_batch),
         })
     }
@@ -853,6 +886,20 @@ mod tests {
         assert_eq!(cfg.effective_max_starvation_ms(), 250);
         cfg.batch = Some(BatchSettings { max_starvation_ms: 100, ..BatchSettings::default() });
         assert_eq!(cfg.effective_max_starvation_ms(), 100);
+    }
+
+    #[test]
+    fn rdma_block_parses_and_round_trips() {
+        let cfg = ClusterConfig::from_json_str(
+            r#"{"rdma": {"rendezvous_threshold_bytes": 65536}}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.rdma.rendezvous_threshold_bytes, 65_536);
+        let back = ClusterConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.rdma, cfg.rdma);
+        // Absent block: eager-only default.
+        let d = ClusterConfig::from_json_str("{}").unwrap();
+        assert_eq!(d.rdma.rendezvous_threshold_bytes, 0);
     }
 
     #[test]

@@ -54,11 +54,14 @@ pub struct Checkpoint {
     pub stored_at_ns: u64,
 }
 
-/// A stored generation result (or tombstone).
+/// A stored generation result (or tombstone). The bytes are shared
+/// (`Arc`), so replicating one result to N database instances costs one
+/// buffer plus N refcounts — the delivery fan-out stages the payload
+/// once (see [`MemDb::put_shared`]).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct StoredResult {
     pub kind: EntryKind,
-    pub data: Vec<u8>,
+    pub data: Arc<[u8]>,
     /// Store time (instance clock, ns).
     pub stored_at_ns: u64,
 }
@@ -116,6 +119,14 @@ impl MemDb {
     /// late original result and its recovery replay can never
     /// double-publish. A winning write retires the UID's checkpoint.
     pub fn put(&self, uid: Uid, data: Vec<u8>) -> bool {
+        self.put_shared(uid, data.into())
+    }
+
+    /// [`MemDb::put`] without taking buffer ownership: the caller keeps
+    /// (and may hand to sibling replicas) a refcount of the same bytes.
+    /// This is the replication fan-out's zero-copy write path — N
+    /// replicas of one result share one staged buffer.
+    pub fn put_shared(&self, uid: Uid, data: Arc<[u8]>) -> bool {
         let mut g = self.inner.lock().unwrap();
         if g.map.contains_key(&uid) {
             g.stats.dup_suppressed += 1;
@@ -151,7 +162,7 @@ impl MemDb {
         g.stats.tombstones += 1;
         g.map.insert(
             uid,
-            StoredResult { kind, data: Vec::new(), stored_at_ns: self.clock.now_ns() },
+            StoredResult { kind, data: Vec::new().into(), stored_at_ns: self.clock.now_ns() },
         );
         g.ckpts.remove(&uid);
         drop(g);
@@ -252,7 +263,9 @@ impl MemDb {
                 if now.saturating_sub(r.stored_at_ns) <= self.ttl_ns {
                     g.stats.hits += 1;
                     g.stats.purged_on_fetch += 1;
-                    Some((r.kind, r.data))
+                    // Client egress: the one place the shared bytes are
+                    // materialized into an owned buffer.
+                    Some((r.kind, r.data.to_vec()))
                 } else {
                     // Present but expired: purge, report miss.
                     g.stats.expired += 1;
@@ -406,6 +419,24 @@ mod tests {
         assert_eq!(db.stats().resident_bytes, 100);
         assert_eq!(db.stats().dup_suppressed, 1);
         assert_eq!(db.fetch(u), Some(vec![1; 100]));
+    }
+
+    #[test]
+    fn put_shared_replicas_share_one_buffer() {
+        let (_c, a) = setup(1000);
+        let (_c2, b) = setup(1000);
+        let u = uid(50);
+        let bytes: Arc<[u8]> = vec![7u8; 1 << 16].into();
+        assert!(a.put_shared(u, bytes.clone()));
+        assert!(b.put_shared(u, bytes.clone()));
+        // One buffer, three holders: the caller and both replicas.
+        assert_eq!(Arc::strong_count(&bytes), 3);
+        assert!(std::ptr::eq(
+            a.peek(u).unwrap().data.as_ref(),
+            bytes.as_ref()
+        ));
+        assert_eq!(a.fetch(u), Some(vec![7u8; 1 << 16]));
+        assert_eq!(Arc::strong_count(&bytes), 2, "fetch dropped a's refcount");
     }
 
     #[test]

@@ -90,6 +90,10 @@ pub struct Proxy {
     /// Write the stage-0 admission checkpoint (on only when the set's
     /// failure detector is enabled and can replay it).
     checkpointing: bool,
+    /// Eager/rendezvous cutover applied to the entrance senders
+    /// (`rdma.rendezvous_threshold_bytes`; 0 = eager only). Atomic so
+    /// the set can configure it after build without exclusive access.
+    rendezvous_threshold: std::sync::atomic::AtomicUsize,
 }
 
 impl Proxy {
@@ -125,6 +129,20 @@ impl Proxy {
             accepted: counters("accepted"),
             rejected: counters("rejected"),
             checkpointing,
+            rendezvous_threshold: std::sync::atomic::AtomicUsize::new(0),
+        }
+    }
+
+    /// Set the eager/rendezvous cutover on current and future entrance
+    /// senders (`rdma.rendezvous_threshold_bytes`).
+    pub fn set_rendezvous_threshold(&self, bytes: usize) {
+        self.rendezvous_threshold
+            .store(bytes, std::sync::atomic::Ordering::SeqCst);
+        let mut senders = self.senders.lock().unwrap();
+        for (txs, _) in senders.values_mut() {
+            for (_, tx) in txs {
+                tx.set_rendezvous_threshold(bytes);
+            }
         }
     }
 
@@ -219,11 +237,15 @@ impl Proxy {
         {
             let ring_metrics =
                 crate::transport::RingMetrics::from_registry(self.tracker.metrics());
+            let threshold = self
+                .rendezvous_threshold
+                .load(std::sync::atomic::Ordering::SeqCst);
             entry.0 = regions
                 .iter()
                 .map(|&rid| {
                     let mut tx = RdmaEndpoint::sender_for(&self.fabric, rid);
                     tx.set_metrics(ring_metrics.clone());
+                    tx.set_rendezvous_threshold(threshold);
                     (rid, tx)
                 })
                 .collect();

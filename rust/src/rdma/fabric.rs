@@ -182,6 +182,17 @@ impl Fabric {
         (id, region)
     }
 
+    /// Deregister a region: subsequent [`Fabric::connect`] /
+    /// [`Fabric::local`] calls return `UnknownRegion`. Existing queue
+    /// pairs keep their (now orphaned) mapping — exactly the window a
+    /// real NIC gives between memory deregistration and QP teardown —
+    /// which is why the rendezvous path validates generation + checksum
+    /// on every pull instead of trusting connectivity. Returns `false`
+    /// if the region was never registered (or already deregistered).
+    pub fn deregister(&self, id: RegionId) -> bool {
+        self.inner.regions.lock().unwrap().remove(&id).is_some()
+    }
+
     /// Open a queue pair to a registered region ("connect").
     pub fn connect(&self, id: RegionId) -> Result<QueuePair, RdmaError> {
         let region = self
@@ -422,6 +433,20 @@ mod tests {
         let mut direct = vec![0u8; 5];
         local.read_bytes(0, &mut direct);
         assert_eq!(&direct, b"hello");
+    }
+
+    #[test]
+    fn deregister_models_producer_death() {
+        let fabric = Fabric::ideal();
+        let (id, _) = fabric.register(64);
+        // A QP opened before death keeps working (NIC teardown window)…
+        let qp = fabric.connect(id).unwrap();
+        assert!(fabric.deregister(id));
+        assert!(qp.post_write(0, &[1u8; 8]).is_ok());
+        // …but new connects and locals see the region gone.
+        assert!(matches!(fabric.connect(id), Err(RdmaError::UnknownRegion(_))));
+        assert!(matches!(fabric.local(id), Err(RdmaError::UnknownRegion(_))));
+        assert!(!fabric.deregister(id), "double deregister is a no-op");
     }
 
     #[test]

@@ -27,4 +27,7 @@ mod fabric;
 mod region;
 
 pub use fabric::{Fabric, FabricConfig, LatencyModel, OpOutcome, QueuePair, RdmaError, WaitMode};
-pub use region::{MemoryRegion, RegionId};
+pub use region::{
+    MemoryRegion, PayloadDescriptor, PayloadStager, RegionId, PAYLOAD_DESC_BYTES,
+    PAYLOAD_GEN_OFF, PAYLOAD_HDR_BYTES, PAYLOAD_RELEASE_OFF,
+};

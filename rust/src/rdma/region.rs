@@ -9,6 +9,8 @@
 //! the paper's assumption that RDMA writes of a frame are not internally
 //! synchronized.
 
+use crate::metrics::Gauge;
+use crate::util::frame_checksum;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
@@ -126,6 +128,228 @@ impl MemoryRegion {
     }
 }
 
+// --- Rendezvous payload staging (DESIGN.md §2 "Large-payload plane") ---
+//
+// Above the eager/rendezvous cutover, the payload does not travel through
+// the §6.1 ring at all. The sender *stages* it in a registered slab and
+// pushes a fixed-size descriptor frame instead; the consumer pulls the
+// bytes with one one-sided READ straight out of the producer's memory.
+// Slab layout (all offsets in bytes):
+//
+//   [0..8)   generation — bumped on every (re)stage of the slab, SeqCst
+//   [8..16)  release counter — consumers Fetch&Add(+1) after a good read
+//   [16..)   payload bytes
+//
+// A reader racing slab reuse either observes a generation that no longer
+// matches its descriptor, or a torn payload whose checksum fails — both
+// are detected, never delivered.
+
+/// Byte offset of the generation word in a staged slab.
+pub const PAYLOAD_GEN_OFF: usize = 0;
+/// Byte offset of the release counter in a staged slab.
+pub const PAYLOAD_RELEASE_OFF: usize = 8;
+/// Slab header size: the payload starts here.
+pub const PAYLOAD_HDR_BYTES: usize = 16;
+/// Encoded size of a [`PayloadDescriptor`] — the fixed ring-frame body
+/// the rendezvous path pushes in place of the payload.
+pub const PAYLOAD_DESC_BYTES: usize = 40;
+
+/// The descriptor frame body: everything a consumer needs to pull and
+/// validate one staged payload. Wire format is five little-endian u64s:
+/// `[region id][generation][payload byte offset][len][crc32 checksum]`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PayloadDescriptor {
+    /// Slab region to connect to.
+    pub region: RegionId,
+    /// Slab generation the payload was staged under.
+    pub generation: u64,
+    /// Byte offset of the payload inside the slab (= `PAYLOAD_HDR_BYTES`).
+    pub offset: u64,
+    /// Payload length in bytes.
+    pub len: u64,
+    /// `frame_checksum` of the payload (CRC32 in the low 32 bits).
+    pub checksum: u64,
+}
+
+impl PayloadDescriptor {
+    /// Encode to the fixed 40-byte wire format.
+    pub fn encode(&self) -> [u8; PAYLOAD_DESC_BYTES] {
+        let mut out = [0u8; PAYLOAD_DESC_BYTES];
+        out[0..8].copy_from_slice(&self.region.0.to_le_bytes());
+        out[8..16].copy_from_slice(&self.generation.to_le_bytes());
+        out[16..24].copy_from_slice(&self.offset.to_le_bytes());
+        out[24..32].copy_from_slice(&self.len.to_le_bytes());
+        out[32..40].copy_from_slice(&self.checksum.to_le_bytes());
+        out
+    }
+
+    /// Decode a 40-byte descriptor; `None` on any other length.
+    pub fn decode(bytes: &[u8]) -> Option<Self> {
+        if bytes.len() != PAYLOAD_DESC_BYTES {
+            return None;
+        }
+        let w = |i: usize| u64::from_le_bytes(bytes[i * 8..i * 8 + 8].try_into().unwrap());
+        Some(Self {
+            region: RegionId(w(0)),
+            generation: w(1),
+            offset: w(2),
+            len: w(3),
+            checksum: w(4),
+        })
+    }
+}
+
+struct Slab {
+    id: RegionId,
+    region: MemoryRegion,
+    /// Payload capacity (bytes after the header).
+    cap: usize,
+    generation: u64,
+    /// Release count that frees the slab for reuse.
+    expected: u64,
+    in_use: bool,
+}
+
+/// Producer-side slab pool for the rendezvous path: stage → (consumers
+/// release) → lazy reclaim → reuse. Slabs are registered on the fabric
+/// once and reused across payloads (generation bumps invalidate stale
+/// descriptors); `Drop` deregisters everything, so a sender's staged
+/// memory never outlives it — the leak-free reclaim discipline the
+/// recovery sweep relies on.
+pub struct PayloadStager {
+    fabric: super::fabric::Fabric,
+    slabs: Vec<Slab>,
+    /// `payload_regions_live` — slabs holding a staged, not yet fully
+    /// released payload.
+    gauge: Option<Arc<Gauge>>,
+}
+
+impl PayloadStager {
+    pub fn new(fabric: super::fabric::Fabric) -> Self {
+        Self { fabric, slabs: Vec::new(), gauge: None }
+    }
+
+    /// Attach the `payload_regions_live` gauge.
+    pub fn set_gauge(&mut self, gauge: Arc<Gauge>) {
+        self.gauge = Some(gauge);
+    }
+
+    /// Stage `payload` for `readers` consumers (each performs one
+    /// release Fetch&Add after a successful pull). Exactly one copy of
+    /// the payload bytes happens here — the staging write is the
+    /// serialization ingress of the rendezvous path.
+    pub fn stage(&mut self, payload: &[u8], readers: u64) -> PayloadDescriptor {
+        self.sweep();
+        let len = payload.len();
+        let idx = match self
+            .slabs
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| !s.in_use && s.cap >= len)
+            .min_by_key(|(_, s)| s.cap)
+        {
+            Some((i, _)) => i,
+            None => {
+                // No free slab fits: register a new one. Power-of-two
+                // sizing keeps the pool small across mixed payload sizes.
+                let cap = len.max(1).next_power_of_two().max(4096);
+                let (id, region) = self.fabric.register(PAYLOAD_HDR_BYTES + cap);
+                self.slabs.push(Slab {
+                    id,
+                    region,
+                    cap,
+                    generation: 0,
+                    expected: 0,
+                    in_use: false,
+                });
+                self.slabs.len() - 1
+            }
+        };
+        let slab = &mut self.slabs[idx];
+        // Write order matters for the torn-read argument: the generation
+        // bump lands (SeqCst) *before* the payload bytes, so a reader
+        // holding a stale descriptor sees either a generation mismatch or
+        // a mixed-generation payload that fails its checksum.
+        slab.generation += 1;
+        slab.region.store_u64(PAYLOAD_GEN_OFF, slab.generation);
+        slab.region.store_u64(PAYLOAD_RELEASE_OFF, 0);
+        slab.region.write_bytes(PAYLOAD_HDR_BYTES, payload);
+        slab.expected = readers.max(1);
+        slab.in_use = true;
+        if let Some(g) = &self.gauge {
+            g.add(1);
+        }
+        PayloadDescriptor {
+            region: slab.id,
+            generation: slab.generation,
+            offset: PAYLOAD_HDR_BYTES as u64,
+            len: len as u64,
+            checksum: frame_checksum(payload) as u64,
+        }
+    }
+
+    /// Reclaim every slab whose consumers have all released it. Returns
+    /// the number reclaimed. Called lazily by [`PayloadStager::stage`];
+    /// callers that want `payload_regions_live` to settle without
+    /// another send (tests, shutdown paths) invoke it directly.
+    pub fn sweep(&mut self) -> usize {
+        let mut freed = 0;
+        for s in &mut self.slabs {
+            if s.in_use && s.region.load_u64(PAYLOAD_RELEASE_OFF) >= s.expected {
+                s.in_use = false;
+                freed += 1;
+                if let Some(g) = &self.gauge {
+                    g.add(-1);
+                }
+            }
+        }
+        freed
+    }
+
+    /// Abort a staging whose descriptor was never delivered (ring push
+    /// exhausted its retries): invalidate the generation and free the
+    /// slab immediately. Returns `false` for an unknown / already
+    /// reclaimed descriptor.
+    pub fn unstage(&mut self, desc: &PayloadDescriptor) -> bool {
+        for s in &mut self.slabs {
+            if s.id == desc.region && s.generation == desc.generation && s.in_use {
+                // Bump so a descriptor that *did* leak can never validate.
+                s.generation += 1;
+                s.region.store_u64(PAYLOAD_GEN_OFF, s.generation);
+                s.in_use = false;
+                if let Some(g) = &self.gauge {
+                    g.add(-1);
+                }
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Slabs currently holding an unreleased payload.
+    pub fn live(&self) -> usize {
+        self.slabs.iter().filter(|s| s.in_use).count()
+    }
+
+    /// Slab regions registered on the fabric (pool size).
+    pub fn registered(&self) -> usize {
+        self.slabs.len()
+    }
+}
+
+impl Drop for PayloadStager {
+    fn drop(&mut self) {
+        for s in &self.slabs {
+            self.fabric.deregister(s.id);
+            if s.in_use {
+                if let Some(g) = &self.gauge {
+                    g.add(-1);
+                }
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -189,5 +413,76 @@ mod tests {
         let b = a.clone();
         a.store_u64(0, 9);
         assert_eq!(b.load_u64(0), 9);
+    }
+
+    #[test]
+    fn descriptor_codec_roundtrip() {
+        let d = PayloadDescriptor {
+            region: RegionId(42),
+            generation: 7,
+            offset: PAYLOAD_HDR_BYTES as u64,
+            len: 1 << 20,
+            checksum: 0xDEAD_BEEF,
+        };
+        let bytes = d.encode();
+        assert_eq!(bytes.len(), PAYLOAD_DESC_BYTES);
+        assert_eq!(PayloadDescriptor::decode(&bytes), Some(d));
+        assert_eq!(PayloadDescriptor::decode(&bytes[..39]), None);
+    }
+
+    #[test]
+    fn stager_stage_release_reclaim_reuse() {
+        let fabric = super::super::fabric::Fabric::ideal();
+        let mut st = PayloadStager::new(fabric.clone());
+        let payload: Vec<u8> = (0..10_000u32).map(|i| i as u8).collect();
+        let d = st.stage(&payload, 2);
+        assert_eq!(st.live(), 1);
+        assert_eq!(d.len, 10_000);
+        assert_eq!(d.checksum, frame_checksum(&payload) as u64);
+        // The staged bytes are readable through the fabric.
+        let slab = fabric.local(d.region).unwrap();
+        assert_eq!(slab.load_u64(PAYLOAD_GEN_OFF), d.generation);
+        let mut out = vec![0u8; payload.len()];
+        slab.read_bytes(PAYLOAD_HDR_BYTES, &mut out);
+        assert_eq!(out, payload);
+        // One of two releases: still live. Second: reclaimable.
+        slab.fetch_add_u64(PAYLOAD_RELEASE_OFF, 1);
+        assert_eq!(st.sweep(), 0);
+        slab.fetch_add_u64(PAYLOAD_RELEASE_OFF, 1);
+        assert_eq!(st.sweep(), 1);
+        assert_eq!(st.live(), 0);
+        // Restage reuses the slab with a bumped generation.
+        let d2 = st.stage(&payload[..100], 1);
+        assert_eq!(d2.region, d.region);
+        assert!(d2.generation > d.generation);
+        assert_eq!(st.registered(), 1, "the pool reuses slabs");
+    }
+
+    #[test]
+    fn stager_gauge_and_drop_deregister() {
+        let fabric = super::super::fabric::Fabric::ideal();
+        let reg = crate::metrics::Registry::new();
+        let gauge = reg.gauge("payload_regions_live");
+        let rid;
+        {
+            let mut st = PayloadStager::new(fabric.clone());
+            st.set_gauge(gauge.clone());
+            let d = st.stage(&[7u8; 64], 1);
+            rid = d.region;
+            assert_eq!(gauge.get(), 1);
+            // Unstage aborts the staging: gauge back to 0, descriptor dead.
+            assert!(st.unstage(&d));
+            assert!(!st.unstage(&d));
+            assert_eq!(gauge.get(), 0);
+            assert_ne!(
+                fabric.local(rid).unwrap().load_u64(PAYLOAD_GEN_OFF),
+                d.generation,
+                "an unstaged descriptor must never validate again"
+            );
+            let _live = st.stage(&[9u8; 64], 3);
+            assert_eq!(gauge.get(), 1);
+        } // Drop: slabs deregistered, gauge zeroed even for live stagings.
+        assert_eq!(gauge.get(), 0);
+        assert!(fabric.local(rid).is_err(), "Drop must deregister slabs");
     }
 }

@@ -13,9 +13,19 @@
 //! logical path the producers took (Theorem 2), so one delayed writer can
 //! poison at most the entry it collided on, never the consumer's cursor.
 
-use super::{layout, RingConfig};
+use super::{layout, FrameKind, RingConfig};
 use crate::rdma::MemoryRegion;
 use crate::util::frame_checksum;
+
+/// One consumed ring entry: the frame body plus its kind bit. For an
+/// `Eager` frame the payload is the message; for a `Descriptor` frame
+/// it is an encoded [`crate::rdma::PayloadDescriptor`] the transport
+/// layer resolves with a one-sided read.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Frame {
+    pub kind: FrameKind,
+    pub payload: Vec<u8>,
+}
 
 /// A poisoned entry (skipped; cursor already advanced past it).
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -65,14 +75,28 @@ impl RingConsumer {
         }
     }
 
-    /// Try to consume the next message. `None` = ring empty.
+    /// Try to consume the next message. `None` = ring empty. Kind-blind
+    /// view of [`RingConsumer::pop_frame`]: the payload bytes are
+    /// returned whatever the frame kind (eager callers that never push
+    /// descriptors see exactly the old behaviour).
     pub fn pop(&mut self) -> Option<Result<Vec<u8>, PopError>> {
+        self.pop_frame()
+            .map(|r| r.map(|f| f.payload))
+    }
+
+    /// Try to consume the next frame, kind included. `None` = ring empty.
+    pub fn pop_frame(&mut self) -> Option<Result<Frame, PopError>> {
         let slot_off = self.config.slot_off(self.vhead_slot);
         let word = self.region.load_u64(slot_off);
         if word & layout::BUSY == 0 {
             return None; // nothing published at our cursor
         }
-        let frame_len = (word & !layout::BUSY) as usize;
+        let kind = if word & layout::FRAME_DESC != 0 {
+            FrameKind::Descriptor
+        } else {
+            FrameKind::Eager
+        };
+        let frame_len = (word & layout::LEN_MASK) as usize;
         let vslot = self.vhead_slot;
 
         // Defensive sanity on the producer-written length. A valid WL can
@@ -107,7 +131,7 @@ impl RingConsumer {
         }
         let out = payload.to_vec();
         self.clear_and_advance(slot_off, next_v);
-        Some(Ok(out))
+        Some(Ok(Frame { kind, payload: out }))
     }
 
     /// Clear the busy bit (only the consumer may do this — it is what
@@ -131,6 +155,19 @@ impl RingConsumer {
         let mut out = Vec::new();
         for _ in 0..max {
             match self.pop() {
+                Some(r) => out.push(r),
+                None => break,
+            }
+        }
+        out
+    }
+
+    /// Kind-preserving [`RingConsumer::pop_many`]: drains mixed
+    /// eager/descriptor batches whole.
+    pub fn pop_many_frames(&mut self, max: usize) -> Vec<Result<Frame, PopError>> {
+        let mut out = Vec::new();
+        for _ in 0..max {
+            match self.pop_frame() {
                 Some(r) => out.push(r),
                 None => break,
             }
@@ -269,6 +306,32 @@ mod tests {
         };
         let (p, _c) = setup(cfg);
         assert_eq!(p.push(&[0u8; 128], None), Err(super::super::PushError::Full));
+    }
+
+    #[test]
+    fn frame_kinds_roundtrip_and_mix() {
+        use super::super::FrameKind;
+        let (p, mut c) = setup(RingConfig::default());
+        p.push_frame(b"descriptor-body", FrameKind::Descriptor, None).unwrap();
+        p.push(b"eager", None).unwrap();
+        let f = c.pop_frame().unwrap().unwrap();
+        assert_eq!((f.kind, f.payload.as_slice()), (FrameKind::Descriptor, &b"descriptor-body"[..]));
+        let f = c.pop_frame().unwrap().unwrap();
+        assert_eq!((f.kind, f.payload.as_slice()), (FrameKind::Eager, &b"eager"[..]));
+        // One batch mixing kinds: each frame keeps its own bit.
+        let payloads: [&[u8]; 3] = [b"a", b"bb", b"ccc"];
+        let kinds = [FrameKind::Eager, FrameKind::Descriptor, FrameKind::Eager];
+        let out = p.push_many_frames(&payloads, &kinds, None).unwrap();
+        assert_eq!(out.accepted, 3);
+        let frames: Vec<_> = c.pop_many_frames(8).into_iter().map(|r| r.unwrap()).collect();
+        assert_eq!(frames.len(), 3);
+        for ((f, want_kind), want_payload) in frames.iter().zip(kinds).zip(payloads) {
+            assert_eq!(f.kind, want_kind);
+            assert_eq!(f.payload, want_payload);
+        }
+        // Kind-blind pop still sees descriptor bodies as raw bytes.
+        p.push_frame(b"raw", FrameKind::Descriptor, None).unwrap();
+        assert_eq!(c.pop().unwrap().unwrap(), b"raw");
     }
 
     #[test]

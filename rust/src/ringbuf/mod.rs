@@ -46,7 +46,7 @@ mod consumer;
 mod producer;
 mod single;
 
-pub use consumer::{PopError, RingConsumer};
+pub use consumer::{Frame, PopError, RingConsumer};
 pub use producer::{
     BatchPushOutcome, DieAt, ProducerSession, PushError, PushOutcome, RingProducer,
 };
@@ -82,8 +82,37 @@ pub(crate) mod layout {
     /// Busy bit in a size word (only the consumer clears it).
     pub const BUSY: u64 = 1 << 63;
 
+    /// Descriptor-frame bit in a size word: the frame body is a
+    /// rendezvous [`crate::rdma::PayloadDescriptor`], not an eager
+    /// payload. Rides the same WL CAS that publishes the length, so the
+    /// kind is exactly as crash-consistent as the busy bit itself; both
+    /// bits are masked off wherever a frame length is extracted.
+    pub const FRAME_DESC: u64 = 1 << 62;
+
+    /// Mask selecting the frame length from a size word.
+    pub const LEN_MASK: u64 = !(BUSY | FRAME_DESC);
+
     /// Frame header: payload length + CRC32, before the payload bytes.
     pub const FRAME_HDR: usize = 8;
+}
+
+/// What a ring frame's bytes are: an eager payload (the message itself)
+/// or a rendezvous descriptor pointing at a staged payload region.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FrameKind {
+    #[default]
+    Eager,
+    Descriptor,
+}
+
+impl FrameKind {
+    /// The size-word bit this kind contributes.
+    pub(crate) fn bit(self) -> u64 {
+        match self {
+            FrameKind::Eager => 0,
+            FrameKind::Descriptor => layout::FRAME_DESC,
+        }
+    }
 }
 
 /// Ring buffer geometry and failure-detection tuning.

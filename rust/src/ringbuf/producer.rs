@@ -54,7 +54,7 @@
 //! production paths driving a session straight through, with optional
 //! fault injection ([`DieAt`]).
 
-use super::{layout, RingConfig};
+use super::{layout, FrameKind, RingConfig};
 use crate::rdma::{QueuePair, RdmaError};
 use crate::util::{frame_checksum, Clock};
 use std::cell::{Cell, RefCell};
@@ -240,9 +240,22 @@ impl RingProducer {
     /// old uncached push resolved that case internally — callers keep
     /// seeing `LostRace` only for genuine mid-push steals.
     pub fn push(&self, payload: &[u8], die_at: Option<DieAt>) -> Result<PushOutcome, PushError> {
+        self.push_frame(payload, FrameKind::Eager, die_at)
+    }
+
+    /// [`RingProducer::push`] with an explicit frame kind: a
+    /// `Descriptor` push carries a rendezvous descriptor as the frame
+    /// body and publishes the `FRAME_DESC` bit with the same WL CAS.
+    /// The protocol (and every failure case) is identical.
+    pub fn push_frame(
+        &self,
+        payload: &[u8],
+        kind: FrameKind,
+        die_at: Option<DieAt>,
+    ) -> Result<PushOutcome, PushError> {
         let had_cache = self.caching.get() && self.cache.get().is_some();
-        match self.push_protocol(payload, die_at) {
-            Err(PushError::LostRace) if had_cache => self.push_protocol(payload, die_at),
+        match self.push_protocol(payload, kind, die_at) {
+            Err(PushError::LostRace) if had_cache => self.push_protocol(payload, kind, die_at),
             r => r,
         }
     }
@@ -250,6 +263,7 @@ impl RingProducer {
     fn push_protocol(
         &self,
         payload: &[u8],
+        kind: FrameKind,
         die_at: Option<DieAt>,
     ) -> Result<PushOutcome, PushError> {
         let mut s = self.begin()?;
@@ -264,6 +278,7 @@ impl RingProducer {
         s.gh()?;
         die_check!(DieAt::AfterGh);
         s.reserve(payload.len())?;
+        s.set_kind(kind);
         s.wb(payload)?;
         die_check!(DieAt::AfterWb);
         s.wl()?;
@@ -306,9 +321,28 @@ impl RingProducer {
         payloads: &[&[u8]],
         die_at: Option<DieAt>,
     ) -> Result<BatchPushOutcome, PushError> {
+        self.push_many_frames(payloads, &[], die_at)
+    }
+
+    /// [`RingProducer::push_many`] with per-frame kinds, so one batch
+    /// can mix eager payloads and rendezvous descriptors. `kinds` is
+    /// either empty (all eager) or exactly `payloads.len()` long; the
+    /// accepted-prefix contract is unchanged.
+    pub fn push_many_frames(
+        &self,
+        payloads: &[&[u8]],
+        kinds: &[FrameKind],
+        die_at: Option<DieAt>,
+    ) -> Result<BatchPushOutcome, PushError> {
+        assert!(
+            kinds.is_empty() || kinds.len() == payloads.len(),
+            "kinds must be empty (all eager) or match payloads"
+        );
         let had_cache = self.caching.get() && self.cache.get().is_some();
-        match self.push_many_protocol(payloads, die_at) {
-            Err(PushError::LostRace) if had_cache => self.push_many_protocol(payloads, die_at),
+        match self.push_many_protocol(payloads, kinds, die_at) {
+            Err(PushError::LostRace) if had_cache => {
+                self.push_many_protocol(payloads, kinds, die_at)
+            }
             r => r,
         }
     }
@@ -316,6 +350,7 @@ impl RingProducer {
     fn push_many_protocol(
         &self,
         payloads: &[&[u8]],
+        kinds: &[FrameKind],
         die_at: Option<DieAt>,
     ) -> Result<BatchPushOutcome, PushError> {
         if payloads.is_empty() {
@@ -340,6 +375,7 @@ impl RingProducer {
         s.gh()?;
         die_check!(DieAt::AfterGh);
         let accepted = s.reserve_many(payloads)?;
+        s.set_kinds(kinds);
         s.wb_many(&payloads[..accepted])?;
         die_check!(DieAt::AfterWb);
         let accepted = s.wl_many()?;
@@ -433,6 +469,10 @@ pub struct ProducerSession<'a> {
     // virtual offset one past the last accepted frame.
     batch: Vec<(u64, usize)>,
     batch_end_v: u64,
+    /// Size-word kind bit for the single-push WL (0 = eager).
+    kind_bit: u64,
+    /// Per-frame kind bits for the batched WLs (empty = all eager).
+    batch_kind_bits: Vec<u64>,
     /// True iff the UH CAS pair actually advanced the header (both
     /// compares matched the GH snapshot). A benignly-failed UH means a
     /// stealer moved the tail during our push — the producer cache must
@@ -462,6 +502,8 @@ impl<'a> ProducerSession<'a> {
             payload_len: 0,
             batch: Vec::new(),
             batch_end_v: 0,
+            kind_bit: 0,
+            batch_kind_bits: Vec::new(),
             uh_ok: false,
             done_gh: false,
             done_reserve: false,
@@ -479,6 +521,19 @@ impl<'a> ProducerSession<'a> {
     /// True if this session's GH took the cached-header fast path.
     pub fn used_cache(&self) -> bool {
         self.cache_hit
+    }
+
+    /// Set the frame kind the next [`ProducerSession::wl`] publishes
+    /// (default eager). Kind rides the WL CAS, so call before it.
+    pub fn set_kind(&mut self, kind: FrameKind) {
+        self.kind_bit = kind.bit();
+    }
+
+    /// Per-frame kinds for the batched WLs; empty = all eager. Extra
+    /// entries past the accepted prefix are ignored.
+    pub fn set_kinds(&mut self, kinds: &[FrameKind]) {
+        self.batch_kind_bits.clear();
+        self.batch_kind_bits.extend(kinds.iter().map(|k| k.bit()));
     }
 
     /// GH: one vectored read of the four header words. If the tail
@@ -553,7 +608,7 @@ impl<'a> ProducerSession<'a> {
                 self.observed_size_word = word;
                 break;
             }
-            let flen = (word & !layout::BUSY) as usize;
+            let flen = (word & layout::LEN_MASK) as usize;
             let (_, next) = self.cfg().wrap(self.vtail_off, flen);
             let out = self
                 .qp()
@@ -692,7 +747,7 @@ impl<'a> ProducerSession<'a> {
     pub fn wl(&mut self) -> Result<(), PushError> {
         assert!(self.done_reserve, "wl before reserve");
         let slot_off = self.cfg().slot_off(self.vtail_slot);
-        let new_word = layout::BUSY | self.frame_len as u64;
+        let new_word = layout::BUSY | self.kind_bit | self.frame_len as u64;
         let (res, out) = self
             .qp()
             .post_cas(slot_off, self.observed_size_word, new_word)?;
@@ -716,7 +771,8 @@ impl<'a> ProducerSession<'a> {
         let (_, frame_len) = self.batch[i];
         let slot_off = self.cfg().slot_off(self.vtail_slot + i as u64);
         let expected = if i == 0 { self.observed_size_word } else { 0 };
-        let new_word = layout::BUSY | frame_len as u64;
+        let kind_bit = self.batch_kind_bits.get(i).copied().unwrap_or(0);
+        let new_word = layout::BUSY | kind_bit | frame_len as u64;
         let (res, out) = self.qp().post_cas(slot_off, expected, new_word)?;
         self.sim_ns += out.simulated_ns;
         self.verbs += 1;

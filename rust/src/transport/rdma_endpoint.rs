@@ -7,12 +7,12 @@
 //! ring checksum, or pushes abandoned under contention after the retry
 //! budget, are *dropped* — §9: OnePiece does not retransmit.
 
-use crate::metrics::{Counter, Histogram, Registry};
-use crate::rdma::{Fabric, RegionId};
+use crate::metrics::{Counter, Gauge, Histogram, Registry};
+use crate::rdma::{Fabric, PayloadDescriptor, PayloadStager, RegionId, PAYLOAD_RELEASE_OFF};
 use crate::ringbuf::{
-    create_ring, PopError, PushError, RingConfig, RingConsumer, RingProducer,
+    create_ring, Frame, FrameKind, PopError, PushError, RingConfig, RingConsumer, RingProducer,
 };
-use crate::util::{Clock, CodecError, SystemClock};
+use crate::util::{frame_checksum, Clock, CodecError, SystemClock};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
@@ -30,12 +30,30 @@ use super::WorkflowMessage;
 /// `ring_verbs_total / ring_messages_total` is the observable
 /// verbs-per-message the e15 coalescing drives down; `onepiece federate`
 /// prints all of these with the rest of the set counters.
+///
+/// The payload-plane handles account for the large-payload rendezvous
+/// path (DESIGN.md §2):
+///
+/// - `payload_bytes_copied_total` — post-encode host memcpys of payload
+///   bytes. An eager message is charged twice (frame build on send,
+///   pop-out on receive); a rendezvous message exactly once (the staging
+///   write — the one-sided READ lands at the destination without a host
+///   copy, and the 40-byte descriptor frame is control plane, not
+///   payload). `copied / messages` near 1× payload size is the zero-copy
+///   signature e15 asserts.
+/// - `rendezvous_reads_total` — validated one-sided payload pulls,
+/// - `payload_regions_live` — staged slabs not yet fully released
+///   (gauge; must settle to 0 once consumers release and the stager
+///   sweeps — the leak check the fault tests pin down).
 #[derive(Clone)]
 pub struct RingMetrics {
     pub pushes: Arc<Counter>,
     pub messages: Arc<Counter>,
     pub verbs: Arc<Counter>,
     pub push_verbs: Arc<Histogram>,
+    pub payload_bytes_copied: Arc<Counter>,
+    pub rendezvous_reads: Arc<Counter>,
+    pub payload_regions_live: Arc<Gauge>,
 }
 
 impl RingMetrics {
@@ -46,6 +64,9 @@ impl RingMetrics {
             messages: r.counter("ring_messages_total"),
             verbs: r.counter("ring_verbs_total"),
             push_verbs: r.histogram("push_verbs"),
+            payload_bytes_copied: r.counter("payload_bytes_copied_total"),
+            rendezvous_reads: r.counter("rendezvous_reads_total"),
+            payload_regions_live: r.gauge("payload_regions_live"),
         }
     }
 
@@ -65,11 +86,13 @@ pub struct RdmaEndpoint {
     consumer: RingConsumer,
     clock: Arc<dyn Clock>,
     corrupted: u64,
+    metrics: Option<RingMetrics>,
 }
 
 /// Sending handle (producer bound to one receiver's ring).
 pub struct RdmaSender {
     producer: RingProducer,
+    fabric: Fabric,
     /// Push retries on `Full`/`LostRace` before the message is dropped.
     pub max_retries: usize,
     /// Encode scratch buffer (reused across sends — zero alloc steady
@@ -77,6 +100,12 @@ pub struct RdmaSender {
     scratch: Vec<u8>,
     metrics: Option<RingMetrics>,
     dropped: u64,
+    /// Encoded messages at or above this size go rendezvous (staged slab
+    /// + descriptor frame) instead of through the ring inline. 0 = eager
+    /// only, the default.
+    rendezvous_threshold: usize,
+    /// Lazily created slab pool for the rendezvous path.
+    stager: Option<PayloadStager>,
 }
 
 static NEXT_PRODUCER_ID: AtomicU64 = AtomicU64::new(1);
@@ -92,7 +121,14 @@ impl RdmaEndpoint {
             consumer: RingConsumer::new(region, config),
             clock: Arc::new(SystemClock),
             corrupted: 0,
+            metrics: None,
         }
+    }
+
+    /// Attach payload-plane instrumentation (eager pop-out copy bytes,
+    /// validated rendezvous reads).
+    pub fn set_metrics(&mut self, metrics: RingMetrics) {
+        self.metrics = Some(metrics);
     }
 
     /// Ring region id — senders connect with [`RdmaEndpoint::sender`] or a
@@ -111,10 +147,13 @@ impl RdmaEndpoint {
         let id = NEXT_PRODUCER_ID.fetch_add(1, Ordering::Relaxed);
         RdmaSender {
             producer: RingProducer::new(qp, self.config, self.clock.clone(), id),
+            fabric: self.fabric.clone(),
             max_retries: 64,
             scratch: Vec::new(),
             metrics: None,
             dropped: 0,
+            rendezvous_threshold: 0,
+            stager: None,
         }
     }
 
@@ -129,31 +168,103 @@ impl RdmaEndpoint {
         let id = NEXT_PRODUCER_ID.fetch_add(1, Ordering::Relaxed);
         RdmaSender {
             producer: RingProducer::new(qp, config, Arc::new(SystemClock), id),
+            fabric: fabric.clone(),
             max_retries: 64,
             scratch: Vec::new(),
             metrics: None,
             dropped: 0,
+            rendezvous_threshold: 0,
+            stager: None,
         }
     }
 
     /// Non-blocking receive. Corrupted frames are counted and skipped
-    /// (§6.1 checksum discard); decode failures likewise.
+    /// (§6.1 checksum discard); decode failures likewise. Descriptor
+    /// frames are resolved by a one-sided pull from the producer's
+    /// staged slab — a pull that fails validation (dead producer, stale
+    /// generation, torn payload) is stranded like a corrupt frame,
+    /// never delivered.
     pub fn recv(&mut self) -> Option<WorkflowMessage> {
         loop {
-            match self.consumer.pop()? {
-                Ok(bytes) => match WorkflowMessage::decode(&bytes) {
-                    Ok(m) => return Some(m),
-                    Err(CodecError(_)) => {
-                        self.corrupted += 1;
-                        continue;
-                    }
-                },
+            let frame = match self.consumer.pop_frame()? {
+                Ok(f) => f,
                 Err(PopError::Corrupted { .. }) => {
                     self.corrupted += 1;
                     continue;
                 }
+            };
+            if let Some(m) = self.resolve(frame) {
+                return Some(m);
             }
         }
+    }
+
+    /// Turn one popped frame into a message: eager bytes decode in
+    /// place, descriptors pull the staged payload first. `None` counts
+    /// a corruption and means "skip this frame".
+    fn resolve(&mut self, frame: Frame) -> Option<WorkflowMessage> {
+        let bytes = match frame.kind {
+            FrameKind::Eager => {
+                if let Some(m) = &self.metrics {
+                    // The pop-out copy from ring scratch to the owned
+                    // message buffer — eager's second payload copy.
+                    m.payload_bytes_copied.add(frame.payload.len() as u64);
+                }
+                frame.payload
+            }
+            FrameKind::Descriptor => match self.pull_payload(&frame.payload) {
+                Some(b) => b,
+                None => {
+                    self.corrupted += 1;
+                    return None;
+                }
+            },
+        };
+        match WorkflowMessage::decode(&bytes) {
+            Ok(m) => Some(m),
+            Err(CodecError(_)) => {
+                self.corrupted += 1;
+                None
+            }
+        }
+    }
+
+    /// Rendezvous pull: **one** vectored one-sided READ covering the
+    /// slab header and the payload, then generation + checksum
+    /// validation against torn reads racing slab reuse, then one
+    /// Fetch&Add on the release counter so the producer can reclaim.
+    /// The READ lands at the destination without a host copy; only
+    /// validated payloads are released and counted.
+    fn pull_payload(&mut self, desc_bytes: &[u8]) -> Option<Vec<u8>> {
+        let desc = PayloadDescriptor::decode(desc_bytes)?;
+        let off = desc.offset as usize;
+        let len = desc.len as usize;
+        if off % 8 != 0 {
+            return None;
+        }
+        // Dead producer: its stager deregistered the slab on Drop, so
+        // the connect fails and the descriptor is stranded (recovery
+        // replays the message from its checkpoint instead).
+        let qp = self.fabric.connect(desc.region).ok()?;
+        let hdr_words = off / 8;
+        let mut words = vec![0u64; hdr_words + (len + 7) / 8];
+        qp.post_read_words(0, &mut words).ok()?;
+        if words[0] != desc.generation {
+            return None; // slab was re-staged: descriptor is stale
+        }
+        let mut payload = vec![0u8; len];
+        for (i, chunk) in payload.chunks_mut(8).enumerate() {
+            let b = words[hdr_words + i].to_le_bytes();
+            chunk.copy_from_slice(&b[..chunk.len()]);
+        }
+        if frame_checksum(&payload) as u64 != desc.checksum {
+            return None; // torn read: generation moved mid-pull
+        }
+        let _ = qp.post_fetch_add(PAYLOAD_RELEASE_OFF, 1);
+        if let Some(m) = &self.metrics {
+            m.rendezvous_reads.inc();
+        }
+        Some(payload)
     }
 
     /// Batch receive: drain up to `max` messages into `out` in one
@@ -164,15 +275,14 @@ impl RdmaEndpoint {
     /// counted and skipped as in [`RdmaEndpoint::recv`].
     pub fn recv_many(&mut self, max: usize, out: &mut Vec<WorkflowMessage>) -> usize {
         let mut n = 0usize;
-        for r in self.consumer.pop_many(max) {
+        for r in self.consumer.pop_many_frames(max) {
             match r {
-                Ok(bytes) => match WorkflowMessage::decode(&bytes) {
-                    Ok(m) => {
+                Ok(frame) => {
+                    if let Some(m) = self.resolve(frame) {
                         out.push(m);
                         n += 1;
                     }
-                    Err(CodecError(_)) => self.corrupted += 1,
-                },
+                }
                 Err(PopError::Corrupted { .. }) => self.corrupted += 1,
             }
         }
@@ -209,7 +319,51 @@ impl RdmaSender {
     /// Attach ring-path instrumentation (set `Registry` handles). Every
     /// completed push round this sender performs is counted.
     pub fn set_metrics(&mut self, metrics: RingMetrics) {
+        if let Some(st) = &mut self.stager {
+            st.set_gauge(metrics.payload_regions_live.clone());
+        }
         self.metrics = Some(metrics);
+    }
+
+    /// Set the eager/rendezvous cutover: encoded messages of at least
+    /// `bytes` are staged in a registered slab and announced through the
+    /// ring by a fixed 40-byte descriptor frame instead of travelling
+    /// inline. 0 disables the rendezvous path (the default — matches
+    /// `rdma.rendezvous_threshold_bytes`).
+    pub fn set_rendezvous_threshold(&mut self, bytes: usize) {
+        self.rendezvous_threshold = bytes;
+    }
+
+    fn stager_mut(&mut self) -> &mut PayloadStager {
+        if self.stager.is_none() {
+            let mut st = PayloadStager::new(self.fabric.clone());
+            if let Some(m) = &self.metrics {
+                st.set_gauge(m.payload_regions_live.clone());
+            }
+            self.stager = Some(st);
+        }
+        self.stager.as_mut().unwrap()
+    }
+
+    /// Reclaim staged slabs whose consumers have all released them
+    /// (also runs lazily on every stage). Lets `payload_regions_live`
+    /// settle to 0 without another send.
+    pub fn sweep_staged(&mut self) -> usize {
+        self.stager.as_mut().map_or(0, |st| st.sweep())
+    }
+
+    /// Staged slabs still awaiting consumer release.
+    pub fn staged_live(&self) -> usize {
+        self.stager.as_ref().map_or(0, |st| st.live())
+    }
+
+    /// Stage one payload for the rendezvous path, charging the staging
+    /// copy — the single post-encode memcpy a rendezvous message pays.
+    fn stage_for_send(&mut self, payload: &[u8]) -> PayloadDescriptor {
+        if let Some(m) = &self.metrics {
+            m.payload_bytes_copied.add(payload.len() as u64);
+        }
+        self.stager_mut().stage(payload, 1)
     }
 
     /// Bounded exponential backoff between push retries: the first few
@@ -241,17 +395,24 @@ impl RdmaSender {
         ok
     }
 
-    /// True if a message of `len` encoded bytes can ever fit the
-    /// destination ring — `false` means any push would be permanently
-    /// `Full` and retrying is futile.
+    /// True if a message of `len` encoded bytes can ever be delivered —
+    /// `false` means any push would be permanently `Full` and retrying
+    /// is futile. A message the rendezvous path would take is always
+    /// deliverable: only its fixed 40-byte descriptor enters the ring.
     pub fn accepts(&self, len: usize) -> bool {
-        self.producer.accepts(len)
+        (self.rendezvous_threshold > 0 && len >= self.rendezvous_threshold)
+            || self.producer.accepts(len)
     }
 
     /// Send pre-encoded frame bytes. Callers that already hold the
     /// encoded message (checkpointing delivery shares one buffer between
     /// the ring push and the DB checkpoint) avoid a second encode.
+    /// Messages at or above the rendezvous threshold are staged and
+    /// announced by descriptor instead of travelling inline.
     pub fn send_encoded(&mut self, bytes: &[u8]) -> bool {
+        if self.rendezvous_threshold > 0 && bytes.len() >= self.rendezvous_threshold {
+            return self.send_rendezvous(bytes);
+        }
         if !self.accepts(bytes.len()) {
             // Permanently oversized: drop now instead of burning the
             // whole retry budget on a Full that can never clear.
@@ -263,6 +424,9 @@ impl RdmaSender {
                 Ok(out) => {
                     if let Some(m) = &self.metrics {
                         m.record(1, out.verbs);
+                        // The frame-build copy into the ring — eager's
+                        // first payload copy (the pop-out is the second).
+                        m.payload_bytes_copied.add(bytes.len() as u64);
                     }
                     return true;
                 }
@@ -270,6 +434,31 @@ impl RdmaSender {
                 Err(_) => break,
             }
         }
+        self.dropped += 1;
+        false
+    }
+
+    /// Rendezvous send: stage the payload (one copy), push a fixed
+    /// 40-byte descriptor frame through the ring. A push that exhausts
+    /// its retry budget unstages — the slab is reclaimed immediately
+    /// and the descriptor's generation is invalidated so it can never
+    /// validate if it leaked.
+    fn send_rendezvous(&mut self, payload: &[u8]) -> bool {
+        let desc = self.stage_for_send(payload);
+        let wire = desc.encode();
+        for attempt in 0..=self.max_retries {
+            match self.producer.push_frame(&wire, FrameKind::Descriptor, None) {
+                Ok(out) => {
+                    if let Some(m) = &self.metrics {
+                        m.record(1, out.verbs);
+                    }
+                    return true;
+                }
+                Err(PushError::Full) | Err(PushError::LostRace) => Self::backoff(attempt),
+                Err(_) => break,
+            }
+        }
+        self.stager_mut().unstage(&desc);
         self.dropped += 1;
         false
     }
@@ -282,6 +471,48 @@ impl RdmaSender {
     /// — always a prefix, so per-sender FIFO order is preserved and the
     /// caller routes the undelivered tail through its recovery path.
     pub fn send_batch(&mut self, frames: &[&[u8]]) -> usize {
+        let t = self.rendezvous_threshold;
+        if t == 0 || !frames.iter().any(|f| f.len() >= t) {
+            return self.send_batch_wire(frames, &[]);
+        }
+        // Mixed batch: stage the oversize members and substitute their
+        // 40-byte descriptors; eager and descriptor frames cross the
+        // fabric under the same single lock acquisition.
+        let mut descs: Vec<Option<PayloadDescriptor>> = Vec::with_capacity(frames.len());
+        let mut store: Vec<[u8; crate::rdma::PAYLOAD_DESC_BYTES]> =
+            Vec::with_capacity(frames.len());
+        let mut kinds: Vec<FrameKind> = Vec::with_capacity(frames.len());
+        for f in frames {
+            if f.len() >= t {
+                let d = self.stage_for_send(f);
+                store.push(d.encode());
+                descs.push(Some(d));
+                kinds.push(FrameKind::Descriptor);
+            } else {
+                store.push([0u8; crate::rdma::PAYLOAD_DESC_BYTES]);
+                descs.push(None);
+                kinds.push(FrameKind::Eager);
+            }
+        }
+        let wire: Vec<&[u8]> = frames
+            .iter()
+            .zip(&descs)
+            .zip(&store)
+            .map(|((f, d), s)| if d.is_some() { &s[..] } else { *f })
+            .collect();
+        let sent = self.send_batch_wire(&wire, &kinds);
+        // Undelivered tail: reclaim its stagings now — nothing will
+        // ever pull or release them.
+        for d in descs[sent..].iter().flatten() {
+            self.stager_mut().unstage(d);
+        }
+        sent
+    }
+
+    /// The batch push core: `kinds` is empty (all eager) or parallel to
+    /// `frames`. Eager frames are charged their frame-build copy as
+    /// they are accepted; descriptor frames carry no payload bytes.
+    fn send_batch_wire(&mut self, frames: &[&[u8]], kinds: &[FrameKind]) -> usize {
         let mut sent = 0usize;
         let mut attempt = 0usize;
         while sent < frames.len() && attempt <= self.max_retries {
@@ -292,10 +523,16 @@ impl RdmaSender {
                 // is reported to the caller (prefix semantics).
                 break;
             }
-            match self.producer.push_many(&frames[sent..], None) {
+            let tail_kinds = if kinds.is_empty() { &[][..] } else { &kinds[sent..] };
+            match self.producer.push_many_frames(&frames[sent..], tail_kinds, None) {
                 Ok(out) => {
                     if let Some(m) = &self.metrics {
                         m.record(out.accepted as u64, out.verbs);
+                        for i in sent..sent + out.accepted {
+                            if kinds.get(i).copied().unwrap_or_default() == FrameKind::Eager {
+                                m.payload_bytes_copied.add(frames[i].len() as u64);
+                            }
+                        }
                     }
                     sent += out.accepted;
                     if sent < frames.len() {
@@ -480,6 +717,116 @@ mod tests {
             assert_eq!(m.header.uid.0 as u32, i as u32);
         }
         assert_eq!(ep.recv_many(64, &mut out), 0);
+    }
+
+    /// A message whose encoded size comfortably exceeds `floats * 4`.
+    fn big_msg(i: u32, floats: usize) -> WorkflowMessage {
+        WorkflowMessage {
+            header: MessageHeader {
+                uid: Uid(i as u128),
+                ts_ns: i as u64,
+                app: AppId(1),
+                stage: StageId(0),
+                origin: NodeId(9),
+            },
+            payload: Payload::Tensor {
+                shape: vec![floats as u32],
+                data: (0..floats).map(|k| (k as f32).sin()).collect(),
+            },
+        }
+    }
+
+    #[test]
+    fn rendezvous_roundtrip_exact_copy_and_read_accounting() {
+        let fabric = Fabric::ideal();
+        let reg = crate::metrics::Registry::new();
+        let m = RingMetrics::from_registry(&reg);
+        let mut ep = RdmaEndpoint::new(&fabric, RingConfig::default());
+        ep.set_metrics(m.clone());
+        let mut tx = ep.sender();
+        tx.set_metrics(m.clone());
+        tx.set_rendezvous_threshold(1024);
+
+        let big = big_msg(7, 64_000); // ~256 KB encoded
+        let enc = big.encode();
+        assert!(enc.len() >= 1024);
+        assert!(tx.send_encoded(&enc));
+        assert_eq!(
+            m.payload_bytes_copied.get(),
+            enc.len() as u64,
+            "rendezvous send pays exactly the one staging copy"
+        );
+        assert_eq!(m.payload_regions_live.get(), 1);
+
+        assert_eq!(ep.recv().unwrap(), big);
+        assert_eq!(m.rendezvous_reads.get(), 1, "one one-sided pull");
+        assert_eq!(
+            m.payload_bytes_copied.get(),
+            enc.len() as u64,
+            "the pull lands without a host copy"
+        );
+        assert_eq!(tx.sweep_staged(), 1, "consumer released the slab");
+        assert_eq!(m.payload_regions_live.get(), 0);
+
+        // Below the threshold the eager path is untouched — and charged
+        // its two copies (frame build + pop out).
+        let small = msg(3);
+        let small_len = small.encode().len() as u64;
+        assert!(small_len < 1024);
+        assert!(tx.send(&small));
+        assert_eq!(ep.recv().unwrap(), small);
+        assert_eq!(
+            m.payload_bytes_copied.get(),
+            enc.len() as u64 + 2 * small_len
+        );
+        assert_eq!(ep.corrupted_count(), 0);
+    }
+
+    #[test]
+    fn rendezvous_dead_producer_strands_descriptor() {
+        let fabric = Fabric::ideal();
+        let reg = crate::metrics::Registry::new();
+        let m = RingMetrics::from_registry(&reg);
+        let mut ep = RdmaEndpoint::new(&fabric, RingConfig::default());
+        ep.set_metrics(m.clone());
+        let mut tx = ep.sender();
+        tx.set_metrics(m.clone());
+        tx.set_rendezvous_threshold(1024);
+        assert!(tx.send(&big_msg(1, 4096)));
+        // Producer dies after the descriptor push, before the pull: its
+        // stager deregisters the slab, so the descriptor must strand.
+        drop(tx);
+        assert_eq!(m.payload_regions_live.get(), 0, "death reclaims slabs");
+        assert!(ep.recv().is_none());
+        assert_eq!(ep.corrupted_count(), 1, "stranded, not delivered");
+        assert_eq!(m.rendezvous_reads.get(), 0);
+    }
+
+    #[test]
+    fn mixed_batch_eager_and_rendezvous_one_push_round() {
+        let fabric = Fabric::ideal();
+        let reg = crate::metrics::Registry::new();
+        let m = RingMetrics::from_registry(&reg);
+        let mut ep = RdmaEndpoint::new(&fabric, RingConfig::default());
+        ep.set_metrics(m.clone());
+        let mut tx = ep.sender();
+        tx.set_metrics(m.clone());
+        tx.set_rendezvous_threshold(1024);
+        let msgs = vec![msg(0), big_msg(1, 8192), msg(2), big_msg(3, 4096)];
+        let encoded: Vec<Vec<u8>> = msgs.iter().map(|m| m.encode()).collect();
+        let frames: Vec<&[u8]> = encoded.iter().map(Vec::as_slice).collect();
+        assert_eq!(tx.send_batch(&frames), 4);
+        assert_eq!(m.pushes.get(), 1, "mixed batch under one lock acquisition");
+        assert_eq!(m.payload_regions_live.get(), 2);
+        let mut out = Vec::new();
+        assert_eq!(ep.recv_many(16, &mut out), 4);
+        assert_eq!(out, msgs, "FIFO across mixed kinds");
+        assert_eq!(m.rendezvous_reads.get(), 2);
+        let eager: u64 = (encoded[0].len() + encoded[2].len()) as u64;
+        let rdv: u64 = (encoded[1].len() + encoded[3].len()) as u64;
+        assert_eq!(m.payload_bytes_copied.get(), 2 * eager + rdv);
+        tx.sweep_staged();
+        assert_eq!(m.payload_regions_live.get(), 0);
     }
 
     #[test]

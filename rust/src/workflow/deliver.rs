@@ -58,6 +58,9 @@ pub struct ResultDeliver {
     /// Ring-path instrumentation handed to every sender (set registry
     /// counters; None until the owning instance wires its registry in).
     metrics: Option<crate::transport::RingMetrics>,
+    /// Eager/rendezvous cutover applied to every sender
+    /// (`rdma.rendezvous_threshold_bytes`; 0 = eager only).
+    rendezvous_threshold: usize,
     delivered: u64,
     dropped: u64,
 }
@@ -72,6 +75,7 @@ impl ResultDeliver {
             rr: HashMap::new(),
             checkpointing: false,
             metrics: None,
+            rendezvous_threshold: 0,
             delivered: 0,
             dropped: 0,
         }
@@ -92,6 +96,16 @@ impl ResultDeliver {
         self.metrics = Some(metrics);
     }
 
+    /// Set the eager/rendezvous cutover on every current and future ring
+    /// sender this router owns (`rdma.rendezvous_threshold_bytes`;
+    /// 0 disables the rendezvous path).
+    pub fn set_rendezvous_threshold(&mut self, bytes: usize) {
+        self.rendezvous_threshold = bytes;
+        for tx in self.senders.values_mut() {
+            tx.set_rendezvous_threshold(bytes);
+        }
+    }
+
     /// Install per-app routing from a (re)assignment. Senders for
     /// regions still referenced are kept (connection reuse); senders for
     /// regions no route mentions any more are **pruned** — a retired or
@@ -100,6 +114,7 @@ impl ResultDeliver {
     /// reassignment must not skew load back onto each app's first hop);
     /// counters for apps no longer routed are dropped.
     pub fn set_routes(&mut self, routes: Vec<(crate::transport::AppId, Vec<NextHop>)>) {
+        let threshold = self.rendezvous_threshold;
         for (_, hops) in &routes {
             for hop in hops {
                 if let NextHop::Instance(rid) = hop {
@@ -110,6 +125,7 @@ impl ResultDeliver {
                         if let Some(m) = &self.metrics {
                             tx.set_metrics(m.clone());
                         }
+                        tx.set_rendezvous_threshold(threshold);
                         tx
                     });
                 }
@@ -292,17 +308,22 @@ impl ResultDeliver {
         outcome
     }
 
-    /// Replicate a final result: encode once, clone for all replicas but
-    /// the last, move the buffer into the last (mirrors the gateway's
-    /// spill-clone fix — the common single-replica case never copies).
+    /// Replicate a final result: encode once, stage the bytes into one
+    /// shared buffer (the single staging copy, charged to
+    /// `payload_bytes_copied_total`), and fan the N replica writes out
+    /// as refcounts of that buffer — replication cost is independent of
+    /// payload size past the one staging.
     fn store(&self, uid: Uid, bytes: Vec<u8>) {
-        let Some((last, rest)) = self.dbs.split_last() else {
+        if self.dbs.is_empty() {
             return;
-        };
-        for db in rest {
-            db.put(uid, bytes.clone());
         }
-        last.put(uid, bytes);
+        if let Some(m) = &self.metrics {
+            m.payload_bytes_copied.add(bytes.len() as u64);
+        }
+        let shared: Arc<[u8]> = bytes.into();
+        for db in &self.dbs {
+            db.put_shared(uid, shared.clone());
+        }
     }
 
     /// Publish a terminal tombstone for a dropped request (deadline
@@ -388,6 +409,61 @@ mod tests {
             let stored = db.fetch(m.header.uid).unwrap();
             assert_eq!(WorkflowMessage::decode(&stored).unwrap(), m);
         }
+    }
+
+    #[test]
+    fn store_fans_out_one_staging_copy_for_n_replicas() {
+        let fabric = Fabric::ideal();
+        let clock = Arc::new(ManualClock::new());
+        let dbs: Vec<Arc<MemDb>> = (0..3)
+            .map(|_| Arc::new(MemDb::new(clock.clone(), u64::MAX)))
+            .collect();
+        let reg = crate::metrics::Registry::new();
+        let mut rd = ResultDeliver::new(fabric, dbs.clone());
+        rd.set_metrics(crate::transport::RingMetrics::from_registry(&reg));
+        rd.set_routes(vec![(AppId(1), vec![NextHop::Database])]);
+        let m = msg(4);
+        let enc_len = m.encode().len() as u64;
+        assert_eq!(rd.deliver(&m), Delivery::Stored);
+        assert_eq!(
+            reg.counter("payload_bytes_copied_total").get(),
+            enc_len,
+            "one encode + one staging copy serve all three replicas"
+        );
+        let a = dbs[0].peek(m.header.uid).unwrap();
+        let b = dbs[1].peek(m.header.uid).unwrap();
+        assert!(
+            std::ptr::eq(a.data.as_ref(), b.data.as_ref()),
+            "replicas hold refcounts of one buffer, not copies"
+        );
+        for db in &dbs {
+            let stored = db.fetch(m.header.uid).unwrap();
+            assert_eq!(WorkflowMessage::decode(&stored).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn rendezvous_threshold_applies_to_lazily_built_senders() {
+        let fabric = Fabric::ideal();
+        let mut ep = RdmaEndpoint::new(&fabric, RingConfig::default());
+        let reg = crate::metrics::Registry::new();
+        let handles = crate::transport::RingMetrics::from_registry(&reg);
+        ep.set_metrics(handles.clone());
+        let mut rd = ResultDeliver::new(fabric.clone(), vec![]);
+        rd.set_metrics(handles);
+        rd.set_rendezvous_threshold(256);
+        // The sender is built lazily inside set_routes — it must still
+        // inherit the cutover.
+        rd.set_routes(vec![(AppId(1), vec![NextHop::Instance(ep.region_id())])]);
+        let mut big = msg(1);
+        big.payload = Payload::Bytes(vec![5u8; 4096]);
+        assert!(rd.deliver(&big).ok());
+        assert_eq!(ep.recv().unwrap(), big);
+        assert_eq!(
+            reg.counter("rendezvous_reads_total").get(),
+            1,
+            "the large message crossed by descriptor, not inline"
+        );
     }
 
     #[test]

@@ -57,6 +57,9 @@ pub struct InstanceConfig {
     /// message older than this is promoted past higher priority bands.
     /// Zero (the default) keeps strict highest-band-first.
     pub max_starvation: Duration,
+    /// Eager/rendezvous cutover for downstream deliveries
+    /// (`rdma.rendezvous_threshold_bytes`; 0 = eager only).
+    pub rendezvous_threshold: usize,
 }
 
 impl Default for InstanceConfig {
@@ -69,6 +72,7 @@ impl Default for InstanceConfig {
             max_workers: 4,
             checkpointing: false,
             max_starvation: Duration::ZERO,
+            rendezvous_threshold: 0,
         }
     }
 }
@@ -231,10 +235,14 @@ impl Instance {
             SchedQueue::with_aging(SchedMode::Individual, cfg.max_workers, cfg.max_starvation);
         let mut rd = ResultDeliver::new(fabric.clone(), dbs);
         rd.set_checkpointing(cfg.checkpointing);
+        rd.set_rendezvous_threshold(cfg.rendezvous_threshold);
         let metrics = tracker.metrics().clone();
         // Ring-path observability: every downstream push this instance
-        // performs lands in the set's ring_* counters.
-        rd.set_metrics(crate::transport::RingMetrics::from_registry(&metrics));
+        // performs lands in the set's ring_* counters; the endpoint
+        // accounts the receive side of the payload plane.
+        let ring_metrics = crate::transport::RingMetrics::from_registry(&metrics);
+        endpoint.set_metrics(ring_metrics.clone());
+        rd.set_metrics(ring_metrics);
         let shared = Arc::new(Shared {
             node: cfg.node,
             queue: queue.clone(),

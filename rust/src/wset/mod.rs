@@ -175,6 +175,8 @@ impl WorkflowSet {
             crash_handles: crash_handles.clone(),
             auto_rebalances: auto_rebalances.clone(),
         };
+        set.proxy
+            .set_rendezvous_threshold(config.rdma.rendezvous_threshold_bytes);
 
         // Spawn instances: assigned stages first, then the idle pool.
         for (ai, app) in config.apps.iter().enumerate() {
@@ -211,6 +213,7 @@ impl WorkflowSet {
             instance_timeout_ns,
             &set.metrics,
         );
+        recovery.set_rendezvous_threshold(config.rdma.rendezvous_threshold_bytes);
         let chaos_kills = set.metrics.counter("chaos_kills");
         let hk_handles = crash_handles.clone();
         set.housekeeper = Some(std::thread::spawn(move || {
@@ -290,6 +293,7 @@ impl WorkflowSet {
                 max_starvation: Duration::from_millis(
                     self.config.effective_max_starvation_ms(),
                 ),
+                rendezvous_threshold: self.config.rdma.rendezvous_threshold_bytes,
             },
             &self.fabric,
             self.nm.clone(),

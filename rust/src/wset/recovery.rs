@@ -45,6 +45,10 @@ pub struct RecoverySweep {
     senders: HashMap<RegionId, RdmaSender>,
     /// Ring-path counters attached to every replay sender.
     ring_metrics: crate::transport::RingMetrics,
+    /// Eager/rendezvous cutover for replay sends — replays must use the
+    /// same data plane the original delivery did
+    /// (`rdma.rendezvous_threshold_bytes`; 0 = eager only).
+    rendezvous_threshold: usize,
     /// Recently evicted rings, revisited for one grace window: an
     /// upstream with a stale route (control poll ~5 ms) can deliver into
     /// a dead ring *after* the eviction sweep's replay snapshot; without
@@ -80,11 +84,21 @@ impl RecoverySweep {
             timeout_ns,
             senders: HashMap::new(),
             ring_metrics: crate::transport::RingMetrics::from_registry(metrics),
+            rendezvous_threshold: 0,
             recent_dead: Vec::new(),
             instances_failed: metrics.counter("instances_failed"),
             instances_replaced: metrics.counter("instances_replaced"),
             requests_recovered: metrics.counter("requests_recovered"),
             recovery_latency: metrics.histogram("recovery_latency_ns"),
+        }
+    }
+
+    /// Set the eager/rendezvous cutover on current and future replay
+    /// senders.
+    pub fn set_rendezvous_threshold(&mut self, bytes: usize) {
+        self.rendezvous_threshold = bytes;
+        for tx in self.senders.values_mut() {
+            tx.set_rendezvous_threshold(bytes);
         }
     }
 
@@ -198,6 +212,7 @@ impl RecoverySweep {
                     let tx = self.senders.entry(target).or_insert_with(|| {
                         let mut tx = RdmaEndpoint::sender_for(&self.fabric, target);
                         tx.set_metrics(self.ring_metrics.clone());
+                        tx.set_rendezvous_threshold(self.rendezvous_threshold);
                         tx
                     });
                     if tx.send(&msg) {

@@ -206,6 +206,69 @@ fn exhausted_retry_budget_publishes_failed_tombstone() {
 }
 
 #[test]
+fn rendezvous_plane_crash_terminates_requests_and_reclaims_regions() {
+    // Same crash drill as `killed_mid_pipeline_instance_every_request_
+    // terminates`, but with the rendezvous cutover forced low so every
+    // inter-stage delivery travels as a staged slab + descriptor frame.
+    // A descriptor stranded in the dead ring (or pointing at the dead
+    // producer's deregistered slab) must never surface as a corrupt
+    // result: checkpoint replay wins, and once the set drains, every
+    // staged region is reclaimed — `payload_regions_live` back to 0.
+    let mut cfg = fault_config([1.0, 1.0, 60.0, 1.0]);
+    cfg.rdma.rendezvous_threshold_bytes = 256;
+    let set = build(&cfg);
+    let metrics = set.metrics().clone();
+    std::thread::sleep(Duration::from_millis(80));
+
+    let opts = SubmitOptions::default()
+        .with_retry(RetryPolicy::attempts(3, Duration::ZERO));
+    let payload = vec![0xAB; 8 << 10]; // 8 KB: far above the cutover
+    let handles: Vec<_> = (0..6)
+        .map(|_| {
+            set.submit_with(AppId(1), Payload::Bytes(payload.clone()), opts)
+                .expect("must admit")
+        })
+        .collect();
+    std::thread::sleep(Duration::from_millis(40));
+    set.inject_crash_at_stage(diffusion())
+        .expect("diffusion must have an instance to kill");
+
+    let mut done = 0;
+    let mut failed = 0;
+    for h in &handles {
+        match h.wait(Duration::from_secs(15)) {
+            WaitOutcome::Done(bytes) => {
+                // A delivered result must carry the original payload —
+                // a stale-generation or torn pull may strand a request,
+                // never corrupt one.
+                let msg = onepiece::transport::WorkflowMessage::decode(&bytes).unwrap();
+                assert_eq!(msg.payload, Payload::Bytes(payload.clone()));
+                done += 1;
+            }
+            WaitOutcome::Failed => failed += 1,
+            other => panic!("request must reach a terminal state, got {other:?}"),
+        }
+    }
+    assert_eq!(done + failed, 6, "no request may hang");
+    assert!(done >= 1, "replay must complete work over the rendezvous plane");
+    assert!(
+        metrics.counter("rendezvous_reads_total").get() >= 1,
+        "deliveries above the cutover must use the descriptor plane"
+    );
+    assert!(metrics.counter("instances_failed").get() >= 1);
+    assert!(metrics.counter("requests_recovered").get() >= 1);
+
+    set.shutdown();
+    // Shutdown joins every instance (crashed ones included): all sender
+    // stagers drop, deregistering their slabs. Anything else is a leak.
+    assert_eq!(
+        metrics.gauge("payload_regions_live").get(),
+        0,
+        "staged payload regions must all be reclaimed after shutdown"
+    );
+}
+
+#[test]
 fn chaos_config_block_drives_housekeeper_kills() {
     // chaos.kill_every_ms turns the housekeeper into the crash
     // injector: instances die on a timer and the same sweep repairs

@@ -1,0 +1,330 @@
+//! Payload-path battery for the zero-copy large-payload plane
+//! (DESIGN.md §2): the rendezvous path (staged slab + descriptor frame +
+//! one one-sided READ) must be observationally identical to the eager
+//! path for every payload size — same bytes delivered, same per-sender
+//! FIFO order, same wrap behaviour — while paying **one** post-encode
+//! copy instead of two and keeping `payload_regions_live` leak-free.
+
+use onepiece::metrics::Registry;
+use onepiece::rdma::Fabric;
+use onepiece::ringbuf::RingConfig;
+use onepiece::transport::{
+    AppId, MessageHeader, Payload, RdmaEndpoint, RdmaSender, RingMetrics, StageId,
+    WorkflowMessage,
+};
+use onepiece::util::{NodeId, Rng, Uid};
+
+/// Deterministic message with `len` pseudo-random payload bytes.
+fn bytes_msg(uid: u64, len: usize, seed: u64) -> WorkflowMessage {
+    let mut rng = Rng::new(seed);
+    let data: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+    WorkflowMessage {
+        header: MessageHeader {
+            uid: Uid(uid as u128),
+            ts_ns: uid,
+            app: AppId(1),
+            stage: StageId(0),
+            origin: NodeId(3),
+        },
+        payload: Payload::Bytes(data),
+    }
+}
+
+/// An endpoint + instrumented sender pair on a fresh fabric.
+fn plane(cfg: RingConfig, threshold: usize) -> (RdmaEndpoint, RdmaSender, RingMetrics) {
+    let fabric = Fabric::ideal();
+    let reg = Registry::new();
+    let m = RingMetrics::from_registry(&reg);
+    let mut ep = RdmaEndpoint::new(&fabric, cfg);
+    ep.set_metrics(m.clone());
+    let mut tx = ep.sender();
+    tx.set_metrics(m.clone());
+    tx.set_rendezvous_threshold(threshold);
+    (ep, tx, m)
+}
+
+/// A ring large enough to carry 16 MB messages *eagerly* (the default
+/// 1 MB cap cannot; the rendezvous plane exists so production rings
+/// never have to grow like this).
+fn big_ring() -> RingConfig {
+    RingConfig {
+        nslots: 64,
+        cap_bytes: 32 << 20,
+        ..RingConfig::default()
+    }
+}
+
+/// The core equivalence property: for sizes from 1 KB to 16 MB
+/// straddling the cutover, the rendezvous plane delivers byte-identical
+/// messages to the eager plane — the two paths differ only in copies
+/// and verbs, never in observable bytes.
+#[test]
+fn eager_and_rendezvous_byte_identical_1k_to_16m() {
+    let sizes = [
+        1 << 10,  // 1 KB   — eager on both planes
+        16 << 10, // 16 KB  — below the 64 KB cutover
+        64 << 10, // 64 KB  — exactly at the cutover
+        1 << 20,  // 1 MB
+        4 << 20,  // 4 MB
+        16 << 20, // 16 MB  — far beyond any ring cap
+    ];
+    let threshold = 64 << 10;
+    let (mut eager_ep, mut eager_tx, _em) = plane(big_ring(), 0);
+    let (mut rdv_ep, mut rdv_tx, rm) = plane(big_ring(), threshold);
+
+    for (i, &len) in sizes.iter().enumerate() {
+        let msg = bytes_msg(i as u64, len, 0xC0FFEE + i as u64);
+        assert!(eager_tx.send(&msg), "eager send of {len} B");
+        assert!(rdv_tx.send(&msg), "rendezvous send of {len} B");
+        let via_eager = eager_ep.recv().expect("eager delivery");
+        let via_rdv = rdv_ep.recv().expect("rendezvous delivery");
+        assert_eq!(via_eager, msg, "{len} B corrupted on the eager plane");
+        assert_eq!(via_rdv, msg, "{len} B corrupted on the rendezvous plane");
+        assert_eq!(via_eager, via_rdv);
+    }
+    // Everything at/above the cutover went through the staged plane.
+    assert_eq!(rm.rendezvous_reads.get(), 4);
+    assert_eq!(eager_ep.corrupted_count(), 0);
+    assert_eq!(rdv_ep.corrupted_count(), 0);
+    // No staged slab leaks once the consumer released them.
+    rdv_tx.sweep_staged();
+    assert_eq!(rm.payload_regions_live.get(), 0);
+}
+
+/// The acceptance shape: a 16 MB delivery through a *default* ring
+/// (1 MB cap — the payload could never travel inline) costs exactly one
+/// staging copy and one one-sided read.
+#[test]
+fn sixteen_mb_one_copy_one_read_through_default_ring() {
+    let (mut ep, mut tx, m) = plane(RingConfig::default(), 64 << 10);
+    let msg = bytes_msg(1, 16 << 20, 42);
+    let enc_len = msg.encode().len() as u64;
+
+    assert!(tx.send(&msg), "descriptor fits the default ring");
+    assert_eq!(m.payload_bytes_copied.get(), enc_len, "one staging copy");
+    assert_eq!(ep.recv().unwrap(), msg);
+    assert_eq!(m.rendezvous_reads.get(), 1, "one one-sided READ");
+    assert_eq!(
+        m.payload_bytes_copied.get(),
+        enc_len,
+        "the READ lands with zero host copies"
+    );
+    tx.sweep_staged();
+    assert_eq!(m.payload_regions_live.get(), 0);
+}
+
+/// Messages below the cutover stay on the untouched eager path (two
+/// copies, no staged slab); at/above go rendezvous (one copy, one read).
+#[test]
+fn threshold_boundary_is_exact() {
+    let threshold = 8 << 10;
+    let (mut ep, mut tx, m) = plane(RingConfig::default(), threshold);
+
+    // Pick payload sizes so the *encoded* sizes straddle the threshold.
+    let mut below = bytes_msg(1, threshold, 7);
+    let below_enc = loop {
+        let e = below.encode();
+        if e.len() < threshold {
+            break e;
+        }
+        let Payload::Bytes(b) = &mut below.payload else { unreachable!() };
+        b.truncate(b.len() - 64);
+    };
+    let mut above = bytes_msg(2, threshold, 8);
+    let above_enc = loop {
+        let e = above.encode();
+        if e.len() >= threshold {
+            break e;
+        }
+        let Payload::Bytes(b) = &mut above.payload else { unreachable!() };
+        b.extend_from_slice(&[9u8; 64]);
+    };
+
+    assert!(tx.send_encoded(&below_enc));
+    assert_eq!(m.payload_regions_live.get(), 0, "below: nothing staged");
+    assert!(tx.send_encoded(&above_enc));
+    assert_eq!(m.payload_regions_live.get(), 1, "at/above: staged");
+
+    assert_eq!(ep.recv().unwrap(), below);
+    assert_eq!(ep.recv().unwrap(), above);
+    assert_eq!(m.rendezvous_reads.get(), 1);
+    assert_eq!(
+        m.payload_bytes_copied.get(),
+        2 * below_enc.len() as u64 + above_enc.len() as u64,
+        "eager pays 2 copies, rendezvous pays 1"
+    );
+    tx.sweep_staged();
+    assert_eq!(m.payload_regions_live.get(), 0);
+}
+
+/// `send_batch` parity: a mixed eager/descriptor batch through one
+/// coalesced push round delivers the same messages in the same order as
+/// the equivalent sequence of single sends on a twin plane.
+#[test]
+fn mixed_batch_matches_sequential_sends() {
+    let threshold = 4 << 10;
+    let cfg = RingConfig {
+        nslots: 64,
+        cap_bytes: 64 << 10,
+        ..RingConfig::default()
+    };
+    let (mut batch_ep, mut batch_tx, bm) = plane(cfg, threshold);
+    let (mut seq_ep, mut seq_tx, _sm) = plane(cfg, threshold);
+
+    // Mixed sizes: small (eager), large (descriptor), alternating so the
+    // batch interleaves kinds.
+    let msgs: Vec<WorkflowMessage> = (0..8)
+        .map(|i| {
+            let len = if i % 2 == 0 { 256 } else { 8 << 10 };
+            bytes_msg(i as u64, len, 100 + i as u64)
+        })
+        .collect();
+    let encoded: Vec<Vec<u8>> = msgs.iter().map(|m| m.encode()).collect();
+    let frames: Vec<&[u8]> = encoded.iter().map(Vec::as_slice).collect();
+
+    assert_eq!(batch_tx.send_batch(&frames), msgs.len());
+    assert_eq!(bm.pushes.get(), 1, "mixed batch is one lock acquisition");
+    for e in &encoded {
+        assert!(seq_tx.send_encoded(e));
+    }
+
+    let mut via_batch = Vec::new();
+    batch_ep.recv_many(64, &mut via_batch);
+    let mut via_seq = Vec::new();
+    while let Some(m) = seq_ep.recv() {
+        via_seq.push(m);
+    }
+    assert_eq!(via_batch, msgs, "batch plane FIFO + bytes");
+    assert_eq!(via_seq, msgs, "sequential plane FIFO + bytes");
+
+    batch_tx.sweep_staged();
+    seq_tx.sweep_staged();
+    assert_eq!(bm.payload_regions_live.get(), 0);
+}
+
+/// Wrap-boundary parity: a small ring forces descriptor frames to land
+/// at every phase of the buffer region across many laps — the §6.1
+/// wrap rule must treat a 40-byte descriptor frame exactly like an
+/// eager frame of the same size.
+#[test]
+fn descriptor_frames_wrap_like_eager_frames() {
+    let cfg = RingConfig {
+        nslots: 8,
+        // Small enough that a handful of frames laps the buffer region:
+        // mixed eager payloads (24..96 B) and 40 B descriptors hit the
+        // wrap at shifting offsets across ~12 laps.
+        cap_bytes: 512,
+        ..RingConfig::default()
+    };
+    let threshold = 512;
+    let (mut ep, mut tx, m) = plane(cfg, threshold);
+
+    let mut sent = Vec::new();
+    for round in 0..64u64 {
+        let len = if round % 3 == 0 {
+            2 << 10 // rendezvous: only its descriptor enters the ring
+        } else {
+            24 + (round as usize % 72) // eager, varying frame length
+        };
+        let msg = bytes_msg(round, len, 1000 + round);
+        assert!(tx.send(&msg), "round {round}");
+        sent.push(msg);
+        // Drain every few rounds so the ring wraps instead of filling.
+        if round % 4 == 3 {
+            while let Some(got) = ep.recv() {
+                let want = sent.remove(0);
+                assert_eq!(got, want, "wrap corrupted a frame");
+            }
+        }
+    }
+    while let Some(got) = ep.recv() {
+        let want = sent.remove(0);
+        assert_eq!(got, want);
+    }
+    assert!(sent.is_empty(), "all messages delivered");
+    assert_eq!(ep.corrupted_count(), 0);
+    tx.sweep_staged();
+    assert_eq!(m.payload_regions_live.get(), 0);
+}
+
+/// Randomized property sweep: arbitrary sizes around the cutover,
+/// randomly batched or single-sent, must always deliver byte-identical
+/// messages in per-sender FIFO order with a leak-free stager.
+#[test]
+fn randomized_size_sweep_property() {
+    let threshold = 4 << 10;
+    for seed in 0..8u64 {
+        let cfg = RingConfig {
+            nslots: 128,
+            cap_bytes: 1 << 20,
+            ..RingConfig::default()
+        };
+        let (mut ep, mut tx, m) = plane(cfg, threshold);
+        let mut rng = Rng::new(0xBEEF + seed);
+        let mut sent: Vec<WorkflowMessage> = Vec::new();
+        let mut uid = 0u64;
+
+        for _round in 0..20 {
+            // 1..=4 messages, sizes log-uniform in [64 B, 32 KB].
+            let n = 1 + rng.below(4) as usize;
+            let batch: Vec<WorkflowMessage> = (0..n)
+                .map(|_| {
+                    let len = 64usize << rng.below(10);
+                    uid += 1;
+                    bytes_msg(uid, len, seed * 10_000 + uid)
+                })
+                .collect();
+            if rng.below(2) == 0 {
+                let encoded: Vec<Vec<u8>> = batch.iter().map(|m| m.encode()).collect();
+                let frames: Vec<&[u8]> = encoded.iter().map(Vec::as_slice).collect();
+                assert_eq!(tx.send_batch(&frames), n, "seed {seed}");
+            } else {
+                for msg in &batch {
+                    assert!(tx.send(msg), "seed {seed}");
+                }
+            }
+            sent.extend(batch);
+            // Opportunistic drain keeps the ring from filling.
+            while let Some(got) = ep.recv() {
+                let want = sent.remove(0);
+                assert_eq!(got, want, "seed {seed}: bytes or order diverged");
+            }
+        }
+        while let Some(got) = ep.recv() {
+            let want = sent.remove(0);
+            assert_eq!(got, want, "seed {seed}");
+        }
+        assert!(sent.is_empty(), "seed {seed}: messages lost");
+        assert_eq!(ep.corrupted_count(), 0, "seed {seed}");
+        tx.sweep_staged();
+        assert_eq!(m.payload_regions_live.get(), 0, "seed {seed}: slab leak");
+    }
+}
+
+/// Oversize handling flips at the cutover: with rendezvous off, a
+/// message larger than the ring can never be delivered (permanent drop);
+/// switching the threshold on makes the very same message deliverable
+/// because only its 40-byte descriptor enters the ring.
+#[test]
+fn rendezvous_rescues_messages_too_large_for_the_ring() {
+    let cfg = RingConfig {
+        nslots: 8,
+        cap_bytes: 4 << 10,
+        ..RingConfig::default()
+    };
+    let (mut ep, mut tx, m) = plane(cfg, 0);
+    let msg = bytes_msg(1, 16 << 10, 5); // 4× the buffer region
+    let enc = msg.encode();
+    assert!(!tx.accepts(enc.len()), "eager-only: permanently oversized");
+    assert!(!tx.send(&msg));
+    assert_eq!(tx.dropped_count(), 1);
+    assert!(ep.recv().is_none());
+
+    tx.set_rendezvous_threshold(4 << 10);
+    assert!(tx.accepts(enc.len()), "rendezvous: always deliverable");
+    assert!(tx.send(&msg));
+    assert_eq!(ep.recv().unwrap(), msg);
+    assert_eq!(m.rendezvous_reads.get(), 1);
+    tx.sweep_staged();
+    assert_eq!(m.payload_regions_live.get(), 0);
+}

@@ -631,6 +631,165 @@ fn randomized_fault_sweep() {
     }
 }
 
+// --- Rendezvous descriptor frames under the same failure model ---
+//
+// A descriptor frame's kind bit rides the WL CAS (`FRAME_DESC` in the
+// size word), so it inherits the Case1–Case8 liveness argument wholesale;
+// what is new is the *payload* failure surface: the staged slab the
+// descriptor points at can be deregistered (producer death), re-staged
+// (generation reuse), or overwritten mid-pull (torn read). Every one of
+// those must strand the message — never deliver corrupt bytes.
+
+/// The `FRAME_DESC` bit is exactly as crash-consistent as the busy bit:
+/// a producer dying after WL (Case 7) leaves a committed descriptor
+/// frame whose kind and 40-byte body the recovery path preserves.
+#[test]
+fn descriptor_kind_survives_case7_recovery() {
+    use onepiece::ringbuf::FrameKind;
+    let mut h = Harness::new();
+    let x = h.producer(1);
+    let y = h.producer(2);
+
+    let desc_body = [0xA5u8; 40];
+    assert_eq!(
+        x.push_frame(&desc_body, FrameKind::Descriptor, Some(DieAt::AfterWl)),
+        Err(PushError::Died(DieAt::AfterWl))
+    );
+    h.tl();
+    let out = y.push(b"eager-after", None).unwrap();
+    assert!(out.stole_lock, "Y recovers X's committed slot via GH");
+
+    let first = h.consumer.pop_frame().unwrap().unwrap();
+    assert_eq!(first.kind, FrameKind::Descriptor, "kind bit recovered");
+    assert_eq!(first.payload, desc_body);
+    let second = h.consumer.pop_frame().unwrap().unwrap();
+    assert_eq!(second.kind, FrameKind::Eager);
+    assert_eq!(second.payload, b"eager-after");
+}
+
+/// Helper for the slab-failure tests: an endpoint plus a raw producer
+/// and stager on the same fabric (the transport sender's internals,
+/// exploded so the test can fail each part independently).
+fn rendezvous_rig() -> (
+    onepiece::transport::RdmaEndpoint,
+    RingProducer,
+    onepiece::rdma::PayloadStager,
+    Fabric,
+) {
+    let fabric = Fabric::ideal();
+    let cfg = RingConfig::default();
+    let ep = onepiece::transport::RdmaEndpoint::new(&fabric, cfg);
+    let qp = fabric.connect(ep.region_id()).unwrap();
+    let producer = RingProducer::new(qp, cfg, Arc::new(onepiece::util::SystemClock), 1);
+    let stager = onepiece::rdma::PayloadStager::new(fabric.clone());
+    (ep, producer, stager, fabric)
+}
+
+fn rendezvous_msg() -> onepiece::transport::WorkflowMessage {
+    use onepiece::transport::{AppId, MessageHeader, Payload, StageId, WorkflowMessage};
+    WorkflowMessage {
+        header: MessageHeader {
+            uid: onepiece::util::Uid(77),
+            ts_ns: 1,
+            app: AppId(1),
+            stage: StageId(0),
+            origin: onepiece::util::NodeId(2),
+        },
+        payload: Payload::Bytes(vec![0x5C; 4096]),
+    }
+}
+
+/// Producer death between the descriptor push and the consumer's pull:
+/// the stager's Drop deregisters the slab, so the pull strands the
+/// message (the recovery sweep replays it from a checkpoint — see
+/// tests/fault_recovery.rs) and the region is actually gone.
+#[test]
+fn producer_death_after_descriptor_push_strands_and_reclaims_region() {
+    use onepiece::ringbuf::FrameKind;
+    let (mut ep, producer, mut stager, fabric) = rendezvous_rig();
+    let enc = rendezvous_msg().encode();
+    let desc = stager.stage(&enc, 1);
+    producer
+        .push_frame(&desc.encode(), FrameKind::Descriptor, None)
+        .unwrap();
+    drop(stager); // producer dies: slab deregistered
+
+    assert!(
+        fabric.local(desc.region).is_err(),
+        "dead producer's staged region must be reclaimed"
+    );
+    assert!(ep.recv().is_none(), "descriptor strands");
+    assert_eq!(ep.corrupted_count(), 1, "counted, not delivered");
+}
+
+/// Generation reuse racing a slow consumer: the slab is re-staged before
+/// the pull, so the descriptor's generation no longer matches. The stale
+/// message strands; the *new* staging still delivers intact.
+#[test]
+fn stale_generation_on_slab_reuse_is_stranded_never_corrupt() {
+    use onepiece::ringbuf::FrameKind;
+    use onepiece::rdma::PAYLOAD_RELEASE_OFF;
+    let (mut ep, producer, mut stager, fabric) = rendezvous_rig();
+    let stale = rendezvous_msg().encode();
+    let d1 = stager.stage(&stale, 1);
+    producer
+        .push_frame(&d1.encode(), FrameKind::Descriptor, None)
+        .unwrap();
+
+    // The release races ahead of the actual read (a crashed-then-
+    // restarted consumer, or a buggy double release): the producer
+    // legally reuses the slab for a fresh payload.
+    fabric
+        .local(d1.region)
+        .unwrap()
+        .fetch_add_u64(PAYLOAD_RELEASE_OFF, 1);
+    let mut fresh = rendezvous_msg();
+    fresh.header.uid = onepiece::util::Uid(78);
+    let fresh_enc = fresh.encode();
+    let d2 = stager.stage(&fresh_enc, 1);
+    assert_eq!(d2.region, d1.region, "the slab was reused");
+    assert!(d2.generation > d1.generation);
+    producer
+        .push_frame(&d2.encode(), FrameKind::Descriptor, None)
+        .unwrap();
+
+    // d1's pull sees d2's generation: stranded. d2 delivers intact.
+    let got = ep.recv().expect("the fresh staging must deliver");
+    assert_eq!(got, fresh);
+    assert_eq!(ep.corrupted_count(), 1, "stale descriptor stranded");
+    assert!(ep.recv().is_none());
+}
+
+/// A torn payload (bytes overwritten under an unchanged generation —
+/// the mid-READ reuse window) fails the descriptor checksum: stranded,
+/// and crucially *not released*, so the producer cannot reclaim a slab
+/// a reader might still be traversing.
+#[test]
+fn torn_payload_fails_checksum_and_is_not_released() {
+    use onepiece::ringbuf::FrameKind;
+    use onepiece::rdma::{PAYLOAD_HDR_BYTES, PAYLOAD_RELEASE_OFF};
+    let (mut ep, producer, mut stager, fabric) = rendezvous_rig();
+    let enc = rendezvous_msg().encode();
+    let desc = stager.stage(&enc, 1);
+    producer
+        .push_frame(&desc.encode(), FrameKind::Descriptor, None)
+        .unwrap();
+
+    // Scribble over the staged payload without touching the generation
+    // word — the worst case the checksum exists for.
+    let slab = fabric.local(desc.region).unwrap();
+    slab.write_bytes(PAYLOAD_HDR_BYTES + 64, &[0xFF; 128]);
+
+    assert!(ep.recv().is_none(), "torn payload must strand");
+    assert_eq!(ep.corrupted_count(), 1);
+    assert_eq!(
+        slab.load_u64(PAYLOAD_RELEASE_OFF),
+        0,
+        "a failed validation must not release the slab"
+    );
+    assert_eq!(stager.live(), 1, "still staged: reclaim stays blocked");
+}
+
 /// Concurrent stress with live threads (no injected deaths): all messages
 /// delivered intact under real contention.
 #[test]
