@@ -1,0 +1,117 @@
+//! Content-addressed cache-key derivation (DESIGN.md §Artifact cache).
+//!
+//! A key names one stage computation: `hash(app, stage, salt,
+//! canonicalized stage input)`. The salt folds in everything about the
+//! deployment that changes outputs without changing inputs (model
+//! revision, sampler config, artifact build) — bumping it invalidates
+//! the whole cache without a flush protocol. The canonicalized input is
+//! [`Payload::encode`], the deterministic message wire format minus the
+//! header, so per-request fields (`uid`, `ts_ns`, origin) can never
+//! reach the hash.
+//!
+//! The hash is two independent 64-bit FNV-1a lanes (different offset
+//! bases) concatenated into 128 bits. FNV is not collision-resistant
+//! against adversaries, but cache keys here are derived from trusted
+//! in-cluster inputs; 128 bits makes accidental collisions negligible
+//! at any realistic cache population.
+
+use crate::transport::{AppId, Payload};
+
+/// A 128-bit content-addressed cache key.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct CacheKey(pub u128);
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+/// Second-lane offset basis: the standard basis perturbed by the
+/// golden-ratio constant so the two lanes never agree.
+const FNV_OFFSET_HI: u64 = FNV_OFFSET ^ 0x9e37_79b9_7f4a_7c15;
+
+/// Two-lane FNV-1a streaming hasher.
+struct Fnv2 {
+    lo: u64,
+    hi: u64,
+}
+
+impl Fnv2 {
+    fn new() -> Self {
+        Self { lo: FNV_OFFSET, hi: FNV_OFFSET_HI }
+    }
+
+    fn update(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.lo = (self.lo ^ b as u64).wrapping_mul(FNV_PRIME);
+            self.hi = (self.hi ^ b as u64).wrapping_mul(FNV_PRIME);
+        }
+    }
+
+    fn finish(self) -> u128 {
+        ((self.hi as u128) << 64) | self.lo as u128
+    }
+}
+
+/// The pseudo-stage name keying full-workflow results (proxy admission
+/// tier): the terminal output of the whole chain for one entrance input.
+pub const WORKFLOW_STAGE: &str = "__workflow__";
+
+/// Derive the content-addressed key for one stage computation. Every
+/// component is length-prefixed before hashing so field boundaries
+/// cannot alias (`("ab","c")` vs `("a","bc")`).
+pub fn derive_key(app: AppId, stage: &str, salt: &str, input: &Payload) -> CacheKey {
+    let mut h = Fnv2::new();
+    h.update(&app.0.to_le_bytes());
+    h.update(&(stage.len() as u32).to_le_bytes());
+    h.update(stage.as_bytes());
+    h.update(&(salt.len() as u32).to_le_bytes());
+    h.update(salt.as_bytes());
+    h.update(&input.encode());
+    CacheKey(h.finish())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn payload(b: &[u8]) -> Payload {
+        Payload::Bytes(b.to_vec())
+    }
+
+    #[test]
+    fn key_is_deterministic() {
+        let a = derive_key(AppId(1), "diffusion", "v1", &payload(b"x"));
+        let b = derive_key(AppId(1), "diffusion", "v1", &payload(b"x"));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn every_component_keys() {
+        let base = derive_key(AppId(1), "s", "v1", &payload(b"x"));
+        assert_ne!(base, derive_key(AppId(2), "s", "v1", &payload(b"x")), "app");
+        assert_ne!(base, derive_key(AppId(1), "t", "v1", &payload(b"x")), "stage");
+        assert_ne!(base, derive_key(AppId(1), "s", "v2", &payload(b"x")), "salt");
+        assert_ne!(base, derive_key(AppId(1), "s", "v1", &payload(b"y")), "input");
+    }
+
+    #[test]
+    fn field_boundaries_do_not_alias() {
+        let a = derive_key(AppId(1), "ab", "c", &payload(b""));
+        let b = derive_key(AppId(1), "a", "bc", &payload(b""));
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn tensor_payloads_key_on_content() {
+        let a = Payload::Tensor { shape: vec![2], data: vec![1.0, 2.0] };
+        let b = Payload::Tensor { shape: vec![2], data: vec![1.0, 3.0] };
+        assert_ne!(
+            derive_key(AppId(1), "s", "", &a),
+            derive_key(AppId(1), "s", "", &b)
+        );
+        // Shape participates too: same data, different view.
+        let c = Payload::Tensor { shape: vec![1, 2], data: vec![1.0, 2.0] };
+        assert_ne!(
+            derive_key(AppId(1), "s", "", &a),
+            derive_key(AppId(1), "s", "", &c)
+        );
+    }
+}

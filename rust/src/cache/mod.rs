@@ -1,0 +1,449 @@
+//! Content-addressed artifact cache across workflow stages (ROADMAP
+//! item 1; DESIGN.md §Artifact cache).
+//!
+//! AIGC traffic is heavily repetitive — identical prompts, shared
+//! text-encoder embeddings, re-runs of the same seed — so whole stages
+//! can be skipped when the same `(app, stage, salt, input)` computation
+//! has already run anywhere in the set. This module provides that skip:
+//!
+//! - [`key`]: 128-bit content-addressed keys over the canonicalized
+//!   stage input ([`crate::transport::Payload::encode`]), salted by
+//!   deployment config so a model bump invalidates everything.
+//! - [`tier`]: the two-tier store. Hot = bounded in-process LRU of
+//!   `Arc<[u8]>`. Warm = the same entries staged once into registered
+//!   [`crate::rdma::PayloadStager`] slabs, readable by ONE one-sided
+//!   READ from any instance — the PR 6 rendezvous plane reused as a
+//!   storage tier.
+//! - [`singleflight`]: concurrent identical misses compute once;
+//!   followers wait on the leader's condvar instead of duplicating GPU
+//!   work.
+//!
+//! [`ArtifactCache`] is the façade the proxy (full-workflow hits at
+//! admission), the instance worker loop (per-stage hits before
+//! `execute`/`execute_batch`), and [`crate::workflow::ResultDeliver`]
+//! (workflow-tier fill on terminal store) share. Fills are idempotent
+//! first-writer-wins, mirroring MemDb's result semantics: racing fills
+//! never double-publish, the loser's bytes are simply dropped.
+//!
+//! Everything is off unless the cluster config carries a `cache` block;
+//! with no block the request path is byte-identical to an uncached
+//! build (no `ArtifactCache` is even constructed).
+
+pub mod key;
+pub mod singleflight;
+pub mod tier;
+
+pub use key::{derive_key, CacheKey, WORKFLOW_STAGE};
+pub use singleflight::{Flight, FlightGuard, FlightWait, SingleFlight};
+pub use tier::{InsertOutcome, Lookup, TierStore};
+
+use crate::config::CacheSettings;
+use crate::metrics::{Counter, Registry};
+use crate::rdma::{Fabric, PayloadDescriptor};
+use crate::transport::{AppId, Payload};
+use crate::util::{frame_checksum, Clock, Uid};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// Pending workflow-key notes are dropped past this age even if the
+/// request never produced a terminal result (cancelled upstream of the
+/// database, proxy rollback, ...). Keeps the map bounded.
+const PENDING_TTL_NS: u64 = 600_000_000_000; // 10 min
+/// Hard bound on in-flight workflow notes; beyond it new notes are
+/// refused (the request simply won't seed the workflow tier).
+const PENDING_MAX: usize = 65_536;
+
+struct CacheMetrics {
+    registry: Registry,
+    /// `cache_hits.<stage>` / `cache_misses.<stage>`, created on first
+    /// touch and memoized so the hot path skips the registry lock.
+    per_stage: Mutex<HashMap<String, (Arc<Counter>, Arc<Counter>)>>,
+    evictions: Arc<Counter>,
+    bytes_saved: Arc<Counter>,
+    coalesced: Arc<Counter>,
+    warm_reads: Arc<Counter>,
+    fills: Arc<Counter>,
+    /// The shared data-plane copy meter: a fill charges exactly ONE
+    /// staging copy (the PR 6 accounting invariant the warm tier
+    /// preserves — K later hits add zero).
+    copied: Arc<Counter>,
+}
+
+impl CacheMetrics {
+    fn new(registry: &Registry) -> Self {
+        Self {
+            registry: registry.clone(),
+            per_stage: Mutex::new(HashMap::new()),
+            evictions: registry.counter("cache_evictions_total"),
+            bytes_saved: registry.counter("cache_bytes_saved_total"),
+            coalesced: registry.counter("cache_coalesced_total"),
+            warm_reads: registry.counter("cache_warm_reads_total"),
+            fills: registry.counter("cache_fills_total"),
+            copied: registry.counter("payload_bytes_copied_total"),
+        }
+    }
+
+    fn stage_pair(&self, stage: &str) -> (Arc<Counter>, Arc<Counter>) {
+        let mut m = self.per_stage.lock().unwrap();
+        m.entry(stage.to_string())
+            .or_insert_with(|| {
+                (
+                    self.registry.counter(&format!("cache_hits.{stage}")),
+                    self.registry.counter(&format!("cache_misses.{stage}")),
+                )
+            })
+            .clone()
+    }
+}
+
+/// One set's artifact cache: content-addressed lookups, two-tier
+/// storage, single-flight miss coalescing, first-writer-wins fills.
+pub struct ArtifactCache {
+    fabric: Fabric,
+    clock: Arc<dyn Clock>,
+    salt: String,
+    /// Stage names the per-stage tier engages for; empty = every stage.
+    stages: Vec<String>,
+    workflow: bool,
+    store: Mutex<TierStore>,
+    flights: SingleFlight,
+    /// uid → (workflow key, noted_at): misses remembered at admission so
+    /// the terminal store can seed the full-workflow tier.
+    pending: Mutex<HashMap<u128, (CacheKey, u64)>>,
+    metrics: CacheMetrics,
+}
+
+impl ArtifactCache {
+    pub fn new(
+        fabric: Fabric,
+        clock: Arc<dyn Clock>,
+        settings: &CacheSettings,
+        registry: &Registry,
+    ) -> Self {
+        let store = TierStore::new(
+            fabric.clone(),
+            settings.hot_capacity_bytes,
+            settings.warm_capacity_bytes,
+            settings.ttl_ms.saturating_mul(1_000_000),
+        );
+        Self {
+            fabric,
+            clock,
+            salt: settings.salt.clone(),
+            stages: settings.stages.clone(),
+            workflow: settings.workflow,
+            store: Mutex::new(store),
+            flights: SingleFlight::new(),
+            pending: Mutex::new(HashMap::new()),
+            metrics: CacheMetrics::new(registry),
+        }
+    }
+
+    /// Is the per-stage tier on for this stage name?
+    pub fn stage_enabled(&self, stage: &str) -> bool {
+        self.stages.is_empty() || self.stages.iter().any(|s| s == stage)
+    }
+
+    /// Is the full-workflow admission tier on?
+    pub fn workflow_enabled(&self) -> bool {
+        self.workflow
+    }
+
+    /// Content-addressed key for one stage computation under this
+    /// cache's salt. Use [`WORKFLOW_STAGE`] for the admission tier.
+    pub fn key_for(&self, app: AppId, stage: &str, input: &Payload) -> CacheKey {
+        derive_key(app, stage, &self.salt, input)
+    }
+
+    /// Look `key` up, counting a hit or miss under `stage`'s label. A
+    /// hot hit is a pointer clone; a warm hit performs one one-sided
+    /// READ against the staged slab (exactly the endpoint's rendezvous
+    /// pull) and promotes the bytes back into the hot tier.
+    pub fn lookup(&self, stage: &str, key: CacheKey) -> Option<Arc<[u8]>> {
+        let (hits, misses) = self.metrics.stage_pair(stage);
+        let now = self.clock.now_ns();
+        let mut store = self.store.lock().unwrap();
+        match store.get(key.0, now) {
+            Lookup::Hot(v) => {
+                hits.inc();
+                self.metrics.bytes_saved.add(v.len() as u64);
+                Some(v)
+            }
+            Lookup::Warm(desc, len) => match self.read_warm(&desc, len) {
+                Some(v) => {
+                    store.promote(key.0, v.clone());
+                    hits.inc();
+                    self.metrics.warm_reads.inc();
+                    self.metrics.bytes_saved.add(v.len() as u64);
+                    Some(v)
+                }
+                None => {
+                    // Unvalidatable slab (should not happen for our own
+                    // pinned slabs) — serve a miss rather than bad bytes.
+                    misses.inc();
+                    None
+                }
+            },
+            Lookup::Miss => {
+                misses.inc();
+                None
+            }
+        }
+    }
+
+    /// One vectored one-sided READ covering slab header + payload, then
+    /// generation + checksum validation — the same recipe as
+    /// `RdmaEndpoint::pull_payload`, against a cache-owned slab. No
+    /// release Fetch&Add: cache slabs are pinned and reclaimed only by
+    /// eviction.
+    fn read_warm(&self, desc: &PayloadDescriptor, len: usize) -> Option<Arc<[u8]>> {
+        let off = desc.offset as usize;
+        if off % 8 != 0 {
+            return None;
+        }
+        let qp = self.fabric.connect(desc.region).ok()?;
+        let hdr_words = off / 8;
+        let mut words = vec![0u64; hdr_words + len.div_ceil(8)];
+        qp.post_read_words(0, &mut words).ok()?;
+        if words[0] != desc.generation {
+            return None; // evicted and re-staged under us
+        }
+        let mut payload = vec![0u8; len];
+        for (i, chunk) in payload.chunks_mut(8).enumerate() {
+            let b = words[hdr_words + i].to_le_bytes();
+            chunk.copy_from_slice(&b[..chunk.len()]);
+        }
+        if frame_checksum(&payload) as u64 != desc.checksum {
+            return None;
+        }
+        Some(payload.into())
+    }
+
+    /// First-writer-wins fill. Returns whether this call published the
+    /// value. The single staging copy of the entry's life is charged to
+    /// `payload_bytes_copied_total` here; hits never add to it.
+    pub fn fill(&self, key: CacheKey, value: &Arc<[u8]>) -> bool {
+        let now = self.clock.now_ns();
+        let mut store = self.store.lock().unwrap();
+        match store.insert(key.0, value, now) {
+            InsertOutcome::Inserted { evicted } => {
+                self.metrics.fills.inc();
+                self.metrics.copied.add(value.len() as u64);
+                self.metrics.evictions.add(evicted as u64);
+                true
+            }
+            InsertOutcome::Duplicate | InsertOutcome::TooLarge => false,
+        }
+    }
+
+    /// Join or open the single-flight for `key`. Followers are counted
+    /// as coalesced work.
+    pub fn begin_flight(&self, key: CacheKey) -> Flight {
+        let f = self.flights.begin(key);
+        if matches!(f, Flight::Follower(_)) {
+            self.metrics.coalesced.inc();
+        }
+        f
+    }
+
+    /// Remember that `uid` was admitted as a miss under workflow `key`,
+    /// so the terminal store can seed the admission tier.
+    pub fn note_workflow_key(&self, uid: Uid, key: CacheKey) {
+        if !self.workflow {
+            return;
+        }
+        let now = self.clock.now_ns();
+        let mut p = self.pending.lock().unwrap();
+        if p.len() >= PENDING_MAX {
+            p.retain(|_, (_, at)| now.saturating_sub(*at) < PENDING_TTL_NS);
+            if p.len() >= PENDING_MAX {
+                return;
+            }
+        }
+        p.insert(uid.0, (key, now));
+    }
+
+    /// Called by the delivery plane when `uid`'s terminal result is
+    /// stored: fill the full-workflow tier with the encoded terminal
+    /// message. Returns whether a fill was published.
+    pub fn complete_workflow(&self, uid: Uid, value: &Arc<[u8]>) -> bool {
+        let key = {
+            let mut p = self.pending.lock().unwrap();
+            match p.remove(&uid.0) {
+                Some((k, _)) => k,
+                None => return false,
+            }
+        };
+        self.fill(key, value)
+    }
+
+    /// Housekeeper hook: evict TTL-expired entries and forget stale
+    /// pending workflow notes. Returns evicted entry count.
+    pub fn purge_expired(&self) -> usize {
+        let now = self.clock.now_ns();
+        let evicted = self.store.lock().unwrap().purge_expired(now);
+        self.metrics.evictions.add(evicted as u64);
+        self.pending
+            .lock()
+            .unwrap()
+            .retain(|_, (_, at)| now.saturating_sub(*at) < PENDING_TTL_NS);
+        evicted
+    }
+
+    /// Cached entries (tests / introspection).
+    pub fn len(&self) -> usize {
+        self.store.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Bytes held by each tier: `(hot, warm)`.
+    pub fn tier_bytes(&self) -> (usize, usize) {
+        self.store.lock().unwrap().bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::SystemClock;
+
+    fn settings() -> CacheSettings {
+        CacheSettings::default()
+    }
+
+    fn cache_with(settings: CacheSettings) -> (Arc<ArtifactCache>, Registry) {
+        let reg = Registry::new();
+        let c = ArtifactCache::new(
+            Fabric::ideal(),
+            Arc::new(SystemClock),
+            &settings,
+            &reg,
+        );
+        (Arc::new(c), reg)
+    }
+
+    fn arc(bytes: &[u8]) -> Arc<[u8]> {
+        Arc::from(bytes.to_vec())
+    }
+
+    #[test]
+    fn fill_then_lookup_counts_hits_and_misses() {
+        let (c, reg) = cache_with(settings());
+        let k = c.key_for(AppId(1), "vae", &Payload::Bytes(b"in".to_vec()));
+        assert!(c.lookup("vae", k).is_none());
+        assert!(c.fill(k, &arc(b"out")));
+        assert_eq!(&c.lookup("vae", k).unwrap()[..], b"out");
+        assert_eq!(reg.counter("cache_hits.vae").get(), 1);
+        assert_eq!(reg.counter("cache_misses.vae").get(), 1);
+        assert_eq!(reg.counter("cache_bytes_saved_total").get(), 3);
+    }
+
+    #[test]
+    fn fill_is_first_writer_wins() {
+        let (c, _) = cache_with(settings());
+        let k = CacheKey(42);
+        assert!(c.fill(k, &arc(b"first")));
+        assert!(!c.fill(k, &arc(b"second")));
+        assert_eq!(&c.lookup("s", k).unwrap()[..], b"first");
+    }
+
+    #[test]
+    fn hits_never_charge_the_copy_meter() {
+        // The PR 6 follow-on invariant: one staging copy at fill, zero
+        // per hit — K hits on a cached artifact cost 1×len total.
+        let (c, reg) = cache_with(settings());
+        let copied = reg.counter("payload_bytes_copied_total");
+        let k = CacheKey(7);
+        c.fill(k, &arc(&[9u8; 100]));
+        assert_eq!(copied.get(), 100);
+        for _ in 0..10 {
+            assert!(c.lookup("s", k).is_some());
+        }
+        assert_eq!(copied.get(), 100, "hits add no copies");
+    }
+
+    #[test]
+    fn warm_hit_reads_via_one_sided_read_and_promotes() {
+        // Hot tier fits one value: filling a second demotes the first,
+        // whose next lookup must come back via the slab READ path.
+        let mut s = settings();
+        s.hot_capacity_bytes = 64;
+        let (c, reg) = cache_with(s);
+        c.fill(CacheKey(1), &arc(&[1u8; 64]));
+        c.fill(CacheKey(2), &arc(&[2u8; 64]));
+        let v = c.lookup("s", CacheKey(1)).expect("warm hit");
+        assert_eq!(&v[..], &[1u8; 64][..]);
+        assert_eq!(reg.counter("cache_warm_reads_total").get(), 1);
+        // Promoted: the next hit is hot again (no second warm read).
+        assert!(c.lookup("s", CacheKey(1)).is_some());
+        assert_eq!(reg.counter("cache_warm_reads_total").get(), 1);
+        assert_eq!(reg.counter("cache_hits.s").get(), 2);
+    }
+
+    #[test]
+    fn eviction_under_pressure_is_counted() {
+        let mut s = settings();
+        s.warm_capacity_bytes = 128;
+        let (c, reg) = cache_with(s);
+        c.fill(CacheKey(1), &arc(&[1u8; 64]));
+        c.fill(CacheKey(2), &arc(&[2u8; 64]));
+        c.fill(CacheKey(3), &arc(&[3u8; 64]));
+        assert_eq!(reg.counter("cache_evictions_total").get(), 1);
+        assert!(c.lookup("s", CacheKey(1)).is_none(), "LRU evicted");
+        assert!(c.lookup("s", CacheKey(3)).is_some());
+    }
+
+    #[test]
+    fn stage_enable_list_gates() {
+        let mut s = settings();
+        s.stages = vec!["vae_decode".into()];
+        let (c, _) = cache_with(s);
+        assert!(c.stage_enabled("vae_decode"));
+        assert!(!c.stage_enabled("diffusion"));
+        let (all, _) = cache_with(settings());
+        assert!(all.stage_enabled("anything"), "empty list = all stages");
+    }
+
+    #[test]
+    fn salt_selects_distinct_keys() {
+        let mut a = settings();
+        a.salt = "model-v1".into();
+        let mut b = settings();
+        b.salt = "model-v2".into();
+        let (ca, _) = cache_with(a);
+        let (cb, _) = cache_with(b);
+        let p = Payload::Bytes(b"same input".to_vec());
+        assert_ne!(ca.key_for(AppId(1), "s", &p), cb.key_for(AppId(1), "s", &p));
+    }
+
+    #[test]
+    fn workflow_note_then_complete_seeds_admission_tier() {
+        let (c, reg) = cache_with(settings());
+        let p = Payload::Bytes(b"prompt".to_vec());
+        let k = c.key_for(AppId(1), WORKFLOW_STAGE, &p);
+        assert!(c.lookup("workflow", k).is_none());
+        c.note_workflow_key(Uid(77), k);
+        let terminal = arc(b"terminal message bytes");
+        assert!(c.complete_workflow(Uid(77), &terminal));
+        assert!(!c.complete_workflow(Uid(77), &terminal), "note consumed");
+        assert_eq!(&c.lookup("workflow", k).unwrap()[..], &terminal[..]);
+        assert_eq!(reg.counter("cache_hits.workflow").get(), 1);
+    }
+
+    #[test]
+    fn follower_flights_count_as_coalesced() {
+        let (c, reg) = cache_with(settings());
+        let Flight::Leader(lead) = c.begin_flight(CacheKey(5)) else {
+            panic!()
+        };
+        let Flight::Follower(w) = c.begin_flight(CacheKey(5)) else {
+            panic!()
+        };
+        assert_eq!(reg.counter("cache_coalesced_total").get(), 1);
+        lead.complete(arc(b"v"));
+        assert_eq!(&w.wait(std::time::Duration::from_secs(1)).unwrap()[..], b"v");
+    }
+}

@@ -1,0 +1,220 @@
+//! Single-flight coalescing: concurrent identical cache misses compute
+//! once. The first worker to miss a key becomes the flight's *leader*
+//! and executes the stage; every later worker that misses the same key
+//! while the flight is open becomes a *follower* and blocks on the
+//! flight's condvar instead of duplicating GPU work.
+//!
+//! The leader's handle is RAII: completing it publishes the value and
+//! wakes every follower; dropping it without completing (stage error,
+//! crash injection, shutdown mid-iteration) marks the flight abandoned
+//! and wakes them too, so a follower can never outlive its leader in a
+//! wait. Followers that time out or observe an abandon fall back to
+//! executing themselves — coalescing is an optimization, never a
+//! correctness dependency.
+
+use super::key::CacheKey;
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+enum FlightState {
+    InFlight,
+    Done(Arc<[u8]>),
+    Abandoned,
+}
+
+struct FlightInner {
+    state: Mutex<FlightState>,
+    cv: Condvar,
+}
+
+type FlightMap = Arc<Mutex<HashMap<u128, Arc<FlightInner>>>>;
+
+/// Registry of open flights, one per cache key.
+pub struct SingleFlight {
+    flights: FlightMap,
+}
+
+/// What [`SingleFlight::begin`] hands a worker.
+pub enum Flight {
+    /// First to miss: execute the stage, then [`FlightGuard::complete`].
+    Leader(FlightGuard),
+    /// A flight for this key is already open: wait on it.
+    Follower(FlightWait),
+}
+
+impl SingleFlight {
+    pub fn new() -> Self {
+        Self { flights: Arc::new(Mutex::new(HashMap::new())) }
+    }
+
+    /// Join or open the flight for `key`.
+    pub fn begin(&self, key: CacheKey) -> Flight {
+        let mut map = self.flights.lock().unwrap();
+        if let Some(inner) = map.get(&key.0) {
+            return Flight::Follower(FlightWait { inner: inner.clone() });
+        }
+        let inner = Arc::new(FlightInner {
+            state: Mutex::new(FlightState::InFlight),
+            cv: Condvar::new(),
+        });
+        map.insert(key.0, inner.clone());
+        Flight::Leader(FlightGuard {
+            flights: self.flights.clone(),
+            key,
+            inner,
+            finished: false,
+        })
+    }
+
+    /// Open flights (tests / introspection).
+    pub fn open(&self) -> usize {
+        self.flights.lock().unwrap().len()
+    }
+}
+
+impl Default for SingleFlight {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Leader handle for one open flight.
+pub struct FlightGuard {
+    flights: FlightMap,
+    key: CacheKey,
+    inner: Arc<FlightInner>,
+    finished: bool,
+}
+
+impl FlightGuard {
+    /// Publish the computed value and wake all followers.
+    pub fn complete(mut self, value: Arc<[u8]>) {
+        self.finish(FlightState::Done(value));
+    }
+
+    fn finish(&mut self, state: FlightState) {
+        self.finished = true;
+        {
+            // Remove first (under the map lock) so a racing `begin` after
+            // the wake starts a fresh flight instead of joining a closed
+            // one; the removal only drops *this* flight (a replacement
+            // under the same key stays).
+            let mut map = self.flights.lock().unwrap();
+            if map.get(&self.key.0).is_some_and(|e| Arc::ptr_eq(e, &self.inner)) {
+                map.remove(&self.key.0);
+            }
+        }
+        *self.inner.state.lock().unwrap() = state;
+        self.inner.cv.notify_all();
+    }
+}
+
+impl Drop for FlightGuard {
+    fn drop(&mut self) {
+        if !self.finished {
+            // Leader died without a value (stage error, crash, shutdown):
+            // followers must not wait out their full timeout.
+            self.finish(FlightState::Abandoned);
+        }
+    }
+}
+
+/// Follower handle: wait for the leader's value.
+pub struct FlightWait {
+    inner: Arc<FlightInner>,
+}
+
+impl FlightWait {
+    /// Block until the leader completes, abandons, or `timeout` passes.
+    /// `None` means "compute it yourself".
+    pub fn wait(self, timeout: Duration) -> Option<Arc<[u8]>> {
+        let deadline = Instant::now() + timeout;
+        let mut state = self.inner.state.lock().unwrap();
+        loop {
+            match &*state {
+                FlightState::Done(v) => return Some(v.clone()),
+                FlightState::Abandoned => return None,
+                FlightState::InFlight => {}
+            }
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                return None;
+            }
+            let (s, timed_out) = self.inner.cv.wait_timeout(state, left).unwrap();
+            state = s;
+            if timed_out.timed_out() {
+                return match &*state {
+                    FlightState::Done(v) => Some(v.clone()),
+                    _ => None,
+                };
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn key(n: u128) -> CacheKey {
+        CacheKey(n)
+    }
+
+    #[test]
+    fn second_begin_is_a_follower() {
+        let sf = SingleFlight::new();
+        let Flight::Leader(lead) = sf.begin(key(1)) else {
+            panic!("first begin must lead")
+        };
+        assert!(matches!(sf.begin(key(1)), Flight::Follower(_)));
+        assert!(matches!(sf.begin(key(2)), Flight::Leader(_)), "keys are independent");
+        lead.complete(Arc::from(&b"v"[..]));
+        assert!(matches!(sf.begin(key(1)), Flight::Leader(_)), "completed flight closes");
+    }
+
+    #[test]
+    fn followers_get_the_leaders_value() {
+        let sf = Arc::new(SingleFlight::new());
+        let Flight::Leader(lead) = sf.begin(key(7)) else { panic!() };
+        let got = Arc::new(AtomicUsize::new(0));
+        let mut threads = Vec::new();
+        for _ in 0..4 {
+            let Flight::Follower(w) = sf.begin(key(7)) else { panic!() };
+            let got = got.clone();
+            threads.push(std::thread::spawn(move || {
+                let v = w.wait(Duration::from_secs(5)).expect("leader completes");
+                assert_eq!(&v[..], b"out");
+                got.fetch_add(1, Ordering::SeqCst);
+            }));
+        }
+        std::thread::sleep(Duration::from_millis(20));
+        lead.complete(Arc::from(&b"out"[..]));
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(got.load(Ordering::SeqCst), 4);
+        assert_eq!(sf.open(), 0);
+    }
+
+    #[test]
+    fn abandoned_leader_wakes_followers_empty_handed() {
+        let sf = SingleFlight::new();
+        let Flight::Leader(lead) = sf.begin(key(3)) else { panic!() };
+        let Flight::Follower(w) = sf.begin(key(3)) else { panic!() };
+        let t = std::thread::spawn(move || w.wait(Duration::from_secs(5)));
+        std::thread::sleep(Duration::from_millis(20));
+        drop(lead); // no complete(): stage errored
+        assert_eq!(t.join().unwrap(), None, "follower computes itself");
+        assert_eq!(sf.open(), 0, "abandoned flight closes");
+    }
+
+    #[test]
+    fn wait_times_out() {
+        let sf = SingleFlight::new();
+        let Flight::Leader(_lead) = sf.begin(key(9)) else { panic!() };
+        let Flight::Follower(w) = sf.begin(key(9)) else { panic!() };
+        assert_eq!(w.wait(Duration::from_millis(30)), None);
+    }
+}

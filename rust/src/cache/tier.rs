@@ -1,0 +1,351 @@
+//! The two-tier store behind [`crate::cache::ArtifactCache`].
+//!
+//! Every cached artifact is staged **once** into a registered
+//! [`PayloadStager`] slab at fill time — that staging write is the only
+//! host copy the cache ever performs for an entry, and it makes the
+//! bytes readable by ONE one-sided READ from any instance on the fabric
+//! (the PR 6 rendezvous plane reused as a storage tier). On top of the
+//! slabs sits a bounded in-process **hot** tier of `Arc<[u8]>` handles:
+//! a hot hit is a pointer clone, zero copies, zero verbs.
+//!
+//! Capacity pressure demotes, then evicts, in LRU order:
+//! - hot over `hot_capacity_bytes` → drop the LRU `Arc` (the slab
+//!   stays; the entry is still served via the warm READ path),
+//! - warm over `warm_capacity_bytes` → unstage the LRU slab entirely
+//!   (generation bump — a descriptor that leaked to a remote reader can
+//!   never validate again) and forget the entry.
+//!
+//! TTL expiry runs on the set housekeeper's sweep and evicts whole
+//! entries the same way. Slabs are staged with `readers = u64::MAX` so
+//! the stager's own release-count reclaim never fires underneath us;
+//! eviction is the only reclaim path.
+
+use crate::rdma::{Fabric, PayloadDescriptor, PayloadStager};
+use std::collections::{BTreeMap, HashMap};
+use std::sync::Arc;
+
+struct Entry {
+    /// In-process fast path; `None` once demoted by hot-tier pressure.
+    hot: Option<Arc<[u8]>>,
+    hot_tick: u64,
+    desc: PayloadDescriptor,
+    len: usize,
+    filled_at_ns: u64,
+    warm_tick: u64,
+}
+
+/// Outcome of [`TierStore::insert`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InsertOutcome {
+    /// First writer: the value is now cached. Carries the number of
+    /// older entries fully evicted to make room.
+    Inserted { evicted: usize },
+    /// The key was already filled — first-writer-wins kept the old value.
+    Duplicate,
+    /// Larger than the warm tier itself; not cached.
+    TooLarge,
+}
+
+/// Outcome of [`TierStore::get`].
+pub enum Lookup {
+    /// Served from the in-process tier (pointer clone).
+    Hot(Arc<[u8]>),
+    /// Present in a staged slab only: pull with one one-sided READ
+    /// against the descriptor, then [`TierStore::promote`] the bytes.
+    Warm(PayloadDescriptor, usize),
+    Miss,
+}
+
+pub struct TierStore {
+    stager: PayloadStager,
+    hot_capacity: usize,
+    warm_capacity: usize,
+    /// 0 = entries never expire.
+    ttl_ns: u64,
+    tick: u64,
+    hot_bytes: usize,
+    warm_bytes: usize,
+    entries: HashMap<u128, Entry>,
+    /// Recency indexes: tick → key. Ticks are unique (monotone counter),
+    /// so the BTreeMap head is always the LRU entry.
+    hot_lru: BTreeMap<u64, u128>,
+    warm_lru: BTreeMap<u64, u128>,
+}
+
+impl TierStore {
+    pub fn new(fabric: Fabric, hot_capacity: usize, warm_capacity: usize, ttl_ns: u64) -> Self {
+        Self {
+            stager: PayloadStager::new(fabric),
+            hot_capacity,
+            warm_capacity,
+            ttl_ns,
+            tick: 0,
+            hot_bytes: 0,
+            warm_bytes: 0,
+            entries: HashMap::new(),
+            hot_lru: BTreeMap::new(),
+            warm_lru: BTreeMap::new(),
+        }
+    }
+
+    fn next_tick(&mut self) -> u64 {
+        self.tick += 1;
+        self.tick
+    }
+
+    /// First-writer-wins fill. The one staging copy of the entry's life
+    /// happens here.
+    pub fn insert(&mut self, key: u128, value: &Arc<[u8]>, now_ns: u64) -> InsertOutcome {
+        if self.entries.contains_key(&key) {
+            return InsertOutcome::Duplicate;
+        }
+        if value.len() > self.warm_capacity {
+            return InsertOutcome::TooLarge;
+        }
+        // Pinned staging: u64::MAX expected releases means the stager's
+        // lazy sweep can never reclaim the slab; `unstage` on eviction is
+        // the only way back.
+        let desc = self.stager.stage(value, u64::MAX);
+        let hot_tick = self.next_tick();
+        let warm_tick = self.tick;
+        self.entries.insert(
+            key,
+            Entry {
+                hot: Some(value.clone()),
+                hot_tick,
+                desc,
+                len: value.len(),
+                filled_at_ns: now_ns,
+                warm_tick,
+            },
+        );
+        self.hot_lru.insert(hot_tick, key);
+        self.warm_lru.insert(warm_tick, key);
+        self.hot_bytes += value.len();
+        self.warm_bytes += value.len();
+        self.demote_over_hot_capacity();
+        let evicted = self.evict_over_warm_capacity(key);
+        InsertOutcome::Inserted { evicted }
+    }
+
+    /// Look `key` up, expiring it first if its TTL passed.
+    pub fn get(&mut self, key: u128, now_ns: u64) -> Lookup {
+        let expired = match self.entries.get(&key) {
+            None => return Lookup::Miss,
+            Some(e) => {
+                self.ttl_ns > 0 && now_ns.saturating_sub(e.filled_at_ns) >= self.ttl_ns
+            }
+        };
+        if expired {
+            self.evict(key);
+            return Lookup::Miss;
+        }
+        let tick = self.next_tick();
+        let e = self.entries.get_mut(&key).unwrap();
+        self.warm_lru.remove(&e.warm_tick);
+        e.warm_tick = tick;
+        self.warm_lru.insert(tick, key);
+        match &e.hot {
+            Some(v) => {
+                let v = v.clone();
+                self.hot_lru.remove(&e.hot_tick);
+                e.hot_tick = tick;
+                self.hot_lru.insert(tick, key);
+                Lookup::Hot(v)
+            }
+            None => Lookup::Warm(e.desc, e.len),
+        }
+    }
+
+    /// Re-populate the hot tier after a warm READ (the pulled bytes are
+    /// in hand anyway — keep them for the next local hit).
+    pub fn promote(&mut self, key: u128, value: Arc<[u8]>) {
+        let tick = self.next_tick();
+        let Some(e) = self.entries.get_mut(&key) else { return };
+        if e.hot.is_some() {
+            return;
+        }
+        e.hot = Some(value);
+        e.hot_tick = tick;
+        self.hot_lru.insert(tick, key);
+        self.hot_bytes += e.len;
+        self.demote_over_hot_capacity();
+    }
+
+    /// Evict every entry whose TTL passed; returns how many.
+    pub fn purge_expired(&mut self, now_ns: u64) -> usize {
+        if self.ttl_ns == 0 {
+            return 0;
+        }
+        let dead: Vec<u128> = self
+            .entries
+            .iter()
+            .filter(|(_, e)| now_ns.saturating_sub(e.filled_at_ns) >= self.ttl_ns)
+            .map(|(k, _)| *k)
+            .collect();
+        for k in &dead {
+            self.evict(*k);
+        }
+        dead.len()
+    }
+
+    /// Drop LRU `Arc`s until the hot tier fits. Demotion keeps the slab:
+    /// the entry stays servable through the warm READ path.
+    fn demote_over_hot_capacity(&mut self) {
+        while self.hot_bytes > self.hot_capacity {
+            let Some((&tick, &key)) = self.hot_lru.iter().next() else { break };
+            self.hot_lru.remove(&tick);
+            if let Some(e) = self.entries.get_mut(&key) {
+                if e.hot.take().is_some() {
+                    self.hot_bytes -= e.len;
+                }
+            }
+        }
+    }
+
+    /// Unstage LRU entries until the warm tier fits, never evicting the
+    /// entry just inserted (`keep`). Returns how many were evicted.
+    fn evict_over_warm_capacity(&mut self, keep: u128) -> usize {
+        let mut evicted = 0;
+        while self.warm_bytes > self.warm_capacity {
+            let victim = self.warm_lru.iter().map(|(_, k)| *k).find(|k| *k != keep);
+            match victim {
+                Some(k) => {
+                    self.evict(k);
+                    evicted += 1;
+                }
+                None => break,
+            }
+        }
+        evicted
+    }
+
+    /// Remove `key` entirely: drop the hot handle and unstage the slab
+    /// (generation bump — leaked descriptors strand, never corrupt).
+    fn evict(&mut self, key: u128) {
+        let Some(e) = self.entries.remove(&key) else { return };
+        if e.hot.is_some() {
+            self.hot_lru.remove(&e.hot_tick);
+            self.hot_bytes -= e.len;
+        }
+        self.warm_lru.remove(&e.warm_tick);
+        self.warm_bytes -= e.len;
+        self.stager.unstage(&e.desc);
+    }
+
+    /// Cached entries (hot + warm-only).
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Entries currently holding a hot `Arc`.
+    pub fn hot_len(&self) -> usize {
+        self.hot_lru.len()
+    }
+
+    /// Bytes held by each tier: `(hot, warm)`.
+    pub fn bytes(&self) -> (usize, usize) {
+        (self.hot_bytes, self.warm_bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rdma::{PAYLOAD_GEN_OFF, PAYLOAD_HDR_BYTES};
+
+    fn val(n: usize, b: u8) -> Arc<[u8]> {
+        Arc::from(vec![b; n])
+    }
+
+    fn store(hot: usize, warm: usize, ttl: u64) -> (TierStore, Fabric) {
+        let fabric = Fabric::ideal();
+        (TierStore::new(fabric.clone(), hot, warm, ttl), fabric)
+    }
+
+    #[test]
+    fn first_writer_wins() {
+        let (mut s, _f) = store(1 << 20, 1 << 20, 0);
+        assert_eq!(s.insert(1, &val(8, 0xAA), 0), InsertOutcome::Inserted { evicted: 0 });
+        assert_eq!(s.insert(1, &val(8, 0xBB), 0), InsertOutcome::Duplicate);
+        match s.get(1, 0) {
+            Lookup::Hot(v) => assert_eq!(&v[..], &[0xAA; 8][..]),
+            _ => panic!("hot hit expected"),
+        }
+    }
+
+    #[test]
+    fn hot_pressure_demotes_to_warm_and_read_back_via_slab() {
+        // Hot fits one 64-byte value; warm fits plenty.
+        let (mut s, fabric) = store(64, 1 << 20, 0);
+        s.insert(1, &val(64, 1), 0);
+        s.insert(2, &val(64, 2), 0);
+        assert_eq!(s.hot_len(), 1, "LRU hot entry demoted");
+        assert_eq!(s.len(), 2, "demotion keeps the entry");
+        let Lookup::Warm(desc, len) = s.get(1, 0) else {
+            panic!("demoted entry is warm")
+        };
+        assert_eq!(len, 64);
+        // The slab is readable through the fabric (the warm READ path).
+        let slab = fabric.local(desc.region).unwrap();
+        assert_eq!(slab.load_u64(PAYLOAD_GEN_OFF), desc.generation);
+        let mut out = vec![0u8; len];
+        slab.read_bytes(PAYLOAD_HDR_BYTES, &mut out);
+        assert_eq!(out, vec![1u8; 64]);
+        // Promote restores the hot fast path (and demotes key 2 in turn).
+        s.promote(1, out.into());
+        assert!(matches!(s.get(1, 0), Lookup::Hot(_)));
+    }
+
+    #[test]
+    fn warm_pressure_evicts_lru_entirely() {
+        let (mut s, fabric) = store(1 << 20, 128, 0);
+        s.insert(1, &val(64, 1), 0);
+        s.insert(2, &val(64, 2), 0);
+        let Lookup::Hot(_) = s.get(1, 0) else { panic!() }; // touch: 2 is now LRU
+        let InsertOutcome::Inserted { evicted } = s.insert(3, &val(64, 3), 0) else {
+            panic!()
+        };
+        assert_eq!(evicted, 1);
+        assert!(matches!(s.get(2, 0), Lookup::Miss), "LRU entry fully evicted");
+        assert!(matches!(s.get(1, 0), Lookup::Hot(_)));
+        assert!(matches!(s.get(3, 0), Lookup::Hot(_)));
+        // The evicted slab's generation moved: a leaked descriptor can
+        // never validate (strand-not-corrupt, as in the delivery plane).
+        let (_, warm_bytes) = s.bytes();
+        assert!(warm_bytes <= 128);
+        drop(s);
+        drop(fabric);
+    }
+
+    #[test]
+    fn value_bigger_than_warm_tier_is_not_cached() {
+        let (mut s, _f) = store(1 << 20, 64, 0);
+        assert_eq!(s.insert(1, &val(65, 1), 0), InsertOutcome::TooLarge);
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn ttl_expires_on_get_and_purge() {
+        let (mut s, _f) = store(1 << 20, 1 << 20, 100);
+        s.insert(1, &val(8, 1), 0);
+        s.insert(2, &val(8, 2), 50);
+        assert!(matches!(s.get(1, 99), Lookup::Hot(_)), "not yet expired");
+        assert!(matches!(s.get(1, 100), Lookup::Miss), "expired on access");
+        assert_eq!(s.purge_expired(149), 0, "key 2 still fresh");
+        assert_eq!(s.purge_expired(150), 1, "key 2 swept");
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn ttl_zero_never_expires() {
+        let (mut s, _f) = store(1 << 20, 1 << 20, 0);
+        s.insert(1, &val(8, 1), 0);
+        assert!(matches!(s.get(1, u64::MAX), Lookup::Hot(_)));
+        assert_eq!(s.purge_expired(u64::MAX), 0);
+    }
+}

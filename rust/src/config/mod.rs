@@ -10,9 +10,9 @@
 mod types;
 
 pub use types::{
-    AppConfig, BatchSettings, ChaosSettings, ClusterConfig, ConfigError, DbSettings,
-    ExecModel, FabricKind, NmSettings, ProxySettings, RdmaSettings, RingSettings,
-    SchedMode, StageConfig,
+    AppConfig, BatchSettings, CacheSettings, ChaosSettings, ClusterConfig, ConfigError,
+    DbSettings, ExecModel, FabricKind, NmSettings, ProxySettings, RdmaSettings,
+    RingSettings, SchedMode, StageConfig,
 };
 
 #[cfg(test)]
@@ -41,6 +41,19 @@ mod tests {
         let mut cfg = ClusterConfig::i2v_default();
         cfg.apps[0].stages[0].exec_ms = 0.0;
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn cached_example_config_parses() {
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("examples/configs/cached_i2v.json");
+        let cfg = ClusterConfig::from_file(&path).unwrap();
+        let cache = cfg.cache.expect("cached_i2v.json must carry a cache block");
+        assert_eq!(cache.salt, "wan2.1-v1");
+        assert_eq!(cache.stages, vec!["text_encoder", "vae_encode", "vae_decode"]);
+        assert!(cache.workflow);
+        assert_eq!(cache.ttl_ms, 300_000);
+        assert_eq!(cache.hot_capacity_bytes, 4 << 20);
     }
 
     #[test]

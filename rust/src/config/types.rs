@@ -238,6 +238,46 @@ pub struct RdmaSettings {
     pub rendezvous_threshold_bytes: usize,
 }
 
+/// Content-addressed artifact-cache settings ([`crate::cache`]).
+/// **Absent = cache off**: without a `cache` block no `ArtifactCache`
+/// is constructed and the request path is byte-identical to an
+/// uncached build.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CacheSettings {
+    /// In-process hot tier budget (LRU of `Arc<[u8]>` handles).
+    pub hot_capacity_bytes: usize,
+    /// Warm tier budget: bytes staged in registered slabs readable by
+    /// one one-sided READ from any instance. Warm eviction removes the
+    /// entry entirely.
+    pub warm_capacity_bytes: usize,
+    /// Entry time-to-live, ms; 0 = entries never expire.
+    pub ttl_ms: u64,
+    /// Deployment salt folded into every key: bump it on a model
+    /// revision / sampler change to invalidate the whole cache without
+    /// a flush protocol.
+    pub salt: String,
+    /// Stage names the per-stage tier engages for; empty = every stage.
+    /// List only deterministic stages (a seed-randomized diffusion stage
+    /// must stay off the list or repeats would replay one sample).
+    pub stages: Vec<String>,
+    /// Enable the full-workflow admission tier (proxy-side hit returns
+    /// the terminal result without entering the pipeline).
+    pub workflow: bool,
+}
+
+impl Default for CacheSettings {
+    fn default() -> Self {
+        Self {
+            hot_capacity_bytes: 8 << 20,
+            warm_capacity_bytes: 64 << 20,
+            ttl_ms: 600_000,
+            salt: String::new(),
+            stages: Vec::new(),
+            workflow: true,
+        }
+    }
+}
+
 /// Database tuning (§3.4).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct DbSettings {
@@ -284,6 +324,10 @@ pub struct ClusterConfig {
     /// the data plane then runs the paper's one-request-per-invocation
     /// path unchanged.
     pub batch: Option<BatchSettings>,
+    /// Content-addressed artifact cache. **None = cache off**; the
+    /// proxy and workers never consult a cache and no slab memory is
+    /// registered for it.
+    pub cache: Option<CacheSettings>,
 }
 
 impl ClusterConfig {
@@ -356,6 +400,7 @@ impl ClusterConfig {
             chaos: ChaosSettings::default(),
             rdma: RdmaSettings::default(),
             batch: None,
+            cache: None,
         }
     }
 
@@ -432,6 +477,17 @@ impl ClusterConfig {
         if let Some(b) = &self.batch {
             if b.max_batch == 0 {
                 return Err(err("batch.max_batch must be >= 1"));
+            }
+        }
+        if let Some(c) = &self.cache {
+            if c.hot_capacity_bytes == 0 || c.warm_capacity_bytes == 0 {
+                return Err(err("cache: capacities must be >= 1 byte"));
+            }
+            if c.hot_capacity_bytes > c.warm_capacity_bytes {
+                return Err(err(
+                    "cache: hot_capacity_bytes must not exceed warm_capacity_bytes \
+                     (every hot entry is also staged warm)",
+                ));
             }
         }
         let mut ids = std::collections::HashSet::new();
@@ -512,6 +568,9 @@ impl ClusterConfig {
         );
         if let Some(b) = &self.batch {
             root.insert("batch".into(), batch_to_json(b));
+        }
+        if let Some(c) = &self.cache {
+            root.insert("cache".into(), cache_to_json(c));
         }
         root.insert(
             "db".into(),
@@ -733,6 +792,7 @@ impl ClusterConfig {
             chaos,
             rdma,
             batch: j.get("batch").map(parse_batch),
+            cache: j.get("cache").map(parse_cache),
         })
     }
 
@@ -777,6 +837,53 @@ fn parse_batch(j: &Json) -> BatchSettings {
             .get("max_starvation_ms")
             .and_then(Json::as_u64)
             .unwrap_or(d.max_starvation_ms),
+    }
+}
+
+fn cache_to_json(c: &CacheSettings) -> Json {
+    obj(vec![
+        ("hot_capacity_bytes", Json::Num(c.hot_capacity_bytes as f64)),
+        ("warm_capacity_bytes", Json::Num(c.warm_capacity_bytes as f64)),
+        ("ttl_ms", Json::Num(c.ttl_ms as f64)),
+        ("salt", Json::Str(c.salt.clone())),
+        (
+            "stages",
+            Json::Arr(c.stages.iter().map(|s| Json::Str(s.clone())).collect()),
+        ),
+        ("workflow", Json::Bool(c.workflow)),
+    ])
+}
+
+/// Parse a `cache` block; missing fields inherit [`CacheSettings`]
+/// defaults (so `{"stages": ["vae_decode"]}` is a complete override).
+fn parse_cache(j: &Json) -> CacheSettings {
+    let d = CacheSettings::default();
+    CacheSettings {
+        hot_capacity_bytes: j
+            .get("hot_capacity_bytes")
+            .and_then(Json::as_u64)
+            .unwrap_or(d.hot_capacity_bytes as u64) as usize,
+        warm_capacity_bytes: j
+            .get("warm_capacity_bytes")
+            .and_then(Json::as_u64)
+            .unwrap_or(d.warm_capacity_bytes as u64) as usize,
+        ttl_ms: j.get("ttl_ms").and_then(Json::as_u64).unwrap_or(d.ttl_ms),
+        salt: j
+            .get("salt")
+            .and_then(Json::as_str)
+            .map(str::to_string)
+            .unwrap_or(d.salt),
+        stages: j
+            .get("stages")
+            .and_then(Json::as_arr)
+            .map(|a| {
+                a.iter()
+                    .filter_map(Json::as_str)
+                    .map(str::to_string)
+                    .collect()
+            })
+            .unwrap_or(d.stages),
+        workflow: j.get("workflow").and_then(Json::as_bool).unwrap_or(d.workflow),
     }
 }
 
@@ -886,6 +993,42 @@ mod tests {
         assert_eq!(cfg.effective_max_starvation_ms(), 250);
         cfg.batch = Some(BatchSettings { max_starvation_ms: 100, ..BatchSettings::default() });
         assert_eq!(cfg.effective_max_starvation_ms(), 100);
+    }
+
+    #[test]
+    fn cache_block_parses_inherits_and_round_trips() {
+        let cfg = ClusterConfig::from_json_str(
+            r#"{"cache": {"ttl_ms": 5000, "salt": "wan21-v3",
+                          "stages": ["text_encoder", "vae_decode"]}}"#,
+        )
+        .unwrap();
+        let c = cfg.cache.as_ref().unwrap();
+        assert_eq!(c.ttl_ms, 5_000);
+        assert_eq!(c.salt, "wan21-v3");
+        assert_eq!(c.stages, vec!["text_encoder", "vae_decode"]);
+        // Unset fields inherit the defaults.
+        let d = CacheSettings::default();
+        assert_eq!(c.hot_capacity_bytes, d.hot_capacity_bytes);
+        assert_eq!(c.warm_capacity_bytes, d.warm_capacity_bytes);
+        assert!(c.workflow);
+        // Round-trip preserves the block.
+        let back = ClusterConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.cache, cfg.cache);
+        // Misconfigurations are rejected.
+        assert!(ClusterConfig::from_json_str(
+            r#"{"cache": {"hot_capacity_bytes": 0}}"#
+        )
+        .is_err());
+        assert!(ClusterConfig::from_json_str(
+            r#"{"cache": {"hot_capacity_bytes": 100, "warm_capacity_bytes": 50}}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn absent_cache_block_means_cache_off() {
+        assert!(ClusterConfig::i2v_default().cache.is_none());
+        assert!(ClusterConfig::from_json_str("{}").unwrap().cache.is_none());
     }
 
     #[test]

@@ -116,6 +116,22 @@ impl DbClient {
         }
     }
 
+    /// Store `uid`'s terminal result on every live replica, zero-copy
+    /// (shared refcount per replica). First-writer-wins per replica;
+    /// returns true if **any** replica accepted the write — the same
+    /// weak-consistency contract as [`DbClient::put_checkpoint`]. Used
+    /// by the proxy's cache-hit admission path, which terminates a
+    /// request by publishing the cached result directly.
+    pub fn put_shared(&self, uid: Uid, data: Arc<[u8]>) -> bool {
+        let mut stored = false;
+        for r in &self.replicas {
+            if r.alive.load(Ordering::SeqCst) {
+                stored |= r.db.put_shared(uid, data.clone());
+            }
+        }
+        stored
+    }
+
     /// Read the newest live checkpoint for `uid` across replicas (the
     /// recovery sweep's fallback read path; replicas may have diverged
     /// if one missed a later stage's write).
@@ -204,6 +220,17 @@ mod tests {
             client.fetch_entry(u),
             Some((EntryKind::DeadlineExceeded, vec![]))
         );
+    }
+
+    #[test]
+    fn put_shared_replicates_and_respects_first_writer() {
+        let (dbs, client) = setup(2);
+        let u = Uid::fresh(NodeId(0));
+        assert!(client.put_shared(u, Arc::from(b"winner".to_vec())));
+        assert!(!client.put_shared(u, Arc::from(b"loser".to_vec())));
+        for db in &dbs {
+            assert_eq!(db.fetch(u), Some(b"winner".to_vec()));
+        }
     }
 
     #[test]

@@ -15,9 +15,10 @@
 //!   fabric, the paper's deadlock-free multi-producer **double-ring
 //!   buffer** ([`ringbuf`]), the cross-set [`federation`] layer
 //!   (global load-aware routing, spill, and elastic instance donation
-//!   over N Workflow Sets), and the unified [`client`] gateway API
-//!   (typed request handles with priorities, deadlines, and cancellation
-//!   across every tier).
+//!   over N Workflow Sets), the content-addressed artifact [`cache`]
+//!   (stage-skip on repeat inputs, warm tier served by one-sided READs),
+//!   and the unified [`client`] gateway API (typed request handles with
+//!   priorities, deadlines, and cancellation across every tier).
 //! - **L2/L1 (build-time python)**: JAX stage models calling Pallas
 //!   kernels, AOT-lowered once to `artifacts/*.hlo.txt`.
 //! - **Runtime bridge**: [`runtime`] loads the HLO artifacts through the
@@ -30,6 +31,7 @@
 
 pub mod batch;
 pub mod bench;
+pub mod cache;
 pub mod client;
 pub mod config;
 pub mod db;

@@ -32,7 +32,8 @@ USAGE:
   onepiece serve [--requests N] [--steps S] [--artifacts DIR] [--sim]
       Run one Workflow Set end-to-end (PJRT stage executables unless
       --sim) and report latency/throughput.
-  onepiece federate [--sets N] [--rate R] [--duration S] [--kill-every S] --sim
+  onepiece federate [--sets N] [--rate R] [--duration S] [--kill-every S]
+                    [--config PATH] [--cache] --sim
       Run N Workflow Sets behind the global load-aware FederationRouter
       under bursty (MMPP) load with an Interactive/Standard/Batch SLO
       mix; report per-set throughput, spill count, reject rate,
@@ -42,7 +43,11 @@ USAGE:
       every S seconds; the failure detector evicts it, promotes a
       replacement, and replays stranded requests from checkpoints
       (instances_failed / requests_recovered / requests_failed are
-      reported).
+      reported). --config PATH loads a cluster config JSON as the base
+      (e.g. examples/configs/cached_i2v.json); --cache enables the
+      artifact cache with defaults. With the cache on, prompts are drawn
+      Zipf-distributed so repeats exist, and cache hit/miss/coalesce
+      counters are reported.
   onepiece plan [--entrance N]
       Print the Theorem-1 instance plan for the i2v pipeline.
   onepiece trace (--fig5 | --fig6)
@@ -177,7 +182,7 @@ fn serve(flags: &HashMap<String, String>) -> Result<()> {
 /// to act: its diffusion executor runs slower than its siblings', its
 /// utilization climbs, and the router moves idle-pool instances in.
 fn federate(flags: &HashMap<String, String>) -> Result<()> {
-    let n_sets: usize = flags.get("sets").map_or(Ok(3), |s| s.parse())?;
+    let config_path = flags.get("config").map(PathBuf::from);
     let rate: f64 = flags.get("rate").map_or(Ok(100.0), |s| s.parse())?;
     let duration_s: f64 = flags.get("duration").map_or(Ok(5.0), |s| s.parse())?;
     let kill_every_s: Option<f64> = flags.get("kill-every").map(|s| s.parse()).transpose()?;
@@ -187,44 +192,60 @@ fn federate(flags: &HashMap<String, String>) -> Result<()> {
              needs `make artifacts` plus the `pjrt` feature"
         );
     }
-    if n_sets == 0 {
-        bail!("--sets must be >= 1");
-    }
 
     // Per-set config: entrance admission capped at 25 req/s
     // (exec_ms = 40 at 1 worker), instant simulated stage compute except
-    // set 0's diffusion, which runs 30x slower than its siblings'.
+    // set 0's diffusion, which runs 30x slower than its siblings'. With
+    // --config the file's shapes are taken as-is instead.
     let app = AppId(1);
-    let base = {
-        let mut cfg = ClusterConfig::i2v_default();
-        cfg.sets = n_sets;
-        cfg.fabric = onepiece::config::FabricKind::Ideal;
-        for s in cfg.apps[0].stages.iter_mut() {
-            s.exec = ExecModel::Simulated { ms: 1.0 };
-        }
-        cfg.apps[0].stages[0].exec_ms = 40.0;
-        // This driver submits an SLO mix, so opt into the Interactive
-        // admission reserve (10% of each set's budget).
-        cfg.proxy.interactive_reserve = 0.1;
-        cfg.idle_pool = 2;
-        if let Some(secs) = kill_every_s {
-            if secs <= 0.0 {
-                bail!("--kill-every must be > 0 seconds");
+    let mut base = match &config_path {
+        Some(path) => ClusterConfig::from_file(path)
+            .with_context(|| format!("loading cluster config {}", path.display()))?,
+        None => {
+            let mut cfg = ClusterConfig::i2v_default();
+            cfg.fabric = onepiece::config::FabricKind::Ideal;
+            for s in cfg.apps[0].stages.iter_mut() {
+                s.exec = ExecModel::Simulated { ms: 1.0 };
             }
-            // Chaos mode: the housekeeper kills an assigned instance on
-            // this period; the failure detector (400 ms of heartbeat
-            // silence) evicts and repairs it.
-            cfg.chaos.kill_every_ms = (secs * 1000.0) as u64;
-            cfg.chaos.seed = 42;
-            cfg.nm.instance_timeout_ms = 400;
+            cfg.apps[0].stages[0].exec_ms = 40.0;
+            // This driver submits an SLO mix, so opt into the Interactive
+            // admission reserve (10% of each set's budget).
+            cfg.proxy.interactive_reserve = 0.1;
+            cfg.idle_pool = 2;
+            cfg
         }
-        cfg
     };
+    let n_sets: usize = match flags.get("sets") {
+        Some(s) => s.parse()?,
+        None if config_path.is_some() => base.sets.max(1),
+        None => 3,
+    };
+    if n_sets == 0 {
+        bail!("--sets must be >= 1");
+    }
+    base.sets = n_sets;
+    if flags.contains_key("cache") && base.cache.is_none() {
+        base.cache = Some(onepiece::config::CacheSettings::default());
+    }
+    if let Some(secs) = kill_every_s {
+        if secs <= 0.0 {
+            bail!("--kill-every must be > 0 seconds");
+        }
+        // Chaos mode: the housekeeper kills an assigned instance on
+        // this period; the failure detector (400 ms of heartbeat
+        // silence) evicts and repairs it.
+        base.chaos.kill_every_ms = (secs * 1000.0) as u64;
+        base.chaos.seed = 42;
+        base.nm.instance_timeout_ms = 400;
+    }
+    let cache_on = base.cache.is_some();
     let sets: Vec<WorkflowSet> = (0..n_sets)
         .map(|i| {
             let mut cfg = base.clone();
-            let diffusion_ms = if i == 0 { 60.0 } else { 2.0 };
-            cfg.apps[0].stages[2].exec = ExecModel::Simulated { ms: diffusion_ms };
+            if config_path.is_none() {
+                let diffusion_ms = if i == 0 { 60.0 } else { 2.0 };
+                cfg.apps[0].stages[2].exec = ExecModel::Simulated { ms: diffusion_ms };
+            }
             let counts = vec![WorkflowSet::theorem1_counts(&cfg.apps[0], 1)];
             WorkflowSet::build_standalone(
                 cfg,
@@ -289,7 +310,11 @@ fn federate(flags: &HashMap<String, String>) -> Result<()> {
         SubmitOptions::default().with_retry(retry),
         SubmitOptions::batch().with_retry(retry),
     ];
-    let payload = Payload::Bytes(vec![7u8; 64]);
+    // With the cache on, prompts are drawn Zipf-distributed over 16
+    // distinct values — repeats are what the cache exploits. Uncached
+    // runs keep the original constant payload.
+    let zipf = onepiece::sim::Zipf::new(16, 1.0);
+    let mut prompt_rng = onepiece::util::Rng::new(7);
     let t0 = Instant::now();
     let mut pending: Vec<(RequestHandle, Instant)> = Vec::new();
     let mut per_set_done = vec![0usize; n_sets];
@@ -313,7 +338,12 @@ fn federate(flags: &HashMap<String, String>) -> Result<()> {
             }
             next_rebalance += 0.25;
         }
-        if let Ok(handle) = fed.submit_with(app, payload.clone(), slo_mix[i % 3]) {
+        let payload = if cache_on {
+            Payload::Bytes(vec![zipf.sample(&mut prompt_rng) as u8; 64])
+        } else {
+            Payload::Bytes(vec![7u8; 64])
+        };
+        if let Ok(handle) = fed.submit_with(app, payload, slo_mix[i % 3]) {
             admitted_total += 1;
             pending.push((handle, Instant::now()));
         }
@@ -387,6 +417,25 @@ fn federate(flags: &HashMap<String, String>) -> Result<()> {
         set_get("requests_cancelled"),
         set_get("deadline_missed"),
     );
+    if cache_on {
+        let prefix_sum = |prefix: &str| -> u64 {
+            set_totals
+                .iter()
+                .filter(|(k, _)| k.starts_with(prefix))
+                .map(|(_, v)| *v)
+                .sum()
+        };
+        println!(
+            "cache: hits {} | misses {} | coalesced {} | evictions {} | \
+             bytes_saved {} | warm_reads {}",
+            prefix_sum("cache_hits."),
+            prefix_sum("cache_misses."),
+            set_get("cache_coalesced_total"),
+            set_get("cache_evictions_total"),
+            set_get("cache_bytes_saved_total"),
+            set_get("cache_warm_reads_total"),
+        );
+    }
     if kill_every_s.is_some() {
         println!(
             "chaos: kills {} | instances_failed {} | instances_replaced {} | \

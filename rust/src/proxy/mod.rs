@@ -94,6 +94,10 @@ pub struct Proxy {
     /// (`rdma.rendezvous_threshold_bytes`; 0 = eager only). Atomic so
     /// the set can configure it after build without exclusive access.
     rendezvous_threshold: std::sync::atomic::AtomicUsize,
+    /// Full-workflow artifact cache (set once after build, like the
+    /// rendezvous threshold). A hit at admission publishes the cached
+    /// terminal result directly and never enters the pipeline.
+    cache: std::sync::OnceLock<Arc<crate::cache::ArtifactCache>>,
 }
 
 impl Proxy {
@@ -130,7 +134,13 @@ impl Proxy {
             rejected: counters("rejected"),
             checkpointing,
             rendezvous_threshold: std::sync::atomic::AtomicUsize::new(0),
+            cache: std::sync::OnceLock::new(),
         }
+    }
+
+    /// Attach the set's artifact cache (build-time wiring, set once).
+    pub fn set_cache(&self, cache: Arc<crate::cache::ArtifactCache>) {
+        let _ = self.cache.set(cache);
     }
 
     /// Set the eager/rendezvous cutover on current and future entrance
@@ -171,6 +181,30 @@ impl Proxy {
         payload: Payload,
         opts: &SubmitOptions,
     ) -> Result<Uid, (SubmitError, Payload)> {
+        // Full-workflow cache check first: a hit terminates the request
+        // here — it consumes no admission budget and never enters the
+        // pipeline, so it is served even when the set is overloaded.
+        let workflow_key = self
+            .cache
+            .get()
+            .filter(|c| c.workflow_enabled())
+            .map(|c| (c, c.key_for(app, crate::cache::WORKFLOW_STAGE, &payload)));
+        if let Some((cache, key)) = &workflow_key {
+            if let Some(bytes) = cache.lookup(crate::cache::WORKFLOW_STAGE, *key) {
+                if let Ok(mut msg) = WorkflowMessage::decode(&bytes) {
+                    let uid = Uid::fresh(self.node);
+                    self.tracker.register_with(uid, opts);
+                    // Cached bytes carry the *original* request's header;
+                    // re-stamp identity so the stored result belongs to
+                    // this admission (payload bytes are shared verbatim).
+                    msg.header.uid = uid;
+                    msg.header.ts_ns = now_ns() as u64;
+                    self.db.put_shared(uid, msg.encode().into());
+                    self.accepted[opts.priority.index()].inc();
+                    return Ok(uid);
+                }
+            }
+        }
         let capacity = self.capacity_rps(app);
         if capacity <= 0.0 {
             self.rejected[opts.priority.index()].inc();
@@ -218,6 +252,12 @@ impl Proxy {
             return Err((SubmitError::NoCapacity, msg.payload));
         }
         self.accepted[opts.priority.index()].inc();
+        // Remember the admitted request's workflow key: when its terminal
+        // result is stored, the deliver path fills the workflow tier so
+        // the *next* identical submission hits at admission.
+        if let Some((cache, key)) = workflow_key {
+            cache.note_workflow_key(uid, key);
+        }
         Ok(uid)
     }
 
@@ -493,6 +533,59 @@ mod tests {
         // Sanity: load is arrival/capacity elsewhere.
         let half = AdmissionSnapshot { capacity_rps: 100.0, arrival_rps: 50.0, ..idle };
         assert!((half.load() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn workflow_cache_hit_terminates_at_admission() {
+        use crate::config::CacheSettings;
+        let clock = ManualClock::new();
+        clock.set(1);
+        let fabric = Fabric::ideal();
+        let nm = Arc::new(NodeManager::new(ClusterConfig::i2v_default().apps, 0.85));
+        let mut ep = RdmaEndpoint::new(&fabric, RingConfig::default());
+        nm.register_instance(NodeId(10), ep.region_id());
+        nm.assign(NodeId(10), Some(StageKey { app: AppId(1), stage: 0 }));
+        let mem = Arc::new(MemDb::new(Arc::new(clock.clone()), u64::MAX));
+        let db = Arc::new(DbClient::new(vec![mem.clone()]));
+        let proxy = mk_proxy(&clock, fabric.clone(), nm.clone(), db, settings());
+        let cache = Arc::new(crate::cache::ArtifactCache::new(
+            fabric,
+            Arc::new(clock.clone()),
+            &CacheSettings::default(),
+            &Registry::new(),
+        ));
+        proxy.set_cache(cache.clone());
+        // First submission misses and is forwarded into the pipeline.
+        clock.advance(1_000_000);
+        let uid1 = submit(&proxy, Payload::Bytes(b"prompt".to_vec())).unwrap();
+        assert!(ep.recv().is_some(), "miss enters the pipeline");
+        // The pipeline finishes: the terminal store fills the workflow
+        // tier (ResultDeliver calls this in production).
+        let terminal = WorkflowMessage {
+            header: MessageHeader {
+                uid: uid1,
+                ts_ns: 9,
+                app: AppId(1),
+                stage: StageId(3),
+                origin: NodeId(1),
+            },
+            payload: Payload::Bytes(b"video".to_vec()),
+        };
+        assert!(cache.complete_workflow(uid1, &terminal.encode().into()));
+        // Identical resubmission: served at admission under a fresh uid,
+        // byte-identical payload, nothing forwarded.
+        clock.advance(1_000_000);
+        let uid2 = submit(&proxy, Payload::Bytes(b"prompt".to_vec())).unwrap();
+        assert_ne!(uid1, uid2);
+        assert!(ep.recv().is_none(), "hit never enters the pipeline");
+        let stored = WorkflowMessage::decode(&mem.fetch(uid2).unwrap()).unwrap();
+        assert_eq!(stored.header.uid, uid2, "identity re-stamped per admission");
+        assert_eq!(stored.payload, Payload::Bytes(b"video".to_vec()));
+        // A different prompt still misses.
+        clock.advance(1_000_000);
+        let uid3 = submit(&proxy, Payload::Bytes(b"other".to_vec())).unwrap();
+        assert!(ep.recv().is_some());
+        assert!(mem.fetch(uid3).is_none());
     }
 
     #[test]

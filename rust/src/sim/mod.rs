@@ -14,7 +14,7 @@ pub use resources::{
     simulate_disaggregated, simulate_monolithic, wan_stages, FleetOutcome,
     ResourceSimConfig,
 };
-pub use workload::ArrivalProcess;
+pub use workload::{ArrivalProcess, Zipf};
 
 /// Empirical percentile of an ascending-sorted sample (shared by the
 /// fleet and federation models and the CLI reporters). `p` in [0, 1];

@@ -133,9 +133,84 @@ impl ArrivalProcess {
     }
 }
 
+/// Zipf-distributed popularity ranks (`P(k) ∝ 1/k^s` over `n` ranks) —
+/// the request-content model behind cache experiments: AIGC prompt
+/// streams are heavily repeated, and the skew `s` controls how much.
+/// `s = 0` degenerates to uniform (no repetition benefit).
+#[derive(Debug, Clone)]
+pub struct Zipf {
+    /// Cumulative probability per rank (ascending, last = 1.0).
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    /// Build the distribution over ranks `0..n` with skew `s`.
+    pub fn new(n: usize, s: f64) -> Self {
+        assert!(n > 0, "Zipf needs at least one rank");
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for k in 1..=n {
+            acc += 1.0 / (k as f64).powf(s);
+            cdf.push(acc);
+        }
+        let total = acc;
+        for c in &mut cdf {
+            *c /= total;
+        }
+        Self { cdf }
+    }
+
+    /// Sample a rank in `0..n`.
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let u = rng.f64();
+        self.cdf.partition_point(|&c| c < u).min(self.cdf.len() - 1)
+    }
+
+    /// Number of ranks.
+    pub fn n(&self) -> usize {
+        self.cdf.len()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn zipf_skew_concentrates_on_low_ranks() {
+        let z = Zipf::new(100, 1.0);
+        let mut rng = Rng::new(42);
+        let mut counts = vec![0usize; 100];
+        for _ in 0..20_000 {
+            counts[z.sample(&mut rng)] += 1;
+        }
+        // Harmonic weights: rank 0 carries 1/H(100) ≈ 19% of the mass.
+        assert!(counts[0] > counts[10] * 5, "rank0={} rank10={}", counts[0], counts[10]);
+        assert!(counts[0] > 2_500 && counts[0] < 5_500, "rank0={}", counts[0]);
+    }
+
+    #[test]
+    fn zipf_zero_skew_is_uniform() {
+        let z = Zipf::new(10, 0.0);
+        let mut rng = Rng::new(7);
+        let mut counts = vec![0usize; 10];
+        for _ in 0..50_000 {
+            counts[z.sample(&mut rng)] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 - 5_000.0).abs() < 600.0, "counts={counts:?}");
+        }
+    }
+
+    #[test]
+    fn zipf_samples_stay_in_range() {
+        let z = Zipf::new(3, 2.0);
+        assert_eq!(z.n(), 3);
+        let mut rng = Rng::new(1);
+        for _ in 0..1_000 {
+            assert!(z.sample(&mut rng) < 3);
+        }
+    }
 
     #[test]
     fn poisson_rate_matches() {

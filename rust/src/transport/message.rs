@@ -56,6 +56,30 @@ impl Payload {
                 .sum(),
         }
     }
+
+    /// Canonical deterministic encoding: the message wire format minus
+    /// the header (tag byte + little-endian fields). Equal payloads
+    /// encode to equal bytes, which is what makes this usable both as
+    /// the canonicalized input of cache-key derivation and as the
+    /// stored form of cached stage outputs (header `uid`/`ts_ns` vary
+    /// per request and must never reach a content hash).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut buf = Vec::with_capacity(1 + self.wire_size());
+        self.encode_into(&mut buf);
+        buf
+    }
+
+    /// Append the canonical encoding to `buf`.
+    pub fn encode_into(&self, buf: &mut Vec<u8>) {
+        let mut w = BufWriter::new(buf);
+        write_payload(self, &mut w);
+    }
+
+    /// Decode a payload written by [`Payload::encode`].
+    pub fn decode(buf: &[u8]) -> Result<Self, CodecError> {
+        let mut r = BufReader::new(buf);
+        read_payload(&mut r)
+    }
 }
 
 /// A complete workflow message.
@@ -69,6 +93,65 @@ const TAG_BYTES: u8 = 0;
 const TAG_TENSOR: u8 = 1;
 const TAG_TENSORS: u8 = 2;
 
+fn write_payload(p: &Payload, w: &mut BufWriter) {
+    match p {
+        Payload::Bytes(b) => {
+            w.put_u8(TAG_BYTES);
+            w.put_bytes(b);
+        }
+        Payload::Tensor { shape, data } => {
+            w.put_u8(TAG_TENSOR);
+            w.put_u32(shape.len() as u32);
+            for &d in shape {
+                w.put_u32(d);
+            }
+            w.put_f32s(data);
+        }
+        Payload::Tensors(ts) => {
+            w.put_u8(TAG_TENSORS);
+            w.put_u32(ts.len() as u32);
+            for (name, shape, data) in ts {
+                w.put_bytes(name.as_bytes());
+                w.put_u32(shape.len() as u32);
+                for &d in shape {
+                    w.put_u32(d);
+                }
+                w.put_f32s(data);
+            }
+        }
+    }
+}
+
+fn read_payload(r: &mut BufReader) -> Result<Payload, CodecError> {
+    Ok(match r.get_u8()? {
+        TAG_BYTES => Payload::Bytes(r.get_bytes()?.to_vec()),
+        TAG_TENSOR => {
+            let rank = r.get_u32()? as usize;
+            let mut shape = Vec::with_capacity(rank);
+            for _ in 0..rank {
+                shape.push(r.get_u32()?);
+            }
+            Payload::Tensor { shape, data: r.get_f32s()? }
+        }
+        TAG_TENSORS => {
+            let n = r.get_u32()? as usize;
+            let mut ts = Vec::with_capacity(n);
+            for _ in 0..n {
+                let name = String::from_utf8(r.get_bytes()?.to_vec())
+                    .map_err(|_| CodecError("bad tensor name"))?;
+                let rank = r.get_u32()? as usize;
+                let mut shape = Vec::with_capacity(rank);
+                for _ in 0..rank {
+                    shape.push(r.get_u32()?);
+                }
+                ts.push((name, shape, r.get_f32s()?));
+            }
+            Payload::Tensors(ts)
+        }
+        _ => return Err(CodecError("unknown payload tag")),
+    })
+}
+
 impl WorkflowMessage {
     /// Serialize into `buf` (appending; caller may reuse the allocation).
     pub fn encode_into(&self, buf: &mut Vec<u8>) {
@@ -78,32 +161,7 @@ impl WorkflowMessage {
         w.put_u32(self.header.app.0);
         w.put_u32(self.header.stage.0);
         w.put_u32(self.header.origin.0);
-        match &self.payload {
-            Payload::Bytes(b) => {
-                w.put_u8(TAG_BYTES);
-                w.put_bytes(b);
-            }
-            Payload::Tensor { shape, data } => {
-                w.put_u8(TAG_TENSOR);
-                w.put_u32(shape.len() as u32);
-                for &d in shape {
-                    w.put_u32(d);
-                }
-                w.put_f32s(data);
-            }
-            Payload::Tensors(ts) => {
-                w.put_u8(TAG_TENSORS);
-                w.put_u32(ts.len() as u32);
-                for (name, shape, data) in ts {
-                    w.put_bytes(name.as_bytes());
-                    w.put_u32(shape.len() as u32);
-                    for &d in shape {
-                        w.put_u32(d);
-                    }
-                    w.put_f32s(data);
-                }
-            }
-        }
+        write_payload(&self.payload, &mut w);
     }
 
     /// Serialize to a fresh buffer.
@@ -123,33 +181,7 @@ impl WorkflowMessage {
             stage: StageId(r.get_u32()?),
             origin: NodeId(r.get_u32()?),
         };
-        let payload = match r.get_u8()? {
-            TAG_BYTES => Payload::Bytes(r.get_bytes()?.to_vec()),
-            TAG_TENSOR => {
-                let rank = r.get_u32()? as usize;
-                let mut shape = Vec::with_capacity(rank);
-                for _ in 0..rank {
-                    shape.push(r.get_u32()?);
-                }
-                Payload::Tensor { shape, data: r.get_f32s()? }
-            }
-            TAG_TENSORS => {
-                let n = r.get_u32()? as usize;
-                let mut ts = Vec::with_capacity(n);
-                for _ in 0..n {
-                    let name = String::from_utf8(r.get_bytes()?.to_vec())
-                        .map_err(|_| CodecError("bad tensor name"))?;
-                    let rank = r.get_u32()? as usize;
-                    let mut shape = Vec::with_capacity(rank);
-                    for _ in 0..rank {
-                        shape.push(r.get_u32()?);
-                    }
-                    ts.push((name, shape, r.get_f32s()?));
-                }
-                Payload::Tensors(ts)
-            }
-            _ => return Err(CodecError("unknown payload tag")),
-        };
+        let payload = read_payload(&mut r)?;
         Ok(Self { header, payload })
     }
 }
@@ -222,6 +254,24 @@ mod tests {
         let mut enc = m.encode();
         enc[16 + 8 + 4 + 4 + 4] = 99; // payload tag byte
         assert!(WorkflowMessage::decode(&enc).is_err());
+    }
+
+    #[test]
+    fn payload_codec_is_canonical_and_header_free() {
+        let p = Payload::Tensors(vec![("x".into(), vec![2], vec![1.0, 2.0])]);
+        let enc = p.encode();
+        assert_eq!(Payload::decode(&enc).unwrap(), p);
+        // The payload encoding is exactly the message wire format minus
+        // the 36-byte header, and identical payloads under different
+        // headers encode identically — the property cache-key
+        // derivation and cached-output storage rely on.
+        let a = WorkflowMessage { header: header(), payload: p.clone() };
+        let mut h2 = header();
+        h2.uid = Uid(999);
+        h2.ts_ns = 1;
+        let b = WorkflowMessage { header: h2, payload: p };
+        assert_eq!(&a.encode()[36..], enc.as_slice());
+        assert_eq!(&b.encode()[36..], enc.as_slice());
     }
 
     #[test]

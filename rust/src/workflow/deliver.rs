@@ -61,6 +61,9 @@ pub struct ResultDeliver {
     /// Eager/rendezvous cutover applied to every sender
     /// (`rdma.rendezvous_threshold_bytes`; 0 = eager only).
     rendezvous_threshold: usize,
+    /// Artifact cache to seed with full-workflow terminals (None when the
+    /// deployment has no `cache` block — the store path is unchanged).
+    cache: Option<Arc<crate::cache::ArtifactCache>>,
     delivered: u64,
     dropped: u64,
 }
@@ -76,9 +79,17 @@ impl ResultDeliver {
             checkpointing: false,
             metrics: None,
             rendezvous_threshold: 0,
+            cache: None,
             delivered: 0,
             dropped: 0,
         }
+    }
+
+    /// Attach the set's artifact cache: terminal stores will seed its
+    /// full-workflow tier (the bytes are already shared for replication,
+    /// so the seed is a refcount, not a copy).
+    pub fn set_cache(&mut self, cache: Arc<crate::cache::ArtifactCache>) {
+        self.cache = Some(cache);
     }
 
     /// Enable/disable per-hop recovery checkpoints (the wset wires this
@@ -321,6 +332,14 @@ impl ResultDeliver {
             m.payload_bytes_copied.add(bytes.len() as u64);
         }
         let shared: Arc<[u8]> = bytes.into();
+        if let Some(c) = &self.cache {
+            // Seed the full-workflow admission tier. The cache looked the
+            // key up at admission and only *noted* misses, so a request
+            // that was cancelled or deadline-dropped upstream never gets
+            // here and can never poison the cache; fills are
+            // first-writer-wins like the replica writes below.
+            c.complete_workflow(uid, &shared);
+        }
         for db in &self.dbs {
             db.put_shared(uid, shared.clone());
         }

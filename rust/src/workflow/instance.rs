@@ -23,6 +23,7 @@
 
 use super::{Assignment, ControlPlane, Delivery, ResultDeliver, SchedQueue, StageRole};
 use crate::batch::{BatchAssembler, MicroBatch};
+use crate::cache::{ArtifactCache, Flight};
 use crate::client::{InFlightVerdict, RequestTracker};
 use crate::config::SchedMode;
 use crate::db::{EntryKind, MemDb};
@@ -30,7 +31,7 @@ use crate::metrics::{Counter, Histogram, UtilizationWindow};
 use crate::rdma::{Fabric, RegionId};
 use crate::ringbuf::RingConfig;
 use crate::runtime::{ExecutorPool, StageExecutor};
-use crate::transport::{RdmaEndpoint, StageId, WorkflowMessage};
+use crate::transport::{Payload, RdmaEndpoint, StageId, WorkflowMessage};
 use crate::util::{Clock, NodeId, Uid};
 use crate::workflow::AppLogic;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -60,6 +61,12 @@ pub struct InstanceConfig {
     /// Eager/rendezvous cutover for downstream deliveries
     /// (`rdma.rendezvous_threshold_bytes`; 0 = eager only).
     pub rendezvous_threshold: usize,
+    /// The set's artifact cache: workers consult it before
+    /// `execute`/`execute_batch` on enabled stages (hit → skip
+    /// execution, forward the cached output through the normal delivery
+    /// path). None (the default, and whenever the deployment has no
+    /// `cache` config block) keeps the execute loop byte-identical.
+    pub cache: Option<Arc<ArtifactCache>>,
 }
 
 impl Default for InstanceConfig {
@@ -73,6 +80,7 @@ impl Default for InstanceConfig {
             checkpointing: false,
             max_starvation: Duration::ZERO,
             rendezvous_threshold: 0,
+            cache: None,
         }
     }
 }
@@ -130,6 +138,9 @@ struct Shared {
     /// the data plane cannot progress are handed to it for checkpoint
     /// replay instead of being failed outright.
     recovery_enabled: bool,
+    /// Per-stage artifact cache (None = cache off, execute loop
+    /// unchanged).
+    cache: Option<Arc<ArtifactCache>>,
     shutdown: AtomicBool,
     /// Crash injection (chaos testing): when set, every thread goes
     /// dormant — no heartbeats, no ring drains, no stage work — exactly
@@ -243,6 +254,10 @@ impl Instance {
         let ring_metrics = crate::transport::RingMetrics::from_registry(&metrics);
         endpoint.set_metrics(ring_metrics.clone());
         rd.set_metrics(ring_metrics);
+        if let Some(c) = &cfg.cache {
+            // Terminal stores seed the workflow-level admission tier.
+            rd.set_cache(c.clone());
+        }
         let shared = Arc::new(Shared {
             node: cfg.node,
             queue: queue.clone(),
@@ -259,6 +274,7 @@ impl Instance {
             batch_bypass: metrics.counter("batch_bypass"),
             parked: Mutex::new(std::collections::HashMap::new()),
             recovery_enabled: cfg.checkpointing,
+            cache: cfg.cache,
             shutdown: AtomicBool::new(false),
             crashed: Arc::new(AtomicBool::new(false)),
             processed: AtomicU64::new(0),
@@ -588,12 +604,34 @@ impl Instance {
             for m in &members {
                 shared.tracker.note_stage(m.header.uid, role.stage_index);
             }
-            shared.util.busy();
-            let results = logic.execute_batch(&role.stage_name, &exec, &members);
-            // Utilization is weighted per *request*, not per invocation:
-            // an amortized batch must report the demand it absorbed or
-            // the NM under-estimates load on batching stages.
-            shared.util.idle_n(members.len() as u32);
+            // Per-stage artifact cache, lead worker only (in CM every
+            // rank holds a broadcast copy; the cached output IS the
+            // aggregated result, so rank 0 — the one that delivers — is
+            // the one whose execution a hit may skip; sibling ranks run
+            // unchanged and their outputs are discarded as always).
+            let cache = if lead {
+                shared
+                    .cache
+                    .as_ref()
+                    .filter(|c| c.stage_enabled(&role.stage_name))
+            } else {
+                None
+            };
+            let results = match cache {
+                Some(cache) => Self::execute_with_cache(
+                    shared, logic, &exec, &role, cache, &members,
+                ),
+                None => {
+                    shared.util.busy();
+                    let r = logic.execute_batch(&role.stage_name, &exec, &members);
+                    // Utilization is weighted per *request*, not per
+                    // invocation: an amortized batch must report the
+                    // demand it absorbed or the NM under-estimates load
+                    // on batching stages.
+                    shared.util.idle_n(members.len() as u32);
+                    r
+                }
+            };
             // A crash that fired mid-execution kills the output too — a
             // dead process delivers nothing.
             if shared.crashed.load(Ordering::SeqCst) {
@@ -673,6 +711,166 @@ impl Instance {
                 }
             }
         }
+    }
+
+    /// How long a single-flight follower waits for its leader before
+    /// falling back to computing the stage itself. Generous relative to
+    /// any stage cost; coalescing is an optimization, never a liveness
+    /// dependency.
+    const FLIGHT_WAIT: Duration = Duration::from_secs(10);
+
+    /// Batch execution through the artifact cache:
+    ///
+    /// 1. **Lookup** per member — a hit skips execution entirely and the
+    ///    cached bytes decode into this member's result.
+    /// 2. **Coalesce** — identical keys inside the batch execute once
+    ///    (later members copy the first's result); identical misses
+    ///    racing across workers join the first worker's single-flight.
+    /// 3. **Execute** only the remaining leaders through the normal
+    ///    `execute_batch` path (utilization accounting unchanged for the
+    ///    executed subset; hits report no busy time — no GPU was spent).
+    /// 4. **Fill + publish**: each leader's successful output is encoded
+    ///    once; the cache fill (first-writer-wins, skipped when the
+    ///    request was cancelled or expired mid-execution so a doomed
+    ///    request never poisons the cache) and the follower wake share
+    ///    that buffer. Errors abandon the flight — followers recompute.
+    ///
+    /// Leaders always complete (or abandon) their own flights **before**
+    /// any follower wait begins, so two workers cross-following each
+    /// other's keys cannot deadlock.
+    ///
+    /// Returns one result per member, in order, like `execute_batch`.
+    fn execute_with_cache(
+        shared: &Arc<Shared>,
+        logic: &dyn AppLogic,
+        exec: &StageExecutor,
+        role: &StageRole,
+        cache: &Arc<ArtifactCache>,
+        members: &[WorkflowMessage],
+    ) -> Vec<anyhow::Result<Payload>> {
+        enum Slot {
+            /// Cache hit, already decoded.
+            Ready(Payload),
+            /// Executes in this invocation (leader or uncoalesced miss).
+            Exec,
+            /// Same key as an earlier member: copy its result.
+            Dup(usize),
+            /// Another worker is computing this key: wait on its flight.
+            Follow(crate::cache::FlightWait),
+        }
+        let n = members.len();
+        let mut keys = Vec::with_capacity(n);
+        let mut slots: Vec<Slot> = Vec::with_capacity(n);
+        let mut guards: Vec<Option<crate::cache::FlightGuard>> =
+            (0..n).map(|_| None).collect();
+        let mut first_by_key: std::collections::HashMap<u128, usize> =
+            std::collections::HashMap::new();
+        for (i, m) in members.iter().enumerate() {
+            let key = cache.key_for(m.header.app, &role.stage_name, &m.payload);
+            keys.push(key);
+            if let Some(bytes) = cache.lookup(&role.stage_name, key) {
+                if let Ok(p) = Payload::decode(&bytes) {
+                    slots.push(Slot::Ready(p));
+                    continue;
+                }
+                // Undecodable cached bytes (should not happen — entries
+                // are validated encodings): recompute rather than fail.
+            }
+            if let Some(&j) = first_by_key.get(&key.0) {
+                slots.push(Slot::Dup(j));
+                continue;
+            }
+            first_by_key.insert(key.0, i);
+            match cache.begin_flight(key) {
+                Flight::Leader(g) => {
+                    guards[i] = Some(g);
+                    slots.push(Slot::Exec);
+                }
+                Flight::Follower(w) => slots.push(Slot::Follow(w)),
+            }
+        }
+
+        // Execute the leaders as one (sub-)batch.
+        let exec_idx: Vec<usize> = slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| matches!(s, Slot::Exec))
+            .map(|(i, _)| i)
+            .collect();
+        let exec_results = if exec_idx.is_empty() {
+            Vec::new()
+        } else {
+            let subset: Vec<WorkflowMessage> =
+                exec_idx.iter().map(|&i| members[i].clone()).collect();
+            shared.util.busy();
+            let r = logic.execute_batch(&role.stage_name, exec, &subset);
+            shared.util.idle_n(subset.len() as u32);
+            r
+        };
+
+        // Fill + publish each leader's output, then place its result.
+        let mut results: Vec<Option<anyhow::Result<Payload>>> =
+            (0..n).map(|_| None).collect();
+        let mut it = exec_results.into_iter();
+        for &i in &exec_idx {
+            let res = it.next().unwrap_or_else(|| {
+                Err(anyhow::anyhow!("stage logic returned no result for batch member"))
+            });
+            let guard = guards[i].take();
+            if let Ok(payload) = &res {
+                let bytes: Arc<[u8]> = payload.encode().into();
+                if shared.tracker.verdict(members[i].header.uid)
+                    == InFlightVerdict::Proceed
+                {
+                    cache.fill(keys[i], &bytes);
+                }
+                if let Some(g) = guard {
+                    g.complete(bytes);
+                }
+            }
+            // Err: `guard` drops here un-completed → flight abandoned,
+            // followers wake and compute for themselves.
+            results[i] = Some(res);
+        }
+
+        // Resolve hits, intra-batch duplicates, and cross-worker follows
+        // (dup targets always precede their copies, so `results[j]` is
+        // resolved by the time `Dup(j)` is reached).
+        for (i, slot) in slots.into_iter().enumerate() {
+            match slot {
+                Slot::Exec => {}
+                Slot::Ready(p) => results[i] = Some(Ok(p)),
+                Slot::Dup(j) => {
+                    results[i] = Some(match &results[j] {
+                        Some(Ok(p)) => Ok(p.clone()),
+                        _ => Err(anyhow::anyhow!(
+                            "coalesced batch member's leader failed"
+                        )),
+                    });
+                }
+                Slot::Follow(w) => {
+                    let fetched = w
+                        .wait(Self::FLIGHT_WAIT)
+                        .and_then(|bytes| Payload::decode(&bytes).ok());
+                    results[i] = Some(match fetched {
+                        Some(p) => Ok(p),
+                        None => {
+                            // Leader failed / timed out: compute it
+                            // ourselves — coalescing must never turn
+                            // into a correctness dependency.
+                            shared.util.busy();
+                            let r = logic.execute(&role.stage_name, exec, &members[i]);
+                            shared.util.idle_n(1);
+                            r
+                        }
+                    });
+                }
+            }
+        }
+        results
+            .into_iter()
+            .map(|r| r.expect("every batch member resolved"))
+            .collect()
     }
 
     /// The instance's inbox ring region (senders route here).
@@ -931,6 +1129,88 @@ mod tests {
             2_000,
             "static-window stages report their cap, never 0"
         );
+        inst.shutdown();
+    }
+
+    #[test]
+    fn cache_enabled_instance_executes_identical_inputs_once() {
+        use crate::config::CacheSettings;
+        /// Echo that counts stage executions (the thing a cache hit must
+        /// skip).
+        struct CountingEcho(Arc<AtomicU64>);
+        impl AppLogic for CountingEcho {
+            fn execute(
+                &self,
+                _s: &str,
+                exec: &StageExecutor,
+                msg: &WorkflowMessage,
+            ) -> anyhow::Result<Payload> {
+                self.0.fetch_add(1, Ordering::SeqCst);
+                exec.run(&[])?;
+                Ok(msg.payload.clone())
+            }
+        }
+        let fabric = Fabric::ideal();
+        let clock: Arc<dyn Clock> = Arc::new(SystemClock);
+        let db = Arc::new(MemDb::new(clock.clone(), u64::MAX));
+        let tracker = mk_tracker(&clock);
+        let reg = tracker.metrics().clone();
+        let cache = Arc::new(crate::cache::ArtifactCache::new(
+            fabric.clone(),
+            clock.clone(),
+            &CacheSettings::default(),
+            &reg,
+        ));
+        let mut pool = ExecutorPool::new();
+        pool.insert("echo", StageExecutor::Simulated { busy: Duration::from_micros(200) });
+        let executions = Arc::new(AtomicU64::new(0));
+        let inst = Instance::spawn(
+            InstanceConfig {
+                node: NodeId(6),
+                cache: Some(cache),
+                ..Default::default()
+            },
+            &fabric,
+            Arc::new(FixedControl(echo_assignment())),
+            Arc::new(CountingEcho(executions.clone())),
+            pool,
+            vec![db.clone()],
+            tracker,
+            clock,
+        );
+        std::thread::sleep(Duration::from_millis(50));
+        let mut tx = crate::transport::RdmaEndpoint::sender_for(&fabric, inst.region_id());
+        let send = |tx: &mut crate::transport::RdmaSender, uid: u32| {
+            let mut m = mk_msg(uid, 0);
+            m.payload = Payload::Bytes(b"same prompt".to_vec()); // identical input
+            assert!(tx.send(&m));
+        };
+        // First request misses and executes; wait for its result so the
+        // fill definitely lands before the repeats arrive.
+        send(&mut tx, 1);
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while db.len() < 1 && std::time::Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        send(&mut tx, 2);
+        send(&mut tx, 3);
+        while db.len() < 3 && std::time::Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(db.len(), 3, "every request still gets its own result");
+        assert_eq!(
+            executions.load(Ordering::SeqCst),
+            1,
+            "repeat inputs are served from the cache, not recomputed"
+        );
+        assert_eq!(reg.counter("cache_hits.echo").get(), 2);
+        assert_eq!(reg.counter("cache_misses.echo").get(), 1);
+        // Each hit's stored result is byte-identical in payload but keeps
+        // its own uid (headers are per-request, outside the cached bytes).
+        let a = WorkflowMessage::decode(&db.fetch(Uid(1)).unwrap()).unwrap();
+        let b = WorkflowMessage::decode(&db.fetch(Uid(2)).unwrap()).unwrap();
+        assert_eq!(a.payload, b.payload);
+        assert_eq!(b.header.uid, Uid(2));
         inst.shutdown();
     }
 

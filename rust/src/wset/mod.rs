@@ -71,6 +71,9 @@ pub struct WorkflowSet {
     logic: Arc<dyn AppLogic>,
     tracker: Arc<RequestTracker>,
     metrics: Registry,
+    /// Set-wide artifact cache (`cache` config block; `None` = off and
+    /// the whole data path is byte-identical to an uncached build).
+    cache: Option<Arc<crate::cache::ArtifactCache>>,
     housekeeper: Option<std::thread::JoinHandle<()>>,
     hk_stop: Arc<std::sync::atomic::AtomicBool>,
     /// Crash switches per instance, shared with the housekeeper's chaos
@@ -135,6 +138,18 @@ impl WorkflowSet {
         let metrics = Registry::new();
         let tracker = Arc::new(RequestTracker::new(clock.clone(), metrics.clone()));
 
+        // Content-addressed artifact cache: built only when the config
+        // has a `cache` block; shared by the proxy (workflow tier), every
+        // instance (per-stage tier) and the housekeeper (TTL sweep).
+        let cache = config.cache.as_ref().map(|cs| {
+            Arc::new(crate::cache::ArtifactCache::new(
+                fabric.clone(),
+                clock.clone(),
+                cs,
+                &metrics,
+            ))
+        });
+
         let ring = RingConfig {
             nslots: config.ring.nslots,
             cap_bytes: config.ring.cap_bytes,
@@ -170,6 +185,7 @@ impl WorkflowSet {
             logic: logic.clone(),
             tracker: tracker.clone(),
             metrics,
+            cache: cache.clone(),
             housekeeper: None,
             hk_stop: hk_stop.clone(),
             crash_handles: crash_handles.clone(),
@@ -177,6 +193,9 @@ impl WorkflowSet {
         };
         set.proxy
             .set_rendezvous_threshold(config.rdma.rendezvous_threshold_bytes);
+        if let Some(c) = &cache {
+            set.proxy.set_cache(c.clone());
+        }
 
         // Spawn instances: assigned stages first, then the idle pool.
         for (ai, app) in config.apps.iter().enumerate() {
@@ -216,6 +235,7 @@ impl WorkflowSet {
         recovery.set_rendezvous_threshold(config.rdma.rendezvous_threshold_bytes);
         let chaos_kills = set.metrics.counter("chaos_kills");
         let hk_handles = crash_handles.clone();
+        let hk_cache = cache;
         set.housekeeper = Some(std::thread::spawn(move || {
             let mut last_sweep = std::time::Instant::now();
             let mut last_kill = std::time::Instant::now();
@@ -257,6 +277,9 @@ impl WorkflowSet {
                     for db in &dbs {
                         db.purge_expired();
                     }
+                    if let Some(c) = &hk_cache {
+                        c.purge_expired();
+                    }
                     tracker.purge_older_than(tracker_ttl_ns);
                     last_sweep = std::time::Instant::now();
                 }
@@ -294,6 +317,7 @@ impl WorkflowSet {
                     self.config.effective_max_starvation_ms(),
                 ),
                 rendezvous_threshold: self.config.rdma.rendezvous_threshold_bytes,
+                cache: self.cache.clone(),
             },
             &self.fabric,
             self.nm.clone(),
@@ -388,6 +412,11 @@ impl WorkflowSet {
     /// The set's cluster configuration.
     pub fn config(&self) -> &ClusterConfig {
         &self.config
+    }
+
+    /// The set's artifact cache, when the config enables one.
+    pub fn cache(&self) -> Option<&Arc<crate::cache::ArtifactCache>> {
+        self.cache.as_ref()
     }
 
     /// Export the proxy's fast-reject state (federation routing input).
@@ -657,6 +686,37 @@ mod tests {
         assert!(
             set.metrics().counter("batches_executed").get() >= 1,
             "the burst must have formed at least one micro-batch"
+        );
+        set.shutdown();
+    }
+
+    #[test]
+    fn cache_enabled_set_serves_repeat_submission_at_admission() {
+        let mut cfg = sim_config();
+        cfg.cache = Some(crate::config::CacheSettings::default());
+        let pool = build_pool(&cfg, None);
+        let counts = vec![WorkflowSet::theorem1_counts(&cfg.apps[0], 1)];
+        let set = WorkflowSet::build(cfg, counts, Arc::new(EchoLogic), pool);
+        std::thread::sleep(Duration::from_millis(80));
+
+        let payload = Payload::Bytes(b"same request twice".to_vec());
+        let h1 = set.submit(AppId(1), payload.clone()).expect("must admit");
+        let WaitOutcome::Done(r1) = h1.wait(Duration::from_secs(10)) else {
+            panic!("first (uncached) pass must complete")
+        };
+        // Identical resubmission: the proxy serves it from the workflow
+        // tier — no new pipeline traversal, same payload bytes.
+        let h2 = set.submit(AppId(1), payload).expect("must admit");
+        let WaitOutcome::Done(r2) = h2.wait(Duration::from_secs(10)) else {
+            panic!("cache hit must produce a result")
+        };
+        let m1 = crate::transport::WorkflowMessage::decode(&r1).unwrap();
+        let m2 = crate::transport::WorkflowMessage::decode(&r2).unwrap();
+        assert_eq!(m1.payload, m2.payload, "hit is byte-identical in payload");
+        assert_eq!(m2.header.uid, h2.uid());
+        assert!(
+            set.metrics().counter("cache_hits.__workflow__").get() >= 1,
+            "second submission must hit the workflow tier"
         );
         set.shutdown();
     }

@@ -1,0 +1,263 @@
+//! Artifact-cache semantics battery: cached results must be
+//! byte-identical to the uncached pipeline, racing fills publish exactly
+//! once, eviction respects capacity, dropped requests never poison the
+//! cache, and the config salt invalidates.
+
+use onepiece::cache::{ArtifactCache, WORKFLOW_STAGE};
+use onepiece::client::{Gateway, SubmitOptions, WaitOutcome};
+use onepiece::config::{CacheSettings, ClusterConfig, ExecModel, FabricKind};
+use onepiece::metrics::Registry;
+use onepiece::rdma::Fabric;
+use onepiece::runtime::StageExecutor;
+use onepiece::transport::{AppId, Payload, WorkflowMessage};
+use onepiece::util::{Clock, SystemClock};
+use onepiece::workflow::{AppLogic, EchoLogic};
+use onepiece::wset::{build_pool, WorkflowSet};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn sim_config(stage_ms: f64, cached: bool) -> ClusterConfig {
+    let mut cfg = ClusterConfig::i2v_default();
+    cfg.fabric = FabricKind::Ideal;
+    for s in cfg.apps[0].stages.iter_mut() {
+        s.exec = ExecModel::Simulated { ms: stage_ms };
+        s.exec_ms = stage_ms;
+    }
+    cfg.idle_pool = 0;
+    if cached {
+        cfg.cache = Some(CacheSettings::default());
+    }
+    cfg
+}
+
+fn build(cfg: &ClusterConfig, logic: Arc<dyn AppLogic>) -> WorkflowSet {
+    let pool = build_pool(cfg, None);
+    WorkflowSet::build(cfg.clone(), vec![vec![1, 1, 1, 1]], logic, pool)
+}
+
+fn mk_cache(settings: &CacheSettings) -> (ArtifactCache, Registry) {
+    let reg = Registry::new();
+    let clock: Arc<dyn Clock> = Arc::new(SystemClock);
+    (ArtifactCache::new(Fabric::ideal(), clock, settings, &reg), reg)
+}
+
+/// Pass-through logic that counts stage executions — the thing a cache
+/// hit must make not happen.
+struct CountingEcho(Arc<AtomicU64>);
+
+impl AppLogic for CountingEcho {
+    fn execute(
+        &self,
+        _stage: &str,
+        exec: &StageExecutor,
+        msg: &WorkflowMessage,
+    ) -> anyhow::Result<Payload> {
+        self.0.fetch_add(1, Ordering::SeqCst);
+        exec.run(&[])?;
+        Ok(msg.payload.clone())
+    }
+}
+
+/// Acceptance criterion: for the same prompts, a cache-enabled set must
+/// produce byte-identical payloads to an uncached set — on misses *and*
+/// on hits.
+#[test]
+fn cached_results_are_byte_identical_to_uncached() {
+    let uncached = build(&sim_config(1.0, false), Arc::new(EchoLogic));
+    let cached = build(&sim_config(1.0, true), Arc::new(EchoLogic));
+    std::thread::sleep(Duration::from_millis(80));
+
+    let prompts: Vec<Payload> = (0..6u8)
+        .map(|i| Payload::Bytes(vec![i % 3; 32])) // each prompt twice
+        .collect();
+    for prompt in &prompts {
+        let mut results = Vec::new();
+        for set in [&uncached, &cached] {
+            let h = set.submit(AppId(1), prompt.clone()).expect("must admit");
+            let WaitOutcome::Done(bytes) = h.wait(Duration::from_secs(10)) else {
+                panic!("pipeline must complete")
+            };
+            let msg = WorkflowMessage::decode(&bytes).unwrap();
+            assert_eq!(msg.header.uid, h.uid(), "result carries its own uid");
+            results.push(msg.payload);
+        }
+        assert_eq!(results[0], results[1], "cached == uncached for {prompt:?}");
+        assert_eq!(results[0], *prompt, "echo returns the prompt itself");
+    }
+    // The repeats actually exercised the cache.
+    let hits: u64 = cached
+        .metrics()
+        .counters_snapshot()
+        .into_iter()
+        .filter(|(k, _)| k.starts_with("cache_hits."))
+        .map(|(_, v)| v)
+        .sum();
+    assert!(hits > 0, "repeat prompts must hit");
+    uncached.shutdown();
+    cached.shutdown();
+}
+
+/// Racing fills: N threads fill the same key concurrently; exactly one
+/// wins and every subsequent lookup returns the winner's bytes.
+#[test]
+fn racing_fills_publish_exactly_once() {
+    let (cache, reg) = mk_cache(&CacheSettings::default());
+    let cache = Arc::new(cache);
+    let key = cache.key_for(AppId(1), "vae", &Payload::Bytes(vec![1, 2, 3]));
+    let wins: Vec<bool> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..8u8)
+            .map(|i| {
+                let cache = cache.clone();
+                s.spawn(move || {
+                    let value: Arc<[u8]> = vec![i; 128].into();
+                    cache.fill(key, &value)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    assert_eq!(
+        wins.iter().filter(|&&w| w).count(),
+        1,
+        "first-writer-wins: exactly one racing fill may publish"
+    );
+    assert_eq!(reg.counter("cache_fills_total").get(), 1);
+    // The published value is one of the candidates, stable across reads.
+    let v1 = cache.lookup("vae", key).expect("filled");
+    let v2 = cache.lookup("vae", key).expect("still filled");
+    assert_eq!(v1, v2);
+    assert_eq!(v1.len(), 128);
+    assert!(v1.iter().all(|&b| b == v1[0]), "no torn write");
+}
+
+/// Two concurrent identical submissions: single-flight (plus the stage
+/// tier) collapses the stage work to one execution per stage.
+#[test]
+fn concurrent_identical_requests_execute_once_per_stage() {
+    let executions = Arc::new(AtomicU64::new(0));
+    // 150 ms stages so the two requests genuinely overlap in the
+    // pipeline. All stages Individual: in Collaboration mode every
+    // worker executes by design, which would skew the count.
+    let mut cfg = sim_config(150.0, true);
+    for s in cfg.apps[0].stages.iter_mut() {
+        s.mode = onepiece::config::SchedMode::Individual;
+    }
+    let set = build(&cfg, Arc::new(CountingEcho(executions.clone())));
+    std::thread::sleep(Duration::from_millis(80));
+
+    let prompt = Payload::Bytes(b"expensive prompt".to_vec());
+    let h1 = set.submit(AppId(1), prompt.clone()).expect("must admit");
+    let h2 = set.submit(AppId(1), prompt).expect("must admit");
+    for h in [h1, h2] {
+        assert!(
+            matches!(h.wait(Duration::from_secs(20)), WaitOutcome::Done(_)),
+            "both identical requests must complete"
+        );
+    }
+    let stages = 4;
+    assert_eq!(
+        executions.load(Ordering::SeqCst),
+        stages,
+        "two identical in-flight requests must execute each stage once"
+    );
+    set.shutdown();
+}
+
+/// Capacity pressure: inserting more than fits evicts in LRU order and
+/// counts it; the resident set stays bounded.
+#[test]
+fn eviction_under_capacity_pressure() {
+    let settings = CacheSettings {
+        hot_capacity_bytes: 512,
+        warm_capacity_bytes: 1_024,
+        ..CacheSettings::default()
+    };
+    let (cache, reg) = mk_cache(&settings);
+    let keys: Vec<_> = (0..16u8)
+        .map(|i| cache.key_for(AppId(1), "s", &Payload::Bytes(vec![i])))
+        .collect();
+    for key in &keys {
+        let value: Arc<[u8]> = vec![7u8; 256].into();
+        assert!(cache.fill(*key, &value));
+    }
+    assert!(
+        reg.counter("cache_evictions_total").get() > 0,
+        "16 × 256 B into a 1 KiB warm tier must evict"
+    );
+    let (hot, warm) = cache.tier_bytes();
+    assert!(hot <= 512, "hot tier over capacity: {hot}");
+    assert!(warm <= 1_024, "warm tier over capacity: {warm}");
+    // LRU: the newest key survived, the oldest did not.
+    assert!(cache.lookup("s", keys[15]).is_some());
+    assert!(cache.lookup("s", keys[0]).is_none());
+}
+
+/// A deadline-dropped request must never seed the cache: the next
+/// identical submission misses, runs fresh, and completes correctly.
+#[test]
+fn dropped_request_never_poisons_the_cache() {
+    let mut cfg = sim_config(1.0, true);
+    // Slow diffusion so the deadline lapses mid-pipeline.
+    cfg.apps[0].stages[2].exec = ExecModel::Simulated { ms: 300.0 };
+    cfg.apps[0].stages[2].exec_ms = 300.0;
+    let set = build(&cfg, Arc::new(EchoLogic));
+    std::thread::sleep(Duration::from_millis(80));
+
+    let prompt = Payload::Bytes(b"dropped then retried".to_vec());
+    let opts = SubmitOptions::default().with_deadline(Duration::from_millis(100));
+    let h = set
+        .submit_with(AppId(1), prompt.clone(), opts)
+        .expect("must admit");
+    assert_eq!(
+        h.wait(Duration::from_secs(10)),
+        WaitOutcome::DeadlineExceeded,
+        "the probe request must be dropped mid-pipeline"
+    );
+    assert_eq!(
+        set.metrics().counter("cache_hits.__workflow__").get(),
+        0,
+        "a dropped request must not have seeded the workflow tier"
+    );
+    // Fresh identical submission: full pipeline run, correct bytes.
+    let h2 = set.submit(AppId(1), prompt.clone()).expect("must admit");
+    let WaitOutcome::Done(bytes) = h2.wait(Duration::from_secs(10)) else {
+        panic!("retry of a dropped request must complete")
+    };
+    let msg = WorkflowMessage::decode(&bytes).unwrap();
+    assert_eq!(msg.payload, prompt);
+    set.shutdown();
+}
+
+/// The config salt participates in key derivation: bumping it (model /
+/// config rollout) invalidates everything cached under the old salt.
+#[test]
+fn salt_change_invalidates_cached_entries() {
+    let (old, _) = mk_cache(&CacheSettings {
+        salt: "model-v1".into(),
+        ..CacheSettings::default()
+    });
+    let (new, _) = mk_cache(&CacheSettings {
+        salt: "model-v2".into(),
+        ..CacheSettings::default()
+    });
+    let prompt = Payload::Bytes(b"same prompt".to_vec());
+    let k_old = old.key_for(AppId(1), WORKFLOW_STAGE, &prompt);
+    let k_new = new.key_for(AppId(1), WORKFLOW_STAGE, &prompt);
+    assert_ne!(k_old, k_new, "salt must change the derived key");
+
+    let value: Arc<[u8]> = b"v1 output".to_vec().into();
+    assert!(old.fill(k_old, &value));
+    // The new deployment derives k_new for the same prompt — the v1
+    // entry is unreachable from it.
+    assert!(new.lookup("s", k_new).is_none());
+    // And stage / app also separate key spaces.
+    assert_ne!(
+        old.key_for(AppId(1), "vae", &prompt),
+        old.key_for(AppId(1), "diffusion", &prompt)
+    );
+    assert_ne!(
+        old.key_for(AppId(1), WORKFLOW_STAGE, &prompt),
+        old.key_for(AppId(2), WORKFLOW_STAGE, &prompt)
+    );
+}
