@@ -24,7 +24,7 @@ enum FlightState {
 }
 
 struct FlightInner {
-    state: Mutex<FlightState>,
+    state: Mutex<FlightState>, // lint: lock-rank(singleflight_state, 56)
     cv: Condvar,
 }
 
@@ -32,7 +32,7 @@ type FlightMap = Arc<Mutex<HashMap<u128, Arc<FlightInner>>>>;
 
 /// Registry of open flights, one per cache key.
 pub struct SingleFlight {
-    flights: FlightMap,
+    flights: FlightMap, // lint: lock-rank(singleflight, 55)
 }
 
 /// What [`SingleFlight::begin`] hands a worker.

@@ -141,7 +141,11 @@ impl TierStore {
             return Lookup::Miss;
         }
         let tick = self.next_tick();
-        let e = self.entries.get_mut(&key).unwrap();
+        // Present: looked up above and not evicted since. A miss is the
+        // safe answer if that invariant ever breaks.
+        let Some(e) = self.entries.get_mut(&key) else {
+            return Lookup::Miss;
+        };
         self.warm_lru.remove(&e.warm_tick);
         e.warm_tick = tick;
         self.warm_lru.insert(tick, key);

@@ -103,7 +103,7 @@ pub struct RequestHandle {
     priority: Priority,
     tracker: Arc<RequestTracker>,
     db: Arc<DbClient>,
-    inner: Mutex<HandleInner>,
+    inner: Mutex<HandleInner>, // lint: lock-rank(handle, 35)
 }
 
 impl std::fmt::Debug for RequestHandle {

@@ -15,11 +15,12 @@
 //! of the pipeline.
 
 use crate::client::{Priority, SubmitOptions};
+use crate::lint::runtime::{WitnessMutex, RANK_TRACKER};
 use crate::metrics::{Counter, Registry};
 use crate::rdma::RegionId;
 use crate::util::{Clock, Uid};
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::Duration;
 
 /// What the data plane should do with an in-flight message.
@@ -108,7 +109,7 @@ pub struct RequestTracker {
     cancelled_ctr: Arc<Counter>,
     deadline_ctr: Arc<Counter>,
     failed_ctr: Arc<Counter>,
-    inner: Mutex<HashMap<Uid, Entry>>,
+    inner: WitnessMutex<HashMap<Uid, Entry>>, // lint: lock-rank(tracker, 40)
 }
 
 impl RequestTracker {
@@ -122,7 +123,7 @@ impl RequestTracker {
             cancelled_ctr,
             deadline_ctr,
             failed_ctr,
-            inner: Mutex::new(HashMap::new()),
+            inner: WitnessMutex::new("tracker", RANK_TRACKER, HashMap::new()),
         }
     }
 

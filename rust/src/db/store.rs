@@ -87,7 +87,7 @@ pub struct DbStats {
 pub struct MemDb {
     clock: Arc<dyn Clock>,
     ttl_ns: u64,
-    inner: Mutex<Inner>,
+    inner: Mutex<Inner>, // lint: lock-rank(db, 60)
     /// Signalled on every store; [`MemDb::wait_signal`] blocks here so
     /// result waiters sleep instead of polling.
     signal: Condvar,
@@ -257,7 +257,13 @@ impl MemDb {
         let kind = g.map.get(&uid).map(|r| r.kind);
         match kind {
             Some(k) if want(k) => {
-                let r = g.map.remove(&uid).expect("present: just peeked");
+                // Present: peeked above under the same lock. A `None`
+                // here would mean the map changed under a held guard —
+                // answer miss rather than crash the db thread.
+                let Some(r) = g.map.remove(&uid) else {
+                    g.stats.misses += 1;
+                    return None;
+                };
                 g.ckpts.remove(&uid);
                 g.stats.resident_bytes -= r.data.len() as u64;
                 if now.saturating_sub(r.stored_at_ns) <= self.ttl_ns {

@@ -123,10 +123,10 @@ pub struct FederationRouter {
     counters: AdmissionCounters,
     /// Cached per-app load vector + refresh stamp (see
     /// [`FederationConfig::snapshot_max_age`]).
-    loads: Mutex<HashMap<AppId, (Instant, Vec<f64>)>>,
+    loads: Mutex<HashMap<AppId, (Instant, Vec<f64>)>>, // lint: lock-rank(federation_loads, 10)
     /// Serializes [`FederationRouter::rebalance`] passes: concurrent
     /// passes could otherwise pick the same donor and over-donate.
-    rebalance_serial: Mutex<()>,
+    rebalance_serial: Mutex<()>, // lint: lock-rank(federation_rebalance, 11)
 }
 
 impl FederationRouter {

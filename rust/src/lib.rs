@@ -18,7 +18,11 @@
 //!   over N Workflow Sets), the content-addressed artifact [`cache`]
 //!   (stage-skip on repeat inputs, warm tier served by one-sided READs),
 //!   and the unified [`client`] gateway API (typed request handles with
-//!   priorities, deadlines, and cancellation across every tier).
+//!   priorities, deadlines, and cancellation across every tier). The
+//!   crate also lints itself: [`lint`] is an in-crate static-analysis
+//!   pass (`onepiece lint`) enforcing the concurrency/RDMA-protocol
+//!   invariants, with a debug-build lock-order witness in
+//!   [`lint::runtime`].
 //! - **L2/L1 (build-time python)**: JAX stage models calling Pallas
 //!   kernels, AOT-lowered once to `artifacts/*.hlo.txt`.
 //! - **Runtime bridge**: [`runtime`] loads the HLO artifacts through the
@@ -36,6 +40,7 @@ pub mod client;
 pub mod config;
 pub mod db;
 pub mod federation;
+pub mod lint;
 pub mod metrics;
 pub mod nm;
 pub mod paxos;

@@ -1,0 +1,96 @@
+//! Baseline filtering: a checked-in JSON array of violation
+//! fingerprints that are acknowledged and do not fail the build.
+//!
+//! A fingerprint is `"<rule>|<file>|<trimmed source line>"` — line
+//! numbers are deliberately absent so unrelated edits above a
+//! baselined site do not invalidate the entry, while any edit to the
+//! offending line itself does (the entry then goes stale and the
+//! violation resurfaces, forcing a fresh decision).
+
+use super::rules::Violation;
+use crate::util::json::Json;
+use std::collections::{BTreeMap, HashSet};
+
+/// Stable fingerprint for one violation.
+pub fn fingerprint(v: &Violation) -> String {
+    format!("{}|{}|{}", v.rule, v.file, v.snippet)
+}
+
+/// Parse a baseline file's contents: either a bare JSON array of
+/// fingerprint strings, or `{"entries": [...]}`.
+pub fn parse(text: &str) -> Result<HashSet<String>, String> {
+    let json = Json::parse(text).map_err(|e| format!("baseline: {e}"))?;
+    let arr: Vec<Json> = match &json {
+        Json::Arr(a) => a.clone(),
+        Json::Obj(_) => match json.get("entries") {
+            Some(Json::Arr(a)) => a.clone(),
+            _ => return Err("baseline: expected array or {\"entries\": [...]}".to_string()),
+        },
+        _ => return Err("baseline: expected array or {\"entries\": [...]}".to_string()),
+    };
+    let mut set = HashSet::new();
+    for item in arr {
+        match item {
+            Json::Str(s) => {
+                set.insert(s);
+            }
+            _ => return Err("baseline: entries must be strings".to_string()),
+        }
+    }
+    Ok(set)
+}
+
+/// Serialize violations as a baseline file (used by `--write-baseline`
+/// to accept the current state wholesale).
+pub fn render(violations: &[Violation]) -> String {
+    let mut seen = HashSet::new();
+    let entries: Vec<Json> = violations
+        .iter()
+        .map(fingerprint)
+        .filter(|f| seen.insert(f.clone()))
+        .map(Json::Str)
+        .collect();
+    let mut obj = BTreeMap::new();
+    obj.insert("entries".to_string(), Json::Arr(entries));
+    Json::Obj(obj).to_string_compact()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(rule: &'static str, file: &str, snippet: &str) -> Violation {
+        Violation {
+            rule,
+            file: file.to_string(),
+            line: 7,
+            message: "m".to_string(),
+            snippet: snippet.to_string(),
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let vs = [v("l1", "a.rs", "x.unwrap();"), v("l2", "b.rs", "cv.wait(g)")];
+        let text = render(&vs);
+        let set = parse(&text).unwrap();
+        assert!(set.contains(&fingerprint(&vs[0])));
+        assert!(set.contains(&fingerprint(&vs[1])));
+        assert_eq!(set.len(), 2);
+    }
+
+    #[test]
+    fn bare_array_accepted() {
+        let set = parse("[\"l1|a.rs|x.unwrap();\"]").unwrap();
+        assert!(set.contains("l1|a.rs|x.unwrap();"));
+    }
+
+    #[test]
+    fn line_number_independent() {
+        let mut a = v("l1", "a.rs", "x.unwrap();");
+        a.line = 7;
+        let mut b = v("l1", "a.rs", "x.unwrap();");
+        b.line = 900;
+        assert_eq!(fingerprint(&a), fingerprint(&b));
+    }
+}

@@ -1,0 +1,504 @@
+//! The OnePiece rule set (L1–L5) over scanned source files.
+//!
+//! Each rule guards an invariant DESIGN.md states in prose (see the
+//! "Invariants & static checks" section there for the rule ↔ anchor
+//! table). Rules only fire on non-test lines and honor
+//! `// lint: allow(<rule>)` suppression; `suppressed` counts how many
+//! hits an allow swallowed so the report can show what the tree relies
+//! on.
+
+use super::scanner::{has_word, ident_before, SourceFile};
+use std::collections::HashMap;
+
+/// Modules whose failure must escalate through strand/fail_for — a
+/// panic in these tears down a worker mid-protocol (the exact class of
+/// death the Case 1–8 machinery exists to survive, not to cause).
+pub const DATA_PLANE: &[&str] = &["ringbuf", "rdma", "transport", "workflow", "db", "cache"];
+
+/// RDMA verbs whose call sites must keep the e15 verb budget honest.
+const ACCOUNTED_VERBS: &[&str] = &[
+    "post_read_words",
+    "post_write_words",
+    "post_cas_pair",
+    "post_fetch_add",
+];
+
+/// Accounting tokens accepted by L4: the producer/session idiom
+/// (`self.verbs += 1`), a `RingMetrics::record` call, or a direct
+/// counter increment on the rendezvous/warm-read paths.
+const ACCOUNTING_TOKENS: &[&str] = &["verbs", ".record(", "rendezvous_reads", "warm_reads"];
+
+/// Files whose output feeds content-addressed cache keys: any wall
+/// clock read here makes "same bytes in, same key out" false.
+const DETERMINISM_PATHS: &[&str] = &["cache/key.rs", "transport/message.rs"];
+
+const CLOCK_READS: &[&str] = &["Instant::now", "SystemTime::now", "now_ns("];
+
+/// One rule hit.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Violation {
+    pub rule: &'static str,
+    pub file: String,
+    pub line: usize,
+    pub message: String,
+    /// Trimmed source line (baseline fingerprints hash this, so a pure
+    /// line-number shift does not invalidate a baseline entry).
+    pub snippet: String,
+}
+
+/// Per-run tallies alongside the violations themselves.
+#[derive(Debug, Default)]
+pub struct RuleStats {
+    pub suppressed: usize,
+}
+
+/// Global rank table: name → rank (collected from every file), plus
+/// per-file field bindings resolved during the per-file pass.
+pub struct RankTable {
+    pub by_name: HashMap<String, u32>,
+}
+
+pub fn build_rank_table(files: &[SourceFile]) -> RankTable {
+    let mut by_name = HashMap::new();
+    for f in files {
+        for r in &f.ranks {
+            by_name.insert(r.name.clone(), r.rank);
+        }
+    }
+    RankTable { by_name }
+}
+
+fn is_data_plane(f: &SourceFile) -> bool {
+    DATA_PLANE.contains(&f.top_module())
+}
+
+fn allowed(f: &SourceFile, line_idx: usize, rule: &str) -> bool {
+    f.lines[line_idx].allows.iter().any(|a| a == rule)
+}
+
+fn push_or_suppress(
+    out: &mut Vec<Violation>,
+    stats: &mut RuleStats,
+    f: &SourceFile,
+    line_idx: usize,
+    rule: &'static str,
+    message: String,
+) {
+    if allowed(f, line_idx, rule) {
+        stats.suppressed += 1;
+        return;
+    }
+    out.push(Violation {
+        rule,
+        file: f.path.clone(),
+        line: line_idx + 1,
+        message,
+        snippet: f.lines[line_idx].code.trim().to_string(),
+    });
+}
+
+/// Statement accumulator: joins code lines until a `;`, `{`, or `}` so
+/// multi-line method chains (`let g = self\n.inner\n.lock()`) can be
+/// inspected as one unit.
+struct StmtBuf {
+    buf: String,
+}
+
+impl StmtBuf {
+    fn new() -> Self {
+        Self { buf: String::new() }
+    }
+    /// Append a line; returns the statement text up to each terminator
+    /// encountered (callers inspect `self.buf` *before* reset points).
+    fn push_line(&mut self, code: &str) {
+        self.buf.push(' ');
+        self.buf.push_str(code);
+    }
+    fn reset(&mut self) {
+        self.buf.clear();
+    }
+}
+
+/// L1: no `unwrap()/expect()/panic!/todo!/unimplemented!` in data-plane
+/// modules outside tests. Unwraps *directly on a lock/rwlock/condvar
+/// result* are exempt: propagating poisoning by panicking is this
+/// crate's accepted idiom (a poisoned mutex means a peer already
+/// panicked mid-critical-section — limping on would publish torn
+/// state), and L1 exists to catch crash-the-worker paths that should
+/// strand/fail_for instead, not to churn 100+ poison propagations.
+fn check_l1(f: &SourceFile, out: &mut Vec<Violation>, stats: &mut RuleStats) {
+    if !is_data_plane(f) {
+        return;
+    }
+    let patterns: [(&str, &str); 5] = [
+        (".unwrap()", "unwrap()"),
+        (".expect(", "expect()"),
+        ("panic!", "panic!"),
+        ("todo!", "todo!"),
+        ("unimplemented!", "unimplemented!"),
+    ];
+    let mut stmt = StmtBuf::new();
+    for (i, line) in f.lines.iter().enumerate() {
+        if line.in_test {
+            stmt.reset();
+            continue;
+        }
+        let code = &line.code;
+        for (pat, label) in patterns {
+            let mut start = 0;
+            while let Some(pos) = code[start..].find(pat) {
+                let abs = start + pos;
+                start = abs + pat.len();
+                // Macro patterns need a word boundary on the left
+                // (`panic!` must not fire on `catch_panic!`).
+                if !pat.starts_with('.') {
+                    let before = code[..abs].chars().next_back();
+                    if before.is_some_and(|c| c.is_ascii_alphanumeric() || c == '_') {
+                        continue;
+                    }
+                }
+                if pat == ".unwrap()" || pat == ".expect(" {
+                    // Poison-class exemption: chain directly follows a
+                    // lock()/read()/write()/wait_timeout() call in this
+                    // statement.
+                    let chain = {
+                        let mut s = stmt.buf.clone();
+                        s.push_str(&code[..abs]);
+                        s
+                    };
+                    let tail = chain.trim_end();
+                    if tail.ends_with(".lock()")
+                        || tail.ends_with(".read()")
+                        || tail.ends_with(".write()")
+                        || poison_wait_chain(tail)
+                    {
+                        continue;
+                    }
+                }
+                push_or_suppress(
+                    out,
+                    stats,
+                    f,
+                    i,
+                    "l1",
+                    format!(
+                        "{label} in data-plane module `{}` (strand/fail_for instead of crashing the worker)",
+                        f.top_module()
+                    ),
+                );
+            }
+        }
+        // Advance the statement buffer.
+        stmt.push_line(code);
+        if code.contains(';') || code.contains('{') || code.contains('}') {
+            stmt.reset();
+        }
+    }
+}
+
+/// `...wait_timeout(g, d)` directly before the unwrap — the returned
+/// `LockResult` carries poisoning exactly like `lock()`.
+fn poison_wait_chain(tail: &str) -> bool {
+    if !tail.ends_with(')') {
+        return false;
+    }
+    // Walk back over one balanced paren group, then require the call
+    // name to end with `wait_timeout` / `wait_timeout_while` / `wait`.
+    let bytes = tail.as_bytes();
+    let mut depth = 0i32;
+    let mut i = bytes.len();
+    while i > 0 {
+        match bytes[i - 1] {
+            b')' => depth += 1,
+            b'(' => {
+                depth -= 1;
+                if depth == 0 {
+                    i -= 1;
+                    break;
+                }
+            }
+            _ => {}
+        }
+        i -= 1;
+    }
+    let name_end = i;
+    let mut name_start = name_end;
+    while name_start > 0 && {
+        let c = bytes[name_start - 1] as char;
+        c.is_ascii_alphanumeric() || c == '_'
+    } {
+        name_start -= 1;
+    }
+    let name = &tail[name_start..name_end];
+    name == "wait_timeout" || name == "wait_timeout_while" || name == "wait"
+}
+
+/// L2: every Condvar wait in non-test code is bounded
+/// (`wait_timeout*`). An unbounded `.wait()` on a dead-leader path
+/// wedges followers forever — the exact failure §5's election exists
+/// to avoid.
+fn check_l2(f: &SourceFile, out: &mut Vec<Violation>, stats: &mut RuleStats) {
+    if f.condvars.is_empty() {
+        return;
+    }
+    for (i, line) in f.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        let code = &line.code;
+        let mut start = 0;
+        while let Some(pos) = code[start..].find(".wait(") {
+            let abs = start + pos;
+            start = abs + ".wait(".len();
+            let Some(recv) = ident_before(code, abs) else {
+                continue;
+            };
+            if f.condvars.contains(&recv) {
+                push_or_suppress(
+                    out,
+                    stats,
+                    f,
+                    i,
+                    "l2",
+                    format!(
+                        "unbounded Condvar::wait on `{recv}` — use wait_timeout and recheck (a dead notifier wedges this thread forever)"
+                    ),
+                );
+            }
+        }
+    }
+}
+
+/// L3: nested `.lock()` acquisitions of rank-annotated mutexes within
+/// one function body must strictly ascend. Guard liveness is
+/// approximated: a `let`-bound guard lives to the end of its brace
+/// scope (or an explicit `drop(ident)`), an expression temporary to the
+/// end of its statement.
+fn check_l3(f: &SourceFile, out: &mut Vec<Violation>, stats: &mut RuleStats, table: &RankTable) {
+    // Per-file field → (name, rank) bindings from decl-line annotations.
+    let mut field_ranks: HashMap<String, (String, u32)> = HashMap::new();
+    for r in &f.ranks {
+        if let Some(fi) = &r.field {
+            field_ranks.insert(fi.clone(), (r.name.clone(), r.rank));
+        }
+    }
+    if field_ranks.is_empty() && table.by_name.is_empty() {
+        return;
+    }
+    struct Guard {
+        name: String,
+        rank: u32,
+        depth: i32,
+        binding: Option<String>,
+        temp: bool,
+    }
+    for span in &f.fns {
+        let mut guards: Vec<Guard> = Vec::new();
+        let mut stmt = StmtBuf::new();
+        let mut depth = f.lines[span.start - 1].depth_start;
+        for i in (span.start - 1)..span.end.min(f.lines.len()) {
+            let line = &f.lines[i];
+            if line.in_test {
+                continue;
+            }
+            let code = &line.code;
+            // Locate .lock() calls on this line first (the guard list
+            // reflects everything acquired before this point).
+            let mut start = 0;
+            while let Some(pos) = code[start..].find(".lock()") {
+                let abs = start + pos;
+                start = abs + ".lock()".len();
+                let Some(recv) = ident_before(code, abs) else {
+                    continue;
+                };
+                let resolved = field_ranks
+                    .get(&recv)
+                    .cloned()
+                    .or_else(|| table.by_name.get(&recv).map(|&n| (recv.clone(), n)));
+                let Some((lname, lrank)) = resolved else {
+                    continue;
+                };
+                for g in &guards {
+                    if g.rank >= lrank {
+                        push_or_suppress(
+                            out,
+                            stats,
+                            f,
+                            i,
+                            "l3",
+                            format!(
+                                "lock-rank inversion in `{}`: acquiring `{lname}` (rank {lrank}) while holding `{}` (rank {}) — ranks must strictly ascend",
+                                span.name, g.name, g.rank
+                            ),
+                        );
+                        break;
+                    }
+                }
+                let stmt_so_far = format!("{} {}", stmt.buf, &code[..abs]);
+                let bound = has_word(&stmt_so_far, "let");
+                let binding = if bound { let_binding(&stmt_so_far) } else { None };
+                guards.push(Guard {
+                    name: lname,
+                    rank: lrank,
+                    depth,
+                    binding,
+                    temp: !bound,
+                });
+            }
+            // drop(ident) releases a named guard early.
+            let mut dstart = 0;
+            while let Some(pos) = code[dstart..].find("drop(") {
+                let abs = dstart + pos;
+                dstart = abs + 5;
+                let before_ok = abs == 0
+                    || !code[..abs]
+                        .chars()
+                        .next_back()
+                        .is_some_and(|c| c.is_ascii_alphanumeric() || c == '_' || c == '.');
+                if !before_ok {
+                    continue;
+                }
+                let arg: String = code[abs + 5..]
+                    .chars()
+                    .take_while(|&c| c.is_ascii_alphanumeric() || c == '_')
+                    .collect();
+                guards.retain(|g| g.binding.as_deref() != Some(arg.as_str()));
+            }
+            // Walk braces/semicolons to expire guards.
+            for c in code.chars() {
+                match c {
+                    '{' => depth += 1,
+                    '}' => {
+                        depth -= 1;
+                        guards.retain(|g| g.depth <= depth);
+                    }
+                    ';' => {
+                        guards.retain(|g| !g.temp);
+                    }
+                    _ => {}
+                }
+            }
+            stmt.push_line(code);
+            if code.contains(';') || code.contains('{') || code.contains('}') {
+                stmt.reset();
+            }
+        }
+    }
+}
+
+/// Best-effort binding ident from `let [mut] name = ...` in a
+/// statement prefix (tuple patterns yield the first ident).
+fn let_binding(stmt: &str) -> Option<String> {
+    let pos = stmt.rfind("let ")?;
+    let rest = stmt[pos + 4..].trim_start();
+    let rest = rest.strip_prefix("mut ").unwrap_or(rest).trim_start();
+    let rest = rest.strip_prefix('(').unwrap_or(rest).trim_start();
+    let id: String = rest
+        .chars()
+        .take_while(|&c| c.is_ascii_alphanumeric() || c == '_')
+        .collect();
+    if id.is_empty() {
+        None
+    } else {
+        Some(id)
+    }
+}
+
+/// L4: every accounted RDMA verb call site lives in a function that
+/// also touches an accounting token, so the e15 verb-budget assertions
+/// cannot silently rot when a new call site forgets its increment.
+fn check_l4(f: &SourceFile, out: &mut Vec<Violation>, stats: &mut RuleStats) {
+    if !is_data_plane(f) {
+        return;
+    }
+    for span in &f.fns {
+        // The verb *definitions* (QueuePair methods in rdma/fabric.rs)
+        // are not call sites — accounting happens in their callers.
+        if ACCOUNTED_VERBS.contains(&span.name.as_str()) {
+            continue;
+        }
+        let mut verb_lines: Vec<(usize, &'static str)> = Vec::new();
+        let mut accounted = false;
+        for i in (span.start - 1)..span.end.min(f.lines.len()) {
+            let line = &f.lines[i];
+            if line.in_test {
+                continue;
+            }
+            for v in ACCOUNTED_VERBS {
+                if line.code.contains(v) {
+                    verb_lines.push((i, v));
+                }
+            }
+            for t in ACCOUNTING_TOKENS {
+                let hit = if t.starts_with('.') {
+                    line.code.contains(t)
+                } else {
+                    has_word(&line.code, t)
+                };
+                if hit {
+                    accounted = true;
+                }
+            }
+        }
+        if !accounted {
+            for (i, v) in verb_lines {
+                push_or_suppress(
+                    out,
+                    stats,
+                    f,
+                    i,
+                    "l4",
+                    format!(
+                        "`{v}` in `{}` without a RingMetrics/verb-count increment in the same function (e15 verb budget would rot)",
+                        span.name
+                    ),
+                );
+            }
+        }
+    }
+}
+
+/// L5: no wall-clock reads in cache-key / payload-encode paths —
+/// content-addressed keys must be a pure function of their input.
+fn check_l5(f: &SourceFile, out: &mut Vec<Violation>, stats: &mut RuleStats) {
+    if !DETERMINISM_PATHS.iter().any(|p| f.path.ends_with(p)) {
+        return;
+    }
+    for (i, line) in f.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        for pat in CLOCK_READS {
+            if line.code.contains(pat) {
+                push_or_suppress(
+                    out,
+                    stats,
+                    f,
+                    i,
+                    "l5",
+                    format!(
+                        "wall-clock read `{}` in a cache-key/encode path breaks content-key determinism",
+                        pat.trim_end_matches('(')
+                    ),
+                );
+            }
+        }
+    }
+}
+
+/// Run every rule over one file.
+pub fn check_file(
+    f: &SourceFile,
+    table: &RankTable,
+    out: &mut Vec<Violation>,
+    stats: &mut RuleStats,
+) {
+    check_l1(f, out, stats);
+    check_l2(f, out, stats);
+    check_l3(f, out, stats, table);
+    check_l4(f, out, stats);
+    check_l5(f, out, stats);
+}
+
+/// All rule ids, for the report.
+pub const RULES: &[&str] = &["l1", "l2", "l3", "l4", "l5"];

@@ -1,0 +1,488 @@
+//! Runtime lock-order witness — the dynamic complement to the static
+//! L3 rank check.
+//!
+//! [`WitnessMutex`] wraps a `std::sync::Mutex` with a name and a rank.
+//! Under `debug_assertions` (every `cargo test` build) or the
+//! `lockwitness` feature, each acquisition:
+//!
+//! 1. checks the thread-local held-lock stack: acquiring a rank ≤ any
+//!    held rank panics with both lock names (the would-be inversion,
+//!    caught in the acquiring thread *before* it can deadlock),
+//! 2. registers a wait-for edge in a global graph and runs a DFS: if
+//!    following `waiting-thread → lock → owner-thread` edges reaches
+//!    the acquiring thread, it panics with the full cycle — the second
+//!    line of defense for locks that opted out of ranking
+//!    ([`WitnessMutex::new_unranked`]).
+//!
+//! In release builds without the feature every hook compiles to a
+//! no-op and the wrapper is exactly a `Mutex` (one `Option` discriminant
+//! in the guard; no global state touched).
+//!
+//! The ring spin-lock (a remote CAS word, not a process-local mutex —
+//! see `ringbuf/producer.rs`) participates through the explicit
+//! [`ring_lock_acquired`] / [`ring_lock_released`] hooks, called on
+//! CAS success and session drop. It gets no wait-for edges: a spinning
+//! producer is never blocked indefinitely (the lease timeout lets it
+//! *steal* — the paper's deadlock resolution), so only the rank check
+//! applies. Witness release is tied to `ProducerSession` drop rather
+//! than the remote unlock verb: a session abandoned mid-protocol
+//! (fault injection, lock stolen) leaves the remote word set, but this
+//! thread no longer holds anything in the ordering sense.
+//!
+//! ## Rank order (outer → inner, strictly ascending)
+//!
+//! The constants below are the canonical order; the static
+//! `// lint: lock-rank(...)` annotations on each mutex's field
+//! declaration must agree with them.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, LockResult, Mutex, MutexGuard, PoisonError, WaitTimeoutResult};
+use std::time::Duration;
+
+/// Federation router state (outermost: routes into everything).
+pub const RANK_FEDERATION: u32 = 10;
+/// Workflow-set registry / housekeeper shared state.
+pub const RANK_WSET: u32 = 12;
+/// Node-manager membership state.
+pub const RANK_NM: u32 = 20;
+/// Proxy load monitor.
+pub const RANK_MONITOR: u32 = 30;
+/// Client handle interior (holds while probing tracker/db).
+pub const RANK_HANDLE: u32 = 35;
+/// Request tracker verdict map.
+pub const RANK_TRACKER: u32 = 40;
+/// Scheduler priority queue.
+pub const RANK_SCHEDULER: u32 = 45;
+/// Artifact-cache tier store.
+pub const RANK_CACHE_STORE: u32 = 50;
+/// Single-flight coalescing maps.
+pub const RANK_SINGLEFLIGHT: u32 = 55;
+/// MemDb store.
+pub const RANK_DB: u32 = 60;
+/// Shared result-delivery fan-out.
+pub const RANK_DELIVER: u32 = 65;
+/// Ring spin-lock (remote CAS word).
+pub const RANK_RING_SPIN: u32 = 70;
+/// Simulated fabric interior (region table, config).
+pub const RANK_FABRIC: u32 = 80;
+/// Metrics registry maps (leaf: never held across a call).
+pub const RANK_METRICS: u32 = 90;
+
+static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+
+/// Id space for ring locks, disjoint from `NEXT_ID`.
+fn ring_key(region: u64) -> u64 {
+    (1 << 63) | region
+}
+
+/// A named, ranked mutex participating in the witness.
+pub struct WitnessMutex<T> {
+    name: &'static str,
+    rank: Option<u32>,
+    id: u64,
+    inner: Mutex<T>,
+}
+
+impl<T> WitnessMutex<T> {
+    pub fn new(name: &'static str, rank: u32, value: T) -> Self {
+        Self {
+            name,
+            rank: Some(rank),
+            id: NEXT_ID.fetch_add(1, Ordering::Relaxed),
+            inner: Mutex::new(value),
+        }
+    }
+
+    /// A witness that joins the wait-for graph but skips the rank
+    /// check. Exists for locks with no natural place in the global
+    /// order — and for tests that need a real ABBA cycle to reach the
+    /// graph DFS (rank checking fires first otherwise).
+    pub fn new_unranked(name: &'static str, value: T) -> Self {
+        Self {
+            name,
+            rank: None,
+            id: NEXT_ID.fetch_add(1, Ordering::Relaxed),
+            inner: Mutex::new(value),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    /// Lock, with witness checks. Poisoning maps through like
+    /// `Mutex::lock` so `.lock().unwrap()` keeps the crate's
+    /// poison-propagation idiom.
+    pub fn lock(&self) -> LockResult<WitnessGuard<'_, T>> {
+        hooks::on_acquiring(self.id, self.name, self.rank);
+        let res = self.inner.lock();
+        hooks::on_acquired(self.id, self.name, self.rank);
+        match res {
+            Ok(g) => Ok(WitnessGuard {
+                lock: self,
+                inner: Some(g),
+            }),
+            Err(p) => Err(PoisonError::new(WitnessGuard {
+                lock: self,
+                inner: Some(p.into_inner()),
+            })),
+        }
+    }
+
+    /// Exclusive access without locking (needs `&mut self`).
+    pub fn get_mut(&mut self) -> LockResult<&mut T> {
+        self.inner.get_mut()
+    }
+}
+
+impl<T: std::fmt::Debug> std::fmt::Debug for WitnessMutex<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("WitnessMutex")
+            .field("name", &self.name)
+            .field("rank", &self.rank)
+            .field("inner", &self.inner)
+            .finish()
+    }
+}
+
+impl<T: Default> Default for WitnessMutex<T> {
+    fn default() -> Self {
+        Self::new_unranked("anonymous", T::default())
+    }
+}
+
+/// Guard for a [`WitnessMutex`]; releases the witness entry on drop.
+/// `inner` is `None` only transiently inside [`WitnessGuard::wait_timeout`].
+pub struct WitnessGuard<'a, T> {
+    lock: &'a WitnessMutex<T>,
+    inner: Option<MutexGuard<'a, T>>,
+}
+
+impl<T> std::ops::Deref for WitnessGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.inner.as_ref().expect("guard taken by wait_timeout")
+    }
+}
+
+impl<T> std::ops::DerefMut for WitnessGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.inner.as_mut().expect("guard taken by wait_timeout")
+    }
+}
+
+impl<T> Drop for WitnessGuard<'_, T> {
+    fn drop(&mut self) {
+        if self.inner.is_some() {
+            hooks::on_released(self.lock.id);
+        }
+    }
+}
+
+impl<'a, T> WitnessGuard<'a, T> {
+    /// Condvar wait with timeout, preserving the witness bookkeeping
+    /// across the release/re-acquire the wait performs. Mirrors
+    /// `Condvar::wait_timeout` with the receiver flipped (the guard
+    /// owns the witness state, so it must orchestrate).
+    pub fn wait_timeout(
+        mut self,
+        cv: &Condvar,
+        dur: Duration,
+    ) -> LockResult<(WitnessGuard<'a, T>, WaitTimeoutResult)> {
+        let lock = self.lock;
+        let inner = self.inner.take().expect("guard taken by wait_timeout");
+        hooks::on_released(lock.id);
+        drop(self); // inner is None: no double release
+        let res = cv.wait_timeout(inner, dur);
+        // Re-acquisition is an acquisition for ordering purposes: if
+        // this thread picked up other locks before the wait (it should
+        // not have — waiting while holding is its own smell), the rank
+        // check fires here exactly as for a fresh `lock()`.
+        hooks::on_acquiring(lock.id, lock.name, lock.rank);
+        hooks::on_acquired(lock.id, lock.name, lock.rank);
+        match res {
+            Ok((g, t)) => Ok((
+                WitnessGuard {
+                    lock,
+                    inner: Some(g),
+                },
+                t,
+            )),
+            Err(p) => {
+                let (g, t) = p.into_inner();
+                Err(PoisonError::new((
+                    WitnessGuard {
+                        lock,
+                        inner: Some(g),
+                    },
+                    t,
+                )))
+            }
+        }
+    }
+}
+
+/// Ring spin-lock acquired (CAS succeeded) — rank check + ownership.
+///
+/// Uses a relaxed acquire: the stepped-session protocol legitimately
+/// overlaps two sessions of the *same ring* on one thread (a steal of
+/// an expired lease while the losing session object is still alive —
+/// Cases 4–8 of the liveness argument), so same-ring re-entry and
+/// ring-vs-ring rank ties are allowed. Holding any *higher-ranked*
+/// witnessed mutex while entering the ring still panics.
+pub fn ring_lock_acquired(region: u64) {
+    hooks::on_ring_acquired(ring_key(region), RANK_RING_SPIN);
+}
+
+/// Ring session over (unlocked, stolen, or abandoned) — this thread no
+/// longer holds the ring in the ordering sense.
+pub fn ring_lock_released(region: u64) {
+    hooks::on_released(ring_key(region));
+}
+
+/// Number of witnessed locks the current thread holds (test hook).
+pub fn held_count() -> usize {
+    hooks::held_count()
+}
+
+#[cfg(any(debug_assertions, feature = "lockwitness"))]
+mod hooks {
+    use std::cell::RefCell;
+    use std::collections::HashMap;
+    use std::sync::{Mutex, OnceLock};
+    use std::thread::ThreadId;
+
+    thread_local! {
+        /// (lock id, name, rank) stack for the current thread.
+        static HELD: RefCell<Vec<(u64, &'static str, Option<u32>)>> =
+            const { RefCell::new(Vec::new()) };
+    }
+
+    #[derive(Default)]
+    struct Graph {
+        /// lock id → (owner thread, lock name)
+        owners: HashMap<u64, (ThreadId, &'static str)>,
+        /// thread → (lock id it is blocked acquiring, lock name)
+        waiting: HashMap<ThreadId, (u64, &'static str)>,
+    }
+
+    fn graph() -> &'static Mutex<Graph> {
+        static G: OnceLock<Mutex<Graph>> = OnceLock::new();
+        G.get_or_init(|| Mutex::new(Graph::default()))
+    }
+
+    /// The graph mutex may be poisoned by a witness panic in another
+    /// thread; the bookkeeping stays sound (every mutation is a single
+    /// map op), so keep going rather than cascade.
+    fn graph_lock() -> std::sync::MutexGuard<'static, Graph> {
+        graph().lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    pub fn on_acquiring(id: u64, name: &'static str, rank: Option<u32>) {
+        // 1. Thread-local checks: reentrancy and rank order.
+        HELD.with(|h| {
+            let held = h.borrow();
+            for (hid, hname, hrank) in held.iter() {
+                if *hid == id {
+                    panic!(
+                        "lock-order witness: thread re-acquiring `{name}` it already holds \
+                         (held stack: {})",
+                        render_stack(&held)
+                    );
+                }
+                if let (Some(hr), Some(r)) = (hrank, rank) {
+                    if *hr >= r {
+                        panic!(
+                            "lock-order witness: acquiring `{name}` (rank {r}) while holding \
+                             `{hname}` (rank {hr}) — ranks must strictly ascend \
+                             (held stack: {})",
+                            render_stack(&held)
+                        );
+                    }
+                }
+            }
+        });
+        // 2. Wait-for edge + deadlock DFS.
+        let me = std::thread::current().id();
+        let mut g = graph_lock();
+        g.waiting.insert(me, (id, name));
+        // Follow waiting(thread) → lock → owner(lock) → thread ...
+        let mut cycle = vec![format!("{me:?} waits for `{name}`")];
+        let mut cur_lock = id;
+        let mut hops = 0;
+        loop {
+            let Some(&(owner, owner_lock_name)) = g.owners.get(&cur_lock) else {
+                break; // unowned: acquisition will succeed
+            };
+            if owner == me {
+                g.waiting.remove(&me);
+                panic!(
+                    "lock-order witness: deadlock cycle detected: {}",
+                    cycle.join("; ") + &format!("; `{owner_lock_name}` is held by {me:?}")
+                );
+            }
+            let Some(&(next_lock, next_name)) = g.waiting.get(&owner) else {
+                break; // owner is running: it will release eventually
+            };
+            cycle.push(format!(
+                "`{owner_lock_name}` is held by {owner:?} which waits for `{next_name}`"
+            ));
+            cur_lock = next_lock;
+            hops += 1;
+            if hops > 1024 {
+                break; // defensive bound; graphs this deep are corrupt
+            }
+        }
+    }
+
+    pub fn on_acquired(id: u64, name: &'static str, rank: Option<u32>) {
+        let me = std::thread::current().id();
+        {
+            let mut g = graph_lock();
+            g.waiting.remove(&me);
+            g.owners.insert(id, (me, name));
+        }
+        HELD.with(|h| h.borrow_mut().push((id, name, rank)));
+    }
+
+    pub fn on_released(id: u64) {
+        let me = std::thread::current().id();
+        {
+            let mut g = graph_lock();
+            // A ring steal can transfer ownership while the original
+            // session still exists: only the current owner clears it.
+            if g.owners.get(&id).is_some_and(|(t, _)| *t == me) {
+                g.owners.remove(&id);
+            }
+        }
+        HELD.with(|h| {
+            let mut held = h.borrow_mut();
+            if let Some(pos) = held.iter().rposition(|(hid, _, _)| *hid == id) {
+                held.remove(pos);
+            }
+        });
+    }
+
+    /// Relaxed acquire for the ring spin-lock: no reentrancy check and
+    /// no rank comparison against other ring entries (same rank), but
+    /// still panics when a strictly higher-ranked mutex is held — that
+    /// would invert the global order.
+    pub fn on_ring_acquired(id: u64, rank: u32) {
+        HELD.with(|h| {
+            let held = h.borrow();
+            for (_, hname, hrank) in held.iter() {
+                if let Some(hr) = hrank {
+                    if *hr > rank {
+                        panic!(
+                            "lock-order witness: entering ring spin-lock (rank {rank}) \
+                             while holding `{hname}` (rank {hr}) — ranks must strictly \
+                             ascend (held stack: {})",
+                            render_stack(&held)
+                        );
+                    }
+                }
+            }
+        });
+        let me = std::thread::current().id();
+        graph_lock().owners.insert(id, (me, "ring_spin"));
+        HELD.with(|h| h.borrow_mut().push((id, "ring_spin", Some(rank))));
+    }
+
+    pub fn held_count() -> usize {
+        HELD.with(|h| h.borrow().len())
+    }
+
+    fn render_stack(held: &[(u64, &'static str, Option<u32>)]) -> String {
+        held.iter()
+            .map(|(_, n, r)| match r {
+                Some(r) => format!("{n}({r})"),
+                None => format!("{n}(unranked)"),
+            })
+            .collect::<Vec<_>>()
+            .join(" -> ")
+    }
+}
+
+#[cfg(not(any(debug_assertions, feature = "lockwitness")))]
+mod hooks {
+    pub fn on_acquiring(_id: u64, _name: &'static str, _rank: Option<u32>) {}
+    pub fn on_acquired(_id: u64, _name: &'static str, _rank: Option<u32>) {}
+    pub fn on_ring_acquired(_id: u64, _rank: u32) {}
+    pub fn on_released(_id: u64) {}
+    pub fn held_count() -> usize {
+        0
+    }
+}
+
+// Gated like the hooks themselves: under `cargo test --release` (no
+// debug_assertions, no `lockwitness`) the witness is compiled out and
+// every held_count() assertion below would trivially fail.
+#[cfg(all(test, any(debug_assertions, feature = "lockwitness")))]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn ascending_ranks_pass() {
+        let a = WitnessMutex::new("a", 1, 0u32);
+        let b = WitnessMutex::new("b", 2, 0u32);
+        let ga = a.lock().unwrap();
+        let gb = b.lock().unwrap();
+        assert_eq!(held_count(), 2);
+        drop(gb);
+        drop(ga);
+        assert_eq!(held_count(), 0);
+    }
+
+    #[test]
+    fn rank_inversion_panics() {
+        let res = std::thread::spawn(|| {
+            let hi = WitnessMutex::new("hi", 50, 0u32);
+            let lo = WitnessMutex::new("lo", 40, 0u32);
+            let _g = hi.lock().unwrap();
+            let _g2 = lo.lock().unwrap(); // 40 while holding 50: panic
+        })
+        .join();
+        let err = res.expect_err("inversion must panic");
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(msg.contains("ranks must strictly ascend"), "got: {msg}");
+        assert!(msg.contains("`lo`") && msg.contains("`hi`"), "got: {msg}");
+    }
+
+    #[test]
+    fn guard_drop_unwinds_witness() {
+        let m = Arc::new(WitnessMutex::new("m", 5, 1u32));
+        {
+            let mut g = m.lock().unwrap();
+            *g += 1;
+        }
+        assert_eq!(held_count(), 0);
+        // Reacquirable after release, and the value persisted.
+        assert_eq!(*m.lock().unwrap(), 2);
+    }
+
+    #[test]
+    fn wait_timeout_preserves_witness() {
+        let m = WitnessMutex::new("m", 5, 0u32);
+        let cv = std::sync::Condvar::new();
+        let g = m.lock().unwrap();
+        let (g, timed_out) = g
+            .wait_timeout(&cv, std::time::Duration::from_millis(1))
+            .unwrap();
+        assert!(timed_out.timed_out());
+        assert_eq!(held_count(), 1);
+        drop(g);
+        assert_eq!(held_count(), 0);
+    }
+
+    #[test]
+    fn ring_hooks_pair() {
+        ring_lock_acquired(424242);
+        assert_eq!(held_count(), 1);
+        ring_lock_released(424242);
+        assert_eq!(held_count(), 0);
+    }
+}

@@ -1,0 +1,622 @@
+//! Hand-rolled Rust source scanner for the `onepiece lint` pass.
+//!
+//! Zero dependencies by construction (the offline build has no
+//! crates.io access): a character-level pass classifies every byte of a
+//! source file as code, comment, or literal interior, then a line-level
+//! pass derives the structure the rules need — `#[cfg(test)]` regions,
+//! function spans, brace depths, `// lint: ...` annotations, and
+//! `Condvar` field declarations.
+//!
+//! The scanner is deliberately an *approximation* of a real parser:
+//! it understands strings (including raw strings), char literals vs
+//! lifetimes, nested block comments, and brace nesting, but not macro
+//! expansion or type inference. Every rule built on top of it is
+//! written so that the approximation errs toward *missing* exotic
+//! violations rather than inventing false positives — and any residual
+//! false positive is suppressible with `// lint: allow(<rule>)`.
+
+/// One scanned source line.
+#[derive(Debug, Clone)]
+pub struct LineInfo {
+    /// Code content: comments stripped, string/char literal *interiors*
+    /// blanked to spaces (delimiters kept so expression shape survives).
+    pub code: String,
+    /// Comment text on this line (both `//` and `/* */` bodies).
+    pub comment: String,
+    /// True if the line sits inside a `#[cfg(test)]`-gated item or a
+    /// `#[test]` function.
+    pub in_test: bool,
+    /// Brace depth at the start of the line.
+    pub depth_start: i32,
+    /// Rules suppressed on this line via `// lint: allow(rule, ...)`
+    /// (same line, or a directly preceding comment-only line).
+    pub allows: Vec<String>,
+}
+
+/// A `// lint: lock-rank(<name>, N)` annotation. When the annotated
+/// line declares a struct field of mutex type, `field` carries the
+/// field identifier so `.lock()` receivers in the same file resolve to
+/// this rank even when field names collide across files.
+#[derive(Debug, Clone)]
+pub struct RankDecl {
+    pub name: String,
+    pub rank: u32,
+    pub field: Option<String>,
+    pub line: usize,
+}
+
+/// Span of one `fn` item body (1-based, inclusive lines).
+#[derive(Debug, Clone)]
+pub struct FnSpan {
+    pub name: String,
+    pub start: usize,
+    pub end: usize,
+}
+
+/// A fully scanned source file.
+#[derive(Debug)]
+pub struct SourceFile {
+    /// Path relative to the lint root, forward slashes.
+    pub path: String,
+    pub lines: Vec<LineInfo>,
+    pub ranks: Vec<RankDecl>,
+    /// Field names declared with type `Condvar` in this file.
+    pub condvars: Vec<String>,
+    pub fns: Vec<FnSpan>,
+}
+
+impl SourceFile {
+    /// First path segment (module directory or file stem) — used for
+    /// data-plane classification.
+    pub fn top_module(&self) -> &str {
+        let p = self.path.as_str();
+        match p.find('/') {
+            Some(i) => &p[..i],
+            None => p.strip_suffix(".rs").unwrap_or(p),
+        }
+    }
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Character-level pass: split `src` into parallel `code` / `comment`
+/// streams of identical length (literal interiors and comment bodies
+/// blanked in `code`; everything non-comment blanked in `comment`).
+fn classify(src: &str) -> (String, String) {
+    #[derive(PartialEq)]
+    enum St {
+        Code,
+        LineComment,
+        BlockComment(u32),
+        Str,
+        RawStr(u32),
+        Char,
+    }
+    let mut code = String::with_capacity(src.len());
+    let mut comment = String::with_capacity(src.len());
+    let chars: Vec<char> = src.chars().collect();
+    let mut st = St::Code;
+    let mut i = 0usize;
+    while i < chars.len() {
+        let c = chars[i];
+        let next = chars.get(i + 1).copied();
+        if c == '\n' {
+            // Newlines pass through both streams; a line comment ends.
+            if st == St::LineComment {
+                st = St::Code;
+            }
+            code.push('\n');
+            comment.push('\n');
+            i += 1;
+            continue;
+        }
+        match st {
+            St::Code => match c {
+                '/' if next == Some('/') => {
+                    st = St::LineComment;
+                    code.push(' ');
+                    comment.push(' ');
+                    i += 1;
+                }
+                '/' if next == Some('*') => {
+                    st = St::BlockComment(1);
+                    code.push(' ');
+                    comment.push(' ');
+                    i += 1;
+                }
+                '"' => {
+                    // Raw string? Look back for r / r# prefixes.
+                    st = St::Str;
+                    code.push('"');
+                    comment.push(' ');
+                }
+                'r' if next == Some('"') || next == Some('#') => {
+                    // Possible raw string r"..." or r#"..."#.
+                    let mut j = i + 1;
+                    let mut hashes = 0u32;
+                    while chars.get(j) == Some(&'#') {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    if chars.get(j) == Some(&'"') {
+                        for _ in i..=j {
+                            code.push(if chars[i] == 'r' { '"' } else { ' ' });
+                            comment.push(' ');
+                            i += 1;
+                        }
+                        st = St::RawStr(hashes);
+                        continue;
+                    } else {
+                        code.push(c);
+                        comment.push(' ');
+                    }
+                }
+                '\'' => {
+                    // Char literal vs lifetime: '\x' is a char; 'a' is a
+                    // char if the char after next is a closing quote;
+                    // otherwise a lifetime ('a in generics).
+                    let is_char = next == Some('\\')
+                        || (next.is_some() && chars.get(i + 2) == Some(&'\''));
+                    if is_char {
+                        st = St::Char;
+                        code.push('\'');
+                        comment.push(' ');
+                    } else {
+                        code.push('\'');
+                        comment.push(' ');
+                    }
+                }
+                _ => {
+                    code.push(c);
+                    comment.push(' ');
+                }
+            },
+            St::LineComment => {
+                code.push(' ');
+                comment.push(c);
+            }
+            St::BlockComment(d) => {
+                if c == '*' && next == Some('/') {
+                    st = if d == 1 { St::Code } else { St::BlockComment(d - 1) };
+                    code.push(' ');
+                    code.push(' ');
+                    comment.push(' ');
+                    comment.push(' ');
+                    i += 2;
+                    continue;
+                } else if c == '/' && next == Some('*') {
+                    st = St::BlockComment(d + 1);
+                    code.push(' ');
+                    code.push(' ');
+                    comment.push(' ');
+                    comment.push(' ');
+                    i += 2;
+                    continue;
+                }
+                code.push(' ');
+                comment.push(c);
+            }
+            St::Str => {
+                if c == '\\' {
+                    code.push(' ');
+                    comment.push(' ');
+                    if next.is_some() && next != Some('\n') {
+                        code.push(' ');
+                        comment.push(' ');
+                        i += 2;
+                        continue;
+                    }
+                } else if c == '"' {
+                    st = St::Code;
+                    code.push('"');
+                    comment.push(' ');
+                } else {
+                    code.push(' ');
+                    comment.push(' ');
+                }
+            }
+            St::RawStr(hashes) => {
+                if c == '"' {
+                    // Closing needs `"` followed by `hashes` hashes.
+                    let mut ok = true;
+                    for k in 0..hashes {
+                        if chars.get(i + 1 + k as usize) != Some(&'#') {
+                            ok = false;
+                            break;
+                        }
+                    }
+                    if ok {
+                        code.push('"');
+                        comment.push(' ');
+                        for _ in 0..hashes {
+                            code.push(' ');
+                            comment.push(' ');
+                        }
+                        i += 1 + hashes as usize;
+                        st = St::Code;
+                        continue;
+                    }
+                }
+                code.push(' ');
+                comment.push(' ');
+            }
+            St::Char => {
+                if c == '\\' && next.is_some() && next != Some('\n') {
+                    code.push(' ');
+                    code.push(' ');
+                    comment.push(' ');
+                    comment.push(' ');
+                    i += 2;
+                    continue;
+                }
+                if c == '\'' {
+                    st = St::Code;
+                    code.push('\'');
+                    comment.push(' ');
+                } else {
+                    code.push(' ');
+                    comment.push(' ');
+                }
+            }
+        }
+        i += 1;
+    }
+    (code, comment)
+}
+
+/// Parse `lint: allow(a, b)` / `lint: lock-rank(name, 3)` out of one
+/// line's comment text.
+fn parse_annotations(comment: &str, allows: &mut Vec<String>, rank: &mut Option<(String, u32)>) {
+    let Some(pos) = comment.find("lint:") else {
+        return;
+    };
+    let rest = comment[pos + 5..].trim_start();
+    if let Some(args) = rest.strip_prefix("allow(").and_then(|r| r.split(')').next()) {
+        for a in args.split(',') {
+            let a = a.trim().to_lowercase();
+            if !a.is_empty() {
+                allows.push(a);
+            }
+        }
+    } else if let Some(args) = rest.strip_prefix("lock-rank(").and_then(|r| r.split(')').next()) {
+        let mut parts = args.splitn(2, ',');
+        if let (Some(name), Some(n)) = (parts.next(), parts.next()) {
+            if let Ok(n) = n.trim().parse::<u32>() {
+                *rank = Some((name.trim().to_string(), n));
+            }
+        }
+    }
+}
+
+/// Extract the field identifier from a struct-field declaration line
+/// like `inner: Mutex<Inner>,` → `inner`.
+fn field_ident(code: &str) -> Option<String> {
+    let colon = code.find(':')?;
+    let before = code[..colon].trim();
+    let id: String = before
+        .chars()
+        .rev()
+        .take_while(|&c| is_ident_char(c))
+        .collect::<Vec<_>>()
+        .into_iter()
+        .rev()
+        .collect();
+    if id.is_empty() || id.chars().next().is_some_and(|c| c.is_ascii_digit()) {
+        None
+    } else {
+        Some(id)
+    }
+}
+
+/// Whether `code` contains `word` as a whole identifier token.
+pub fn has_word(code: &str, word: &str) -> bool {
+    let mut start = 0;
+    while let Some(pos) = code[start..].find(word) {
+        let abs = start + pos;
+        let before_ok = abs == 0
+            || !is_ident_char(code[..abs].chars().next_back().unwrap_or(' '));
+        let after = code[abs + word.len()..].chars().next();
+        let after_ok = !after.is_some_and(is_ident_char);
+        if before_ok && after_ok {
+            return true;
+        }
+        start = abs + word.len();
+    }
+    false
+}
+
+/// The identifier immediately preceding byte offset `at` in `code`
+/// (used to resolve `.lock()` / `.wait(` receivers).
+pub fn ident_before(code: &str, at: usize) -> Option<String> {
+    let bytes = code.as_bytes();
+    let mut end = at;
+    while end > 0 && !(bytes[end - 1] as char).is_ascii_whitespace() && !is_ident_char(bytes[end - 1] as char) {
+        // Skip closing parens etc. only if directly a `)` chain like
+        // `foo().lock()` — we only step over `)` and matching `(`.
+        if bytes[end - 1] == b')' {
+            let mut depth = 1;
+            end -= 1;
+            while end > 0 && depth > 0 {
+                match bytes[end - 1] {
+                    b')' => depth += 1,
+                    b'(' => depth -= 1,
+                    _ => {}
+                }
+                end -= 1;
+            }
+        } else {
+            return None;
+        }
+    }
+    let mut start = end;
+    while start > 0 && is_ident_char(bytes[start - 1] as char) {
+        start -= 1;
+    }
+    if start == end {
+        None
+    } else {
+        Some(code[start..end].to_string())
+    }
+}
+
+/// Scan one source file into line/structure info.
+pub fn scan(path: &str, src: &str) -> SourceFile {
+    let (code_s, comment_s) = classify(src);
+    let code_lines: Vec<&str> = code_s.split('\n').collect();
+    let comment_lines: Vec<&str> = comment_s.split('\n').collect();
+    let n = code_lines.len();
+
+    let mut lines: Vec<LineInfo> = Vec::with_capacity(n);
+    let mut ranks: Vec<RankDecl> = Vec::new();
+    let mut condvars: Vec<String> = Vec::new();
+    let mut fns: Vec<FnSpan> = Vec::new();
+
+    // Pending allow() annotations from comment-only lines: apply to the
+    // next line that carries code.
+    let mut pending_allows: Vec<String> = Vec::new();
+    // Pending lock-rank annotation (comment-only line → next code line).
+    let mut pending_rank: Option<(String, u32)> = None;
+
+    // Test-region tracking: depth at which a #[cfg(test)] item's brace
+    // block opened; None = not inside one. `test_pending` is set when
+    // the attribute has been seen but the item's block not yet opened.
+    let mut depth: i32 = 0;
+    let mut test_region_depth: Option<i32> = None;
+    let mut test_pending = false;
+
+    // Function-span tracking.
+    struct PendingFn {
+        name: String,
+    }
+    let mut fn_pending: Option<PendingFn> = None;
+    let mut fn_stack: Vec<(String, i32, usize)> = Vec::new(); // (name, open depth, start line)
+
+    for idx in 0..n {
+        let code = code_lines[idx];
+        let comment = comment_lines[idx];
+        let depth_start = depth;
+        let in_test_now = test_region_depth.is_some() || test_pending;
+
+        // Annotations.
+        let mut line_allows: Vec<String> = Vec::new();
+        let mut line_rank: Option<(String, u32)> = None;
+        parse_annotations(comment, &mut line_allows, &mut line_rank);
+
+        let code_trim = code.trim();
+        let has_code = !code_trim.is_empty();
+
+        if has_code {
+            line_allows.extend(pending_allows.drain(..));
+            if line_rank.is_none() {
+                line_rank = pending_rank.take();
+            }
+        } else {
+            // Comment-only line: defer annotations to the next code line.
+            pending_allows.extend(line_allows.iter().cloned());
+            if let Some(r) = line_rank.clone() {
+                pending_rank = Some(r);
+            }
+            line_allows.clear();
+        }
+
+        if let Some((name, rank)) = line_rank {
+            ranks.push(RankDecl {
+                name,
+                rank,
+                field: field_ident(code),
+                line: idx + 1,
+            });
+        }
+
+        // Condvar field declarations (`signal: Condvar,`).
+        if has_code && (code.contains(": Condvar") || code.contains(":Condvar")) {
+            if let Some(f) = field_ident(code) {
+                if !condvars.contains(&f) {
+                    condvars.push(f);
+                }
+            }
+        }
+
+        // #[cfg(test)] / #[test] attribute detection.
+        if code.contains("#[cfg(test)]")
+            || code.contains("#[cfg(all(test")
+            || code.contains("#[cfg(any(test")
+            || code_trim == "#[test]"
+            || code.contains("#[test]")
+        {
+            test_pending = true;
+        }
+
+        // `fn name` detection (word-boundary).
+        if test_region_depth.is_none() {
+            if let Some(name) = find_fn_name(code) {
+                fn_pending = Some(PendingFn { name });
+            }
+        }
+
+        // Char walk for braces / statement ends.
+        for c in code.chars() {
+            match c {
+                '{' => {
+                    depth += 1;
+                    if test_pending && test_region_depth.is_none() {
+                        test_region_depth = Some(depth);
+                        test_pending = false;
+                    }
+                    if let Some(pf) = fn_pending.take() {
+                        fn_stack.push((pf.name, depth, idx + 1));
+                    }
+                }
+                '}' => {
+                    depth -= 1;
+                    if let Some(td) = test_region_depth {
+                        if depth < td {
+                            test_region_depth = None;
+                        }
+                    }
+                    while let Some((_, d, _)) = fn_stack.last() {
+                        if depth < *d {
+                            let (name, _, start) = fn_stack.pop().unwrap();
+                            fns.push(FnSpan {
+                                name,
+                                start,
+                                end: idx + 1,
+                            });
+                        } else {
+                            break;
+                        }
+                    }
+                }
+                ';' => {
+                    // A `;` before any `{` ends the pending item: the
+                    // cfg(test) attribute applied to a single statement
+                    // (`#[cfg(test)] use ...;`), or a trait fn decl.
+                    if test_pending && test_region_depth.is_none() {
+                        test_pending = false;
+                    }
+                    if fn_pending.is_some() {
+                        fn_pending = None;
+                    }
+                }
+                _ => {}
+            }
+        }
+
+        lines.push(LineInfo {
+            code: code.to_string(),
+            comment: comment.to_string(),
+            in_test: in_test_now || test_region_depth.is_some(),
+            depth_start,
+            allows: line_allows,
+        });
+    }
+    // Close any unterminated fns at EOF.
+    while let Some((name, _, start)) = fn_stack.pop() {
+        fns.push(FnSpan {
+            name,
+            start,
+            end: n,
+        });
+    }
+
+    SourceFile {
+        path: path.replace('\\', "/"),
+        lines,
+        ranks,
+        condvars,
+        fns,
+    }
+}
+
+/// Find `fn <name>` on a code line, honoring word boundaries (skips
+/// `Fn(`, `fn_ptr` idents, etc.). Returns the function name.
+fn find_fn_name(code: &str) -> Option<String> {
+    let bytes = code.as_bytes();
+    let mut start = 0usize;
+    while let Some(pos) = code[start..].find("fn ") {
+        let abs = start + pos;
+        let before_ok =
+            abs == 0 || !is_ident_char(bytes[abs - 1] as char);
+        if before_ok {
+            let rest = code[abs + 3..].trim_start();
+            let name: String = rest.chars().take_while(|&c| is_ident_char(c)).collect();
+            if !name.is_empty() {
+                return Some(name);
+            }
+        }
+        start = abs + 3;
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strips_comments_and_strings() {
+        let f = scan(
+            "x.rs",
+            "let a = \"unwrap() inside\"; // unwrap() in comment\nlet b = a.unwrap();\n",
+        );
+        assert!(!f.lines[0].code.contains("unwrap"));
+        assert!(f.lines[0].comment.contains("unwrap() in comment"));
+        assert!(f.lines[1].code.contains(".unwrap()"));
+    }
+
+    #[test]
+    fn cfg_test_region() {
+        let src = "fn a() { b(); }\n#[cfg(test)]\nmod tests {\n    fn c() { d.unwrap(); }\n}\nfn e() {}\n";
+        let f = scan("x.rs", src);
+        assert!(!f.lines[0].in_test);
+        assert!(f.lines[3].in_test);
+        assert!(!f.lines[5].in_test);
+    }
+
+    #[test]
+    fn allow_annotations_attach() {
+        let src = "// lint: allow(l1)\nlet x = y.unwrap();\nlet z = q.unwrap(); // lint: allow(l1, l4)\n";
+        let f = scan("x.rs", src);
+        assert_eq!(f.lines[1].allows, vec!["l1".to_string()]);
+        assert_eq!(f.lines[2].allows, vec!["l1".to_string(), "l4".to_string()]);
+    }
+
+    #[test]
+    fn lock_rank_binds_field() {
+        let src = "struct S {\n    inner: Mutex<u32>, // lint: lock-rank(tracker, 40)\n}\n";
+        let f = scan("x.rs", src);
+        assert_eq!(f.ranks.len(), 1);
+        assert_eq!(f.ranks[0].name, "tracker");
+        assert_eq!(f.ranks[0].rank, 40);
+        assert_eq!(f.ranks[0].field.as_deref(), Some("inner"));
+    }
+
+    #[test]
+    fn condvar_fields_and_fn_spans() {
+        let src = "struct S {\n    signal: Condvar,\n}\nfn wait_loop() {\n    x();\n}\n";
+        let f = scan("x.rs", src);
+        assert_eq!(f.condvars, vec!["signal".to_string()]);
+        assert_eq!(f.fns.len(), 1);
+        assert_eq!(f.fns[0].name, "wait_loop");
+        assert_eq!((f.fns[0].start, f.fns[0].end), (4, 6));
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let f = scan("x.rs", "impl<'a> Foo<'a> { fn g(&'a self) { h('x'); } }\n");
+        assert!(f.lines[0].code.contains("fn g"));
+        assert_eq!(f.fns.len(), 1);
+    }
+
+    #[test]
+    fn ident_before_resolves_receivers() {
+        let code = "        let g = self.inner.lock().unwrap();";
+        let at = code.find(".lock()").unwrap();
+        assert_eq!(ident_before(code, at).as_deref(), Some("inner"));
+        let code2 = "        let g = store().lock();";
+        let at2 = code2.find(".lock()").unwrap();
+        assert_eq!(ident_before(code2, at2).as_deref(), Some("store"));
+    }
+}

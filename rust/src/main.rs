@@ -56,6 +56,16 @@ USAGE:
       Run the E1 monolithic-vs-disaggregated GPU-resource comparison.
   onepiece info [--artifacts DIR]
       Show artifact manifest and PJRT platform.
+  onepiece lint [--src DIR] [--json PATH] [--baseline PATH]
+                [--write-baseline]
+      Run the in-crate static-analysis pass (rules L1-L5: data-plane
+      panic paths, unbounded Condvar waits, lock-rank order, RDMA verb
+      accounting, cache-key determinism) over the crate's own source
+      tree (default rust/src). Writes a machine-readable report
+      (default LINT_REPORT.json) and exits non-zero on violations.
+      --baseline filters acknowledged fingerprints (default
+      LINT_BASELINE.json when present); --write-baseline accepts the
+      current violations wholesale into the baseline file.
   onepiece help
       This text.
 ";
@@ -89,6 +99,7 @@ fn main() -> Result<()> {
         "trace" => trace(&flags),
         "sim-resources" => sim_resources(&flags),
         "info" => info(&flags),
+        "lint" => lint(&flags),
         "help" | "--help" | "-h" => {
             print!("{HELP}");
             Ok(())
@@ -571,5 +582,58 @@ fn info(flags: &HashMap<String, String>) -> Result<()> {
     }
     let rt = onepiece::runtime::PjrtRuntime::load_stages(&dir, &["vae_encode"])?;
     println!("PJRT platform: {}", rt.platform());
+    Ok(())
+}
+
+fn lint(flags: &HashMap<String, String>) -> Result<()> {
+    let src = PathBuf::from(
+        flags
+            .get("src")
+            .map(String::as_str)
+            .unwrap_or("rust/src"),
+    );
+    if !src.is_dir() {
+        bail!(
+            "lint: source root {src:?} is not a directory (run from the repo \
+             root or pass --src)"
+        );
+    }
+    let baseline_path = PathBuf::from(
+        flags
+            .get("baseline")
+            .map(String::as_str)
+            .unwrap_or("LINT_BASELINE.json"),
+    );
+    let baseline_set = onepiece::lint::load_baseline(&baseline_path)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let outcome = onepiece::lint::lint_tree(&src, &baseline_set)
+        .with_context(|| format!("scanning {src:?}"))?;
+
+    if flags.contains_key("write-baseline") {
+        let text = onepiece::lint::baseline::render(&outcome.violations);
+        std::fs::write(&baseline_path, text)
+            .with_context(|| format!("writing {baseline_path:?}"))?;
+        println!(
+            "lint: wrote {} fingerprints to {}",
+            outcome.violations.len(),
+            baseline_path.display()
+        );
+    }
+
+    for v in &outcome.violations {
+        println!("{}:{}: [{}] {}", v.file, v.line, v.rule, v.message);
+    }
+    let report_path = PathBuf::from(
+        flags
+            .get("json")
+            .map(String::as_str)
+            .unwrap_or("LINT_REPORT.json"),
+    );
+    std::fs::write(&report_path, outcome.to_json().to_string_compact())
+        .with_context(|| format!("writing {report_path:?}"))?;
+    println!("{}", outcome.summary());
+    if !outcome.violations.is_empty() && !flags.contains_key("write-baseline") {
+        bail!("lint failed with {} violations", outcome.violations.len());
+    }
     Ok(())
 }

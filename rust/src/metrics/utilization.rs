@@ -29,7 +29,7 @@ pub struct UtilizationWindow {
     clock: Arc<dyn Clock>,
     window_ns: u64,
     busy_since: AtomicU64, // 0 = currently idle
-    spans: Mutex<Vec<Span>>,
+    spans: Mutex<Vec<Span>>, // lint: lock-rank(util_spans, 93)
 }
 
 impl UtilizationWindow {

@@ -21,7 +21,7 @@ struct Replica {
     node: NodeId,
     alive: AtomicBool,
     /// Paxos acceptor per term.
-    acceptors: Mutex<HashMap<u64, Arc<Mutex<Acceptor>>>>,
+    acceptors: Mutex<HashMap<u64, Arc<Mutex<Acceptor>>>>, // lint: lock-rank(election_acceptors, 21)
 }
 
 impl Replica {
@@ -40,7 +40,7 @@ pub struct NmCluster {
     replicas: Vec<Replica>,
     clock: Arc<dyn Clock>,
     heartbeat_timeout_ns: u64,
-    state: Mutex<ClusterState>,
+    state: Mutex<ClusterState>, // lint: lock-rank(election_state, 22)
 }
 
 struct ClusterState {

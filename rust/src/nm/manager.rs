@@ -88,7 +88,7 @@ struct State {
 
 /// The central NodeManager (primary replica). Cheap handle: wrap in Arc.
 pub struct NodeManager {
-    state: Mutex<State>,
+    state: Mutex<State>, // lint: lock-rank(nm_state, 20)
     clock: Arc<dyn Clock>,
     /// Scale-up utilization threshold (paper default 0.85).
     pub util_threshold: f64,

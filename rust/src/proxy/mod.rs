@@ -81,7 +81,7 @@ pub struct Proxy {
     tracker: Arc<RequestTracker>,
     /// Entrance-stage senders per app (paired with their ring region so
     /// forwards can record the request's location), round-robin.
-    senders: Mutex<HashMap<AppId, AppSenders>>,
+    senders: Mutex<HashMap<AppId, AppSenders>>, // lint: lock-rank(proxy_senders, 31)
     /// Per-priority lifetime counters (indexed by [`Priority::index`]),
     /// shared into the set's metrics registry as
     /// `accepted.<priority>` / `rejected.<priority>`.

@@ -26,7 +26,7 @@ pub struct RequestMonitor {
     /// Fraction of the window budget reserved for Interactive traffic
     /// (0.0 disables the reserve).
     interactive_reserve: f64,
-    admitted: Mutex<VecDeque<u64>>,
+    admitted: Mutex<VecDeque<u64>>, // lint: lock-rank(monitor, 30)
 }
 
 impl RequestMonitor {

@@ -121,9 +121,9 @@ pub struct Fabric {
 
 #[derive(Default)]
 struct FabricInner {
-    regions: Mutex<HashMap<RegionId, MemoryRegion>>,
+    regions: Mutex<HashMap<RegionId, MemoryRegion>>, // lint: lock-rank(fabric_regions, 80)
     next_id: AtomicU64,
-    config: Mutex<FabricConfig>,
+    config: Mutex<FabricConfig>, // lint: lock-rank(fabric_config, 81)
     // Hot-path mirror of `config` (EXPERIMENTS.md §Perf: a Mutex lock per
     // verb — 12 verbs per ring push before the e15 coalescing, ~6 after —
     // dominated small-message cost).

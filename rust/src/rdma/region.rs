@@ -95,8 +95,10 @@ impl MemoryRegion {
         let mut chunks = data.chunks_exact(8);
         let mut w = off / 8;
         for c in chunks.by_ref() {
-            self.inner.words[w]
-                .store(u64::from_le_bytes(c.try_into().unwrap()), Ordering::Relaxed);
+            // chunks_exact(8) yields exactly-8-byte slices.
+            let mut b = [0u8; 8];
+            b.copy_from_slice(c);
+            self.inner.words[w].store(u64::from_le_bytes(b), Ordering::Relaxed);
             w += 1;
         }
         let rem = chunks.remainder();
@@ -188,6 +190,8 @@ impl PayloadDescriptor {
         if bytes.len() != PAYLOAD_DESC_BYTES {
             return None;
         }
+        // Length == PAYLOAD_DESC_BYTES checked above; every 8-byte
+        // window is in bounds and exactly sized. lint: allow(l1)
         let w = |i: usize| u64::from_le_bytes(bytes[i * 8..i * 8 + 8].try_into().unwrap());
         Some(Self {
             region: RegionId(w(0)),

@@ -116,9 +116,8 @@ impl RingConsumer {
         self.scratch.resize(frame_len, 0);
         self.region.read_bytes(phys, &mut self.scratch);
 
-        let payload_len =
-            u32::from_le_bytes(self.scratch[0..4].try_into().unwrap()) as usize;
-        let stored_crc = u32::from_le_bytes(self.scratch[4..8].try_into().unwrap());
+        let payload_len = super::le_u32(&self.scratch) as usize;
+        let stored_crc = super::le_u32(&self.scratch[4..]);
 
         if payload_len + layout::FRAME_HDR > frame_len {
             self.clear_and_advance(slot_off, next_v);

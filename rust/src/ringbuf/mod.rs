@@ -195,6 +195,18 @@ pub fn create_ring(fabric: &Fabric, config: RingConfig) -> (RegionId, MemoryRegi
     (id, region)
 }
 
+/// Little-endian u32 from the first 4 bytes of `b`. Panic-free by
+/// construction: fewer than 4 bytes (a torn frame header) decodes as 0,
+/// which the length/checksum validation downstream rejects exactly like
+/// any other corrupt frame — the ring's checksum-discard philosophy,
+/// never a worker crash.
+pub(crate) fn le_u32(b: &[u8]) -> u32 {
+    match b {
+        [a, b2, c, d, ..] => u32::from_le_bytes([*a, *b2, *c, *d]),
+        _ => 0,
+    }
+}
+
 /// Reconstruct a ring's geometry from its region (remote senders that
 /// only know the region id). Timeout tuning falls back to defaults.
 pub fn ring_config_of(fabric: &Fabric, id: RegionId) -> Option<RingConfig> {

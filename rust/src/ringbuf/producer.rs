@@ -482,8 +482,21 @@ pub struct ProducerSession<'a> {
     done_reserve: bool,
 }
 
+impl<'a> Drop for ProducerSession<'a> {
+    fn drop(&mut self) {
+        // The lock-order witness releases here, not in `unlock()`: a
+        // session abandoned mid-protocol (fault injection, steal) leaves
+        // the *remote* lock word set by design, but this thread no longer
+        // holds anything in the ordering sense once the session dies.
+        crate::lint::runtime::ring_lock_released(self.prod.qp.region_id().0);
+    }
+}
+
 impl<'a> ProducerSession<'a> {
     fn new(prod: &'a RingProducer, sim_ns: u64, verbs: u64, stole_lock: bool, lock_word: u64) -> Self {
+        // Witness the spin-lock acquisition (rank check only; the lease
+        // steal bounds waiting, so no wait-for edges are recorded).
+        crate::lint::runtime::ring_lock_acquired(prod.qp.region_id().0);
         Self {
             prod,
             sim_ns,

@@ -158,11 +158,11 @@ impl SingleRingConsumer {
         let mut hdr = [0u8; 8];
         self.region
             .read_bytes(slayout::BUF + pos as usize, &mut hdr);
-        let mut payload_len = u32::from_le_bytes(hdr[0..4].try_into().unwrap());
+        let mut payload_len = super::le_u32(&hdr);
         if payload_len == u32::MAX {
             self.head += cap - pos;
             self.region.read_bytes(slayout::BUF, &mut hdr);
-            payload_len = u32::from_le_bytes(hdr[0..4].try_into().unwrap());
+            payload_len = super::le_u32(&hdr);
         }
         let payload_len = payload_len as usize;
         let frame_len = (dlayout::FRAME_HDR + payload_len + 7) & !7;

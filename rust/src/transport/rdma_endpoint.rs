@@ -8,7 +8,9 @@
 //! budget, are *dropped* — §9: OnePiece does not retransmit.
 
 use crate::metrics::{Counter, Gauge, Histogram, Registry};
-use crate::rdma::{Fabric, PayloadDescriptor, PayloadStager, RegionId, PAYLOAD_RELEASE_OFF};
+use crate::rdma::{
+    Fabric, PayloadDescriptor, PayloadStager, RdmaError, RegionId, PAYLOAD_RELEASE_OFF,
+};
 use crate::ringbuf::{
     create_ring, Frame, FrameKind, PopError, PushError, RingConfig, RingConsumer, RingProducer,
 };
@@ -138,14 +140,14 @@ impl RdmaEndpoint {
     }
 
     /// Create a sender handle for this endpoint usable from any node on
-    /// the same fabric (same Workflow Set).
-    pub fn sender(&self) -> RdmaSender {
-        let qp = self
-            .fabric
-            .connect(self.region_id)
-            .expect("endpoint region vanished");
+    /// the same fabric (same Workflow Set). Fails only if the ring
+    /// region was deregistered out from under the endpoint (a dead
+    /// instance being reclaimed) — callers drop or re-route rather than
+    /// crash the worker.
+    pub fn sender(&self) -> Result<RdmaSender, RdmaError> {
+        let qp = self.fabric.connect(self.region_id)?;
         let id = NEXT_PRODUCER_ID.fetch_add(1, Ordering::Relaxed);
-        RdmaSender {
+        Ok(RdmaSender {
             producer: RingProducer::new(qp, self.config, self.clock.clone(), id),
             fabric: self.fabric.clone(),
             max_retries: 64,
@@ -154,19 +156,21 @@ impl RdmaEndpoint {
             dropped: 0,
             rendezvous_threshold: 0,
             stager: None,
-        }
+        })
     }
 
     /// Build a sender knowing only the fabric and the ring's region id —
     /// the ring geometry is read from the region header (this is how
     /// ResultDeliver connects to downstream instances it learned about
-    /// from the NodeManager's routing table).
-    pub fn sender_for(fabric: &Fabric, region_id: RegionId) -> RdmaSender {
+    /// from the NodeManager's routing table). Fails if the region is
+    /// gone or is not a ring buffer (a routing-table entry that outlived
+    /// its instance) — callers skip the hop and let NM repair re-route.
+    pub fn sender_for(fabric: &Fabric, region_id: RegionId) -> Result<RdmaSender, RdmaError> {
         let config = crate::ringbuf::ring_config_of(fabric, region_id)
-            .expect("region is not a ring buffer");
-        let qp = fabric.connect(region_id).expect("region vanished");
+            .ok_or(RdmaError::UnknownRegion(region_id))?;
+        let qp = fabric.connect(region_id)?;
         let id = NEXT_PRODUCER_ID.fetch_add(1, Ordering::Relaxed);
-        RdmaSender {
+        Ok(RdmaSender {
             producer: RingProducer::new(qp, config, Arc::new(SystemClock), id),
             fabric: fabric.clone(),
             max_retries: 64,
@@ -175,7 +179,7 @@ impl RdmaEndpoint {
             dropped: 0,
             rendezvous_threshold: 0,
             stager: None,
-        }
+        })
     }
 
     /// Non-blocking receive. Corrupted frames are counted and skipped
@@ -335,14 +339,15 @@ impl RdmaSender {
     }
 
     fn stager_mut(&mut self) -> &mut PayloadStager {
-        if self.stager.is_none() {
-            let mut st = PayloadStager::new(self.fabric.clone());
-            if let Some(m) = &self.metrics {
-                st.set_gauge(m.payload_regions_live.clone());
+        let fabric = self.fabric.clone();
+        let gauge = self.metrics.as_ref().map(|m| m.payload_regions_live.clone());
+        self.stager.get_or_insert_with(|| {
+            let mut st = PayloadStager::new(fabric);
+            if let Some(g) = gauge {
+                st.set_gauge(g);
             }
-            self.stager = Some(st);
-        }
-        self.stager.as_mut().unwrap()
+            st
+        })
     }
 
     /// Reclaim staged slabs whose consumers have all released them
@@ -590,7 +595,7 @@ mod tests {
     fn send_recv() {
         let fabric = Fabric::ideal();
         let mut ep = RdmaEndpoint::new(&fabric, RingConfig::default());
-        let mut tx = ep.sender();
+        let mut tx = ep.sender().unwrap();
         assert!(tx.send(&msg(1)));
         assert!(tx.send(&msg(2)));
         assert_eq!(ep.recv().unwrap(), msg(1));
@@ -602,8 +607,8 @@ mod tests {
     fn multiple_senders_fifo_per_sender() {
         let fabric = Fabric::ideal();
         let mut ep = RdmaEndpoint::new(&fabric, RingConfig::default());
-        let mut a = ep.sender();
-        let mut b = ep.sender();
+        let mut a = ep.sender().unwrap();
+        let mut b = ep.sender().unwrap();
         for i in 0..10 {
             if i % 2 == 0 {
                 a.send(&msg(i));
@@ -631,7 +636,7 @@ mod tests {
                 ..Default::default()
             },
         );
-        let senders: Vec<_> = (0..4).map(|_| ep.sender()).collect();
+        let senders: Vec<_> = (0..4).map(|_| ep.sender().unwrap()).collect();
         let handles: Vec<_> = senders
             .into_iter()
             .enumerate()
@@ -661,7 +666,7 @@ mod tests {
     fn send_batch_delivers_in_order_under_one_push_round() {
         let fabric = Fabric::ideal();
         let mut ep = RdmaEndpoint::new(&fabric, RingConfig::default());
-        let mut tx = ep.sender();
+        let mut tx = ep.sender().unwrap();
         let m = RingMetrics::from_registry(&crate::metrics::Registry::new());
         tx.set_metrics(m.clone());
         let msgs: Vec<WorkflowMessage> = (0..5).map(msg).collect();
@@ -688,7 +693,7 @@ mod tests {
                 ..Default::default()
             },
         );
-        let mut tx = ep.sender();
+        let mut tx = ep.sender().unwrap();
         tx.max_retries = 2;
         let msgs: Vec<WorkflowMessage> = (0..4).map(msg).collect();
         let encoded: Vec<Vec<u8>> = msgs.iter().map(|m| m.encode()).collect();
@@ -705,7 +710,7 @@ mod tests {
     fn recv_many_drains_a_burst_in_one_round() {
         let fabric = Fabric::ideal();
         let mut ep = RdmaEndpoint::new(&fabric, RingConfig::default());
-        let mut tx = ep.sender();
+        let mut tx = ep.sender().unwrap();
         for i in 0..6 {
             assert!(tx.send(&msg(i)));
         }
@@ -743,7 +748,7 @@ mod tests {
         let m = RingMetrics::from_registry(&reg);
         let mut ep = RdmaEndpoint::new(&fabric, RingConfig::default());
         ep.set_metrics(m.clone());
-        let mut tx = ep.sender();
+        let mut tx = ep.sender().unwrap();
         tx.set_metrics(m.clone());
         tx.set_rendezvous_threshold(1024);
 
@@ -789,7 +794,7 @@ mod tests {
         let m = RingMetrics::from_registry(&reg);
         let mut ep = RdmaEndpoint::new(&fabric, RingConfig::default());
         ep.set_metrics(m.clone());
-        let mut tx = ep.sender();
+        let mut tx = ep.sender().unwrap();
         tx.set_metrics(m.clone());
         tx.set_rendezvous_threshold(1024);
         assert!(tx.send(&big_msg(1, 4096)));
@@ -809,7 +814,7 @@ mod tests {
         let m = RingMetrics::from_registry(&reg);
         let mut ep = RdmaEndpoint::new(&fabric, RingConfig::default());
         ep.set_metrics(m.clone());
-        let mut tx = ep.sender();
+        let mut tx = ep.sender().unwrap();
         tx.set_metrics(m.clone());
         tx.set_rendezvous_threshold(1024);
         let msgs = vec![msg(0), big_msg(1, 8192), msg(2), big_msg(3, 4096)];
@@ -840,7 +845,7 @@ mod tests {
                 ..Default::default()
             },
         );
-        let mut tx = ep.sender();
+        let mut tx = ep.sender().unwrap();
         tx.max_retries = 2;
         assert!(tx.send(&msg(0)));
         assert!(tx.send(&msg(1)));

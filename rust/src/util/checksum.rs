@@ -81,11 +81,16 @@ unsafe fn crc32c_hw(data: &[u8]) -> u32 {
     let mut crc = 0xFFFF_FFFFu64;
     let mut chunks = data.chunks_exact(8);
     for c in chunks.by_ref() {
-        crc = _mm_crc32_u64(crc, u64::from_le_bytes(c.try_into().unwrap()));
+        let mut b = [0u8; 8];
+        b.copy_from_slice(c);
+        // SAFETY: caller guarantees SSE4.2 (the `#[target_feature]`
+        // contract); the intrinsic itself has no other preconditions.
+        crc = unsafe { _mm_crc32_u64(crc, u64::from_le_bytes(b)) };
     }
     let mut crc = crc as u32;
     for &b in chunks.remainder() {
-        crc = _mm_crc32_u8(crc, b);
+        // SAFETY: as above.
+        crc = unsafe { _mm_crc32_u8(crc, b) };
     }
     !crc
 }

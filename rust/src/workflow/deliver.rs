@@ -129,16 +129,23 @@ impl ResultDeliver {
         for (_, hops) in &routes {
             for hop in hops {
                 if let NextHop::Instance(rid) = hop {
-                    self.senders.entry(*rid).or_insert_with(|| {
-                        // Producers only need the region id; geometry is
-                        // read from the ring header.
-                        let mut tx = RdmaEndpoint::sender_for(&self.fabric, *rid);
-                        if let Some(m) = &self.metrics {
-                            tx.set_metrics(m.clone());
-                        }
-                        tx.set_rendezvous_threshold(threshold);
-                        tx
-                    });
+                    if self.senders.contains_key(rid) {
+                        continue;
+                    }
+                    // Producers only need the region id; geometry is
+                    // read from the ring header. A region that vanished
+                    // between the NM building this assignment and us
+                    // applying it (instance died mid-update) is skipped:
+                    // deliveries to it count as drops until the next
+                    // route repair replaces the hop.
+                    let Ok(mut tx) = RdmaEndpoint::sender_for(&self.fabric, *rid) else {
+                        continue;
+                    };
+                    if let Some(m) = &self.metrics {
+                        tx.set_metrics(m.clone());
+                    }
+                    tx.set_rendezvous_threshold(threshold);
+                    self.senders.insert(*rid, tx);
                 }
             }
         }
@@ -221,7 +228,14 @@ impl ResultDeliver {
         }
         for (rid, idxs) in groups {
             let ckpt = self.checkpointing && !self.dbs.is_empty();
-            let tx = self.senders.get_mut(&rid).expect("sender built in set_routes");
+            // A route without a live producer (its region vanished
+            // before set_routes could connect) drops the whole group —
+            // same observable outcome as a dead ring, and the route
+            // repair path replaces the hop.
+            let Some(tx) = self.senders.get_mut(&rid) else {
+                self.dropped += idxs.len() as u64;
+                continue;
+            };
             // Encode each member once (the Arc wrap for checkpoint
             // sharing is deferred to the accepted members, so the
             // checkpointing-off path pays no extra copy). A member that
@@ -283,7 +297,12 @@ impl ResultDeliver {
             NextHop::Instance(rid) => {
                 let rid = *rid;
                 let ckpt = self.checkpointing && !self.dbs.is_empty();
-                let tx = self.senders.get_mut(&rid).expect("sender built in set_routes");
+                // No producer for the hop (region vanished before a
+                // sender could connect): drop, as for a dead ring.
+                let Some(tx) = self.senders.get_mut(&rid) else {
+                    self.dropped += 1;
+                    return Delivery::Dropped;
+                };
                 if ckpt {
                     // Encode once; the ring push and every replica's
                     // checkpoint share the same buffer.

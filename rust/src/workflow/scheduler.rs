@@ -14,15 +14,16 @@
 
 use crate::client::Priority;
 use crate::config::SchedMode;
+use crate::lint::runtime::{WitnessMutex, RANK_SCHEDULER};
 use crate::transport::{AppId, StageId, WorkflowMessage};
 use crate::util::Uid;
 use std::collections::VecDeque;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar};
 use std::time::{Duration, Instant};
 
 /// Shared scheduling queue between the RS thread and the worker pool.
 pub struct SchedQueue {
-    inner: Mutex<Inner>,
+    inner: WitnessMutex<Inner>, // lint: lock-rank(scheduler, 45)
     cv: Condvar,
 }
 
@@ -59,7 +60,7 @@ impl SchedQueue {
         max_starvation: Duration,
     ) -> Arc<Self> {
         Arc::new(Self {
-            inner: Mutex::new(Inner {
+            inner: WitnessMutex::new("scheduler", RANK_SCHEDULER, Inner {
                 mode,
                 workers: workers.max(1),
                 bands: Default::default(),
@@ -212,7 +213,7 @@ impl SchedQueue {
             if now >= deadline {
                 return None;
             }
-            let (guard, _) = self.cv.wait_timeout(g, deadline - now).unwrap();
+            let (guard, _) = g.wait_timeout(&self.cv, deadline - now).unwrap();
             g = guard;
         }
     }
@@ -247,7 +248,7 @@ impl SchedQueue {
             if now >= deadline {
                 return None;
             }
-            let (guard, _) = self.cv.wait_timeout(g, deadline - now).unwrap();
+            let (guard, _) = g.wait_timeout(&self.cv, deadline - now).unwrap();
             g = guard;
         }
     }

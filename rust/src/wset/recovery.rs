@@ -209,12 +209,21 @@ impl RecoverySweep {
                 let mut sent = false;
                 for k in 0..regions.len() {
                     let target = regions[(start + k) % regions.len()];
-                    let tx = self.senders.entry(target).or_insert_with(|| {
-                        let mut tx = RdmaEndpoint::sender_for(&self.fabric, target);
-                        tx.set_metrics(self.ring_metrics.clone());
-                        tx.set_rendezvous_threshold(self.rendezvous_threshold);
-                        tx
-                    });
+                    let tx = match self.senders.entry(target) {
+                        std::collections::hash_map::Entry::Occupied(e) => e.into_mut(),
+                        std::collections::hash_map::Entry::Vacant(e) => {
+                            // The replacement ring may itself have died
+                            // since repair picked it: skip to the next
+                            // sibling instead of crashing the sweeper.
+                            let Ok(mut tx) = RdmaEndpoint::sender_for(&self.fabric, target)
+                            else {
+                                continue;
+                            };
+                            tx.set_metrics(self.ring_metrics.clone());
+                            tx.set_rendezvous_threshold(self.rendezvous_threshold);
+                            e.insert(tx)
+                        }
+                    };
                     if tx.send(&msg) {
                         self.tracker.note_location(uid, target);
                         self.requests_recovered.inc();

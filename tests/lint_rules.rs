@@ -1,0 +1,311 @@
+//! Fixture tests for the in-crate lint pass (`onepiece lint`) and the
+//! runtime lock-order witness.
+//!
+//! Each rule gets a positive hit, plus the suppression paths it must
+//! honor (`// lint: allow(...)` and the checked-in baseline). The last
+//! test is the self-check the CI lint job relies on: the shipped tree
+//! must be clean under its shipped baseline.
+
+use onepiece::lint::{baseline, lint_sources, lint_tree, load_baseline};
+use std::collections::HashSet;
+use std::path::Path;
+
+fn src(path: &str, body: &str) -> Vec<(String, String)> {
+    vec![(path.to_string(), body.to_string())]
+}
+
+fn lint_one(path: &str, body: &str) -> onepiece::lint::LintOutcome {
+    lint_sources(&src(path, body), &HashSet::new())
+}
+
+// ---------------------------------------------------------------- L1
+
+#[test]
+fn l1_flags_unwrap_in_data_plane() {
+    let out = lint_one(
+        "ringbuf/fake.rs",
+        "fn f(x: Option<u32>) -> u32 {\n    x.unwrap()\n}\n",
+    );
+    assert_eq!(out.violations.len(), 1, "{}", out.summary());
+    assert_eq!(out.violations[0].rule, "l1");
+    assert_eq!(out.violations[0].line, 2);
+}
+
+#[test]
+fn l1_flags_panic_and_expect() {
+    let out = lint_one(
+        "rdma/fake.rs",
+        "fn f(x: Option<u32>) {\n    let _ = x.expect(\"gone\");\n    panic!(\"boom\");\n}\n",
+    );
+    let rules: Vec<&str> = out.violations.iter().map(|v| v.rule).collect();
+    assert_eq!(rules, ["l1", "l1"], "{}", out.summary());
+}
+
+#[test]
+fn l1_poison_propagation_is_exempt() {
+    let out = lint_one(
+        "workflow/fake.rs",
+        "fn f(m: &std::sync::Mutex<u32>) -> u32 {\n    *m.lock().unwrap()\n}\n",
+    );
+    assert!(out.violations.is_empty(), "{}", out.summary());
+}
+
+#[test]
+fn l1_test_modules_are_exempt() {
+    let out = lint_one(
+        "db/fake.rs",
+        "#[cfg(test)]\nmod tests {\n    fn g() {\n        None::<u32>.unwrap();\n    }\n}\n",
+    );
+    assert!(out.violations.is_empty(), "{}", out.summary());
+}
+
+#[test]
+fn l1_ignores_non_data_plane_modules() {
+    let out = lint_one(
+        "util/fake.rs",
+        "fn f(x: Option<u32>) -> u32 {\n    x.unwrap()\n}\n",
+    );
+    assert!(out.violations.is_empty(), "{}", out.summary());
+}
+
+#[test]
+fn l1_allow_comment_suppresses() {
+    let out = lint_one(
+        "cache/fake.rs",
+        "fn f(x: Option<u32>) -> u32 {\n    x.unwrap() // lint: allow(l1)\n}\n",
+    );
+    assert!(out.violations.is_empty(), "{}", out.summary());
+    assert_eq!(out.suppressed, 1);
+}
+
+#[test]
+fn l1_allow_on_preceding_comment_line_attaches_to_next_line() {
+    let out = lint_one(
+        "cache/fake.rs",
+        "fn f(x: Option<u32>) -> u32 {\n    // lint: allow(l1)\n    x.unwrap()\n}\n",
+    );
+    assert!(out.violations.is_empty(), "{}", out.summary());
+    assert_eq!(out.suppressed, 1);
+}
+
+// ---------------------------------------------------------------- L2
+
+const L2_BAD: &str = "use std::sync::{Condvar, Mutex};\n\
+struct S {\n    m: Mutex<u32>,\n    cv: Condvar,\n}\n\
+impl S {\n    fn f(&self) {\n        let g = self.m.lock().unwrap();\n        let _g = self.cv.wait(g).unwrap();\n    }\n}\n";
+
+#[test]
+fn l2_flags_unbounded_condvar_wait() {
+    let out = lint_one("workflow/fake.rs", L2_BAD);
+    assert_eq!(out.violations.len(), 1, "{}", out.summary());
+    assert_eq!(out.violations[0].rule, "l2");
+}
+
+#[test]
+fn l2_wait_timeout_is_clean() {
+    let body = L2_BAD.replace(".wait(g)", ".wait_timeout(g, d)");
+    let out = lint_one("workflow/fake.rs", &body);
+    assert!(out.violations.is_empty(), "{}", out.summary());
+}
+
+#[test]
+fn l2_applies_outside_data_plane_too() {
+    let out = lint_one("nm/fake.rs", L2_BAD);
+    assert_eq!(out.violations.len(), 1, "{}", out.summary());
+}
+
+// ---------------------------------------------------------------- L3
+
+const L3_INVERTED: &str = "struct S {\n\
+    a: Mutex<u32>, // lint: lock-rank(outer, 50)\n\
+    b: Mutex<u32>, // lint: lock-rank(inner, 40)\n\
+}\n\
+impl S {\n    fn f(&self) {\n        let g1 = self.a.lock().unwrap();\n        let g2 = self.b.lock().unwrap();\n        drop(g2);\n        drop(g1);\n    }\n}\n";
+
+#[test]
+fn l3_flags_rank_inversion() {
+    let out = lint_one("workflow/fake.rs", L3_INVERTED);
+    assert_eq!(out.violations.len(), 1, "{}", out.summary());
+    assert_eq!(out.violations[0].rule, "l3");
+    assert!(out.violations[0].message.contains("strictly ascend"));
+}
+
+#[test]
+fn l3_ascending_order_is_clean() {
+    // Same function, acquisition order matching the ranks.
+    let body = L3_INVERTED
+        .replace("lock-rank(outer, 50)", "lock-rank(outer, 40)")
+        .replace("lock-rank(inner, 40)", "lock-rank(inner, 50)");
+    let out = lint_one("workflow/fake.rs", &body);
+    assert!(out.violations.is_empty(), "{}", out.summary());
+}
+
+#[test]
+fn l3_early_drop_releases_the_guard() {
+    // outer is dropped before inner is taken: no nesting, no inversion.
+    let body = "struct S {\n\
+    a: Mutex<u32>, // lint: lock-rank(outer, 50)\n\
+    b: Mutex<u32>, // lint: lock-rank(inner, 40)\n\
+}\n\
+impl S {\n    fn f(&self) {\n        let g1 = self.a.lock().unwrap();\n        drop(g1);\n        let g2 = self.b.lock().unwrap();\n        drop(g2);\n    }\n}\n";
+    let out = lint_one("workflow/fake.rs", body);
+    assert!(out.violations.is_empty(), "{}", out.summary());
+}
+
+// ---------------------------------------------------------------- L4
+
+#[test]
+fn l4_flags_unaccounted_verb_call_site() {
+    let out = lint_one(
+        "transport/fake.rs",
+        "impl X {\n    fn send(&self) {\n        let _ = self.qp.post_write_words(0, &[1]);\n    }\n}\n",
+    );
+    assert_eq!(out.violations.len(), 1, "{}", out.summary());
+    assert_eq!(out.violations[0].rule, "l4");
+}
+
+#[test]
+fn l4_accounted_call_site_is_clean() {
+    let out = lint_one(
+        "transport/fake.rs",
+        "impl X {\n    fn send(&self, m: &mut M) {\n        let _ = self.qp.post_write_words(0, &[1]);\n        m.verbs += 1;\n    }\n}\n",
+    );
+    assert!(out.violations.is_empty(), "{}", out.summary());
+}
+
+// ---------------------------------------------------------------- L5
+
+#[test]
+fn l5_flags_wall_clock_in_key_derivation() {
+    let out = lint_one(
+        "cache/key.rs",
+        "fn salt() -> u64 {\n    let _t = std::time::Instant::now();\n    0\n}\n",
+    );
+    assert_eq!(out.violations.len(), 1, "{}", out.summary());
+    assert_eq!(out.violations[0].rule, "l5");
+}
+
+#[test]
+fn l5_other_cache_files_may_read_clocks() {
+    let out = lint_one(
+        "cache/tier_fake.rs",
+        "fn age() -> std::time::Instant {\n    std::time::Instant::now()\n}\n",
+    );
+    assert!(out.violations.is_empty(), "{}", out.summary());
+}
+
+// ---------------------------------------------------------- baseline
+
+#[test]
+fn baseline_filters_by_fingerprint_not_line_number() {
+    let body = "fn f(x: Option<u32>) -> u32 {\n    x.unwrap()\n}\n";
+    let first = lint_one("ringbuf/fake.rs", body);
+    assert_eq!(first.violations.len(), 1);
+    let accepted = baseline::render(&first.violations);
+    let set = baseline::parse(&accepted).unwrap();
+
+    // Same violation, shifted two lines down: still baselined.
+    let shifted = format!("// pad\n// pad\n{body}");
+    let out = lint_sources(&src("ringbuf/fake.rs", &shifted), &set);
+    assert!(out.violations.is_empty(), "{}", out.summary());
+    assert_eq!(out.baselined, 1);
+
+    // A *different* violation in the same file is not swallowed.
+    let other = "fn g(y: Option<u64>) -> u64 {\n    y.unwrap()\n}\n";
+    let out = lint_sources(&src("ringbuf/fake.rs", other), &set);
+    assert_eq!(out.violations.len(), 1, "{}", out.summary());
+}
+
+#[test]
+fn baseline_accepts_empty_entries_file() {
+    let set = baseline::parse("{\"entries\":[]}").unwrap();
+    assert!(set.is_empty());
+}
+
+// ----------------------------------------------------- self-check
+
+/// The contract the CI lint job greps for: the shipped tree is clean
+/// under the shipped (empty) baseline.
+#[test]
+fn shipped_tree_is_clean() {
+    let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let set = load_baseline(&manifest.join("LINT_BASELINE.json")).unwrap();
+    let out = lint_tree(&manifest.join("rust/src"), &set).unwrap();
+    assert!(
+        out.violations.is_empty(),
+        "shipped tree must lint clean: {}\n{}",
+        out.summary(),
+        out.violations
+            .iter()
+            .map(|v| format!("{}:{}: [{}] {}", v.file, v.line, v.rule, v.message))
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}
+
+// ------------------------------------------------- runtime witness
+
+/// The witness hooks are compiled under `debug_assertions` (always on
+/// for `cargo test`) or the `lockwitness` feature.
+#[cfg(any(debug_assertions, feature = "lockwitness"))]
+mod witness {
+    use onepiece::lint::runtime::WitnessMutex;
+    use std::sync::{Arc, Barrier};
+
+    fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+        payload
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+            .unwrap_or_default()
+    }
+
+    #[test]
+    fn rank_inversion_panics_with_held_stack() {
+        let a = Arc::new(WitnessMutex::new("wit_outer", 50, 0u32));
+        let b = Arc::new(WitnessMutex::new("wit_inner", 40, 0u32));
+        let h = std::thread::spawn(move || {
+            let _ga = a.lock().unwrap();
+            let _gb = b.lock().unwrap(); // rank 40 under rank 50: panics
+        });
+        let err = h.join().expect_err("inversion must panic");
+        let msg = panic_message(err);
+        assert!(msg.contains("ranks must strictly ascend"), "{msg}");
+        assert!(msg.contains("wit_outer"), "{msg}");
+    }
+
+    #[test]
+    fn abba_cycle_is_detected_and_reported() {
+        // Unranked witnesses skip the rank check, so a real ABBA cycle
+        // can form and must be caught by the wait-for-graph DFS. The
+        // detecting thread panics; its guard drop unblocks the peer.
+        let a = Arc::new(WitnessMutex::new_unranked("cyc_a", 0u32));
+        let b = Arc::new(WitnessMutex::new_unranked("cyc_b", 0u32));
+        let gate = Arc::new(Barrier::new(2));
+
+        let (a1, b1, g1) = (a.clone(), b.clone(), gate.clone());
+        let t1 = std::thread::spawn(move || {
+            let _ga = a1.lock().unwrap();
+            g1.wait();
+            // Blocks until t2's witness panic releases `cyc_b` (the
+            // lock arrives poisoned then — either result is fine).
+            let _gb = b1.lock();
+        });
+        let t2 = std::thread::spawn(move || {
+            let _gb = b.lock().unwrap();
+            gate.wait();
+            // Give t1 time to register its wait-for edge on `cyc_b`.
+            std::thread::sleep(std::time::Duration::from_millis(100));
+            let _ga = a.lock();
+        });
+
+        let results = [t1.join(), t2.join()];
+        let errs: Vec<String> = results
+            .into_iter()
+            .filter_map(|r| r.err().map(panic_message))
+            .collect();
+        assert_eq!(errs.len(), 1, "exactly one thread detects the cycle: {errs:?}");
+        assert!(errs[0].contains("deadlock cycle detected"), "{}", errs[0]);
+        assert!(errs[0].contains("cyc_a") && errs[0].contains("cyc_b"), "{}", errs[0]);
+    }
+}
