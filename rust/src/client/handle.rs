@@ -103,6 +103,9 @@ pub struct RequestHandle {
     priority: Priority,
     tracker: Arc<RequestTracker>,
     db: Arc<DbClient>,
+    /// The admitting set's tracer, when tracing is enabled — lets the
+    /// caller pull this request's stitched trace after completion.
+    tracer: Option<Arc<crate::trace::Tracer>>,
     inner: Mutex<HandleInner>, // lint: lock-rank(handle, 35)
 }
 
@@ -132,8 +135,24 @@ impl RequestHandle {
             priority: opts.priority,
             tracker,
             db,
+            tracer: None,
             inner: Mutex::new(HandleInner { machine: RequestState::new(), result: None }),
         }
+    }
+
+    /// Attach the admitting set's tracer (gateways call this right after
+    /// [`RequestHandle::new`] when the deployment traces).
+    pub fn attach_tracer(&mut self, tracer: Arc<crate::trace::Tracer>) {
+        self.tracer = Some(tracer);
+    }
+
+    /// The stitched distributed trace for this request, if tracing is
+    /// enabled, the request completed, and its trace was kept (sampled
+    /// in, or slow enough for `trace.always_sample_slow_ms`). Drains the
+    /// component recorders on demand, so a trace is visible as soon as
+    /// its terminal event was recorded.
+    pub fn trace(&self) -> Option<crate::trace::Trace> {
+        self.tracer.as_ref()?.trace_of(self.uid)
     }
 
     /// The request UID assigned by the admitting proxy.

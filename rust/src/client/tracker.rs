@@ -109,6 +109,10 @@ pub struct RequestTracker {
     cancelled_ctr: Arc<Counter>,
     deadline_ctr: Arc<Counter>,
     failed_ctr: Arc<Counter>,
+    /// Trace hook for terminal-verdict events (set once at build when
+    /// tracing is on; recording is lock-free so it is safe under the
+    /// tracker lock).
+    trace: std::sync::OnceLock<crate::trace::TraceHook>,
     inner: WitnessMutex<HashMap<Uid, Entry>>, // lint: lock-rank(tracker, 40)
 }
 
@@ -123,7 +127,23 @@ impl RequestTracker {
             cancelled_ctr,
             deadline_ctr,
             failed_ctr,
+            trace: std::sync::OnceLock::new(),
             inner: WitnessMutex::new("tracker", RANK_TRACKER, HashMap::new()),
+        }
+    }
+
+    /// Attach the set's trace hook (build-time wiring, set once): the
+    /// tracker then records `Terminal{Cancelled|DeadlineExceeded|Failed}`
+    /// events as those verdicts are first reached.
+    pub fn set_trace(&self, hook: crate::trace::TraceHook) {
+        let _ = self.trace.set(hook);
+    }
+
+    /// Record a terminal verdict event for `uid` (first transition only;
+    /// call sites guard with their own newly-terminal checks).
+    fn trace_terminal(&self, uid: Uid, stage: Option<u32>, verdict: crate::trace::Verdict) {
+        if let Some(h) = self.trace.get() {
+            h.record(uid, stage, crate::trace::EventKind::Terminal { verdict });
         }
     }
 
@@ -216,6 +236,7 @@ impl RequestTracker {
         if e.replays_left == 0 {
             e.failed = true;
             self.failed_ctr.inc();
+            self.trace_terminal(uid, e.stage, crate::trace::Verdict::Failed);
             return ReplayVerdict::Exhausted;
         }
         e.replays_left -= 1;
@@ -279,6 +300,7 @@ impl RequestTracker {
         }
         e.failed = true;
         self.failed_ctr.inc();
+        self.trace_terminal(uid, e.stage, crate::trace::Verdict::Failed);
         true
     }
 
@@ -319,10 +341,12 @@ impl RequestTracker {
     /// a synthetic cancelled entry so late-arriving messages still drop.
     pub fn cancel(&self, uid: Uid) -> bool {
         let mut g = self.inner.lock().unwrap();
+        let mut stage = None;
         let newly = match g.get_mut(&uid) {
             Some(e) => {
                 let newly = !e.cancelled;
                 e.cancelled = true;
+                stage = e.stage;
                 newly
             }
             None => {
@@ -346,6 +370,7 @@ impl RequestTracker {
         };
         if newly {
             self.cancelled_ctr.inc();
+            self.trace_terminal(uid, stage, crate::trace::Verdict::Cancelled);
         }
         newly
     }
@@ -368,6 +393,7 @@ impl RequestTracker {
             if !e.deadline_counted {
                 e.deadline_counted = true;
                 self.deadline_ctr.inc();
+                self.trace_terminal(uid, e.stage, crate::trace::Verdict::DeadlineExceeded);
             }
             return InFlightVerdict::DeadlineExceeded;
         }
@@ -392,6 +418,7 @@ impl RequestTracker {
             if !e.deadline_counted {
                 e.deadline_counted = true;
                 self.deadline_ctr.inc();
+                self.trace_terminal(uid, e.stage, crate::trace::Verdict::DeadlineExceeded);
             }
             return TrackedState::DeadlineExceeded;
         }

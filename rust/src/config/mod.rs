@@ -12,7 +12,7 @@ mod types;
 pub use types::{
     AppConfig, BatchSettings, CacheSettings, ChaosSettings, ClusterConfig, ConfigError,
     DbSettings, ExecModel, FabricKind, NmSettings, ProxySettings, RdmaSettings,
-    RingSettings, SchedMode, StageConfig,
+    RingSettings, SchedMode, StageConfig, TraceSettings,
 };
 
 #[cfg(test)]

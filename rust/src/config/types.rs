@@ -278,6 +278,35 @@ impl Default for CacheSettings {
     }
 }
 
+/// Distributed-tracing settings ([`crate::trace`]). **Absent = tracing
+/// off**: without a `trace` block no `Tracer` or flight recorder is
+/// constructed, no `trace_*` counters are registered, and the request
+/// path is byte-identical to an untraced build.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceSettings {
+    /// Fraction of completed requests whose stitched trace is retained
+    /// (deterministic per-UID hash, so every component agrees). 1.0 =
+    /// keep everything (tests/demos), 0.01 = production-style sampling.
+    pub sample_rate: f64,
+    /// Flight-recorder capacity per component, in events (each slot is
+    /// 48 bytes). Overwrite-oldest on overflow.
+    pub buffer_events: usize,
+    /// Tail rule: a completed request slower than this is force-kept
+    /// even when the sample-rate hash says drop — the slow tail always
+    /// has exemplar traces. 0 = tail rule off.
+    pub always_sample_slow_ms: u64,
+}
+
+impl Default for TraceSettings {
+    fn default() -> Self {
+        Self {
+            sample_rate: 1.0,
+            buffer_events: 4096,
+            always_sample_slow_ms: 0,
+        }
+    }
+}
+
 /// Database tuning (§3.4).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct DbSettings {
@@ -328,6 +357,9 @@ pub struct ClusterConfig {
     /// proxy and workers never consult a cache and no slab memory is
     /// registered for it.
     pub cache: Option<CacheSettings>,
+    /// Per-request distributed tracing. **None = tracing off**; no
+    /// recorder memory, no `trace_*` counters, no hot-path writes.
+    pub trace: Option<TraceSettings>,
 }
 
 impl ClusterConfig {
@@ -401,6 +433,7 @@ impl ClusterConfig {
             rdma: RdmaSettings::default(),
             batch: None,
             cache: None,
+            trace: None,
         }
     }
 
@@ -490,6 +523,14 @@ impl ClusterConfig {
                 ));
             }
         }
+        if let Some(t) = &self.trace {
+            if !t.sample_rate.is_finite() || !(0.0..=1.0).contains(&t.sample_rate) {
+                return Err(err("trace.sample_rate must be in [0,1]"));
+            }
+            if t.buffer_events < 64 {
+                return Err(err("trace.buffer_events must be >= 64"));
+            }
+        }
         let mut ids = std::collections::HashSet::new();
         for app in &self.apps {
             if !ids.insert(app.id) {
@@ -571,6 +612,9 @@ impl ClusterConfig {
         }
         if let Some(c) = &self.cache {
             root.insert("cache".into(), cache_to_json(c));
+        }
+        if let Some(t) = &self.trace {
+            root.insert("trace".into(), trace_to_json(t));
         }
         root.insert(
             "db".into(),
@@ -793,6 +837,7 @@ impl ClusterConfig {
             rdma,
             batch: j.get("batch").map(parse_batch),
             cache: j.get("cache").map(parse_cache),
+            trace: j.get("trace").map(parse_trace),
         })
     }
 
@@ -884,6 +929,37 @@ fn parse_cache(j: &Json) -> CacheSettings {
             })
             .unwrap_or(d.stages),
         workflow: j.get("workflow").and_then(Json::as_bool).unwrap_or(d.workflow),
+    }
+}
+
+fn trace_to_json(t: &TraceSettings) -> Json {
+    obj(vec![
+        ("sample_rate", Json::Num(t.sample_rate)),
+        ("buffer_events", Json::Num(t.buffer_events as f64)),
+        (
+            "always_sample_slow_ms",
+            Json::Num(t.always_sample_slow_ms as f64),
+        ),
+    ])
+}
+
+/// Parse a `trace` block; missing fields inherit [`TraceSettings`]
+/// defaults (so `{"sample_rate": 0.01}` is a complete override).
+fn parse_trace(j: &Json) -> TraceSettings {
+    let d = TraceSettings::default();
+    TraceSettings {
+        sample_rate: j
+            .get("sample_rate")
+            .and_then(Json::as_f64)
+            .unwrap_or(d.sample_rate),
+        buffer_events: j
+            .get("buffer_events")
+            .and_then(Json::as_u64)
+            .unwrap_or(d.buffer_events as u64) as usize,
+        always_sample_slow_ms: j
+            .get("always_sample_slow_ms")
+            .and_then(Json::as_u64)
+            .unwrap_or(d.always_sample_slow_ms),
     }
 }
 
@@ -1029,6 +1105,34 @@ mod tests {
     fn absent_cache_block_means_cache_off() {
         assert!(ClusterConfig::i2v_default().cache.is_none());
         assert!(ClusterConfig::from_json_str("{}").unwrap().cache.is_none());
+    }
+
+    #[test]
+    fn trace_block_parses_inherits_and_round_trips() {
+        let cfg =
+            ClusterConfig::from_json_str(r#"{"trace": {"sample_rate": 0.01}}"#).unwrap();
+        let t = cfg.trace.unwrap();
+        assert_eq!(t.sample_rate, 0.01);
+        // Unset fields inherit the defaults.
+        let d = TraceSettings::default();
+        assert_eq!(t.buffer_events, d.buffer_events);
+        assert_eq!(t.always_sample_slow_ms, d.always_sample_slow_ms);
+        // Round-trip preserves the block.
+        let back = ClusterConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.trace, cfg.trace);
+        // Misconfigurations are rejected.
+        assert!(
+            ClusterConfig::from_json_str(r#"{"trace": {"sample_rate": 1.5}}"#).is_err()
+        );
+        assert!(
+            ClusterConfig::from_json_str(r#"{"trace": {"buffer_events": 8}}"#).is_err()
+        );
+    }
+
+    #[test]
+    fn absent_trace_block_means_tracing_off() {
+        assert!(ClusterConfig::i2v_default().trace.is_none());
+        assert!(ClusterConfig::from_json_str("{}").unwrap().trace.is_none());
     }
 
     #[test]

@@ -314,6 +314,13 @@ impl Gateway for FederationRouter {
                             c.spilled.inc();
                             c.set_spill_in[idx].inc();
                         }
+                        if let Some(t) = set.trace_hook() {
+                            t.record(
+                                uid,
+                                None,
+                                crate::trace::EventKind::Routed { to_set: idx as u16 },
+                            );
+                        }
                         return Ok(set.handle_for(uid, idx, &opts));
                     }
                     Err((e, p)) => {

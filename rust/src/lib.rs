@@ -17,9 +17,11 @@
 //!   (global load-aware routing, spill, and elastic instance donation
 //!   over N Workflow Sets), the content-addressed artifact [`cache`]
 //!   (stage-skip on repeat inputs, warm tier served by one-sided READs),
-//!   and the unified [`client`] gateway API (typed request handles with
-//!   priorities, deadlines, and cancellation across every tier). The
-//!   crate also lints itself: [`lint`] is an in-crate static-analysis
+//!   the unified [`client`] gateway API (typed request handles with
+//!   priorities, deadlines, and cancellation across every tier), and the
+//!   off-by-default per-request tracing layer ([`trace`]: flight
+//!   recorders + drain-time stitching into queue/execute/transit
+//!   breakdowns and critical paths). The crate also lints itself: [`lint`] is an in-crate static-analysis
 //!   pass (`onepiece lint`) enforcing the concurrency/RDMA-protocol
 //!   invariants, with a debug-build lock-order witness in
 //!   [`lint::runtime`].
@@ -50,6 +52,7 @@ pub mod rdma;
 pub mod ringbuf;
 pub mod runtime;
 pub mod sim;
+pub mod trace;
 pub mod transport;
 pub mod util;
 pub mod workflow;

@@ -65,6 +65,9 @@ pub const RANK_DELIVER: u32 = 65;
 pub const RANK_RING_SPIN: u32 = 70;
 /// Simulated fabric interior (region table, config).
 pub const RANK_FABRIC: u32 = 80;
+/// Trace collector (drain-time stitching only; the trace *record* path
+/// is lock-free and never acquires this).
+pub const RANK_TRACE: u32 = 85;
 /// Metrics registry maps (leaf: never held across a call).
 pub const RANK_METRICS: u32 = 90;
 

@@ -52,6 +52,12 @@ USAGE:
       Print the Theorem-1 instance plan for the i2v pipeline.
   onepiece trace (--fig5 | --fig6)
       Print the paper's Figure 5/6 pipelining schedule.
+  onepiece trace --config PATH [--requests N] [--json]
+      Run a traced Workflow Set (the config's `trace` block; defaults
+      to sample_rate 1.0 if absent) against N simulated requests and
+      print the per-stage queue/exec/transit p50/p95/p99 breakdown plus
+      exemplar slow traces with their critical paths. --json appends a
+      machine-readable report (e.g. examples/configs/traced_i2v.json).
   onepiece sim-resources [--pattern poisson|mmpp|diurnal] [--peak R]
       Run the E1 monolithic-vs-disaggregated GPU-resource comparison.
   onepiece info [--artifacts DIR]
@@ -495,6 +501,9 @@ fn plan(flags: &HashMap<String, String>) -> Result<()> {
 }
 
 fn trace(flags: &HashMap<String, String>) -> Result<()> {
+    if flags.contains_key("config") {
+        return trace_live(flags);
+    }
     let (stages, admit) = if flags.contains_key("fig6") {
         (
             vec![
@@ -515,6 +524,181 @@ fn trace(flags: &HashMap<String, String>) -> Result<()> {
     let t = trace_schedule(&stages, 8, admit);
     println!("{}", t.render_gantt(&stages, admit.min(4.0)));
     println!("steady-state output interval: {:.1} s", t.output_interval_s);
+    Ok(())
+}
+
+/// `onepiece trace --config PATH`: run a traced Workflow Set against a
+/// short workload and print per-stage queue/exec/transit percentiles
+/// plus exemplar slow traces with their critical paths.
+fn trace_live(flags: &HashMap<String, String>) -> Result<()> {
+    let path = PathBuf::from(flags.get("config").unwrap());
+    let n_requests: usize = flags.get("requests").map_or(Ok(24), |s| s.parse())?;
+    let json_out = flags.contains_key("json");
+    let mut cfg = ClusterConfig::from_file(&path)
+        .with_context(|| format!("loading cluster config {}", path.display()))?;
+    if cfg.trace.is_none() {
+        // The whole point of this command is to look at traces: keep
+        // everything unless the config says otherwise.
+        cfg.trace = Some(onepiece::config::TraceSettings::default());
+    }
+    let app = AppId(cfg.apps[0].id);
+    let stage_names: Vec<String> =
+        cfg.apps[0].stages.iter().map(|s| s.name.clone()).collect();
+    let pool = build_pool(&cfg, None);
+    let counts = vec![WorkflowSet::theorem1_counts(&cfg.apps[0], 1)];
+    let set = WorkflowSet::build(
+        cfg,
+        counts,
+        Arc::new(onepiece::workflow::EchoLogic),
+        pool,
+    );
+    std::thread::sleep(Duration::from_millis(100)); // assignments settle
+
+    let mut handles = Vec::new();
+    for i in 0..n_requests {
+        // Distinct payloads so a configured artifact cache doesn't
+        // collapse the workload into one executed request.
+        let payload = Payload::Bytes(vec![(i % 251) as u8; 64 + i]);
+        match set.submit(app, payload) {
+            Ok(h) => handles.push(h),
+            Err(e) => println!("request {i}: fast-rejected ({e})"),
+        }
+    }
+    for h in &handles {
+        if !matches!(h.wait(Duration::from_secs(30)), WaitOutcome::Done(_)) {
+            println!("request {:?} did not complete", h.uid());
+        }
+    }
+    let tracer = set
+        .tracer()
+        .expect("trace block is present, so the set has a tracer");
+    let traces = tracer.completed();
+    if traces.is_empty() {
+        bail!(
+            "no traces kept ({} requests ran) — raise trace.sample_rate or \
+             trace.always_sample_slow_ms in {}",
+            handles.len(),
+            path.display()
+        );
+    }
+
+    // Per-stage queue/exec/transit samples across every kept trace.
+    let n_stages = stage_names.len();
+    let mut queue = vec![Vec::new(); n_stages];
+    let mut exec = vec![Vec::new(); n_stages];
+    let mut transit = vec![Vec::new(); n_stages];
+    let mut totals: Vec<f64> = Vec::new();
+    for t in &traces {
+        totals.push(t.total_ns as f64 / 1e6);
+        for b in t.breakdown() {
+            let s = b.stage as usize;
+            if s < n_stages {
+                queue[s].push(b.queue_ns as f64 / 1e6);
+                exec[s].push(b.exec_ns as f64 / 1e6);
+                transit[s].push(b.transit_ns as f64 / 1e6);
+            }
+        }
+    }
+    for v in queue.iter_mut().chain(exec.iter_mut()).chain(transit.iter_mut()) {
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    }
+    totals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+
+    let pct = |v: &[f64]| {
+        (
+            onepiece::sim::percentile(v, 0.5),
+            onepiece::sim::percentile(v, 0.95),
+            onepiece::sim::percentile(v, 0.99),
+        )
+    };
+    println!(
+        "traced {} of {} requests | total p50 {:.2} ms | p95 {:.2} ms | p99 {:.2} ms",
+        traces.len(),
+        handles.len(),
+        onepiece::sim::percentile(&totals, 0.5),
+        onepiece::sim::percentile(&totals, 0.95),
+        onepiece::sim::percentile(&totals, 0.99),
+    );
+    println!(
+        "\n{:<16} {:>8} {:>8} {:>8}   {:>8} {:>8} {:>8}   {:>8} {:>8} {:>8}",
+        "stage (ms)", "q p50", "q p95", "q p99", "ex p50", "ex p95", "ex p99",
+        "tr p50", "tr p95", "tr p99"
+    );
+    for (s, name) in stage_names.iter().enumerate() {
+        if queue[s].is_empty() && exec[s].is_empty() && transit[s].is_empty() {
+            continue;
+        }
+        let (q50, q95, q99) = pct(&queue[s]);
+        let (e50, e95, e99) = pct(&exec[s]);
+        let (t50, t95, t99) = pct(&transit[s]);
+        println!(
+            "{name:<16} {q50:>8.3} {q95:>8.3} {q99:>8.3}   {e50:>8.3} {e95:>8.3} \
+             {e99:>8.3}   {t50:>8.3} {t95:>8.3} {t99:>8.3}"
+        );
+    }
+
+    // Exemplar slow traces: the tail the breakdown table averages away.
+    let mut by_slowest: Vec<&onepiece::trace::Trace> = traces.iter().collect();
+    by_slowest.sort_by_key(|t| std::cmp::Reverse(t.total_ns));
+    println!("\nslowest traces:");
+    for t in by_slowest.iter().take(3) {
+        let verdict = t.verdict.map_or("partial", |v| v.label());
+        let stage_path: Vec<String> = t
+            .stage_path()
+            .iter()
+            .map(|&s| {
+                stage_names
+                    .get(s as usize)
+                    .cloned()
+                    .unwrap_or_else(|| format!("s{s}"))
+            })
+            .collect();
+        println!(
+            "  {:?} {:.2} ms [{}] via {}",
+            t.uid,
+            t.total_ns as f64 / 1e6,
+            verdict,
+            stage_path.join(" -> "),
+        );
+        let segs: Vec<String> = t
+            .critical_path()
+            .iter()
+            .map(|(name, ns)| format!("{name} {:.2} ms", *ns as f64 / 1e6))
+            .collect();
+        println!("    critical path: {}", segs.join(" | "));
+    }
+
+    if json_out {
+        use onepiece::util::Json;
+        use std::collections::BTreeMap;
+        let triple = |v: &[f64]| {
+            let (p50, p95, p99) = pct(v);
+            let mut m = BTreeMap::new();
+            m.insert("p50_ms".to_string(), Json::Num(p50));
+            m.insert("p95_ms".to_string(), Json::Num(p95));
+            m.insert("p99_ms".to_string(), Json::Num(p99));
+            Json::Obj(m)
+        };
+        let stages_json: Vec<Json> = stage_names
+            .iter()
+            .enumerate()
+            .map(|(s, name)| {
+                let mut m = BTreeMap::new();
+                m.insert("stage".to_string(), Json::Str(name.clone()));
+                m.insert("queue".to_string(), triple(&queue[s]));
+                m.insert("exec".to_string(), triple(&exec[s]));
+                m.insert("transit".to_string(), triple(&transit[s]));
+                Json::Obj(m)
+            })
+            .collect();
+        let mut root = BTreeMap::new();
+        root.insert("traced".to_string(), Json::Num(traces.len() as f64));
+        root.insert("requests".to_string(), Json::Num(handles.len() as f64));
+        root.insert("total".to_string(), triple(&totals));
+        root.insert("stages".to_string(), Json::Arr(stages_json));
+        println!("\n{}", Json::Obj(root).to_string_compact());
+    }
+    set.shutdown();
     Ok(())
 }
 

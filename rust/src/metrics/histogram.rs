@@ -22,16 +22,23 @@ impl Default for Histogram {
     }
 }
 
-/// Immutable view of a histogram at a point in time.
+/// Immutable view of a histogram at a point in time. Carries the raw
+/// bucket counts and sum alongside the derived percentiles so snapshots
+/// are *mergeable*: [`Histogram::merge`] folds one into another
+/// histogram losslessly (fleet aggregation across sets/registries).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct HistogramSnapshot {
     pub count: u64,
+    /// Raw sum of every observation (mean = sum / count, exact).
+    pub sum: u64,
     pub mean: u64,
     pub p50: u64,
     pub p90: u64,
     pub p95: u64,
     pub p99: u64,
     pub max: u64,
+    /// Raw per-bucket counts (bucket *i* covers `[2^i, 2^(i+1))` ns).
+    pub buckets: [u64; BUCKETS],
 }
 
 impl Histogram {
@@ -77,13 +84,30 @@ impl Histogram {
         let sum = self.sum.load(Ordering::Relaxed);
         HistogramSnapshot {
             count,
+            sum,
             mean: if count == 0 { 0 } else { sum / count },
             p50: self.percentile(&counts, count, 0.50),
             p90: self.percentile(&counts, count, 0.90),
             p95: self.percentile(&counts, count, 0.95),
             p99: self.percentile(&counts, count, 0.99),
             max: self.max.load(Ordering::Relaxed),
+            buckets: counts,
         }
+    }
+
+    /// Fold another histogram's snapshot into this one: bucket-wise
+    /// add, so merged percentiles are exactly what a single histogram
+    /// observing both streams would report. The federation/fleet view
+    /// merges per-set snapshots with this.
+    pub fn merge(&self, snap: &HistogramSnapshot) {
+        for (b, &c) in self.buckets.iter().zip(&snap.buckets) {
+            if c > 0 {
+                b.fetch_add(c, Ordering::Relaxed);
+            }
+        }
+        self.count.fetch_add(snap.count, Ordering::Relaxed);
+        self.sum.fetch_add(snap.sum, Ordering::Relaxed);
+        self.max.fetch_max(snap.max, Ordering::Relaxed);
     }
 }
 
@@ -132,5 +156,35 @@ mod tests {
         h.record(100);
         h.record(300);
         assert_eq!(h.snapshot().mean, 200);
+    }
+
+    #[test]
+    fn merge_equals_single_stream() {
+        // Two histograms over disjoint streams, merged, must snapshot
+        // identically to one histogram that saw both streams.
+        let a = Histogram::new();
+        let b = Histogram::new();
+        let all = Histogram::new();
+        for i in 1..=1_000u64 {
+            a.record(i * 3);
+            all.record(i * 3);
+        }
+        for i in 1..=500u64 {
+            b.record(i * 1_000);
+            all.record(i * 1_000);
+        }
+        a.merge(&b.snapshot());
+        assert_eq!(a.snapshot(), all.snapshot());
+    }
+
+    #[test]
+    fn merge_into_empty_is_identity() {
+        let src = Histogram::new();
+        for v in [5u64, 500, 50_000] {
+            src.record(v);
+        }
+        let dst = Histogram::new();
+        dst.merge(&src.snapshot());
+        assert_eq!(dst.snapshot(), src.snapshot());
     }
 }

@@ -122,6 +122,112 @@ impl Registry {
         lines.sort();
         lines.join("\n")
     }
+
+    /// Fold another registry's metrics into this one: counters and
+    /// gauges add, histograms merge bucket-wise ([`Histogram::merge`]).
+    /// Multi-set / federation runs call this per set registry to build
+    /// one fleet view, then render that once.
+    ///
+    /// Snapshots each source collection before touching this registry,
+    /// so merging a registry into itself (or two registries in either
+    /// order, concurrently) cannot deadlock on the rank-ordered map
+    /// locks.
+    pub fn merge_from(&self, other: &Registry) {
+        let counters: Vec<(String, u64)> = other.counters_snapshot();
+        let gauges: Vec<(String, i64)> = other
+            .inner
+            .gauges
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.get()))
+            .collect();
+        let histograms: Vec<(String, HistogramSnapshot)> = other
+            .inner
+            .histograms
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.snapshot()))
+            .collect();
+        for (k, v) in counters {
+            if v > 0 {
+                self.counter(&k).add(v);
+            }
+        }
+        for (k, v) in gauges {
+            if v != 0 {
+                self.gauge(&k).add(v);
+            }
+        }
+        for (k, s) in histograms {
+            self.histogram(&k).merge(&s);
+        }
+    }
+
+    /// Prometheus text exposition (format 0.0.4) of every metric:
+    /// counters and gauges as single samples, histograms as summaries
+    /// with `quantile` labels plus `_sum`/`_count`. Names are sanitized
+    /// to the metric charset; output is name-sorted so runs diff.
+    pub fn render_prometheus(&self) -> String {
+        fn sanitize(name: &str) -> String {
+            let mut s: String = name
+                .chars()
+                .map(|c| {
+                    if c.is_ascii_alphanumeric() || c == '_' || c == ':' {
+                        c
+                    } else {
+                        '_'
+                    }
+                })
+                .collect();
+            if s.chars().next().is_some_and(|c| c.is_ascii_digit()) {
+                s.insert(0, '_');
+            }
+            s
+        }
+        let mut blocks: Vec<String> = Vec::new();
+        for (k, v) in self.counters_snapshot() {
+            let n = sanitize(&k);
+            blocks.push(format!("# TYPE {n} counter\n{n} {v}\n"));
+        }
+        let mut gauges: Vec<(String, i64)> = self
+            .inner
+            .gauges
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.get()))
+            .collect();
+        gauges.sort();
+        for (k, v) in gauges {
+            let n = sanitize(&k);
+            blocks.push(format!("# TYPE {n} gauge\n{n} {v}\n"));
+        }
+        let mut hists: Vec<(String, HistogramSnapshot)> = self
+            .inner
+            .histograms
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.snapshot()))
+            .collect();
+        hists.sort_by(|a, b| a.0.cmp(&b.0));
+        for (k, s) in hists {
+            let n = sanitize(&k);
+            blocks.push(format!(
+                "# TYPE {n} summary\n\
+                 {n}{{quantile=\"0.5\"}} {}\n\
+                 {n}{{quantile=\"0.9\"}} {}\n\
+                 {n}{{quantile=\"0.95\"}} {}\n\
+                 {n}{{quantile=\"0.99\"}} {}\n\
+                 {n}_sum {}\n\
+                 {n}_count {}\n",
+                s.p50, s.p90, s.p95, s.p99, s.sum, s.count
+            ));
+        }
+        blocks.concat()
+    }
 }
 
 #[cfg(test)]
@@ -167,5 +273,47 @@ mod tests {
         let out = r.render();
         assert!(out.contains("counter a 1"));
         assert!(out.contains("histogram lat"));
+    }
+
+    #[test]
+    fn merge_from_aggregates_fleet_view() {
+        let a = Registry::new();
+        let b = Registry::new();
+        a.counter("reqs").add(3);
+        b.counter("reqs").add(4);
+        b.counter("only_b").inc();
+        a.gauge("depth").set(2);
+        b.gauge("depth").set(5);
+        a.histogram("lat").record(100);
+        b.histogram("lat").record(10_000);
+        let fleet = Registry::new();
+        fleet.merge_from(&a);
+        fleet.merge_from(&b);
+        assert_eq!(fleet.counter("reqs").get(), 7);
+        assert_eq!(fleet.counter("only_b").get(), 1);
+        assert_eq!(fleet.gauge("depth").get(), 7);
+        let s = fleet.histogram("lat").snapshot();
+        assert_eq!(s.count, 2);
+        assert_eq!(s.max, 10_000);
+        // Sources are untouched.
+        assert_eq!(a.counter("reqs").get(), 3);
+        assert_eq!(b.histogram("lat").snapshot().count, 1);
+    }
+
+    #[test]
+    fn prometheus_exposition_shape() {
+        let r = Registry::new();
+        r.counter("ring.pushes-total").add(9);
+        r.gauge("queue_depth").set(-3);
+        r.histogram("e2e_latency_ns").record(1_000);
+        let out = r.render_prometheus();
+        assert!(out.contains("# TYPE ring_pushes_total counter\nring_pushes_total 9\n"));
+        assert!(out.contains("# TYPE queue_depth gauge\nqueue_depth -3\n"));
+        assert!(out.contains("# TYPE e2e_latency_ns summary\n"));
+        assert!(out.contains("e2e_latency_ns{quantile=\"0.99\"}"));
+        assert!(out.contains("e2e_latency_ns_sum 1000\n"));
+        assert!(out.contains("e2e_latency_ns_count 1\n"));
+        // Deterministic: same registry renders identically.
+        assert_eq!(out, r.render_prometheus());
     }
 }

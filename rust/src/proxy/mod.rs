@@ -98,6 +98,9 @@ pub struct Proxy {
     /// rendezvous threshold). A hit at admission publishes the cached
     /// terminal result directly and never enters the pipeline.
     cache: std::sync::OnceLock<Arc<crate::cache::ArtifactCache>>,
+    /// Trace hook for admission events (set once after build when the
+    /// config has a `trace` block; absent = zero hot-path cost).
+    trace: std::sync::OnceLock<crate::trace::TraceHook>,
 }
 
 impl Proxy {
@@ -135,12 +138,18 @@ impl Proxy {
             checkpointing,
             rendezvous_threshold: std::sync::atomic::AtomicUsize::new(0),
             cache: std::sync::OnceLock::new(),
+            trace: std::sync::OnceLock::new(),
         }
     }
 
     /// Attach the set's artifact cache (build-time wiring, set once).
     pub fn set_cache(&self, cache: Arc<crate::cache::ArtifactCache>) {
         let _ = self.cache.set(cache);
+    }
+
+    /// Attach the set's trace hook (build-time wiring, set once).
+    pub fn set_trace(&self, hook: crate::trace::TraceHook) {
+        let _ = self.trace.set(hook);
     }
 
     /// Set the eager/rendezvous cutover on current and future entrance
@@ -201,6 +210,12 @@ impl Proxy {
                     msg.header.ts_ns = now_ns() as u64;
                     self.db.put_shared(uid, msg.encode().into());
                     self.accepted[opts.priority.index()].inc();
+                    if let Some(h) = self.trace.get() {
+                        use crate::trace::{EventKind, Verdict};
+                        h.record(uid, None, EventKind::Admitted);
+                        h.record(uid, None, EventKind::CacheHit);
+                        h.record(uid, None, EventKind::Terminal { verdict: Verdict::Done });
+                    }
                     return Ok(uid);
                 }
             }
@@ -218,6 +233,9 @@ impl Proxy {
         let uid = Uid::fresh(self.node);
         // Replay budget for crash recovery comes from the retry policy.
         self.tracker.register_with(uid, opts);
+        if let Some(h) = self.trace.get() {
+            h.record(uid, None, crate::trace::EventKind::Admitted);
+        }
         let msg = WorkflowMessage {
             header: MessageHeader {
                 uid,
@@ -236,6 +254,9 @@ impl Proxy {
         let encoded: Option<std::sync::Arc<[u8]>> = if self.checkpointing {
             let ck: std::sync::Arc<[u8]> = msg.encode().into();
             self.db.put_checkpoint(uid, 0, ck.clone());
+            if let Some(h) = self.trace.get() {
+                h.record(uid, Some(0), crate::trace::EventKind::Checkpoint);
+            }
             Some(ck)
         } else {
             None
@@ -301,6 +322,9 @@ impl Proxy {
             // Record where the request entered the pipeline — the
             // recovery sweep finds stranded requests by location.
             self.tracker.note_location(msg.header.uid, *rid);
+            if let Some(h) = self.trace.get() {
+                h.record(msg.header.uid, Some(0), crate::trace::EventKind::RingPush);
+            }
         }
         sent
     }

@@ -1,0 +1,348 @@
+//! Drain-time stitching: per-component event streams → per-UID traces.
+//!
+//! The collector owns no locks of its own — it lives behind the
+//! [`super::Tracer`]'s single witness mutex (rank `RANK_TRACE`) and is
+//! only touched at drain time, never on the record path. Both of its
+//! stores are bounded: in-flight requests beyond `MAX_PENDING` evict
+//! the oldest-started (a leak guard against requests whose terminal
+//! event was overwritten), and kept traces beyond `MAX_KEPT` evict
+//! FIFO, so tracing memory is constant regardless of traffic.
+
+use super::{EventKind, TraceEvent, Verdict};
+use crate::util::Uid;
+use std::collections::{HashMap, VecDeque};
+
+/// In-flight UIDs tracked before their terminal event arrives.
+const MAX_PENDING: usize = 8192;
+/// Completed traces retained for `trace_of` / reports.
+const MAX_KEPT: usize = 512;
+
+/// Per-stage latency attribution for one request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StageBreakdown {
+    pub stage: u32,
+    /// Enqueued → Dequeued on this stage's scheduler queue.
+    pub queue_ns: u64,
+    /// ExecBegin → ExecEnd on this stage's worker.
+    pub exec_ns: u64,
+    /// Previous hop's handoff (Delivered, or Admitted for the first
+    /// stage) → this stage's Enqueued: ring + fabric + descriptor time.
+    pub transit_ns: u64,
+}
+
+/// One stitched request trace: every surviving event, time-ordered.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub uid: Uid,
+    pub events: Vec<TraceEvent>,
+    /// First event → terminal event.
+    pub total_ns: u64,
+    /// Terminal outcome (`None` only if the terminal event itself was
+    /// overwritten — the trace is then a partial record).
+    pub verdict: Option<Verdict>,
+}
+
+impl Trace {
+    fn from_events(uid: Uid, mut events: Vec<TraceEvent>) -> Self {
+        events.sort_by_key(|e| e.t_ns);
+        let total_ns = match (events.first(), events.last()) {
+            (Some(a), Some(b)) => b.t_ns - a.t_ns,
+            _ => 0,
+        };
+        let verdict = events.iter().rev().find_map(|e| match e.kind {
+            EventKind::Terminal { verdict } => Some(verdict),
+            _ => None,
+        });
+        Self {
+            uid,
+            events,
+            total_ns,
+            verdict,
+        }
+    }
+
+    /// Ordered distinct stages the request visited (first touch wins).
+    pub fn stage_path(&self) -> Vec<u32> {
+        let mut path = Vec::new();
+        for e in &self.events {
+            if let Some(s) = e.stage {
+                if matches!(
+                    e.kind,
+                    EventKind::Enqueued | EventKind::Dequeued | EventKind::ExecBegin
+                ) && !path.contains(&s)
+                {
+                    path.push(s);
+                }
+            }
+        }
+        path
+    }
+
+    /// First timestamp of `kind` at `stage` (events are time-sorted).
+    fn first(&self, stage: u32, kind: &EventKind) -> Option<u64> {
+        self.events
+            .iter()
+            .find(|e| e.stage == Some(stage) && e.kind.label() == kind.label())
+            .map(|e| e.t_ns)
+    }
+
+    /// Queue-wait vs execute vs transit per visited stage, in path
+    /// order. Missing sub-spans (an event lost to overwrite) report 0
+    /// rather than poisoning the rest of the breakdown.
+    pub fn breakdown(&self) -> Vec<StageBreakdown> {
+        let mut out = Vec::new();
+        // Handoff = when the previous hop released the request.
+        let mut handoff = self
+            .events
+            .iter()
+            .find(|e| matches!(e.kind, EventKind::Admitted))
+            .map(|e| e.t_ns);
+        for stage in self.stage_path() {
+            let enq = self.first(stage, &EventKind::Enqueued);
+            let deq = self.first(stage, &EventKind::Dequeued);
+            let begin = self.first(stage, &EventKind::ExecBegin);
+            let end = self.first(stage, &EventKind::ExecEnd);
+            let sub = |a: Option<u64>, b: Option<u64>| match (a, b) {
+                (Some(a), Some(b)) => b.saturating_sub(a),
+                _ => 0,
+            };
+            out.push(StageBreakdown {
+                stage,
+                queue_ns: sub(enq, deq),
+                exec_ns: sub(begin, end),
+                transit_ns: sub(handoff, enq),
+            });
+            handoff = self.first(stage, &EventKind::Delivered).or(end).or(handoff);
+        }
+        out
+    }
+
+    /// The critical path: time-ordered labelled segments summing to
+    /// `total_ns`. Time not attributed to a queue/exec/transit span
+    /// (final delivery, tracker settling) lands in a closing
+    /// `delivery/other` segment.
+    pub fn critical_path(&self) -> Vec<(String, u64)> {
+        let mut segs: Vec<(String, u64)> = Vec::new();
+        for b in self.breakdown() {
+            if b.transit_ns > 0 {
+                segs.push((format!("transit→s{}", b.stage), b.transit_ns));
+            }
+            if b.queue_ns > 0 {
+                segs.push((format!("s{} queue", b.stage), b.queue_ns));
+            }
+            if b.exec_ns > 0 {
+                segs.push((format!("s{} exec", b.stage), b.exec_ns));
+            }
+        }
+        let attributed: u64 = segs.iter().map(|(_, ns)| ns).sum();
+        let tail = self.total_ns.saturating_sub(attributed);
+        if tail > 0 || segs.is_empty() {
+            segs.push(("delivery/other".to_string(), tail));
+        }
+        segs
+    }
+}
+
+struct Pending {
+    events: Vec<TraceEvent>,
+    /// Earliest timestamp seen — eviction order under `MAX_PENDING`.
+    first_ns: u64,
+}
+
+/// Bounded per-UID assembly state. See the module docs for the bounds.
+pub(super) struct Collector {
+    pending: HashMap<u128, Pending>,
+    kept: VecDeque<Trace>,
+}
+
+impl Collector {
+    pub(super) fn new() -> Self {
+        Self {
+            pending: HashMap::new(),
+            kept: VecDeque::new(),
+        }
+    }
+
+    /// Append one drained event to its UID's pending record.
+    pub(super) fn absorb(&mut self, ev: TraceEvent) {
+        if self.pending.len() >= MAX_PENDING && !self.pending.contains_key(&ev.uid.0) {
+            // Evict the oldest-started in-flight UID (its terminal
+            // event was probably overwritten; keep memory bounded).
+            if let Some(&oldest) = self
+                .pending
+                .iter()
+                .min_by_key(|(_, p)| p.first_ns)
+                .map(|(uid, _)| uid)
+            {
+                self.pending.remove(&oldest);
+            }
+        }
+        let entry = self.pending.entry(ev.uid.0).or_insert(Pending {
+            events: Vec::new(),
+            first_ns: ev.t_ns,
+        });
+        entry.first_ns = entry.first_ns.min(ev.t_ns);
+        entry.events.push(ev);
+    }
+
+    /// Span of the pending record (terminal just absorbed): the slow-
+    /// request tail rule compares this against its threshold.
+    pub(super) fn pending_duration_ns(&self, uid: Uid) -> u64 {
+        self.pending
+            .get(&uid.0)
+            .map(|p| {
+                let max = p.events.iter().map(|e| e.t_ns).max().unwrap_or(p.first_ns);
+                max - p.first_ns
+            })
+            .unwrap_or(0)
+    }
+
+    /// Close out a UID whose terminal event arrived. `keep == true`
+    /// stitches and retains the trace (FIFO-evicting past `MAX_KEPT`);
+    /// `false` discards the events. Returns `keep`.
+    pub(super) fn finalize(&mut self, uid: Uid, keep: bool) -> bool {
+        let Some(p) = self.pending.remove(&uid.0) else {
+            return false;
+        };
+        if keep {
+            if self.kept.len() >= MAX_KEPT {
+                self.kept.pop_front();
+            }
+            self.kept.push_back(Trace::from_events(uid, p.events));
+        }
+        keep
+    }
+
+    /// The kept trace for `uid`, if retained (newest wins on replay).
+    pub(super) fn kept(&self, uid: Uid) -> Option<Trace> {
+        self.kept.iter().rev().find(|t| t.uid == uid).cloned()
+    }
+
+    /// All kept traces, oldest first.
+    pub(super) fn all_kept(&self) -> Vec<Trace> {
+        self.kept.iter().cloned().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(uid: u128, t_ns: u64, stage: Option<u32>, kind: EventKind) -> TraceEvent {
+        TraceEvent {
+            uid: Uid(uid),
+            t_ns,
+            kind,
+            stage,
+            set: 0,
+            node: 1,
+        }
+    }
+
+    /// A two-stage request with known span widths.
+    fn two_stage_events(uid: u128) -> Vec<TraceEvent> {
+        vec![
+            ev(uid, 0, None, EventKind::Admitted),
+            ev(uid, 100, Some(0), EventKind::Enqueued), // transit 100
+            ev(uid, 150, Some(0), EventKind::Dequeued), // queue 50
+            ev(uid, 160, Some(0), EventKind::ExecBegin),
+            ev(uid, 460, Some(0), EventKind::ExecEnd), // exec 300
+            ev(uid, 500, Some(0), EventKind::Delivered),
+            ev(uid, 700, Some(1), EventKind::Enqueued), // transit 200
+            ev(uid, 710, Some(1), EventKind::Dequeued), // queue 10
+            ev(uid, 720, Some(1), EventKind::ExecBegin),
+            ev(uid, 1120, Some(1), EventKind::ExecEnd), // exec 400
+            ev(uid, 1150, Some(1), EventKind::Delivered),
+            ev(uid, 1200, None, EventKind::Terminal { verdict: Verdict::Done }),
+        ]
+    }
+
+    fn stitched(uid: u128) -> Trace {
+        let mut c = Collector::new();
+        for e in two_stage_events(uid) {
+            c.absorb(e);
+        }
+        assert_eq!(c.pending_duration_ns(Uid(uid)), 1200);
+        assert!(c.finalize(Uid(uid), true));
+        c.kept(Uid(uid)).expect("kept")
+    }
+
+    #[test]
+    fn breakdown_attributes_queue_exec_transit() {
+        let t = stitched(9);
+        assert_eq!(t.total_ns, 1200);
+        assert_eq!(t.verdict, Some(Verdict::Done));
+        assert_eq!(t.stage_path(), vec![0, 1]);
+        let b = t.breakdown();
+        assert_eq!(
+            b,
+            vec![
+                StageBreakdown { stage: 0, queue_ns: 50, exec_ns: 300, transit_ns: 100 },
+                StageBreakdown { stage: 1, queue_ns: 10, exec_ns: 400, transit_ns: 200 },
+            ]
+        );
+    }
+
+    #[test]
+    fn critical_path_sums_to_total() {
+        let t = stitched(9);
+        let cp = t.critical_path();
+        let sum: u64 = cp.iter().map(|(_, ns)| ns).sum();
+        assert_eq!(sum, t.total_ns, "segments cover the full span: {cp:?}");
+        assert_eq!(cp.last().map(|(n, _)| n.as_str()), Some("delivery/other"));
+    }
+
+    #[test]
+    fn out_of_order_absorption_still_stitches() {
+        let mut c = Collector::new();
+        let mut evs = two_stage_events(4);
+        evs.reverse(); // recorders drain in arbitrary interleavings
+        for e in evs {
+            c.absorb(e);
+        }
+        c.finalize(Uid(4), true);
+        let t = c.kept(Uid(4)).expect("kept");
+        assert_eq!(t.stage_path(), vec![0, 1]);
+        assert_eq!(t.total_ns, 1200);
+    }
+
+    #[test]
+    fn discarded_finalize_drops_events() {
+        let mut c = Collector::new();
+        for e in two_stage_events(7) {
+            c.absorb(e);
+        }
+        assert!(!c.finalize(Uid(7), false));
+        assert!(c.kept(Uid(7)).is_none());
+        assert_eq!(c.pending_duration_ns(Uid(7)), 0, "pending cleared");
+    }
+
+    #[test]
+    fn kept_store_evicts_fifo() {
+        let mut c = Collector::new();
+        for uid in 0..(MAX_KEPT as u128 + 10) {
+            c.absorb(ev(uid, uid as u64, None, EventKind::Admitted));
+            c.absorb(ev(
+                uid,
+                uid as u64 + 1,
+                None,
+                EventKind::Terminal { verdict: Verdict::Done },
+            ));
+            c.finalize(Uid(uid), true);
+        }
+        assert_eq!(c.all_kept().len(), MAX_KEPT);
+        assert!(c.kept(Uid(0)).is_none(), "oldest evicted");
+        assert!(c.kept(Uid(MAX_KEPT as u128 + 9)).is_some(), "newest kept");
+    }
+
+    #[test]
+    fn pending_store_evicts_oldest_started() {
+        let mut c = Collector::new();
+        for uid in 0..(MAX_PENDING as u128 + 5) {
+            c.absorb(ev(uid, uid as u64, None, EventKind::Admitted));
+        }
+        assert_eq!(c.pending.len(), MAX_PENDING);
+        assert!(!c.pending.contains_key(&0), "oldest-started evicted");
+        assert!(c.pending.contains_key(&(MAX_PENDING as u128 + 4)));
+    }
+}

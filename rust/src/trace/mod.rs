@@ -1,0 +1,477 @@
+//! Distributed request tracing: per-UID spans across admission →
+//! schedule → ring hops → batch → execute → delivery.
+//!
+//! Off by default and lock-light by construction (DESIGN.md
+//! "Observability"):
+//!
+//! - **Event model** — [`TraceEvent`]: one request UID, a monotonic
+//!   timestamp from the set [`crate::util::Clock`], stage / instance /
+//!   set attribution, and a typed [`EventKind`] (Admitted, Enqueued,
+//!   Dequeued, BatchFormed, ExecBegin/End, RingPush, RendezvousRead,
+//!   CacheHit/Miss, Checkpoint, Delivered, Replayed, Routed,
+//!   Terminal{verdict}). Events pack into five `u64` words so the
+//!   recorder slots are fixed-size and allocation-free.
+//! - **Flight recorder** — [`FlightRecorder`]: a bounded per-component
+//!   MPSC ring, overwrite-oldest; `record` is a few atomics and a slot
+//!   write (see `recorder.rs`).
+//! - **Collector** — [`Tracer::drain`] stitches per-component buffers
+//!   into per-UID [`Trace`]s at drain time, reconstructs the stage
+//!   path, and computes queue-wait vs execute vs transit breakdowns
+//!   plus the critical path (see `collector.rs`).
+//! - **Sampling** — head sampling by UID hash at
+//!   `trace.sample_rate` decides which *completed* traces are kept;
+//!   `trace.always_sample_slow_ms` force-keeps any completed trace
+//!   slower than the threshold regardless of the rate (tail-based
+//!   exemplars for the slow tail).
+//!
+//! When the deployment has no `trace` config block, no [`Tracer`] is
+//! ever constructed: components carry a `None` hook, no `trace_*`
+//! counters are registered, and the request path is byte-identical to
+//! the untraced build (asserted in `tests/trace_semantics.rs`).
+
+mod collector;
+mod recorder;
+
+pub use collector::{StageBreakdown, Trace};
+pub use recorder::FlightRecorder;
+
+use crate::config::TraceSettings;
+use crate::lint::runtime::{WitnessMutex, RANK_TRACE};
+use crate::metrics::{Counter, Registry};
+use crate::util::{Clock, Uid};
+use std::sync::Arc;
+
+/// Terminal request outcome carried by [`EventKind::Terminal`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    Done,
+    Cancelled,
+    DeadlineExceeded,
+    Failed,
+}
+
+impl Verdict {
+    /// Stable label for reports.
+    pub fn label(self) -> &'static str {
+        match self {
+            Verdict::Done => "done",
+            Verdict::Cancelled => "cancelled",
+            Verdict::DeadlineExceeded => "deadline_exceeded",
+            Verdict::Failed => "failed",
+        }
+    }
+}
+
+/// What happened, typed. Kinds with data keep it small enough to pack.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// Proxy admission accepted the request.
+    Admitted,
+    /// The RS thread queued the message for a stage's workers.
+    Enqueued,
+    /// A worker pulled the message from the scheduler queue.
+    Dequeued,
+    /// Batch assembly closed around this request's message.
+    BatchFormed { size: u16, bypassed: bool },
+    /// Stage execution started / finished (batch-amortized spans cover
+    /// every member).
+    ExecBegin,
+    ExecEnd,
+    /// The message crossed a ring (entrance forward or stage hop).
+    RingPush,
+    /// The consumer resolved this request's payload by a one-sided
+    /// rendezvous READ.
+    RendezvousRead,
+    /// Artifact-cache outcome for a stage (or the whole-workflow tier
+    /// at admission, stage = None).
+    CacheHit,
+    CacheMiss,
+    /// A recovery checkpoint was written for this hop.
+    Checkpoint,
+    /// ResultDeliver forwarded this stage's output downstream.
+    Delivered,
+    /// The recovery sweep replayed the request from a checkpoint.
+    Replayed,
+    /// The federation router placed the request on a set.
+    Routed { to_set: u16 },
+    /// The request reached a terminal state.
+    Terminal { verdict: Verdict },
+}
+
+impl EventKind {
+    /// Stable label for reports.
+    pub fn label(&self) -> &'static str {
+        match self {
+            EventKind::Admitted => "admitted",
+            EventKind::Enqueued => "enqueued",
+            EventKind::Dequeued => "dequeued",
+            EventKind::BatchFormed { .. } => "batch_formed",
+            EventKind::ExecBegin => "exec_begin",
+            EventKind::ExecEnd => "exec_end",
+            EventKind::RingPush => "ring_push",
+            EventKind::RendezvousRead => "rendezvous_read",
+            EventKind::CacheHit => "cache_hit",
+            EventKind::CacheMiss => "cache_miss",
+            EventKind::Checkpoint => "checkpoint",
+            EventKind::Delivered => "delivered",
+            EventKind::Replayed => "replayed",
+            EventKind::Routed { .. } => "routed",
+            EventKind::Terminal { .. } => "terminal",
+        }
+    }
+}
+
+/// One trace event: fixed-size, `Copy`, packs to five `u64` words.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceEvent {
+    pub uid: Uid,
+    /// Monotonic timestamp ([`Clock::now_ns`], not wall clock).
+    pub t_ns: u64,
+    pub kind: EventKind,
+    /// Stage attribution (`None` for request-level events).
+    pub stage: Option<u32>,
+    /// Workflow-set index.
+    pub set: u32,
+    /// Node id of the recording component (proxy/instance).
+    pub node: u32,
+}
+
+const STAGE_NONE: u16 = u16::MAX;
+
+impl TraceEvent {
+    /// Pack into the recorder's five slot words:
+    /// `[uid_hi, uid_lo, t_ns, kind|code|aux|stage, set|node]`.
+    pub(crate) fn pack(&self) -> [u64; recorder::EVENT_WORDS] {
+        let (tag, code, aux): (u8, u8, u16) = match self.kind {
+            EventKind::Admitted => (0, 0, 0),
+            EventKind::Enqueued => (1, 0, 0),
+            EventKind::Dequeued => (2, 0, 0),
+            EventKind::BatchFormed { size, bypassed } => (3, bypassed as u8, size),
+            EventKind::ExecBegin => (4, 0, 0),
+            EventKind::ExecEnd => (5, 0, 0),
+            EventKind::RingPush => (6, 0, 0),
+            EventKind::RendezvousRead => (7, 0, 0),
+            EventKind::CacheHit => (8, 0, 0),
+            EventKind::CacheMiss => (9, 0, 0),
+            EventKind::Checkpoint => (10, 0, 0),
+            EventKind::Delivered => (11, 0, 0),
+            EventKind::Replayed => (12, 0, 0),
+            EventKind::Routed { to_set } => (13, 0, to_set),
+            EventKind::Terminal { verdict } => (14, verdict as u8, 0),
+        };
+        let stage = self
+            .stage
+            .map_or(STAGE_NONE, |s| s.min(STAGE_NONE as u32 - 1) as u16);
+        [
+            (self.uid.0 >> 64) as u64,
+            self.uid.0 as u64,
+            self.t_ns,
+            (tag as u64) << 40 | (code as u64) << 32 | (aux as u64) << 16 | stage as u64,
+            (self.set as u64) << 32 | self.node as u64,
+        ]
+    }
+
+    /// Inverse of [`TraceEvent::pack`]; `None` on an unknown kind tag
+    /// (a torn slot that happened to pass the generation check).
+    pub(crate) fn unpack(w: [u64; recorder::EVENT_WORDS]) -> Option<Self> {
+        let tag = (w[3] >> 40) as u8;
+        let code = (w[3] >> 32) as u8;
+        let aux = (w[3] >> 16) as u16;
+        let stage16 = w[3] as u16;
+        let kind = match tag {
+            0 => EventKind::Admitted,
+            1 => EventKind::Enqueued,
+            2 => EventKind::Dequeued,
+            3 => EventKind::BatchFormed { size: aux, bypassed: code != 0 },
+            4 => EventKind::ExecBegin,
+            5 => EventKind::ExecEnd,
+            6 => EventKind::RingPush,
+            7 => EventKind::RendezvousRead,
+            8 => EventKind::CacheHit,
+            9 => EventKind::CacheMiss,
+            10 => EventKind::Checkpoint,
+            11 => EventKind::Delivered,
+            12 => EventKind::Replayed,
+            13 => EventKind::Routed { to_set: aux },
+            14 => EventKind::Terminal {
+                verdict: match code {
+                    0 => Verdict::Done,
+                    1 => Verdict::Cancelled,
+                    2 => Verdict::DeadlineExceeded,
+                    3 => Verdict::Failed,
+                    _ => return None,
+                },
+            },
+            _ => return None,
+        };
+        Some(Self {
+            uid: Uid((w[0] as u128) << 64 | w[1] as u128),
+            t_ns: w[2],
+            kind,
+            stage: (stage16 != STAGE_NONE).then_some(stage16 as u32),
+            set: (w[4] >> 32) as u32,
+            node: w[4] as u32,
+        })
+    }
+}
+
+/// The hot-path handle a component holds (cheap `Clone`): its flight
+/// recorder, the set clock, and its attribution. Recording through a
+/// hook is lock-free; a component without a hook (`None`) pays nothing.
+#[derive(Clone)]
+pub struct TraceHook {
+    recorder: Arc<FlightRecorder>,
+    clock: Arc<dyn Clock>,
+    set: u32,
+    node: u32,
+}
+
+impl TraceHook {
+    /// Record one event now, attributed to this hook's component.
+    pub fn record(&self, uid: Uid, stage: Option<u32>, kind: EventKind) {
+        self.recorder.record(TraceEvent {
+            uid,
+            t_ns: self.clock.now_ns(),
+            kind,
+            stage,
+            set: self.set,
+            node: self.node,
+        });
+    }
+
+    /// This hook re-attributed to another node id (an instance cloning
+    /// the set-level hook for its own recorder would instead call
+    /// [`Tracer::hook`]; this variant shares the recorder).
+    pub fn for_node(&self, node: u32) -> TraceHook {
+        TraceHook { node, ..self.clone() }
+    }
+}
+
+/// Collector state behind the tracer's single (drain-time-only) lock.
+struct TracerInner {
+    recorders: Vec<(Arc<FlightRecorder>, u64)>,
+    collector: collector::Collector,
+}
+
+/// The per-set tracing facade: owns every component recorder, the
+/// stitching collector, and the sampling rules. Constructed only when
+/// the deployment has a `trace` config block.
+pub struct Tracer {
+    sample_rate: f64,
+    slow_ns: u64,
+    buffer_events: usize,
+    set: u32,
+    clock: Arc<dyn Clock>,
+    events_total: Arc<Counter>,
+    overwritten_total: Arc<Counter>,
+    kept_total: Arc<Counter>,
+    sampled_out_total: Arc<Counter>,
+    // Held only by drain/registration, never on the record path.
+    inner: WitnessMutex<TracerInner>, // lint: lock-rank(trace, 85)
+}
+
+impl Tracer {
+    /// Build a tracer for set `set`. Registers the `trace_*` counters —
+    /// this is the only place they are created, so a disabled
+    /// deployment's registry never shows them.
+    pub fn new(
+        settings: &TraceSettings,
+        clock: Arc<dyn Clock>,
+        set: u32,
+        metrics: &Registry,
+    ) -> Arc<Self> {
+        Arc::new(Self {
+            sample_rate: settings.sample_rate,
+            slow_ns: settings.always_sample_slow_ms.saturating_mul(1_000_000),
+            buffer_events: settings.buffer_events,
+            set,
+            clock,
+            events_total: metrics.counter("trace_events_total"),
+            overwritten_total: metrics.counter("trace_events_overwritten_total"),
+            kept_total: metrics.counter("trace_traces_kept_total"),
+            sampled_out_total: metrics.counter("trace_traces_sampled_out_total"),
+            inner: WitnessMutex::new(
+                "trace",
+                RANK_TRACE,
+                TracerInner {
+                    recorders: Vec::new(),
+                    collector: collector::Collector::new(),
+                },
+            ),
+        })
+    }
+
+    /// Register a fresh flight recorder for one component and return
+    /// its hot-path hook. Called at component construction (locks the
+    /// collector once); the returned hook never locks.
+    pub fn hook(&self, node: u32) -> TraceHook {
+        let recorder = Arc::new(FlightRecorder::new(
+            self.buffer_events,
+            self.events_total.clone(),
+        ));
+        self.inner
+            .lock()
+            .unwrap()
+            .recorders
+            .push((recorder.clone(), 0));
+        TraceHook {
+            recorder,
+            clock: self.clock.clone(),
+            set: self.set,
+            node,
+        }
+    }
+
+    /// Head-sampling decision for one UID (deterministic hash → [0,1)
+    /// against `sample_rate`, so every component agrees without
+    /// coordination).
+    fn sampled(&self, uid: Uid) -> bool {
+        if self.sample_rate >= 1.0 {
+            return true;
+        }
+        if self.sample_rate <= 0.0 {
+            return false;
+        }
+        // splitmix64 over the folded UID.
+        let mut z = (uid.0 as u64) ^ ((uid.0 >> 64) as u64) ^ 0x9e37_79b9_7f4a_7c15;
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        z ^= z >> 31;
+        ((z >> 11) as f64 / (1u64 << 53) as f64) < self.sample_rate
+    }
+
+    /// Drain every component recorder and stitch completed requests
+    /// into kept traces. Runs on the housekeeper timer and on demand
+    /// from [`Tracer::trace_of`]; holds the collector lock only while
+    /// stitching (the record path never contends with it).
+    pub fn drain(&self) {
+        let mut scratch = Vec::new();
+        let mut g = self.inner.lock().unwrap();
+        let mut lost = 0u64;
+        for (rec, cursor) in g.recorders.iter_mut() {
+            let (next, l) = rec.drain_from(*cursor, &mut scratch);
+            *cursor = next;
+            lost += l;
+        }
+        if lost > 0 {
+            self.overwritten_total.add(lost);
+        }
+        // Events from different recorders interleave arbitrarily; the
+        // collector orders per-UID by timestamp at finalization.
+        let mut kept = 0u64;
+        let mut dropped = 0u64;
+        for ev in scratch.drain(..) {
+            let uid = ev.uid;
+            let terminal = matches!(ev.kind, EventKind::Terminal { .. });
+            g.collector.absorb(ev);
+            if terminal {
+                let keep = self.sampled(uid)
+                    || (self.slow_ns > 0
+                        && g.collector.pending_duration_ns(uid) >= self.slow_ns);
+                if g.collector.finalize(uid, keep) {
+                    kept += 1;
+                } else {
+                    dropped += 1;
+                }
+            }
+        }
+        if kept > 0 {
+            self.kept_total.add(kept);
+        }
+        if dropped > 0 {
+            self.sampled_out_total.add(dropped);
+        }
+    }
+
+    /// The stitched trace for one completed request, if it was kept
+    /// (sampled in, or slow enough for the tail rule). Drains first so
+    /// freshly completed requests are visible immediately.
+    pub fn trace_of(&self, uid: Uid) -> Option<Trace> {
+        self.drain();
+        self.inner.lock().unwrap().collector.kept(uid)
+    }
+
+    /// All kept traces, oldest first (report/CLI surface). Drains first.
+    pub fn completed(&self) -> Vec<Trace> {
+        self.drain();
+        self.inner.lock().unwrap().collector.all_kept()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::ManualClock;
+
+    fn tracer(rate: f64, slow_ms: u64, clock: Arc<ManualClock>) -> Arc<Tracer> {
+        Tracer::new(
+            &TraceSettings {
+                sample_rate: rate,
+                buffer_events: 256,
+                always_sample_slow_ms: slow_ms,
+            },
+            clock,
+            0,
+            &Registry::new(),
+        )
+    }
+
+    fn run_request(hook: &TraceHook, clock: &ManualClock, uid: Uid, dur_ns: u64) {
+        hook.record(uid, None, EventKind::Admitted);
+        clock.advance(dur_ns);
+        hook.record(uid, None, EventKind::Terminal { verdict: Verdict::Done });
+    }
+
+    #[test]
+    fn sample_rate_one_keeps_everything() {
+        let clock = Arc::new(ManualClock::new());
+        let t = tracer(1.0, 0, clock.clone());
+        let hook = t.hook(1);
+        for i in 0..20 {
+            run_request(&hook, &clock, Uid(i), 1_000);
+        }
+        t.drain();
+        assert_eq!(t.completed().len(), 20);
+        assert!(t.trace_of(Uid(7)).is_some());
+    }
+
+    #[test]
+    fn sample_rate_zero_drops_fast_requests() {
+        let clock = Arc::new(ManualClock::new());
+        let t = tracer(0.0, 0, clock.clone());
+        let hook = t.hook(1);
+        run_request(&hook, &clock, Uid(1), 1_000);
+        assert!(t.trace_of(Uid(1)).is_none());
+    }
+
+    #[test]
+    fn tail_rule_force_keeps_slow_requests() {
+        let clock = Arc::new(ManualClock::new());
+        let t = tracer(0.0, 5, clock.clone()); // keep ≥ 5 ms
+        let hook = t.hook(1);
+        run_request(&hook, &clock, Uid(1), 1_000_000); // 1 ms: dropped
+        run_request(&hook, &clock, Uid(2), 9_000_000); // 9 ms: kept
+        assert!(t.trace_of(Uid(1)).is_none(), "fast request sampled out");
+        let slow = t.trace_of(Uid(2)).expect("slow request force-kept");
+        assert_eq!(slow.total_ns, 9_000_000);
+        assert_eq!(slow.verdict, Some(Verdict::Done));
+    }
+
+    #[test]
+    fn fractional_rate_is_deterministic_and_roughly_proportional() {
+        let clock = Arc::new(ManualClock::new());
+        let t = tracer(0.5, 0, clock.clone());
+        let hook = t.hook(1);
+        for i in 0..400 {
+            run_request(&hook, &clock, Uid(i), 100);
+        }
+        let kept = t.completed().len();
+        assert!(
+            (100..300).contains(&kept),
+            "~50% of 400 expected, got {kept}"
+        );
+        // Deterministic: the same UID always decides the same way.
+        let first = t.trace_of(Uid(3)).is_some();
+        assert_eq!(t.trace_of(Uid(3)).is_some(), first);
+    }
+}

@@ -1,0 +1,234 @@
+//! The per-component flight recorder: a fixed-capacity MPSC event ring
+//! with overwrite-oldest semantics and a lock-free hot path.
+//!
+//! `record` is a head `fetch_add` plus seven atomic stores into one
+//! slot (a seqlock generation word bracketing five payload words) — no
+//! locks, no allocation, no branches on the drain side's state. The
+//! collector drains with a cursor: slots the writers have lapped are
+//! counted as overwritten (newest events win, per flight-recorder
+//! convention), torn reads are detected by the generation word and
+//! retried on the next drain.
+//!
+//! Memory bound: `capacity * 48 bytes` per recorder, fixed at
+//! construction from `trace.buffer_events` — a recorder can never grow,
+//! so tracing at any traffic level has a constant footprint.
+
+use super::TraceEvent;
+use crate::metrics::Counter;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Payload words per slot (packed [`TraceEvent`]).
+pub(crate) const EVENT_WORDS: usize = 5;
+
+struct Slot {
+    /// Generation word: `2*idx + 1` while the writer of global index
+    /// `idx` is mid-write, `2*idx + 2` once its words are published.
+    /// Monotone across laps, so a drain can tell "not yet written",
+    /// "torn / in progress", and "overwritten by a later lap" apart.
+    seq: AtomicU64,
+    words: [AtomicU64; EVENT_WORDS],
+}
+
+impl Slot {
+    fn empty() -> Self {
+        Self {
+            seq: AtomicU64::new(0),
+            words: [const { AtomicU64::new(0) }; EVENT_WORDS],
+        }
+    }
+}
+
+/// Bounded MPSC trace-event ring. Writers never block and never
+/// allocate; the single drain side (the collector, under its own lock)
+/// advances a cursor it owns.
+pub struct FlightRecorder {
+    slots: Box<[Slot]>,
+    /// Next global write index (monotone; slot = index % capacity).
+    head: AtomicU64,
+    /// Events recorded (shared `trace_events_total` handle).
+    events: Arc<Counter>,
+}
+
+impl FlightRecorder {
+    /// Fixed capacity ring; `cap` is clamped to at least 16 slots.
+    pub fn new(cap: usize, events: Arc<Counter>) -> Self {
+        let cap = cap.max(16);
+        let slots: Vec<Slot> = (0..cap).map(|_| Slot::empty()).collect();
+        Self {
+            slots: slots.into_boxed_slice(),
+            head: AtomicU64::new(0),
+            events,
+        }
+    }
+
+    /// Slot capacity (the memory bound divided by the slot size).
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Total events ever recorded (monotone; `head`).
+    pub fn recorded(&self) -> u64 {
+        self.head.load(Ordering::Acquire)
+    }
+
+    /// Record one event: claim a global index, stamp the slot's
+    /// generation odd (write in progress), store the five packed words,
+    /// stamp it even. A reader that races any step sees a generation
+    /// mismatch and discards the torn read; a writer that laps a slow
+    /// reader simply overwrites — oldest events go first.
+    pub fn record(&self, ev: TraceEvent) {
+        let idx = self.head.fetch_add(1, Ordering::AcqRel);
+        let slot = &self.slots[(idx % self.slots.len() as u64) as usize];
+        slot.seq.store(2 * idx + 1, Ordering::Release);
+        let w = ev.pack();
+        for (dst, src) in slot.words.iter().zip(w) {
+            dst.store(src, Ordering::Relaxed);
+        }
+        slot.seq.store(2 * idx + 2, Ordering::Release);
+        self.events.inc();
+    }
+
+    /// Drain events with global index in `[cursor, head)` into `out`.
+    /// Returns `(new_cursor, lost)` where `lost` counts events
+    /// overwritten before this drain reached them (writers lapped the
+    /// cursor) plus generations that vanished mid-read. A slot still
+    /// being written stops the drain early (its index is re-offered
+    /// next time), so no event is skipped while its writer is active.
+    pub fn drain_from(&self, cursor: u64, out: &mut Vec<TraceEvent>) -> (u64, u64) {
+        let head = self.head.load(Ordering::Acquire);
+        let cap = self.slots.len() as u64;
+        let start = cursor.max(head.saturating_sub(cap));
+        let mut lost = start - cursor;
+        let mut idx = start;
+        while idx < head {
+            let slot = &self.slots[(idx % cap) as usize];
+            let want = 2 * idx + 2;
+            let s1 = slot.seq.load(Ordering::Acquire);
+            if s1 < want {
+                // This index's writer has claimed but not finished (or
+                // the claim raced our head read): stop here and retry
+                // on the next drain rather than lose an in-flight event.
+                break;
+            }
+            if s1 == want {
+                let mut w = [0u64; EVENT_WORDS];
+                for (dst, src) in w.iter_mut().zip(&slot.words) {
+                    *dst = src.load(Ordering::Relaxed);
+                }
+                if slot.seq.load(Ordering::Acquire) == want {
+                    if let Some(ev) = TraceEvent::unpack(w) {
+                        out.push(ev);
+                    } else {
+                        lost += 1;
+                    }
+                } else {
+                    lost += 1; // lapped mid-read: the newer event wins
+                }
+            } else {
+                lost += 1; // already overwritten by a later lap
+            }
+            idx += 1;
+        }
+        (idx, lost)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{EventKind, Verdict};
+    use crate::util::Uid;
+
+    fn ev(i: u64) -> TraceEvent {
+        TraceEvent {
+            uid: Uid(i as u128),
+            t_ns: i,
+            kind: EventKind::Enqueued,
+            stage: Some(1),
+            set: 0,
+            node: 3,
+        }
+    }
+
+    #[test]
+    fn record_drain_roundtrip() {
+        let rec = FlightRecorder::new(64, Arc::new(Counter::default()));
+        for i in 0..10 {
+            rec.record(ev(i));
+        }
+        let mut out = Vec::new();
+        let (cur, lost) = rec.drain_from(0, &mut out);
+        assert_eq!((cur, lost), (10, 0));
+        assert_eq!(out.len(), 10);
+        for (i, e) in out.iter().enumerate() {
+            assert_eq!(e.uid.0, i as u128);
+        }
+        // Idempotent past the cursor.
+        let (cur2, lost2) = rec.drain_from(cur, &mut out);
+        assert_eq!((cur2, lost2), (10, 0));
+        assert_eq!(out.len(), 10);
+    }
+
+    #[test]
+    fn overflow_keeps_newest() {
+        let rec = FlightRecorder::new(16, Arc::new(Counter::default()));
+        for i in 0..100 {
+            rec.record(ev(i));
+        }
+        let mut out = Vec::new();
+        let (cur, lost) = rec.drain_from(0, &mut out);
+        assert_eq!(cur, 100);
+        assert_eq!(lost, 84, "all but the newest `cap` are overwritten");
+        assert_eq!(out.len(), 16);
+        let uids: Vec<u128> = out.iter().map(|e| e.uid.0).collect();
+        assert_eq!(uids, (84..100).collect::<Vec<u128>>(), "newest survive");
+    }
+
+    #[test]
+    fn terminal_event_packs_roundtrip() {
+        for v in [
+            Verdict::Done,
+            Verdict::Cancelled,
+            Verdict::DeadlineExceeded,
+            Verdict::Failed,
+        ] {
+            let e = TraceEvent {
+                uid: Uid(u128::MAX - 7),
+                t_ns: u64::MAX / 3,
+                kind: EventKind::Terminal { verdict: v },
+                stage: None,
+                set: 2,
+                node: 65000,
+            };
+            assert_eq!(TraceEvent::unpack(e.pack()), Some(e));
+        }
+    }
+
+    #[test]
+    fn concurrent_writers_all_events_land() {
+        let rec = Arc::new(FlightRecorder::new(4096, Arc::new(Counter::default())));
+        let threads: Vec<_> = (0..4)
+            .map(|t| {
+                let r = rec.clone();
+                std::thread::spawn(move || {
+                    for i in 0..256u64 {
+                        r.record(ev(t * 1000 + i));
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            if t.join().is_err() {
+                panic!("writer thread panicked");
+            }
+        }
+        let mut out = Vec::new();
+        let (cur, lost) = rec.drain_from(0, &mut out);
+        assert_eq!(cur, 1024);
+        assert_eq!(lost, 0, "ring larger than the write volume loses nothing");
+        assert_eq!(out.len(), 1024);
+        let set: std::collections::HashSet<u128> = out.iter().map(|e| e.uid.0).collect();
+        assert_eq!(set.len(), 1024, "every event distinct and present");
+    }
+}

@@ -89,6 +89,10 @@ pub struct RdmaEndpoint {
     clock: Arc<dyn Clock>,
     corrupted: u64,
     metrics: Option<RingMetrics>,
+    /// Tracing hook from the owning instance (None = tracing off): each
+    /// validated rendezvous pull records a [`crate::trace::EventKind::RendezvousRead`]
+    /// attributed to the resolved message's request.
+    trace: Option<crate::trace::TraceHook>,
 }
 
 /// Sending handle (producer bound to one receiver's ring).
@@ -124,6 +128,7 @@ impl RdmaEndpoint {
             clock: Arc::new(SystemClock),
             corrupted: 0,
             metrics: None,
+            trace: None,
         }
     }
 
@@ -131,6 +136,12 @@ impl RdmaEndpoint {
     /// validated rendezvous reads).
     pub fn set_metrics(&mut self, metrics: RingMetrics) {
         self.metrics = Some(metrics);
+    }
+
+    /// Attach the owning instance's tracing hook: validated rendezvous
+    /// pulls record per-request `RendezvousRead` events.
+    pub fn set_trace(&mut self, trace: crate::trace::TraceHook) {
+        self.trace = Some(trace);
     }
 
     /// Ring region id — senders connect with [`RdmaEndpoint::sender`] or a
@@ -207,6 +218,7 @@ impl RdmaEndpoint {
     /// place, descriptors pull the staged payload first. `None` counts
     /// a corruption and means "skip this frame".
     fn resolve(&mut self, frame: Frame) -> Option<WorkflowMessage> {
+        let rendezvous = frame.kind == FrameKind::Descriptor;
         let bytes = match frame.kind {
             FrameKind::Eager => {
                 if let Some(m) = &self.metrics {
@@ -225,7 +237,18 @@ impl RdmaEndpoint {
             },
         };
         match WorkflowMessage::decode(&bytes) {
-            Ok(m) => Some(m),
+            Ok(m) => {
+                if rendezvous {
+                    if let Some(t) = &self.trace {
+                        t.record(
+                            m.header.uid,
+                            Some(m.header.stage.0),
+                            crate::trace::EventKind::RendezvousRead,
+                        );
+                    }
+                }
+                Some(m)
+            }
             Err(CodecError(_)) => {
                 self.corrupted += 1;
                 None

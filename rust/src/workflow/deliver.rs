@@ -64,6 +64,9 @@ pub struct ResultDeliver {
     /// Artifact cache to seed with full-workflow terminals (None when the
     /// deployment has no `cache` block — the store path is unchanged).
     cache: Option<Arc<crate::cache::ArtifactCache>>,
+    /// Tracing hook from the owning instance (None = tracing off; every
+    /// record site is a skipped `if let`).
+    trace: Option<crate::trace::TraceHook>,
     delivered: u64,
     dropped: u64,
 }
@@ -80,8 +83,23 @@ impl ResultDeliver {
             metrics: None,
             rendezvous_threshold: 0,
             cache: None,
+            trace: None,
             delivered: 0,
             dropped: 0,
+        }
+    }
+
+    /// Attach the owning instance's tracing hook: downstream ring pushes
+    /// and recovery checkpoints record into its flight recorder.
+    pub fn set_trace(&mut self, trace: crate::trace::TraceHook) {
+        self.trace = Some(trace);
+    }
+
+    /// Record one trace event when tracing is on; free when it is off.
+    #[inline]
+    fn trace(&self, uid: Uid, stage: Option<u32>, kind: crate::trace::EventKind) {
+        if let Some(t) = &self.trace {
+            t.record(uid, stage, kind);
         }
     }
 
@@ -257,6 +275,11 @@ impl ResultDeliver {
             drop(frames);
             for (k, &i) in sendable.iter().enumerate() {
                 if k < accepted {
+                    self.trace(
+                        msgs[i].header.uid,
+                        Some(msgs[i].header.stage.0),
+                        crate::trace::EventKind::RingPush,
+                    );
                     if ckpt {
                         let bytes: Arc<[u8]> = std::mem::take(&mut encoded[k]).into();
                         for db in &self.dbs {
@@ -266,6 +289,11 @@ impl ResultDeliver {
                                 bytes.clone(),
                             );
                         }
+                        self.trace(
+                            msgs[i].header.uid,
+                            Some(msgs[i].header.stage.0),
+                            crate::trace::EventKind::Checkpoint,
+                        );
                     }
                     self.delivered += 1;
                     out[i] = Delivery::Sent(rid);
@@ -308,6 +336,11 @@ impl ResultDeliver {
                     // checkpoint share the same buffer.
                     let bytes: Arc<[u8]> = msg.encode().into();
                     if tx.send_encoded(&bytes) {
+                        self.trace(
+                            msg.header.uid,
+                            Some(msg.header.stage.0),
+                            crate::trace::EventKind::RingPush,
+                        );
                         for db in &self.dbs {
                             db.put_checkpoint(
                                 msg.header.uid,
@@ -315,11 +348,21 @@ impl ResultDeliver {
                                 bytes.clone(),
                             );
                         }
+                        self.trace(
+                            msg.header.uid,
+                            Some(msg.header.stage.0),
+                            crate::trace::EventKind::Checkpoint,
+                        );
                         Delivery::Sent(rid)
                     } else {
                         Delivery::Dropped
                     }
                 } else if tx.send(msg) {
+                    self.trace(
+                        msg.header.uid,
+                        Some(msg.header.stage.0),
+                        crate::trace::EventKind::RingPush,
+                    );
                     Delivery::Sent(rid)
                 } else {
                     Delivery::Dropped

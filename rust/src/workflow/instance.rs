@@ -67,6 +67,12 @@ pub struct InstanceConfig {
     /// path). None (the default, and whenever the deployment has no
     /// `cache` config block) keeps the execute loop byte-identical.
     pub cache: Option<Arc<ArtifactCache>>,
+    /// Flight-recorder hook for distributed tracing (one per instance,
+    /// from [`crate::trace::Tracer::hook`]). None (the default, and
+    /// whenever the deployment has no `trace` config block) keeps the
+    /// whole data plane byte-identical — not a single trace branch is
+    /// taken.
+    pub trace: Option<crate::trace::TraceHook>,
 }
 
 impl Default for InstanceConfig {
@@ -81,6 +87,7 @@ impl Default for InstanceConfig {
             max_starvation: Duration::ZERO,
             rendezvous_threshold: 0,
             cache: None,
+            trace: None,
         }
     }
 }
@@ -141,6 +148,9 @@ struct Shared {
     /// Per-stage artifact cache (None = cache off, execute loop
     /// unchanged).
     cache: Option<Arc<ArtifactCache>>,
+    /// Tracing hook (None = tracing off, every record site compiles to
+    /// a skipped `if let`).
+    trace: Option<crate::trace::TraceHook>,
     shutdown: AtomicBool,
     /// Crash injection (chaos testing): when set, every thread goes
     /// dormant — no heartbeats, no ring drains, no stage work — exactly
@@ -152,6 +162,14 @@ struct Shared {
 }
 
 impl Shared {
+    /// Record one trace event when tracing is on; free when it is off.
+    #[inline]
+    fn trace(&self, uid: Uid, stage: Option<u32>, kind: crate::trace::EventKind) {
+        if let Some(t) = &self.trace {
+            t.record(uid, stage, kind);
+        }
+    }
+
     /// Drop a request the control plane declared dead: publish the
     /// matching tombstone and count it. The tracker entry is
     /// deliberately **kept**: in Collaboration Mode the other ranks
@@ -258,6 +276,13 @@ impl Instance {
             // Terminal stores seed the workflow-level admission tier.
             rd.set_cache(c.clone());
         }
+        if let Some(t) = &cfg.trace {
+            // RD and the receive endpoint record their own hops
+            // (checkpoints, downstream pushes, rendezvous pulls) into
+            // the same per-instance flight recorder.
+            rd.set_trace(t.clone());
+            endpoint.set_trace(t.clone());
+        }
         let shared = Arc::new(Shared {
             node: cfg.node,
             queue: queue.clone(),
@@ -275,6 +300,7 @@ impl Instance {
             parked: Mutex::new(std::collections::HashMap::new()),
             recovery_enabled: cfg.checkpointing,
             cache: cfg.cache,
+            trace: cfg.trace,
             shutdown: AtomicBool::new(false),
             crashed: Arc::new(AtomicBool::new(false)),
             processed: AtomicU64::new(0),
@@ -365,6 +391,11 @@ impl Instance {
                         match shared.tracker.verdict(uid) {
                             InFlightVerdict::Proceed => {
                                 let prio = shared.tracker.priority_of(uid);
+                                shared.trace(
+                                    uid,
+                                    Some(msg.header.stage.0),
+                                    crate::trace::EventKind::Enqueued,
+                                );
                                 shared.queue.dispatch(msg, prio);
                             }
                             // Cancelled / past-deadline arrivals never
@@ -464,6 +495,11 @@ impl Instance {
             let Some(msg) = fetched else {
                 continue;
             };
+            shared.trace(
+                msg.header.uid,
+                Some(msg.header.stage.0),
+                crate::trace::EventKind::Dequeued,
+            );
             let (role, exec) = {
                 let r = shared.role.read().unwrap();
                 let e = shared.executor.read().unwrap();
@@ -578,6 +614,15 @@ impl Instance {
                         shared.batch_size_h.record(b.len() as u64);
                         shared.batch_wait_h.record(b.wait.as_nanos() as u64);
                     }
+                    if shared.trace.is_some() {
+                        let kind = crate::trace::EventKind::BatchFormed {
+                            size: b.len().min(u16::MAX as usize) as u16,
+                            bypassed: b.bypassed,
+                        };
+                        for m in &b.members {
+                            shared.trace(m.header.uid, Some(role.stage_index), kind);
+                        }
+                    }
                     b
                 }
                 _ => MicroBatch::single(msg, false),
@@ -623,7 +668,21 @@ impl Instance {
                 ),
                 None => {
                     shared.util.busy();
+                    for m in &members {
+                        shared.trace(
+                            m.header.uid,
+                            Some(role.stage_index),
+                            crate::trace::EventKind::ExecBegin,
+                        );
+                    }
                     let r = logic.execute_batch(&role.stage_name, &exec, &members);
+                    for m in &members {
+                        shared.trace(
+                            m.header.uid,
+                            Some(role.stage_index),
+                            crate::trace::EventKind::ExecEnd,
+                        );
+                    }
                     // Utilization is weighted per *request*, not per
                     // invocation: an amortized batch must report the
                     // demand it absorbed or the NM under-estimates load
@@ -697,8 +756,31 @@ impl Instance {
                     // Tell the control plane where the request went — if
                     // that instance dies, the recovery sweep finds the
                     // request by this location.
-                    Delivery::Sent(region) => shared.tracker.note_location(uid, region),
-                    Delivery::Stored => {}
+                    Delivery::Sent(region) => {
+                        shared.trace(
+                            uid,
+                            Some(role.stage_index),
+                            crate::trace::EventKind::Delivered,
+                        );
+                        shared.tracker.note_location(uid, region);
+                    }
+                    Delivery::Stored => {
+                        // Terminal store: the request's result reached
+                        // the DB for the client to fetch — this is the
+                        // data plane's "done" moment.
+                        shared.trace(
+                            uid,
+                            Some(role.stage_index),
+                            crate::trace::EventKind::Delivered,
+                        );
+                        shared.trace(
+                            uid,
+                            None,
+                            crate::trace::EventKind::Terminal {
+                                verdict: crate::trace::Verdict::Done,
+                            },
+                        );
+                    }
                     Delivery::Dropped => {
                         // No downstream capacity (the next stage lost
                         // every instance, or its ring refused the
@@ -770,12 +852,22 @@ impl Instance {
             keys.push(key);
             if let Some(bytes) = cache.lookup(&role.stage_name, key) {
                 if let Ok(p) = Payload::decode(&bytes) {
+                    shared.trace(
+                        m.header.uid,
+                        Some(role.stage_index),
+                        crate::trace::EventKind::CacheHit,
+                    );
                     slots.push(Slot::Ready(p));
                     continue;
                 }
                 // Undecodable cached bytes (should not happen — entries
                 // are validated encodings): recompute rather than fail.
             }
+            shared.trace(
+                m.header.uid,
+                Some(role.stage_index),
+                crate::trace::EventKind::CacheMiss,
+            );
             if let Some(&j) = first_by_key.get(&key.0) {
                 slots.push(Slot::Dup(j));
                 continue;
@@ -803,7 +895,21 @@ impl Instance {
             let subset: Vec<WorkflowMessage> =
                 exec_idx.iter().map(|&i| members[i].clone()).collect();
             shared.util.busy();
+            for m in &subset {
+                shared.trace(
+                    m.header.uid,
+                    Some(role.stage_index),
+                    crate::trace::EventKind::ExecBegin,
+                );
+            }
             let r = logic.execute_batch(&role.stage_name, exec, &subset);
+            for m in &subset {
+                shared.trace(
+                    m.header.uid,
+                    Some(role.stage_index),
+                    crate::trace::EventKind::ExecEnd,
+                );
+            }
             shared.util.idle_n(subset.len() as u32);
             r
         };
@@ -859,7 +965,18 @@ impl Instance {
                             // ourselves — coalescing must never turn
                             // into a correctness dependency.
                             shared.util.busy();
+                            let uid = members[i].header.uid;
+                            shared.trace(
+                                uid,
+                                Some(role.stage_index),
+                                crate::trace::EventKind::ExecBegin,
+                            );
                             let r = logic.execute(&role.stage_name, exec, &members[i]);
+                            shared.trace(
+                                uid,
+                                Some(role.stage_index),
+                                crate::trace::EventKind::ExecEnd,
+                            );
                             shared.util.idle_n(1);
                             r
                         }

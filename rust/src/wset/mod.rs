@@ -74,6 +74,13 @@ pub struct WorkflowSet {
     /// Set-wide artifact cache (`cache` config block; `None` = off and
     /// the whole data path is byte-identical to an uncached build).
     cache: Option<Arc<crate::cache::ArtifactCache>>,
+    /// Distributed-tracing facade (`trace` config block; `None` = off:
+    /// no recorder exists, no `trace_*` counter is registered, and every
+    /// component's record site is a skipped `if let`).
+    tracer: Option<Arc<crate::trace::Tracer>>,
+    /// Set-level hook for request-scoped events recorded outside any
+    /// instance (federation routing).
+    trace_hook: Option<crate::trace::TraceHook>,
     housekeeper: Option<std::thread::JoinHandle<()>>,
     hk_stop: Arc<std::sync::atomic::AtomicBool>,
     /// Crash switches per instance, shared with the housekeeper's chaos
@@ -150,6 +157,16 @@ impl WorkflowSet {
             ))
         });
 
+        // Distributed tracing: built only when the config has a `trace`
+        // block. Every traced component registers its own flight
+        // recorder through `Tracer::hook`; the housekeeper drains them
+        // on its sweep tick so completed traces surface without any
+        // reader in the loop.
+        let tracer = config
+            .trace
+            .as_ref()
+            .map(|ts| crate::trace::Tracer::new(ts, clock.clone(), 0, &metrics));
+
         let ring = RingConfig {
             nslots: config.ring.nslots,
             cap_bytes: config.ring.cap_bytes,
@@ -186,6 +203,8 @@ impl WorkflowSet {
             tracker: tracker.clone(),
             metrics,
             cache: cache.clone(),
+            tracer: tracer.clone(),
+            trace_hook: tracer.as_ref().map(|t| t.hook(0)),
             housekeeper: None,
             hk_stop: hk_stop.clone(),
             crash_handles: crash_handles.clone(),
@@ -195,6 +214,13 @@ impl WorkflowSet {
             .set_rendezvous_threshold(config.rdma.rendezvous_threshold_bytes);
         if let Some(c) = &cache {
             set.proxy.set_cache(c.clone());
+        }
+        if let Some(t) = &tracer {
+            // The proxy records admission-side events; the tracker
+            // records the failure-family terminal verdicts (cancelled /
+            // deadline-exceeded / failed) the data plane never sees.
+            set.proxy.set_trace(t.hook(1));
+            tracker.set_trace(t.hook(0));
         }
 
         // Spawn instances: assigned stages first, then the idle pool.
@@ -233,9 +259,13 @@ impl WorkflowSet {
             &set.metrics,
         );
         recovery.set_rendezvous_threshold(config.rdma.rendezvous_threshold_bytes);
+        if let Some(t) = &tracer {
+            recovery.set_trace(t.hook(2));
+        }
         let chaos_kills = set.metrics.counter("chaos_kills");
         let hk_handles = crash_handles.clone();
         let hk_cache = cache;
+        let hk_tracer = tracer;
         set.housekeeper = Some(std::thread::spawn(move || {
             let mut last_sweep = std::time::Instant::now();
             let mut last_kill = std::time::Instant::now();
@@ -280,6 +310,9 @@ impl WorkflowSet {
                     if let Some(c) = &hk_cache {
                         c.purge_expired();
                     }
+                    if let Some(t) = &hk_tracer {
+                        t.drain();
+                    }
                     tracker.purge_older_than(tracker_ttl_ns);
                     last_sweep = std::time::Instant::now();
                 }
@@ -318,6 +351,7 @@ impl WorkflowSet {
                 ),
                 rendezvous_threshold: self.config.rdma.rendezvous_threshold_bytes,
                 cache: self.cache.clone(),
+                trace: self.tracer.as_ref().map(|t| t.hook(node.0)),
             },
             &self.fabric,
             self.nm.clone(),
@@ -391,7 +425,12 @@ impl WorkflowSet {
         set_idx: usize,
         opts: &SubmitOptions,
     ) -> RequestHandle {
-        RequestHandle::new(uid, set_idx, self.tracker.clone(), self.db_client.clone(), opts)
+        let mut h =
+            RequestHandle::new(uid, set_idx, self.tracker.clone(), self.db_client.clone(), opts);
+        if let Some(t) = &self.tracer {
+            h.attach_tracer(t.clone());
+        }
+        h
     }
 
     /// The set's request-lifecycle control plane.
@@ -417,6 +456,19 @@ impl WorkflowSet {
     /// The set's artifact cache, when the config enables one.
     pub fn cache(&self) -> Option<&Arc<crate::cache::ArtifactCache>> {
         self.cache.as_ref()
+    }
+
+    /// The set's tracer, when the config enables tracing (`trace`
+    /// block). Drained by the housekeeper; callers can also pull kept
+    /// traces on demand through [`crate::trace::Tracer::completed`].
+    pub fn tracer(&self) -> Option<&Arc<crate::trace::Tracer>> {
+        self.tracer.as_ref()
+    }
+
+    /// Set-level trace hook for request-scoped events recorded outside
+    /// any instance (the federation router's `Routed` events).
+    pub fn trace_hook(&self) -> Option<&crate::trace::TraceHook> {
+        self.trace_hook.as_ref()
     }
 
     /// Export the proxy's fast-reject state (federation routing input).

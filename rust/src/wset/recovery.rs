@@ -54,6 +54,9 @@ pub struct RecoverySweep {
     /// a dead ring *after* the eviction sweep's replay snapshot; without
     /// a revisit those requests would strand forever.
     recent_dead: Vec<(RegionId, u64 /* last_seen_ns */, u64 /* evicted_at_ns */)>,
+    /// Tracing hook (None = tracing off): each successful checkpoint
+    /// replay records a `Replayed` event for the recovered request.
+    trace: Option<crate::trace::TraceHook>,
     instances_failed: Arc<Counter>,
     instances_replaced: Arc<Counter>,
     requests_recovered: Arc<Counter>,
@@ -86,11 +89,18 @@ impl RecoverySweep {
             ring_metrics: crate::transport::RingMetrics::from_registry(metrics),
             rendezvous_threshold: 0,
             recent_dead: Vec::new(),
+            trace: None,
             instances_failed: metrics.counter("instances_failed"),
             instances_replaced: metrics.counter("instances_replaced"),
             requests_recovered: metrics.counter("requests_recovered"),
             recovery_latency: metrics.histogram("recovery_latency_ns"),
         }
+    }
+
+    /// Attach the set's tracing hook: successful replays record a
+    /// `Replayed` event so kept traces show the recovery hop.
+    pub fn set_trace(&mut self, trace: crate::trace::TraceHook) {
+        self.trace = Some(trace);
     }
 
     /// Set the eager/rendezvous cutover on current and future replay
@@ -229,6 +239,13 @@ impl RecoverySweep {
                         self.requests_recovered.inc();
                         self.recovery_latency
                             .record(self.clock.now_ns().saturating_sub(last_seen_ns));
+                        if let Some(t) = &self.trace {
+                            t.record(
+                                uid,
+                                Some(ck.stage),
+                                crate::trace::EventKind::Replayed,
+                            );
+                        }
                         sent = true;
                         break;
                     }

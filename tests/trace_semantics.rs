@@ -1,0 +1,281 @@
+//! Semantics of the distributed-tracing subsystem, end to end:
+//!
+//! - a deployment without a `trace` config block registers no `trace_*`
+//!   counters and serves requests exactly as before (the off path is
+//!   byte-identical — no recorder even exists);
+//! - at `sample_rate` 1.0 a completed request's stitched trace
+//!   reconstructs the exact stage path with monotonic spans, a
+//!   queue/exec/transit breakdown, and a critical path that covers the
+//!   whole request;
+//! - the flight recorder overwrites oldest-first under overflow and the
+//!   newest events survive;
+//! - the `always_sample_slow_ms` tail rule force-keeps slow requests a
+//!   0.0 sample rate would drop;
+//! - cancelled / failed / deadline-expired requests carry their typed
+//!   terminal verdict in the kept trace.
+
+use onepiece::client::{Gateway, Priority, RequestHandle, RequestTracker, WaitOutcome};
+use onepiece::config::{ClusterConfig, ExecModel, FabricKind, TraceSettings};
+use onepiece::metrics::Registry;
+use onepiece::trace::{EventKind, Tracer, Verdict};
+use onepiece::transport::{AppId, Payload};
+use onepiece::util::{ManualClock, NodeId, Uid};
+use onepiece::workflow::EchoLogic;
+use onepiece::wset::{build_pool, WorkflowSet};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Fast four-stage i2v pipeline on simulated executors.
+fn sim_config() -> ClusterConfig {
+    let mut cfg = ClusterConfig::i2v_default();
+    cfg.fabric = FabricKind::Ideal;
+    for s in cfg.apps[0].stages.iter_mut() {
+        s.exec = ExecModel::Simulated { ms: 1.0 };
+        s.exec_ms = 1.0;
+    }
+    cfg.idle_pool = 0;
+    cfg
+}
+
+fn build(cfg: &ClusterConfig) -> WorkflowSet {
+    let pool = build_pool(cfg, None);
+    WorkflowSet::build(cfg.clone(), vec![vec![1, 1, 1, 1]], Arc::new(EchoLogic), pool)
+}
+
+/// The terminal event is recorded by the worker right *after* the result
+/// reaches the DB (which is what wakes `wait`), so a freshly completed
+/// request's trace can trail its result by a scheduling quantum.
+fn wait_trace(handle: &RequestHandle, timeout: Duration) -> Option<onepiece::trace::Trace> {
+    let deadline = std::time::Instant::now() + timeout;
+    loop {
+        if let Some(t) = handle.trace() {
+            return Some(t);
+        }
+        if std::time::Instant::now() >= deadline {
+            return None;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+#[test]
+fn untraced_set_registers_no_trace_counters_and_serves() {
+    let set = build(&sim_config());
+    std::thread::sleep(Duration::from_millis(80));
+    assert!(set.tracer().is_none(), "no `trace` block → no tracer");
+    assert!(set.trace_hook().is_none());
+
+    let handle = set
+        .submit(AppId(1), Payload::Bytes(b"untraced".to_vec()))
+        .expect("must admit");
+    assert!(matches!(
+        handle.wait(Duration::from_secs(10)),
+        WaitOutcome::Done(_)
+    ));
+    assert!(handle.trace().is_none(), "no tracer → no trace");
+
+    // The `trace_*` counters are registered only inside `Tracer::new`;
+    // an untraced deployment's registry must never show them.
+    for (name, _) in set.metrics().counters_snapshot() {
+        assert!(
+            !name.starts_with("trace_"),
+            "untraced set leaked counter {name:?}"
+        );
+    }
+    assert!(
+        !set.metrics().render_prometheus().contains("trace_"),
+        "untraced set leaked trace metrics into the exposition"
+    );
+    set.shutdown();
+}
+
+#[test]
+fn sampled_request_reconstructs_stage_path_with_monotonic_spans() {
+    let mut cfg = sim_config();
+    cfg.trace = Some(TraceSettings {
+        sample_rate: 1.0,
+        buffer_events: 4096,
+        always_sample_slow_ms: 0,
+    });
+    let set = build(&cfg);
+    std::thread::sleep(Duration::from_millis(80));
+
+    let handle = set
+        .submit(AppId(1), Payload::Bytes(b"traced request".to_vec()))
+        .expect("must admit");
+    assert!(matches!(
+        handle.wait(Duration::from_secs(10)),
+        WaitOutcome::Done(_)
+    ));
+    let trace = wait_trace(&handle, Duration::from_secs(5))
+        .expect("sample_rate 1.0 keeps every completed trace");
+
+    assert_eq!(trace.uid, handle.uid());
+    assert_eq!(trace.verdict, Some(Verdict::Done));
+    assert!(trace.total_ns > 0);
+
+    // Exact stage path through the four-stage i2v pipeline.
+    assert_eq!(trace.stage_path(), vec![0, 1, 2, 3]);
+
+    // Spans are monotonic: stitching orders by the set clock.
+    assert!(
+        trace.events.windows(2).all(|w| w[0].t_ns <= w[1].t_ns),
+        "events must be time-ordered"
+    );
+
+    // The full hop structure survived: admission, per-stage scheduler
+    // and execution spans, ring pushes, and final delivery.
+    let has = |k: &str| trace.events.iter().any(|e| e.kind.label() == k);
+    for kind in ["admitted", "enqueued", "dequeued", "exec_begin", "exec_end", "ring_push", "delivered", "terminal"] {
+        assert!(has(kind), "trace must contain a {kind} event: {:?}", trace.events);
+    }
+    for stage in 0..4u32 {
+        assert!(
+            trace
+                .events
+                .iter()
+                .any(|e| e.stage == Some(stage) && matches!(e.kind, EventKind::ExecBegin)),
+            "stage {stage} must have an exec span"
+        );
+    }
+
+    // Breakdown: each visited stage has a positive exec span (simulated
+    // 1 ms executors) and the critical path accounts for the whole
+    // request.
+    let breakdown = trace.breakdown();
+    assert_eq!(breakdown.len(), 4);
+    for b in &breakdown {
+        assert!(b.exec_ns > 0, "stage {} exec span missing", b.stage);
+    }
+    let cp = trace.critical_path();
+    let sum: u64 = cp.iter().map(|(_, ns)| ns).sum();
+    assert_eq!(sum, trace.total_ns, "critical path covers the request: {cp:?}");
+
+    // Recording left its bookkeeping in the registry.
+    assert!(set.metrics().counter("trace_events_total").get() > 0);
+    assert!(set.metrics().counter("trace_traces_kept_total").get() >= 1);
+    set.shutdown();
+}
+
+#[test]
+fn overflow_keeps_newest_and_counts_overwrites() {
+    let clock = Arc::new(ManualClock::new());
+    let metrics = Registry::new();
+    let tracer = Tracer::new(
+        &TraceSettings {
+            sample_rate: 1.0,
+            buffer_events: 16, // the recorder's minimum capacity
+            always_sample_slow_ms: 0,
+        },
+        clock.clone(),
+        0,
+        &metrics,
+    );
+    let hook = tracer.hook(1);
+
+    // 50 requests × 2 events each through a 16-slot ring: only the
+    // newest 16 events (the last 8 requests) survive the laps.
+    for i in 0..50u128 {
+        hook.record(Uid(i), None, EventKind::Admitted);
+        clock.advance(1_000);
+        hook.record(Uid(i), None, EventKind::Terminal { verdict: Verdict::Done });
+        clock.advance(1_000);
+    }
+    tracer.drain();
+
+    assert!(tracer.trace_of(Uid(0)).is_none(), "oldest events overwritten");
+    assert!(tracer.trace_of(Uid(41)).is_none(), "still outside the ring");
+    for i in 42..50u128 {
+        let t = tracer.trace_of(Uid(i)).expect("newest requests survive");
+        assert_eq!(t.events.len(), 2, "both events of request {i} kept");
+        assert_eq!(t.verdict, Some(Verdict::Done));
+        assert_eq!(t.total_ns, 1_000);
+    }
+    assert_eq!(metrics.counter("trace_events_total").get(), 100);
+    assert_eq!(
+        metrics.counter("trace_events_overwritten_total").get(),
+        84,
+        "100 recorded - 16 surviving slots"
+    );
+    assert_eq!(metrics.counter("trace_traces_kept_total").get(), 8);
+}
+
+#[test]
+fn slow_tail_rule_force_keeps_slow_requests() {
+    let clock = Arc::new(ManualClock::new());
+    let metrics = Registry::new();
+    let tracer = Tracer::new(
+        &TraceSettings {
+            sample_rate: 0.0, // head sampling drops everything…
+            buffer_events: 256,
+            always_sample_slow_ms: 5, // …but ≥ 5 ms is always kept
+        },
+        clock.clone(),
+        0,
+        &metrics,
+    );
+    let hook = tracer.hook(1);
+
+    let run = |uid: u128, dur_ns: u64| {
+        hook.record(Uid(uid), None, EventKind::Admitted);
+        clock.advance(dur_ns);
+        hook.record(Uid(uid), None, EventKind::Terminal { verdict: Verdict::Done });
+    };
+    run(1, 1_000_000); // 1 ms: sampled out
+    run(2, 9_000_000); // 9 ms: force-kept by the tail rule
+
+    assert!(tracer.trace_of(Uid(1)).is_none(), "fast request dropped");
+    let slow = tracer.trace_of(Uid(2)).expect("slow request force-kept");
+    assert_eq!(slow.total_ns, 9_000_000);
+    assert_eq!(slow.verdict, Some(Verdict::Done));
+    assert_eq!(metrics.counter("trace_traces_kept_total").get(), 1);
+    assert_eq!(metrics.counter("trace_traces_sampled_out_total").get(), 1);
+}
+
+#[test]
+fn cancelled_and_failed_requests_carry_terminal_verdicts() {
+    // End-to-end cancellation: a request cancelled mid-pipeline (slow
+    // diffusion keeps it in flight) finalizes with Verdict::Cancelled.
+    let mut cfg = sim_config();
+    cfg.apps[0].stages[2].exec = ExecModel::Simulated { ms: 300.0 };
+    cfg.apps[0].stages[2].exec_ms = 300.0;
+    cfg.trace = Some(TraceSettings {
+        sample_rate: 1.0,
+        buffer_events: 4096,
+        always_sample_slow_ms: 0,
+    });
+    let set = build(&cfg);
+    std::thread::sleep(Duration::from_millis(80));
+
+    let handle = set
+        .submit(AppId(1), Payload::Bytes(vec![3; 16]))
+        .expect("must admit");
+    std::thread::sleep(Duration::from_millis(30)); // reach diffusion
+    assert!(handle.cancel());
+    let trace = wait_trace(&handle, Duration::from_secs(5))
+        .expect("cancelled request still finalizes a trace");
+    assert_eq!(trace.verdict, Some(Verdict::Cancelled));
+    set.shutdown();
+
+    // Failed + deadline-expired verdicts via the tracker (the component
+    // that owns those transitions), against a manual clock.
+    let clock = Arc::new(ManualClock::new());
+    clock.set(1);
+    let metrics = Registry::new();
+    let tracer = Tracer::new(&TraceSettings::default(), clock.clone(), 0, &metrics);
+    let tracker = RequestTracker::new(clock.clone(), metrics.clone());
+    tracker.set_trace(tracer.hook(7));
+
+    let failed = Uid::fresh(NodeId(1));
+    tracker.register(failed, Priority::Standard, None);
+    assert!(tracker.mark_failed(failed));
+    let t = tracer.trace_of(failed).expect("failed request finalizes");
+    assert_eq!(t.verdict, Some(Verdict::Failed));
+
+    let late = Uid::fresh(NodeId(2));
+    tracker.register(late, Priority::Standard, Some(Duration::from_millis(10)));
+    clock.advance(11_000_000);
+    let _ = tracker.probe(late); // first post-expiry probe records the verdict
+    let t = tracer.trace_of(late).expect("expired request finalizes");
+    assert_eq!(t.verdict, Some(Verdict::DeadlineExceeded));
+}
