@@ -1,0 +1,208 @@
+//! E18 — fabric fault sweep: goodput under injected verb loss and a
+//! directed partition-and-heal, versus the fault-free baseline.
+//!
+//! Setup: one Workflow Set on the ideal fabric with the `faults` config
+//! block sweeping seeded verb-loss probability {0, 1%, 5%}, plus one row
+//! that adds a directed node-pair partition cut at t=1 s and healed at
+//! t=2 s. A steady offered stream carries a 3-attempt `RetryPolicy`, so
+//! verbs lost beyond the verb-retry budget resolve through checkpoint
+//! replay rather than hanging.
+//!
+//! Reported per row: admitted/done/failed, goodput, and the fault-plane
+//! counters (`verbs_lost`, `verb_retries`, `partitioned_ops`).
+//!
+//! Shape asserted: the fault-free row finishes with *zero* fault
+//! counters and full goodput; every faulted row keeps a bounded goodput
+//! dip (no collapse, no hangs: admitted = done + failed) and shows
+//! non-zero loss + retry counters; the partition row also counts
+//! rejected verbs on the victim links and drains after the heal.
+//!
+//! Run: `cargo bench --bench e18_fault_sweep`
+
+use onepiece::client::{Gateway, RequestHandle, RetryPolicy, SubmitOptions, WaitOutcome};
+use onepiece::config::{ClusterConfig, ExecModel, FabricKind, FaultSettings};
+use onepiece::rdma::FaultStats;
+use onepiece::transport::{AppId, Payload};
+use onepiece::workflow::EchoLogic;
+use onepiece::wset::{build_pool, WorkflowSet};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const RUN: Duration = Duration::from_secs(3);
+
+fn sweep_config(loss: f64) -> ClusterConfig {
+    let mut cfg = ClusterConfig::i2v_default();
+    cfg.fabric = FabricKind::Ideal;
+    for s in cfg.apps[0].stages.iter_mut() {
+        s.exec = ExecModel::Simulated { ms: 1.0 };
+        s.exec_ms = 1.0;
+    }
+    cfg.nm.heartbeat_ms = 10;
+    cfg.nm.instance_timeout_ms = 150;
+    cfg.idle_pool = 1;
+    if loss > 0.0 {
+        cfg.faults = Some(FaultSettings {
+            verb_loss_prob: loss,
+            ..Default::default()
+        });
+    }
+    cfg
+}
+
+struct Outcome {
+    admitted: u64,
+    done: u64,
+    failed: u64,
+    wall_s: f64,
+    stats: Option<FaultStats>,
+}
+
+fn run_one(loss: f64, partition: bool) -> Outcome {
+    let cfg = sweep_config(loss);
+    let pool = build_pool(&cfg, None);
+    let set = WorkflowSet::build(cfg, vec![vec![1, 1, 1, 1]], Arc::new(EchoLogic), pool);
+    std::thread::sleep(Duration::from_millis(100));
+
+    let opts = SubmitOptions::default()
+        .with_retry(RetryPolicy::attempts(3, Duration::ZERO));
+    let mut out = Outcome {
+        admitted: 0,
+        done: 0,
+        failed: 0,
+        wall_s: 0.0,
+        stats: None,
+    };
+    let mut pending: Vec<RequestHandle> = Vec::new();
+    let drain = |pending: &mut Vec<RequestHandle>, out: &mut Outcome| {
+        pending.retain(|h| match h.status() {
+            onepiece::client::RequestStatus::Done => {
+                out.done += 1;
+                false
+            }
+            onepiece::client::RequestStatus::Failed => {
+                out.failed += 1;
+                false
+            }
+            s => !s.is_terminal(),
+        });
+    };
+    let t0 = Instant::now();
+    let mut cut = false;
+    let mut healed = false;
+    while t0.elapsed() < RUN {
+        if partition && !cut && t0.elapsed() >= Duration::from_secs(1) {
+            set.fabric.start_partition(4, 1);
+            cut = true;
+        }
+        if partition && cut && !healed && t0.elapsed() >= Duration::from_secs(2) {
+            set.fabric.heal_partition();
+            healed = true;
+        }
+        if let Ok(h) = set.submit_with(AppId(1), Payload::Bytes(vec![7; 32]), opts) {
+            out.admitted += 1;
+            pending.push(h);
+        }
+        drain(&mut pending, &mut out);
+        std::thread::sleep(Duration::from_millis(10)); // 100 req/s offered
+    }
+    if cut && !healed {
+        set.fabric.heal_partition();
+    }
+    let drain_deadline = Instant::now() + Duration::from_secs(10);
+    while !pending.is_empty() && Instant::now() < drain_deadline {
+        drain(&mut pending, &mut out);
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    for h in pending {
+        match h.wait(Duration::from_secs(5)) {
+            WaitOutcome::Done(_) => out.done += 1,
+            WaitOutcome::Failed => out.failed += 1,
+            _ => {}
+        }
+    }
+    out.wall_s = t0.elapsed().as_secs_f64();
+    set.sync_fault_counters();
+    out.stats = set.fault_stats();
+    set.shutdown();
+    out
+}
+
+fn main() {
+    let mut report = onepiece::bench::Report::new("e18_fault_sweep");
+    println!("=== E18: goodput under injected fabric faults ===");
+    println!(
+        "offered 100 req/s | 4-stage simulated pipeline | verb-retry budget 4 \
+         attempts/5 ms | request retry budget 3 attempts\n"
+    );
+    println!(
+        "{:<18} {:>9} {:>7} {:>7} {:>12} {:>11} {:>13} {:>13}",
+        "row", "admitted", "done", "failed", "goodput(r/s)", "verbs_lost",
+        "verb_retries", "partitioned"
+    );
+    let rows: [(f64, bool); 4] =
+        [(0.0, false), (0.01, false), (0.05, false), (0.01, true)];
+    let mut baseline_goodput = 0.0;
+    for (loss, partition) in rows {
+        let out = run_one(loss, partition);
+        let goodput = out.done as f64 / out.wall_s;
+        let s = out.stats.unwrap_or_default();
+        let label = if partition {
+            format!("loss {loss} + cut")
+        } else {
+            format!("loss {loss}")
+        };
+        println!(
+            "{:<18} {:>9} {:>7} {:>7} {:>12.0} {:>11} {:>13} {:>13}",
+            label, out.admitted, out.done, out.failed, goodput, s.verbs_lost,
+            s.verb_retries, s.partitioned_ops
+        );
+        assert!(
+            out.done + out.failed == out.admitted,
+            "every admitted request must reach a terminal state \
+             (admitted {}, done {}, failed {})",
+            out.admitted,
+            out.done,
+            out.failed
+        );
+        if loss == 0.0 && !partition {
+            baseline_goodput = goodput;
+            assert!(
+                out.stats.is_none(),
+                "no faults block: no fault state may be allocated"
+            );
+            assert_eq!(out.failed, 0, "the healthy baseline must not fail requests");
+        } else {
+            assert!(s.verbs_lost >= 1, "{label}: loss injection must fire");
+            assert!(s.verb_retries >= 1, "{label}: lost verbs must be retried");
+            assert!(
+                goodput >= 0.5 * baseline_goodput,
+                "{label}: the goodput dip must stay bounded \
+                 ({goodput:.0} vs baseline {baseline_goodput:.0} r/s)"
+            );
+            if partition {
+                assert!(
+                    s.partitioned_ops >= 1,
+                    "the partition window must reject verbs on victim links"
+                );
+            }
+        }
+        let key = if partition {
+            format!("loss{}_cut", (loss * 100.0) as u64)
+        } else {
+            format!("loss{}", (loss * 100.0) as u64)
+        };
+        report
+            .add(format!("{key}.goodput_rps"), goodput)
+            .add(format!("{key}.failed"), out.failed as f64)
+            .add(format!("{key}.verbs_lost"), s.verbs_lost as f64)
+            .add(format!("{key}.verb_retries"), s.verb_retries as f64)
+            .add(format!("{key}.partitioned_ops"), s.partitioned_ops as f64);
+    }
+    report.write();
+    println!(
+        "\nshape: the verb-retry layer absorbs 1% loss with a flat goodput \
+         curve; 5% loss spends visibly more retries for a still-bounded dip; \
+         the partition row sheds only during the cut window and drains fully \
+         after the heal"
+    );
+}

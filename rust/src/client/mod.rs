@@ -226,11 +226,21 @@ impl RequestStatus {
 /// back — no clones), and folding the smallest `retry_after` hint into
 /// the final error. All three tiers build their [`Gateway`] impl on
 /// this so retry semantics cannot drift apart.
+///
+/// `opts.retry.backoff` is the *first* round's nominal wait; later
+/// rounds double it and every wait is seeded-jittered
+/// ([`crate::util::backoff_ns`], per-call seed) so many clients
+/// rejected by the same overload spike don't resubmit in lockstep and
+/// recreate it.
 pub(crate) fn retry_rounds(
     opts: &SubmitOptions,
     mut payload: Payload,
     mut round: impl FnMut(Payload) -> Result<RequestHandle, (SubmitError, Payload)>,
 ) -> Result<RequestHandle, SubmitError> {
+    // Distinct seed per retry_rounds call: concurrent callers with the
+    // same policy still spread their sleeps apart.
+    static BACKOFF_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+    let seed = BACKOFF_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
     let attempts = opts.retry.max_attempts.max(1);
     let mut best: Option<Duration> = None;
     for attempt in 0..attempts {
@@ -242,7 +252,11 @@ pub(crate) fn retry_rounds(
             }
         }
         if attempt + 1 < attempts && !opts.retry.backoff.is_zero() {
-            std::thread::sleep(opts.retry.backoff);
+            let base_ns = opts.retry.backoff.as_nanos().min(u64::MAX as u128) as u64;
+            // Cap at 16x the configured backoff so a long retry ladder
+            // can't sleep unboundedly past the caller's intent.
+            let ns = crate::util::backoff_ns(seed, attempt, base_ns, base_ns.saturating_mul(16));
+            std::thread::sleep(Duration::from_nanos(ns));
         }
     }
     Err(SubmitError::from_hint(best))

@@ -11,7 +11,7 @@ mod types;
 
 pub use types::{
     AppConfig, BatchSettings, CacheSettings, ChaosSettings, ClusterConfig, ConfigError,
-    DbSettings, ExecModel, FabricKind, NmSettings, ProxySettings, RdmaSettings,
+    DbSettings, ExecModel, FabricKind, FaultSettings, NmSettings, ProxySettings, RdmaSettings,
     RingSettings, SchedMode, StageConfig, TraceSettings,
 };
 

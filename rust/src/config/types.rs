@@ -307,6 +307,53 @@ impl Default for TraceSettings {
     }
 }
 
+/// Fabric fault-plane settings (DESIGN.md §7; mirrors
+/// [`crate::rdma::FaultPlan`]). **Absent = fault plane off**: without a
+/// `faults` block no fault state is allocated in the fabric, no
+/// `verbs_lost_total`-family counters are registered, and every verb
+/// takes the byte-identical pre-fault path — the same off-by-default
+/// discipline as `batch`/`cache`/`trace`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultSettings {
+    /// Probability any verb's completion is lost (sender sees
+    /// `VerbLost` and must retry or strand).
+    pub verb_loss_prob: f64,
+    /// Probability a verb completes late.
+    pub delay_prob: f64,
+    /// Extra modelled ns charged to each delayed completion.
+    pub delay_ns: u64,
+    /// Probability of a transient `UnknownRegion` flap.
+    pub flap_prob: f64,
+    /// Scheduled directed partition: start after this many fabric ops
+    /// (active only when `partition_ops > 0`).
+    pub partition_after_ops: u64,
+    /// Partition duration in fabric ops; 0 = no scheduled partition.
+    pub partition_ops: u64,
+    /// Victim selector: regions with `id % partition_group ==
+    /// partition_victim` are cut while partitioned.
+    pub partition_group: u64,
+    /// See `partition_group`.
+    pub partition_victim: u64,
+    /// Deterministic seed for the fault stream.
+    pub seed: u64,
+}
+
+impl Default for FaultSettings {
+    fn default() -> Self {
+        Self {
+            verb_loss_prob: 0.0,
+            delay_prob: 0.0,
+            delay_ns: 20_000,
+            flap_prob: 0.0,
+            partition_after_ops: 0,
+            partition_ops: 0,
+            partition_group: 4,
+            partition_victim: 1,
+            seed: 0xFA17,
+        }
+    }
+}
+
 /// Database tuning (§3.4).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct DbSettings {
@@ -360,6 +407,9 @@ pub struct ClusterConfig {
     /// Per-request distributed tracing. **None = tracing off**; no
     /// recorder memory, no `trace_*` counters, no hot-path writes.
     pub trace: Option<TraceSettings>,
+    /// Fabric fault injection. **None = fault plane off**; no fault
+    /// state in the fabric, no fault counters, byte-identical verbs.
+    pub faults: Option<FaultSettings>,
 }
 
 impl ClusterConfig {
@@ -434,6 +484,7 @@ impl ClusterConfig {
             batch: None,
             cache: None,
             trace: None,
+            faults: None,
         }
     }
 
@@ -531,6 +582,26 @@ impl ClusterConfig {
                 return Err(err("trace.buffer_events must be >= 64"));
             }
         }
+        if let Some(f) = &self.faults {
+            for (name, p) in [
+                ("verb_loss_prob", f.verb_loss_prob),
+                ("delay_prob", f.delay_prob),
+                ("flap_prob", f.flap_prob),
+            ] {
+                if !p.is_finite() || !(0.0..=1.0).contains(&p) {
+                    return Err(err(format!("faults.{name} must be in [0,1]")));
+                }
+            }
+            if f.partition_group == 0 {
+                return Err(err("faults.partition_group must be >= 1"));
+            }
+            if f.partition_victim >= f.partition_group {
+                return Err(err(
+                    "faults.partition_victim must be < partition_group \
+                     (otherwise the partition cuts no region)",
+                ));
+            }
+        }
         let mut ids = std::collections::HashSet::new();
         for app in &self.apps {
             if !ids.insert(app.id) {
@@ -615,6 +686,9 @@ impl ClusterConfig {
         }
         if let Some(t) = &self.trace {
             root.insert("trace".into(), trace_to_json(t));
+        }
+        if let Some(f) = &self.faults {
+            root.insert("faults".into(), faults_to_json(f));
         }
         root.insert(
             "db".into(),
@@ -838,6 +912,7 @@ impl ClusterConfig {
             batch: j.get("batch").map(parse_batch),
             cache: j.get("cache").map(parse_cache),
             trace: j.get("trace").map(parse_trace),
+            faults: j.get("faults").map(parse_faults),
         })
     }
 
@@ -960,6 +1035,52 @@ fn parse_trace(j: &Json) -> TraceSettings {
             .get("always_sample_slow_ms")
             .and_then(Json::as_u64)
             .unwrap_or(d.always_sample_slow_ms),
+    }
+}
+
+fn faults_to_json(f: &FaultSettings) -> Json {
+    obj(vec![
+        ("verb_loss_prob", Json::Num(f.verb_loss_prob)),
+        ("delay_prob", Json::Num(f.delay_prob)),
+        ("delay_ns", Json::Num(f.delay_ns as f64)),
+        ("flap_prob", Json::Num(f.flap_prob)),
+        ("partition_after_ops", Json::Num(f.partition_after_ops as f64)),
+        ("partition_ops", Json::Num(f.partition_ops as f64)),
+        ("partition_group", Json::Num(f.partition_group as f64)),
+        ("partition_victim", Json::Num(f.partition_victim as f64)),
+        ("seed", Json::Num(f.seed as f64)),
+    ])
+}
+
+/// Parse a `faults` block; missing fields inherit [`FaultSettings`]
+/// defaults (so `{"verb_loss_prob": 0.01}` is a complete override).
+fn parse_faults(j: &Json) -> FaultSettings {
+    let d = FaultSettings::default();
+    FaultSettings {
+        verb_loss_prob: j
+            .get("verb_loss_prob")
+            .and_then(Json::as_f64)
+            .unwrap_or(d.verb_loss_prob),
+        delay_prob: j.get("delay_prob").and_then(Json::as_f64).unwrap_or(d.delay_prob),
+        delay_ns: j.get("delay_ns").and_then(Json::as_u64).unwrap_or(d.delay_ns),
+        flap_prob: j.get("flap_prob").and_then(Json::as_f64).unwrap_or(d.flap_prob),
+        partition_after_ops: j
+            .get("partition_after_ops")
+            .and_then(Json::as_u64)
+            .unwrap_or(d.partition_after_ops),
+        partition_ops: j
+            .get("partition_ops")
+            .and_then(Json::as_u64)
+            .unwrap_or(d.partition_ops),
+        partition_group: j
+            .get("partition_group")
+            .and_then(Json::as_u64)
+            .unwrap_or(d.partition_group),
+        partition_victim: j
+            .get("partition_victim")
+            .and_then(Json::as_u64)
+            .unwrap_or(d.partition_victim),
+        seed: j.get("seed").and_then(Json::as_u64).unwrap_or(d.seed),
     }
 }
 
@@ -1133,6 +1254,44 @@ mod tests {
     fn absent_trace_block_means_tracing_off() {
         assert!(ClusterConfig::i2v_default().trace.is_none());
         assert!(ClusterConfig::from_json_str("{}").unwrap().trace.is_none());
+    }
+
+    #[test]
+    fn faults_block_parses_inherits_and_round_trips() {
+        let cfg = ClusterConfig::from_json_str(
+            r#"{"faults": {"verb_loss_prob": 0.05, "partition_ops": 200}}"#,
+        )
+        .unwrap();
+        let f = cfg.faults.unwrap();
+        assert_eq!(f.verb_loss_prob, 0.05);
+        assert_eq!(f.partition_ops, 200);
+        // Unset fields inherit the defaults.
+        let d = FaultSettings::default();
+        assert_eq!(f.delay_ns, d.delay_ns);
+        assert_eq!(f.partition_group, d.partition_group);
+        assert_eq!(f.seed, d.seed);
+        // Round-trip preserves the block.
+        let back = ClusterConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.faults, cfg.faults);
+        // Misconfigurations are rejected.
+        assert!(ClusterConfig::from_json_str(
+            r#"{"faults": {"verb_loss_prob": 1.5}}"#
+        )
+        .is_err());
+        assert!(ClusterConfig::from_json_str(
+            r#"{"faults": {"partition_group": 0}}"#
+        )
+        .is_err());
+        assert!(ClusterConfig::from_json_str(
+            r#"{"faults": {"partition_group": 2, "partition_victim": 2}}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn absent_faults_block_means_fault_plane_off() {
+        assert!(ClusterConfig::i2v_default().faults.is_none());
+        assert!(ClusterConfig::from_json_str("{}").unwrap().faults.is_none());
     }
 
     #[test]

@@ -9,7 +9,8 @@ use crate::transport::{AppId, Payload};
 use crate::util::NodeId;
 use crate::wset::WorkflowSet;
 use std::collections::HashMap;
-use std::sync::{Mutex, RwLock};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicU8, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
 /// Federation tuning.
@@ -28,6 +29,16 @@ pub struct FederationConfig {
     pub hot_pressure: f64,
     /// A set may donate idle capacity only below this pressure.
     pub donor_max_pressure: f64,
+    /// Consecutive serve failures (`NoCapacity`: dead entrance, cut
+    /// link) that trip a member set's circuit breaker open. `Overloaded`
+    /// never counts — a full set is alive.
+    pub breaker_threshold: u32,
+    /// How long an open breaker blocks routing before it half-opens and
+    /// admits a single probe.
+    pub breaker_cooldown: Duration,
+    /// Consecutive successful half-open probes required to close again
+    /// (hysteresis: one lucky probe must not flood a healing set).
+    pub breaker_close_after: u32,
 }
 
 impl Default for FederationConfig {
@@ -37,7 +48,116 @@ impl Default for FederationConfig {
             snapshot_max_age: Duration::from_millis(25),
             hot_pressure: 0.85,
             donor_max_pressure: 0.5,
+            breaker_threshold: 8,
+            breaker_cooldown: Duration::from_millis(250),
+            breaker_close_after: 3,
         }
+    }
+}
+
+/// Breaker states (`SetBreaker::state`).
+const BREAKER_CLOSED: u8 = 0;
+const BREAKER_OPEN: u8 = 1;
+const BREAKER_HALF_OPEN: u8 = 2;
+
+/// Per-set circuit breaker: closed → open after
+/// [`FederationConfig::breaker_threshold`] consecutive serve failures,
+/// open → half-open after [`FederationConfig::breaker_cooldown`] (one
+/// probe at a time), half-open → closed after
+/// [`FederationConfig::breaker_close_after`] consecutive probe successes
+/// — a failed probe snaps back to open with a fresh cooldown. All
+/// atomics: the admission walk consults it lock-free.
+struct SetBreaker {
+    state: AtomicU8,
+    consecutive_failures: AtomicU32,
+    half_open_successes: AtomicU32,
+    /// Milliseconds since router construction at the last open.
+    opened_at_ms: AtomicU64,
+    /// A half-open probe is in flight (only one admission at a time may
+    /// test a healing set).
+    probing: AtomicBool,
+}
+
+impl SetBreaker {
+    fn new() -> Self {
+        Self {
+            state: AtomicU8::new(BREAKER_CLOSED),
+            consecutive_failures: AtomicU32::new(0),
+            half_open_successes: AtomicU32::new(0),
+            opened_at_ms: AtomicU64::new(0),
+            probing: AtomicBool::new(false),
+        }
+    }
+
+    /// Gate one admission attempt. Open breakers admit nothing until the
+    /// cooldown elapses; the transition to half-open claims the probe
+    /// slot for this caller.
+    fn admits(&self, now_ms: u64, cooldown_ms: u64) -> bool {
+        match self.state.load(Ordering::Acquire) {
+            BREAKER_CLOSED => true,
+            BREAKER_OPEN => {
+                now_ms.saturating_sub(self.opened_at_ms.load(Ordering::Relaxed))
+                    >= cooldown_ms
+                    && self
+                        .state
+                        .compare_exchange(
+                            BREAKER_OPEN,
+                            BREAKER_HALF_OPEN,
+                            Ordering::AcqRel,
+                            Ordering::Relaxed,
+                        )
+                        .is_ok()
+                    && {
+                        self.half_open_successes.store(0, Ordering::Relaxed);
+                        self.probing.store(true, Ordering::Release);
+                        true
+                    }
+            }
+            _ => !self.probing.swap(true, Ordering::AcqRel),
+        }
+    }
+
+    /// The set served (or proved alive): reset the failure streak and,
+    /// in half-open, bank one probe success toward closing.
+    fn on_success(&self, close_after: u32) {
+        self.consecutive_failures.store(0, Ordering::Relaxed);
+        if self.state.load(Ordering::Acquire) == BREAKER_HALF_OPEN {
+            self.probing.store(false, Ordering::Release);
+            let ok = self.half_open_successes.fetch_add(1, Ordering::AcqRel) + 1;
+            if ok >= close_after {
+                self.state.store(BREAKER_CLOSED, Ordering::Release);
+            }
+        }
+    }
+
+    /// The set failed to serve. Returns `true` when this failure opened
+    /// (or re-opened) the breaker, so the caller can count the
+    /// transition.
+    fn on_failure(&self, now_ms: u64, threshold: u32) -> bool {
+        match self.state.load(Ordering::Acquire) {
+            BREAKER_OPEN => false,
+            BREAKER_HALF_OPEN => {
+                // Failed probe: snap back to open with a fresh cooldown.
+                self.opened_at_ms.store(now_ms, Ordering::Relaxed);
+                self.state.store(BREAKER_OPEN, Ordering::Release);
+                self.probing.store(false, Ordering::Release);
+                true
+            }
+            _ => {
+                let f = self.consecutive_failures.fetch_add(1, Ordering::AcqRel) + 1;
+                if f >= threshold {
+                    self.opened_at_ms.store(now_ms, Ordering::Relaxed);
+                    self.state.store(BREAKER_OPEN, Ordering::Release);
+                    true
+                } else {
+                    false
+                }
+            }
+        }
+    }
+
+    fn state(&self) -> u8 {
+        self.state.load(Ordering::Acquire)
     }
 }
 
@@ -87,9 +207,11 @@ struct AdmissionCounters {
     accepted_prio: [Arc<Counter>; 3],
     rejected: Arc<Counter>,
     rejected_prio: [Arc<Counter>; 3],
-    /// Per member set: `fed.set{i}.accepted` / `fed.set{i}.spill_in`.
+    /// Per member set: `fed.set{i}.accepted` / `fed.set{i}.spill_in` /
+    /// `fed.set{i}.breaker_open_total` (closed→open transitions).
     set_accepted: Vec<Arc<Counter>>,
     set_spill_in: Vec<Arc<Counter>>,
+    set_breaker_open: Vec<Arc<Counter>>,
 }
 
 impl AdmissionCounters {
@@ -111,6 +233,9 @@ impl AdmissionCounters {
             set_spill_in: (0..n_sets)
                 .map(|i| metrics.counter(&format!("fed.set{i}.spill_in")))
                 .collect(),
+            set_breaker_open: (0..n_sets)
+                .map(|i| metrics.counter(&format!("fed.set{i}.breaker_open_total")))
+                .collect(),
         }
     }
 }
@@ -127,12 +252,18 @@ pub struct FederationRouter {
     /// Serializes [`FederationRouter::rebalance`] passes: concurrent
     /// passes could otherwise pick the same donor and over-donate.
     rebalance_serial: Mutex<()>, // lint: lock-rank(federation_rebalance, 11)
+    /// Per-set circuit breakers (parallel to `sets`).
+    breakers: Vec<SetBreaker>,
+    /// Construction instant — breaker cooldowns are measured in ms from
+    /// here so the breaker state fits in atomics.
+    t0: Instant,
 }
 
 impl FederationRouter {
     pub fn new(sets: Vec<WorkflowSet>, cfg: FederationConfig) -> Self {
         let metrics = Registry::new();
         let counters = AdmissionCounters::new(&metrics, sets.len());
+        let breakers = (0..sets.len()).map(|_| SetBreaker::new()).collect();
         Self {
             sets: sets.into_iter().map(RwLock::new).collect(),
             cfg,
@@ -140,7 +271,14 @@ impl FederationRouter {
             counters,
             loads: Mutex::new(HashMap::new()),
             rebalance_serial: Mutex::new(()),
+            breakers,
+            t0: Instant::now(),
         }
+    }
+
+    /// Milliseconds since router construction (breaker clock).
+    fn now_ms(&self) -> u64 {
+        self.t0.elapsed().as_millis() as u64
     }
 
     /// Number of member sets.
@@ -271,6 +409,50 @@ impl FederationRouter {
         Some(DonationAction { from_set: donor, to_set: hot, retired, spawned })
     }
 
+    /// Current breaker state per member set (`"closed"` / `"open"` /
+    /// `"half-open"`), for reporting and the `federate` summary line.
+    pub fn breaker_states(&self) -> Vec<&'static str> {
+        self.breakers
+            .iter()
+            .map(|b| match b.state() {
+                BREAKER_OPEN => "open",
+                BREAKER_HALF_OPEN => "half-open",
+                _ => "closed",
+            })
+            .collect()
+    }
+
+    /// Recompute the brownout level from breaker health and push it to
+    /// every member proxy: fewer than 3/4 of the breakers closed sheds
+    /// Batch, fewer than 1/2 sheds Standard too — Interactive goodput
+    /// survives a partitioned federation. Returns the level applied
+    /// (also exported as the `fed.brownout_level` gauge). Call this on
+    /// the same cadence as [`FederationRouter::rebalance`].
+    pub fn refresh_brownout(&self) -> u8 {
+        let n = self.breakers.len();
+        if n == 0 {
+            return crate::proxy::BROWNOUT_OFF;
+        }
+        let closed = self
+            .breakers
+            .iter()
+            .filter(|b| b.state() == BREAKER_CLOSED)
+            .count();
+        let frac = closed as f64 / n as f64;
+        let level = if frac < 0.5 {
+            crate::proxy::BROWNOUT_SHED_STANDARD
+        } else if frac < 0.75 {
+            crate::proxy::BROWNOUT_SHED_BATCH
+        } else {
+            crate::proxy::BROWNOUT_OFF
+        };
+        for lock in &self.sets {
+            lock.read().unwrap().proxy.set_brownout(level);
+        }
+        self.metrics.gauge("fed.brownout_level").set(level as i64);
+        level
+    }
+
     /// Run `f` against a member set (read access).
     pub fn with_set<R>(&self, set: usize, f: impl FnOnce(&WorkflowSet) -> R) -> R {
         f(&self.sets[set].read().unwrap())
@@ -302,11 +484,24 @@ impl Gateway for FederationRouter {
         let result = crate::client::retry_rounds(&opts, payload, |mut payload| {
             let loads = self.loads_for(app);
             let order = Self::route_order(&loads);
+            // Breaker gate: skip open sets. If *every* breaker refuses
+            // (federation-wide outage or all probes claimed), walk the
+            // full order anyway — the breaker degrades routing, it never
+            // blackholes a request the sets could still serve.
+            let now_ms = self.now_ms();
+            let cooldown_ms = self.cfg.breaker_cooldown.as_millis() as u64;
+            let admitted: Vec<usize> = order
+                .iter()
+                .copied()
+                .filter(|&i| self.breakers[i].admits(now_ms, cooldown_ms))
+                .collect();
+            let candidates = if admitted.is_empty() { order } else { admitted };
             let mut best: Option<Duration> = None;
-            for (attempt, &idx) in order.iter().enumerate() {
+            for (attempt, &idx) in candidates.iter().enumerate() {
                 let set = self.sets[idx].read().unwrap();
                 match set.submit_once(app, payload, &opts) {
                     Ok(uid) => {
+                        self.breakers[idx].on_success(self.cfg.breaker_close_after);
                         c.accepted.inc();
                         c.accepted_prio[opts.priority.index()].inc();
                         c.set_accepted[idx].inc();
@@ -324,6 +519,18 @@ impl Gateway for FederationRouter {
                         return Ok(set.handle_for(uid, idx, &opts));
                     }
                     Err((e, p)) => {
+                        // `NoCapacity` is a serve failure (dead entrance,
+                        // cut link, dropped forward) and feeds the
+                        // breaker; `Overloaded` proves the set alive.
+                        match e {
+                            SubmitError::NoCapacity => {
+                                if self.breakers[idx].on_failure(now_ms, self.cfg.breaker_threshold)
+                                {
+                                    c.set_breaker_open[idx].inc();
+                                }
+                            }
+                            _ => self.breakers[idx].on_success(self.cfg.breaker_close_after),
+                        }
                         payload = p;
                         best = e.fold_hint(best);
                     }
@@ -511,6 +718,87 @@ mod tests {
         };
         let msg = crate::transport::WorkflowMessage::decode(&bytes).unwrap();
         assert_eq!(msg.payload, Payload::Bytes(vec![9]));
+        fed.shutdown();
+    }
+
+    #[test]
+    fn breaker_state_machine_opens_half_opens_and_closes_with_hysteresis() {
+        let b = SetBreaker::new();
+        // Closed admits; failures below the threshold keep it closed.
+        assert!(b.admits(0, 100));
+        assert!(!b.on_failure(0, 3));
+        assert!(!b.on_failure(0, 3));
+        assert_eq!(b.state(), BREAKER_CLOSED);
+        // Third consecutive failure opens it (the transition is reported
+        // exactly once).
+        assert!(b.on_failure(0, 3));
+        assert_eq!(b.state(), BREAKER_OPEN);
+        assert!(!b.on_failure(0, 3), "already open: no second transition");
+        // Open blocks until the cooldown elapses...
+        assert!(!b.admits(50, 100));
+        // ...then half-opens and admits exactly one probe.
+        assert!(b.admits(100, 100));
+        assert_eq!(b.state(), BREAKER_HALF_OPEN);
+        assert!(!b.admits(100, 100), "second concurrent probe refused");
+        // A failed probe snaps back to open with a fresh cooldown.
+        assert!(b.on_failure(100, 3));
+        assert_eq!(b.state(), BREAKER_OPEN);
+        assert!(!b.admits(150, 100), "cooldown restarted at re-open");
+        // Heal: probe succeeds close_after times before closing.
+        assert!(b.admits(200, 100));
+        b.on_success(2);
+        assert_eq!(b.state(), BREAKER_HALF_OPEN, "one success is not enough");
+        assert!(b.admits(200, 100), "probe slot released by the success");
+        b.on_success(2);
+        assert_eq!(b.state(), BREAKER_CLOSED);
+        // A success streak keeps the failure counter at zero.
+        b.on_success(2);
+        assert!(!b.on_failure(300, 3));
+    }
+
+    #[test]
+    fn dead_federation_opens_breakers_and_brownout_sheds() {
+        let cfg = tiny_budget_config();
+        let app = AppId(1);
+        // Both sets have no entrance instances: every submit is a serve
+        // failure on every set.
+        let sets = vec![
+            build_set(&cfg, vec![0, 1, 1, 1]),
+            build_set(&cfg, vec![0, 1, 1, 1]),
+        ];
+        let fed = FederationRouter::new(
+            sets,
+            FederationConfig {
+                snapshot_max_age: Duration::from_secs(3600),
+                breaker_threshold: 3,
+                breaker_cooldown: Duration::from_secs(3600),
+                ..Default::default()
+            },
+        );
+        assert_eq!(fed.breaker_states(), vec!["closed", "closed"]);
+        assert_eq!(fed.refresh_brownout(), crate::proxy::BROWNOUT_OFF);
+        for _ in 0..3 {
+            assert!(fed.submit(app, Payload::Bytes(vec![1])).is_err());
+        }
+        assert_eq!(fed.breaker_states(), vec!["open", "open"]);
+        // Once open, further submissions still resolve to a typed error
+        // through the all-open fallback walk — never a hang.
+        assert!(matches!(
+            fed.submit(app, Payload::Bytes(vec![2])),
+            Err(SubmitError::NoCapacity)
+        ));
+        let counters: std::collections::HashMap<String, u64> =
+            fed.metrics().counters_snapshot().into_iter().collect();
+        assert!(counters["fed.set0.breaker_open_total"] >= 1);
+        assert!(counters["fed.set1.breaker_open_total"] >= 1);
+        // No breaker closed => full brownout, pushed to every proxy.
+        assert_eq!(fed.refresh_brownout(), crate::proxy::BROWNOUT_SHED_STANDARD);
+        for i in 0..2 {
+            assert_eq!(
+                fed.with_set(i, |s| s.proxy.brownout()),
+                crate::proxy::BROWNOUT_SHED_STANDARD
+            );
+        }
         fed.shutdown();
     }
 

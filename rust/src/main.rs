@@ -33,7 +33,8 @@ USAGE:
       Run one Workflow Set end-to-end (PJRT stage executables unless
       --sim) and report latency/throughput.
   onepiece federate [--sets N] [--rate R] [--duration S] [--kill-every S]
-                    [--config PATH] [--cache] --sim
+                    [--fault-rate P] [--partition S] [--config PATH]
+                    [--cache] --sim
       Run N Workflow Sets behind the global load-aware FederationRouter
       under bursty (MMPP) load with an Interactive/Standard/Batch SLO
       mix; report per-set throughput, spill count, reject rate,
@@ -43,11 +44,15 @@ USAGE:
       every S seconds; the failure detector evicts it, promotes a
       replacement, and replays stranded requests from checkpoints
       (instances_failed / requests_recovered / requests_failed are
-      reported). --config PATH loads a cluster config JSON as the base
-      (e.g. examples/configs/cached_i2v.json); --cache enables the
-      artifact cache with defaults. With the cache on, prompts are drawn
-      Zipf-distributed so repeats exist, and cache hit/miss/coalesce
-      counters are reported.
+      reported). --fault-rate P injects seeded verb loss with
+      probability P on every set's fabric (the `faults` config block);
+      --partition S cuts a directed node-pair partition a third of the
+      way in and heals it after S seconds. Either flag adds a breaker /
+      brownout / fault-counter summary. --config PATH loads a cluster
+      config JSON as the base (e.g. examples/configs/cached_i2v.json);
+      --cache enables the artifact cache with defaults. With the cache
+      on, prompts are drawn Zipf-distributed so repeats exist, and
+      cache hit/miss/coalesce counters are reported.
   onepiece plan [--entrance N]
       Print the Theorem-1 instance plan for the i2v pipeline.
   onepiece trace (--fig5 | --fig6)
@@ -203,6 +208,8 @@ fn federate(flags: &HashMap<String, String>) -> Result<()> {
     let rate: f64 = flags.get("rate").map_or(Ok(100.0), |s| s.parse())?;
     let duration_s: f64 = flags.get("duration").map_or(Ok(5.0), |s| s.parse())?;
     let kill_every_s: Option<f64> = flags.get("kill-every").map(|s| s.parse()).transpose()?;
+    let fault_rate: Option<f64> = flags.get("fault-rate").map(|s| s.parse()).transpose()?;
+    let partition_s: Option<f64> = flags.get("partition").map(|s| s.parse()).transpose()?;
     if !flags.contains_key("sim") {
         bail!(
             "`onepiece federate` requires --sim for now: PJRT-backed federation \
@@ -254,6 +261,21 @@ fn federate(flags: &HashMap<String, String>) -> Result<()> {
         base.chaos.kill_every_ms = (secs * 1000.0) as u64;
         base.chaos.seed = 42;
         base.nm.instance_timeout_ms = 400;
+    }
+    if let Some(p) = fault_rate {
+        if !(0.0..=1.0).contains(&p) {
+            bail!("--fault-rate must be in [0, 1]");
+        }
+        // Seeded verb loss on every set's fabric; the verb-retry layer
+        // and Case 1-8 recovery absorb it (DESIGN.md §7).
+        let mut faults = base.faults.take().unwrap_or_default();
+        faults.verb_loss_prob = p;
+        base.faults = Some(faults);
+    }
+    if let Some(secs) = partition_s {
+        if secs <= 0.0 {
+            bail!("--partition must be > 0 seconds");
+        }
     }
     let cache_on = base.cache.is_some();
     let sets: Vec<WorkflowSet> = (0..n_sets)
@@ -338,6 +360,10 @@ fn federate(flags: &HashMap<String, String>) -> Result<()> {
     let mut latencies_ms: Vec<f64> = Vec::new();
     let mut admitted_total = 0usize;
     let mut next_rebalance = 0.25f64;
+    // Directed partition: cut a node pair on set 0's fabric a third of
+    // the way into the run, heal it --partition seconds later.
+    let mut partition_at = partition_s.map(|_| (duration_s / 3.0).max(0.05));
+    let mut heal_at: Option<f64> = None;
     for (i, &arr) in arrivals.iter().enumerate() {
         let target = t0 + Duration::from_secs_f64(arr);
         let now = Instant::now();
@@ -353,7 +379,21 @@ fn federate(flags: &HashMap<String, String>) -> Result<()> {
                     d.from_set, d.to_set, d.retired, d.spawned
                 );
             }
+            // Breaker scan on the same cadence: open/half-open counts
+            // drive the proxies' brownout shed level.
+            fed.refresh_brownout();
             next_rebalance += 0.25;
+        }
+        if partition_at.is_some_and(|t| arr >= t) {
+            fed.with_set(0, |s| s.fabric.start_partition(4, 1));
+            println!("  [t={arr:.2}s] partition: set 0 node pair cut");
+            heal_at = partition_s.map(|secs| arr + secs);
+            partition_at = None;
+        }
+        if heal_at.is_some_and(|t| arr >= t) {
+            fed.with_set(0, |s| s.fabric.heal_partition());
+            println!("  [t={arr:.2}s] partition: healed");
+            heal_at = None;
         }
         let payload = if cache_on {
             Payload::Bytes(vec![zipf.sample(&mut prompt_rng) as u8; 64])
@@ -365,6 +405,13 @@ fn federate(flags: &HashMap<String, String>) -> Result<()> {
             pending.push((handle, Instant::now()));
         }
         drain_finished(&mut pending, &mut per_set_done, &mut latencies_ms);
+    }
+
+    // A partition that outlives the arrival stream is healed here so the
+    // backlog can drain through the repaired fabric.
+    if heal_at.take().is_some() {
+        fed.with_set(0, |s| s.fabric.heal_partition());
+        println!("  [drain] partition: healed");
     }
 
     // Drain the backlog (set 0's slow diffusion keeps a queue).
@@ -415,7 +462,10 @@ fn federate(flags: &HashMap<String, String>) -> Result<()> {
     // sets' registries (where the tracker and proxies account them).
     let mut set_totals: HashMap<String, u64> = HashMap::new();
     for i in 0..n_sets {
-        for (k, v) in fed.with_set(i, |s| s.metrics().counters_snapshot()) {
+        for (k, v) in fed.with_set(i, |s| {
+            s.sync_fault_counters();
+            s.metrics().counters_snapshot()
+        }) {
             *set_totals.entry(k).or_insert(0) += v;
         }
     }
@@ -462,6 +512,30 @@ fn federate(flags: &HashMap<String, String>) -> Result<()> {
             set_get("instances_replaced"),
             set_get("requests_recovered"),
             set_get("requests_failed"),
+        );
+    }
+    if fault_rate.is_some() || partition_s.is_some() {
+        let states = fed.breaker_states();
+        let opens: u64 = (0..n_sets)
+            .map(|i| get(&format!("fed.set{i}.breaker_open_total")))
+            .sum();
+        println!(
+            "breaker: states [{}] | opens {opens} | brownout_level {}",
+            states.join(", "),
+            fed.refresh_brownout(),
+        );
+        println!(
+            "faults: verbs_lost {} | verbs_delayed {} | region_flaps {} | \
+             partitioned_ops {} | verb_retries {} | shed interactive {} \
+             standard {} batch {}",
+            set_get("verbs_lost_total"),
+            set_get("verbs_delayed_total"),
+            set_get("region_flaps_total"),
+            set_get("partitioned_ops_total"),
+            set_get("verb_retries_total"),
+            set_get("requests_shed.interactive"),
+            set_get("requests_shed.standard"),
+            set_get("requests_shed.batch"),
         );
     }
     println!(

@@ -301,6 +301,23 @@ mod tests {
     }
 
     #[test]
+    fn fault_plane_counters_surface_in_exposition() {
+        // The fault/breaker/brownout counters are plain registry rows:
+        // once registered (only when faults are on) they must surface in
+        // the Prometheus exposition with sanitized names.
+        let r = Registry::new();
+        r.counter("verbs_lost_total").add(3);
+        r.counter("verb_retries_total").add(5);
+        r.counter("requests_shed.batch").inc();
+        r.counter("fed.set0.breaker_open_total").inc();
+        let out = r.render_prometheus();
+        assert!(out.contains("# TYPE verbs_lost_total counter\nverbs_lost_total 3\n"));
+        assert!(out.contains("# TYPE verb_retries_total counter\nverb_retries_total 5\n"));
+        assert!(out.contains("requests_shed_batch 1\n"));
+        assert!(out.contains("fed_set0_breaker_open_total 1\n"));
+    }
+
+    #[test]
     fn prometheus_exposition_shape() {
         let r = Registry::new();
         r.counter("ring.pushes-total").add(9);

@@ -25,7 +25,9 @@
 
 mod monitor;
 
-pub use monitor::RequestMonitor;
+pub use monitor::{
+    RequestMonitor, BROWNOUT_OFF, BROWNOUT_SHED_BATCH, BROWNOUT_SHED_STANDARD,
+};
 
 use crate::client::{Priority, RequestTracker, SubmitError, SubmitOptions};
 use crate::config::ProxySettings;
@@ -101,6 +103,10 @@ pub struct Proxy {
     /// Trace hook for admission events (set once after build when the
     /// config has a `trace` block; absent = zero hot-path cost).
     trace: std::sync::OnceLock<crate::trace::TraceHook>,
+    /// `requests_shed.<priority>` counters, registered lazily on the
+    /// **first** brownout shed — a run that never browns out leaves
+    /// `counters_snapshot` without a shed row.
+    shed: std::sync::OnceLock<[Arc<Counter>; 3]>,
 }
 
 impl Proxy {
@@ -139,7 +145,21 @@ impl Proxy {
             rendezvous_threshold: std::sync::atomic::AtomicUsize::new(0),
             cache: std::sync::OnceLock::new(),
             trace: std::sync::OnceLock::new(),
+            shed: std::sync::OnceLock::new(),
         }
+    }
+
+    /// Set the brownout level ([`BROWNOUT_OFF`] / [`BROWNOUT_SHED_BATCH`]
+    /// / [`BROWNOUT_SHED_STANDARD`]): degraded admission that sheds
+    /// Batch, then Standard, keeping Interactive goodput while the
+    /// fabric is partitioned or the federation breakers are open.
+    pub fn set_brownout(&self, level: u8) {
+        self.monitor.set_brownout(level);
+    }
+
+    /// Current brownout level.
+    pub fn brownout(&self) -> u8 {
+        self.monitor.brownout()
     }
 
     /// Attach the set's artifact cache (build-time wiring, set once).
@@ -224,6 +244,19 @@ impl Proxy {
         if capacity <= 0.0 {
             self.rejected[opts.priority.index()].inc();
             return Err((SubmitError::NoCapacity, payload));
+        }
+        // Brownout shed before the budget is consulted: a degraded set
+        // refuses whole priority classes so the survivors' budget goes
+        // to Interactive traffic.
+        if self.monitor.sheds(opts.priority) {
+            self.rejected[opts.priority.index()].inc();
+            let shed = self.shed.get_or_init(|| {
+                let m = self.tracker.metrics();
+                Priority::ALL.map(|p| m.counter(&format!("requests_shed.{}", p.label())))
+            });
+            shed[opts.priority.index()].inc();
+            let retry_after = self.monitor.retry_after_hint();
+            return Err((SubmitError::Overloaded { retry_after }, payload));
         }
         if !self.monitor.admit(capacity, opts.priority) {
             self.rejected[opts.priority.index()].inc();
@@ -610,6 +643,51 @@ mod tests {
         let uid3 = submit(&proxy, Payload::Bytes(b"other".to_vec())).unwrap();
         assert!(ep.recv().is_some());
         assert!(mem.fetch(uid3).is_none());
+    }
+
+    #[test]
+    fn brownout_sheds_batch_then_standard_keeps_interactive() {
+        let (clock, _nm, _f, proxy, mut ep) = setup();
+        // No shed counter exists until the first actual shed.
+        assert!(proxy
+            .tracker
+            .metrics()
+            .counters_snapshot()
+            .iter()
+            .all(|(name, _)| !name.starts_with("requests_shed.")));
+        proxy.set_brownout(BROWNOUT_SHED_BATCH);
+        clock.advance(1_000_000);
+        let r = proxy.submit_request(AppId(1), Payload::Bytes(vec![1]), &SubmitOptions::batch());
+        assert!(matches!(r, Err((SubmitError::Overloaded { .. }, _))));
+        clock.advance(1_000_000);
+        assert!(submit(&proxy, Payload::Bytes(vec![2])).is_ok(), "standard admitted at L1");
+        proxy.set_brownout(BROWNOUT_SHED_STANDARD);
+        clock.advance(1_000_000);
+        let r = submit(&proxy, Payload::Bytes(vec![3]));
+        assert!(matches!(r, Err((SubmitError::Overloaded { .. }, _))));
+        clock.advance(1_000_000);
+        assert!(
+            proxy
+                .submit_request(
+                    AppId(1),
+                    Payload::Bytes(vec![4]),
+                    &SubmitOptions::interactive()
+                )
+                .is_ok(),
+            "interactive survives full brownout"
+        );
+        let snap = proxy.tracker.metrics().counters_snapshot();
+        let get = |n: &str| snap.iter().find(|(k, _)| k == n).map(|(_, v)| *v);
+        assert_eq!(get("requests_shed.batch"), Some(1));
+        assert_eq!(get("requests_shed.standard"), Some(1));
+        assert_eq!(get("requests_shed.interactive"), Some(0));
+        // Heal: batch admits again.
+        proxy.set_brownout(BROWNOUT_OFF);
+        clock.advance(1_000_000);
+        assert!(proxy
+            .submit_request(AppId(1), Payload::Bytes(vec![5]), &SubmitOptions::batch())
+            .is_ok());
+        while ep.recv().is_some() {}
     }
 
     #[test]

@@ -13,8 +13,18 @@
 use crate::client::Priority;
 use crate::util::Clock;
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
+
+/// Brownout levels (degraded admission under fabric fault / partition
+/// pressure, DESIGN.md §7): Batch is shed first, then Standard too —
+/// Interactive is never shed by brownout, only by its own budget.
+pub const BROWNOUT_OFF: u8 = 0;
+/// Shed Batch admissions.
+pub const BROWNOUT_SHED_BATCH: u8 = 1;
+/// Shed Batch and Standard admissions.
+pub const BROWNOUT_SHED_STANDARD: u8 = 2;
 
 /// Sliding-window admission controller.
 pub struct RequestMonitor {
@@ -26,6 +36,11 @@ pub struct RequestMonitor {
     /// Fraction of the window budget reserved for Interactive traffic
     /// (0.0 disables the reserve).
     interactive_reserve: f64,
+    /// Current brownout level ([`BROWNOUT_OFF`] /
+    /// [`BROWNOUT_SHED_BATCH`] / [`BROWNOUT_SHED_STANDARD`]); set by the
+    /// federation router's breaker scan, read by the proxy's admission
+    /// path.
+    brownout: AtomicU8,
     admitted: Mutex<VecDeque<u64>>, // lint: lock-rank(monitor, 30)
 }
 
@@ -41,7 +56,31 @@ impl RequestMonitor {
             window_ns,
             headroom,
             interactive_reserve: interactive_reserve.clamp(0.0, 1.0),
+            brownout: AtomicU8::new(BROWNOUT_OFF),
             admitted: Mutex::new(VecDeque::new()),
+        }
+    }
+
+    /// Set the brownout level (clamped to the defined range). Level
+    /// changes are advisory and race-free: a submission in flight sees
+    /// either the old or the new level, never an inconsistent mix.
+    pub fn set_brownout(&self, level: u8) {
+        self.brownout
+            .store(level.min(BROWNOUT_SHED_STANDARD), Ordering::Relaxed);
+    }
+
+    /// Current brownout level.
+    pub fn brownout(&self) -> u8 {
+        self.brownout.load(Ordering::Relaxed)
+    }
+
+    /// Whether the current brownout level sheds this priority class
+    /// before the budget is even consulted.
+    pub fn sheds(&self, priority: Priority) -> bool {
+        match self.brownout.load(Ordering::Relaxed) {
+            BROWNOUT_OFF => false,
+            BROWNOUT_SHED_BATCH => priority == Priority::Batch,
+            _ => priority != Priority::Interactive,
         }
     }
 
@@ -216,6 +255,24 @@ mod tests {
         let m = RequestMonitor::new(Arc::new(c.clone()), 1_000_000_000, 1.0, 1.0);
         c.advance(1_000_000);
         assert!(m.admit(1.0, Priority::Standard));
+    }
+
+    #[test]
+    fn brownout_sheds_batch_then_standard_never_interactive() {
+        let (_clock, m) = setup(1000);
+        assert!(!m.sheds(Priority::Batch), "off by default");
+        m.set_brownout(BROWNOUT_SHED_BATCH);
+        assert!(m.sheds(Priority::Batch));
+        assert!(!m.sheds(Priority::Standard));
+        assert!(!m.sheds(Priority::Interactive));
+        m.set_brownout(BROWNOUT_SHED_STANDARD);
+        assert!(m.sheds(Priority::Batch));
+        assert!(m.sheds(Priority::Standard));
+        assert!(!m.sheds(Priority::Interactive), "interactive is never shed");
+        m.set_brownout(BROWNOUT_OFF);
+        assert!(!m.sheds(Priority::Batch));
+        m.set_brownout(200);
+        assert_eq!(m.brownout(), BROWNOUT_SHED_STANDARD, "clamped");
     }
 
     #[test]

@@ -71,6 +71,9 @@ pub struct FabricConfig {
     pub write_drop_prob: f64,
     /// Deterministic seed for the drop process.
     pub seed: u64,
+    /// Fault plane (config `faults` block). `None` = no fault state is
+    /// ever allocated and every verb takes the exact pre-fault path.
+    pub faults: Option<FaultPlan>,
 }
 
 impl Default for FabricConfig {
@@ -80,7 +83,174 @@ impl Default for FabricConfig {
             wait: WaitMode::None,
             write_drop_prob: 0.0,
             seed: 0x0EEB_5EED,
+            faults: None,
         }
+    }
+}
+
+/// Deterministic fabric fault plan (DESIGN.md §7): seeded per-verb loss,
+/// delayed completions, transient `UnknownRegion` flaps, and directed
+/// region partitions with scheduled heal times. Unlike
+/// [`FabricConfig::write_drop_prob`] (silent §9 loss the sender never
+/// observes), these faults are *visible* to the sender — a lost or
+/// partitioned verb returns [`RdmaError::VerbLost`] /
+/// [`RdmaError::Partitioned`] so the retry machinery above can act.
+#[derive(Debug, Clone, Copy)]
+pub struct FaultPlan {
+    /// Probability any verb's completion is lost ([`RdmaError::VerbLost`];
+    /// the op never lands — the sender must retry or strand).
+    pub verb_loss_prob: f64,
+    /// Probability a verb completes late (lands, but is charged
+    /// `delay_ns` extra modelled fabric time).
+    pub delay_prob: f64,
+    /// Extra modelled ns per delayed completion.
+    pub delay_ns: u64,
+    /// Probability a verb observes a transient `UnknownRegion` flap —
+    /// the region looks deregistered for exactly that op.
+    pub flap_prob: f64,
+    /// Scheduled directed partition: after this many fabric ops, verbs
+    /// targeting victim regions fail with `Partitioned`. Only active
+    /// when `partition_ops > 0`.
+    pub partition_after_ops: u64,
+    /// Partition duration in fabric ops; the link heals (deterministic
+    /// heal time) once the op counter passes `after + ops`. 0 = no
+    /// scheduled partition.
+    pub partition_ops: u64,
+    /// Victim selector: regions with `id % partition_group ==
+    /// partition_victim` are unreachable while partitioned (a directed
+    /// node-pair cut: each instance owns one ring region).
+    pub partition_group: u64,
+    /// See `partition_group`.
+    pub partition_victim: u64,
+    /// Deterministic seed for the fault stream (independent of the
+    /// write-drop stream).
+    pub seed: u64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        Self {
+            verb_loss_prob: 0.0,
+            delay_prob: 0.0,
+            delay_ns: 20_000,
+            flap_prob: 0.0,
+            partition_after_ops: 0,
+            partition_ops: 0,
+            partition_group: 4,
+            partition_victim: 1,
+            seed: 0xFA17_5EED,
+        }
+    }
+}
+
+/// Cumulative fault-plane accounting ([`Fabric::fault_stats`]; mirrored
+/// into the set registry by the wset housekeeper when faults are on).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    /// Verbs that returned [`RdmaError::VerbLost`].
+    pub verbs_lost: u64,
+    /// Verbs that completed late (`delay_ns` surcharge).
+    pub verbs_delayed: u64,
+    /// Transient `UnknownRegion` flaps served.
+    pub region_flaps: u64,
+    /// Verbs rejected with [`RdmaError::Partitioned`].
+    pub partitioned_ops: u64,
+    /// Verb-level retries spent by senders ([`Fabric::note_verb_retry`]).
+    pub verb_retries: u64,
+}
+
+/// Runtime fault state: installed once (`OnceLock`) so the no-faults
+/// path never loads any of these atomics.
+struct FaultState {
+    loss_bits: AtomicU64,
+    delay_bits: AtomicU64,
+    delay_ns: AtomicU64,
+    flap_bits: AtomicU64,
+    rng: AtomicU64,
+    /// Scheduled partition window in fabric-op indices; `start ==
+    /// u64::MAX` means no scheduled window.
+    part_start_op: AtomicU64,
+    part_end_op: AtomicU64,
+    part_group: AtomicU64,
+    part_victim: AtomicU64,
+    /// Manual partition switch ([`Fabric::start_partition`] /
+    /// [`Fabric::heal_partition`]) — test/CLI driven cuts.
+    part_manual: std::sync::atomic::AtomicBool,
+    /// Gate invocations, including rejected ops. The scheduled partition
+    /// window is keyed on this (not `ops_total`, which only counts
+    /// *landed* verbs) so a partition that rejects every op still heals.
+    gate_ops: AtomicU64,
+    lost: AtomicU64,
+    delayed: AtomicU64,
+    flaps: AtomicU64,
+    partitioned: AtomicU64,
+    retries: AtomicU64,
+}
+
+impl FaultState {
+    fn new(plan: &FaultPlan) -> Self {
+        let s = Self {
+            loss_bits: AtomicU64::new(0),
+            delay_bits: AtomicU64::new(0),
+            delay_ns: AtomicU64::new(0),
+            flap_bits: AtomicU64::new(0),
+            rng: AtomicU64::new(plan.seed | 1),
+            part_start_op: AtomicU64::new(u64::MAX),
+            part_end_op: AtomicU64::new(u64::MAX),
+            part_group: AtomicU64::new(plan.partition_group.max(1)),
+            part_victim: AtomicU64::new(plan.partition_victim),
+            part_manual: std::sync::atomic::AtomicBool::new(false),
+            gate_ops: AtomicU64::new(0),
+            lost: AtomicU64::new(0),
+            delayed: AtomicU64::new(0),
+            flaps: AtomicU64::new(0),
+            partitioned: AtomicU64::new(0),
+            retries: AtomicU64::new(0),
+        };
+        s.apply(plan);
+        s
+    }
+
+    fn apply(&self, plan: &FaultPlan) {
+        self.loss_bits.store(plan.verb_loss_prob.to_bits(), Ordering::Relaxed);
+        self.delay_bits.store(plan.delay_prob.to_bits(), Ordering::Relaxed);
+        self.delay_ns.store(plan.delay_ns, Ordering::Relaxed);
+        self.flap_bits.store(plan.flap_prob.to_bits(), Ordering::Relaxed);
+        self.part_group.store(plan.partition_group.max(1), Ordering::Relaxed);
+        self.part_victim.store(plan.partition_victim, Ordering::Relaxed);
+        if plan.partition_ops > 0 {
+            self.part_start_op.store(plan.partition_after_ops, Ordering::Relaxed);
+            self.part_end_op.store(
+                plan.partition_after_ops.saturating_add(plan.partition_ops),
+                Ordering::Relaxed,
+            );
+        } else {
+            self.part_start_op.store(u64::MAX, Ordering::Relaxed);
+            self.part_end_op.store(u64::MAX, Ordering::Relaxed);
+        }
+    }
+
+    /// xorshift64* roll against an f64-bits probability (same idiom as
+    /// the write-drop stream, independent state).
+    fn roll(&self, prob_bits: u64) -> bool {
+        let prob = f64::from_bits(prob_bits);
+        if prob <= 0.0 {
+            return false;
+        }
+        let mut x = self.rng.load(Ordering::Relaxed);
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.rng.store(x, Ordering::Relaxed);
+        ((x >> 11) as f64 / (1u64 << 53) as f64) < prob
+    }
+
+    fn partition_active(&self, op_idx: u64) -> bool {
+        if self.part_manual.load(Ordering::Relaxed) {
+            return true;
+        }
+        let start = self.part_start_op.load(Ordering::Relaxed);
+        start != u64::MAX && op_idx >= start && op_idx < self.part_end_op.load(Ordering::Relaxed)
     }
 }
 
@@ -89,6 +259,13 @@ impl Default for FabricConfig {
 pub enum RdmaError {
     UnknownRegion(RegionId),
     OutOfBounds { off: usize, len: usize, region_len: usize },
+    /// Fault injection: the verb's completion was lost — the op did not
+    /// land and the sender must retry (bounded) or strand the work.
+    VerbLost,
+    /// Fault injection: the link to this region is partitioned; retrying
+    /// immediately is pointless — the caller should back off or reroute
+    /// until the scheduled heal.
+    Partitioned(RegionId),
 }
 
 impl std::fmt::Display for RdmaError {
@@ -98,6 +275,8 @@ impl std::fmt::Display for RdmaError {
             RdmaError::OutOfBounds { off, len, region_len } => {
                 write!(f, "rdma op out of bounds: off={off} len={len} region={region_len}")
             }
+            RdmaError::VerbLost => write!(f, "verb completion lost (fault injection)"),
+            RdmaError::Partitioned(id) => write!(f, "link to region {id:?} partitioned"),
         }
     }
 }
@@ -137,6 +316,10 @@ struct FabricInner {
     sim_ns_total: AtomicU64,
     ops_total: AtomicU64,
     bytes_total: AtomicU64,
+    /// Fault plane, installed at most once. Empty (the default) means
+    /// the per-verb gate is a single pointer check and nothing else —
+    /// the no-`faults` data path is byte-identical to pre-fault builds.
+    faults: std::sync::OnceLock<FaultState>,
 }
 
 impl Fabric {
@@ -145,8 +328,29 @@ impl Fabric {
         let f = Self::default();
         f.inner.rng_state.store(config.seed | 1, Ordering::Relaxed);
         f.apply_hot(&config);
+        if let Some(plan) = config.faults {
+            f.install_faults(&plan);
+        }
         *f.inner.config.lock().unwrap() = config;
         f
+    }
+
+    /// Install (or update) the fault plane. Once installed it can be
+    /// re-parameterised but never removed — `faults: None` at build time
+    /// is the only way to get the zero-overhead path.
+    fn install_faults(&self, plan: &FaultPlan) {
+        match self.inner.faults.get() {
+            Some(state) => state.apply(plan),
+            None => {
+                // Lost set() race means another thread installed it;
+                // re-apply our plan over the winner's state.
+                if self.inner.faults.set(FaultState::new(plan)).is_err() {
+                    if let Some(state) = self.inner.faults.get() {
+                        state.apply(plan);
+                    }
+                }
+            }
+        }
     }
 
     /// Mirror config fields into the lock-free hot path.
@@ -237,7 +441,88 @@ impl Fabric {
     /// Update the fault/latency config at runtime (tests).
     pub fn set_config(&self, config: FabricConfig) {
         self.apply_hot(&config);
+        if let Some(plan) = config.faults {
+            self.install_faults(&plan);
+        }
         *self.inner.config.lock().unwrap() = config;
+    }
+
+    /// Cumulative fault-plane counters; `None` when no fault plan was
+    /// ever installed (the off-by-default path registers nothing).
+    pub fn fault_stats(&self) -> Option<FaultStats> {
+        let s = self.inner.faults.get()?;
+        Some(FaultStats {
+            verbs_lost: s.lost.load(Ordering::Relaxed),
+            verbs_delayed: s.delayed.load(Ordering::Relaxed),
+            region_flaps: s.flaps.load(Ordering::Relaxed),
+            partitioned_ops: s.partitioned.load(Ordering::Relaxed),
+            verb_retries: s.retries.load(Ordering::Relaxed),
+        })
+    }
+
+    /// Record one sender-side verb retry (the bounded retry loops in the
+    /// ring producer / endpoint call this on every re-post after a
+    /// [`RdmaError::VerbLost`]). No-op when faults are off, so callers
+    /// don't need to gate.
+    pub fn note_verb_retry(&self) {
+        if let Some(s) = self.inner.faults.get() {
+            s.retries.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Manually cut the links to regions with `id % group == victim`
+    /// (directed node-pair partition; the chaos tests and `federate
+    /// --partition` drive this). Installs a zero-probability fault plan
+    /// if none exists so a partition can be driven on an otherwise
+    /// fault-free fabric.
+    pub fn start_partition(&self, group: u64, victim: u64) {
+        if self.inner.faults.get().is_none() {
+            self.install_faults(&FaultPlan::default());
+        }
+        if let Some(s) = self.inner.faults.get() {
+            s.part_group.store(group.max(1), Ordering::Relaxed);
+            s.part_victim.store(victim, Ordering::Relaxed);
+            s.part_manual.store(true, Ordering::Relaxed);
+        }
+    }
+
+    /// Heal a manual partition (scheduled windows heal on their own).
+    pub fn heal_partition(&self) {
+        if let Some(s) = self.inner.faults.get() {
+            s.part_manual.store(false, Ordering::Relaxed);
+        }
+    }
+
+    /// Per-verb fault gate. Returns the extra modelled delay in ns (0
+    /// almost always), or the injected error. One `OnceLock::get` when
+    /// faults are off — nothing else runs.
+    fn fault_gate(&self, region_id: RegionId) -> Result<u64, RdmaError> {
+        let Some(s) = self.inner.faults.get() else {
+            return Ok(0);
+        };
+        let op_idx = s.gate_ops.fetch_add(1, Ordering::Relaxed);
+        if s.partition_active(op_idx) {
+            let group = s.part_group.load(Ordering::Relaxed).max(1);
+            if region_id.0 % group == s.part_victim.load(Ordering::Relaxed) {
+                s.partitioned.fetch_add(1, Ordering::Relaxed);
+                return Err(RdmaError::Partitioned(region_id));
+            }
+        }
+        if s.roll(s.flap_bits.load(Ordering::Relaxed)) {
+            s.flaps.fetch_add(1, Ordering::Relaxed);
+            return Err(RdmaError::UnknownRegion(region_id));
+        }
+        if s.roll(s.loss_bits.load(Ordering::Relaxed)) {
+            s.lost.fetch_add(1, Ordering::Relaxed);
+            return Err(RdmaError::VerbLost);
+        }
+        if s.roll(s.delay_bits.load(Ordering::Relaxed)) {
+            s.delayed.fetch_add(1, Ordering::Relaxed);
+            let extra = s.delay_ns.load(Ordering::Relaxed);
+            self.inner.sim_ns_total.fetch_add(extra, Ordering::Relaxed);
+            return Ok(extra);
+        }
+        Ok(0)
     }
 
     fn account(&self, bytes: usize) -> u64 {
@@ -290,6 +575,12 @@ impl QueuePair {
         self.region_id
     }
 
+    /// The fabric this QP is attached to (retry loops use it to account
+    /// verb retries via [`Fabric::note_verb_retry`]).
+    pub fn fabric(&self) -> &Fabric {
+        &self.fabric
+    }
+
     fn check(&self, off: usize, len: usize) -> Result<(), RdmaError> {
         if off + len > self.region.len() {
             return Err(RdmaError::OutOfBounds {
@@ -304,7 +595,8 @@ impl QueuePair {
     /// One-sided RDMA WRITE of `data` at remote byte offset `off`.
     pub fn post_write(&self, off: usize, data: &[u8]) -> Result<OpOutcome, RdmaError> {
         self.check(off, data.len())?;
-        let simulated_ns = self.fabric.account(data.len());
+        let extra = self.fabric.fault_gate(self.region_id)?;
+        let simulated_ns = extra + self.fabric.account(data.len());
         if self.fabric.roll_drop() {
             return Ok(OpOutcome { simulated_ns, delivered: false });
         }
@@ -315,7 +607,8 @@ impl QueuePair {
     /// One-sided RDMA READ of `out.len()` bytes from remote offset `off`.
     pub fn post_read(&self, off: usize, out: &mut [u8]) -> Result<OpOutcome, RdmaError> {
         self.check(off, out.len())?;
-        let simulated_ns = self.fabric.account(out.len());
+        let extra = self.fabric.fault_gate(self.region_id)?;
+        let simulated_ns = extra + self.fabric.account(out.len());
         self.region.read_bytes(off, out);
         Ok(OpOutcome { simulated_ns, delivered: true })
     }
@@ -323,14 +616,16 @@ impl QueuePair {
     /// Remote atomic 64-bit read.
     pub fn post_read_u64(&self, off: usize) -> Result<(u64, OpOutcome), RdmaError> {
         self.check(off, 8)?;
-        let simulated_ns = self.fabric.account(8);
+        let extra = self.fabric.fault_gate(self.region_id)?;
+        let simulated_ns = extra + self.fabric.account(8);
         Ok((self.region.load_u64(off), OpOutcome { simulated_ns, delivered: true }))
     }
 
     /// Remote atomic 64-bit write.
     pub fn post_write_u64(&self, off: usize, v: u64) -> Result<OpOutcome, RdmaError> {
         self.check(off, 8)?;
-        let simulated_ns = self.fabric.account(8);
+        let extra = self.fabric.fault_gate(self.region_id)?;
+        let simulated_ns = extra + self.fabric.account(8);
         self.region.store_u64(off, v);
         Ok(OpOutcome { simulated_ns, delivered: true })
     }
@@ -344,7 +639,8 @@ impl QueuePair {
         new: u64,
     ) -> Result<(Result<u64, u64>, OpOutcome), RdmaError> {
         self.check(off, 8)?;
-        let simulated_ns = self.fabric.account(8);
+        let extra = self.fabric.fault_gate(self.region_id)?;
+        let simulated_ns = extra + self.fabric.account(8);
         Ok((
             self.region.cas_u64(off, expected, new),
             OpOutcome { simulated_ns, delivered: true },
@@ -354,7 +650,8 @@ impl QueuePair {
     /// RDMA Fetch-and-Add verb.
     pub fn post_fetch_add(&self, off: usize, v: u64) -> Result<(u64, OpOutcome), RdmaError> {
         self.check(off, 8)?;
-        let simulated_ns = self.fabric.account(8);
+        let extra = self.fabric.fault_gate(self.region_id)?;
+        let simulated_ns = extra + self.fabric.account(8);
         Ok((
             self.region.fetch_add_u64(off, v),
             OpOutcome { simulated_ns, delivered: true },
@@ -370,7 +667,8 @@ impl QueuePair {
     /// of n separate verbs.
     pub fn post_read_words(&self, off: usize, out: &mut [u64]) -> Result<OpOutcome, RdmaError> {
         self.check(off, out.len() * 8)?;
-        let simulated_ns = self.fabric.account(out.len() * 8);
+        let extra = self.fabric.fault_gate(self.region_id)?;
+        let simulated_ns = extra + self.fabric.account(out.len() * 8);
         for (i, w) in out.iter_mut().enumerate() {
             *w = self.region.load_u64(off + i * 8);
         }
@@ -383,7 +681,8 @@ impl QueuePair {
     /// injection — it completes or the QP breaks.
     pub fn post_write_words(&self, off: usize, vals: &[u64]) -> Result<OpOutcome, RdmaError> {
         self.check(off, vals.len() * 8)?;
-        let simulated_ns = self.fabric.account(vals.len() * 8);
+        let extra = self.fabric.fault_gate(self.region_id)?;
+        let simulated_ns = extra + self.fabric.account(vals.len() * 8);
         for (i, v) in vals.iter().enumerate() {
             self.region.store_u64(off + i * 8, *v);
         }
@@ -408,10 +707,58 @@ impl QueuePair {
     ) -> Result<((Result<u64, u64>, Result<u64, u64>), OpOutcome), RdmaError> {
         self.check(off1, 8)?;
         self.check(off2, 8)?;
-        let simulated_ns = self.fabric.account(16);
+        let extra = self.fabric.fault_gate(self.region_id)?;
+        let simulated_ns = extra + self.fabric.account(16);
         let r1 = self.region.cas_u64(off1, expected1, new1);
         let r2 = self.region.cas_u64(off2, expected2, new2);
         Ok(((r1, r2), OpOutcome { simulated_ns, delivered: true }))
+    }
+}
+
+/// Max re-posts of one verb after [`RdmaError::VerbLost`].
+pub const VERB_RETRY_ATTEMPTS: u32 = 4;
+/// Wall-clock budget for one verb including its retries.
+pub const VERB_RETRY_DEADLINE: std::time::Duration = std::time::Duration::from_millis(5);
+const VERB_RETRY_BASE_NS: u64 = 20_000; // first retry waits ~10–20 µs
+const VERB_RETRY_CAP_NS: u64 = 320_000;
+
+/// Bounded verb-level retry: runs `op`, re-posting only on
+/// [`RdmaError::VerbLost`] — up to [`VERB_RETRY_ATTEMPTS`] attempts
+/// within [`VERB_RETRY_DEADLINE`], sleeping a seeded-jitter exponential
+/// backoff ([`crate::util::backoff_ns`]) between posts so concurrent
+/// senders hit by the same loss burst don't re-post in lockstep.
+///
+/// Re-posting is safe for **every** verb here, CAS included: the fault
+/// gate rejects an op *before* it touches region memory, so a lost verb
+/// observably never landed (no at-most-once hazard). `Partitioned`,
+/// `UnknownRegion` (flap or real), and bounds errors surface
+/// immediately — retrying a cut link burns the deadline for nothing;
+/// the caller's strand/recovery machinery owns those. Exhaustion
+/// surfaces the final `VerbLost`, which the ring/endpoint callers fold
+/// into their existing drop/strand/Case-7 paths.
+pub fn retry_verb<T>(
+    qp: &QueuePair,
+    seed: u64,
+    mut op: impl FnMut(&QueuePair) -> Result<T, RdmaError>,
+) -> Result<T, RdmaError> {
+    let mut attempt = 0u32;
+    let start = std::time::Instant::now();
+    loop {
+        match op(qp) {
+            Err(RdmaError::VerbLost)
+                if attempt + 1 < VERB_RETRY_ATTEMPTS && start.elapsed() < VERB_RETRY_DEADLINE =>
+            {
+                qp.fabric().note_verb_retry();
+                std::thread::sleep(std::time::Duration::from_nanos(crate::util::backoff_ns(
+                    seed,
+                    attempt,
+                    VERB_RETRY_BASE_NS,
+                    VERB_RETRY_CAP_NS,
+                )));
+                attempt += 1;
+            }
+            r => return r,
+        }
     }
 }
 
@@ -552,6 +899,207 @@ mod tests {
         assert_eq!(r2, Err(5));
         let (ops, _) = fabric.traffic();
         assert_eq!(ops, 1, "a doorbell-batched CAS pair is one verb");
+    }
+
+    #[test]
+    fn no_fault_plan_means_no_fault_state() {
+        let fabric = Fabric::ideal();
+        assert!(fabric.fault_stats().is_none());
+        let (id, _) = fabric.register(64);
+        let qp = fabric.connect(id).unwrap();
+        for _ in 0..100 {
+            qp.post_write_u64(0, 7).unwrap();
+        }
+        // note_verb_retry is a no-op without a plan — still no state.
+        fabric.note_verb_retry();
+        assert!(fabric.fault_stats().is_none());
+    }
+
+    #[test]
+    fn verb_loss_injection_is_visible_and_counted() {
+        let fabric = Fabric::new(FabricConfig {
+            latency: None,
+            faults: Some(FaultPlan {
+                verb_loss_prob: 1.0,
+                ..Default::default()
+            }),
+            ..Default::default()
+        });
+        let (id, local) = fabric.register(64);
+        let qp = fabric.connect(id).unwrap();
+        assert!(matches!(qp.post_write_u64(0, 9), Err(RdmaError::VerbLost)));
+        assert!(matches!(qp.post_cas(0, 0, 1), Err(RdmaError::VerbLost)));
+        assert_eq!(local.load_u64(0), 0, "lost verbs must not land");
+        let stats = fabric.fault_stats().unwrap();
+        assert_eq!(stats.verbs_lost, 2);
+        let (ops, _) = fabric.traffic();
+        assert_eq!(ops, 0, "lost verbs are not accounted as landed ops");
+        fabric.note_verb_retry();
+        assert_eq!(fabric.fault_stats().unwrap().verb_retries, 1);
+    }
+
+    #[test]
+    fn partial_verb_loss_is_deterministic_for_a_seed() {
+        let run = |seed: u64| {
+            let fabric = Fabric::new(FabricConfig {
+                latency: None,
+                faults: Some(FaultPlan {
+                    verb_loss_prob: 0.3,
+                    seed,
+                    ..Default::default()
+                }),
+                ..Default::default()
+            });
+            let (id, _) = fabric.register(64);
+            let qp = fabric.connect(id).unwrap();
+            (0..256)
+                .map(|_| qp.post_write_u64(0, 1).is_ok())
+                .collect::<Vec<_>>()
+        };
+        let a = run(1234);
+        assert_eq!(a, run(1234), "same seed, same loss pattern");
+        assert!(a.iter().any(|ok| *ok) && a.iter().any(|ok| !*ok));
+    }
+
+    #[test]
+    fn delayed_completion_lands_with_surcharge() {
+        let fabric = Fabric::new(FabricConfig {
+            latency: None,
+            faults: Some(FaultPlan {
+                delay_prob: 1.0,
+                delay_ns: 50_000,
+                ..Default::default()
+            }),
+            ..Default::default()
+        });
+        let (id, local) = fabric.register(64);
+        let qp = fabric.connect(id).unwrap();
+        let out = qp.post_write_u64(0, 42).unwrap();
+        assert_eq!(out.simulated_ns, 50_000, "ideal latency + delay surcharge");
+        assert_eq!(local.load_u64(0), 42, "delayed verbs still land");
+        assert_eq!(fabric.fault_stats().unwrap().verbs_delayed, 1);
+    }
+
+    #[test]
+    fn region_flap_is_transient_unknown_region() {
+        let fabric = Fabric::new(FabricConfig {
+            latency: None,
+            faults: Some(FaultPlan {
+                flap_prob: 1.0,
+                ..Default::default()
+            }),
+            ..Default::default()
+        });
+        let (id, _) = fabric.register(64);
+        let qp = fabric.connect(id).unwrap();
+        assert!(matches!(qp.post_read_u64(0), Err(RdmaError::UnknownRegion(_))));
+        assert!(fabric.fault_stats().unwrap().region_flaps >= 1);
+        // The region is still registered — the flap is the link lying,
+        // not a deregistration.
+        assert!(fabric.connect(id).is_ok());
+    }
+
+    #[test]
+    fn scheduled_partition_cuts_victims_then_heals() {
+        let fabric = Fabric::new(FabricConfig {
+            latency: None,
+            faults: Some(FaultPlan {
+                partition_after_ops: 2,
+                partition_ops: 3,
+                partition_group: 1, // every region is a victim
+                partition_victim: 0,
+                ..Default::default()
+            }),
+            ..Default::default()
+        });
+        let (id, _) = fabric.register(64);
+        let qp = fabric.connect(id).unwrap();
+        let mut results = Vec::new();
+        for _ in 0..8 {
+            results.push(qp.post_write_u64(0, 1).is_ok());
+        }
+        // Ops 0,1 land; 2,3,4 partitioned; 5+ healed (deterministic).
+        assert_eq!(results, [true, true, false, false, false, true, true, true]);
+        assert_eq!(fabric.fault_stats().unwrap().partitioned_ops, 3);
+    }
+
+    #[test]
+    fn manual_partition_targets_victim_group_and_heals() {
+        let fabric = Fabric::ideal();
+        let (id0, _) = fabric.register(64); // RegionId(0)
+        let (id1, _) = fabric.register(64); // RegionId(1)
+        let qp0 = fabric.connect(id0).unwrap();
+        let qp1 = fabric.connect(id1).unwrap();
+        // Cut only odd regions.
+        fabric.start_partition(2, 1);
+        assert!(qp0.post_write_u64(0, 1).is_ok(), "non-victim unaffected");
+        assert!(matches!(
+            qp1.post_write_u64(0, 1),
+            Err(RdmaError::Partitioned(r)) if r == id1
+        ));
+        fabric.heal_partition();
+        assert!(qp1.post_write_u64(0, 1).is_ok(), "healed link carries verbs");
+        let stats = fabric.fault_stats().unwrap();
+        assert_eq!(stats.partitioned_ops, 1);
+        assert_eq!(stats.verbs_lost, 0, "manual partition injects no loss");
+    }
+
+    #[test]
+    fn retry_verb_resolves_partial_loss_and_bounds_total_loss() {
+        let fabric = Fabric::new(FabricConfig {
+            latency: None,
+            faults: Some(FaultPlan {
+                verb_loss_prob: 0.5,
+                seed: 99,
+                ..Default::default()
+            }),
+            ..Default::default()
+        });
+        let (id, local) = fabric.register(64);
+        let qp = fabric.connect(id).unwrap();
+        // With 4 attempts per op at 50% loss, 64 writes virtually all
+        // land; each landed write is observable.
+        let mut landed = 0u64;
+        for i in 0..64u64 {
+            if retry_verb(&qp, i, |qp| qp.post_write_u64(0, i + 1)).is_ok() {
+                landed += 1;
+                assert_eq!(local.load_u64(0), i + 1);
+            }
+        }
+        assert!(landed >= 60, "landed={landed}");
+        let stats = fabric.fault_stats().unwrap();
+        assert!(stats.verb_retries > 0, "retries must be accounted");
+
+        // Total loss: the budget exhausts, the final VerbLost surfaces,
+        // and exactly ATTEMPTS-1 retries were spent.
+        let before = fabric.fault_stats().unwrap().verb_retries;
+        fabric.set_config(FabricConfig {
+            latency: None,
+            faults: Some(FaultPlan { verb_loss_prob: 1.0, ..Default::default() }),
+            ..Default::default()
+        });
+        let r = retry_verb(&qp, 7, |qp| qp.post_write_u64(0, 1));
+        assert!(matches!(r, Err(RdmaError::VerbLost)));
+        assert_eq!(
+            fabric.fault_stats().unwrap().verb_retries - before,
+            (VERB_RETRY_ATTEMPTS - 1) as u64
+        );
+    }
+
+    #[test]
+    fn retry_verb_does_not_retry_partitions() {
+        let fabric = Fabric::ideal();
+        let (id, _) = fabric.register(64);
+        let qp = fabric.connect(id).unwrap();
+        fabric.start_partition(1, 0); // cut everything
+        let r = retry_verb(&qp, 1, |qp| qp.post_write_u64(0, 1));
+        assert!(matches!(r, Err(RdmaError::Partitioned(_))));
+        assert_eq!(
+            fabric.fault_stats().unwrap().verb_retries,
+            0,
+            "a cut link fails fast, no retry budget burned"
+        );
+        fabric.heal_partition();
     }
 
     #[test]

@@ -26,7 +26,10 @@
 mod fabric;
 mod region;
 
-pub use fabric::{Fabric, FabricConfig, LatencyModel, OpOutcome, QueuePair, RdmaError, WaitMode};
+pub use fabric::{
+    retry_verb, Fabric, FabricConfig, FaultPlan, FaultStats, LatencyModel, OpOutcome, QueuePair,
+    RdmaError, WaitMode, VERB_RETRY_ATTEMPTS, VERB_RETRY_DEADLINE,
+};
 pub use region::{
     MemoryRegion, PayloadDescriptor, PayloadStager, RegionId, PAYLOAD_DESC_BYTES,
     PAYLOAD_GEN_OFF, PAYLOAD_HDR_BYTES, PAYLOAD_RELEASE_OFF,

@@ -55,7 +55,7 @@
 //! fault injection ([`DieAt`]).
 
 use super::{layout, FrameKind, RingConfig};
-use crate::rdma::{QueuePair, RdmaError};
+use crate::rdma::{retry_verb, QueuePair, RdmaError};
 use crate::util::{frame_checksum, Clock};
 use std::cell::{Cell, RefCell};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -408,7 +408,12 @@ impl RingProducer {
         let mut stole = false;
         for _ in 0..self.config.max_lock_spins {
             let word = lock_word(self.clock.now_ns());
-            let (res, out) = self.qp.post_cas(layout::LOCK, 0, word)?;
+            // Every protocol verb runs under the bounded VerbLost retry
+            // (fault plane); a lost verb observably never landed, so
+            // re-posting the CAS is safe.
+            let (res, out) = retry_verb(&self.qp, self.id, |qp| {
+                qp.post_cas(layout::LOCK, 0, word)
+            })?;
             sim_ns += out.simulated_ns;
             verbs += 1;
             match res {
@@ -427,7 +432,9 @@ impl RingProducer {
                     let elapsed = now.wrapping_sub(ts) & LOCK_TS_MASK;
                     if elapsed > self.config.lock_timeout_ns {
                         let word = lock_word(now);
-                        let (res, out) = self.qp.post_cas(layout::LOCK, prev, word)?;
+                        let (res, out) = retry_verb(&self.qp, self.id, |qp| {
+                            qp.post_cas(layout::LOCK, prev, word)
+                        })?;
                         sim_ns += out.simulated_ns;
                         verbs += 1;
                         if res.is_ok() {
@@ -527,6 +534,17 @@ impl<'a> ProducerSession<'a> {
         &self.prod.qp
     }
 
+    /// Run one protocol verb under the bounded VerbLost retry (seeded by
+    /// the producer id so concurrent producers' backoffs desynchronize).
+    /// Exhaustion surfaces as `PushError::Fabric` via `?` at the call
+    /// sites, which the senders above fold into drop/strand/recovery.
+    fn rv<T>(
+        &self,
+        op: impl FnMut(&QueuePair) -> Result<T, RdmaError>,
+    ) -> Result<T, RdmaError> {
+        retry_verb(&self.prod.qp, self.prod.id, op)
+    }
+
     fn cfg(&self) -> &RingConfig {
         &self.prod.config
     }
@@ -558,7 +576,7 @@ impl<'a> ProducerSession<'a> {
     /// the header on its behalf.
     pub fn gh(&mut self) -> Result<(), PushError> {
         let mut hdr = [0u64; 4];
-        let out = self.qp().post_read_words(layout::VTAIL_OFF, &mut hdr)?;
+        let out = self.rv(|qp| qp.post_read_words(layout::VTAIL_OFF, &mut hdr))?;
         self.sim_ns += out.simulated_ns;
         self.verbs += 1;
         self.vtail_off = hdr[0];
@@ -593,8 +611,7 @@ impl<'a> ProducerSession<'a> {
             self.vtail_slot = self.vhead_slot;
             self.vtail_off = self.vhead_off;
             let out = self
-                .qp()
-                .post_write_words(layout::VTAIL_OFF, &[self.vtail_off, self.vtail_slot])?;
+                .rv(|qp| qp.post_write_words(layout::VTAIL_OFF, &[self.vtail_off, self.vtail_slot]))?;
             self.sim_ns += out.simulated_ns;
             self.verbs += 1;
         }
@@ -614,7 +631,7 @@ impl<'a> ProducerSession<'a> {
                 break;
             }
             let slot_off = self.cfg().slot_off(self.vtail_slot);
-            let (word, out) = self.qp().post_read_u64(slot_off)?;
+            let (word, out) = self.rv(|qp| qp.post_read_u64(slot_off))?;
             self.sim_ns += out.simulated_ns;
             self.verbs += 1;
             if word & layout::BUSY == 0 {
@@ -624,8 +641,7 @@ impl<'a> ProducerSession<'a> {
             let flen = (word & layout::LEN_MASK) as usize;
             let (_, next) = self.cfg().wrap(self.vtail_off, flen);
             let out = self
-                .qp()
-                .post_write_words(layout::VTAIL_OFF, &[next, self.vtail_slot + 1])?;
+                .rv(|qp| qp.post_write_words(layout::VTAIL_OFF, &[next, self.vtail_slot + 1]))?;
             self.sim_ns += out.simulated_ns;
             self.verbs += 1;
             self.vtail_off = next;
@@ -713,7 +729,7 @@ impl<'a> ProducerSession<'a> {
         frame.clear();
         Self::build_frame(&mut frame, payload, self.frame_len);
         let off = self.cfg().phys(self.start_v);
-        let out = self.qp().post_write(off, &frame)?;
+        let out = self.rv(|qp| qp.post_write(off, &frame))?;
         self.sim_ns += out.simulated_ns;
         self.verbs += 1;
         Ok(())
@@ -737,7 +753,7 @@ impl<'a> ProducerSession<'a> {
             let phys = self.cfg().phys(start_v);
             if !frame.is_empty() && phys != run_phys + frame.len() {
                 // Wrap boundary: flush the finished run.
-                let out = self.qp().post_write(run_phys, &frame)?;
+                let out = self.rv(|qp| qp.post_write(run_phys, &frame))?;
                 self.sim_ns += out.simulated_ns;
                 self.verbs += 1;
                 frame.clear();
@@ -748,7 +764,7 @@ impl<'a> ProducerSession<'a> {
             Self::build_frame(&mut frame, payloads[i], frame_len);
         }
         if !frame.is_empty() {
-            let out = self.qp().post_write(run_phys, &frame)?;
+            let out = self.rv(|qp| qp.post_write(run_phys, &frame))?;
             self.sim_ns += out.simulated_ns;
             self.verbs += 1;
         }
@@ -761,9 +777,8 @@ impl<'a> ProducerSession<'a> {
         assert!(self.done_reserve, "wl before reserve");
         let slot_off = self.cfg().slot_off(self.vtail_slot);
         let new_word = layout::BUSY | self.kind_bit | self.frame_len as u64;
-        let (res, out) = self
-            .qp()
-            .post_cas(slot_off, self.observed_size_word, new_word)?;
+        let (res, out) =
+            self.rv(|qp| qp.post_cas(slot_off, self.observed_size_word, new_word))?;
         self.sim_ns += out.simulated_ns;
         self.verbs += 1;
         if res.is_err() {
@@ -786,7 +801,7 @@ impl<'a> ProducerSession<'a> {
         let expected = if i == 0 { self.observed_size_word } else { 0 };
         let kind_bit = self.batch_kind_bits.get(i).copied().unwrap_or(0);
         let new_word = layout::BUSY | kind_bit | frame_len as u64;
-        let (res, out) = self.qp().post_cas(slot_off, expected, new_word)?;
+        let (res, out) = self.rv(|qp| qp.post_cas(slot_off, expected, new_word))?;
         self.sim_ns += out.simulated_ns;
         self.verbs += 1;
         if res.is_err() {
@@ -820,14 +835,16 @@ impl<'a> ProducerSession<'a> {
     /// producer (racing on a stolen lock) already advanced identically —
     /// benign (Cases 4/8).
     pub fn uh(&mut self) -> Result<(), PushError> {
-        let ((r1, r2), out) = self.qp().post_cas_pair(
-            layout::VTAIL_OFF,
-            self.vtail_off,
-            self.next_v,
-            layout::VTAIL_SLOT,
-            self.vtail_slot,
-            self.vtail_slot + 1,
-        )?;
+        let ((r1, r2), out) = self.rv(|qp| {
+            qp.post_cas_pair(
+                layout::VTAIL_OFF,
+                self.vtail_off,
+                self.next_v,
+                layout::VTAIL_SLOT,
+                self.vtail_slot,
+                self.vtail_slot + 1,
+            )
+        })?;
         self.sim_ns += out.simulated_ns;
         self.verbs += 1;
         self.uh_ok = r1.is_ok() && r2.is_ok();
@@ -836,14 +853,16 @@ impl<'a> ProducerSession<'a> {
 
     /// UH for the accepted batch prefix (one verb).
     pub fn uh_many(&mut self) -> Result<(), PushError> {
-        let ((r1, r2), out) = self.qp().post_cas_pair(
-            layout::VTAIL_OFF,
-            self.vtail_off,
-            self.batch_end_v,
-            layout::VTAIL_SLOT,
-            self.vtail_slot,
-            self.vtail_slot + self.batch.len() as u64,
-        )?;
+        let ((r1, r2), out) = self.rv(|qp| {
+            qp.post_cas_pair(
+                layout::VTAIL_OFF,
+                self.vtail_off,
+                self.batch_end_v,
+                layout::VTAIL_SLOT,
+                self.vtail_slot,
+                self.vtail_slot + self.batch.len() as u64,
+            )
+        })?;
         self.sim_ns += out.simulated_ns;
         self.verbs += 1;
         self.uh_ok = r1.is_ok() && r2.is_ok();
@@ -852,14 +871,14 @@ impl<'a> ProducerSession<'a> {
 
     /// Release the lock if we still own it (a stealer may hold it now).
     pub fn unlock(&mut self) -> Result<(), PushError> {
-        let (_, out) = self.qp().post_cas(layout::LOCK, self.lock_word, 0)?;
+        let (_, out) = self.rv(|qp| qp.post_cas(layout::LOCK, self.lock_word, 0))?;
         self.sim_ns += out.simulated_ns;
         self.verbs += 1;
         Ok(())
     }
 
     fn abort_unlock(&mut self) {
-        let _ = self.qp().post_cas(layout::LOCK, self.lock_word, 0);
+        let _ = self.rv(|qp| qp.post_cas(layout::LOCK, self.lock_word, 0));
     }
 
     /// Where this session's frame was (or would be) placed.

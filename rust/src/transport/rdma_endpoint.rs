@@ -9,7 +9,8 @@
 
 use crate::metrics::{Counter, Gauge, Histogram, Registry};
 use crate::rdma::{
-    Fabric, PayloadDescriptor, PayloadStager, RdmaError, RegionId, PAYLOAD_RELEASE_OFF,
+    retry_verb, Fabric, PayloadDescriptor, PayloadStager, RdmaError, RegionId,
+    PAYLOAD_RELEASE_OFF,
 };
 use crate::ringbuf::{
     create_ring, Frame, FrameKind, PopError, PushError, RingConfig, RingConsumer, RingProducer,
@@ -112,6 +113,9 @@ pub struct RdmaSender {
     rendezvous_threshold: usize,
     /// Lazily created slab pool for the rendezvous path.
     stager: Option<PayloadStager>,
+    /// Seed for the jittered retry backoff (the producer id — distinct
+    /// per sender so contending senders don't back off in lockstep).
+    backoff_seed: u64,
 }
 
 static NEXT_PRODUCER_ID: AtomicU64 = AtomicU64::new(1);
@@ -167,6 +171,7 @@ impl RdmaEndpoint {
             dropped: 0,
             rendezvous_threshold: 0,
             stager: None,
+            backoff_seed: id,
         })
     }
 
@@ -190,6 +195,7 @@ impl RdmaEndpoint {
             dropped: 0,
             rendezvous_threshold: 0,
             stager: None,
+            backoff_seed: id,
         })
     }
 
@@ -261,7 +267,10 @@ impl RdmaEndpoint {
     /// validation against torn reads racing slab reuse, then one
     /// Fetch&Add on the release counter so the producer can reclaim.
     /// The READ lands at the destination without a host copy; only
-    /// validated payloads are released and counted.
+    /// validated payloads are released and counted. Under fault
+    /// injection, a lost READ/F&A completion is retried a bounded
+    /// number of times ([`retry_verb`]) before the descriptor strands —
+    /// transient verb loss must not masquerade as a dead producer.
     fn pull_payload(&mut self, desc_bytes: &[u8]) -> Option<Vec<u8>> {
         let desc = PayloadDescriptor::decode(desc_bytes)?;
         let off = desc.offset as usize;
@@ -275,7 +284,7 @@ impl RdmaEndpoint {
         let qp = self.fabric.connect(desc.region).ok()?;
         let hdr_words = off / 8;
         let mut words = vec![0u64; hdr_words + (len + 7) / 8];
-        qp.post_read_words(0, &mut words).ok()?;
+        retry_verb(&qp, desc.generation, |qp| qp.post_read_words(0, &mut words)).ok()?;
         if words[0] != desc.generation {
             return None; // slab was re-staged: descriptor is stale
         }
@@ -287,7 +296,9 @@ impl RdmaEndpoint {
         if frame_checksum(&payload) as u64 != desc.checksum {
             return None; // torn read: generation moved mid-pull
         }
-        let _ = qp.post_fetch_add(PAYLOAD_RELEASE_OFF, 1);
+        let _ = retry_verb(&qp, desc.generation ^ 1, |qp| {
+            qp.post_fetch_add(PAYLOAD_RELEASE_OFF, 1)
+        });
         if let Some(m) = &self.metrics {
             m.rendezvous_reads.inc();
         }
@@ -396,18 +407,21 @@ impl RdmaSender {
 
     /// Bounded exponential backoff between push retries: the first few
     /// retries only yield (transient lock contention clears in that
-    /// window), later ones sleep 1 µs, 2 µs, … capped at **64 µs** — a
-    /// persistently full ring must not busy-spin a worker core while
-    /// the consumer needs that core to drain it. The cap is kept small
-    /// because workers retry while holding the instance's shared
-    /// delivery lock: a long sleep here would head-of-line block the
-    /// sibling workers' (and the Interactive fast lane's) deliveries.
-    fn backoff(attempt: usize) {
+    /// window), later ones sleep a seeded-jitter exponential — nominally
+    /// 1 µs, 2 µs, … capped at **64 µs** with equal jitter
+    /// ([`crate::util::backoff_ns`], shared with `client::retry_rounds`
+    /// and the verb-retry plane) so contending senders desynchronise
+    /// instead of re-colliding on the ring lock in lockstep. The cap is
+    /// kept small because workers retry while holding the instance's
+    /// shared delivery lock: a long sleep here would head-of-line block
+    /// the sibling workers' (and the Interactive fast lane's)
+    /// deliveries.
+    fn backoff(seed: u64, attempt: usize) {
         if attempt < 8 {
             std::thread::yield_now();
         } else {
-            let us = (1u64 << (attempt - 8).min(6)).min(64);
-            std::thread::sleep(std::time::Duration::from_micros(us));
+            let ns = crate::util::backoff_ns(seed, (attempt - 8).min(6) as u32, 1_000, 64_000);
+            std::thread::sleep(std::time::Duration::from_nanos(ns));
         }
     }
 
@@ -458,7 +472,9 @@ impl RdmaSender {
                     }
                     return true;
                 }
-                Err(PushError::Full) | Err(PushError::LostRace) => Self::backoff(attempt),
+                Err(PushError::Full) | Err(PushError::LostRace) => {
+                    Self::backoff(self.backoff_seed, attempt)
+                }
                 Err(_) => break,
             }
         }
@@ -482,7 +498,9 @@ impl RdmaSender {
                     }
                     return true;
                 }
-                Err(PushError::Full) | Err(PushError::LostRace) => Self::backoff(attempt),
+                Err(PushError::Full) | Err(PushError::LostRace) => {
+                    Self::backoff(self.backoff_seed, attempt)
+                }
                 Err(_) => break,
             }
         }
@@ -572,11 +590,11 @@ impl RdmaSender {
                         // ring would drop its tail while the consumer
                         // is draining normally.
                         attempt = 0;
-                        Self::backoff(attempt);
+                        Self::backoff(self.backoff_seed, attempt);
                     }
                 }
                 Err(PushError::Full) | Err(PushError::LostRace) => {
-                    Self::backoff(attempt);
+                    Self::backoff(self.backoff_seed, attempt);
                     attempt += 1;
                 }
                 Err(_) => break,

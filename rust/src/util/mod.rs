@@ -12,5 +12,5 @@ pub use checksum::{crc32, frame_checksum};
 pub use codec::{BufReader, BufWriter, CodecError};
 pub use id::{NodeId, Uid};
 pub use json::{Json, JsonError};
-pub use rng::Rng;
+pub use rng::{backoff_ns, Rng};
 pub use time::{now_ns, Clock, ManualClock, SystemClock};

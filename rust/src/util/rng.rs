@@ -113,6 +113,31 @@ impl Rng {
     }
 }
 
+/// Seeded-jitter exponential backoff: attempt `attempt`'s wait in
+/// nanoseconds, uniformly jittered over `[exp/2, exp)` where
+/// `exp = min(cap_ns, base_ns << attempt)` ("equal jitter").
+///
+/// The jitter is a pure function of `(seed, attempt)` (one SplitMix64
+/// step), so every retry loop in the crate — `client::retry_rounds`,
+/// the `RdmaSender` ring-full loop, the producer verb-retry loop —
+/// shares this one helper and still replays deterministically, while
+/// distinct seeds desynchronize concurrent retriers: without jitter, N
+/// senders that collide once would all sleep the same fixed delay and
+/// collide forever (a synchronized retry storm).
+pub fn backoff_ns(seed: u64, attempt: u32, base_ns: u64, cap_ns: u64) -> u64 {
+    let base = base_ns.max(1);
+    let exp = base
+        .saturating_mul(1u64 << attempt.min(63))
+        .min(cap_ns.max(base));
+    // One SplitMix64 step over (seed, attempt) — no state to thread.
+    let mut z = seed ^ (attempt as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^= z >> 31;
+    let half = exp / 2;
+    half + z % half.max(1)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -179,6 +204,23 @@ mod tests {
         let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
         assert!(mean.abs() < 0.03, "mean={mean}");
         assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn backoff_grows_caps_and_jitters() {
+        // Deterministic for a (seed, attempt) pair.
+        assert_eq!(backoff_ns(7, 3, 1_000, 1 << 30), backoff_ns(7, 3, 1_000, 1 << 30));
+        // Different seeds desynchronize (the whole point).
+        assert_ne!(backoff_ns(1, 3, 1_000, 1 << 30), backoff_ns(2, 3, 1_000, 1 << 30));
+        // Equal-jitter bounds: [exp/2, exp).
+        for attempt in 0..10 {
+            let exp = 1_000u64 << attempt;
+            let w = backoff_ns(42, attempt, 1_000, 1 << 40);
+            assert!(w >= exp / 2 && w < exp, "attempt={attempt} w={w}");
+        }
+        // Cap holds for huge attempts (no overflow, no unbounded sleep).
+        let w = backoff_ns(42, 200, 1_000, 1_000_000);
+        assert!(w >= 500_000 && w < 1_000_000, "w={w}");
     }
 
     #[test]

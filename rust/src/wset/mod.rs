@@ -42,7 +42,8 @@ use crate::metrics::Registry;
 use crate::nm::{NmCluster, NodeManager, StageKey};
 use crate::pipeline::{plan_chain, StageReq};
 use crate::proxy::Proxy;
-use crate::rdma::{Fabric, FabricConfig, LatencyModel};
+use crate::metrics::Counter;
+use crate::rdma::{Fabric, FabricConfig, FaultPlan, FaultStats, LatencyModel};
 use crate::ringbuf::RingConfig;
 use crate::runtime::{ExecutorPool, PjrtRuntime, StageExecutor};
 use crate::transport::{AppId, Payload};
@@ -54,6 +55,58 @@ use std::time::Duration;
 /// Per-instance crash switches, shared between the set and its
 /// housekeeper's chaos driver.
 type CrashRegistry = Arc<Mutex<Vec<(NodeId, CrashHandle)>>>;
+
+/// Registry handles for the fault-plane counters — created **only** when
+/// the config has a `faults` block, so an unfaulted build's
+/// `counters_snapshot` never grows a fault row. The fabric keeps the
+/// authoritative cumulative [`FaultStats`]; these mirror it.
+#[derive(Clone)]
+struct FaultCounters {
+    verbs_lost: Arc<Counter>,
+    verbs_delayed: Arc<Counter>,
+    region_flaps: Arc<Counter>,
+    partitioned_ops: Arc<Counter>,
+    verb_retries: Arc<Counter>,
+}
+
+impl FaultCounters {
+    fn from_registry(r: &Registry) -> Self {
+        Self {
+            verbs_lost: r.counter("verbs_lost_total"),
+            verbs_delayed: r.counter("verbs_delayed_total"),
+            region_flaps: r.counter("region_flaps_total"),
+            partitioned_ops: r.counter("partitioned_ops_total"),
+            verb_retries: r.counter("verb_retries_total"),
+        }
+    }
+
+    /// Raise each counter to the fabric's cumulative value. Counters are
+    /// written only through this mirror, so `get()` is the last mirrored
+    /// value and the delta-add is idempotent across callers.
+    fn mirror(&self, s: FaultStats) {
+        self.verbs_lost.add(s.verbs_lost.saturating_sub(self.verbs_lost.get()));
+        self.verbs_delayed.add(s.verbs_delayed.saturating_sub(self.verbs_delayed.get()));
+        self.region_flaps.add(s.region_flaps.saturating_sub(self.region_flaps.get()));
+        self.partitioned_ops
+            .add(s.partitioned_ops.saturating_sub(self.partitioned_ops.get()));
+        self.verb_retries.add(s.verb_retries.saturating_sub(self.verb_retries.get()));
+    }
+}
+
+/// Map the config `faults` block onto the fabric's [`FaultPlan`].
+fn fault_plan_of(f: &crate::config::FaultSettings) -> FaultPlan {
+    FaultPlan {
+        verb_loss_prob: f.verb_loss_prob,
+        delay_prob: f.delay_prob,
+        delay_ns: f.delay_ns,
+        flap_prob: f.flap_prob,
+        partition_after_ops: f.partition_after_ops,
+        partition_ops: f.partition_ops,
+        partition_group: f.partition_group,
+        partition_victim: f.partition_victim,
+        seed: f.seed,
+    }
+}
 
 /// A fully wired Workflow Set.
 pub struct WorkflowSet {
@@ -89,6 +142,9 @@ pub struct WorkflowSet {
     crash_handles: CrashRegistry,
     /// Rebalance actions taken by the housekeeping loop (§8.2 timer).
     pub auto_rebalances: Arc<std::sync::atomic::AtomicU64>,
+    /// Fault-plane counter mirror (`faults` config block; `None` = off
+    /// and no fault counter ever appears in the registry).
+    fault_counters: Option<FaultCounters>,
 }
 
 impl WorkflowSet {
@@ -102,14 +158,23 @@ impl WorkflowSet {
         pool: ExecutorPool,
     ) -> Self {
         config.validate().expect("invalid config");
+        // Fault plane (`faults` block): mapped onto the fabric for every
+        // fabric kind; `None` allocates no fault state at all.
+        let faults = config.faults.as_ref().map(fault_plan_of);
         let fabric = match config.fabric {
-            crate::config::FabricKind::Ideal => Fabric::ideal(),
+            crate::config::FabricKind::Ideal => Fabric::new(FabricConfig {
+                latency: None,
+                faults,
+                ..Default::default()
+            }),
             crate::config::FabricKind::Infiniband100g => Fabric::new(FabricConfig {
                 latency: Some(LatencyModel::infiniband_100g()),
+                faults,
                 ..Default::default()
             }),
             crate::config::FabricKind::TcpDatacenter => Fabric::new(FabricConfig {
                 latency: Some(LatencyModel::tcp_datacenter()),
+                faults,
                 ..Default::default()
             }),
         };
@@ -177,6 +242,10 @@ impl WorkflowSet {
         let hk_stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
         let auto_rebalances = Arc::new(std::sync::atomic::AtomicU64::new(0));
         let crash_handles: CrashRegistry = Arc::new(Mutex::new(Vec::new()));
+        let fault_counters = config
+            .faults
+            .as_ref()
+            .map(|_| FaultCounters::from_registry(&metrics));
         let mut set = Self {
             fabric: fabric.clone(),
             nm: nm.clone(),
@@ -209,6 +278,7 @@ impl WorkflowSet {
             hk_stop: hk_stop.clone(),
             crash_handles: crash_handles.clone(),
             auto_rebalances: auto_rebalances.clone(),
+            fault_counters: fault_counters.clone(),
         };
         set.proxy
             .set_rendezvous_threshold(config.rdma.rendezvous_threshold_bytes);
@@ -266,6 +336,8 @@ impl WorkflowSet {
         let hk_handles = crash_handles.clone();
         let hk_cache = cache;
         let hk_tracer = tracer;
+        let hk_faults = fault_counters;
+        let hk_fabric = fabric.clone();
         set.housekeeper = Some(std::thread::spawn(move || {
             let mut last_sweep = std::time::Instant::now();
             let mut last_kill = std::time::Instant::now();
@@ -312,6 +384,11 @@ impl WorkflowSet {
                     }
                     if let Some(t) = &hk_tracer {
                         t.drain();
+                    }
+                    if let Some(fc) = &hk_faults {
+                        if let Some(s) = hk_fabric.fault_stats() {
+                            fc.mirror(s);
+                        }
                     }
                     tracker.purge_older_than(tracker_ttl_ns);
                     last_sweep = std::time::Instant::now();
@@ -458,6 +535,23 @@ impl WorkflowSet {
         self.cache.as_ref()
     }
 
+    /// Cumulative fabric fault-plane counters, when the `faults` config
+    /// block (or a manual partition) installed a fault plan.
+    pub fn fault_stats(&self) -> Option<FaultStats> {
+        self.fabric.fault_stats()
+    }
+
+    /// Mirror the fabric's fault counters into the registry **now**
+    /// (the housekeeper also does this on its sweep tick; call before
+    /// reading `counters_snapshot` to avoid a stale tail).
+    pub fn sync_fault_counters(&self) {
+        if let Some(fc) = &self.fault_counters {
+            if let Some(s) = self.fabric.fault_stats() {
+                fc.mirror(s);
+            }
+        }
+    }
+
     /// The set's tracer, when the config enables tracing (`trace`
     /// block). Drained by the housekeeper; callers can also pull kept
     /// traces on demand through [`crate::trace::Tracer::completed`].
@@ -565,6 +659,9 @@ impl WorkflowSet {
         if let Some(h) = self.housekeeper.take() {
             let _ = h.join();
         }
+        // Final mirror after the housekeeper is gone: the registry's
+        // fault rows reflect everything the fabric counted.
+        self.sync_fault_counters();
         for i in self.instances {
             i.shutdown();
         }

@@ -4,6 +4,7 @@
 //! most one leader is elected at any given time").
 
 use onepiece::paxos::{propose, Acceptor, AcceptorHandle, Ballot, PrepareReply, ProposeError};
+use onepiece::rdma::{Fabric, FabricConfig, FaultPlan, QueuePair};
 use onepiece::util::{NodeId, Rng};
 use std::sync::{Arc, Mutex};
 
@@ -119,4 +120,98 @@ fn partitioned_minority_cannot_decide() {
         .map(|(i, a)| Partition { inner: a.clone(), reachable: i >= 2 })
         .collect();
     assert_eq!(propose(&handles, Ballot::new(2, NodeId(1)), 2), Ok(2));
+}
+
+/// Acceptor handle whose messages traverse a fault-injected fabric
+/// link: each exchange posts one gated verb against the acceptor's
+/// region, so seeded verb loss and directed partitions from the
+/// [`FaultPlan`] become Paxos message drops.
+struct FaultyLink<'a> {
+    inner: Arc<Mutex<Acceptor>>,
+    qp: &'a QueuePair,
+}
+
+impl AcceptorHandle for FaultyLink<'_> {
+    fn prepare(&self, b: Ballot) -> Option<PrepareReply> {
+        self.qp.post_write_u64(0, 1).ok()?;
+        Some(self.inner.lock().unwrap().prepare(b))
+    }
+
+    fn accept(&self, b: Ballot, v: u64) -> Option<Result<(), Ballot>> {
+        self.qp.post_write_u64(0, 1).ok()?;
+        Some(self.inner.lock().unwrap().accept(b, v))
+    }
+}
+
+#[test]
+fn elections_under_injected_loss_and_healed_partition_stay_safe_and_live() {
+    // NM elections over a lossy, partition-prone fabric: each term is
+    // one Paxos instance whose messages cross FaultPlan-gated links.
+    // Safety: within a term, every successful proposal returns the same
+    // leader (at most one leader per term). Liveness: a majority of
+    // acceptor links stays reachable (the partition cuts region id 1
+    // only), so every term converges — including the partitioned terms
+    // and the ones after the heal.
+    let fabric = Fabric::new(FabricConfig {
+        latency: None,
+        faults: Some(FaultPlan {
+            verb_loss_prob: 0.15,
+            ..Default::default()
+        }),
+        ..Default::default()
+    });
+    let qps: Vec<QueuePair> = (0..5)
+        .map(|_| {
+            let (id, _) = fabric.register(64);
+            fabric.connect(id).expect("fresh region connects")
+        })
+        .collect();
+
+    for term in 1..=6u64 {
+        // Terms 3-4 run under a directed partition (acceptor region 1
+        // unreachable); term 5 heals it.
+        if term == 3 {
+            fabric.start_partition(4, 1);
+        }
+        if term == 5 {
+            fabric.heal_partition();
+        }
+        let acceptors: Vec<Arc<Mutex<Acceptor>>> =
+            (0..5).map(|_| Arc::new(Mutex::new(Acceptor::new()))).collect();
+        let handles: Vec<FaultyLink> = acceptors
+            .iter()
+            .zip(&qps)
+            .map(|(a, qp)| FaultyLink { inner: a.clone(), qp })
+            .collect();
+        let mut leader: Option<u64> = None;
+        let mut ballots: Vec<Ballot> =
+            (0..3u32).map(|p| Ballot::new(term, NodeId(p))).collect();
+        for round in 0..90u64 {
+            let p = (round % 3) as usize;
+            match propose(&handles, ballots[p], 100 + p as u64) {
+                Ok(v) => {
+                    if let Some(prev) = leader {
+                        assert_eq!(prev, v, "term {term}: two leaders elected!");
+                    }
+                    leader = Some(v);
+                }
+                Err(ProposeError::Preempted { suggested }) => {
+                    ballots[p] = suggested.next_for(NodeId(p as u32));
+                }
+                Err(_) => {
+                    ballots[p] = ballots[p].next_for(NodeId(p as u32));
+                }
+            }
+        }
+        assert!(
+            leader.is_some(),
+            "term {term}: a majority stays reachable, so the election must converge"
+        );
+    }
+    let stats = fabric.fault_stats().expect("faults block allocates fault state");
+    assert!(stats.verbs_lost >= 1, "loss injection must have fired");
+    assert!(
+        stats.partitioned_ops >= 1,
+        "the partitioned terms must have rejected verbs on the victim link"
+    );
 }
